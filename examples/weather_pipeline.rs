@@ -1,0 +1,155 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! N ranks run a heat-diffusion simulation (the paper's motivating
+//! "climate modeling" application class):
+//!
+//! * **L1/L2** — each simulation step is one PJRT dispatch of the fused
+//!   `tick` artifact (Pallas stencil + checksum, AOT-compiled from JAX);
+//! * **comm** — halo exchange between neighbour ranks every step;
+//! * **io (the paper's system)** — every `--checkpoint-every` steps, the
+//!   distributed field is written with one collective `write_at_all`
+//!   through subarray file views; at the end every rank *cross-reads* a
+//!   peer's block from the file and validates it against the peer's PJRT
+//!   checksum.
+//!
+//! Reports step latency, checkpoint write/read bandwidth, and the
+//! field-decay curve (the "loss curve" of this workload). Results are
+//! recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example weather_pipeline -- [--ranks 4]
+//!       [--steps 12] [--checkpoint-every 4] [--backend nfs]`
+
+use std::time::Instant;
+
+use jpio::cli::Args;
+use jpio::comm::{threads, Comm, ReduceOp};
+use jpio::coordinator::{Checkpointer, HaloGrid, Metrics};
+use jpio::io::{amode, File, Info};
+use jpio::runtime::{Runtime, TensorF32};
+
+const BLOCK: usize = 256; // must match `make artifacts` --block
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let ranks = args.get_or("ranks", 4usize);
+    let steps = args.get_or("steps", 12usize);
+    let ckpt_every = args.get_or("checkpoint-every", 4usize);
+    let backend = args.get("backend").unwrap_or("local").to_string();
+    let path = format!("/tmp/jpio-weather-{}.ckpt", std::process::id());
+
+    println!(
+        "weather_pipeline: {ranks} ranks, {steps} steps, checkpoint every {ckpt_every}, \
+         backend {backend}, block {BLOCK}x{BLOCK}"
+    );
+
+    let path_c = path.clone();
+    threads::run(ranks, move |c| {
+        let metrics = Metrics::new();
+        let r = c.rank();
+        let n = c.size();
+        let rt = metrics.time("runtime.load", || Runtime::load("artifacts"))
+            .expect("artifacts missing — run `make artifacts`");
+        let grid = HaloGrid::new(r, n, (BLOCK, BLOCK));
+        let ck = Checkpointer::new(grid.clone());
+        let (gy, gx) = grid.coords;
+
+        // Initial condition from the PJRT `init` artifact.
+        let mut state = rt.exec_init(gy as i32, gx as i32).unwrap();
+        assert_eq!(state.dims, vec![BLOCK + 2, BLOCK + 2]);
+
+        let info = Info::from([("jpio_backend", backend.as_str())]);
+        let file = File::open(c, &path_c, amode::RDWR | amode::CREATE, info).unwrap();
+
+        let mut my_checksum = [0f32; 2];
+        let mut frames = 0usize;
+        let sim_start = Instant::now();
+        for step in 0..steps {
+            // Halo exchange (comm layer).
+            metrics.time("halo.exchange", || grid.exchange(c, &mut state.data));
+            // One fused PJRT dispatch: stencil + checksum (L1/L2).
+            let out = metrics
+                .time("pjrt.tick", || rt.exec_f32("tick", &[state.clone()]))
+                .unwrap();
+            let interior = &out[0];
+            my_checksum = [out[1].data[0], out[1].data[1]];
+            // Re-embed the interior into the halo-extended state.
+            let rebuilt = metrics
+                .time("pjrt.unpack", || {
+                    rt.exec_f32("unpack", &[state.clone(), interior.clone()])
+                })
+                .unwrap();
+            state = rebuilt.into_iter().next().unwrap();
+
+            // Field decay curve (the workload's "loss curve").
+            let local_max =
+                state.data.iter().fold(0f32, |m, &v| m.max(v)) as f64;
+            let global_max = c.allreduce_f64(ReduceOp::Max, local_max);
+            if r == 0 {
+                println!("step {step:>3}: field max = {global_max:.4}");
+            }
+
+            // Periodic collective checkpoint (the paper's system at work).
+            if (step + 1) % ckpt_every == 0 {
+                let t = Instant::now();
+                metrics.time("ckpt.write", || {
+                    ck.write(&file, frames, &interior.data).unwrap()
+                });
+                let dt = t.elapsed();
+                let global_bytes = ck.frame_bytes();
+                if r == 0 {
+                    println!(
+                        "  checkpoint frame {frames}: {:.1} MB in {dt:?} ({:.1} MB/s aggregate)",
+                        global_bytes as f64 / 1e6,
+                        global_bytes as f64 / 1e6 / dt.as_secs_f64()
+                    );
+                }
+                frames += 1;
+            }
+        }
+        let sim_wall = sim_start.elapsed();
+
+        // ---- Cross-decomposition validation ----------------------------
+        // Rank r reads the block of rank (r+1)%n from the last frame and
+        // checks it against that rank's PJRT checksum.
+        c.barrier();
+        let sums = c.allgather(
+            &my_checksum.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>(),
+        );
+        let peer = (r + 1) % n;
+        let peer_grid = HaloGrid::new(peer, n, (BLOCK, BLOCK));
+        let peer_ck = Checkpointer::new(peer_grid);
+        let t = Instant::now();
+        let peer_block = metrics
+            .time("ckpt.read", || peer_ck.read(&file, frames.saturating_sub(1)))
+            .unwrap();
+        let read_dt = t.elapsed();
+        let got = rt
+            .exec_f32("checksum", &[TensorF32::new(peer_block, vec![BLOCK, BLOCK])])
+            .unwrap();
+        let want: Vec<f32> = sums[peer]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        assert_eq!(got[0].data, want, "rank {r}: peer {peer} checksum mismatch");
+        c.barrier();
+        if r == 0 {
+            let frame_mb = ck.frame_bytes() as f64 / 1e6;
+            println!(
+                "cross-decomposition read-back validated on all ranks \
+                 ({frame_mb:.1} MB frame read in {read_dt:?})"
+            );
+            println!(
+                "simulated {steps} steps in {sim_wall:?} \
+                 ({:.1} ms/step incl. checkpoints)",
+                sim_wall.as_secs_f64() * 1e3 / steps as f64
+            );
+            println!("\nper-rank metrics (rank 0):\n{}", metrics.report());
+            println!("PJRT dispatches: {:?}", rt.dispatch_counts());
+        }
+        file.close().unwrap();
+    });
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    println!("weather_pipeline OK");
+}

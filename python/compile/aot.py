@@ -1,0 +1,83 @@
+"""AOT lowering: JAX → HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``artifacts`` target). Python runs once here and never on the I/O path.
+
+Artifacts are emitted for the default example geometry (BLOCK×BLOCK
+rank-local blocks, halo 1). ``--block`` overrides.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_set(block):
+    """(name, fn, example_args) for every artifact at a block size."""
+    h = w = block
+    halo = (h + 2, w + 2)
+    interior = (h, w)
+    return [
+        ("stencil", model.stencil, (spec(halo),)),
+        ("pack", model.pack, (spec(halo),)),
+        ("unpack", model.unpack, (spec(halo), spec(interior))),
+        ("byteswap", model.byteswap, (spec(interior),)),
+        ("checksum", model.checksum, (spec(interior),)),
+        ("tick", model.tick, (spec(halo),)),
+        ("tick_external32", model.tick_external32, (spec(halo),)),
+        ("init", model.make_init(halo), (spec((2,), jnp.int32),)),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--block", type=int, default=256, help="rank-local block size")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"block": args.block, "artifacts": {}}
+    for name, fn, ex in artifact_set(args.block):
+        text = to_hlo_text(fn, *ex)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "inputs": [list(map(int, a.shape)) for a in ex],
+        }
+        print(f"  {name:>16}: {len(text):>8} chars  {digest}")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: external32 byte-order conversion (§7.2.5.2).
+
+File interoperability requires the canonical big-endian "external32"
+representation; on little-endian hosts every 32-bit element must be
+byte-reversed on the way to/from the file. Pallas has no bswap intrinsic,
+so the kernel does it with shifts and masks on a uint32 bitcast —
+elementwise VPU work, one VMEM tile per grid step.
+
+The Rust io layer has its own scalar byteswap (`io::datarep`); this kernel
+is the accelerated alternative used when conversion fuses with the
+producer compute (see `model.tick_external32` and the `ablations` bench).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _byteswap_kernel(x_ref, o_ref, *, tile_rows, width):
+    i = pl.program_id(0)
+    base = i * tile_rows
+    tile = pl.load(x_ref, (pl.dslice(base, tile_rows), pl.dslice(0, width)))
+    u = tile.view(jnp.uint32)
+    pl.store(
+        o_ref,
+        (pl.dslice(base, tile_rows), pl.dslice(0, width)),
+        ref.bswap32_u32(u).view(tile.dtype),
+    )
+
+
+def byteswap32(x, *, tile_rows=32):
+    """Byte-reverse each 32-bit element of a 2-D array."""
+    h = x.shape[0]
+    if h % tile_rows != 0:
+        tile_rows = 1
+    kernel = functools.partial(_byteswap_kernel, tile_rows=tile_rows, width=x.shape[1])
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(h // tile_rows,),
+        interpret=True,
+    )(x)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: blocked checksum reduction for end-to-end validation.
+
+The weather-pipeline example checksums every block it writes and verifies
+the checksum after the collective read-back; both sides run this same
+kernel on the same PJRT backend, so float summation order is identical and
+equality is exact.
+
+Structure: the grid iterates row tiles; each step accumulates the tile's
+two partial sums (`sum(x)` and `sum(x*w)`) into a (2,)-element output —
+the standard Pallas grid-accumulation idiom (output revisited by every
+grid step, initialized at step 0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _checksum_kernel(x_ref, w_ref, o_ref, *, tile_rows, width):
+    i = pl.program_id(0)
+    base = i * tile_rows
+    idx = (pl.dslice(base, tile_rows), pl.dslice(0, width))
+    x = pl.load(x_ref, idx)
+    w = pl.load(w_ref, idx)
+    s = jnp.stack([jnp.sum(x), jnp.sum(x * w)])
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[:] = jnp.zeros_like(o_ref)
+
+    o_ref[:] += s
+
+
+def checksum(x, *, tile_rows=32):
+    """Checksum pair ``[sum(x), sum(x*w)]`` of a 2-D float32 array."""
+    h = x.shape[0]
+    if h % tile_rows != 0:
+        tile_rows = 1
+    w = ref.checksum_weights(x.shape)
+    kernel = functools.partial(_checksum_kernel, tile_rows=tile_rows, width=x.shape[1])
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        grid=(h // tile_rows,),
+        interpret=True,
+    )(x.astype(jnp.float32), w)

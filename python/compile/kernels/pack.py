@@ -1,0 +1,61 @@
+"""L1 Pallas kernels: subarray pack/unpack — the derived-datatype hot path.
+
+ROMIO's derived-datatype flattening (gathering a process's file-view
+elements into one contiguous I/O buffer) is the per-byte hot loop of every
+MPI-IO implementation; the paper's §2.3.1 found the Java equivalent
+(byte-array staging) to be the make-or-break of Java I/O performance.
+Here the gather/scatter runs as a Pallas kernel so checkpoint staging
+composes with the producer compute inside a single XLA program.
+
+``pack`` extracts the interior of a halo-extended ``(H+2, W+2)`` block
+(i.e. the subarray ``starts=(1,1), subsizes=(H,W)``); ``unpack`` is its
+inverse into an existing base block. Row tiles keep each HBM→VMEM copy
+contiguous — the TPU analogue of the paper's bulk-transfer finding.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(x_ref, o_ref, *, tile_rows, width):
+    i = pl.program_id(0)
+    base = i * tile_rows
+    tile = pl.load(x_ref, (pl.dslice(base + 1, tile_rows), pl.dslice(1, width)))
+    pl.store(o_ref, (pl.dslice(base, tile_rows), pl.dslice(0, width)), tile)
+
+
+def pack(x, *, tile_rows=32):
+    """Interior ``(H, W)`` of a halo-extended ``(H+2, W+2)`` block."""
+    h, w = x.shape[0] - 2, x.shape[1] - 2
+    if h % tile_rows != 0:
+        tile_rows = 1
+    kernel = functools.partial(_pack_kernel, tile_rows=tile_rows, width=w)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        grid=(h // tile_rows,),
+        interpret=True,
+    )(x)
+
+
+def _unpack_kernel(base_ref, block_ref, o_ref, *, height, width):
+    # Copy the halo frame, then overwrite the interior with the block —
+    # two whole-region VMEM writes, no per-row control flow.
+    o_ref[...] = base_ref[...]
+    o_ref[1 : height + 1, 1 : width + 1] = block_ref[...]
+
+
+def unpack(base, block):
+    """Place ``block`` (H, W) into the interior of ``base`` (H+2, W+2)."""
+    hh, ww = base.shape
+    h, w = block.shape
+    assert (hh, ww) == (h + 2, w + 2), (base.shape, block.shape)
+    kernel = functools.partial(_unpack_kernel, height=h, width=w)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        interpret=True,
+    )(base, block.astype(base.dtype))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the semantic definition; the Pallas kernels in the
+sibling modules must match these bit-for-bit (same op order, same dtypes)
+so pytest can assert exact equality under interpret=True.
+"""
+
+import jax.numpy as jnp
+
+
+def stencil_ref(x):
+    """5-point Jacobi step on a halo-extended block.
+
+    ``x`` is ``(H+2, W+2)``; returns the ``(H, W)`` interior of the next
+    state: ``0.25 * (up + down + left + right)``.
+    """
+    up = x[:-2, 1:-1]
+    down = x[2:, 1:-1]
+    left = x[1:-1, :-2]
+    right = x[1:-1, 2:]
+    return 0.25 * (up + down + left + right)
+
+
+def pack_ref(x):
+    """Subarray pack: extract the interior of a halo-extended block."""
+    return x[1:-1, 1:-1]
+
+
+def unpack_ref(base, block):
+    """Subarray unpack: place ``block`` into the interior of ``base``."""
+    return base.at[1:-1, 1:-1].set(block)
+
+
+def bswap32_u32(u):
+    """Byte-reverse each element of a uint32 array (shared helper)."""
+    return (
+        ((u & jnp.uint32(0x000000FF)) << 24)
+        | ((u & jnp.uint32(0x0000FF00)) << 8)
+        | ((u & jnp.uint32(0x00FF0000)) >> 8)
+        | ((u & jnp.uint32(0xFF000000)) >> 24)
+    )
+
+
+def byteswap32_ref(x):
+    """external32 conversion of a 32-bit array (int32/uint32/float32):
+    reverse each element's bytes, bitcasting through uint32."""
+    x = jnp.asarray(x)
+    return bswap32_u32(x.view(jnp.uint32)).view(x.dtype)
+
+
+def checksum_weights(shape):
+    """Deterministic per-position checksum weights."""
+    n = 1
+    for d in shape:
+        n *= d
+    return (jnp.arange(n, dtype=jnp.float32) % 97.0 + 1.0).reshape(shape)
+
+
+def checksum_ref(x):
+    """Checksum pair over a float32 array: ``[sum(x), sum(x * w)]``.
+
+    Write path and read path compute it with the same kernel on the same
+    values, so equality is exact (no cross-implementation float drift).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = checksum_weights(x.shape)
+    return jnp.stack([jnp.sum(x), jnp.sum(x * w)])

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: 5-point Jacobi stencil step (the producer compute).
+
+The scientific workload whose checkpoints the MPJ-IO layer moves — the
+"climate modeling / turbulence" application class the paper's introduction
+motivates. The kernel consumes a halo-extended ``(H+2, W+2)`` block and
+produces the ``(H, W)`` interior of the next state.
+
+TPU structure (DESIGN.md §Hardware-Adaptation): the grid iterates over row
+tiles of ``tile_rows`` rows; each step loads a ``(tile_rows+2, W+2)`` slab
+(the HBM→VMEM window, expressed with ``pl.load``/``pl.dslice``) and stores
+a ``(tile_rows, W)`` output tile. For the default 256-column block and
+f32, a slab is ``(34, 258)·4B ≈ 35 KiB`` — comfortably VMEM-resident with
+double buffering. All arithmetic is elementwise VPU work.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md); real-TPU numbers are
+estimated in DESIGN.md from the VMEM footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(x_ref, o_ref, *, tile_rows, width):
+    """One grid step: rows [i*tile_rows, (i+1)*tile_rows) of the output."""
+    i = pl.program_id(0)
+    base = i * tile_rows
+    # Slab of input needed for this output tile (tile_rows + 2 halo rows).
+    slab = pl.load(x_ref, (pl.dslice(base, tile_rows + 2), pl.dslice(0, width + 2)))
+    up = slab[:-2, 1:-1]
+    down = slab[2:, 1:-1]
+    left = slab[1:-1, :-2]
+    right = slab[1:-1, 2:]
+    pl.store(
+        o_ref,
+        (pl.dslice(base, tile_rows), pl.dslice(0, width)),
+        0.25 * (up + down + left + right),
+    )
+
+
+def stencil_step(x, *, tile_rows=32):
+    """Next-state interior of a halo-extended block ``x`` of ``(H+2, W+2)``."""
+    h = x.shape[0] - 2
+    w = x.shape[1] - 2
+    if h % tile_rows != 0:
+        tile_rows = 1  # degenerate tiling for odd test shapes
+    kernel = functools.partial(_stencil_kernel, tile_rows=tile_rows, width=w)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=(h // tile_rows,),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,94 @@
+"""L2: the JAX compute graph composed from the L1 Pallas kernels.
+
+This is the "scientific application" side of the paper's system: a
+heat-diffusion producer whose checkpoints the MPJ-IO layer writes and
+reads. Each function here is AOT-lowered by `aot.py` to one HLO-text
+artifact that the Rust runtime loads at startup; Python never runs on the
+I/O path.
+
+Artifacts (for a rank-local block of H×W with a 1-cell halo):
+
+* ``stencil``  — one Jacobi step: (H+2, W+2) → (H, W)
+* ``pack``     — interior extraction: (H+2, W+2) → (H, W)
+* ``unpack``   — interior placement: (H+2, W+2), (H, W) → (H+2, W+2)
+* ``byteswap`` — external32 conversion: (H, W) → (H, W)
+* ``checksum`` — validation pair: (H, W) → (2,)
+* ``tick``     — the fused fast path: stencil ∘ checksum in one program
+* ``tick_external32`` — tick + byteswapped payload for external32 files
+* ``init``     — deterministic initial condition for a rank's block
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import byteswap as byteswap_k
+from .kernels import checksum as checksum_k
+from .kernels import pack as pack_k
+from .kernels import stencil as stencil_k
+
+
+def stencil(x):
+    """One Jacobi step on a halo-extended block; returns the interior."""
+    return (stencil_k.stencil_step(x),)
+
+
+def pack(x):
+    """Extract the interior (checkpoint payload) of a halo block."""
+    return (pack_k.pack(x),)
+
+
+def unpack(base, block):
+    """Place a checkpoint payload back into a halo block."""
+    return (pack_k.unpack(base, block),)
+
+
+def byteswap(x):
+    """external32 conversion of a float32 block (bitcast byte reverse)."""
+    return (byteswap_k.byteswap32(x),)
+
+
+def checksum(x):
+    """Checksum pair of a block."""
+    return (checksum_k.checksum(x),)
+
+
+def tick(x):
+    """The fused per-step fast path: advance the state one stencil step
+    and checksum the new interior, in a single XLA program (one PJRT
+    dispatch per simulation step on the Rust side)."""
+    nxt = stencil_k.stencil_step(x)
+    cs = checksum_k.checksum(nxt)
+    return (nxt, cs)
+
+
+def tick_external32(x):
+    """``tick`` plus the external32-encoded payload, for checkpoints
+    written through an external32 file view with kernel-side conversion."""
+    nxt = stencil_k.stencil_step(x)
+    cs = checksum_k.checksum(nxt)
+    swapped = byteswap_k.byteswap32(nxt)
+    return (nxt, cs, swapped)
+
+
+def init(rank_xy, shape):
+    """Deterministic initial condition for a rank's halo block.
+
+    ``rank_xy`` is a (2,) int32 array (grid coordinates); the pattern is a
+    smooth bump whose position depends on the rank so blocks differ.
+    """
+    h, w = shape
+    r = rank_xy.astype(jnp.float32)
+    ys = jnp.arange(h, dtype=jnp.float32)[:, None]
+    xs = jnp.arange(w, dtype=jnp.float32)[None, :]
+    cy = (h / 4.0) * (1.0 + r[0])
+    cx = (w / 4.0) * (1.0 + r[1])
+    return (100.0 * jnp.exp(-((ys - cy) ** 2 + (xs - cx) ** 2) / (0.02 * h * w)),)
+
+
+def make_init(shape):
+    """Close ``init`` over a static shape for lowering."""
+
+    def f(rank_xy):
+        return init(rank_xy, shape)
+
+    return f

@@ -1,0 +1,135 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and for byteswap, dtypes); every Pallas kernel
+must agree with its `ref.py` oracle. Stencil/pack/unpack/byteswap are
+copies/elementwise and must match exactly; checksum accumulates per tile
+so it gets an allclose with tight tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import byteswap as byteswap_k
+from compile.kernels import checksum as checksum_k
+from compile.kernels import pack as pack_k
+from compile.kernels import ref
+from compile.kernels import stencil as stencil_k
+
+hypothesis.settings.register_profile(
+    "jpio", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("jpio")
+
+
+def rand(shape, dtype=jnp.float32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if dtype == jnp.float32:
+        return jax.random.normal(k, shape, dtype)
+    return jax.random.randint(k, shape, -(2**31), 2**31 - 1, jnp.int32).astype(dtype)
+
+
+dims = st.integers(min_value=1, max_value=40)
+
+
+@given(h=dims, w=dims, seed=st.integers(0, 2**16))
+def test_stencil_matches_ref(h, w, seed):
+    x = rand((h + 2, w + 2), seed=seed)
+    got = stencil_k.stencil_step(x)
+    want = ref.stencil_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(h=dims, w=dims, seed=st.integers(0, 2**16))
+def test_pack_matches_ref(h, w, seed):
+    x = rand((h + 2, w + 2), seed=seed)
+    np.testing.assert_array_equal(
+        np.asarray(pack_k.pack(x)), np.asarray(ref.pack_ref(x))
+    )
+
+
+@given(h=dims, w=dims, seed=st.integers(0, 2**16))
+def test_unpack_matches_ref(h, w, seed):
+    base = rand((h + 2, w + 2), seed=seed)
+    block = rand((h, w), seed=seed + 1)
+    np.testing.assert_array_equal(
+        np.asarray(pack_k.unpack(base, block)),
+        np.asarray(ref.unpack_ref(base, block)),
+    )
+
+
+@given(h=dims, w=dims, seed=st.integers(0, 2**16))
+def test_pack_unpack_roundtrip(h, w, seed):
+    base = rand((h + 2, w + 2), seed=seed)
+    block = np.asarray(pack_k.pack(base))
+    rebuilt = pack_k.unpack(base, jnp.asarray(block))
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(base))
+
+
+@given(
+    h=dims,
+    w=dims,
+    dtype=st.sampled_from([jnp.float32, jnp.int32, jnp.uint32]),
+    seed=st.integers(0, 2**16),
+)
+def test_byteswap_matches_ref_and_involutes(h, w, dtype, seed):
+    x = rand((h, w), dtype=dtype, seed=seed)
+    got = byteswap_k.byteswap32(x)
+    want = ref.byteswap32_ref(x)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.uint32), np.asarray(want).view(np.uint32)
+    )
+    # Involution: swapping twice is the identity.
+    twice = byteswap_k.byteswap32(got)
+    np.testing.assert_array_equal(
+        np.asarray(twice).view(np.uint32), np.asarray(x).view(np.uint32)
+    )
+
+
+def test_byteswap_known_value():
+    x = jnp.array([[0x01020304]], dtype=jnp.uint32)
+    got = np.asarray(byteswap_k.byteswap32(x))
+    assert got[0, 0] == 0x04030201
+
+
+@given(h=dims, w=dims, seed=st.integers(0, 2**16))
+def test_checksum_matches_ref(h, w, seed):
+    x = rand((h, w), seed=seed)
+    got = np.asarray(checksum_k.checksum(x))
+    want = np.asarray(ref.checksum_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_checksum_is_deterministic_across_runs():
+    x = rand((64, 48), seed=7)
+    a = np.asarray(checksum_k.checksum(x))
+    b = np.asarray(checksum_k.checksum(x))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_checksum_detects_single_element_corruption():
+    x = rand((32, 32), seed=3)
+    a = np.asarray(checksum_k.checksum(x))
+    y = np.asarray(x).copy()
+    y[17, 5] += 1.0
+    b = np.asarray(checksum_k.checksum(jnp.asarray(y)))
+    assert not np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("tile_rows", [1, 2, 8, 32])
+def test_stencil_tiling_invariance(tile_rows):
+    x = rand((66, 34), seed=11)
+    got = stencil_k.stencil_step(x, tile_rows=tile_rows)
+    want = ref.stencil_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stencil_physics_conserves_constant_field():
+    # A constant field is a fixed point of the Jacobi average.
+    x = jnp.full((34, 34), 3.5, jnp.float32)
+    out = np.asarray(stencil_k.stencil_step(x))
+    np.testing.assert_allclose(out, 3.5, rtol=1e-6)

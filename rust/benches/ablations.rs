@@ -1,0 +1,233 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **per-item vs bulk** — the §2.3.1 DataStream result: element-at-a-
+//!    time I/O vs one syscall per run.
+//! 2. **two-phase collective I/O on/off** — interleaved strided writes
+//!    with and without collective buffering (ROMIO's headline win).
+//! 3. **data sieving stage size** — strided reads with a tiny vs large
+//!    staging buffer.
+//! 4. **atomic mode cost** — the §7.2.6.1 locking overhead per write.
+//! 5. **PJRT pack kernel vs Rust scalar pack** — L1 ablation (skipped if
+//!    artifacts are absent).
+
+#[path = "common.rs"]
+mod common;
+
+use jpio::bench::{bench, FigureReport};
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::{amode, File, Info};
+
+fn per_item_vs_bulk() {
+    println!("\n--- ablation 1: per-item vs bulk (the paper's §2.3.1 result) ---");
+    let path = format!("/tmp/jpio-abl1-{}.dat", std::process::id());
+    let bytes = 4 << 20; // per-item is brutally slow; keep it small
+    let mut results = Vec::new();
+    for style in ["per_item", "bulk", "view_buffer"] {
+        let st = common::thread_sweep_case(
+            std::sync::Arc::new(jpio::storage::local::LocalBackend::instant()),
+            &path,
+            bytes,
+            1,
+            style,
+            true,
+        );
+        println!("  write {style:<12} {:10.1} MB/s", st.mbs());
+        results.push((style, st.mbs()));
+    }
+    let per_item = results[0].1;
+    let bulk = results[1].1;
+    println!(
+        "  bulk / per-item speedup: {:.0}x (paper: DataStream-style I/O is \
+         'extremely inefficient')",
+        bulk / per_item
+    );
+    common::cleanup(&path);
+}
+
+fn two_phase_on_off() {
+    println!("\n--- ablation 2: two-phase collective buffering on/off (NFS) ---");
+    // The two-phase win needs per-operation cost: on the Barq NFS model
+    // every WRITE RPC pays latency, so thousands of 256 B strided writes
+    // lose badly to a few aggregated megabyte transfers. (On the instant
+    // local backend the two paths are within noise — also reported.)
+    let path = format!("/tmp/jpio-abl2-{}.dat", std::process::id());
+    let ranks = 4;
+    let k = 16 << 10; // etypes (ints) per rank
+    let chunk = 64; // ints per interleaved cell → 256 B pieces
+    for (label, cb) in [("two-phase ON ", "true"), ("two-phase OFF", "false")] {
+        let stats = bench(label, 1, common::reps(), ranks * k * 4, || {
+            threads::run(ranks, |c| {
+                let info = Info::from([
+                    ("romio_cb_read", cb),
+                    ("cb_buffer_size", "16777216"),
+                ]);
+                let backend: std::sync::Arc<dyn jpio::storage::Backend> =
+                    std::sync::Arc::new(jpio::storage::nfs::NfsBackend::barq());
+                let f = File::open_with_backend(
+                    c,
+                    &path,
+                    amode::RDWR | amode::CREATE,
+                    info,
+                    backend,
+                )
+                .unwrap();
+                let n = c.size();
+                let r = c.rank();
+                // Interleaved cells of `chunk` ints: the two-phase sweet spot.
+                let cell = Datatype::vector(1, chunk, chunk as i64, &Datatype::INT).unwrap();
+                let ft = Datatype::resized(&cell, 0, (n * chunk * 4) as i64).unwrap();
+                f.set_view((r * chunk * 4) as i64, &Datatype::INT, &ft, "native", &Info::null())
+                    .unwrap();
+                let mine = vec![r as i32; k];
+                f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+                f.close().unwrap();
+            });
+        });
+        println!("  {label}: {:10.1} MB/s", stats.mbs());
+    }
+    common::cleanup(&path);
+}
+
+fn sieving_stage_size() {
+    println!("\n--- ablation 3: data-sieving stage size (strided reads) ---");
+    let path = format!("/tmp/jpio-abl3-{}.dat", std::process::id());
+    {
+        let b: std::sync::Arc<dyn jpio::storage::Backend> =
+            std::sync::Arc::new(jpio::storage::local::LocalBackend::instant());
+        common::prewrite(&b, &path, 32 << 20);
+    }
+    let k = 32 << 10;
+    let chunk = 16; // 64 B cells with 192 B holes
+    for stage in ["4096", "262144", "8388608"] {
+        let stats = bench(stage, 1, common::reps(), k * 4, || {
+            threads::run(1, |c| {
+                let info = Info::from([("ind_rd_buffer_size", stage)]);
+                let f = File::open(c, &path, amode::RDONLY, info).unwrap();
+                let cell = Datatype::vector(1, chunk, chunk as i64, &Datatype::INT).unwrap();
+                let ft = Datatype::resized(&cell, 0, (4 * chunk * 4) as i64).unwrap();
+                f.set_view(0, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+                let mut buf = vec![0i32; k];
+                f.read_at(0, buf.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+                f.close().unwrap();
+            });
+        });
+        println!("  stage {stage:>8} B: {:10.1} MB/s (payload rate)", stats.mbs());
+    }
+    common::cleanup(&path);
+}
+
+fn write_sieving_on_off() {
+    println!("\n--- ablation 3b: write data-sieving (RMW) vs per-run writes (NFS) ---");
+    // Independent (noncollective) strided writes: per-run writes pay one
+    // WRITE RPC per 256 B piece; the sieving strategy batches the span
+    // into one read-modify-write round trip.
+    let path = format!("/tmp/jpio-abl3b-{}.dat", std::process::id());
+    let k = 8 << 10; // ints
+    let chunk = 64;
+    for style in ["view_buffer", "data_sieving"] {
+        let stats = bench(style, 1, common::reps(), k * 4, || {
+            threads::run(1, |c| {
+                let info = Info::from([("access_style", style)]);
+                let backend: std::sync::Arc<dyn jpio::storage::Backend> =
+                    std::sync::Arc::new(jpio::storage::nfs::NfsBackend::barq());
+                let f = File::open_with_backend(
+                    c,
+                    &path,
+                    amode::RDWR | amode::CREATE,
+                    info,
+                    backend,
+                )
+                .unwrap();
+                let cell = Datatype::vector(1, chunk, chunk as i64, &Datatype::INT).unwrap();
+                let ft = Datatype::resized(&cell, 0, (4 * chunk * 4) as i64).unwrap();
+                f.set_view(0, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+                let mine = vec![7i32; k];
+                f.write_at(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+                f.close().unwrap();
+            });
+        });
+        println!("  {style:<14}: {:10.1} MB/s (payload rate)", stats.mbs());
+    }
+    common::cleanup(&path);
+}
+
+fn atomic_mode_cost() {
+    println!("\n--- ablation 4: atomic-mode locking cost ---");
+    let path = format!("/tmp/jpio-abl4-{}.dat", std::process::id());
+    let ops = 4096;
+    for atomic in [false, true] {
+        let stats = bench(
+            if atomic { "atomic" } else { "nonatomic" },
+            1,
+            common::reps(),
+            ops * 1024,
+            || {
+                threads::run(2, |c| {
+                    let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null())
+                        .unwrap();
+                    f.set_atomicity(atomic).unwrap();
+                    let buf = vec![c.rank() as u8; 1024];
+                    for i in 0..ops / 2 {
+                        let off = ((i * 2 + c.rank()) * 1024) as i64;
+                        f.write_at(off, buf.as_slice(), 0, 1024, &Datatype::BYTE).unwrap();
+                    }
+                    f.close().unwrap();
+                });
+            },
+        );
+        println!(
+            "  {}: {:10.1} MB/s",
+            if atomic { "atomic   " } else { "nonatomic" },
+            stats.mbs()
+        );
+    }
+    common::cleanup(&path);
+}
+
+fn pjrt_pack_vs_rust() {
+    println!("\n--- ablation 5: Pallas pack kernel vs Rust scalar pack ---");
+    let rt = match jpio::runtime::Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("  SKIPPED: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+    let halo = 258;
+    let interior = 256;
+    let x = jpio::runtime::TensorF32::new(
+        (0..halo * halo).map(|i| i as f32).collect(),
+        vec![halo, halo],
+    );
+    let bytes = interior * interior * 4;
+    let pjrt = bench("pjrt", 2, 10, bytes, || {
+        let _ = rt.exec_f32("pack", &[x.clone()]).unwrap();
+    });
+    let rust = bench("rust", 2, 10, bytes, || {
+        let mut out = vec![0f32; interior * interior];
+        for r in 0..interior {
+            let src = (r + 1) * halo + 1;
+            out[r * interior..(r + 1) * interior]
+                .copy_from_slice(&x.data[src..src + interior]);
+        }
+        std::hint::black_box(&out);
+    });
+    println!(
+        "  pjrt pack (interpret-lowered):  {:10.1} MB/s\n  rust scalar pack: {:10.1} MB/s\n  \
+         note: interpret=True CPU numbers — structure, not TPU wallclock (DESIGN.md §Perf)",
+        pjrt.mbs(),
+        rust.mbs()
+    );
+}
+
+fn main() {
+    println!("jpio ablation suite");
+    per_item_vs_bulk();
+    two_phase_on_off();
+    sieving_stage_size();
+    write_sieving_on_off();
+    atomic_mode_cost();
+    pjrt_pack_vs_rust();
+    let _ = FigureReport::new("ablations", "case"); // keep the type exercised
+    println!("\nablations done");
+}

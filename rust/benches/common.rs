@@ -1,0 +1,111 @@
+//! Shared plumbing for the figure benches (`#[path]`-included by each
+//! bench binary; not a crate of its own).
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use std::sync::Arc;
+
+use jpio::bench::{bench, BenchStats};
+use jpio::comm::{threads, Comm};
+use jpio::io::{amode, File, Info};
+use jpio::storage::Backend;
+use jpio::strategy;
+
+/// Per-worker payload bytes for the sweep. The paper used a 1 GiB file;
+/// the default here keeps the full suite under a few minutes — set
+/// `JPIO_BENCH_FULL=1` to run at paper scale.
+pub fn file_mb() -> usize {
+    if std::env::var("JPIO_BENCH_FULL").is_ok() {
+        1024
+    } else {
+        std::env::var("JPIO_BENCH_MB").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+    }
+}
+
+/// Repetitions per case.
+pub fn reps() -> usize {
+    if std::env::var("JPIO_BENCH_FULL").is_ok() {
+        5
+    } else {
+        3
+    }
+}
+
+/// Measured aggregate bandwidth of `t` thread-ranks each moving its
+/// disjoint partition of a shared file with `style`, on `backend`.
+/// `write` selects direction. Returns MB/s.
+pub fn thread_sweep_case(
+    backend: Arc<dyn Backend>,
+    path: &str,
+    total_bytes: usize,
+    t: usize,
+    style: &str,
+    write: bool,
+) -> BenchStats {
+    let chunk = 8 << 20; // I/O call granularity (8 MiB per call)
+    let stats = bench(
+        format!("{style}/{t}t/{}", if write { "write" } else { "read" }),
+        1,
+        reps(),
+        total_bytes,
+        || {
+            threads::run(t, |c| {
+                let info = Info::from([("access_style", style)]);
+                let f = File::open_with_backend(
+                    c,
+                    path,
+                    amode::RDWR | amode::CREATE,
+                    info,
+                    backend.clone(),
+                )
+                .unwrap();
+                let (start, len) =
+                    jpio::bench::workload::partition(total_bytes, c.size(), c.rank());
+                let mut buf = vec![0u8; chunk.min(len)];
+                let mut done = 0usize;
+                while done < len {
+                    let n = chunk.min(len - done);
+                    let off = (start as usize + done) as i64;
+                    if write {
+                        f.write_at(off, &buf[..n], 0, n, &jpio::comm::Datatype::BYTE)
+                            .unwrap();
+                    } else {
+                        f.read_at(off, &mut buf[..n], 0, n, &jpio::comm::Datatype::BYTE)
+                            .unwrap();
+                    }
+                    done += n;
+                }
+                f.close().unwrap();
+            });
+        },
+    );
+    stats
+}
+
+/// Validate that a strategy name resolves (guards against typos in sweeps).
+pub fn check_styles(styles: &[&str]) {
+    for s in styles {
+        strategy::by_name(s).unwrap();
+    }
+}
+
+/// Delete a bench file + its sidecar.
+pub fn cleanup(path: &str) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+/// Prepare a file of `bytes` (so read sweeps have data and the page cache
+/// is warm, matching the paper's read-after-write methodology).
+pub fn prewrite(backend: &Arc<dyn Backend>, path: &str, bytes: usize) {
+    let f = backend
+        .open(path, jpio::storage::OpenOptions::rw_create())
+        .unwrap();
+    let chunk = vec![0xA5u8; 8 << 20];
+    let mut done = 0;
+    while done < bytes {
+        let n = chunk.len().min(bytes - done);
+        f.write_at(done as u64, &chunk[..n]).unwrap();
+        done += n;
+    }
+    f.sync().unwrap();
+}

@@ -1,0 +1,77 @@
+//! Figure 4-3 — "Performance of tests using Java threads for parallel
+//! access to a shared file on local disk".
+//!
+//! Sweep: 1..8 threads × {view_buffer, mapped, bulk} × {read, write} on
+//! the Barq local-disk model. Expected shape (paper):
+//!   * reads reach multi-GB/s from the page cache, view_buffer on top
+//!     (~10 GB/s at 1 GiB scale), mapped ~6 GB/s;
+//!   * writes plateau at the device limit (~94 MB/s) regardless of
+//!     thread count.
+//!
+//! `JPIO_BENCH_FULL=1` runs the paper-scale 1 GiB file.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use jpio::bench::{FigureReport, Testbed};
+use jpio::storage::local::LocalBackend;
+use jpio::storage::Backend;
+
+fn main() {
+    println!("{}", Testbed::Barq);
+    let styles = ["view_buffer", "mapped", "bulk"];
+    common::check_styles(&styles);
+    let total = common::file_mb() << 20;
+    let threads = [1usize, 2, 4, 8];
+    let path = format!("/tmp/jpio-fig43-{}.dat", std::process::id());
+    let backend: Arc<dyn Backend> = Arc::new(LocalBackend::barq());
+    common::prewrite(&backend, &path, total);
+
+    let mut fig = FigureReport::new(
+        format!(
+            "Figure 4-3: threads, shared file on local disk ({} MB)",
+            total >> 20
+        ),
+        "threads",
+    );
+    for dir in [false, true] {
+        let dir_name = if dir { "write" } else { "read" };
+        for style in styles {
+            let mut points = Vec::new();
+            for &t in &threads {
+                let st = common::thread_sweep_case(
+                    backend.clone(),
+                    &path,
+                    total,
+                    t,
+                    style,
+                    dir,
+                );
+                println!(
+                    "  {dir_name:>5} {style:<12} {t} threads: {:8.1} MB/s (median {:?})",
+                    st.mbs(),
+                    st.median()
+                );
+                points.push((t, st.mbs()));
+            }
+            fig.push(format!("{dir_name}/{style}"), points);
+        }
+    }
+    println!("{}", fig.table());
+    let csv = fig.write_csv("fig4_3_local_disk").unwrap();
+    println!("csv: {csv}");
+
+    // Shape assertions (who wins / plateaus) — soft-checked, loud on drift.
+    let w1 = fig.value("write/view_buffer", 1).unwrap();
+    let w8 = fig.value("write/view_buffer", 8).unwrap();
+    if w8 > w1 * 2.0 {
+        println!("!! SHAPE DRIFT: writes should plateau at the device limit");
+    }
+    let r8 = fig.value("read/view_buffer", 8).unwrap();
+    if r8 < w8 {
+        println!("!! SHAPE DRIFT: page-cache reads should beat device writes");
+    }
+    common::cleanup(&path);
+}

@@ -1,0 +1,75 @@
+//! Figure 4-4 — "Performance of tests using Java threads for parallel
+//! access to a shared file residing on NFS storage attached to the
+//! shared-memory machine".
+//!
+//! Same sweep as Fig 4-3 on the Barq NFS model. Expected shape (paper):
+//!   * reads keep the local-disk trend (client page cache);
+//!   * writes rise to ~250 MB/s aggregate (server absorbs into its
+//!     cache), up from the 94 MB/s local device;
+//!   * **mapped mode collapses** — the NFS client's lock-manager round
+//!     trip per touched page serializes at the server ("the reasons for
+//!     this can be locking (mapping) mechanisms used by Java for
+//!     memory-mapped regions of a file residing on NFS storage").
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use jpio::bench::{FigureReport, Testbed};
+use jpio::storage::nfs::NfsBackend;
+use jpio::storage::Backend;
+
+fn main() {
+    println!("{}", Testbed::Barq);
+    let styles = ["view_buffer", "mapped", "bulk"];
+    common::check_styles(&styles);
+    // Mapped mode pays per-4K-page costs; cap its share of the sweep so
+    // the collapse is visible without dominating wall-clock.
+    let total = (common::file_mb() << 20).min(256 << 20);
+    let mapped_total = (total / 4).max(4 << 20);
+    let threads = [1usize, 2, 4, 8];
+    let path = format!("/tmp/jpio-fig44-{}.dat", std::process::id());
+    let backend: Arc<dyn Backend> = Arc::new(NfsBackend::barq());
+    common::prewrite(&backend, &path, total);
+
+    let mut fig = FigureReport::new(
+        format!("Figure 4-4: threads, shared file on NFS ({} MB)", total >> 20),
+        "threads",
+    );
+    for dir in [false, true] {
+        let dir_name = if dir { "write" } else { "read" };
+        for style in styles {
+            let bytes = if style == "mapped" { mapped_total } else { total };
+            let mut points = Vec::new();
+            for &t in &threads {
+                let st =
+                    common::thread_sweep_case(backend.clone(), &path, bytes, t, style, dir);
+                println!(
+                    "  {dir_name:>5} {style:<12} {t} threads: {:8.1} MB/s (median {:?})",
+                    st.mbs(),
+                    st.median()
+                );
+                points.push((t, st.mbs()));
+            }
+            fig.push(format!("{dir_name}/{style}"), points);
+        }
+    }
+    println!("{}", fig.table());
+    let csv = fig.write_csv("fig4_4_nfs_threads").unwrap();
+    println!("csv: {csv}");
+
+    // Shape assertions.
+    let vb_w = fig.value("write/view_buffer", 8).unwrap();
+    let mm_w = fig.value("write/mapped", 8).unwrap();
+    if mm_w * 2.0 > vb_w {
+        println!("!! SHAPE DRIFT: mapped-mode writes should collapse on NFS");
+    }
+    if !(120.0..=400.0).contains(&vb_w) {
+        println!(
+            "!! SHAPE DRIFT: NFS writes should plateau near the ~250 MB/s \
+             server ingest (got {vb_w:.0})"
+        );
+    }
+    common::cleanup(&path);
+}

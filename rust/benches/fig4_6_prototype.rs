@@ -1,0 +1,90 @@
+//! Figure 4-6 — "Read and write Test case results": the prototype's
+//! `Perf.java` reproduced through the full MPJ-IO API.
+//!
+//! "First, the simple read and write operations are performed without
+//! sync() method call and performance is evaluated in MB/s. After this
+//! operation, the same performance evaluation is done with the sync()
+//! method call and the program outputs the numbers in MB/s."
+//!
+//! Four ranks drive blocking `read`/`write` through individual file
+//! pointers (1 KiB buffers, as in the paper's §3.6 test cases), with and
+//! without a `sync()` after every write / before every read.
+
+#[path = "common.rs"]
+mod common;
+
+use jpio::bench::{bench, FigureReport, Testbed};
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::{amode, seek, File, Info};
+
+const BUF_BYTES: usize = 1024; // the paper's 1 KB buffer
+const OPS: usize = 2048; // ops per rank per repetition
+
+fn perf_case(path: &str, ranks: usize, write: bool, with_sync: bool) -> f64 {
+    let total = ranks * OPS * BUF_BYTES;
+    let stats = bench(
+        format!("{}{}", if write { "write" } else { "read" }, if with_sync { "+sync" } else { "" }),
+        1,
+        common::reps(),
+        total,
+        || {
+            threads::run(ranks, |c| {
+                let f = File::open(c, path, amode::RDWR | amode::CREATE, Info::null())
+                    .unwrap();
+                f.seek((c.rank() * OPS * BUF_BYTES) as i64, seek::SET).unwrap();
+                let mut buf = vec![0u8; BUF_BYTES];
+                for _ in 0..OPS {
+                    if write {
+                        f.write(buf.as_slice(), 0, BUF_BYTES, &Datatype::BYTE).unwrap();
+                        if with_sync {
+                            f.sync().unwrap();
+                        }
+                    } else {
+                        if with_sync {
+                            f.sync().unwrap();
+                        }
+                        f.read(buf.as_mut_slice(), 0, BUF_BYTES, &Datatype::BYTE).unwrap();
+                    }
+                }
+                f.close().unwrap();
+            });
+        },
+    );
+    stats.mbs()
+}
+
+fn main() {
+    println!("{}", Testbed::Barq);
+    println!(
+        "Figure 4-6: prototype Perf test — {} ranks, {} x {} B blocking ops each\n",
+        4, OPS, BUF_BYTES
+    );
+    let path = format!("/tmp/jpio-fig46-{}.dat", std::process::id());
+
+    let mut fig = FigureReport::new("Figure 4-6: read/write MB/s with and without sync()", "case");
+    let cases = [
+        ("write", true, false),
+        ("write+sync", true, true),
+        ("read", false, false),
+        ("read+sync", false, true),
+    ];
+    let mut points = Vec::new();
+    for (i, &(name, w, s)) in cases.iter().enumerate() {
+        let mbs = perf_case(&path, 4, w, s);
+        println!("  {name:<12} {mbs:10.1} MB/s");
+        points.push((i + 1, mbs));
+    }
+    fig.push("MB/s", points.clone());
+    println!("{}", fig.table());
+    println!("  (case 1=write 2=write+sync 3=read 4=read+sync)");
+    let csv = fig.write_csv("fig4_6_prototype").unwrap();
+    println!("csv: {csv}");
+
+    // Shape: sync() must cost something on writes; reads dominate writes.
+    let w = points[0].1;
+    let ws = points[1].1;
+    if ws > w {
+        println!("!! SHAPE DRIFT: write+sync should not beat plain write");
+    }
+    common::cleanup(&path);
+}

@@ -1,0 +1,92 @@
+//! Timing harness: warmup + repetitions + robust statistics.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Case label.
+    pub label: String,
+    /// Sorted repetition times.
+    pub reps: Vec<Duration>,
+    /// Payload bytes moved per repetition (0 if not a throughput bench).
+    pub bytes: usize,
+}
+
+impl BenchStats {
+    /// Median repetition time.
+    pub fn median(&self) -> Duration {
+        self.reps[self.reps.len() / 2]
+    }
+
+    /// Minimum repetition time.
+    pub fn min(&self) -> Duration {
+        self.reps[0]
+    }
+
+    /// 95th-percentile repetition time.
+    pub fn p95(&self) -> Duration {
+        let idx = ((self.reps.len() as f64) * 0.95).ceil() as usize - 1;
+        self.reps[idx.min(self.reps.len() - 1)]
+    }
+
+    /// Mean repetition time.
+    pub fn mean(&self) -> Duration {
+        self.reps.iter().sum::<Duration>() / self.reps.len() as u32
+    }
+
+    /// Throughput in MB/s from the median time.
+    pub fn mbs(&self) -> f64 {
+        if self.bytes == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / 1e6 / self.median().as_secs_f64()
+    }
+}
+
+/// Run `f` `reps` times after `warmup` unmeasured runs; `bytes` is the
+/// payload per repetition (for MB/s).
+pub fn bench(
+    label: impl Into<String>,
+    warmup: usize,
+    reps: usize,
+    bytes: usize,
+    mut f: impl FnMut(),
+) -> BenchStats {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let start = Instant::now();
+        f();
+        times.push(start.elapsed());
+    }
+    times.sort_unstable();
+    BenchStats { label: label.into(), reps: times, bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered_and_sane() {
+        let s = bench("sleepy", 1, 9, 1_000_000, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert_eq!(s.reps.len(), 9);
+        assert!(s.min() <= s.median() && s.median() <= s.p95());
+        assert!(s.median() >= Duration::from_millis(1));
+        // 1 MB in ~1ms ≈ 1000 MB/s; loose bounds for CI noise.
+        let mbs = s.mbs();
+        assert!(mbs > 50.0 && mbs < 1100.0, "mbs = {mbs}");
+    }
+
+    #[test]
+    fn zero_bytes_has_zero_mbs() {
+        let s = bench("x", 0, 3, 0, || {});
+        assert_eq!(s.mbs(), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Measurement harness — regenerates every table and figure of the
+//! paper's evaluation chapter (no criterion offline; this is the
+//! substitute documented in DESIGN.md §2).
+
+pub mod harness;
+pub mod report;
+pub mod testbed;
+pub mod workload;
+
+pub use harness::{bench, BenchStats};
+pub use report::{FigureReport, Series};
+pub use testbed::Testbed;

@@ -1,0 +1,129 @@
+//! Figure/table reporting: paper-style console tables + CSV files under
+//! `results/` so every figure can be re-plotted.
+
+use std::io::Write;
+
+/// One series of a figure: e.g. "read, view_buffer" over thread counts.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Series label.
+    pub label: String,
+    /// (x, MB/s) points.
+    pub points: Vec<(usize, f64)>,
+}
+
+/// A paper figure: titled set of series over a common x-axis.
+#[derive(Debug)]
+pub struct FigureReport {
+    /// e.g. "Figure 4-3: parallel access to a shared file on local disk".
+    pub title: String,
+    /// x-axis label (threads / processes).
+    pub x_label: String,
+    /// All series.
+    pub series: Vec<Series>,
+}
+
+impl FigureReport {
+    /// New empty report.
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>) -> FigureReport {
+        FigureReport { title: title.into(), x_label: x_label.into(), series: Vec::new() }
+    }
+
+    /// Append a series.
+    pub fn push(&mut self, label: impl Into<String>, points: Vec<(usize, f64)>) {
+        self.series.push(Series { label: label.into(), points });
+    }
+
+    /// Look up a point.
+    pub fn value(&self, label: &str, x: usize) -> Option<f64> {
+        self.series
+            .iter()
+            .find(|s| s.label == label)?
+            .points
+            .iter()
+            .find(|&&(px, _)| px == x)
+            .map(|&(_, v)| v)
+    }
+
+    /// Render the console table (rows = x values, columns = series).
+    pub fn table(&self) -> String {
+        let mut xs: Vec<usize> =
+            self.series.iter().flat_map(|s| s.points.iter().map(|&(x, _)| x)).collect();
+        xs.sort_unstable();
+        xs.dedup();
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&format!("{:>10}", self.x_label));
+        for s in &self.series {
+            out.push_str(&format!("  {:>18}", s.label));
+        }
+        out.push('\n');
+        for x in xs {
+            out.push_str(&format!("{x:>10}"));
+            for s in &self.series {
+                match s.points.iter().find(|&&(px, _)| px == x) {
+                    Some(&(_, v)) => out.push_str(&format!("  {v:>13.1} MB/s")),
+                    None => out.push_str(&format!("  {:>18}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `results/<file>.csv` (x, series...) and return its path.
+    pub fn write_csv(&self, file_stem: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all("results")?;
+        let path = format!("results/{file_stem}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        write!(f, "{}", self.x_label)?;
+        for s in &self.series {
+            write!(f, ",{}", s.label)?;
+        }
+        writeln!(f)?;
+        let mut xs: Vec<usize> =
+            self.series.iter().flat_map(|s| s.points.iter().map(|&(x, _)| x)).collect();
+        xs.sort_unstable();
+        xs.dedup();
+        for x in xs {
+            write!(f, "{x}")?;
+            for s in &self.series {
+                match s.points.iter().find(|&&(px, _)| px == x) {
+                    Some(&(_, v)) => write!(f, ",{v:.2}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_and_lookup() {
+        let mut r = FigureReport::new("Figure T", "threads");
+        r.push("read", vec![(1, 100.0), (2, 180.0)]);
+        r.push("write", vec![(1, 90.0)]);
+        assert_eq!(r.value("read", 2), Some(180.0));
+        assert_eq!(r.value("write", 2), None);
+        let t = r.table();
+        assert!(t.contains("Figure T"));
+        assert!(t.contains("180.0"));
+        assert!(t.contains('-'));
+    }
+
+    #[test]
+    fn csv_writes() {
+        let mut r = FigureReport::new("f", "x");
+        r.push("a", vec![(1, 1.5)]);
+        let path = r.write_csv("test-report-unit").unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("x,a"));
+        assert!(body.contains("1,1.50"));
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,80 @@
+//! Testbed descriptors — Tables 4-1 and 4-2 of the paper, printed at the
+//! head of each figure bench so every result names its (simulated)
+//! environment.
+
+use std::fmt;
+
+/// A cluster testbed description.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Testbed {
+    /// Table 4-1: the Barq cluster (shared-memory machine + GigE/Myrinet
+    /// cluster; local disk and NFS storage).
+    Barq,
+    /// Table 4-2: the RCMS/Afrit cluster (34 nodes, InfiniBand, SAN).
+    Rcms,
+}
+
+impl Testbed {
+    /// The paper's spec rows for this testbed.
+    pub fn rows(&self) -> Vec<(&'static str, &'static str)> {
+        match self {
+            Testbed::Barq => vec![
+                ("Cluster Name", "Barq Cluster (simulated)"),
+                ("Brand", "Custom Built"),
+                ("Total Processors", "36 Intel Xeon"),
+                ("Total Nodes", "Nine"),
+                ("Total Memory", "36 GB"),
+                ("Operating System", "Open SuSE Linux 1.1"),
+                ("Interconnects", "Myrinet and Gigabit Ethernet"),
+            ],
+            Testbed::Rcms => vec![
+                ("Cluster Name", "RCMS Cluster (simulated)"),
+                ("Brand", "HP ProLiant DL160se G6 / DL380 G6"),
+                ("Total Processors", "272 Intel Xeon"),
+                ("Total Nodes", "34"),
+                ("Total Memory", "816 GB"),
+                ("Operating System", "Redhat Enterprise Linux 5.5"),
+                ("Interconnects", "InfiniBand, Gigabit Ethernet"),
+                ("Storage", "SAN 22TB raw, FC switch with RAID controller"),
+                ("GPU", "32 x NVidia Tesla S1070"),
+            ],
+        }
+    }
+
+    /// The paper table number.
+    pub fn table_no(&self) -> &'static str {
+        match self {
+            Testbed::Barq => "Table 4-1",
+            Testbed::Rcms => "Table 4-2",
+        }
+    }
+}
+
+impl fmt::Display for Testbed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{} — specification ({:?})", self.table_no(), self)?;
+        for (k, v) in self.rows() {
+            writeln!(f, "  {k:<20} {v}")?;
+        }
+        writeln!(
+            f,
+            "  note: simulated on one host; interconnect/storage behaviour per DESIGN.md §2"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let b = Testbed::Barq.to_string();
+        assert!(b.contains("Table 4-1"));
+        assert!(b.contains("Myrinet"));
+        let r = Testbed::Rcms.to_string();
+        assert!(r.contains("Table 4-2"));
+        assert!(r.contains("InfiniBand"));
+        assert!(r.contains("SAN"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Workload generators for the figure benches.
+//!
+//! The paper's evaluation workload (§3.2): N workers share one file;
+//! each reads/writes its disjoint partition. `partition` reproduces that
+//! layout; `strided` builds the interleaved-view workload used by the
+//! collective-I/O ablation.
+
+use crate::testing::SplitMix64;
+
+/// The byte range of `rank`'s partition of a `total`-byte shared file
+/// split evenly over `n` workers (the paper's test layout).
+pub fn partition(total: usize, n: usize, rank: usize) -> (u64, usize) {
+    let base = total / n;
+    let rem = total % n;
+    let mine = base + usize::from(rank < rem);
+    let start: usize = (0..rank).map(|r| base + usize::from(r < rem)).sum();
+    (start as u64, mine)
+}
+
+/// Deterministic payload for a rank's partition (verifiable on re-read).
+pub fn payload(rank: usize, len: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::new(0xB10C_0000 ^ rank as u64);
+    let mut buf = vec![0u8; len];
+    rng.fill_bytes(&mut buf);
+    buf
+}
+
+/// Interleaved runs: rank's `chunk`-byte pieces every `n * chunk` bytes,
+/// covering `total` bytes — the two-phase collective I/O stress shape.
+pub fn strided(total: usize, n: usize, rank: usize, chunk: usize) -> Vec<(u64, usize)> {
+    let frame = n * chunk;
+    let mut out = Vec::new();
+    let mut off = rank * chunk;
+    while off + chunk <= total {
+        out.push((off as u64, chunk));
+        off += frame;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Config};
+
+    #[test]
+    fn partitions_tile_the_file_exactly() {
+        forall(
+            Config::default().cases(100),
+            |r| (r.range(1, 1 << 20), r.range(1, 32)),
+            |&(total, n)| {
+                let mut cursor = 0u64;
+                for rank in 0..n {
+                    let (start, len) = partition(total, n, rank);
+                    if start != cursor {
+                        return false;
+                    }
+                    cursor += len as u64;
+                }
+                cursor == total as u64
+            },
+        );
+    }
+
+    #[test]
+    fn payload_is_deterministic_and_rank_distinct() {
+        assert_eq!(payload(3, 64), payload(3, 64));
+        assert_ne!(payload(3, 64), payload(4, 64));
+    }
+
+    #[test]
+    fn strided_runs_are_disjoint_across_ranks() {
+        let total = 64 * 1024;
+        let n = 4;
+        let chunk = 256;
+        let mut covered = vec![false; total];
+        for rank in 0..n {
+            for (off, len) in strided(total, n, rank, chunk) {
+                for b in off as usize..off as usize + len {
+                    assert!(!covered[b], "byte {b} covered twice");
+                    covered[b] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c)); // total divisible by frame
+    }
+}

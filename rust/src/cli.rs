@@ -1,0 +1,97 @@
+//! Minimal CLI argument parser (the offline environment has no `clap`;
+//! DESIGN.md §2). Supports `command [--flag value] [--switch] [positional]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag argument).
+    pub command: Option<String>,
+    /// `--key value` pairs (also `--key=value`).
+    pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    pub switches: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Flag value as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Flag value parsed, with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Whether a bare switch is present.
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn command_flags_positionals() {
+        // Bare switches must not be followed by a positional (they would
+        // capture it as a value); place them after positionals or use `=`.
+        let a = parse("bench --ranks 8 --backend=nfs file.dat extra --verbose");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("ranks"), Some("8"));
+        assert_eq!(a.get_or("ranks", 0usize), 8);
+        assert_eq!(a.get("backend"), Some("nfs"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.dat", "extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_or("threads", 4usize), 4);
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse("x --flag");
+        assert!(a.has("flag"));
+    }
+}

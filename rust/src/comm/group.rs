@@ -1,0 +1,92 @@
+//! Process groups (`mpj.Group`): the set of ranks that collectively opened
+//! a file (`MPI_FILE_GET_GROUP`, §7.2.2.7).
+
+/// An ordered set of ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Group {
+    ranks: Vec<usize>,
+}
+
+impl Group {
+    /// Build a group from an explicit rank list.
+    pub fn new(ranks: Vec<usize>) -> Self {
+        Group { ranks }
+    }
+
+    /// Number of members.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// The global ranks of the members, in group order.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Translate a group-local index to a global rank.
+    pub fn translate(&self, local: usize) -> Option<usize> {
+        self.ranks.get(local).copied()
+    }
+
+    /// Position of a global rank inside the group, if present.
+    pub fn rank_of(&self, global: usize) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == global)
+    }
+
+    /// Set intersection, preserving this group's order.
+    pub fn intersect(&self, other: &Group) -> Group {
+        Group::new(
+            self.ranks
+                .iter()
+                .copied()
+                .filter(|r| other.ranks.contains(r))
+                .collect(),
+        )
+    }
+
+    /// Set union: members of `self` then members of `other` not in `self`.
+    pub fn union(&self, other: &Group) -> Group {
+        let mut ranks = self.ranks.clone();
+        for &r in &other.ranks {
+            if !ranks.contains(&r) {
+                ranks.push(r);
+            }
+        }
+        Group::new(ranks)
+    }
+
+    /// Set difference: members of `self` not in `other`.
+    pub fn difference(&self, other: &Group) -> Group {
+        Group::new(
+            self.ranks
+                .iter()
+                .copied()
+                .filter(|r| !other.ranks.contains(r))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn translate_and_rank_of() {
+        let g = Group::new(vec![3, 1, 4]);
+        assert_eq!(g.size(), 3);
+        assert_eq!(g.translate(2), Some(4));
+        assert_eq!(g.translate(3), None);
+        assert_eq!(g.rank_of(1), Some(1));
+        assert_eq!(g.rank_of(9), None);
+    }
+
+    #[test]
+    fn set_operations() {
+        let a = Group::new(vec![0, 1, 2, 3]);
+        let b = Group::new(vec![2, 3, 4]);
+        assert_eq!(a.intersect(&b).ranks(), &[2, 3]);
+        assert_eq!(a.union(&b).ranks(), &[0, 1, 2, 3, 4]);
+        assert_eq!(a.difference(&b).ranks(), &[0, 1]);
+    }
+}

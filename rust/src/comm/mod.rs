@@ -1,0 +1,302 @@
+//! MPI-like communicator substrate — the MPJ Express analogue.
+//!
+//! The paper's prototype sits on MPJ Express; this module is the
+//! corresponding messaging layer built from scratch: groups, point-to-point
+//! send/recv with tags, and the collectives the I/O layer needs (barrier,
+//! bcast, gather, allgather, reduce, scan, alltoall), over two transports:
+//!
+//! * [`threads`] — shared-memory "ranks" as threads of one process (the
+//!   paper's shared-memory machine configuration, Figures 4-3/4-4);
+//! * [`process`] — ranks as forked processes over Unix sockets (the
+//!   paper's distributed-memory MPJ Express configuration, Figure 4-5),
+//!   with an interconnect performance model in [`netmodel`].
+//!
+//! Collectives are implemented as default trait methods over send/recv, so
+//! both transports share one verified implementation; `ThreadComm`
+//! overrides the latency-critical ones with shared-memory fast paths.
+
+pub mod datatype;
+pub mod group;
+pub mod netmodel;
+pub mod process;
+pub mod request;
+pub mod status;
+pub mod sub;
+pub mod threads;
+
+pub use datatype::{ArrayOrder, Datatype, Offset, Prim};
+pub use group::Group;
+pub use request::{CommNonblocking, RecvRequest, SendRequest};
+pub use status::Status;
+pub use sub::SubComm;
+
+/// Tags below this value are reserved for library-internal protocols
+/// (collectives, shared-file-pointer service, collective I/O exchange).
+pub const INTERNAL_TAG_BASE: i32 = i32::MIN / 2;
+
+/// Internal tag for collective plumbing.
+const T_COLL: i32 = INTERNAL_TAG_BASE + 1;
+/// Internal tag for barrier rounds.
+const T_BARRIER: i32 = INTERNAL_TAG_BASE + 2;
+
+/// Reduction operators for the numeric collectives.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReduceOp {
+    /// Sum.
+    Sum,
+    /// Minimum.
+    Min,
+    /// Maximum.
+    Max,
+}
+
+impl ReduceOp {
+    fn fold_i64(self, a: i64, b: i64) -> i64 {
+        match self {
+            ReduceOp::Sum => a.wrapping_add(b),
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+
+    fn fold_f64(self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+/// An intracommunicator: a fixed group of ranks with point-to-point
+/// messaging and collectives (the paper's `Intracomm`, which hosts the
+/// collective `fileOpen`/`fileClose` operations).
+pub trait Comm: Send + Sync {
+    /// This process's rank in `0..size()`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the communicator.
+    fn size(&self) -> usize;
+
+    /// Blocking tagged send of a byte message to `dest`.
+    fn send(&self, dest: usize, tag: i32, data: &[u8]);
+
+    /// Blocking tagged receive from `src`. Messages from a given source
+    /// are delivered in send order; non-matching tags are queued.
+    fn recv(&self, src: usize, tag: i32) -> Vec<u8>;
+
+    /// Nonblocking probe-and-receive: `Some(payload)` if a matching
+    /// message is already available (`MPI_Iprobe` + recv).
+    fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>>;
+
+    /// Synchronize all ranks. Default: flat gather-to-0 + broadcast,
+    /// which the transports may override.
+    fn barrier(&self) {
+        let n = self.size();
+        if n <= 1 {
+            return;
+        }
+        if self.rank() == 0 {
+            for src in 1..n {
+                let _ = self.recv(src, T_BARRIER);
+            }
+            for dst in 1..n {
+                self.send(dst, T_BARRIER, &[]);
+            }
+        } else {
+            self.send(0, T_BARRIER, &[]);
+            let _ = self.recv(0, T_BARRIER);
+        }
+    }
+
+    /// Broadcast `data` from `root` to all ranks (binomial tree).
+    fn bcast(&self, root: usize, data: &mut Vec<u8>) {
+        let n = self.size();
+        if n <= 1 {
+            return;
+        }
+        // Rotate ranks so the root is virtual rank 0.
+        let vrank = (self.rank() + n - root) % n;
+        let mut mask = 1usize;
+        // Receive phase: find the bit where we get the message.
+        while mask < n {
+            if vrank & mask != 0 {
+                let src = (vrank - mask + root) % n;
+                *data = self.recv(src, T_COLL);
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send phase: forward to higher virtual ranks.
+        mask >>= 1;
+        while mask > 0 {
+            if vrank & mask == 0 && vrank + mask < n {
+                let dst = (vrank + mask + root) % n;
+                self.send(dst, T_COLL, data);
+            }
+            mask >>= 1;
+        }
+    }
+
+    /// Gather each rank's bytes at `root`; returns `Some(per-rank vec)` at
+    /// the root, `None` elsewhere.
+    fn gather(&self, root: usize, data: &[u8]) -> Option<Vec<Vec<u8>>> {
+        let n = self.size();
+        if self.rank() == root {
+            let mut out = vec![Vec::new(); n];
+            out[root] = data.to_vec();
+            for src in 0..n {
+                if src != root {
+                    out[src] = self.recv(src, T_COLL);
+                }
+            }
+            Some(out)
+        } else {
+            self.send(root, T_COLL, data);
+            None
+        }
+    }
+
+    /// All ranks receive every rank's bytes (gather + bcast of a framed
+    /// concatenation).
+    fn allgather(&self, data: &[u8]) -> Vec<Vec<u8>> {
+        let n = self.size();
+        if n == 1 {
+            return vec![data.to_vec()];
+        }
+        if let Some(parts) = self.gather(0, data) {
+            let mut framed = frame(&parts);
+            self.bcast(0, &mut framed);
+            parts
+        } else {
+            let mut framed = Vec::new();
+            self.bcast(0, &mut framed);
+            unframe(&framed, n)
+        }
+    }
+
+    /// Scatter per-rank byte payloads from `root`.
+    fn scatter(&self, root: usize, data: Option<&[Vec<u8>]>) -> Vec<u8> {
+        let n = self.size();
+        if self.rank() == root {
+            let parts = data.expect("root must supply scatter payloads");
+            assert_eq!(parts.len(), n, "scatter payload count != comm size");
+            for (dst, part) in parts.iter().enumerate() {
+                if dst != root {
+                    self.send(dst, T_COLL, part);
+                }
+            }
+            parts[root].clone()
+        } else {
+            self.recv(root, T_COLL)
+        }
+    }
+
+    /// Personalized all-to-all: `parts[d]` goes to rank `d`; returns the
+    /// payloads received from every rank. Sends are rank-ordered with a
+    /// pairwise schedule to avoid head-of-line blocking.
+    fn alltoall(&self, parts: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        let n = self.size();
+        assert_eq!(parts.len(), n, "alltoall payload count != comm size");
+        let me = self.rank();
+        let mut out = vec![Vec::new(); n];
+        out[me] = parts[me].clone();
+        // Ring schedule: round r sends to (me+r) and receives from (me-r).
+        // Sends are buffered on both transports (mailboxes / progress
+        // engine), so send-then-recv cannot deadlock.
+        for r in 1..n {
+            let send_to = (me + r) % n;
+            let recv_from = (me + n - r) % n;
+            self.send(send_to, T_COLL, &parts[send_to]);
+            out[recv_from] = self.recv(recv_from, T_COLL);
+        }
+        out
+    }
+
+    /// All-reduce of one i64 (gather/bcast through rank 0).
+    fn allreduce_i64(&self, op: ReduceOp, value: i64) -> i64 {
+        let parts = self.allgather(&value.to_le_bytes());
+        parts
+            .iter()
+            .map(|b| i64::from_le_bytes(b[..8].try_into().unwrap()))
+            .reduce(|a, b| op.fold_i64(a, b))
+            .unwrap()
+    }
+
+    /// All-reduce of one f64.
+    fn allreduce_f64(&self, op: ReduceOp, value: f64) -> f64 {
+        let parts = self.allgather(&value.to_le_bytes());
+        parts
+            .iter()
+            .map(|b| f64::from_le_bytes(b[..8].try_into().unwrap()))
+            .reduce(|a, b| op.fold_f64(a, b))
+            .unwrap()
+    }
+
+    /// Inclusive prefix scan of one i64 (rank r receives fold of ranks
+    /// `0..=r`). Used by the ordered shared-file-pointer collectives.
+    fn scan_i64(&self, op: ReduceOp, value: i64) -> i64 {
+        let parts = self.allgather(&value.to_le_bytes());
+        parts[..=self.rank()]
+            .iter()
+            .map(|b| i64::from_le_bytes(b[..8].try_into().unwrap()))
+            .reduce(|a, b| op.fold_i64(a, b))
+            .unwrap()
+    }
+
+    /// Exclusive prefix sum of one i64 (rank r receives sum of ranks
+    /// `0..r`; rank 0 receives `0`).
+    fn exscan_sum_i64(&self, value: i64) -> i64 {
+        self.scan_i64(ReduceOp::Sum, value) - value
+    }
+
+    /// The group of this communicator.
+    fn group(&self) -> Group {
+        Group::new((0..self.size()).collect())
+    }
+}
+
+/// Frame a list of byte payloads into one buffer (u32 count, u64 lengths).
+pub(crate) fn frame(parts: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + parts.iter().map(|p| p.len() + 8).sum::<usize>());
+    out.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+    for p in parts {
+        out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+    }
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Inverse of [`frame`]; `expect` validates the part count.
+pub(crate) fn unframe(buf: &[u8], expect: usize) -> Vec<Vec<u8>> {
+    let count = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    assert_eq!(count, expect, "unframe: part count mismatch");
+    let mut lens = Vec::with_capacity(count);
+    let mut pos = 4;
+    for _ in 0..count {
+        lens.push(u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize);
+        pos += 8;
+    }
+    let mut out = Vec::with_capacity(count);
+    for len in lens {
+        out.push(buf[pos..pos + len].to_vec());
+        pos += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let parts = vec![vec![1u8, 2], vec![], vec![3u8; 100]];
+        assert_eq!(unframe(&frame(&parts), 3), parts);
+    }
+
+    // The collectives themselves are exercised across transports in
+    // threads.rs / process.rs tests and in rust/tests/comm_collectives.rs.
+}

@@ -1,0 +1,146 @@
+//! Interconnect performance model.
+//!
+//! The paper's two testbeds use Gigabit Ethernet + Myrinet (Barq, Table
+//! 4-1) and InfiniBand + GigE (RCMS, Table 4-2). We run every rank on one
+//! host, so the *transport* is a Unix socket either way; this module
+//! supplies the latency/bandwidth cost model that makes a simulated link
+//! behave like the paper's interconnects. Storage backends reuse the same
+//! model for NFS RPC costs.
+//!
+//! Costs are injected as real (scaled) delays so measured bandwidth keeps
+//! the paper's *shape*; `TimeScale` shrinks all delays uniformly so the
+//! bench suite stays fast (relative numbers are unchanged).
+
+use std::time::Duration;
+
+/// A link class with one-way latency and sustained bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// One-way small-message latency.
+    pub latency_us: f64,
+    /// Sustained bandwidth in MB/s.
+    pub bandwidth_mbs: f64,
+    /// Human-readable name.
+    pub name: &'static str,
+}
+
+impl Link {
+    /// Gigabit Ethernet (Barq cluster default fabric).
+    pub const GIGE: Link = Link { latency_us: 55.0, bandwidth_mbs: 110.0, name: "GigE" };
+    /// Myrinet (Barq cluster HPC fabric).
+    pub const MYRINET: Link = Link { latency_us: 7.0, bandwidth_mbs: 240.0, name: "Myrinet" };
+    /// 40 Gb/s InfiniBand (RCMS cluster fabric).
+    pub const INFINIBAND: Link =
+        Link { latency_us: 2.0, bandwidth_mbs: 3200.0, name: "InfiniBand" };
+    /// Loopback / shared memory (no injected cost).
+    pub const LOCAL: Link = Link { latency_us: 0.0, bandwidth_mbs: f64::INFINITY, name: "local" };
+
+    /// Modelled one-way transfer time for `bytes` at scale 1.0.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        if self.bandwidth_mbs.is_infinite() && self.latency_us == 0.0 {
+            return Duration::ZERO;
+        }
+        let bw = self.bandwidth_mbs * 1e6; // bytes/sec
+        let secs = self.latency_us * 1e-6
+            + if bw.is_finite() { bytes as f64 / bw } else { 0.0 };
+        Duration::from_secs_f64(secs)
+    }
+}
+
+/// Uniform scale factor applied to all modelled delays. `0.0` disables
+/// delay injection entirely (functional tests); `1.0` is real time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimeScale(pub f64);
+
+impl Default for TimeScale {
+    fn default() -> Self {
+        TimeScale(1.0)
+    }
+}
+
+impl TimeScale {
+    /// No injected delays (functional testing).
+    pub const OFF: TimeScale = TimeScale(0.0);
+
+    /// Apply the scale to a modelled duration.
+    pub fn scale(&self, d: Duration) -> Duration {
+        if self.0 == 0.0 {
+            Duration::ZERO
+        } else {
+            d.mul_f64(self.0)
+        }
+    }
+
+    /// Sleep for the scaled duration (no-op when zero or sub-microsecond).
+    pub fn pay(&self, d: Duration) {
+        let s = self.scale(d);
+        if s > Duration::from_nanos(500) {
+            spin_sleep(s);
+        }
+    }
+}
+
+/// Hybrid sleep: OS sleep for the bulk, spin for the tail, so short
+/// modelled delays (microseconds) stay accurate enough for bandwidth
+/// shapes without burning a core on long ones.
+fn spin_sleep(d: Duration) {
+    let start = std::time::Instant::now();
+    if d > Duration::from_micros(200) {
+        std::thread::sleep(d - Duration::from_micros(100));
+    }
+    while start.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let l = Link::GIGE;
+        let t1 = l.transfer_time(1 << 20);
+        let t2 = l.transfer_time(2 << 20);
+        assert!(t2 > t1);
+        // 1 MiB at 110 MB/s ≈ 9.5 ms (+55 µs latency).
+        assert!((t1.as_secs_f64() - (1048576.0 / 110e6 + 55e-6)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn local_link_is_free() {
+        assert_eq!(Link::LOCAL.transfer_time(usize::MAX >> 8), Duration::ZERO);
+    }
+
+    #[test]
+    fn timescale_off_pays_nothing() {
+        let start = std::time::Instant::now();
+        TimeScale::OFF.pay(Duration::from_secs(5));
+        assert!(start.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn timescale_scales() {
+        let ts = TimeScale(0.5);
+        assert_eq!(ts.scale(Duration::from_millis(10)), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn pay_sleeps_approximately() {
+        let ts = TimeScale(1.0);
+        let start = std::time::Instant::now();
+        ts.pay(Duration::from_millis(2));
+        let el = start.elapsed();
+        assert!(el >= Duration::from_millis(2), "slept only {el:?}");
+        assert!(el < Duration::from_millis(40), "overslept {el:?}");
+    }
+
+    #[test]
+    fn ordering_of_fabrics() {
+        // Latency: IB < Myrinet < GigE; bandwidth the reverse order.
+        assert!(Link::INFINIBAND.latency_us < Link::MYRINET.latency_us);
+        assert!(Link::MYRINET.latency_us < Link::GIGE.latency_us);
+        assert!(Link::INFINIBAND.bandwidth_mbs > Link::MYRINET.bandwidth_mbs);
+        assert!(Link::MYRINET.bandwidth_mbs > Link::GIGE.bandwidth_mbs);
+    }
+}

@@ -1,0 +1,429 @@
+//! Distributed-memory communicator: ranks as forked processes connected by
+//! a full mesh of Unix socket pairs.
+//!
+//! This is the configuration of the paper's Figure 4-5 ("MPJ Express
+//! processes for parallel access to shared file ... of the Distributed
+//! Memory Machine"): separate address spaces, kernel-mediated messaging.
+//! The interconnect cost model ([`super::netmodel`]) layers the Barq /
+//! RCMS fabric behaviour (GigE / Myrinet / InfiniBand) on top of the
+//! loopback transport.
+//!
+//! ## Progress engine
+//!
+//! Sockets are non-blocking. `send` loops on partial writes and, whenever
+//! the pipe is full, drains every readable peer into per-source pending
+//! queues — so two ranks streaming large messages at each other cannot
+//! deadlock (the classic eager/rendezvous problem; ROMIO's aggregation
+//! exchange hits exactly this pattern). `recv` polls all peers, not just
+//! the awaited source, for the same reason.
+
+use std::collections::VecDeque;
+use std::io;
+use std::os::unix::io::RawFd;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::netmodel::{Link, TimeScale};
+use super::Comm;
+
+/// Frame header: tag (i32 LE) + payload length (u64 LE).
+const HDR: usize = 12;
+
+struct PeerState {
+    fd: RawFd,
+    /// Accumulated unparsed inbound bytes.
+    rbuf: Vec<u8>,
+    /// Parsed frames not yet consumed by `recv`.
+    pending: VecDeque<(i32, Vec<u8>)>,
+}
+
+struct Inner {
+    peers: Vec<Option<PeerState>>, // None at self index
+}
+
+/// Configuration for a process world.
+#[derive(Clone, Copy, Debug)]
+pub struct ProcConfig {
+    /// Modelled interconnect.
+    pub link: Link,
+    /// Delay scale (set [`TimeScale::OFF`] for functional tests).
+    pub scale: TimeScale,
+}
+
+impl Default for ProcConfig {
+    fn default() -> Self {
+        ProcConfig { link: Link::LOCAL, scale: TimeScale::OFF }
+    }
+}
+
+/// A process-transport communicator handle (one per forked rank).
+pub struct ProcComm {
+    rank: usize,
+    n: usize,
+    inner: Mutex<Inner>,
+    cfg: ProcConfig,
+}
+
+// Safety: all fd state is behind the Mutex.
+unsafe impl Sync for ProcComm {}
+
+impl ProcComm {
+    fn errno() -> i32 {
+        io::Error::last_os_error().raw_os_error().unwrap_or(0)
+    }
+
+    /// Drain every readable peer into its pending queue. `block` waits
+    /// until at least one fd is readable (or `want_writable` is writable).
+    fn progress(&self, inner: &mut Inner, block: bool, want_writable: Option<RawFd>) {
+        let mut fds: Vec<libc::pollfd> = Vec::with_capacity(self.n);
+        let mut idx: Vec<usize> = Vec::with_capacity(self.n);
+        for (i, p) in inner.peers.iter().enumerate() {
+            if let Some(p) = p {
+                let mut ev = libc::POLLIN;
+                if Some(p.fd) == want_writable {
+                    ev |= libc::POLLOUT;
+                }
+                fds.push(libc::pollfd { fd: p.fd, events: ev, revents: 0 });
+                idx.push(i);
+            }
+        }
+        let timeout = if block { -1 } else { 0 };
+        let rc = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout) };
+        if rc < 0 {
+            if Self::errno() == libc::EINTR {
+                return;
+            }
+            panic!("poll failed: {}", io::Error::last_os_error());
+        }
+        for (f, &i) in fds.iter().zip(&idx) {
+            if f.revents & (libc::POLLIN | libc::POLLHUP | libc::POLLERR) != 0 {
+                self.drain_peer(inner.peers[i].as_mut().unwrap(), i);
+            }
+        }
+    }
+
+    /// Non-blockingly read whatever is available from one peer and parse
+    /// complete frames into its pending queue.
+    fn drain_peer(&self, p: &mut PeerState, peer_rank: usize) {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            let rc = unsafe {
+                libc::read(p.fd, chunk.as_mut_ptr() as *mut libc::c_void, chunk.len())
+            };
+            if rc > 0 {
+                p.rbuf.extend_from_slice(&chunk[..rc as usize]);
+                if (rc as usize) < chunk.len() {
+                    break;
+                }
+            } else if rc == 0 {
+                // Peer closed. Parse what we have; a later recv on this
+                // peer with nothing pending is a hard error.
+                break;
+            } else {
+                let e = Self::errno();
+                if e == libc::EAGAIN || e == libc::EWOULDBLOCK {
+                    break;
+                }
+                if e == libc::EINTR {
+                    continue;
+                }
+                panic!("read from rank {peer_rank}: {}", io::Error::last_os_error());
+            }
+        }
+        // Parse complete frames.
+        let mut pos = 0;
+        while p.rbuf.len() - pos >= HDR {
+            let tag = i32::from_le_bytes(p.rbuf[pos..pos + 4].try_into().unwrap());
+            let len = u64::from_le_bytes(p.rbuf[pos + 4..pos + 12].try_into().unwrap()) as usize;
+            if p.rbuf.len() - pos - HDR < len {
+                break;
+            }
+            let payload = p.rbuf[pos + HDR..pos + HDR + len].to_vec();
+            p.pending.push_back((tag, payload));
+            pos += HDR + len;
+        }
+        if pos > 0 {
+            p.rbuf.drain(..pos);
+        }
+    }
+}
+
+impl Comm for ProcComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dest: usize, tag: i32, data: &[u8]) {
+        assert!(dest < self.n && dest != self.rank, "send to rank {dest}");
+        // Pay the modelled wire cost up front (sender-side occupancy).
+        self.cfg.scale.pay(self.cfg.link.transfer_time(data.len()));
+
+        let mut frame = Vec::with_capacity(HDR + data.len());
+        frame.extend_from_slice(&tag.to_le_bytes());
+        frame.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        frame.extend_from_slice(data);
+
+        let mut inner = self.inner.lock().unwrap();
+        let fd = inner.peers[dest].as_ref().unwrap().fd;
+        let mut written = 0;
+        while written < frame.len() {
+            let rc = unsafe {
+                libc::write(
+                    fd,
+                    frame[written..].as_ptr() as *const libc::c_void,
+                    frame.len() - written,
+                )
+            };
+            if rc > 0 {
+                written += rc as usize;
+            } else {
+                let e = Self::errno();
+                if e == libc::EAGAIN || e == libc::EWOULDBLOCK {
+                    // Pipe full: make progress on inbound traffic so the
+                    // peer (which may be blocked writing to us) can drain.
+                    self.progress(&mut inner, true, Some(fd));
+                } else if e == libc::EINTR {
+                    continue;
+                } else {
+                    panic!("write to rank {dest}: {}", io::Error::last_os_error());
+                }
+            }
+        }
+    }
+
+    fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
+        assert!(src < self.n && src != self.rank, "recv from rank {src}");
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            {
+                let p = inner.peers[src].as_mut().unwrap();
+                if let Some(pos) = p.pending.iter().position(|(t, _)| *t == tag) {
+                    return p.pending.remove(pos).unwrap().1;
+                }
+            }
+            self.progress(&mut inner, true, None);
+        }
+    }
+
+    fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
+        assert!(src < self.n && src != self.rank, "try_recv from rank {src}");
+        let mut inner = self.inner.lock().unwrap();
+        self.progress(&mut inner, false, None);
+        let p = inner.peers[src].as_mut().unwrap();
+        let pos = p.pending.iter().position(|(t, _)| *t == tag)?;
+        Some(p.pending.remove(pos).unwrap().1)
+    }
+}
+
+/// Outcome of a process-world run, returned at rank 0.
+pub struct WorldResult<R> {
+    /// Rank 0's return value.
+    pub value: R,
+}
+
+/// Fork `n - 1` child ranks (the caller becomes rank 0), run `f` in every
+/// rank, wait for the children, and return rank 0's result. Children exit
+/// after `f`; a non-zero child exit panics the parent.
+///
+/// Must be called when it is safe to fork (the bench/example binaries call
+/// it from `main` before spawning threads; PJRT clients must be created
+/// *after* the fork, in each rank).
+pub fn run<R, F>(n: usize, cfg: ProcConfig, f: F) -> R
+where
+    F: Fn(&ProcComm) -> R,
+{
+    assert!(n > 0);
+    if n == 1 {
+        let comm = ProcComm { rank: 0, n: 1, inner: Mutex::new(Inner { peers: vec![None] }), cfg };
+        return f(&comm);
+    }
+    // Socket pairs for every unordered pair {i, j}, i < j.
+    let mut pair_fds = vec![vec![(-1, -1); n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut sv = [0; 2];
+            let rc = unsafe { libc::socketpair(libc::AF_UNIX, libc::SOCK_STREAM, 0, sv.as_mut_ptr()) };
+            assert_eq!(rc, 0, "socketpair: {}", io::Error::last_os_error());
+            pair_fds[i][j] = (sv[0], sv[1]); // sv[0] for rank i, sv[1] for rank j
+        }
+    }
+    let close_all_except = |me: usize| {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (a, b) = pair_fds[i][j];
+                if i != me {
+                    unsafe { libc::close(a) };
+                }
+                if j != me {
+                    unsafe { libc::close(b) };
+                }
+            }
+        }
+    };
+    let build_comm = |me: usize| -> ProcComm {
+        let mut peers: Vec<Option<PeerState>> = (0..n).map(|_| None).collect();
+        for other in 0..n {
+            if other == me {
+                continue;
+            }
+            let fd = if me < other { pair_fds[me][other].0 } else { pair_fds[other][me].1 };
+            // Non-blocking mode for the progress engine.
+            unsafe {
+                let fl = libc::fcntl(fd, libc::F_GETFL);
+                libc::fcntl(fd, libc::F_SETFL, fl | libc::O_NONBLOCK);
+            }
+            peers[other] = Some(PeerState { fd, rbuf: Vec::new(), pending: VecDeque::new() });
+        }
+        ProcComm { rank: me, n, inner: Mutex::new(Inner { peers }), cfg }
+    };
+
+    let mut children = Vec::with_capacity(n - 1);
+    for rank in 1..n {
+        let pid = unsafe { libc::fork() };
+        assert!(pid >= 0, "fork: {}", io::Error::last_os_error());
+        if pid == 0 {
+            // Child: become `rank`, run, exit without unwinding into the
+            // parent's state.
+            close_all_except(rank);
+            let comm = build_comm(rank);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&comm);
+            }));
+            let code = if result.is_ok() { 0 } else { 17 };
+            unsafe { libc::_exit(code) };
+        }
+        children.push(pid);
+    }
+    // Parent: rank 0.
+    close_all_except(0);
+    let comm = build_comm(0);
+    let value = f(&comm);
+    drop(comm);
+    // Reap.
+    for pid in children {
+        let mut status = 0;
+        let rc = unsafe { libc::waitpid(pid, &mut status, 0) };
+        assert!(rc == pid, "waitpid: {}", io::Error::last_os_error());
+        let exited_ok = libc::WIFEXITED(status) && libc::WEXITSTATUS(status) == 0;
+        assert!(exited_ok, "child rank (pid {pid}) failed with status {status:#x}");
+    }
+    value
+}
+
+/// Convenience wrapper: functional defaults (no modelled delays).
+pub fn run_local<R, F>(n: usize, f: F) -> R
+where
+    F: Fn(&ProcComm) -> R,
+{
+    run(n, ProcConfig::default(), f)
+}
+
+/// Rough helper used by benches: the wall-clock of one modelled GigE
+/// round-trip, for sanity checks.
+pub fn modelled_rtt(cfg: &ProcConfig, bytes: usize) -> Duration {
+    cfg.scale.scale(cfg.link.transfer_time(bytes)) * 2
+}
+
+impl Drop for ProcComm {
+    fn drop(&mut self) {
+        let inner = self.inner.lock().unwrap();
+        for p in inner.peers.iter().flatten() {
+            unsafe { libc::close(p.fd) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ReduceOp;
+
+    // NOTE: these tests fork. The cargo test harness is multi-threaded,
+    // which is safe here because children only touch their own fds and
+    // glibc's atfork handlers keep malloc usable, but we keep the worlds
+    // small and the work minimal.
+
+    #[test]
+    fn fork_world_ranks_and_barrier() {
+        let v = run_local(4, |c| {
+            c.barrier();
+            c.allreduce_i64(ReduceOp::Sum, c.rank() as i64)
+        });
+        assert_eq!(v, 0 + 1 + 2 + 3);
+    }
+
+    #[test]
+    fn send_recv_across_processes() {
+        let got = run_local(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 5, b"hello child");
+                c.recv(1, 6)
+            } else {
+                let m = c.recv(0, 5);
+                c.send(0, 6, &m);
+                Vec::new()
+            }
+        });
+        assert_eq!(got, b"hello child");
+    }
+
+    #[test]
+    fn large_bidirectional_streams_do_not_deadlock() {
+        // Both ranks send 4 MiB to each other simultaneously — only the
+        // progress engine prevents a pipe-full deadlock here.
+        let ok = run_local(2, |c| {
+            let big = vec![c.rank() as u8; 4 << 20];
+            let other = 1 - c.rank();
+            c.send(other, 9, &big);
+            let got = c.recv(other, 9);
+            got.len() == 4 << 20 && got.iter().all(|&b| b == other as u8)
+        });
+        assert!(ok);
+    }
+
+    #[test]
+    fn collectives_across_processes() {
+        let parts = run_local(3, |c| {
+            let g = c.allgather(&[c.rank() as u8 + 10]);
+            let mut b = vec![0u8; 3];
+            if c.rank() == 1 {
+                b = vec![7, 8, 9];
+            }
+            c.bcast(1, &mut b);
+            assert_eq!(b, vec![7, 8, 9]);
+            g
+        });
+        assert_eq!(parts, vec![vec![10u8], vec![11u8], vec![12u8]]);
+    }
+
+    #[test]
+    fn alltoall_across_processes() {
+        let out = run_local(3, |c| {
+            let parts: Vec<Vec<u8>> = (0..3).map(|d| vec![(c.rank() * 3 + d) as u8]).collect();
+            c.alltoall(&parts)
+        });
+        // Rank 0 receives element [src*3 + 0] from each src.
+        assert_eq!(out, vec![vec![0u8], vec![3u8], vec![6u8]]);
+    }
+
+    #[test]
+    fn modelled_link_delays_are_paid() {
+        use std::time::Instant;
+        let cfg = ProcConfig { link: Link::GIGE, scale: TimeScale(1.0) };
+        let elapsed = run(2, cfg, |c| {
+            let start = Instant::now();
+            if c.rank() == 0 {
+                // 1 MiB at 110 MB/s ≈ 9.5 ms modelled.
+                c.send(1, 1, &vec![0u8; 1 << 20]);
+            } else {
+                let _ = c.recv(0, 1);
+            }
+            start.elapsed()
+        });
+        assert!(elapsed >= Duration::from_millis(8), "GigE model not paid: {elapsed:?}");
+    }
+}

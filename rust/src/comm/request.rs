@@ -1,0 +1,130 @@
+//! Nonblocking point-to-point operations (`mpj.Request` for messages).
+//!
+//! MPJ Express exposes isend/irecv at the device level ("non-blocking and
+//! blocking communications at device level", §1.2); jpio's transports are
+//! both *buffering* (mailboxes / the socket progress engine), so `isend`
+//! completes locally at once and `irecv` is a poll handle over
+//! [`Comm::try_recv`].
+
+use super::Comm;
+
+/// Handle for a pending nonblocking receive.
+pub struct RecvRequest {
+    src: usize,
+    tag: i32,
+    done: Option<Vec<u8>>,
+}
+
+impl RecvRequest {
+    /// Start a nonblocking receive (`MPI_Irecv`).
+    pub fn new(src: usize, tag: i32) -> RecvRequest {
+        RecvRequest { src, tag, done: None }
+    }
+
+    /// Poll for completion (`MPI_Test`).
+    pub fn test(&mut self, comm: &dyn Comm) -> bool {
+        if self.done.is_none() {
+            self.done = comm.try_recv(self.src, self.tag);
+        }
+        self.done.is_some()
+    }
+
+    /// Block until the message arrives (`MPI_Wait`).
+    pub fn wait(mut self, comm: &dyn Comm) -> Vec<u8> {
+        match self.done.take() {
+            Some(v) => v,
+            None => comm.recv(self.src, self.tag),
+        }
+    }
+}
+
+/// Handle for a nonblocking send. Both transports buffer eagerly, so the
+/// send is complete on return; the handle exists for API fidelity.
+pub struct SendRequest {
+    _completed: (),
+}
+
+impl SendRequest {
+    /// Completed-send handle.
+    pub fn ready() -> SendRequest {
+        SendRequest { _completed: () }
+    }
+
+    /// Always true (eager buffering).
+    pub fn test(&mut self) -> bool {
+        true
+    }
+
+    /// No-op.
+    pub fn wait(self) {}
+}
+
+/// Nonblocking extensions over any communicator.
+pub trait CommNonblocking: Comm {
+    /// `MPI_Isend`: eager-buffered send; completes immediately.
+    fn isend(&self, dest: usize, tag: i32, data: &[u8]) -> SendRequest {
+        self.send(dest, tag, data);
+        SendRequest::ready()
+    }
+
+    /// `MPI_Irecv`: returns a pollable receive handle.
+    fn irecv(&self, src: usize, tag: i32) -> RecvRequest {
+        RecvRequest::new(src, tag)
+    }
+}
+
+impl<C: Comm + ?Sized> CommNonblocking for C {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+
+    #[test]
+    fn irecv_polls_until_message_arrives() {
+        threads::run(2, |c| {
+            if c.rank() == 0 {
+                let mut req = c.irecv(1, 5);
+                // Poll (may spin a few times before rank 1 sends).
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+                while !req.test(c) {
+                    assert!(std::time::Instant::now() < deadline);
+                    std::thread::yield_now();
+                }
+                assert_eq!(req.wait(c), b"polled");
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                let mut s = c.isend(0, 5, b"polled");
+                assert!(s.test());
+                s.wait();
+            }
+        });
+    }
+
+    #[test]
+    fn irecv_wait_blocks_without_polling() {
+        threads::run(2, |c| {
+            if c.rank() == 0 {
+                let req = c.irecv(1, 9);
+                assert_eq!(req.wait(c), vec![42u8; 100]);
+            } else {
+                c.send(0, 9, &[42u8; 100]);
+            }
+        });
+    }
+
+    #[test]
+    fn overlapping_irecvs_match_tags() {
+        threads::run(2, |c| {
+            if c.rank() == 0 {
+                let ra = c.irecv(1, 1);
+                let rb = c.irecv(1, 2);
+                assert_eq!(rb.wait(c), b"two");
+                assert_eq!(ra.wait(c), b"one");
+            } else {
+                c.send(0, 1, b"one");
+                c.send(0, 2, b"two");
+            }
+        });
+    }
+}

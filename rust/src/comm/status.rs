@@ -1,0 +1,64 @@
+//! Status objects returned by data-access routines (`mpj.Status`).
+//!
+//! Every blocking read/write in the MPJ-IO spec returns a `Status` from
+//! which the element count of the completed transfer can be recovered
+//! (`MPI_Get_count` / `MPI_Get_elements`).
+
+use super::datatype::Datatype;
+
+/// Completion record of a point-to-point or file data-access operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Status {
+    /// Source rank for receives; the calling rank for file ops.
+    pub source: usize,
+    /// Message tag for receives; 0 for file ops.
+    pub tag: i32,
+    /// Bytes actually transferred.
+    pub bytes: usize,
+}
+
+impl Status {
+    /// A status recording a `bytes`-byte file transfer.
+    pub fn of_bytes(bytes: usize) -> Status {
+        Status { source: 0, tag: 0, bytes }
+    }
+
+    /// Number of *complete* datatype instances transferred
+    /// (`MPI_Get_count`); `None` if the byte count is not a whole number
+    /// of instances.
+    pub fn count(&self, datatype: &Datatype) -> Option<usize> {
+        let sz = datatype.size();
+        if sz == 0 {
+            return Some(0);
+        }
+        (self.bytes % sz == 0).then_some(self.bytes / sz)
+    }
+
+    /// Number of primitive elements transferred (`MPI_Get_elements`),
+    /// valid for homogeneous datatypes.
+    pub fn elements(&self, datatype: &Datatype) -> usize {
+        let esz = datatype.base_prim().size();
+        self.bytes / esz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Datatype;
+
+    #[test]
+    fn count_whole_instances() {
+        let s = Status::of_bytes(40);
+        assert_eq!(s.count(&Datatype::INT), Some(10));
+        let vec = Datatype::vector(2, 2, 3, &Datatype::INT).unwrap(); // size 16
+        assert_eq!(s.count(&vec), None); // 40 % 16 != 0
+        assert_eq!(Status::of_bytes(32).count(&vec), Some(2));
+    }
+
+    #[test]
+    fn elements_in_base_prims() {
+        let vec = Datatype::vector(2, 2, 3, &Datatype::INT).unwrap();
+        assert_eq!(Status::of_bytes(32).elements(&vec), 8);
+    }
+}

@@ -1,0 +1,188 @@
+//! Sub-communicators: `MPI_Comm_split` over any transport.
+//!
+//! `split(color, key, context)` groups ranks by `color`, orders each group
+//! by `(key, parent rank)`, and returns a [`SubComm`] that implements the
+//! full [`Comm`] trait by delegating to the parent with translated ranks.
+//! Disjoint groups can then drive independent collective file opens — the
+//! pattern real applications use to give each component model its own
+//! checkpoint file (the PIO design the paper surveys in §2.2.3 is built
+//! around exactly this).
+//!
+//! MPI separates communicator traffic with hidden *contexts*; jpio
+//! approximates that with a caller-supplied `context` id that salts the
+//! tag space (tags must stay below [`MAX_USER_TAG`]). Two communicators
+//! with different contexts never match each other's messages.
+
+use super::{Comm, Group};
+
+/// User tags must be below this bound so context salting cannot collide.
+pub const MAX_USER_TAG: i32 = 1 << 20;
+
+/// A communicator over a subset of a parent's ranks.
+pub struct SubComm<'a> {
+    parent: &'a dyn Comm,
+    /// Parent ranks of the members, in sub-rank order.
+    members: Vec<usize>,
+    /// This process's rank within the sub-communicator.
+    myrank: usize,
+    /// Tag salt derived from the split context.
+    salt: i32,
+}
+
+impl<'a> SubComm<'a> {
+    /// Collective split: every rank of `parent` must call with its own
+    /// `(color, key)`; ranks sharing a color form one sub-communicator,
+    /// ordered by `(key, parent rank)`. `context` must be identical on
+    /// all ranks and distinct from other live splits of the same parent
+    /// (≤255 distinct contexts keep the salted tag space inside `i32`).
+    pub fn split(parent: &'a dyn Comm, color: i32, key: i32, context: u8) -> SubComm<'a> {
+        let mut payload = color.to_le_bytes().to_vec();
+        payload.extend_from_slice(&key.to_le_bytes());
+        let all = parent.allgather(&payload);
+        let mut members: Vec<(i32, usize)> = Vec::new(); // (key, parent rank)
+        for (rank, bytes) in all.iter().enumerate() {
+            let c = i32::from_le_bytes(bytes[..4].try_into().unwrap());
+            let k = i32::from_le_bytes(bytes[4..8].try_into().unwrap());
+            if c == color {
+                members.push((k, rank));
+            }
+        }
+        members.sort_unstable();
+        let members: Vec<usize> = members.into_iter().map(|(_, r)| r).collect();
+        let myrank = members
+            .iter()
+            .position(|&r| r == parent.rank())
+            .expect("calling rank must be in its own color group");
+        SubComm {
+            parent,
+            members,
+            myrank,
+            salt: (context as i32 + 1) * MAX_USER_TAG,
+        }
+    }
+
+    /// Parent rank of sub-rank `r`.
+    pub fn parent_rank(&self, r: usize) -> usize {
+        self.members[r]
+    }
+
+    fn salted(&self, tag: i32) -> i32 {
+        if tag >= 0 {
+            debug_assert!(tag < MAX_USER_TAG, "user tag {tag} exceeds MAX_USER_TAG");
+            tag + self.salt
+        } else {
+            // Internal (negative) tags get their own salted band so the
+            // sub-communicator's collectives cannot match the parent's.
+            tag - self.salt
+        }
+    }
+}
+
+impl Comm for SubComm<'_> {
+    fn rank(&self) -> usize {
+        self.myrank
+    }
+
+    fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    fn send(&self, dest: usize, tag: i32, data: &[u8]) {
+        self.parent.send(self.members[dest], self.salted(tag), data);
+    }
+
+    fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
+        self.parent.recv(self.members[src], self.salted(tag))
+    }
+
+    fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
+        self.parent.try_recv(self.members[src], self.salted(tag))
+    }
+
+    fn group(&self) -> Group {
+        Group::new(self.members.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{threads, ReduceOp};
+
+    #[test]
+    fn split_by_parity_has_correct_shape() {
+        threads::run(6, |c| {
+            let color = (c.rank() % 2) as i32;
+            let sub = SubComm::split(c, color, 0, 1);
+            assert_eq!(sub.size(), 3);
+            assert_eq!(sub.rank(), c.rank() / 2);
+            assert_eq!(sub.parent_rank(sub.rank()), c.rank());
+            // Collectives stay inside the group.
+            let sum = sub.allreduce_i64(ReduceOp::Sum, c.rank() as i64);
+            let want = if color == 0 { 0 + 2 + 4 } else { 1 + 3 + 5 };
+            assert_eq!(sum, want);
+        });
+    }
+
+    #[test]
+    fn key_reorders_ranks() {
+        threads::run(4, |c| {
+            // Reverse order: highest parent rank becomes sub-rank 0.
+            let sub = SubComm::split(c, 0, -(c.rank() as i32), 2);
+            assert_eq!(sub.rank(), c.size() - 1 - c.rank());
+            let mut data = if sub.rank() == 0 { vec![9u8] } else { vec![] };
+            sub.bcast(0, &mut data);
+            assert_eq!(data, vec![9u8]); // root is parent rank 3
+        });
+    }
+
+    #[test]
+    fn contexts_isolate_traffic() {
+        threads::run(2, |c| {
+            let a = SubComm::split(c, 0, 0, 10);
+            let b = SubComm::split(c, 0, 0, 11);
+            if c.rank() == 0 {
+                a.send(1, 5, b"via-a");
+                b.send(1, 5, b"via-b");
+            } else {
+                // Receive in the *opposite* order: context salting means
+                // b's message cannot be stolen by a's receive.
+                assert_eq!(b.recv(0, 5), b"via-b");
+                assert_eq!(a.recv(0, 5), b"via-a");
+            }
+        });
+    }
+
+    #[test]
+    fn disjoint_groups_open_independent_files() {
+        use crate::io::{amode, File, Info};
+        use crate::comm::Datatype;
+        let base = format!("/tmp/jpio-subcomm-{}", std::process::id());
+        let b2 = base.clone();
+        threads::run(4, move |c| {
+            let color = (c.rank() / 2) as i32;
+            let sub = SubComm::split(c, color, 0, 3);
+            let path = format!("{b2}-{color}.dat");
+            let f = File::open(&sub, &path, amode::RDWR | amode::CREATE, Info::null())
+                .unwrap();
+            let mine = vec![(color * 10 + sub.rank() as i32); 16];
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            f.write_at_all((sub.rank() * 16) as i64, mine.as_slice(), 0, 16, &Datatype::INT)
+                .unwrap();
+            sub.barrier();
+            f.close().unwrap();
+        });
+        for color in 0..2 {
+            let raw = std::fs::read(format!("{base}-{color}.dat")).unwrap();
+            let ints: Vec<i32> = raw
+                .chunks_exact(4)
+                .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            assert_eq!(ints.len(), 32);
+            assert!(ints[..16].iter().all(|&v| v == color * 10));
+            assert!(ints[16..].iter().all(|&v| v == color * 10 + 1));
+            let _ = std::fs::remove_file(format!("{base}-{color}.dat"));
+            let _ = std::fs::remove_file(format!("{base}-{color}.dat.jpio-sfp"));
+        }
+    }
+}

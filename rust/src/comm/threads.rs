@@ -1,0 +1,272 @@
+//! Shared-memory communicator: ranks as threads of one process.
+//!
+//! This is the configuration of the paper's Figures 4-3 and 4-4 ("Java
+//! threads ... for parallel access to a shared file"). Message passing is
+//! mailbox-based (per-rank queue + condvar); the barrier is the native
+//! shared-memory barrier.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+use super::Comm;
+
+struct Msg {
+    src: usize,
+    tag: i32,
+    data: Vec<u8>,
+}
+
+struct Mailbox {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+struct Shared {
+    n: usize,
+    mailboxes: Vec<Mailbox>,
+    barrier: Barrier,
+}
+
+/// A thread-transport communicator handle; one per rank.
+pub struct ThreadComm {
+    rank: usize,
+    shared: Arc<Shared>,
+}
+
+impl ThreadComm {
+    /// Create the `n` communicator handles of a new thread "world".
+    /// Usually you want [`run`] instead.
+    pub fn world(n: usize) -> Vec<ThreadComm> {
+        assert!(n > 0, "communicator must have at least one rank");
+        let shared = Arc::new(Shared {
+            n,
+            mailboxes: (0..n)
+                .map(|_| Mailbox { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+                .collect(),
+            barrier: Barrier::new(n),
+        });
+        (0..n)
+            .map(|rank| ThreadComm { rank, shared: shared.clone() })
+            .collect()
+    }
+}
+
+impl Comm for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.shared.n
+    }
+
+    fn send(&self, dest: usize, tag: i32, data: &[u8]) {
+        assert!(dest < self.shared.n, "send to rank {dest} of {}", self.shared.n);
+        let mb = &self.shared.mailboxes[dest];
+        let mut q = mb.q.lock().unwrap();
+        q.push_back(Msg { src: self.rank, tag, data: data.to_vec() });
+        mb.cv.notify_all();
+    }
+
+    fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
+        let mb = &self.shared.mailboxes[self.rank];
+        let mut q = mb.q.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|m| m.src == src && m.tag == tag) {
+                return q.remove(pos).unwrap().data;
+            }
+            q = mb.cv.wait(q).unwrap();
+        }
+    }
+
+    fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
+        let mb = &self.shared.mailboxes[self.rank];
+        let mut q = mb.q.lock().unwrap();
+        let pos = q.iter().position(|m| m.src == src && m.tag == tag)?;
+        Some(q.remove(pos).unwrap().data)
+    }
+
+    fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+}
+
+/// Run `f` on `n` ranks as threads of this process and return the per-rank
+/// results in rank order. Panics in any rank propagate.
+pub fn run<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&ThreadComm) -> R + Send + Sync,
+{
+    let world = ThreadComm::world(n);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|comm| {
+                scope.spawn(move || {
+                    let name = format!("jpio-rank-{}", comm.rank());
+                    let _ = name; // thread naming via Builder is not worth the plumbing here
+                    f(&comm)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ReduceOp;
+
+    #[test]
+    fn world_has_distinct_ranks() {
+        let ranks = run(4, |c| c.rank());
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+        assert!(run(3, |c| c.size() == 3).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn send_recv_in_order() {
+        run(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 7, b"first");
+                c.send(1, 7, b"second");
+            } else {
+                assert_eq!(c.recv(0, 7), b"first");
+                assert_eq!(c.recv(0, 7), b"second");
+            }
+        });
+    }
+
+    #[test]
+    fn recv_matches_tag_out_of_order() {
+        run(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, b"tag1");
+                c.send(1, 2, b"tag2");
+            } else {
+                // Receive tag 2 first even though tag 1 was sent first.
+                assert_eq!(c.recv(0, 2), b"tag2");
+                assert_eq!(c.recv(0, 1), b"tag1");
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        run(8, |c| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            // After the barrier every rank must observe all increments.
+            assert_eq!(counter.load(Ordering::SeqCst), 8);
+        });
+    }
+
+    #[test]
+    fn bcast_from_each_root() {
+        for root in 0..5 {
+            run(5, |c| {
+                let mut data = if c.rank() == root {
+                    vec![42u8; 10]
+                } else {
+                    Vec::new()
+                };
+                c.bcast(root, &mut data);
+                assert_eq!(data, vec![42u8; 10]);
+            });
+        }
+    }
+
+    #[test]
+    fn gather_collects_in_rank_order() {
+        run(4, |c| {
+            let mine = vec![c.rank() as u8; c.rank() + 1];
+            match c.gather(2, &mine) {
+                Some(parts) => {
+                    assert_eq!(c.rank(), 2);
+                    for (r, p) in parts.iter().enumerate() {
+                        assert_eq!(*p, vec![r as u8; r + 1]);
+                    }
+                }
+                None => assert_ne!(c.rank(), 2),
+            }
+        });
+    }
+
+    #[test]
+    fn allgather_everyone_sees_everything() {
+        run(6, |c| {
+            let parts = c.allgather(&[c.rank() as u8]);
+            let want: Vec<Vec<u8>> = (0..6).map(|r| vec![r as u8]).collect();
+            assert_eq!(parts, want);
+        });
+    }
+
+    #[test]
+    fn scatter_distributes() {
+        run(3, |c| {
+            let payload = if c.rank() == 0 {
+                Some(vec![vec![0u8], vec![1u8, 1], vec![2u8, 2, 2]])
+            } else {
+                None
+            };
+            let got = c.scatter(0, payload.as_deref());
+            assert_eq!(got, vec![c.rank() as u8; c.rank() + 1]);
+        });
+    }
+
+    #[test]
+    fn alltoall_permutes() {
+        run(4, |c| {
+            let parts: Vec<Vec<u8>> =
+                (0..4).map(|d| vec![(c.rank() * 10 + d) as u8]).collect();
+            let got = c.alltoall(&parts);
+            for (src, p) in got.iter().enumerate() {
+                assert_eq!(*p, vec![(src * 10 + c.rank()) as u8]);
+            }
+        });
+    }
+
+    #[test]
+    fn reductions_and_scan() {
+        run(5, |c| {
+            let r = c.rank() as i64;
+            assert_eq!(c.allreduce_i64(ReduceOp::Sum, r), 0 + 1 + 2 + 3 + 4);
+            assert_eq!(c.allreduce_i64(ReduceOp::Max, r), 4);
+            assert_eq!(c.allreduce_i64(ReduceOp::Min, r), 0);
+            assert_eq!(c.scan_i64(ReduceOp::Sum, r), (0..=r).sum::<i64>());
+            assert_eq!(c.exscan_sum_i64(r), (0..r).sum::<i64>());
+            let f = c.allreduce_f64(ReduceOp::Sum, 0.5);
+            assert!((f - 2.5).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn single_rank_collectives_are_trivial() {
+        run(1, |c| {
+            c.barrier();
+            let mut d = vec![1u8];
+            c.bcast(0, &mut d);
+            assert_eq!(c.allgather(&d), vec![vec![1u8]]);
+            assert_eq!(c.allreduce_i64(ReduceOp::Sum, 9), 9);
+        });
+    }
+
+    #[test]
+    fn large_message_roundtrip() {
+        run(2, |c| {
+            let big = vec![0xABu8; 8 << 20];
+            if c.rank() == 0 {
+                c.send(1, 3, &big);
+            } else {
+                let got = c.recv(0, 3);
+                assert_eq!(got.len(), 8 << 20);
+                assert!(got.iter().all(|&b| b == 0xAB));
+            }
+        });
+    }
+}

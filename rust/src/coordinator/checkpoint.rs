@@ -1,0 +1,178 @@
+//! Collective checkpointing through MPJ-IO subarray file views.
+//!
+//! Each rank owns one block of the global field ([`HaloGrid`]); the
+//! checkpoint file stores the field in row-major global order. The file
+//! view is the subarray filetype of the rank's block (§7.2.9.2 — the
+//! appendix's "Subarray Filetype Constructor" example, used for real),
+//! so a single collective write/read moves the whole distributed field.
+
+use crate::comm::datatype::{ArrayOrder, Datatype};
+use crate::comm::Status;
+use crate::io::errors::{err_arg, Result};
+use crate::io::{File, Info};
+
+use super::grid::HaloGrid;
+
+/// Checkpoint writer/reader for one decomposition.
+#[derive(Clone, Debug)]
+pub struct Checkpointer {
+    grid: HaloGrid,
+}
+
+impl Checkpointer {
+    /// Build for a rank's grid placement.
+    pub fn new(grid: HaloGrid) -> Checkpointer {
+        Checkpointer { grid }
+    }
+
+    /// The subarray filetype of this rank's block within the global field.
+    pub fn filetype(&self) -> Result<Datatype> {
+        let (gh, gw) = self.grid.global_shape();
+        let (bh, bw) = self.grid.block;
+        let (cy, cx) = self.grid.coords;
+        Datatype::subarray(
+            &[gh, gw],
+            &[bh, bw],
+            &[cy * bh, cx * bw],
+            ArrayOrder::C,
+            &Datatype::FLOAT,
+        )
+        .map_err(|e| err_arg(format!("checkpoint filetype: {e}")))
+    }
+
+    /// Bytes of one full checkpoint frame (the global field).
+    pub fn frame_bytes(&self) -> usize {
+        let (gh, gw) = self.grid.global_shape();
+        gh * gw * 4
+    }
+
+    /// Install the checkpoint view on `file`, with the frame displacement
+    /// for checkpoint number `frame`.
+    pub fn set_view(&self, file: &File<'_>, frame: usize) -> Result<()> {
+        let ft = self.filetype()?;
+        file.set_view(
+            (frame * self.frame_bytes()) as i64,
+            &Datatype::FLOAT,
+            &ft,
+            "native",
+            &Info::null(),
+        )
+    }
+
+    /// Collectively write this rank's interior block as checkpoint frame
+    /// `frame`. `interior` is row-major `block.0 × block.1`.
+    pub fn write(&self, file: &File<'_>, frame: usize, interior: &[f32]) -> Result<Status> {
+        let (bh, bw) = self.grid.block;
+        if interior.len() != bh * bw {
+            return Err(err_arg(format!(
+                "checkpoint payload {} != block {}x{}",
+                interior.len(),
+                bh,
+                bw
+            )));
+        }
+        self.set_view(file, frame)?;
+        file.write_at_all(0, interior, 0, interior.len(), &Datatype::FLOAT)
+    }
+
+    /// Collectively read checkpoint frame `frame` back into this rank's
+    /// block layout.
+    pub fn read(&self, file: &File<'_>, frame: usize) -> Result<Vec<f32>> {
+        let (bh, bw) = self.grid.block;
+        let n = bh * bw;
+        let mut out = vec![0f32; n];
+        self.set_view(file, frame)?;
+        let st = file.read_at_all(0, out.as_mut_slice(), 0, n, &Datatype::FLOAT)?;
+        if st.bytes != out.len() * 4 {
+            return Err(crate::io::errors::err_io(format!(
+                "short checkpoint read: {} of {} bytes",
+                st.bytes,
+                out.len() * 4
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::comm::Comm;
+    use crate::io::{amode, File, Info};
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-ckpt-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn distributed_checkpoint_roundtrip() {
+        let path = tmp("rt");
+        threads::run(4, |c| {
+            let grid = HaloGrid::new(c.rank(), c.size(), (8, 8));
+            let ck = Checkpointer::new(grid);
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            // Each cell stores its global (row*1000 + col) id.
+            let (cy, cx) = ck.grid.coords;
+            let mine: Vec<f32> = (0..64)
+                .map(|i| {
+                    let gr = cy * 8 + i / 8;
+                    let gc = cx * 8 + i % 8;
+                    (gr * 1000 + gc) as f32
+                })
+                .collect();
+            ck.write(&f, 0, &mine).unwrap();
+            c.barrier();
+            let back = ck.read(&f, 0).unwrap();
+            assert_eq!(back, mine);
+            f.close().unwrap();
+        });
+        // The raw file must be the global row-major field.
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(raw.len(), 16 * 16 * 4);
+        let vals: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        for r in 0..16 {
+            for cc in 0..16 {
+                assert_eq!(vals[r * 16 + cc], (r * 1000 + cc) as f32, "cell ({r},{cc})");
+            }
+        }
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn multiple_frames_use_displacements() {
+        let path = tmp("frames");
+        threads::run(2, |c| {
+            let grid = HaloGrid::new(c.rank(), c.size(), (4, 4));
+            let ck = Checkpointer::new(grid);
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            for frame in 0..3 {
+                let mine = vec![(frame * 10 + c.rank()) as f32; 16];
+                ck.write(&f, frame, &mine).unwrap();
+            }
+            c.barrier();
+            for frame in 0..3 {
+                let back = ck.read(&f, frame).unwrap();
+                assert!(back.iter().all(|&v| v == (frame * 10 + c.rank()) as f32));
+            }
+            f.close().unwrap();
+        });
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(len, 3 * 4 * 8 * 4); // 3 frames of 4x8 f32
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn wrong_payload_size_is_arg_error() {
+        let path = tmp("badsize");
+        threads::run(1, |c| {
+            let ck = Checkpointer::new(HaloGrid::new(0, 1, (4, 4)));
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let err = ck.write(&f, 0, &[0.0; 3]).unwrap_err();
+            assert_eq!(err.class, crate::io::errors::ErrorClass::Arg);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+}

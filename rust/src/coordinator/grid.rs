@@ -1,0 +1,180 @@
+//! 2-D domain decomposition with halo exchange.
+//!
+//! A global `GH × GW` field is block-distributed over a `py × px` process
+//! grid (the same block layout as [`crate::comm::datatype::Datatype::darray_block`],
+//! so the checkpoint file view and the compute decomposition agree by
+//! construction). Each rank holds its block plus a 1-cell halo; `exchange`
+//! fills the halo from the four neighbours over the communicator.
+
+use crate::comm::Comm;
+
+/// Internal tags for the four halo directions.
+const T_HALO: i32 = crate::comm::INTERNAL_TAG_BASE + 100;
+
+/// A rank's place in the decomposition.
+#[derive(Debug, Clone)]
+pub struct HaloGrid {
+    /// Process-grid shape (rows, cols).
+    pub pgrid: (usize, usize),
+    /// This rank's coordinates.
+    pub coords: (usize, usize),
+    /// Block shape (rows, cols), halo excluded.
+    pub block: (usize, usize),
+}
+
+impl HaloGrid {
+    /// Choose a near-square process grid for `n` ranks and build the
+    /// layout for `rank`. `block` is the per-rank interior shape.
+    pub fn new(rank: usize, n: usize, block: (usize, usize)) -> HaloGrid {
+        let pgrid = Self::choose_pgrid(n);
+        let coords = (rank / pgrid.1, rank % pgrid.1);
+        HaloGrid { pgrid, coords, block }
+    }
+
+    /// Near-square factorization of `n` (rows ≤ cols).
+    pub fn choose_pgrid(n: usize) -> (usize, usize) {
+        let mut best = (1, n);
+        let mut d = 1;
+        while d * d <= n {
+            if n % d == 0 {
+                best = (d, n / d);
+            }
+            d += 1;
+        }
+        best
+    }
+
+    /// Global field shape.
+    pub fn global_shape(&self) -> (usize, usize) {
+        (self.block.0 * self.pgrid.0, self.block.1 * self.pgrid.1)
+    }
+
+    /// Rank of the neighbour at relative grid offset, if it exists.
+    pub fn neighbor(&self, dy: i64, dx: i64) -> Option<usize> {
+        let ny = self.coords.0 as i64 + dy;
+        let nx = self.coords.1 as i64 + dx;
+        if ny < 0 || nx < 0 || ny >= self.pgrid.0 as i64 || nx >= self.pgrid.1 as i64 {
+            return None;
+        }
+        Some(ny as usize * self.pgrid.1 + nx as usize)
+    }
+
+    /// Exchange the 1-cell halo of `state` (a halo-extended row-major
+    /// `(block.0+2) × (block.1+2)` f32 buffer) with the four neighbours.
+    /// Boundary edges (no neighbour) are left untouched (the examples use
+    /// them as fixed boundary conditions).
+    pub fn exchange(&self, comm: &dyn Comm, state: &mut [f32]) {
+        let (h, w) = self.block;
+        let (hh, ww) = (h + 2, w + 2);
+        assert_eq!(state.len(), hh * ww, "state must be halo-extended");
+        let row = |state: &[f32], r: usize| -> Vec<u8> {
+            let s = &state[r * ww + 1..r * ww + 1 + w];
+            s.iter().flat_map(|v| v.to_le_bytes()).collect()
+        };
+        let col = |state: &[f32], c: usize| -> Vec<u8> {
+            (1..=h).flat_map(|r| state[r * ww + c].to_le_bytes()).collect()
+        };
+        let put_row = |state: &mut [f32], r: usize, bytes: &[u8]| {
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                state[r * ww + 1 + i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        };
+        let put_col = |state: &mut [f32], c: usize, bytes: &[u8]| {
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                state[(1 + i) * ww + c] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        };
+        // Four directions; tag per direction. Send first (mailbox /
+        // progress-engine transports buffer), then receive.
+        let dirs: [(i64, i64, i32); 4] = [
+            (-1, 0, T_HALO),     // up
+            (1, 0, T_HALO + 1),  // down
+            (0, -1, T_HALO + 2), // left
+            (0, 1, T_HALO + 3),  // right
+        ];
+        for &(dy, dx, tag) in &dirs {
+            if let Some(peer) = self.neighbor(dy, dx) {
+                let payload = match (dy, dx) {
+                    (-1, 0) => row(state, 1),     // my top interior row
+                    (1, 0) => row(state, h),      // my bottom interior row
+                    (0, -1) => col(state, 1),     // my left interior col
+                    (0, 1) => col(state, w),      // my right interior col
+                    _ => unreachable!(),
+                };
+                comm.send(peer, tag, &payload);
+            }
+        }
+        for &(dy, dx, tag) in &dirs {
+            // My halo on side (dy,dx) is filled by the peer's *opposite*
+            // direction send, which used the opposite tag.
+            if let Some(peer) = self.neighbor(dy, dx) {
+                let opposite = match (dy, dx) {
+                    (-1, 0) => T_HALO + 1, // peer sent "down"
+                    (1, 0) => T_HALO,      // peer sent "up"
+                    (0, -1) => T_HALO + 3, // peer sent "right"
+                    (0, 1) => T_HALO + 2,  // peer sent "left"
+                    _ => unreachable!(),
+                };
+                let _ = tag;
+                let bytes = comm.recv(peer, opposite);
+                match (dy, dx) {
+                    (-1, 0) => put_row(state, 0, &bytes),
+                    (1, 0) => put_row(state, h + 1, &bytes),
+                    (0, -1) => put_col(state, 0, &bytes),
+                    (0, 1) => put_col(state, w + 1, &bytes),
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+
+    #[test]
+    fn pgrid_is_near_square_factorization() {
+        assert_eq!(HaloGrid::choose_pgrid(1), (1, 1));
+        assert_eq!(HaloGrid::choose_pgrid(4), (2, 2));
+        assert_eq!(HaloGrid::choose_pgrid(6), (2, 3));
+        assert_eq!(HaloGrid::choose_pgrid(7), (1, 7));
+        assert_eq!(HaloGrid::choose_pgrid(24), (4, 6));
+    }
+
+    #[test]
+    fn neighbors_respect_boundaries() {
+        let g = HaloGrid::new(0, 4, (4, 4)); // 2x2 grid, corner rank
+        assert_eq!(g.neighbor(-1, 0), None);
+        assert_eq!(g.neighbor(0, -1), None);
+        assert_eq!(g.neighbor(1, 0), Some(2));
+        assert_eq!(g.neighbor(0, 1), Some(1));
+    }
+
+    #[test]
+    fn halo_exchange_moves_edge_rows() {
+        // 2x2 grid of 4x4 blocks; every cell holds its owner's rank.
+        threads::run(4, |c| {
+            let g = HaloGrid::new(c.rank(), 4, (4, 4));
+            let mut state = vec![c.rank() as f32; 6 * 6];
+            g.exchange(c, &mut state);
+            // Check halos against the neighbour ranks.
+            let at = |r: usize, cc: usize| state[r * 6 + cc];
+            if let Some(p) = g.neighbor(-1, 0) {
+                assert_eq!(at(0, 2), p as f32, "rank {} up halo", c.rank());
+            }
+            if let Some(p) = g.neighbor(1, 0) {
+                assert_eq!(at(5, 2), p as f32);
+            }
+            if let Some(p) = g.neighbor(0, -1) {
+                assert_eq!(at(2, 0), p as f32);
+            }
+            if let Some(p) = g.neighbor(0, 1) {
+                assert_eq!(at(2, 5), p as f32);
+            }
+            // Interior untouched.
+            assert_eq!(at(2, 2), c.rank() as f32);
+        });
+    }
+}

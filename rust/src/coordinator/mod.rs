@@ -1,0 +1,25 @@
+//! Data-pipeline orchestrator — the L3 coordination layer the examples
+//! drive.
+//!
+//! The paper's "performance hungry applications" are data-parallel
+//! producers (climate/turbulence codes) whose state must flow to and from
+//! a shared file. This module supplies the pieces a downstream user needs
+//! to build such an application on jpio:
+//!
+//! * [`grid`] — N-rank domain decomposition over a 2-D process grid with
+//!   halo exchange (pure `comm`, no storage);
+//! * [`checkpoint`] — collective checkpoint write/restore through MPJ-IO
+//!   subarray file views, with PJRT checksum validation;
+//! * [`pipeline`] — a bounded-queue stage graph with backpressure for
+//!   streaming ingest workloads (the seismic example);
+//! * [`metrics`] — counters/timers every layer reports into.
+
+pub mod checkpoint;
+pub mod grid;
+pub mod metrics;
+pub mod pipeline;
+
+pub use checkpoint::Checkpointer;
+pub use grid::HaloGrid;
+pub use metrics::Metrics;
+pub use pipeline::Pipeline;

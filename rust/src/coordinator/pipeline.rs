@@ -1,0 +1,242 @@
+//! Bounded-queue stage pipeline with backpressure.
+//!
+//! The streaming-orchestrator piece of the data-pipeline domain: a linear
+//! graph of stages connected by bounded channels. A slow stage (e.g. the
+//! MPJ-IO write stage of the seismic example) backpressures producers
+//! instead of letting queues grow without bound.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One stage definition.
+struct StageDef<T> {
+    name: String,
+    workers: usize,
+    f: Arc<dyn Fn(T) -> Option<T> + Send + Sync>,
+}
+
+/// Per-stage runtime stats.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageStats {
+    /// Stage name.
+    pub name: String,
+    /// Items that entered the stage.
+    pub processed: u64,
+    /// Items the stage dropped (`f` returned `None`).
+    pub dropped: u64,
+}
+
+/// Pipeline run outcome.
+#[derive(Debug)]
+pub struct PipelineStats {
+    /// Per-stage stats, in stage order.
+    pub stages: Vec<StageStats>,
+    /// Items that reached the sink.
+    pub delivered: u64,
+    /// Wall-clock of the run.
+    pub elapsed: std::time::Duration,
+}
+
+/// A linear stage pipeline over items of type `T`.
+pub struct Pipeline<T> {
+    capacity: usize,
+    stages: Vec<StageDef<T>>,
+}
+
+impl<T: Send + 'static> Pipeline<T> {
+    /// New pipeline; `capacity` bounds every inter-stage queue (the
+    /// backpressure depth).
+    pub fn new(capacity: usize) -> Pipeline<T> {
+        assert!(capacity > 0);
+        Pipeline { capacity, stages: Vec::new() }
+    }
+
+    /// Append a stage of `workers` parallel workers applying `f`.
+    /// Returning `None` drops the item (filtering).
+    pub fn stage(
+        mut self,
+        name: impl Into<String>,
+        workers: usize,
+        f: impl Fn(T) -> Option<T> + Send + Sync + 'static,
+    ) -> Self {
+        assert!(workers > 0);
+        self.stages.push(StageDef { name: name.into(), workers, f: Arc::new(f) });
+        self
+    }
+
+    /// Drive `source` through all stages into `sink`; blocks until
+    /// everything drains.
+    pub fn run(
+        self,
+        source: impl Iterator<Item = T>,
+        mut sink: impl FnMut(T),
+    ) -> PipelineStats {
+        let start = Instant::now();
+        let n = self.stages.len();
+        // Channels: source -> s0 -> s1 -> ... -> sink.
+        let mut senders: Vec<SyncSender<T>> = Vec::with_capacity(n + 1);
+        let mut receivers: Vec<Arc<Mutex<Receiver<T>>>> = Vec::with_capacity(n + 1);
+        for _ in 0..=n {
+            let (tx, rx) = sync_channel::<T>(self.capacity);
+            senders.push(tx);
+            receivers.push(Arc::new(Mutex::new(rx)));
+        }
+        let processed: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let dropped: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let delivered = AtomicU64::new(0);
+
+        std::thread::scope(|scope| {
+            // Stage workers.
+            for (i, stage) in self.stages.iter().enumerate() {
+                for _ in 0..stage.workers {
+                    let rx = receivers[i].clone();
+                    let tx = senders[i + 1].clone();
+                    let f = stage.f.clone();
+                    let processed = &processed[i];
+                    let dropped = &dropped[i];
+                    scope.spawn(move || loop {
+                        let item = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match item {
+                            Ok(item) => {
+                                processed.fetch_add(1, Ordering::Relaxed);
+                                match f(item) {
+                                    Some(out) => {
+                                        if tx.send(out).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    None => {
+                                        dropped.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            Err(_) => break, // upstream closed and drained
+                        }
+                    });
+                }
+            }
+            // Drop our copies of intermediate senders so stage exit
+            // cascades once upstream closes.
+            let first_tx = senders.remove(0);
+            let sink_rx = receivers.last().unwrap().clone();
+            drop(senders);
+
+            // Sink drains on its own thread so the source can block on
+            // backpressure without deadlocking the drain.
+            let delivered = &delivered;
+            let sink_handle = scope.spawn(move || {
+                let mut out: Vec<T> = Vec::new();
+                loop {
+                    let item = {
+                        let guard = sink_rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match item {
+                        Ok(v) => {
+                            delivered.fetch_add(1, Ordering::Relaxed);
+                            out.push(v);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                out
+            });
+
+            // Feed the source (blocking on backpressure).
+            for item in source {
+                if first_tx.send(item).is_err() {
+                    break;
+                }
+            }
+            drop(first_tx);
+            for item in sink_handle.join().expect("sink thread") {
+                sink(item);
+            }
+        });
+
+        PipelineStats {
+            stages: self
+                .stages
+                .iter()
+                .enumerate()
+                .map(|(i, s)| StageStats {
+                    name: s.name.clone(),
+                    processed: processed[i].load(Ordering::Relaxed),
+                    dropped: dropped[i].load(Ordering::Relaxed),
+                })
+                .collect(),
+            delivered: delivered.load(Ordering::Relaxed),
+            elapsed: start.elapsed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_flow_through_all_stages() {
+        let p = Pipeline::new(4)
+            .stage("double", 2, |x: i64| Some(x * 2))
+            .stage("inc", 1, |x| Some(x + 1));
+        let mut out = Vec::new();
+        let stats = p.run(0..100, |v| out.push(v));
+        out.sort_unstable();
+        let want: Vec<i64> = (0..100).map(|x| x * 2 + 1).collect();
+        assert_eq!(out, want);
+        assert_eq!(stats.delivered, 100);
+        assert_eq!(stats.stages[0].processed, 100);
+        assert_eq!(stats.stages[1].processed, 100);
+    }
+
+    #[test]
+    fn filtering_stage_drops() {
+        let p = Pipeline::new(2).stage("evens", 3, |x: i64| (x % 2 == 0).then_some(x));
+        let mut count = 0u64;
+        let stats = p.run(0..50, |_| count += 1);
+        assert_eq!(count, 25);
+        assert_eq!(stats.stages[0].dropped, 25);
+        assert_eq!(stats.delivered, 25);
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        use std::sync::atomic::{AtomicI64, Ordering};
+        // Slow consumer stage; watermark tracks source-minus-consumed —
+        // bounded queues keep it ≤ capacity*2 + workers.
+        static IN_FLIGHT: AtomicI64 = AtomicI64::new(0);
+        static MAX_SEEN: AtomicI64 = AtomicI64::new(0);
+        let p = Pipeline::new(2).stage("slow", 1, |x: i64| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            let v = IN_FLIGHT.fetch_sub(1, Ordering::SeqCst);
+            let _ = v;
+            Some(x)
+        });
+        let source = (0..200).map(|x| {
+            let v = IN_FLIGHT.fetch_add(1, Ordering::SeqCst) + 1;
+            MAX_SEEN.fetch_max(v, Ordering::SeqCst);
+            x
+        });
+        let stats = p.run(source, |_| {});
+        assert_eq!(stats.delivered, 200);
+        // capacity 2 on both queues + 1 worker + sink slack.
+        assert!(
+            MAX_SEEN.load(Ordering::SeqCst) <= 8,
+            "backpressure failed: {} items in flight",
+            MAX_SEEN.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn empty_source_terminates() {
+        let p = Pipeline::new(1).stage("s", 1, Some::<u8>);
+        let stats = p.run(std::iter::empty(), |_| {});
+        assert_eq!(stats.delivered, 0);
+    }
+}

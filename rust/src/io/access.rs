@@ -1,0 +1,653 @@
+//! Data access with explicit offsets and individual file pointers
+//! (§7.2.4.2 / §7.2.4.3), blocking and nonblocking.
+//!
+//! All routines funnel through one transfer core:
+//!
+//! 1. flatten the *memory* side `(buf, bufOffset, count, datatype)` into a
+//!    packed payload (zero-copy when the memory type is contiguous and no
+//!    representation conversion applies);
+//! 2. flatten the *file* side through the current view into absolute byte
+//!    runs ([`FileView::runs`]);
+//! 3. hand both to the selected access strategy;
+//! 4. apply datarep conversion on the packed payload;
+//! 5. take the whole-file lock when atomic mode is on (§7.2.6.1).
+
+use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
+use crate::comm::Status;
+use crate::io::engine::{self, Request};
+use crate::io::errors::{err_arg, err_unsupported_op, Result};
+use crate::io::file::{amode, seek, File};
+use crate::io::view::FileView;
+use crate::storage::StorageFile;
+use crate::strategy::AccessStrategy;
+use std::sync::Arc;
+
+/// Everything a transfer needs, snapshotted from the file handle so the
+/// nonblocking engine can run it without borrowing the `File`.
+pub(crate) struct TransferCtx {
+    pub storage: Arc<dyn StorageFile>,
+    pub strategy: Arc<dyn AccessStrategy>,
+    pub view: Arc<FileView>,
+    pub atomic: bool,
+}
+
+impl File<'_> {
+    pub(crate) fn transfer_ctx(&self) -> TransferCtx {
+        TransferCtx {
+            storage: self.storage.clone(),
+            strategy: self.strategy_snapshot(),
+            view: self.view_snapshot(),
+            atomic: self.get_atomicity(),
+        }
+    }
+}
+
+/// Validate the memory-side arguments and return the packed payload for a
+/// write (borrowed when possible).
+pub(crate) fn pack_payload<'b>(
+    buf: &'b (impl IoBuf + ?Sized),
+    buf_offset: usize,
+    count: usize,
+    datatype: &Datatype,
+    view: &FileView,
+) -> Result<std::borrow::Cow<'b, [u8]>> {
+    let bytes = buf.as_bytes();
+    let psz = buf.prim().size();
+    let base = buf_offset * psz;
+    let payload_len = count * datatype.size();
+    check_mem_args(buf, buf_offset, count, datatype)?;
+    if datatype.is_contiguous() && view.datarep.is_identity() {
+        return Ok(std::borrow::Cow::Borrowed(&bytes[base..base + payload_len]));
+    }
+    // Gather the memory runs into a packed buffer.
+    let mut payload = Vec::with_capacity(payload_len);
+    for run in datatype.byte_runs(count) {
+        let s = base + run.offset as usize;
+        payload.extend_from_slice(&bytes[s..s + run.len()]);
+    }
+    // Representation conversion (memory → file).
+    if !view.datarep.is_identity() {
+        let elems = view.payload_elems(payload.len());
+        view.datarep.encode(&mut payload, &elems);
+    }
+    Ok(std::borrow::Cow::Owned(payload))
+}
+
+/// Scatter a packed payload (already datarep-decoded) into the memory runs
+/// of `(buf, buf_offset, count, datatype)`. `got` bytes are valid.
+pub(crate) fn unpack_payload(
+    buf: &mut (impl IoBufMut + ?Sized),
+    buf_offset: usize,
+    count: usize,
+    datatype: &Datatype,
+    payload: &[u8],
+    got: usize,
+) -> Result<()> {
+    check_mem_args(buf, buf_offset, count, datatype)?;
+    let psz = buf.prim().size();
+    let base = buf_offset * psz;
+    let bytes = buf.as_bytes_mut();
+    if datatype.is_contiguous() {
+        let n = (count * datatype.size()).min(got);
+        bytes[base..base + n].copy_from_slice(&payload[..n]);
+        return Ok(());
+    }
+    let mut pos = 0;
+    for run in datatype.byte_runs(count) {
+        if pos >= got {
+            break;
+        }
+        let n = run.len().min(got - pos);
+        let d = base + run.offset as usize;
+        bytes[d..d + n].copy_from_slice(&payload[pos..pos + n]);
+        pos += n;
+    }
+    Ok(())
+}
+
+fn check_mem_args(
+    buf: &(impl IoBuf + ?Sized),
+    buf_offset: usize,
+    count: usize,
+    datatype: &Datatype,
+) -> Result<()> {
+    let psz = buf.prim().size();
+    if datatype.size() % psz != 0 || datatype.base_prim().size() != psz {
+        return Err(err_arg(format!(
+            "datatype {datatype} does not match buffer element size {psz}"
+        )));
+    }
+    let need_bytes = if count == 0 {
+        0
+    } else {
+        (count as i64 - 1) * datatype.extent() + datatype.true_lb() + datatype.true_extent()
+    };
+    let have = buf.elems().saturating_sub(buf_offset) * psz;
+    if need_bytes > have as i64 {
+        return Err(err_arg(format!(
+            "buffer too small: need {need_bytes} bytes at element offset {buf_offset}, have {have}"
+        )));
+    }
+    Ok(())
+}
+
+/// Blocking write of a packed payload at an etype offset.
+pub(crate) fn write_payload(ctx: &TransferCtx, etype_off: i64, payload: &[u8]) -> Result<Status> {
+    let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+    // Allocation-free path for gap-free views (the common case).
+    if let Some(run) = ctx.view.contiguous_run(etype_off, payload.len()) {
+        let n = ctx.strategy.write(ctx.storage.as_ref(), &[run], payload)?;
+        return Ok(Status::of_bytes(n));
+    }
+    let runs = ctx.view.runs(etype_off, payload.len())?;
+    let n = ctx.strategy.write(ctx.storage.as_ref(), &runs, payload)?;
+    Ok(Status::of_bytes(n))
+}
+
+/// Blocking read into a packed payload buffer at an etype offset; returns
+/// bytes read (short at EOF) after datarep decode.
+pub(crate) fn read_payload(
+    ctx: &TransferCtx,
+    etype_off: i64,
+    payload: &mut [u8],
+) -> Result<usize> {
+    let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+    let got = if let Some(run) = ctx.view.contiguous_run(etype_off, payload.len()) {
+        ctx.strategy.read(ctx.storage.as_ref(), &[run], payload)?
+    } else {
+        let runs = ctx.view.runs(etype_off, payload.len())?;
+        ctx.strategy.read(ctx.storage.as_ref(), &runs, payload)?
+    };
+    if !ctx.view.datarep.is_identity() {
+        let elems = ctx.view.payload_elems(got);
+        ctx.view.datarep.decode(&mut payload[..got], &elems);
+    }
+    Ok(got)
+}
+
+impl File<'_> {
+    // ------------------------------------------------------------------
+    // §7.2.4.2 Explicit offsets — blocking, noncollective
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_READ_AT`: blocking noncollective read at an explicit
+    /// etype offset.
+    pub fn read_at(
+        &self,
+        offset: Offset,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_readable()?;
+        let ctx = self.transfer_ctx();
+        check_mem_args(buf, buf_offset, count, datatype)?;
+        let payload_len = count * datatype.size();
+        // Fast path: contiguous memory type + identity representation →
+        // the storage strategy fills the user buffer directly.
+        if datatype.is_contiguous() && ctx.view.datarep.is_identity() {
+            let base = buf_offset * buf.prim().size();
+            let got =
+                read_payload(&ctx, offset, &mut buf.as_bytes_mut()[base..base + payload_len])?;
+            return Ok(Status::of_bytes(got));
+        }
+        let mut payload = vec![0u8; payload_len];
+        let got = read_payload(&ctx, offset, &mut payload)?;
+        unpack_payload(buf, buf_offset, count, datatype, &payload, got)?;
+        Ok(Status::of_bytes(got))
+    }
+
+    /// `MPI_FILE_WRITE_AT`: blocking noncollective write at an explicit
+    /// etype offset.
+    pub fn write_at(
+        &self,
+        offset: Offset,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_writable()?;
+        if self.amode & amode::APPEND != 0 {
+            return Err(err_unsupported_op("explicit-offset write in MODE_APPEND"));
+        }
+        let ctx = self.transfer_ctx();
+        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?;
+        write_payload(&ctx, offset, &payload)
+    }
+
+    // ------------------------------------------------------------------
+    // §7.2.4.2 Explicit offsets — nonblocking
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_IREAD_AT`: nonblocking read at an explicit offset. Takes
+    /// ownership of the buffer; [`Request::wait`] returns it filled.
+    pub fn iread_at<T>(
+        &self,
+        offset: Offset,
+        buf: Vec<T>,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        self.check_open()?;
+        self.check_readable()?;
+        let ctx = self.transfer_ctx();
+        check_mem_args(buf.as_slice(), buf_offset, count, datatype)?;
+        let dt = datatype.clone();
+        Ok(engine::submit(move || {
+            let mut buf = buf;
+            let mut payload = vec![0u8; count * dt.size()];
+            let res = read_payload(&ctx, offset, &mut payload).and_then(|got| {
+                unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)?;
+                Ok(Status::of_bytes(got))
+            });
+            (res, buf)
+        }))
+    }
+
+    /// `MPI_FILE_IWRITE_AT`: nonblocking write at an explicit offset.
+    /// The data is snapshotted; the buffer is returned immediately usable.
+    pub fn iwrite_at(
+        &self,
+        offset: Offset,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<()>> {
+        self.check_open()?;
+        self.check_writable()?;
+        let ctx = self.transfer_ctx();
+        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
+        Ok(engine::submit(move || (write_payload(&ctx, offset, &payload), ())))
+    }
+
+    // ------------------------------------------------------------------
+    // §7.2.4.3 Individual file pointers
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_READ`: blocking noncollective read at the individual
+    /// file pointer; the pointer advances by the etypes actually read.
+    pub fn read(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let off = *self.indiv_ptr.lock().unwrap();
+        let st = self.read_at(off, buf, buf_offset, count, datatype)?;
+        let view = self.view_snapshot();
+        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
+        Ok(st)
+    }
+
+    /// `MPI_FILE_WRITE`: blocking noncollective write at the individual
+    /// file pointer.
+    pub fn write(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let off = *self.indiv_ptr.lock().unwrap();
+        let st = self.write_at(off, buf, buf_offset, count, datatype)?;
+        let view = self.view_snapshot();
+        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
+        Ok(st)
+    }
+
+    /// `MPI_FILE_IREAD`: nonblocking read at the individual pointer. The
+    /// pointer advances immediately by the full request size (MPI
+    /// semantics: the pointer update is not deferred to completion).
+    pub fn iread<T>(
+        &self,
+        buf: Vec<T>,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        let view = self.view_snapshot();
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let off = *ptr;
+        let req = self.iread_at(off, buf, buf_offset, count, datatype)?;
+        *ptr = off + view.bytes_to_etypes(count * datatype.size());
+        Ok(req)
+    }
+
+    /// `MPI_FILE_IWRITE`: nonblocking write at the individual pointer.
+    pub fn iwrite(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<()>> {
+        let view = self.view_snapshot();
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let off = *ptr;
+        let req = self.iwrite_at(off, buf, buf_offset, count, datatype)?;
+        *ptr = off + view.bytes_to_etypes(count * datatype.size());
+        Ok(req)
+    }
+
+    /// `MPI_FILE_SEEK`: update the individual pointer (etype units).
+    pub fn seek(&self, offset: Offset, whence: i32) -> Result<()> {
+        self.check_open()?;
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let new = match whence {
+            seek::SET => offset,
+            seek::CUR => *ptr + offset,
+            seek::END => self.etypes_in_file()? + offset,
+            w => return Err(err_arg(format!("seek: invalid whence {w}"))),
+        };
+        if new < 0 {
+            return Err(err_arg(format!("seek: resulting offset {new} is negative")));
+        }
+        *ptr = new;
+        Ok(())
+    }
+
+    /// `MPI_FILE_GET_POSITION`: the individual pointer, in etype units.
+    pub fn get_position(&self) -> Result<Offset> {
+        self.check_open()?;
+        Ok(*self.indiv_ptr.lock().unwrap())
+    }
+
+    /// `MPI_FILE_GET_BYTE_OFFSET`: view-relative etype offset → absolute
+    /// byte position.
+    pub fn get_byte_offset(&self, offset: Offset) -> Result<Offset> {
+        self.check_open()?;
+        self.view_snapshot().byte_offset(offset)
+    }
+
+    /// Number of whole etypes of this view that currently fit in the file
+    /// (the EOF position used by `SEEK_END`).
+    pub(crate) fn etypes_in_file(&self) -> Result<i64> {
+        let view = self.view_snapshot();
+        let fsize = self.storage.size()? as i64;
+        // Binary-search the largest etype offset whose byte offset is
+        // within the file.
+        let esz = view.etype_size() as i64;
+        let (mut lo, mut hi) = (0i64, (fsize / esz) + 1);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            // byte_offset(mid) is the position of the first byte of etype
+            // #mid; etype mid-1 fits if its end is within the file.
+            let pos = view.byte_offset(mid - 1).unwrap_or(i64::MAX);
+            if pos + esz <= fsize {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+            if lo == hi {
+                break;
+            }
+        }
+        Ok(lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::comm::Comm;
+    use crate::io::errors::ErrorClass;
+    use crate::io::hints::Info;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-access-{}-{name}", std::process::id())
+    }
+
+    fn open1<'c>(c: &'c dyn crate::comm::Comm, path: &str) -> File<'c> {
+        File::open(c, path, amode::RDWR | amode::CREATE, Info::null()).unwrap()
+    }
+
+    #[test]
+    fn write_read_at_ints() {
+        let path = tmp("ints");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let data: Vec<i32> = (0..100).collect();
+            let st = f.write_at(0, data.as_slice(), 0, 100, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 400);
+            assert_eq!(st.count(&Datatype::INT), Some(100));
+            let mut back = vec![0i32; 100];
+            let st = f.read_at(0, back.as_mut_slice(), 0, 100, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 400);
+            assert_eq!(back, data);
+            // Offset is in etypes (ints), not bytes.
+            let mut one = vec![0i32; 1];
+            f.read_at(7, one.as_mut_slice(), 0, 1, &Datatype::INT).unwrap();
+            assert_eq!(one[0], 7);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn buf_offset_is_element_offset() {
+        let path = tmp("bufoff");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            let data: Vec<f64> = vec![-1.0, 1.5, 2.5, -1.0];
+            f.write_at(0, data.as_slice(), 1, 2, &Datatype::DOUBLE).unwrap();
+            let mut back = vec![0f64; 4];
+            let st = f.read_at(0, back.as_mut_slice(), 2, 2, &Datatype::DOUBLE).unwrap();
+            assert_eq!(st.bytes, 16);
+            assert_eq!(&back[2..], &[1.5, 2.5]);
+            assert_eq!(&back[..2], &[0.0, 0.0]);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn individual_pointer_advances_and_seeks() {
+        let path = tmp("ptr");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let a: Vec<i32> = (0..8).collect();
+            f.write(a.as_slice(), 0, 8, &Datatype::INT).unwrap();
+            assert_eq!(f.get_position().unwrap(), 8);
+            f.seek(2, seek::SET).unwrap();
+            let mut b = vec![0i32; 3];
+            f.read(b.as_mut_slice(), 0, 3, &Datatype::INT).unwrap();
+            assert_eq!(b, vec![2, 3, 4]);
+            assert_eq!(f.get_position().unwrap(), 5);
+            f.seek(-2, seek::CUR).unwrap();
+            assert_eq!(f.get_position().unwrap(), 3);
+            f.seek(0, seek::END).unwrap();
+            assert_eq!(f.get_position().unwrap(), 8);
+            assert!(f.seek(-100, seek::CUR).is_err());
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn get_byte_offset_through_strided_view() {
+        let path = tmp("gbo");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            let ft = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
+            let ft = Datatype::resized(&ft, 0, 16).unwrap();
+            f.set_view(100, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+            assert_eq!(f.get_byte_offset(0).unwrap(), 100);
+            assert_eq!(f.get_byte_offset(1).unwrap(), 104);
+            assert_eq!(f.get_byte_offset(2).unwrap(), 116); // next instance
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn short_read_at_eof_reports_partial_count() {
+        let path = tmp("short");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            let a: Vec<i32> = vec![1, 2, 3];
+            f.write_at(0, a.as_slice(), 0, 3, &Datatype::INT).unwrap();
+            let mut b = vec![0i32; 10];
+            let st = f.read_at(0, b.as_mut_slice(), 0, 10, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 12);
+            assert_eq!(st.count(&Datatype::INT), Some(3));
+            assert_eq!(&b[..3], &[1, 2, 3]);
+            assert_eq!(&b[3..], &[0; 7]);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn interleaved_views_partition_the_file() {
+        let path = tmp("interleave");
+        threads::run(4, |c| {
+            let f = open1(c, &path);
+            let n = c.size();
+            let r = c.rank();
+            // filetype: 1 int at position r of each n-int frame.
+            let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+            let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+            f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null())
+                .unwrap();
+            let mine: Vec<i32> = (0..16).map(|i| (i * n + r) as i32).collect();
+            f.write_at(0, mine.as_slice(), 0, 16, &Datatype::INT).unwrap();
+            c.barrier();
+            f.close().unwrap();
+            // Every rank verifies the interleaving through a flat view.
+            let f2 = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+            let mut all = vec![0i32; 16 * n];
+            f2.read_at(0, all.as_mut_slice(), 0, 16 * n * 4, &Datatype::BYTE)
+                .map(|_| ())
+                .unwrap_err(); // datatype mismatch: BYTE vs i32 buffer
+            f2.read_at(0, all.as_mut_slice(), 0, 16 * n, &Datatype::INT).unwrap();
+            let want: Vec<i32> = (0..16 * n as i32).collect();
+            assert_eq!(all, want);
+            f2.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn nonblocking_roundtrip() {
+        let path = tmp("nb");
+        threads::run(2, |c| {
+            let f = open1(c, &path);
+            let data: Vec<i64> = (0..64).map(|i| i + c.rank() as i64 * 1000).collect();
+            let req = f
+                .iwrite_at((c.rank() * 64) as i64 * 8, data.as_slice(), 0, 64, &Datatype::LONG)
+                .unwrap();
+            let (st, ()) = req.wait().unwrap();
+            assert_eq!(st.bytes, 512);
+            c.barrier();
+            let req = f
+                .iread_at(0, vec![0i64; 64], 0, 64, &Datatype::LONG)
+                .unwrap();
+            let (st, buf) = req.wait().unwrap();
+            assert_eq!(st.bytes, 512);
+            assert_eq!(buf[5], 5);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn external32_view_roundtrips_and_is_big_endian_on_disk() {
+        let path = tmp("ext32");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "external32", &Info::null())
+                .unwrap();
+            let data: Vec<i32> = vec![0x0102_0304, 0x0A0B_0C0D];
+            f.write_at(0, data.as_slice(), 0, 2, &Datatype::INT).unwrap();
+            let mut back = vec![0i32; 2];
+            f.read_at(0, back.as_mut_slice(), 0, 2, &Datatype::INT).unwrap();
+            assert_eq!(back, data);
+            f.close().unwrap();
+        });
+        // Raw file bytes are big-endian.
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..4], &[0x01, 0x02, 0x03, 0x04]);
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn noncontiguous_memory_datatype_packs() {
+        let path = tmp("memtype");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            // Memory: every other int of the buffer (vector blocklen 1
+            // stride 2); file: contiguous.
+            let mem = Datatype::vector(4, 1, 2, &Datatype::INT).unwrap();
+            let data: Vec<i32> = (0..8).collect(); // take 0,2,4,6
+            f.write_at(0, data.as_slice(), 0, 1, &mem).unwrap();
+            let mut back = vec![0i32; 4];
+            f.read_at(0, back.as_mut_slice(), 0, 4, &Datatype::INT).unwrap();
+            assert_eq!(back, vec![0, 2, 4, 6]);
+            // Read back through the same strided memory type.
+            let mut strided = vec![-1i32; 8];
+            f.read_at(0, strided.as_mut_slice(), 0, 1, &mem).unwrap();
+            assert_eq!(strided, vec![0, -1, 2, -1, 4, -1, 6, -1]);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn wronly_rejects_reads_and_rdonly_rejects_writes() {
+        let path = tmp("modes");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::WRONLY, Info::null()).unwrap();
+            let mut b = vec![0u8; 4];
+            assert_eq!(
+                f.read_at(0, b.as_mut_slice(), 0, 4, &Datatype::BYTE).unwrap_err().class,
+                ErrorClass::Amode
+            );
+            f.close().unwrap();
+            let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+            assert_eq!(
+                f.write_at(0, b.as_slice(), 0, 4, &Datatype::BYTE).unwrap_err().class,
+                ErrorClass::ReadOnly
+            );
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn buffer_too_small_is_arg_error() {
+        let path = tmp("toosmall");
+        threads::run(1, |c| {
+            let f = open1(c, &path);
+            let d = vec![1i32; 4];
+            assert_eq!(
+                f.write_at(0, d.as_slice(), 0, 8, &Datatype::INT).unwrap_err().class,
+                ErrorClass::Arg
+            );
+            assert_eq!(
+                f.write_at(0, d.as_slice(), 2, 3, &Datatype::INT).unwrap_err().class,
+                ErrorClass::Arg
+            );
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+}

@@ -1,0 +1,562 @@
+//! Collective data access (`*_ALL`, §7.2.4) with two-phase collective
+//! buffering — ROMIO's flagship optimization ("an optimized implementation
+//! of collective I/O, an important optimization in parallel I/O", §2.2.1).
+//!
+//! ## Two-phase algorithm
+//!
+//! 1. Every rank flattens its request through its view into absolute byte
+//!    runs and the ranks agree on the global byte range.
+//! 2. The range is split into contiguous *aggregator domains* (`cb_nodes`
+//!    hint; default: every rank aggregates).
+//! 3. **Exchange phase** (communication): each rank ships the pieces of
+//!    its request that fall into each domain to that domain's aggregator.
+//! 4. **I/O phase** (storage): aggregators merge the pieces into large,
+//!    mostly-contiguous transfers (data sieving on reads) and hit the
+//!    file once, instead of N ranks issuing interleaved small I/O.
+//!
+//! The I/O phase touches only storage, which is what lets the split
+//! collectives ([`crate::io::split`]) run it on the request engine while
+//! the application computes (§7.2.9.1 double buffering).
+
+use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
+use crate::comm::{Comm, ReduceOp, Status};
+use crate::io::access::{pack_payload, read_payload, unpack_payload, write_payload, TransferCtx};
+use crate::io::errors::Result;
+use crate::io::file::File;
+use crate::io::hints::keys;
+use crate::strategy::{AccessStrategy, ViewBufStrategy};
+
+/// One rank's pieces destined for a single aggregator.
+fn slice_runs_for_domain(
+    runs: &[(u64, usize)],
+    payload_positions: &[usize],
+    domain: (u64, u64),
+) -> Vec<(u64, usize, usize)> {
+    // Returns (file_off, len, payload_pos) clipped to the domain.
+    let mut out = Vec::new();
+    for (i, &(off, len)) in runs.iter().enumerate() {
+        let end = off + len as u64;
+        let s = off.max(domain.0);
+        let e = end.min(domain.1);
+        if s < e {
+            let head = (s - off) as usize;
+            out.push((s, (e - s) as usize, payload_positions[i] + head));
+        }
+    }
+    out
+}
+
+/// Serialize pieces + payload bytes into one exchange message.
+fn encode_write_msg(pieces: &[(u64, usize, usize)], payload: &[u8]) -> Vec<u8> {
+    let total: usize = pieces.iter().map(|p| p.1).sum();
+    let mut msg = Vec::with_capacity(4 + pieces.len() * 16 + total);
+    msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
+    for &(off, len, _) in pieces {
+        msg.extend_from_slice(&off.to_le_bytes());
+        msg.extend_from_slice(&(len as u64).to_le_bytes());
+    }
+    for &(_, len, pos) in pieces {
+        msg.extend_from_slice(&payload[pos..pos + len]);
+    }
+    msg
+}
+
+fn decode_runs(msg: &[u8]) -> (Vec<(u64, usize)>, usize) {
+    let n = u32::from_le_bytes(msg[..4].try_into().unwrap()) as usize;
+    let mut runs = Vec::with_capacity(n);
+    let mut pos = 4;
+    for _ in 0..n {
+        let off = u64::from_le_bytes(msg[pos..pos + 8].try_into().unwrap());
+        let len = u64::from_le_bytes(msg[pos + 8..pos + 16].try_into().unwrap()) as usize;
+        runs.push((off, len));
+        pos += 16;
+    }
+    (runs, pos)
+}
+
+/// Work an aggregator owes the I/O phase of a collective write.
+pub(crate) struct WriteIoWork {
+    /// Per-source (in rank order) decoded runs + their bytes, already
+    /// flattened to (off, len, bytes) writes in arrival order.
+    pub writes: Vec<(u64, Vec<u8>)>,
+    /// Staging-buffer size for the aggregator strategy.
+    pub cb_buffer: usize,
+}
+
+impl WriteIoWork {
+    /// Execute the I/O phase (storage only — engine-safe).
+    pub(crate) fn execute(self, ctx: &TransferCtx) -> Result<()> {
+        let strat = ViewBufStrategy::with_stage(self.cb_buffer);
+        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        // Coalesce strictly-adjacent pieces into single large transfers —
+        // the whole point of aggregation. (Overlapping pieces are never
+        // merged: sorted order preserves the deterministic rank-order
+        // overwrite semantics.)
+        let mut pending: Option<(u64, Vec<u8>)> = None;
+        for (off, bytes) in self.writes {
+            match &mut pending {
+                Some((poff, pbuf))
+                    if *poff + pbuf.len() as u64 == off
+                        && pbuf.len() + bytes.len() <= self.cb_buffer =>
+                {
+                    pbuf.extend_from_slice(&bytes);
+                }
+                Some((poff, pbuf)) => {
+                    strat.write(ctx.storage.as_ref(), &[(*poff, pbuf.len())], pbuf)?;
+                    pending = Some((off, bytes));
+                }
+                None => pending = Some((off, bytes)),
+            }
+        }
+        if let Some((poff, pbuf)) = pending {
+            strat.write(ctx.storage.as_ref(), &[(poff, pbuf.len())], &pbuf)?;
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of the exchange phase of a collective write: the I/O work this
+/// rank must perform as an aggregator (empty for non-aggregators).
+pub(crate) fn exchange_write(
+    comm: &dyn Comm,
+    ctx: &TransferCtx,
+    info_cb_nodes: Option<usize>,
+    info_cb_buffer: Option<usize>,
+    collective_buffering: bool,
+    etype_off: i64,
+    payload: &[u8],
+) -> Result<(WriteIoWork, usize)> {
+    let n = comm.size();
+    let runs = ctx.view.runs(etype_off, payload.len())?;
+    if !collective_buffering || n == 1 {
+        // Degenerate: independent write, collective completion only.
+        write_payload(ctx, etype_off, payload)?;
+        return Ok((WriteIoWork { writes: Vec::new(), cb_buffer: 1 }, payload.len()));
+    }
+    // Payload position of each run.
+    let mut positions = Vec::with_capacity(runs.len());
+    let mut acc = 0usize;
+    for &(_, len) in &runs {
+        positions.push(acc);
+        acc += len;
+    }
+    // Global byte range.
+    let my_min = runs.first().map(|&(o, _)| o as i64).unwrap_or(i64::MAX);
+    let my_max = runs.last().map(|&(o, l)| (o + l as u64) as i64).unwrap_or(0);
+    let gmin = comm.allreduce_i64(ReduceOp::Min, my_min);
+    let gmax = comm.allreduce_i64(ReduceOp::Max, my_max);
+    if gmin >= gmax {
+        return Ok((WriteIoWork { writes: Vec::new(), cb_buffer: 1 }, payload.len()));
+    }
+    let naggr = info_cb_nodes.unwrap_or(n).clamp(1, n);
+    let domains = split_domains(gmin as u64, gmax as u64, naggr);
+    // Build one message per rank (non-aggregators get empty messages).
+    let mut msgs = vec![Vec::new(); n];
+    for (a, &dom) in domains.iter().enumerate() {
+        let pieces = slice_runs_for_domain(&runs, &positions, dom);
+        msgs[a] = encode_write_msg(&pieces, payload);
+    }
+    for m in msgs.iter_mut().skip(naggr) {
+        m.extend_from_slice(&0u32.to_le_bytes());
+    }
+    let inbound = comm.alltoall(&msgs);
+    // Decode in rank order (deterministic overlap resolution).
+    let mut writes = Vec::new();
+    for msg in &inbound {
+        if msg.len() < 4 {
+            continue;
+        }
+        let (rs, mut pos) = decode_runs(msg);
+        for (off, len) in rs {
+            writes.push((off, msg[pos..pos + len].to_vec()));
+            pos += len;
+        }
+    }
+    writes.sort_by_key(|&(off, _)| off);
+    Ok((
+        WriteIoWork { writes, cb_buffer: info_cb_buffer.unwrap_or(16 << 20).max(4096) },
+        payload.len(),
+    ))
+}
+
+/// Full collective read: exchange requests, aggregator sieved reads,
+/// reply exchange, local reassembly. Returns bytes read into `payload`.
+pub(crate) fn collective_read(
+    comm: &dyn Comm,
+    ctx: &TransferCtx,
+    info_cb_nodes: Option<usize>,
+    info_cb_buffer: Option<usize>,
+    collective_buffering: bool,
+    etype_off: i64,
+    payload: &mut [u8],
+) -> Result<usize> {
+    let n = comm.size();
+    if !collective_buffering || n == 1 {
+        let got = read_payload(ctx, etype_off, payload)?;
+        if collective_buffering {
+            comm.barrier();
+        }
+        return Ok(got);
+    }
+    let runs = ctx.view.runs(etype_off, payload.len())?;
+    let mut positions = Vec::with_capacity(runs.len());
+    let mut acc = 0usize;
+    for &(_, len) in &runs {
+        positions.push(acc);
+        acc += len;
+    }
+    let my_min = runs.first().map(|&(o, _)| o as i64).unwrap_or(i64::MAX);
+    let my_max = runs.last().map(|&(o, l)| (o + l as u64) as i64).unwrap_or(0);
+    let gmin = comm.allreduce_i64(ReduceOp::Min, my_min);
+    let gmax = comm.allreduce_i64(ReduceOp::Max, my_max);
+    if gmin >= gmax {
+        return Ok(0);
+    }
+    let naggr = info_cb_nodes.unwrap_or(n).clamp(1, n);
+    let domains = split_domains(gmin as u64, gmax as u64, naggr);
+    // Request phase: ship (off,len) lists to aggregators.
+    let mut reqs = vec![Vec::new(); n];
+    let mut my_pieces: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n];
+    for (a, &dom) in domains.iter().enumerate() {
+        let pieces = slice_runs_for_domain(&runs, &positions, dom);
+        let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
+        msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
+        for &(off, len, _) in &pieces {
+            msg.extend_from_slice(&off.to_le_bytes());
+            msg.extend_from_slice(&(len as u64).to_le_bytes());
+        }
+        reqs[a] = msg;
+        my_pieces[a] = pieces;
+    }
+    for m in reqs.iter_mut().skip(naggr) {
+        m.extend_from_slice(&0u32.to_le_bytes());
+    }
+    let inbound = comm.alltoall(&reqs);
+
+    // Aggregator I/O phase: merge all requested intervals, sieved read.
+    let eof = ctx.storage.size()?;
+    let mut per_src_runs: Vec<Vec<(u64, usize)>> = Vec::with_capacity(n);
+    let mut intervals: Vec<(u64, u64)> = Vec::new();
+    for msg in &inbound {
+        let (rs, _) = decode_runs(msg);
+        for &(off, len) in &rs {
+            intervals.push((off, off + len as u64));
+        }
+        per_src_runs.push(rs);
+    }
+    let merged = merge_intervals(&mut intervals);
+    let strat = ViewBufStrategy::with_stage(info_cb_buffer.unwrap_or(16 << 20).max(4096));
+    let merged_runs: Vec<(u64, usize)> =
+        merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
+    let total: usize = merged_runs.iter().map(|r| r.1).sum();
+    let mut agg_buf = vec![0u8; total];
+    if total > 0 {
+        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        strat.read(ctx.storage.as_ref(), &merged_runs, &mut agg_buf)?;
+    }
+    // Reply phase: slice the aggregated buffer per source request.
+    let locate = |off: u64| -> Option<usize> {
+        // Position of `off` within agg_buf.
+        let mut base = 0usize;
+        for &(s, e) in &merged {
+            if off >= s && off < e {
+                return Some(base + (off - s) as usize);
+            }
+            base += (e - s) as usize;
+        }
+        None
+    };
+    let mut replies = vec![Vec::new(); n];
+    for (src, rs) in per_src_runs.iter().enumerate() {
+        let bytes: usize = rs.iter().map(|r| r.1).sum();
+        let mut reply = Vec::with_capacity(bytes);
+        for &(off, len) in rs {
+            let p = locate(off).expect("requested run must be inside merged intervals");
+            reply.extend_from_slice(&agg_buf[p..p + len]);
+        }
+        replies[src] = reply;
+    }
+    let mut answers = comm.alltoall(&replies);
+
+    // Reassemble my payload from the per-aggregator answers; compute the
+    // EOF-clamped byte count.
+    let mut got = 0usize;
+    for (a, pieces) in my_pieces.iter().enumerate() {
+        let ans = std::mem::take(&mut answers[a]);
+        let mut cursor = 0usize;
+        for &(off, len, pos) in pieces {
+            payload[pos..pos + len].copy_from_slice(&ans[cursor..cursor + len]);
+            cursor += len;
+            let visible = (eof.saturating_sub(off) as usize).min(len);
+            got += visible;
+        }
+    }
+    // Datarep decode on the assembled payload.
+    if !ctx.view.datarep.is_identity() {
+        let elems = ctx.view.payload_elems(got);
+        ctx.view.datarep.decode(&mut payload[..got], &elems);
+    }
+    Ok(got)
+}
+
+/// Split `[lo, hi)` into `n` near-even contiguous domains.
+fn split_domains(lo: u64, hi: u64, n: usize) -> Vec<(u64, u64)> {
+    let total = hi - lo;
+    let base = total / n as u64;
+    let rem = (total % n as u64) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut cur = lo;
+    for i in 0..n {
+        let len = base + (i < rem) as u64;
+        out.push((cur, cur + len));
+        cur += len;
+    }
+    out
+}
+
+/// Sort + merge overlapping/adjacent intervals.
+fn merge_intervals(iv: &mut Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
+    for &(s, e) in iv.iter() {
+        if let Some(last) = out.last_mut() {
+            if s <= last.1 {
+                last.1 = last.1.max(e);
+                continue;
+            }
+        }
+        out.push((s, e));
+    }
+    out
+}
+
+impl File<'_> {
+    pub(crate) fn cb_params(&self) -> (Option<usize>, Option<usize>, bool) {
+        let info = self.info.lock().unwrap();
+        (
+            info.get_usize(keys::CB_NODES),
+            info.get_usize(keys::CB_BUFFER_SIZE),
+            info.get_flag(keys::COLLECTIVE_BUFFERING).unwrap_or(true),
+        )
+    }
+
+    /// `MPI_FILE_WRITE_AT_ALL`: collective write at explicit offsets.
+    pub fn write_at_all(
+        &self,
+        offset: Offset,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_writable()?;
+        let ctx = self.transfer_ctx();
+        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?;
+        let (nodes, cb, on) = self.cb_params();
+        let (work, bytes) =
+            exchange_write(self.comm, &ctx, nodes, cb, on, offset, &payload)?;
+        work.execute(&ctx)?;
+        self.comm.barrier();
+        Ok(Status::of_bytes(bytes))
+    }
+
+    /// `MPI_FILE_READ_AT_ALL`: collective read at explicit offsets.
+    pub fn read_at_all(
+        &self,
+        offset: Offset,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_readable()?;
+        let ctx = self.transfer_ctx();
+        let mut payload = vec![0u8; count * datatype.size()];
+        let (nodes, cb, on) = self.cb_params();
+        let got = collective_read(self.comm, &ctx, nodes, cb, on, offset, &mut payload)?;
+        unpack_payload(buf, buf_offset, count, datatype, &payload, got)?;
+        Ok(Status::of_bytes(got))
+    }
+
+    /// `MPI_FILE_WRITE_ALL`: collective write at the individual pointer.
+    pub fn write_all(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let off = *self.indiv_ptr.lock().unwrap();
+        let st = self.write_at_all(off, buf, buf_offset, count, datatype)?;
+        let view = self.view_snapshot();
+        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
+        Ok(st)
+    }
+
+    /// `MPI_FILE_READ_ALL`: collective read at the individual pointer.
+    pub fn read_all(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let off = *self.indiv_ptr.lock().unwrap();
+        let st = self.read_at_all(off, buf, buf_offset, count, datatype)?;
+        let view = self.view_snapshot();
+        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::comm::Comm;
+    use crate::io::file::amode;
+    use crate::io::hints::Info;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-coll-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn split_domains_cover_exactly() {
+        let d = split_domains(10, 107, 4);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[0].0, 10);
+        assert_eq!(d[3].1, 107);
+        for w in d.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn merge_intervals_handles_overlap_and_adjacency() {
+        let mut iv = vec![(10, 20), (0, 5), (5, 8), (15, 30), (40, 41)];
+        assert_eq!(merge_intervals(&mut iv), vec![(0, 8), (10, 30), (40, 41)]);
+    }
+
+    #[test]
+    fn collective_write_read_interleaved_blocks() {
+        let path = tmp("blocks");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let n = c.size();
+            let r = c.rank();
+            // Rank r writes ints [r*256, (r+1)*256) at its block.
+            f.set_view((r * 1024) as i64, &Datatype::INT, &Datatype::INT, "native", &Info::null())
+                .unwrap();
+            let mine: Vec<i32> = (0..256).map(|i| (r * 256 + i) as i32).collect();
+            let st = f.write_all(mine.as_slice(), 0, 256, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 1024);
+            f.sync().unwrap();
+            c.barrier();
+            f.close().unwrap();
+
+            let f2 = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+            let mut all = vec![0i32; 256 * n];
+            let st = f2.read_at_all(0, all.as_mut_slice(), 0, 256 * n, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 1024 * n);
+            let want: Vec<i32> = (0..(256 * n) as i32).collect();
+            assert_eq!(all, want);
+            f2.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn collective_strided_interleave_two_phase() {
+        // The classic two-phase win: rank r owns every n-th int. One
+        // collective write must produce the full interleaved file.
+        let path = tmp("strided");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let n = c.size();
+            let r = c.rank();
+            let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+            let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+            f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+            let k = 512;
+            let mine: Vec<i32> = (0..k).map(|i| (i * n + r) as i32).collect();
+            f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            c.barrier();
+            // Read back collectively through the same strided view.
+            let mut back = vec![0i32; k];
+            let st = f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, k * 4);
+            assert_eq!(back, mine);
+            f.close().unwrap();
+        });
+        // Flat check.
+        let raw = std::fs::read(&path).unwrap();
+        let ints: Vec<i32> =
+            raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        let want: Vec<i32> = (0..ints.len() as i32).collect();
+        assert_eq!(ints, want);
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn cb_nodes_one_aggregator_still_correct() {
+        let path = tmp("onenode");
+        threads::run(3, |c| {
+            let info = Info::from([(keys::CB_NODES, "1"), (keys::CB_BUFFER_SIZE, "4096")]);
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
+            let r = c.rank();
+            let data = vec![r as i32; 100];
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            f.write_at_all((r * 100) as i64, data.as_slice(), 0, 100, &Datatype::INT).unwrap();
+            c.barrier();
+            let mut all = vec![0i32; 300];
+            f.read_at_all(0, all.as_mut_slice(), 0, 300, &Datatype::INT).unwrap();
+            for (i, v) in all.iter().enumerate() {
+                assert_eq!(*v, (i / 100) as i32);
+            }
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn collective_buffering_disabled_fallback() {
+        let path = tmp("nocb");
+        threads::run(2, |c| {
+            let info = Info::from([(keys::COLLECTIVE_BUFFERING, "false")]);
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let r = c.rank();
+            let data = vec![(r + 1) as i32; 64];
+            f.write_at_all((r * 64) as i64, data.as_slice(), 0, 64, &Datatype::INT).unwrap();
+            c.barrier();
+            let mut back = vec![0i32; 128];
+            f.read_at_all(0, back.as_mut_slice(), 0, 128, &Datatype::INT).unwrap();
+            assert!(back[..64].iter().all(|&v| v == 1));
+            assert!(back[64..].iter().all(|&v| v == 2));
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn collective_read_shorter_than_eof_clamps() {
+        let path = tmp("eofclamp");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            if c.rank() == 0 {
+                f.write_at(0, vec![5i32; 10].as_slice(), 0, 10, &Datatype::INT).unwrap();
+            }
+            c.barrier();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let mut buf = vec![0i32; 20];
+            let st = f.read_at_all(0, buf.as_mut_slice(), 0, 20, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 40);
+            assert_eq!(st.count(&Datatype::INT), Some(10));
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+}

@@ -1,0 +1,235 @@
+//! Data representations (§7.2.5 — file interoperability).
+//!
+//! * `"native"` — bytes as in memory (no conversion);
+//! * `"external32"` — the MPI canonical big-endian representation
+//!   (§7.2.5.2): multi-byte primitives are byte-swapped on little-endian
+//!   hosts so files interoperate across architectures;
+//! * user-defined representations (§7.2.5.3) registered through
+//!   [`register_datarep`], each supplying read/write conversion functions.
+//!
+//! ROMIO itself never implemented file interoperability ("File
+//! interoperability is not yet implemented even in ROMIO" — §5); this
+//! module is the paper's named future-work item, built.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use once_cell::sync::Lazy;
+
+use crate::comm::datatype::Prim;
+use crate::io::errors::{err_dup_datarep, err_unsupported_datarep, Result};
+
+/// A conversion applied to one homogeneous element run in the packed
+/// payload buffer. `prim` names the element type; the slice length is a
+/// multiple of `prim.size()`.
+pub type ConvertFn = dyn Fn(&mut [u8], Prim) + Send + Sync;
+
+/// A resolved data representation.
+#[derive(Clone)]
+pub enum DataRep {
+    /// No conversion.
+    Native,
+    /// Canonical big-endian.
+    External32,
+    /// User-registered conversion pair.
+    User {
+        /// Registered name.
+        name: String,
+        /// Applied after reading file bytes (file → memory).
+        read: Arc<ConvertFn>,
+        /// Applied before writing file bytes (memory → file).
+        write: Arc<ConvertFn>,
+    },
+}
+
+impl std::fmt::Debug for DataRep {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataRep::Native => write!(f, "native"),
+            DataRep::External32 => write!(f, "external32"),
+            DataRep::User { name, .. } => write!(f, "user({name})"),
+        }
+    }
+}
+
+impl DataRep {
+    /// The datarep string as passed to `setView`.
+    pub fn name(&self) -> &str {
+        match self {
+            DataRep::Native => "native",
+            DataRep::External32 => "external32",
+            DataRep::User { name, .. } => name,
+        }
+    }
+
+    /// Resolve a datarep string (§7.2.5.4 matching).
+    pub fn resolve(name: &str) -> Result<DataRep> {
+        match name {
+            "native" => Ok(DataRep::Native),
+            "external32" | "internal" => Ok(DataRep::External32),
+            other => {
+                let reg = REGISTRY.read().unwrap();
+                reg.get(other).cloned().ok_or_else(|| {
+                    err_unsupported_datarep(format!("unknown datarep {other:?}"))
+                })
+            }
+        }
+    }
+
+    /// True if no byte transformation is needed.
+    pub fn is_identity(&self) -> bool {
+        matches!(self, DataRep::Native)
+    }
+
+    /// Convert a packed payload in place for *writing* (memory → file).
+    /// `elems` describes the payload as (prim, count) runs in order.
+    pub fn encode(&self, payload: &mut [u8], elems: &[(Prim, usize)]) {
+        match self {
+            DataRep::Native => {}
+            DataRep::External32 => for_each_run(payload, elems, byteswap_run),
+            DataRep::User { write, .. } => {
+                for_each_run(payload, elems, |bytes, prim| write(bytes, prim))
+            }
+        }
+    }
+
+    /// Convert a packed payload in place after *reading* (file → memory).
+    pub fn decode(&self, payload: &mut [u8], elems: &[(Prim, usize)]) {
+        match self {
+            DataRep::Native => {}
+            DataRep::External32 => for_each_run(payload, elems, byteswap_run),
+            DataRep::User { read, .. } => {
+                for_each_run(payload, elems, |bytes, prim| read(bytes, prim))
+            }
+        }
+    }
+}
+
+fn for_each_run(payload: &mut [u8], elems: &[(Prim, usize)], f: impl Fn(&mut [u8], Prim)) {
+    let mut pos = 0;
+    for &(prim, count) in elems {
+        let len = prim.size() * count;
+        if pos + len > payload.len() {
+            // Short transfer (EOF): convert what exists, element-aligned.
+            let avail = (payload.len() - pos) / prim.size() * prim.size();
+            f(&mut payload[pos..pos + avail], prim);
+            return;
+        }
+        f(&mut payload[pos..pos + len], prim);
+        pos += len;
+    }
+}
+
+/// Swap a run of `prim`-sized elements between host and big-endian. On a
+/// big-endian host this would be the identity; the image is x86-64
+/// (little-endian), so it always swaps for multi-byte prims.
+pub fn byteswap_run(bytes: &mut [u8], prim: Prim) {
+    let sz = prim.size();
+    if sz == 1 || cfg!(target_endian = "big") {
+        return;
+    }
+    for chunk in bytes.chunks_exact_mut(sz) {
+        chunk.reverse();
+    }
+}
+
+static REGISTRY: Lazy<RwLock<HashMap<String, DataRep>>> = Lazy::new(|| RwLock::new(HashMap::new()));
+
+/// Register a user-defined data representation
+/// (`MPI_REGISTER_DATAREP`, §7.2.5.3). `read` converts file→memory,
+/// `write` memory→file; both receive one homogeneous element run at a
+/// time. Fails with `MPI_ERR_DUP_DATAREP` if the name is taken (including
+/// the predefined names).
+pub fn register_datarep(
+    name: &str,
+    read: Arc<ConvertFn>,
+    write: Arc<ConvertFn>,
+) -> Result<()> {
+    if name == "native" || name == "external32" || name == "internal" {
+        return Err(err_dup_datarep(format!("{name:?} is predefined")));
+    }
+    let mut reg = REGISTRY.write().unwrap();
+    if reg.contains_key(name) {
+        return Err(err_dup_datarep(format!("{name:?} already registered")));
+    }
+    reg.insert(
+        name.to_string(),
+        DataRep::User { name: name.to_string(), read, write },
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_predefined() {
+        assert!(DataRep::resolve("native").unwrap().is_identity());
+        assert_eq!(DataRep::resolve("external32").unwrap().name(), "external32");
+        assert!(DataRep::resolve("martian").is_err());
+    }
+
+    #[test]
+    fn external32_swaps_and_roundtrips() {
+        let vals: Vec<i32> = vec![0x0102_0304, -1, 7];
+        let mut bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let rep = DataRep::External32;
+        rep.encode(&mut bytes, &[(Prim::Int, 3)]);
+        // First element must now be big-endian.
+        assert_eq!(&bytes[..4], &[0x01, 0x02, 0x03, 0x04]);
+        rep.decode(&mut bytes, &[(Prim::Int, 3)]);
+        let back: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn bytes_are_not_swapped() {
+        let mut b = vec![1u8, 2, 3];
+        DataRep::External32.encode(&mut b, &[(Prim::Byte, 3)]);
+        assert_eq!(b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn heterogeneous_runs() {
+        // int then double: each run swapped at its own width.
+        let mut bytes = vec![0u8; 12];
+        bytes[..4].copy_from_slice(&0x0A0B_0C0Di32.to_le_bytes());
+        bytes[4..].copy_from_slice(&1.0f64.to_le_bytes());
+        DataRep::External32.encode(&mut bytes, &[(Prim::Int, 1), (Prim::Double, 1)]);
+        assert_eq!(&bytes[..4], &[0x0A, 0x0B, 0x0C, 0x0D]);
+        assert_eq!(&bytes[4..], &1.0f64.to_be_bytes());
+    }
+
+    #[test]
+    fn short_payload_converts_whole_elements_only() {
+        let mut bytes = vec![1u8, 2, 3, 4, 5, 6]; // 1.5 ints
+        DataRep::External32.decode(&mut bytes, &[(Prim::Int, 2)]);
+        assert_eq!(bytes, vec![4, 3, 2, 1, 5, 6]);
+    }
+
+    #[test]
+    fn user_datarep_registration_and_conversion() {
+        // A trivial "xor32" rep: xor every byte with 0x5A.
+        let xor = Arc::new(|bytes: &mut [u8], _p: Prim| {
+            for b in bytes {
+                *b ^= 0x5A;
+            }
+        });
+        register_datarep("xor32-test", xor.clone(), xor).unwrap();
+        // Duplicate registration fails.
+        let dup = Arc::new(|_: &mut [u8], _: Prim| {});
+        assert!(register_datarep("xor32-test", dup.clone(), dup.clone()).is_err());
+        assert!(register_datarep("native", dup.clone(), dup).is_err());
+
+        let rep = DataRep::resolve("xor32-test").unwrap();
+        let mut data = vec![0u8, 1, 2, 3];
+        rep.encode(&mut data, &[(Prim::Int, 1)]);
+        assert_eq!(data, vec![0x5A, 0x5B, 0x58, 0x59]);
+        rep.decode(&mut data, &[(Prim::Int, 1)]);
+        assert_eq!(data, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,190 @@
+//! I/O error classes (§7.2.8 — the MPI-2.2 chapter-13 error classes).
+//!
+//! ROMIO 1.2.5.1 shipped without user-defined error handlers; we provide
+//! the full class set plus a Rust-idiomatic `Result` surface. Each variant
+//! corresponds to one `MPI_ERR_*` class so test assertions can match on
+//! class rather than message text.
+
+use std::fmt;
+
+/// MPI-IO error classes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ErrorClass {
+    /// `MPI_ERR_FILE` — invalid file handle.
+    File,
+    /// `MPI_ERR_NOT_SAME` — collective argument mismatch across ranks.
+    NotSame,
+    /// `MPI_ERR_AMODE` — invalid access-mode combination.
+    Amode,
+    /// `MPI_ERR_UNSUPPORTED_DATAREP` — unknown data representation.
+    UnsupportedDatarep,
+    /// `MPI_ERR_UNSUPPORTED_OPERATION` — op not allowed in this mode.
+    UnsupportedOperation,
+    /// `MPI_ERR_NO_SUCH_FILE` — file does not exist.
+    NoSuchFile,
+    /// `MPI_ERR_FILE_EXISTS` — file already exists (EXCL).
+    FileExists,
+    /// `MPI_ERR_BAD_FILE` — invalid file name.
+    BadFile,
+    /// `MPI_ERR_ACCESS` — permission denied.
+    Access,
+    /// `MPI_ERR_NO_SPACE` — not enough space.
+    NoSpace,
+    /// `MPI_ERR_QUOTA` — quota exceeded.
+    Quota,
+    /// `MPI_ERR_READ_ONLY` — write on a read-only file/system.
+    ReadOnly,
+    /// `MPI_ERR_FILE_IN_USE` — delete/resize while open elsewhere.
+    FileInUse,
+    /// `MPI_ERR_DUP_DATAREP` — datarep name already registered.
+    DupDatarep,
+    /// `MPI_ERR_CONVERSION` — datarep conversion failed.
+    Conversion,
+    /// `MPI_ERR_IO` — other I/O error.
+    Io,
+    /// `MPI_ERR_REQUEST` — invalid request handle (nonblocking ops).
+    Request,
+    /// `MPI_ERR_ARG` — invalid argument (count/offset/datatype).
+    Arg,
+}
+
+impl ErrorClass {
+    /// The MPI constant name of this class.
+    pub const fn mpi_name(self) -> &'static str {
+        match self {
+            ErrorClass::File => "MPI_ERR_FILE",
+            ErrorClass::NotSame => "MPI_ERR_NOT_SAME",
+            ErrorClass::Amode => "MPI_ERR_AMODE",
+            ErrorClass::UnsupportedDatarep => "MPI_ERR_UNSUPPORTED_DATAREP",
+            ErrorClass::UnsupportedOperation => "MPI_ERR_UNSUPPORTED_OPERATION",
+            ErrorClass::NoSuchFile => "MPI_ERR_NO_SUCH_FILE",
+            ErrorClass::FileExists => "MPI_ERR_FILE_EXISTS",
+            ErrorClass::BadFile => "MPI_ERR_BAD_FILE",
+            ErrorClass::Access => "MPI_ERR_ACCESS",
+            ErrorClass::NoSpace => "MPI_ERR_NO_SPACE",
+            ErrorClass::Quota => "MPI_ERR_QUOTA",
+            ErrorClass::ReadOnly => "MPI_ERR_READ_ONLY",
+            ErrorClass::FileInUse => "MPI_ERR_FILE_IN_USE",
+            ErrorClass::DupDatarep => "MPI_ERR_DUP_DATAREP",
+            ErrorClass::Conversion => "MPI_ERR_CONVERSION",
+            ErrorClass::Io => "MPI_ERR_IO",
+            ErrorClass::Request => "MPI_ERR_REQUEST",
+            ErrorClass::Arg => "MPI_ERR_ARG",
+        }
+    }
+}
+
+/// An MPJ-IO error: a class plus context.
+#[derive(Debug)]
+pub struct IoError {
+    /// The MPI error class.
+    pub class: ErrorClass,
+    /// Human-readable context.
+    pub message: String,
+    /// Underlying OS error, when one exists.
+    pub source: Option<std::io::Error>,
+}
+
+impl IoError {
+    /// Construct an error of `class` with a message.
+    pub fn new(class: ErrorClass, message: impl Into<String>) -> IoError {
+        IoError { class, message: message.into(), source: None }
+    }
+
+    /// Wrap an OS error, mapping its kind onto an MPI class.
+    pub fn from_os(err: std::io::Error, context: impl Into<String>) -> IoError {
+        use std::io::ErrorKind::*;
+        let class = match err.kind() {
+            NotFound => ErrorClass::NoSuchFile,
+            PermissionDenied => ErrorClass::Access,
+            AlreadyExists => ErrorClass::FileExists,
+            InvalidInput => ErrorClass::Arg,
+            WriteZero | UnexpectedEof => ErrorClass::Io,
+            _ => match err.raw_os_error() {
+                Some(libc::ENOSPC) => ErrorClass::NoSpace,
+                Some(libc::EDQUOT) => ErrorClass::Quota,
+                Some(libc::EROFS) => ErrorClass::ReadOnly,
+                _ => ErrorClass::Io,
+            },
+        };
+        IoError { class, message: context.into(), source: Some(err) }
+    }
+}
+
+impl fmt::Display for IoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.class.mpi_name(), self.message)?;
+        if let Some(src) = &self.source {
+            write!(f, " ({src})")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for IoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_ref().map(|e| e as _)
+    }
+}
+
+/// Result alias for the io layer.
+pub type Result<T> = std::result::Result<T, IoError>;
+
+/// Shorthand constructors used across the io layer.
+macro_rules! err_ctor {
+    ($fn_name:ident, $class:ident) => {
+        /// Construct an error of the corresponding class.
+        pub fn $fn_name(msg: impl Into<String>) -> IoError {
+            IoError::new(ErrorClass::$class, msg)
+        }
+    };
+}
+
+err_ctor!(err_file, File);
+err_ctor!(err_not_same, NotSame);
+err_ctor!(err_amode, Amode);
+err_ctor!(err_unsupported_datarep, UnsupportedDatarep);
+err_ctor!(err_unsupported_op, UnsupportedOperation);
+err_ctor!(err_no_such_file, NoSuchFile);
+err_ctor!(err_file_exists, FileExists);
+err_ctor!(err_bad_file, BadFile);
+err_ctor!(err_access, Access);
+err_ctor!(err_read_only, ReadOnly);
+err_ctor!(err_file_in_use, FileInUse);
+err_ctor!(err_dup_datarep, DupDatarep);
+err_ctor!(err_conversion, Conversion);
+err_ctor!(err_io, Io);
+err_ctor!(err_request, Request);
+err_ctor!(err_arg, Arg);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_have_mpi_names() {
+        assert_eq!(ErrorClass::NoSuchFile.mpi_name(), "MPI_ERR_NO_SUCH_FILE");
+        assert_eq!(ErrorClass::Amode.mpi_name(), "MPI_ERR_AMODE");
+    }
+
+    #[test]
+    fn os_error_mapping() {
+        let e = IoError::from_os(std::io::Error::from(std::io::ErrorKind::NotFound), "open");
+        assert_eq!(e.class, ErrorClass::NoSuchFile);
+        let e = IoError::from_os(std::io::Error::from_raw_os_error(libc::ENOSPC), "write");
+        assert_eq!(e.class, ErrorClass::NoSpace);
+        let e = IoError::from_os(
+            std::io::Error::from(std::io::ErrorKind::PermissionDenied),
+            "open",
+        );
+        assert_eq!(e.class, ErrorClass::Access);
+    }
+
+    #[test]
+    fn display_includes_class_and_message() {
+        let e = err_amode("RDONLY|WRONLY is invalid");
+        let s = e.to_string();
+        assert!(s.contains("MPI_ERR_AMODE"), "{s}");
+        assert!(s.contains("RDONLY"), "{s}");
+    }
+}

@@ -1,0 +1,585 @@
+//! The `mpj.File` class (§3.5.1): file manipulation, views, consistency.
+//!
+//! "We note that the mpj.File class used in the method signatures is not
+//! to be confused with java.io.File" — nor with `std::fs::File` here.
+//! `File::open` is a collective over an intracommunicator; every rank
+//! holds its own handle onto the same shared file. Data-access routines
+//! live in the sibling modules (`access`, `collective`, `shared`,
+//! `split`) as `impl File` blocks.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::comm::datatype::{Datatype, Offset};
+use crate::comm::{Comm, Group};
+use crate::io::datarep::DataRep;
+use crate::io::errors::{
+    err_amode, err_arg, err_file, err_not_same, err_read_only, Result,
+};
+use crate::io::hints::{keys, Info};
+use crate::io::view::FileView;
+use crate::storage::local::LocalBackend;
+use crate::storage::nfs::NfsBackend;
+use crate::storage::san::SanBackend;
+use crate::storage::{Backend, OpenOptions, StorageFile};
+use crate::strategy::{self, AccessStrategy};
+
+/// File access modes (`MPJ.MODE_*`, §7.2.2.1). Combine with `|`.
+pub mod amode {
+    /// Create the file if it does not exist.
+    pub const CREATE: u32 = 0x001;
+    /// Read-only access.
+    pub const RDONLY: u32 = 0x002;
+    /// Write-only access.
+    pub const WRONLY: u32 = 0x004;
+    /// Read/write access.
+    pub const RDWR: u32 = 0x008;
+    /// Delete the file when it is closed.
+    pub const DELETE_ON_CLOSE: u32 = 0x010;
+    /// The file is not opened concurrently elsewhere.
+    pub const UNIQUE_OPEN: u32 = 0x020;
+    /// Fail if the file exists.
+    pub const EXCL: u32 = 0x040;
+    /// All writes append (unsupported-operation for data access with
+    /// explicit offsets).
+    pub const APPEND: u32 = 0x080;
+    /// The file will be accessed sequentially.
+    pub const SEQUENTIAL: u32 = 0x100;
+}
+
+/// Seek update modes (`MPJ.SEEK_*`, §7.2.4.3).
+pub mod seek {
+    /// Set the pointer to `offset`.
+    pub const SET: i32 = 0;
+    /// Set the pointer to current + `offset`.
+    pub const CUR: i32 = 1;
+    /// Set the pointer to end-of-file + `offset`.
+    pub const END: i32 = 2;
+}
+
+/// Split-collective state (at most one active per handle, §7.2.4.5).
+pub(crate) enum SplitPending {
+    /// A pending collective read; payload carried back at `*End`.
+    Read { kind: &'static str, req: crate::io::engine::Request<Vec<u8>> },
+    /// A pending collective write.
+    Write { kind: &'static str, req: crate::io::engine::Request<()> },
+}
+
+/// An open parallel file (`mpj.File`).
+pub struct File<'c> {
+    pub(crate) comm: &'c dyn Comm,
+    pub(crate) storage: Arc<dyn StorageFile>,
+    pub(crate) backend: Arc<dyn Backend>,
+    pub(crate) path: String,
+    pub(crate) amode: u32,
+    pub(crate) info: Mutex<Info>,
+    pub(crate) view: Mutex<Arc<FileView>>,
+    /// Individual file pointer, in etype units relative to the view.
+    pub(crate) indiv_ptr: Mutex<i64>,
+    pub(crate) atomic: AtomicBool,
+    pub(crate) strategy: Mutex<Arc<dyn AccessStrategy>>,
+    /// Sidecar path holding the shared file pointer.
+    pub(crate) sfp_path: String,
+    pub(crate) split: Mutex<Option<SplitPending>>,
+    pub(crate) closed: AtomicBool,
+}
+
+/// Resolve the backend named by the info hints.
+pub fn backend_from_info(info: &Info) -> Result<Arc<dyn Backend>> {
+    let profile = info.get(keys::BACKEND_PROFILE).unwrap_or("instant");
+    let kind = info.get(keys::BACKEND).unwrap_or("local");
+    match (kind, profile) {
+        ("local", "instant") => Ok(Arc::new(LocalBackend::instant())),
+        ("local", "barq") => Ok(Arc::new(LocalBackend::barq())),
+        ("nfs", "instant") => Ok(Arc::new(NfsBackend::instant())),
+        ("nfs", "barq") => Ok(Arc::new(NfsBackend::barq())),
+        ("nfs", "rcms") => Ok(Arc::new(NfsBackend::rcms())),
+        ("san", "instant") => Ok(Arc::new(SanBackend::instant())),
+        ("san", "rcms") => Ok(Arc::new(SanBackend::rcms())),
+        (k, p) => Err(err_arg(format!("unknown backend/profile {k:?}/{p:?}"))),
+    }
+}
+
+impl<'c> File<'c> {
+    // ------------------------------------------------------------------
+    // §7.2.2 File manipulation
+    // ------------------------------------------------------------------
+
+    /// Open a file collectively (`MPI_FILE_OPEN`). All ranks of `comm`
+    /// must pass identical `filename` and `amode` (checked; violations
+    /// raise `MPI_ERR_NOT_SAME` per §7.2.6.4).
+    pub fn open(
+        comm: &'c dyn Comm,
+        filename: &str,
+        mode: u32,
+        info: Info,
+    ) -> Result<File<'c>> {
+        let backend = backend_from_info(&info)?;
+        Self::open_with_backend(comm, filename, mode, info, backend)
+    }
+
+    /// [`File::open`] with an explicit storage backend (the bench harness
+    /// path; `Info` hints can only name the built-in profiles).
+    pub fn open_with_backend(
+        comm: &'c dyn Comm,
+        filename: &str,
+        mode: u32,
+        info: Info,
+        backend: Arc<dyn Backend>,
+    ) -> Result<File<'c>> {
+        validate_amode(mode)?;
+        // Collective argument check: every rank must agree on
+        // (filename, amode).
+        let mut sig = mode.to_le_bytes().to_vec();
+        sig.extend_from_slice(filename.as_bytes());
+        let all = comm.allgather(&sig);
+        if all.iter().any(|s| *s != sig) {
+            return Err(err_not_same("fileOpen: filename/amode differ across ranks"));
+        }
+
+        let opts = OpenOptions {
+            read: mode & (amode::RDONLY | amode::RDWR) != 0,
+            write: mode & (amode::WRONLY | amode::RDWR) != 0,
+            create: mode & amode::CREATE != 0,
+            excl: mode & amode::EXCL != 0,
+            truncate: false,
+        };
+        // Rank 0 performs the create (and the EXCL check) so EXCL races
+        // between ranks of one open cannot trip each other; the rest open
+        // without CREATE after the barrier.
+        let sfp_path = format!("{filename}.jpio-sfp");
+        let storage = if comm.rank() == 0 {
+            let st = backend.open(filename, opts);
+            // Initialize the shared-file-pointer sidecar.
+            if st.is_ok() && !std::path::Path::new(&sfp_path).exists() {
+                let _ = std::fs::write(&sfp_path, 0u64.to_le_bytes());
+            }
+            let ok = st.is_ok() as i64;
+            comm.bcast(0, &mut ok.to_le_bytes().to_vec());
+            comm.barrier();
+            st?
+        } else {
+            let mut flag = Vec::new();
+            comm.bcast(0, &mut flag);
+            let rank0_ok = i64::from_le_bytes(flag[..8].try_into().unwrap()) == 1;
+            comm.barrier();
+            if !rank0_ok {
+                return Err(err_file("fileOpen failed at rank 0"));
+            }
+            let mut opts2 = opts;
+            opts2.create = false;
+            opts2.excl = false;
+            backend.open(filename, opts2)?
+        };
+
+        let strategy_name = info.get(keys::ACCESS_STYLE).unwrap_or("view_buffer");
+        let strategy: Arc<dyn AccessStrategy> = Arc::from(strategy::by_name(strategy_name)?);
+        Ok(File {
+            comm,
+            storage,
+            backend,
+            path: filename.to_string(),
+            amode: mode,
+            info: Mutex::new(info),
+            view: Mutex::new(Arc::new(FileView::default())),
+            indiv_ptr: Mutex::new(0),
+            atomic: AtomicBool::new(false),
+            strategy: Mutex::new(strategy),
+            sfp_path,
+            split: Mutex::new(None),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Close the file collectively (`MPI_FILE_CLOSE`). Completes pending
+    /// split-collective work, synchronizes, and honours
+    /// `MODE_DELETE_ON_CLOSE`.
+    pub fn close(&self) -> Result<()> {
+        self.check_open()?;
+        // A pending split collective at close is erroneous in MPI; we
+        // complete it defensively instead of leaking the worker.
+        if let Some(p) = self.split.lock().unwrap().take() {
+            match p {
+                SplitPending::Read { req, .. } => {
+                    let _ = req.wait();
+                }
+                SplitPending::Write { req, .. } => {
+                    let _ = req.wait();
+                }
+            }
+        }
+        self.closed.store(true, Ordering::SeqCst);
+        self.comm.barrier();
+        if self.amode & amode::DELETE_ON_CLOSE != 0 && self.comm.rank() == 0 {
+            self.backend.delete(&self.path)?;
+            let _ = std::fs::remove_file(&self.sfp_path);
+        }
+        self.comm.barrier();
+        Ok(())
+    }
+
+    /// Delete a file by name (`MPI_FILE_DELETE`, §7.2.2.3).
+    pub fn delete(filename: &str, info: &Info) -> Result<()> {
+        let backend = backend_from_info(info)?;
+        backend.delete(filename)?;
+        let _ = std::fs::remove_file(format!("{filename}.jpio-sfp"));
+        Ok(())
+    }
+
+    /// Resize the file (`MPI_FILE_SET_SIZE`, collective).
+    pub fn set_size(&self, size: Offset) -> Result<()> {
+        self.check_open()?;
+        self.check_writable()?;
+        if size < 0 {
+            return Err(err_arg(format!("setSize: negative size {size}")));
+        }
+        if self.comm.rank() == 0 {
+            self.storage.set_size(size as u64)?;
+        }
+        self.comm.barrier();
+        Ok(())
+    }
+
+    /// Preallocate storage (`MPI_FILE_PREALLOCATE`, collective).
+    pub fn preallocate(&self, size: Offset) -> Result<()> {
+        self.check_open()?;
+        self.check_writable()?;
+        if size < 0 {
+            return Err(err_arg(format!("preallocate: negative size {size}")));
+        }
+        if self.comm.rank() == 0 {
+            self.storage.preallocate(size as u64)?;
+        }
+        self.comm.barrier();
+        Ok(())
+    }
+
+    /// Current file size in bytes (`MPI_FILE_GET_SIZE`).
+    pub fn get_size(&self) -> Result<Offset> {
+        self.check_open()?;
+        Ok(self.storage.size()? as Offset)
+    }
+
+    /// The group of ranks that opened the file (`MPI_FILE_GET_GROUP`).
+    pub fn get_group(&self) -> Group {
+        self.comm.group()
+    }
+
+    /// The access mode of the open (`MPI_FILE_GET_AMODE`).
+    pub fn get_amode(&self) -> u32 {
+        self.amode
+    }
+
+    /// Set info hints (`MPI_FILE_SET_INFO`, collective). Strategy and
+    /// buffer-size hints take effect immediately.
+    pub fn set_info(&self, info: &Info) -> Result<()> {
+        self.check_open()?;
+        let mut cur = self.info.lock().unwrap();
+        cur.merge(info);
+        if let Some(style) = info.get(keys::ACCESS_STYLE) {
+            *self.strategy.lock().unwrap() = Arc::from(strategy::by_name(style)?);
+        }
+        Ok(())
+    }
+
+    /// Get the current info hints (`MPI_FILE_GET_INFO`).
+    pub fn get_info(&self) -> Info {
+        self.info.lock().unwrap().clone()
+    }
+
+    // ------------------------------------------------------------------
+    // §7.2.3 File views
+    // ------------------------------------------------------------------
+
+    /// Change the view (`MPI_FILE_SET_VIEW`, collective). Resets both the
+    /// individual and (collectively) the shared file pointer to zero.
+    pub fn set_view(
+        &self,
+        disp: Offset,
+        etype: &Datatype,
+        filetype: &Datatype,
+        datarep: &str,
+        info: &Info,
+    ) -> Result<()> {
+        self.check_open()?;
+        let rep = DataRep::resolve(datarep)?;
+        let view = FileView::new(disp, etype.clone(), filetype.clone(), rep)?;
+        *self.view.lock().unwrap() = Arc::new(view);
+        *self.indiv_ptr.lock().unwrap() = 0;
+        self.set_info(info)?;
+        // Collective: reset the shared pointer once.
+        self.comm.barrier();
+        if self.comm.rank() == 0 {
+            self.write_sfp(0)?;
+        }
+        self.comm.barrier();
+        Ok(())
+    }
+
+    /// Query the view (`MPI_FILE_GET_VIEW`): `(disp, etype, filetype,
+    /// datarep)`. (The Java binding smuggles `datarep` out through a
+    /// `StringBuffer`; Rust just returns it.)
+    pub fn get_view(&self) -> (Offset, Datatype, Datatype, String) {
+        let v = self.view.lock().unwrap();
+        (v.disp, v.etype.clone(), v.filetype.clone(), v.datarep.name().to_string())
+    }
+
+    // ------------------------------------------------------------------
+    // §7.2.6.1 Consistency
+    // ------------------------------------------------------------------
+
+    /// Enable/disable atomic mode (`MPI_FILE_SET_ATOMICITY`, collective).
+    pub fn set_atomicity(&self, flag: bool) -> Result<()> {
+        self.check_open()?;
+        // Collective agreement check.
+        let all = self.comm.allgather(&[flag as u8]);
+        if all.iter().any(|v| v[0] != flag as u8) {
+            return Err(err_not_same("setAtomicity: flag differs across ranks"));
+        }
+        self.atomic.store(flag, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Query atomic mode (`MPI_FILE_GET_ATOMICITY`).
+    pub fn get_atomicity(&self) -> bool {
+        self.atomic.load(Ordering::SeqCst)
+    }
+
+    /// Flush this process's writes to storage and make other processes'
+    /// synced updates visible (`MPI_FILE_SYNC`, collective).
+    pub fn sync(&self) -> Result<()> {
+        self.check_open()?;
+        self.storage.sync()
+    }
+
+    // ------------------------------------------------------------------
+    // Internal helpers shared by the data-access modules
+    // ------------------------------------------------------------------
+
+    pub(crate) fn check_open(&self) -> Result<()> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(err_file(format!("{}: file is closed", self.path)));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn check_writable(&self) -> Result<()> {
+        if self.amode & (amode::WRONLY | amode::RDWR) == 0 {
+            return Err(err_read_only(format!("{}: opened RDONLY", self.path)));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn check_readable(&self) -> Result<()> {
+        if self.amode & (amode::RDONLY | amode::RDWR) == 0 {
+            return Err(crate::io::errors::err_amode(format!(
+                "{}: opened WRONLY",
+                self.path
+            )));
+        }
+        Ok(())
+    }
+
+    /// Snapshot the current view.
+    pub(crate) fn view_snapshot(&self) -> Arc<FileView> {
+        self.view.lock().unwrap().clone()
+    }
+
+    /// Snapshot the current strategy.
+    pub(crate) fn strategy_snapshot(&self) -> Arc<dyn AccessStrategy> {
+        self.strategy.lock().unwrap().clone()
+    }
+
+    /// Read the shared file pointer (etype units) from the sidecar.
+    pub(crate) fn read_sfp(&self) -> Result<i64> {
+        let bytes = std::fs::read(&self.sfp_path)
+            .map_err(|e| crate::io::errors::IoError::from_os(e, "shared pointer read"))?;
+        Ok(i64::from_le_bytes(bytes[..8].try_into().unwrap()))
+    }
+
+    /// Overwrite the shared file pointer.
+    pub(crate) fn write_sfp(&self, value: i64) -> Result<()> {
+        std::fs::write(&self.sfp_path, value.to_le_bytes())
+            .map_err(|e| crate::io::errors::IoError::from_os(e, "shared pointer write"))
+    }
+}
+
+impl Drop for File<'_> {
+    fn drop(&mut self) {
+        // Non-collective safety net; proper shutdown is close().
+        if let Some(p) = self.split.get_mut().unwrap().take() {
+            match p {
+                SplitPending::Read { req, .. } => drop(req.wait()),
+                SplitPending::Write { req, .. } => drop(req.wait()),
+            }
+        }
+    }
+}
+
+/// Validate an amode combination (§7.2.2.1).
+pub fn validate_amode(mode: u32) -> Result<()> {
+    let access = mode & (amode::RDONLY | amode::WRONLY | amode::RDWR);
+    let n_access = access.count_ones();
+    if n_access != 1 {
+        return Err(err_amode(format!(
+            "exactly one of RDONLY|WRONLY|RDWR required (got {n_access})"
+        )));
+    }
+    if mode & amode::RDONLY != 0 && mode & (amode::CREATE | amode::EXCL) != 0 {
+        return Err(err_amode("RDONLY cannot be combined with CREATE or EXCL"));
+    }
+    if mode & amode::RDWR != 0 && mode & amode::SEQUENTIAL != 0 {
+        return Err(err_amode("SEQUENTIAL cannot be combined with RDWR"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::comm::Comm;
+    use crate::io::errors::ErrorClass;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-file-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn amode_validation() {
+        assert!(validate_amode(amode::RDWR | amode::CREATE).is_ok());
+        assert!(validate_amode(amode::RDONLY).is_ok());
+        assert_eq!(validate_amode(0).unwrap_err().class, ErrorClass::Amode);
+        assert_eq!(
+            validate_amode(amode::RDONLY | amode::RDWR).unwrap_err().class,
+            ErrorClass::Amode
+        );
+        assert_eq!(
+            validate_amode(amode::RDONLY | amode::CREATE).unwrap_err().class,
+            ErrorClass::Amode
+        );
+        assert_eq!(
+            validate_amode(amode::RDWR | amode::SEQUENTIAL).unwrap_err().class,
+            ErrorClass::Amode
+        );
+    }
+
+    #[test]
+    fn collective_open_close_lifecycle() {
+        let path = tmp("lifecycle");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            assert_eq!(f.get_amode(), amode::RDWR | amode::CREATE);
+            assert_eq!(f.get_group().size(), 4);
+            f.close().unwrap();
+            // Use-after-close is MPI_ERR_FILE.
+            assert_eq!(f.get_size().unwrap_err().class, ErrorClass::File);
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn delete_on_close_removes_the_file() {
+        let path = tmp("doc");
+        threads::run(2, |c| {
+            let f = File::open(
+                c,
+                &path,
+                amode::RDWR | amode::CREATE | amode::DELETE_ON_CLOSE,
+                Info::null(),
+            )
+            .unwrap();
+            f.close().unwrap();
+        });
+        assert!(!std::path::Path::new(&path).exists());
+    }
+
+    #[test]
+    fn mismatched_amode_across_ranks_is_not_same() {
+        let path = tmp("mismatch");
+        threads::run(2, |c| {
+            let mode = if c.rank() == 0 {
+                amode::RDWR | amode::CREATE
+            } else {
+                amode::RDONLY
+            };
+            let err = File::open(c, &path, mode, Info::null()).map(|_| ()).unwrap_err();
+            assert_eq!(err.class, ErrorClass::NotSame);
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn size_preallocate_collective() {
+        let path = tmp("size");
+        threads::run(3, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_size(8192).unwrap();
+            assert_eq!(f.get_size().unwrap(), 8192);
+            f.preallocate(16384).unwrap();
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn rdonly_rejects_resize() {
+        let path = tmp("ro");
+        std::fs::write(&path, b"existing").unwrap();
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+            assert_eq!(f.set_size(10).unwrap_err().class, ErrorClass::ReadOnly);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn info_updates_swap_strategy() {
+        let path = tmp("info");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            assert_eq!(f.strategy_snapshot().name(), "view_buffer");
+            f.set_info(&Info::from([(keys::ACCESS_STYLE, "mapped")])).unwrap();
+            assert_eq!(f.strategy_snapshot().name(), "mapped");
+            assert_eq!(f.get_info().get(keys::ACCESS_STYLE), Some("mapped"));
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn set_view_resets_pointers_and_validates() {
+        let path = tmp("view");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(64, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let (disp, etype, _ft, rep) = f.get_view();
+            assert_eq!(disp, 64);
+            assert_eq!(etype, Datatype::INT);
+            assert_eq!(rep, "native");
+            // Invalid datarep.
+            let err = f
+                .set_view(0, &Datatype::INT, &Datatype::INT, "klingon", &Info::null())
+                .map(|_| ())
+                .unwrap_err();
+            assert_eq!(err.class, ErrorClass::UnsupportedDatarep);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn atomicity_round_trip_and_collective_check() {
+        let path = tmp("atomic");
+        threads::run(3, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            assert!(!f.get_atomicity());
+            f.set_atomicity(true).unwrap();
+            assert!(f.get_atomicity());
+            f.set_atomicity(false).unwrap();
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+}

@@ -1,0 +1,156 @@
+//! The Info object (`mpj.Info`, §7.2.2.8) — implementation hints.
+//!
+//! "We will prove implementation of Info class to apply info hints for
+//! different file systems" (§5 future work) — implemented here. Hints
+//! follow the ROMIO naming convention where one exists (`cb_buffer_size`,
+//! `cb_nodes`, `ind_rd_buffer_size`, ...) plus jpio-specific keys for
+//! backend/strategy selection.
+
+use std::collections::BTreeMap;
+
+/// Key/value hints attached to a file at open or via `setInfo`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Info {
+    map: BTreeMap<String, String>,
+}
+
+/// Hint keys understood by this implementation.
+pub mod keys {
+    /// Access strategy: `view_buffer` (default) | `mapped` | `bulk` | `per_item`.
+    pub const ACCESS_STYLE: &str = "access_style";
+    /// Collective buffering (two-phase I/O): `true` (default) | `false`.
+    pub const COLLECTIVE_BUFFERING: &str = "romio_cb_read";
+    /// Collective buffer size per aggregator, bytes (ROMIO `cb_buffer_size`).
+    pub const CB_BUFFER_SIZE: &str = "cb_buffer_size";
+    /// Number of aggregator ranks (ROMIO `cb_nodes`).
+    pub const CB_NODES: &str = "cb_nodes";
+    /// Independent-read data-sieving buffer, bytes.
+    pub const IND_RD_BUFFER_SIZE: &str = "ind_rd_buffer_size";
+    /// Independent-write staging buffer, bytes.
+    pub const IND_WR_BUFFER_SIZE: &str = "ind_wr_buffer_size";
+    /// Data sieving for independent reads: `enable` (default) | `disable`.
+    pub const DATA_SIEVING: &str = "romio_ds_read";
+    /// Storage backend: `local` (default) | `nfs` | `san`.
+    pub const BACKEND: &str = "jpio_backend";
+    /// Backend performance profile: `instant` (default) | `barq` | `rcms`.
+    pub const BACKEND_PROFILE: &str = "jpio_backend_profile";
+    /// File-system striping factor (accepted, unused — single device).
+    pub const STRIPING_FACTOR: &str = "striping_factor";
+}
+
+impl Info {
+    /// Empty info (`MPJ.INFO_NULL`).
+    pub fn null() -> Info {
+        Info::default()
+    }
+
+    /// Set a hint (`MPI_Info_set`).
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<String>) -> &mut Self {
+        self.map.insert(key.into(), value.into());
+        self
+    }
+
+    /// Builder-style set.
+    pub fn with(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.set(key, value);
+        self
+    }
+
+    /// Get a hint (`MPI_Info_get`).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    /// Delete a hint (`MPI_Info_delete`); returns whether it existed.
+    pub fn delete(&mut self, key: &str) -> bool {
+        self.map.remove(key).is_some()
+    }
+
+    /// Number of hints (`MPI_Info_get_nkeys`).
+    pub fn nkeys(&self) -> usize {
+        self.map.len()
+    }
+
+    /// The nth key, in sorted order (`MPI_Info_get_nthkey`).
+    pub fn nthkey(&self, n: usize) -> Option<&str> {
+        self.map.keys().nth(n).map(|s| s.as_str())
+    }
+
+    /// Iterate hints.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Merge `other` into `self`, later values winning (`setInfo` semantics:
+    /// "hints may be set at open and amended later").
+    pub fn merge(&mut self, other: &Info) {
+        for (k, v) in other.iter() {
+            self.map.insert(k.to_string(), v.to_string());
+        }
+    }
+
+    /// Typed getter: usize.
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Typed getter: boolean-ish (`true/enable/1` vs `false/disable/0`).
+    pub fn get_flag(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            "true" | "enable" | "1" | "yes" => Some(true),
+            "false" | "disable" | "0" | "no" => Some(false),
+            _ => None,
+        }
+    }
+}
+
+impl<const N: usize> From<[(&str, &str); N]> for Info {
+    fn from(pairs: [(&str, &str); N]) -> Info {
+        let mut i = Info::default();
+        for (k, v) in pairs {
+            i.set(k, v);
+        }
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_delete() {
+        let mut i = Info::null();
+        i.set(keys::CB_NODES, "4");
+        assert_eq!(i.get(keys::CB_NODES), Some("4"));
+        assert_eq!(i.get_usize(keys::CB_NODES), Some(4));
+        assert!(i.delete(keys::CB_NODES));
+        assert!(!i.delete(keys::CB_NODES));
+        assert_eq!(i.nkeys(), 0);
+    }
+
+    #[test]
+    fn flags_parse_romio_style() {
+        let i = Info::from([("romio_ds_read", "disable"), ("x", "enable")]);
+        assert_eq!(i.get_flag("romio_ds_read"), Some(false));
+        assert_eq!(i.get_flag("x"), Some(true));
+        assert_eq!(i.get_flag("missing"), None);
+    }
+
+    #[test]
+    fn nthkey_is_sorted() {
+        let i = Info::from([("b", "2"), ("a", "1")]);
+        assert_eq!(i.nthkey(0), Some("a"));
+        assert_eq!(i.nthkey(1), Some("b"));
+        assert_eq!(i.nthkey(2), None);
+    }
+
+    #[test]
+    fn merge_overwrites() {
+        let mut a = Info::from([("k", "old"), ("only_a", "1")]);
+        let b = Info::from([("k", "new")]);
+        a.merge(&b);
+        assert_eq!(a.get("k"), Some("new"));
+        assert_eq!(a.get("only_a"), Some("1"));
+    }
+}

@@ -1,0 +1,340 @@
+//! Data access with shared file pointers (§7.2.4.4).
+//!
+//! One shared pointer exists per collectively-opened file. It lives in a
+//! sidecar file (`<name>.jpio-sfp`) updated under an OS file lock, which
+//! makes the fetch-and-add atomic across *threads and processes alike* —
+//! the property the noncollective `readShared`/`writeShared` need
+//! ("serialization ... is guaranteed, but the order is nondeterministic").
+//!
+//! The ordered collectives (`READ_ORDERED`/`WRITE_ORDERED`) instead give
+//! each rank the prefix-sum offset of the ranks before it (rank order), a
+//! deterministic single pass over the pointer.
+
+use std::os::unix::io::AsRawFd;
+
+use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
+use crate::comm::Status;
+use crate::io::access::{read_payload, write_payload};
+use crate::io::engine::{self, Request};
+use crate::io::errors::{err_arg, IoError, Result};
+use crate::io::file::{seek, File};
+
+impl File<'_> {
+    /// Atomically fetch the shared pointer (etype units) and advance it by
+    /// `delta` etypes. Cross-process safe via flock on the sidecar.
+    pub(crate) fn sfp_fetch_add(&self, delta: i64) -> Result<i64> {
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&self.sfp_path)
+            .map_err(|e| IoError::from_os(e, "shared pointer sidecar"))?;
+        let fd = f.as_raw_fd();
+        if unsafe { libc::flock(fd, libc::LOCK_EX) } != 0 {
+            return Err(crate::io::errors::err_io("flock shared pointer"));
+        }
+        let result = (|| -> Result<i64> {
+            use std::os::unix::fs::FileExt;
+            let mut buf = [0u8; 8];
+            f.read_exact_at(&mut buf, 0)
+                .map_err(|e| IoError::from_os(e, "shared pointer read"))?;
+            let cur = i64::from_le_bytes(buf);
+            f.write_all_at(&(cur + delta).to_le_bytes(), 0)
+                .map_err(|e| IoError::from_os(e, "shared pointer write"))?;
+            Ok(cur)
+        })();
+        unsafe { libc::flock(fd, libc::LOCK_UN) };
+        result
+    }
+
+    /// `MPI_FILE_READ_SHARED`: blocking noncollective read at the shared
+    /// pointer; the pointer advances by the requested etype count.
+    pub fn read_shared(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_readable()?;
+        let view = self.view_snapshot();
+        let etypes = view.bytes_to_etypes(count * datatype.size());
+        let off = self.sfp_fetch_add(etypes)?;
+        self.read_at(off, buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_WRITE_SHARED`: blocking noncollective write at the
+    /// shared pointer.
+    pub fn write_shared(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_writable()?;
+        let view = self.view_snapshot();
+        let etypes = view.bytes_to_etypes(count * datatype.size());
+        let off = self.sfp_fetch_add(etypes)?;
+        self.write_at(off, buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_IREAD_SHARED`: nonblocking shared-pointer read.
+    pub fn iread_shared<T>(
+        &self,
+        buf: Vec<T>,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        self.check_open()?;
+        self.check_readable()?;
+        let view = self.view_snapshot();
+        let etypes = view.bytes_to_etypes(count * datatype.size());
+        // Pointer reservation is immediate (ordering guarantee); only the
+        // transfer is asynchronous.
+        let off = self.sfp_fetch_add(etypes)?;
+        self.iread_at(off, buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_IWRITE_SHARED`: nonblocking shared-pointer write.
+    pub fn iwrite_shared(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<()>> {
+        self.check_open()?;
+        self.check_writable()?;
+        let view = self.view_snapshot();
+        let etypes = view.bytes_to_etypes(count * datatype.size());
+        let off = self.sfp_fetch_add(etypes)?;
+        self.iwrite_at(off, buf, buf_offset, count, datatype)
+    }
+
+    /// Offsets for an ordered collective: returns `(my_offset, total)`
+    /// in etypes and advances the shared pointer by `total` (once).
+    pub(crate) fn ordered_offsets(&self, my_etypes: i64) -> Result<i64> {
+        // Base: rank 0 reads the pointer; everyone gets base + prefix.
+        let mut base_bytes = if self.comm.rank() == 0 {
+            self.read_sfp()?.to_le_bytes().to_vec()
+        } else {
+            Vec::new()
+        };
+        self.comm.bcast(0, &mut base_bytes);
+        let base = i64::from_le_bytes(base_bytes[..8].try_into().unwrap());
+        let prefix = self.comm.exscan_sum_i64(my_etypes);
+        let total = self.comm.allreduce_i64(crate::comm::ReduceOp::Sum, my_etypes);
+        // Advance once: rank 0, after everyone has the base.
+        self.comm.barrier();
+        if self.comm.rank() == 0 {
+            self.write_sfp(base + total)?;
+        }
+        Ok(base + prefix)
+    }
+
+    /// `MPI_FILE_READ_ORDERED`: collective shared-pointer read in rank
+    /// order.
+    pub fn read_ordered(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_readable()?;
+        let view = self.view_snapshot();
+        let my = view.bytes_to_etypes(count * datatype.size());
+        let off = self.ordered_offsets(my)?;
+        let st = self.read_at(off, buf, buf_offset, count, datatype)?;
+        self.comm.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_FILE_WRITE_ORDERED`: collective shared-pointer write in rank
+    /// order.
+    pub fn write_ordered(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.check_open()?;
+        self.check_writable()?;
+        let view = self.view_snapshot();
+        let my = view.bytes_to_etypes(count * datatype.size());
+        let off = self.ordered_offsets(my)?;
+        let st = self.write_at(off, buf, buf_offset, count, datatype)?;
+        self.comm.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_FILE_SEEK_SHARED`: collective seek of the shared pointer. All
+    /// ranks must pass identical arguments.
+    pub fn seek_shared(&self, offset: Offset, whence: i32) -> Result<()> {
+        self.check_open()?;
+        let mut sig = offset.to_le_bytes().to_vec();
+        sig.extend_from_slice(&whence.to_le_bytes());
+        let all = self.comm.allgather(&sig);
+        if all.iter().any(|s| *s != sig) {
+            return Err(crate::io::errors::err_not_same(
+                "seekShared: offset/whence differ across ranks",
+            ));
+        }
+        if self.comm.rank() == 0 {
+            let new = match whence {
+                seek::SET => offset,
+                seek::CUR => self.read_sfp()? + offset,
+                seek::END => self.etypes_in_file()? + offset,
+                w => return Err(err_arg(format!("seekShared: invalid whence {w}"))),
+            };
+            if new < 0 {
+                return Err(err_arg(format!("seekShared: negative position {new}")));
+            }
+            self.write_sfp(new)?;
+        }
+        self.comm.barrier();
+        Ok(())
+    }
+
+    /// `MPI_FILE_GET_POSITION_SHARED`: current shared pointer (etypes).
+    pub fn get_position_shared(&self) -> Result<Offset> {
+        self.check_open()?;
+        self.read_sfp()
+    }
+}
+
+// Re-exported for the split module: a write at a precomputed etype offset
+// running fully on the engine.
+pub(crate) fn async_write_at(
+    ctx: crate::io::access::TransferCtx,
+    etype_off: i64,
+    payload: Vec<u8>,
+) -> Request<()> {
+    engine::submit(move || (write_payload(&ctx, etype_off, &payload), ()))
+}
+
+/// Async read at a precomputed offset, returning the packed payload.
+pub(crate) fn async_read_at(
+    ctx: crate::io::access::TransferCtx,
+    etype_off: i64,
+    payload_len: usize,
+) -> Request<Vec<u8>> {
+    engine::submit(move || {
+        let mut payload = vec![0u8; payload_len];
+        match read_payload(&ctx, etype_off, &mut payload) {
+            Ok(got) => (Ok(Status::of_bytes(got)), payload),
+            Err(e) => (Err(e), payload),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::comm::Comm;
+    use crate::io::file::amode;
+    use crate::io::hints::Info;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-shared-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn shared_writes_never_overlap() {
+        let path = tmp("nooverlap");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            // Each rank writes 50 ints of its rank id, 4 times, racing.
+            let mine = vec![c.rank() as i32; 50];
+            for _ in 0..4 {
+                f.write_shared(mine.as_slice(), 0, 50, &Datatype::INT).unwrap();
+            }
+            c.barrier();
+            assert_eq!(f.get_position_shared().unwrap(), 4 * 4 * 50);
+            f.close().unwrap();
+        });
+        // The file must consist of 16 runs of 50 equal ints, 4 per rank.
+        let raw = std::fs::read(&path).unwrap();
+        let ints: Vec<i32> =
+            raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(ints.len(), 800);
+        let mut counts = [0usize; 4];
+        for chunk in ints.chunks_exact(50) {
+            assert!(chunk.iter().all(|&v| v == chunk[0]), "interleaved run: {chunk:?}");
+            counts[chunk[0] as usize] += 1;
+        }
+        assert_eq!(counts, [4, 4, 4, 4]);
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn ordered_write_is_rank_ordered() {
+        let path = tmp("ordered");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            // Variable sizes per rank: rank r writes r+1 ints of value r.
+            let mine = vec![c.rank() as i32; c.rank() + 1];
+            f.write_ordered(mine.as_slice(), 0, c.rank() + 1, &Datatype::INT).unwrap();
+            c.barrier();
+            // Second round: ordered reads see rank-ordered data.
+            f.seek_shared(0, seek::SET).unwrap();
+            let mut back = vec![-1i32; c.rank() + 1];
+            f.read_ordered(back.as_mut_slice(), 0, c.rank() + 1, &Datatype::INT).unwrap();
+            assert_eq!(back, mine);
+            f.close().unwrap();
+        });
+        let raw = std::fs::read(&path).unwrap();
+        let ints: Vec<i32> =
+            raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(ints, vec![0, 1, 1, 2, 2, 2, 3, 3, 3, 3]);
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn seek_shared_and_position() {
+        let path = tmp("seek");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            f.seek_shared(10, seek::SET).unwrap();
+            assert_eq!(f.get_position_shared().unwrap(), 10);
+            f.seek_shared(-3, seek::CUR).unwrap();
+            assert_eq!(f.get_position_shared().unwrap(), 7);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn nonblocking_shared_ops() {
+        let path = tmp("nbshared");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let mine = vec![(c.rank() + 7) as i32; 32];
+            let req = f.iwrite_shared(mine.as_slice(), 0, 32, &Datatype::INT).unwrap();
+            let (st, ()) = req.wait().unwrap();
+            assert_eq!(st.bytes, 128);
+            c.barrier();
+            f.seek_shared(0, seek::SET).unwrap();
+            let req = f.iread_shared(vec![0i32; 32], 0, 32, &Datatype::INT).unwrap();
+            let (st, buf) = req.wait().unwrap();
+            assert_eq!(st.bytes, 128);
+            assert!(buf.iter().all(|&v| v == 7 || v == 8));
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+}

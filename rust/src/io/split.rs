@@ -1,0 +1,409 @@
+//! Split collective data access (§7.2.4.5): `*_BEGIN` / `*_END` pairs.
+//!
+//! MPI's rules, all enforced here: at most one split collective may be
+//! active per file handle; the `END` call must match the pending `BEGIN`;
+//! the buffer must not be touched in between (expressed in Rust by moving
+//! ownership through the request, like the nonblocking ops).
+//!
+//! For writes, the communication (exchange) phase runs in `BEGIN` and the
+//! storage phase runs on the request engine — so computation between
+//! `BEGIN` and `END` genuinely overlaps the file I/O, which is the whole
+//! point of the double-buffering pattern in §7.2.9.1. Reads complete
+//! their aggregation in `BEGIN` (the reply exchange needs the
+//! communicator, which cannot leave the calling thread) and hand the
+//! payload to `END`.
+
+use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
+use crate::comm::Status;
+use crate::io::access::{pack_payload, unpack_payload};
+use crate::io::collective::{collective_read, exchange_write};
+use crate::io::engine::{self, Request};
+use crate::io::errors::{err_io, err_request, Result};
+use crate::io::file::{File, SplitPending};
+
+macro_rules! check_no_pending {
+    ($self:ident) => {{
+        let pending = $self.split.lock().unwrap();
+        if pending.is_some() {
+            return Err(err_request(
+                "a split collective is already active on this file handle",
+            ));
+        }
+        drop(pending);
+    }};
+}
+
+impl File<'_> {
+    fn stash(&self, p: SplitPending) {
+        *self.split.lock().unwrap() = Some(p);
+    }
+
+    fn take_pending(&self, want: &'static str) -> Result<SplitPending> {
+        let mut slot = self.split.lock().unwrap();
+        match slot.take() {
+            None => Err(err_request(format!("{want}: no split collective is active"))),
+            Some(p) => {
+                let kind = match &p {
+                    SplitPending::Read { kind, .. } | SplitPending::Write { kind, .. } => kind,
+                };
+                if *kind != want {
+                    let msg = format!("{want} does not match pending {kind}");
+                    *slot = Some(p);
+                    return Err(err_request(msg));
+                }
+                Ok(p)
+            }
+        }
+    }
+
+    fn begin_write(
+        &self,
+        kind: &'static str,
+        offset: Offset,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<()> {
+        self.check_open()?;
+        self.check_writable()?;
+        check_no_pending!(self);
+        let ctx = self.transfer_ctx();
+        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
+        let (nodes, cb, on) = self.cb_params();
+        // Exchange phase: synchronous (uses the communicator).
+        let (work, bytes) = exchange_write(self.comm, &ctx, nodes, cb, on, offset, &payload)?;
+        // I/O phase: on the engine.
+        let req = engine::submit(move || match work.execute(&ctx) {
+            Ok(()) => (Ok(Status::of_bytes(bytes)), ()),
+            Err(e) => (Err(e), ()),
+        });
+        self.stash(SplitPending::Write { kind, req });
+        Ok(())
+    }
+
+    fn end_write(&self, kind: &'static str) -> Result<Status> {
+        match self.take_pending(kind)? {
+            SplitPending::Write { req, .. } => {
+                let (st, ()) = req.wait()?;
+                // Collective completion.
+                self.comm.barrier();
+                Ok(st)
+            }
+            SplitPending::Read { .. } => unreachable!("kind checked in take_pending"),
+        }
+    }
+
+    fn begin_read(
+        &self,
+        kind: &'static str,
+        offset: Offset,
+        payload_len: usize,
+    ) -> Result<()> {
+        self.check_open()?;
+        self.check_readable()?;
+        check_no_pending!(self);
+        let ctx = self.transfer_ctx();
+        let (nodes, cb, on) = self.cb_params();
+        let mut payload = vec![0u8; payload_len];
+        let got = collective_read(self.comm, &ctx, nodes, cb, on, offset, &mut payload)?;
+        payload.truncate(payload_len);
+        let req = Request::ready(Status::of_bytes(got), payload);
+        self.stash(SplitPending::Read { kind, req });
+        Ok(())
+    }
+
+    fn end_read(
+        &self,
+        kind: &'static str,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        match self.take_pending(kind)? {
+            SplitPending::Read { req, .. } => {
+                let (st, payload) = req.wait()?;
+                if payload.len() < count * datatype.size() {
+                    return Err(err_io("split read payload shorter than END request"));
+                }
+                unpack_payload(buf, buf_offset, count, datatype, &payload, st.bytes)?;
+                Ok(st)
+            }
+            SplitPending::Write { .. } => unreachable!("kind checked in take_pending"),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Explicit offsets (§7.2.4.5)
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_READ_AT_ALL_BEGIN`.
+    pub fn read_at_all_begin(
+        &self,
+        offset: Offset,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<()> {
+        self.begin_read("readAtAllEnd", offset, count * datatype.size())
+    }
+
+    /// `MPI_FILE_READ_AT_ALL_END`.
+    pub fn read_at_all_end(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.end_read("readAtAllEnd", buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_WRITE_AT_ALL_BEGIN`.
+    pub fn write_at_all_begin(
+        &self,
+        offset: Offset,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<()> {
+        self.begin_write("writeAtAllEnd", offset, buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_WRITE_AT_ALL_END`.
+    pub fn write_at_all_end(&self) -> Result<Status> {
+        self.end_write("writeAtAllEnd")
+    }
+
+    // ------------------------------------------------------------------
+    // Individual file pointers (§7.2.4.5)
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_READ_ALL_BEGIN`.
+    pub fn read_all_begin(&self, count: usize, datatype: &Datatype) -> Result<()> {
+        let view = self.view_snapshot();
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let off = *ptr;
+        *ptr = off + view.bytes_to_etypes(count * datatype.size());
+        drop(ptr);
+        self.begin_read("readAllEnd", off, count * datatype.size())
+    }
+
+    /// `MPI_FILE_READ_ALL_END`.
+    pub fn read_all_end(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        self.end_read("readAllEnd", buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_WRITE_ALL_BEGIN`.
+    pub fn write_all_begin(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<()> {
+        let view = self.view_snapshot();
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let off = *ptr;
+        *ptr = off + view.bytes_to_etypes(count * datatype.size());
+        drop(ptr);
+        self.begin_write("writeAllEnd", off, buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_WRITE_ALL_END`.
+    pub fn write_all_end(&self) -> Result<Status> {
+        self.end_write("writeAllEnd")
+    }
+
+    // ------------------------------------------------------------------
+    // Shared file pointer, ordered (§7.2.4.5)
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_READ_ORDERED_BEGIN`.
+    pub fn read_ordered_begin(&self, count: usize, datatype: &Datatype) -> Result<()> {
+        self.check_open()?;
+        self.check_readable()?;
+        check_no_pending!(self);
+        let view = self.view_snapshot();
+        let my = view.bytes_to_etypes(count * datatype.size());
+        let off = self.ordered_offsets(my)?;
+        let ctx = self.transfer_ctx();
+        let req = crate::io::shared::async_read_at(ctx, off, count * datatype.size());
+        self.stash(SplitPending::Read { kind: "readOrderedEnd", req });
+        Ok(())
+    }
+
+    /// `MPI_FILE_READ_ORDERED_END`.
+    pub fn read_ordered_end(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let st = self.end_read("readOrderedEnd", buf, buf_offset, count, datatype)?;
+        self.comm.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_FILE_WRITE_ORDERED_BEGIN`.
+    pub fn write_ordered_begin(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<()> {
+        self.check_open()?;
+        self.check_writable()?;
+        check_no_pending!(self);
+        let view = self.view_snapshot();
+        let my = view.bytes_to_etypes(count * datatype.size());
+        let off = self.ordered_offsets(my)?;
+        let ctx = self.transfer_ctx();
+        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
+        let req = crate::io::shared::async_write_at(ctx, off, payload);
+        self.stash(SplitPending::Write { kind: "writeOrderedEnd", req });
+        Ok(())
+    }
+
+    /// `MPI_FILE_WRITE_ORDERED_END`.
+    pub fn write_ordered_end(&self) -> Result<Status> {
+        let st = self.end_write("writeOrderedEnd")?;
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::comm::Comm;
+    use crate::io::errors::ErrorClass;
+    use crate::io::file::amode;
+    use crate::io::hints::Info;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-split-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn split_write_then_read_roundtrip() {
+        let path = tmp("rt");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let r = c.rank() as i64;
+            let mine: Vec<i32> = (0..128).map(|i| (r * 128 + i) as i32).collect();
+            f.write_at_all_begin(r * 128, mine.as_slice(), 0, 128, &Datatype::INT).unwrap();
+            // ... overlapped computation would happen here ...
+            let st = f.write_at_all_end().unwrap();
+            assert_eq!(st.bytes, 512);
+            c.barrier();
+            f.read_at_all_begin(0, 512, &Datatype::INT).unwrap();
+            let mut all = vec![0i32; 512];
+            let st = f.read_at_all_end(all.as_mut_slice(), 0, 512, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 2048);
+            let want: Vec<i32> = (0..512).collect();
+            assert_eq!(all, want);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn individual_pointer_split_ops_advance_pointer() {
+        let path = tmp("indiv");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            // Both ranks write the same 64 ints collectively (overlap —
+            // same data, so deterministic).
+            let data: Vec<i32> = (0..64).collect();
+            f.write_all_begin(data.as_slice(), 0, 64, &Datatype::INT).unwrap();
+            f.write_all_end().unwrap();
+            assert_eq!(f.get_position().unwrap(), 64);
+            f.seek(0, crate::io::file::seek::SET).unwrap();
+            f.read_all_begin(64, &Datatype::INT).unwrap();
+            let mut back = vec![0i32; 64];
+            f.read_all_end(back.as_mut_slice(), 0, 64, &Datatype::INT).unwrap();
+            assert_eq!(back, data);
+            assert_eq!(f.get_position().unwrap(), 64);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn ordered_split_ops_are_rank_ordered() {
+        let path = tmp("ordered");
+        threads::run(3, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let mine = vec![c.rank() as i32; 10];
+            f.write_ordered_begin(mine.as_slice(), 0, 10, &Datatype::INT).unwrap();
+            f.write_ordered_end().unwrap();
+            c.barrier();
+            f.seek_shared(0, crate::io::file::seek::SET).unwrap();
+            f.read_ordered_begin(10, &Datatype::INT).unwrap();
+            let mut back = vec![-1i32; 10];
+            f.read_ordered_end(back.as_mut_slice(), 0, 10, &Datatype::INT).unwrap();
+            assert_eq!(back, mine);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn double_begin_is_rejected() {
+        let path = tmp("dbl");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let d = vec![1i32; 4];
+            f.write_at_all_begin(0, d.as_slice(), 0, 4, &Datatype::INT).unwrap();
+            let err =
+                f.write_at_all_begin(16, d.as_slice(), 0, 4, &Datatype::INT).unwrap_err();
+            assert_eq!(err.class, ErrorClass::Request);
+            f.write_at_all_end().unwrap();
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn mismatched_end_is_rejected_and_state_preserved() {
+        let path = tmp("mismatch");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let d = vec![1i32; 4];
+            f.write_at_all_begin(0, d.as_slice(), 0, 4, &Datatype::INT).unwrap();
+            let mut buf = vec![0i32; 4];
+            let err = f
+                .read_at_all_end(buf.as_mut_slice(), 0, 4, &Datatype::INT)
+                .unwrap_err();
+            assert_eq!(err.class, ErrorClass::Request);
+            // The pending write survives the bad end call.
+            f.write_at_all_end().unwrap();
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn end_without_begin_is_rejected() {
+        let path = tmp("nobegin");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            assert_eq!(f.write_at_all_end().unwrap_err().class, ErrorClass::Request);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+}

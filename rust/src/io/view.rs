@@ -1,0 +1,382 @@
+//! File views (§3.5.2 / §7.2.3): `disp` + `etype` + `filetype` + datarep.
+//!
+//! "The setView routine changes the process's view of the data in the
+//! file." A view tiles the file from byte `disp` with instances of
+//! `filetype` (whose holes belong to other processes); the data visible to
+//! this process is the sequence of `etype` elements inside the filetype
+//! payload. Offsets in every data-access routine are expressed in etype
+//! units relative to the current view — the machinery that lets N ranks
+//! interleave a shared file without overlapping.
+//!
+//! This module flattens `(disp, etype, filetype)` into absolute byte runs
+//! for the access engine, with a small cache so repeated same-shape
+//! accesses (the steady state of every bench) skip re-flattening.
+
+use std::sync::Mutex;
+
+use crate::comm::datatype::{Datatype, Prim, Segment};
+use crate::io::datarep::DataRep;
+use crate::io::errors::{err_arg, Result};
+
+/// A process's view of the file.
+#[derive(Debug)]
+pub struct FileView {
+    /// Absolute byte displacement of the view start.
+    pub disp: i64,
+    /// Elementary datatype: the unit of offsets and counts.
+    pub etype: Datatype,
+    /// File tiling type (payload positions belong to this process).
+    pub filetype: Datatype,
+    /// Data representation for file bytes.
+    pub datarep: DataRep,
+    /// Flattened filetype segments (one instance).
+    segments: Vec<Segment>,
+    /// Filetype extent (instance-to-instance stride in the file).
+    extent: i64,
+    /// Payload bytes per filetype instance.
+    payload_per_instance: usize,
+    /// Etypes per filetype instance.
+    etypes_per_instance: usize,
+    /// Run cache: (etype_offset, payload_bytes) → absolute runs.
+    cache: Mutex<Option<RunCacheEntry>>,
+}
+
+#[derive(Debug, Clone)]
+struct RunCacheEntry {
+    etype_offset: i64,
+    payload_bytes: usize,
+    runs: Vec<(u64, usize)>,
+}
+
+impl Clone for FileView {
+    fn clone(&self) -> Self {
+        FileView {
+            disp: self.disp,
+            etype: self.etype.clone(),
+            filetype: self.filetype.clone(),
+            datarep: self.datarep.clone(),
+            segments: self.segments.clone(),
+            extent: self.extent,
+            payload_per_instance: self.payload_per_instance,
+            etypes_per_instance: self.etypes_per_instance,
+            cache: Mutex::new(None),
+        }
+    }
+}
+
+impl Default for FileView {
+    /// The default view: `disp = 0`, `etype = filetype = BYTE`, native
+    /// representation (what `open` installs).
+    fn default() -> Self {
+        FileView::new(0, Datatype::BYTE, Datatype::BYTE, DataRep::Native).unwrap()
+    }
+}
+
+impl FileView {
+    /// Validate and build a view.
+    pub fn new(
+        disp: i64,
+        etype: Datatype,
+        filetype: Datatype,
+        datarep: DataRep,
+    ) -> Result<FileView> {
+        if disp < 0 {
+            return Err(err_arg(format!("setView: negative displacement {disp}")));
+        }
+        let esz = etype.size();
+        if esz == 0 {
+            return Err(err_arg("setView: zero-size etype"));
+        }
+        if filetype.size() % esz != 0 {
+            return Err(err_arg(format!(
+                "setView: filetype size {} is not a multiple of etype size {esz}",
+                filetype.size()
+            )));
+        }
+        // The filetype must be "derived from etype": every run holds the
+        // etype's primitive (needed for datarep conversion and the MPI
+        // type-matching rules, §7.2.6.5).
+        let eprim = etype.base_prim();
+        if !etype.is_homogeneous() {
+            return Err(err_arg("setView: heterogeneous etype is unsupported"));
+        }
+        let segments = filetype.segments();
+        if segments.iter().any(|s| s.prim != eprim) {
+            return Err(err_arg(format!(
+                "setView: filetype primitives do not match etype {}",
+                eprim.name()
+            )));
+        }
+        let extent = filetype.extent();
+        Ok(FileView {
+            disp,
+            payload_per_instance: filetype.size(),
+            etypes_per_instance: filetype.size() / esz,
+            segments,
+            extent,
+            etype,
+            filetype,
+            datarep,
+            cache: Mutex::new(None),
+        })
+    }
+
+    /// Etype size in bytes.
+    pub fn etype_size(&self) -> usize {
+        self.etype.size()
+    }
+
+    /// The element primitive of the view.
+    pub fn prim(&self) -> Prim {
+        self.etype.base_prim()
+    }
+
+    /// The single contiguous run of this access, when the filetype tiles
+    /// the file gap-free — the allocation-free hot path for flat views.
+    pub fn contiguous_run(&self, etype_offset: i64, payload_bytes: usize) -> Option<(u64, usize)> {
+        if etype_offset >= 0
+            && self.filetype.is_contiguous()
+            && self.payload_per_instance as i64 == self.extent
+        {
+            let start = self.disp + etype_offset * self.etype.size() as i64;
+            Some((start as u64, payload_bytes))
+        } else {
+            None
+        }
+    }
+
+    /// Absolute byte runs covering `payload_bytes` of view payload
+    /// starting at `etype_offset` etypes into the view. Adjacent runs are
+    /// coalesced; results are cached for the repeat-access fast path.
+    pub fn runs(&self, etype_offset: i64, payload_bytes: usize) -> Result<Vec<(u64, usize)>> {
+        if etype_offset < 0 {
+            return Err(err_arg(format!("negative view offset {etype_offset}")));
+        }
+        if payload_bytes == 0 {
+            return Ok(Vec::new());
+        }
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.as_ref() {
+                if e.etype_offset == etype_offset && e.payload_bytes == payload_bytes {
+                    return Ok(e.runs.clone());
+                }
+            }
+        }
+        let runs = self.compute_runs(etype_offset, payload_bytes);
+        *self.cache.lock().unwrap() = Some(RunCacheEntry {
+            etype_offset,
+            payload_bytes,
+            runs: runs.clone(),
+        });
+        Ok(runs)
+    }
+
+    fn compute_runs(&self, etype_offset: i64, payload_bytes: usize) -> Vec<(u64, usize)> {
+        let esz = self.etype.size();
+        // Fast path: a gap-free filetype tiles the file contiguously, so
+        // the whole access is one run. (Without this, the default BYTE
+        // view would walk its type map once per *byte*.)
+        if self.filetype.is_contiguous() && self.payload_per_instance as i64 == self.extent {
+            let start = self.disp + etype_offset * esz as i64;
+            return vec![(start as u64, payload_bytes)];
+        }
+        let mut instance = (etype_offset as usize) / self.etypes_per_instance;
+        let mut skip = ((etype_offset as usize) % self.etypes_per_instance) * esz;
+        let mut remaining = payload_bytes;
+        let mut runs: Vec<(u64, usize)> = Vec::new();
+        while remaining > 0 {
+            let base = self.disp + instance as i64 * self.extent;
+            for seg in &self.segments {
+                if remaining == 0 {
+                    break;
+                }
+                let seg_len = seg.len();
+                if skip >= seg_len {
+                    skip -= seg_len;
+                    continue;
+                }
+                let take = (seg_len - skip).min(remaining);
+                let abs = (base + seg.offset) as u64 + skip as u64;
+                if let Some(last) = runs.last_mut() {
+                    if last.0 + last.1 as u64 == abs {
+                        last.1 += take;
+                        skip = 0;
+                        remaining -= take;
+                        continue;
+                    }
+                }
+                runs.push((abs, take));
+                skip = 0;
+                remaining -= take;
+            }
+            instance += 1;
+        }
+        runs
+    }
+
+    /// Convert a view-relative etype offset to the absolute byte position
+    /// (`MPI_FILE_GET_BYTE_OFFSET`, §7.2.4.3).
+    pub fn byte_offset(&self, etype_offset: i64) -> Result<i64> {
+        if etype_offset < 0 {
+            return Err(err_arg(format!("negative view offset {etype_offset}")));
+        }
+        let esz = self.etype.size();
+        let instance = (etype_offset as usize) / self.etypes_per_instance;
+        let mut skip = ((etype_offset as usize) % self.etypes_per_instance) * esz;
+        let base = self.disp + instance as i64 * self.extent;
+        for seg in &self.segments {
+            if skip < seg.len() {
+                return Ok(base + seg.offset + skip as i64);
+            }
+            skip -= seg.len();
+        }
+        // etype_offset landed exactly on an instance boundary.
+        Ok(base + self.extent)
+    }
+
+    /// The (prim, count) element runs describing `payload_bytes` of packed
+    /// payload — input to datarep conversion. Homogeneity is enforced at
+    /// construction, so this is a single run.
+    pub fn payload_elems(&self, payload_bytes: usize) -> Vec<(Prim, usize)> {
+        let p = self.prim();
+        vec![(p, payload_bytes / p.size())]
+    }
+
+    /// Number of etypes covered by `bytes` of payload (rounded down).
+    pub fn bytes_to_etypes(&self, bytes: usize) -> i64 {
+        (bytes / self.etype.size()) as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::datatype::ArrayOrder;
+    use crate::testing::{forall, Config};
+
+    #[test]
+    fn default_view_is_flat_bytes() {
+        let v = FileView::default();
+        assert_eq!(v.runs(0, 100).unwrap(), vec![(0, 100)]);
+        assert_eq!(v.runs(25, 10).unwrap(), vec![(25, 10)]);
+        assert_eq!(v.byte_offset(42).unwrap(), 42);
+    }
+
+    #[test]
+    fn displacement_shifts_everything() {
+        let v =
+            FileView::new(1000, Datatype::INT, Datatype::INT, DataRep::Native).unwrap();
+        assert_eq!(v.runs(0, 8).unwrap(), vec![(1000, 8)]);
+        assert_eq!(v.runs(3, 4).unwrap(), vec![(1012, 4)]);
+        assert_eq!(v.byte_offset(3).unwrap(), 1012);
+    }
+
+    #[test]
+    fn strided_vector_view_interleaves() {
+        // The canonical 2-rank interleave: each rank sees alternate blocks
+        // of 2 ints (stride 4 ints). Rank 1's view starts at disp 8.
+        let ft = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
+        let ft = Datatype::resized(&ft, 0, 16).unwrap(); // extent = 4 ints
+        let v0 = FileView::new(0, Datatype::INT, ft.clone(), DataRep::Native).unwrap();
+        let v1 = FileView::new(8, Datatype::INT, ft, DataRep::Native).unwrap();
+        assert_eq!(v0.runs(0, 16).unwrap(), vec![(0, 8), (16, 8)]);
+        assert_eq!(v1.runs(0, 16).unwrap(), vec![(8, 8), (24, 8)]);
+        // Offsets are etype-relative: etype 2 of rank 0 = second block.
+        assert_eq!(v0.byte_offset(2).unwrap(), 16);
+        assert_eq!(v0.runs(2, 8).unwrap(), vec![(16, 8)]);
+    }
+
+    #[test]
+    fn subarray_view_covers_only_the_block() {
+        // 4x4 ints, rank owns the 2x2 block at (1,1).
+        let ft = Datatype::subarray(&[4, 4], &[2, 2], &[1, 1], ArrayOrder::C, &Datatype::INT)
+            .unwrap();
+        let v = FileView::new(0, Datatype::INT, ft, DataRep::Native).unwrap();
+        let runs = v.runs(0, 16).unwrap();
+        assert_eq!(runs, vec![((4 + 1) * 4, 8), ((8 + 1) * 4, 8)]);
+        // Reading across instances: a second instance starts at extent 64.
+        let runs2 = v.runs(4, 16).unwrap();
+        assert_eq!(runs2, vec![(64 + 20, 8), (64 + 36, 8)]);
+    }
+
+    #[test]
+    fn partial_etype_offsets_inside_instances() {
+        let ft = Datatype::vector(2, 2, 3, &Datatype::INT).unwrap(); // XX.XX (extent 20)
+        let v = FileView::new(0, Datatype::INT, ft, DataRep::Native).unwrap();
+        // 4 etypes per instance; offset 1 = second int of first block.
+        assert_eq!(v.runs(1, 12).unwrap(), vec![(4, 4), (12, 8)]);
+        assert_eq!(v.byte_offset(1).unwrap(), 4);
+        assert_eq!(v.byte_offset(2).unwrap(), 12);
+        assert_eq!(v.byte_offset(4).unwrap(), 20); // next instance
+    }
+
+    #[test]
+    fn validation_rejects_bad_views() {
+        // filetype not a multiple of etype.
+        let three_bytes = Datatype::contiguous(3, &Datatype::BYTE).unwrap();
+        assert!(FileView::new(0, Datatype::INT, three_bytes, DataRep::Native).is_err());
+        // mismatched primitives.
+        assert!(FileView::new(0, Datatype::INT, Datatype::FLOAT, DataRep::Native).is_err());
+        // negative disp.
+        assert!(FileView::new(-1, Datatype::BYTE, Datatype::BYTE, DataRep::Native).is_err());
+    }
+
+    #[test]
+    fn runs_cache_hit_returns_same_result() {
+        let ft = Datatype::vector(4, 1, 2, &Datatype::INT).unwrap();
+        let v = FileView::new(0, Datatype::INT, ft, DataRep::Native).unwrap();
+        let a = v.runs(0, 16).unwrap();
+        let b = v.runs(0, 16).unwrap(); // cached
+        assert_eq!(a, b);
+        let c = v.runs(1, 16).unwrap(); // different key
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prop_runs_total_equals_payload_and_are_disjoint_sorted() {
+        forall(
+            Config::default().cases(150),
+            |r| {
+                let count = r.range(1, 5);
+                let blocklen = r.range(1, 4);
+                let stride = r.range_i64(blocklen as i64, 8);
+                let disp = r.range(0, 64) as i64 * 4;
+                let off = r.range(0, 10) as i64;
+                let etypes = r.range(1, 40);
+                (count, blocklen, stride, disp, off, etypes)
+            },
+            |&(count, blocklen, stride, disp, off, etypes)| {
+                let ft = Datatype::vector(count, blocklen, stride, &Datatype::INT).unwrap();
+                let v = FileView::new(disp, Datatype::INT, ft, DataRep::Native).unwrap();
+                let bytes = etypes * 4;
+                let runs = v.runs(off, bytes).unwrap();
+                let total: usize = runs.iter().map(|&(_, l)| l).sum();
+                let sorted = runs.windows(2).all(|w| w[0].0 + w[0].1 as u64 <= w[1].0);
+                let past_disp = runs.iter().all(|&(o, _)| o >= disp as u64);
+                total == bytes && sorted && past_disp
+            },
+        );
+    }
+
+    #[test]
+    fn prop_byte_offset_matches_first_run() {
+        forall(
+            Config::default().cases(150),
+            |r| {
+                let count = r.range(1, 4);
+                let blocklen = r.range(1, 3);
+                let stride = r.range_i64(blocklen as i64, 6);
+                let off = r.range(0, 12) as i64;
+                (count, blocklen, stride, off)
+            },
+            |&(count, blocklen, stride, off)| {
+                let ft = Datatype::vector(count, blocklen, stride, &Datatype::INT).unwrap();
+                let v = FileView::new(16, Datatype::INT, ft, DataRep::Native).unwrap();
+                let bo = v.byte_offset(off).unwrap();
+                let runs = v.runs(off, 4).unwrap();
+                runs[0].0 == bo as u64
+            },
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! # jpio — an MPI-IO style parallel I/O library in Rust
+//!
+//! Reproduction of *"Design and Development of a Java Parallel I/O
+//! Library"* (MPJ-IO). The crate provides:
+//!
+//! * [`comm`] — an MPI-like communicator substrate (the MPJ Express
+//!   analogue): derived datatypes with holes, point-to-point messaging,
+//!   collectives, thread-based (shared-memory) and process-based
+//!   (distributed-memory) communicators.
+//! * [`io`] — the paper's contribution: the full MPJ-IO v0.1 API surface
+//!   (all 52 MPI-2.2 chapter-13 data-access routines, file views,
+//!   consistency semantics, collective two-phase I/O, split collectives,
+//!   shared file pointers, nonblocking requests, Info hints, data
+//!   representations, error classes).
+//! * [`strategy`] — the four file-access strategies the paper evaluates
+//!   (per-item, bulk, view-buffer, memory-mapped).
+//! * [`storage`] — storage substrates: local disk, a simulated NFS
+//!   server (the paper's NFS storage), and a SAN model (RCMS cluster).
+//! * [`runtime`] — PJRT artifact loading/execution for the AOT-compiled
+//!   JAX/Pallas compute layer (build-time Python, never on the I/O path).
+//! * [`coordinator`] — a data-pipeline orchestrator (stage graph,
+//!   sharding, backpressure) used by the examples.
+//! * [`bench`] — the measurement harness that regenerates every table
+//!   and figure of the paper's evaluation chapter.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use jpio::comm::{self, Comm};
+//! use jpio::io::{File, amode};
+//! use jpio::comm::datatype::Datatype;
+//!
+//! // 4 "ranks" as threads (the paper's shared-memory configuration).
+//! comm::threads::run(4, |comm| {
+//!     let file = File::open(comm, "/tmp/jpio-quickstart.dat",
+//!                           amode::RDWR | amode::CREATE,
+//!                           Default::default()).unwrap();
+//!     let rank = comm.rank() as i32;
+//!     let buf = vec![rank; 1024];
+//!     // Disjoint per-rank partitions of the shared file.
+//!     file.write_at((rank as i64) * 4096, buf.as_slice(), 0, 1024, &Datatype::INT).unwrap();
+//!     file.close().unwrap();
+//! });
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod coordinator;
+pub mod io;
+pub mod runtime;
+pub mod storage;
+pub mod strategy;
+pub mod testing;
+
+/// Crate-wide result alias using the MPJ-IO error classes of §7.2.8.
+pub type Result<T> = std::result::Result<T, io::errors::IoError>;

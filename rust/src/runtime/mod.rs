@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust side — the L3↔L2 bridge of the three-layer stack.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; afterwards the
+//! Rust binary is self-contained: artifacts are HLO *text* (see
+//! aot.py for why), parsed by `HloModuleProto::from_text_file`, compiled
+//! by the PJRT CPU client at startup, and executed on the hot path with
+//! no Python anywhere.
+
+pub mod registry;
+
+pub use registry::{Runtime, TensorF32};

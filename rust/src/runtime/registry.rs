@@ -1,0 +1,271 @@
+//! Artifact registry: name → compiled PJRT executable.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::io::errors::{err_io, err_no_such_file, IoError, Result};
+
+/// A dense float32 tensor crossing the Rust↔PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+impl TensorF32 {
+    /// Construct, checking the element count.
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> TensorF32 {
+        assert_eq!(data.len(), dims.iter().product::<usize>(), "shape mismatch");
+        TensorF32 { data, dims }
+    }
+
+    /// A zero tensor.
+    pub fn zeros(dims: &[usize]) -> TensorF32 {
+        TensorF32 { data: vec![0.0; dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The PJRT client plus every compiled artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Dispatch counters per artifact (perf §L2 accounting).
+    counters: Mutex<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client and compile every `*.hlo.txt` artifact
+    /// in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| err_io(format!("PJRT client: {e}")))?;
+        let mut exes = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| IoError::from_os(e, format!("artifact dir {}", dir.display())))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| IoError::from_os(e, "artifact dir entry"))?;
+            let path = entry.path();
+            let fname = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().expect("artifact path is utf-8"),
+                )
+                .map_err(|e| err_io(format!("parse {fname}: {e}")))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| err_io(format!("compile {fname}: {e}")))?;
+                exes.insert(name.to_string(), exe);
+            }
+        }
+        if exes.is_empty() {
+            return Err(err_no_such_file(format!(
+                "no *.hlo.txt artifacts in {} (run `make artifacts`)",
+                dir.display()
+            )));
+        }
+        Ok(Runtime { client, exes, counters: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// working directory, if present.
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load("artifacts")
+    }
+
+    /// Names of all loaded artifacts, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Whether an artifact is available.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Dispatch counts per artifact since load.
+    pub fn dispatch_counts(&self) -> HashMap<String, u64> {
+        self.counters.lock().unwrap().clone()
+    }
+
+    /// Execute artifact `name` on float32 inputs, returning the tuple of
+    /// float32 outputs. (All jpio artifacts are lowered with
+    /// `return_tuple=True`.)
+    pub fn exec_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        self.exec_literals(
+            name,
+            inputs
+                .iter()
+                .map(|t| {
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&t.dims.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                        .map_err(|e| err_io(format!("reshape input for {name}: {e}")))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        )?
+        .into_iter()
+        .map(|lit| {
+            let shape = lit
+                .shape()
+                .map_err(|e| err_io(format!("output shape of {name}: {e}")))?;
+            let dims = match &shape {
+                xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                _ => vec![],
+            };
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| err_io(format!("output of {name} is not f32: {e}")))?;
+            Ok(TensorF32 { data, dims })
+        })
+        .collect()
+    }
+
+    /// Execute artifact `name` where some outputs may be int32 (e.g. the
+    /// byteswap payload viewed as raw words). Returns raw literals.
+    pub fn exec_literals(
+        &self,
+        name: &str,
+        inputs: Vec<xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| err_no_such_file(format!("artifact {name:?} not loaded")))?;
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| err_io(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err_io(format!("fetch result of {name}: {e}")))?;
+        lit.to_tuple().map_err(|e| err_io(format!("untuple result of {name}: {e}")))
+    }
+
+    /// Execute `init` for a rank at grid coordinates `(gy, gx)`.
+    pub fn exec_init(&self, gy: i32, gx: i32) -> Result<TensorF32> {
+        let exe = self
+            .exes
+            .get("init")
+            .ok_or_else(|| err_no_such_file("artifact \"init\" not loaded"))?;
+        *self.counters.lock().unwrap().entry("init".into()).or_insert(0) += 1;
+        let input = xla::Literal::vec1(&[gy, gx]);
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| err_io(format!("execute init: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err_io(format!("fetch init: {e}")))?;
+        let out = lit.to_tuple1().map_err(|e| err_io(format!("untuple init: {e}")))?;
+        let shape = out.shape().map_err(|e| err_io(format!("init shape: {e}")))?;
+        let dims = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => vec![],
+        };
+        let data =
+            out.to_vec::<f32>().map_err(|e| err_io(format!("init output: {e}")))?;
+        Ok(TensorF32 { data, dims })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Runtime tests need `make artifacts` to have run; they skip (with a
+    /// loud note) when the artifacts are absent so `cargo test` stays
+    /// usable before the first build.
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(dir).expect("artifacts present but unloadable"))
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        for name in ["stencil", "pack", "unpack", "byteswap", "checksum", "tick", "init"] {
+            assert!(rt.has(name), "missing artifact {name}");
+        }
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn stencil_artifact_matches_reference_numerics() {
+        let Some(rt) = runtime() else { return };
+        // Constant field is a fixed point of the Jacobi average.
+        let halo = 258;
+        let x = TensorF32::new(vec![2.0; halo * halo], vec![halo, halo]);
+        let out = rt.exec_f32("stencil", &[x]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![256, 256]);
+        assert!(out[0].data.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_through_pjrt() {
+        let Some(rt) = runtime() else { return };
+        let halo = 258;
+        let mut base = TensorF32::zeros(&[halo, halo]);
+        for (i, v) in base.data.iter_mut().enumerate() {
+            *v = (i % 1000) as f32;
+        }
+        let packed = rt.exec_f32("pack", &[base.clone()]).unwrap().remove(0);
+        assert_eq!(packed.dims, vec![256, 256]);
+        let rebuilt = rt.exec_f32("unpack", &[base.clone(), packed]).unwrap().remove(0);
+        assert_eq!(rebuilt.data, base.data);
+    }
+
+    #[test]
+    fn tick_produces_state_and_checksum() {
+        let Some(rt) = runtime() else { return };
+        let halo = 258;
+        let x = TensorF32::new(vec![1.0; halo * halo], vec![halo, halo]);
+        let out = rt.exec_f32("tick", &[x]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].dims, vec![256, 256]);
+        assert_eq!(out[1].dims, vec![2]);
+        // Checksum of an all-ones 256x256 field: sum = 65536.
+        assert!((out[1].data[0] - 65536.0).abs() < 1.0);
+        assert!(rt.dispatch_counts()["tick"] >= 1);
+    }
+
+    #[test]
+    fn init_differs_per_rank() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.exec_init(0, 0).unwrap();
+        let b = rt.exec_init(1, 1).unwrap();
+        assert_eq!(a.dims, vec![258, 258]);
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn unknown_artifact_is_a_clean_error() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.exec_f32("warp_drive", &[]).map(|_| ()).unwrap_err();
+        assert_eq!(err.class, crate::io::errors::ErrorClass::NoSuchFile);
+    }
+}

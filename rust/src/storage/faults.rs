@@ -1,0 +1,193 @@
+//! Fault-injection wrapper backend.
+//!
+//! Wraps any [`Backend`] and injects MPJ-IO error classes on chosen
+//! operations — used by the error-handling tests (§7.2.7/7.2.8) to prove
+//! that failures surface with the right class instead of corrupting state,
+//! and by the collective-I/O tests to exercise partial-failure paths.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::io::errors::{ErrorClass, IoError, Result};
+
+use super::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
+
+/// Which operation kind to fail.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultOp {
+    /// Fail `read_at`.
+    Read,
+    /// Fail `write_at`.
+    Write,
+    /// Fail `sync`.
+    Sync,
+}
+
+/// A single fault rule: fail the `nth` invocation (0-based) of `op` with
+/// `class`. Each rule fires once.
+#[derive(Debug)]
+pub struct FaultRule {
+    /// Operation to intercept.
+    pub op: FaultOp,
+    /// Which invocation to fail (0 = the first).
+    pub nth: u64,
+    /// Error class to inject.
+    pub class: ErrorClass,
+}
+
+/// Shared fault schedule + counters.
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    reads: AtomicU64,
+    writes: AtomicU64,
+    syncs: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build a plan from rules.
+    pub fn new(rules: Vec<FaultRule>) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            rules,
+            reads: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            syncs: AtomicU64::new(0),
+        })
+    }
+
+    fn check(&self, op: FaultOp) -> Result<()> {
+        let counter = match op {
+            FaultOp::Read => &self.reads,
+            FaultOp::Write => &self.writes,
+            FaultOp::Sync => &self.syncs,
+        };
+        let n = counter.fetch_add(1, Ordering::SeqCst);
+        for r in &self.rules {
+            if r.op == op && r.nth == n {
+                return Err(IoError::new(r.class, format!("injected fault on {op:?} #{n}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of intercepted operations so far, by kind.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.reads.load(Ordering::SeqCst),
+            self.writes.load(Ordering::SeqCst),
+            self.syncs.load(Ordering::SeqCst),
+        )
+    }
+}
+
+/// Backend wrapper injecting the plan's faults into every opened file.
+pub struct FaultBackend<B: Backend> {
+    inner: B,
+    plan: Arc<FaultPlan>,
+}
+
+impl<B: Backend> FaultBackend<B> {
+    /// Wrap `inner` with `plan`.
+    pub fn new(inner: B, plan: Arc<FaultPlan>) -> Self {
+        FaultBackend { inner, plan }
+    }
+}
+
+impl<B: Backend> Backend for FaultBackend<B> {
+    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
+        let f = self.inner.open(path, opts)?;
+        Ok(Arc::new(FaultFile { inner: f, plan: self.plan.clone() }))
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        self.inner.delete(path)
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+struct FaultFile {
+    inner: Arc<dyn StorageFile>,
+    plan: Arc<FaultPlan>,
+}
+
+impl StorageFile for FaultFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.plan.check(FaultOp::Read)?;
+        self.inner.read_at(offset, buf)
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
+        self.plan.check(FaultOp::Write)?;
+        self.inner.write_at(offset, buf)
+    }
+
+    fn size(&self) -> Result<u64> {
+        self.inner.size()
+    }
+
+    fn set_size(&self, size: u64) -> Result<()> {
+        self.inner.set_size(size)
+    }
+
+    fn preallocate(&self, size: u64) -> Result<()> {
+        self.inner.preallocate(size)
+    }
+
+    fn sync(&self) -> Result<()> {
+        self.plan.check(FaultOp::Sync)?;
+        self.inner.sync()
+    }
+
+    fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>> {
+        self.inner.map(offset, len, writable)
+    }
+
+    fn lock_exclusive(&self) -> Result<FileLockGuard> {
+        self.inner.lock_exclusive()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::local::LocalBackend;
+
+    #[test]
+    fn injects_on_the_scheduled_invocation() {
+        let plan = FaultPlan::new(vec![FaultRule {
+            op: FaultOp::Write,
+            nth: 1,
+            class: ErrorClass::NoSpace,
+        }]);
+        let b = FaultBackend::new(LocalBackend::instant(), plan.clone());
+        let path = format!("/tmp/jpio-fault-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, b"ok").unwrap(); // write #0 passes
+        let err = f.write_at(2, b"boom").unwrap_err(); // write #1 fails
+        assert_eq!(err.class, ErrorClass::NoSpace);
+        f.write_at(2, b"ok").unwrap(); // rule fired once
+        assert_eq!(plan.counts().1, 3);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn sync_faults() {
+        let plan = FaultPlan::new(vec![FaultRule {
+            op: FaultOp::Sync,
+            nth: 0,
+            class: ErrorClass::Io,
+        }]);
+        let b = FaultBackend::new(LocalBackend::instant(), plan);
+        let path = format!("/tmp/jpio-fault-sync-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        assert_eq!(f.sync().unwrap_err().class, ErrorClass::Io);
+        f.sync().unwrap();
+        b.delete(&path).unwrap();
+    }
+}

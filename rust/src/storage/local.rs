@@ -1,0 +1,529 @@
+//! Local-disk backend: a real file on the local filesystem.
+//!
+//! Reads go through the OS page cache (the mechanism behind the paper's
+//! multi-GB/s read bandwidths in Fig 4-3); writes optionally pay a
+//! modelled device-write bandwidth so the *shape* of the paper's local
+//! write results (≈94 MB/s, flat in thread count) is reproduced
+//! independently of this host's actual disk.
+
+use std::collections::HashMap;
+use std::fs;
+use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use once_cell::sync::Lazy;
+
+use crate::comm::netmodel::TimeScale;
+use crate::io::errors::{err_file_exists, err_io, IoError, Result};
+
+use super::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
+
+/// Performance model for the local device.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalConfig {
+    /// Modelled device write bandwidth in MB/s (`None` = unmodelled).
+    pub write_bw_mbs: Option<f64>,
+    /// Modelled device read bandwidth in MB/s (`None` = page cache only).
+    pub read_bw_mbs: Option<f64>,
+    /// Delay scale.
+    pub scale: TimeScale,
+}
+
+impl LocalConfig {
+    /// No modelling at all: functional tests.
+    pub fn instant() -> Self {
+        LocalConfig { write_bw_mbs: None, read_bw_mbs: None, scale: TimeScale::OFF }
+    }
+
+    /// The Barq shared-memory machine's local disk (Fig 4-3): writes cap
+    /// at ~94 MB/s; reads are served from the page cache.
+    pub fn barq_disk() -> Self {
+        LocalConfig { write_bw_mbs: Some(94.0), read_bw_mbs: None, scale: TimeScale::default() }
+    }
+}
+
+/// The local-disk backend.
+pub struct LocalBackend {
+    cfg: LocalConfig,
+}
+
+impl LocalBackend {
+    /// Backend with the given model.
+    pub fn new(cfg: LocalConfig) -> Self {
+        LocalBackend { cfg }
+    }
+
+    /// Unmodelled backend (functional tests).
+    pub fn instant() -> Self {
+        LocalBackend::new(LocalConfig::instant())
+    }
+
+    /// Barq local-disk model (Fig 4-3).
+    pub fn barq() -> Self {
+        LocalBackend::new(LocalConfig::barq_disk())
+    }
+}
+
+impl Backend for LocalBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
+        Ok(Arc::new(LocalFile::open(path, opts, self.cfg, "local")?))
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        fs::remove_file(path).map_err(|e| IoError::from_os(e, format!("delete {path}")))
+    }
+
+    fn name(&self) -> &'static str {
+        "local"
+    }
+}
+
+// ----------------------------------------------------------------------
+// In-process lock registry: serializes *threads* that share a path; the
+// fd-level flock serializes *processes*. Both are taken by
+// `lock_exclusive`.
+// ----------------------------------------------------------------------
+
+pub(crate) struct LockCell {
+    locked: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl LockCell {
+    pub(crate) fn acquire(self: &Arc<Self>) -> impl FnOnce() + Send {
+        let mut locked = self.locked.lock().unwrap();
+        while *locked {
+            locked = self.cv.wait(locked).unwrap();
+        }
+        *locked = true;
+        drop(locked);
+        let cell = self.clone();
+        move || {
+            *cell.locked.lock().unwrap() = false;
+            cell.cv.notify_one();
+        }
+    }
+}
+
+static LOCK_REGISTRY: Lazy<Mutex<HashMap<String, Arc<LockCell>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+pub(crate) fn lock_cell_for(path: &str) -> Arc<LockCell> {
+    LOCK_REGISTRY
+        .lock()
+        .unwrap()
+        .entry(path.to_string())
+        .or_insert_with(|| Arc::new(LockCell { locked: Mutex::new(false), cv: Condvar::new() }))
+        .clone()
+}
+
+/// An open local file with optional device modelling.
+pub struct LocalFile {
+    file: fs::File,
+    path: String,
+    cfg: LocalConfig,
+    label: &'static str,
+}
+
+impl LocalFile {
+    pub(crate) fn open(
+        path: &str,
+        opts: OpenOptions,
+        cfg: LocalConfig,
+        label: &'static str,
+    ) -> Result<LocalFile> {
+        if path.is_empty() {
+            return Err(crate::io::errors::err_bad_file("empty file name"));
+        }
+        let mut oo = fs::OpenOptions::new();
+        oo.read(opts.read).write(opts.write);
+        if opts.create && opts.excl {
+            oo.create_new(true);
+        } else if opts.create {
+            oo.create(true);
+        }
+        if opts.truncate {
+            oo.truncate(true);
+        }
+        let file = oo.open(path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::AlreadyExists {
+                err_file_exists(format!("open EXCL {path}"))
+            } else {
+                IoError::from_os(e, format!("open {path}"))
+            }
+        })?;
+        Ok(LocalFile { file, path: path.to_string(), cfg, label })
+    }
+
+    /// Pay the modelled device-write time *under the device lock*: the
+    /// disk is one shared resource, so aggregate write bandwidth stays
+    /// flat as threads/processes are added (the paper's Fig 4-3 shape).
+    fn pay_write(&self, bytes: usize) {
+        if let Some(bw) = self.cfg.write_bw_mbs {
+            let d = Duration::from_secs_f64(bytes as f64 / (bw * 1e6));
+            if self.cfg.scale.scale(d) > Duration::ZERO {
+                // Separate lock domain from lock_exclusive(): the device
+                // queue is its own resource, and a caller may legally hold
+                // the file lock (atomic mode / RMW sieving) across writes.
+                let release = lock_cell_for(&format!("{}#device", self.path)).acquire();
+                self.cfg.scale.pay(d);
+                release();
+            }
+        }
+    }
+
+    fn pay_read(&self, bytes: usize) {
+        if let Some(bw) = self.cfg.read_bw_mbs {
+            self.cfg.scale.pay(Duration::from_secs_f64(bytes as f64 / (bw * 1e6)));
+        }
+    }
+}
+
+impl StorageFile for LocalFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.pay_read(buf.len());
+        // read_at can return short counts mid-file on signals; loop.
+        let mut pos = 0;
+        while pos < buf.len() {
+            match self.file.read_at(&mut buf[pos..], offset + pos as u64) {
+                Ok(0) => break, // EOF
+                Ok(n) => pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(IoError::from_os(e, format!("read {}", self.path))),
+            }
+        }
+        Ok(pos)
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
+        self.pay_write(buf.len());
+        self.file
+            .write_all_at(buf, offset)
+            .map_err(|e| IoError::from_os(e, format!("write {}", self.path)))?;
+        Ok(buf.len())
+    }
+
+    fn size(&self) -> Result<u64> {
+        Ok(self
+            .file
+            .metadata()
+            .map_err(|e| IoError::from_os(e, format!("stat {}", self.path)))?
+            .len())
+    }
+
+    fn set_size(&self, size: u64) -> Result<()> {
+        self.file
+            .set_len(size)
+            .map_err(|e| IoError::from_os(e, format!("truncate {}", self.path)))
+    }
+
+    fn preallocate(&self, size: u64) -> Result<()> {
+        let rc = unsafe { libc::posix_fallocate(self.file.as_raw_fd(), 0, size as libc::off_t) };
+        if rc != 0 {
+            return Err(IoError::from_os(
+                std::io::Error::from_raw_os_error(rc),
+                format!("preallocate {}", self.path),
+            ));
+        }
+        Ok(())
+    }
+
+    fn sync(&self) -> Result<()> {
+        self.file
+            .sync_data()
+            .map_err(|e| IoError::from_os(e, format!("fsync {}", self.path)))
+    }
+
+    fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>> {
+        if len == 0 {
+            return Err(crate::io::errors::err_arg("map: zero-length region"));
+        }
+        if writable {
+            // Ensure the backing file covers the region (mmap past EOF
+            // faults with SIGBUS).
+            let need = offset + len as u64;
+            if self.size()? < need {
+                self.set_size(need)?;
+            }
+        }
+        let prot = if writable { libc::PROT_READ | libc::PROT_WRITE } else { libc::PROT_READ };
+        // mmap requires a page-aligned file offset: align down and skip.
+        let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) } as u64;
+        let aligned = offset & !(page - 1);
+        let delta = (offset - aligned) as usize;
+        let map_len = len + delta;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                prot,
+                libc::MAP_SHARED,
+                self.file.as_raw_fd(),
+                aligned as libc::off_t,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(IoError::from_os(
+                std::io::Error::last_os_error(),
+                format!("mmap {}", self.path),
+            ));
+        }
+        Ok(Box::new(LocalMap {
+            ptr: ptr as *mut u8,
+            delta,
+            len,
+            map_len,
+            cfg: self.cfg,
+            lock: lock_cell_for(&format!("{}#device", self.path)),
+            dirty_bytes: 0,
+        }))
+    }
+
+    fn lock_exclusive(&self) -> Result<FileLockGuard> {
+        // Threads first (in-process), then processes (flock).
+        let release_cell = lock_cell_for(&self.path).acquire();
+        let fd = self.file.as_raw_fd();
+        let rc = unsafe { libc::flock(fd, libc::LOCK_EX) };
+        if rc != 0 {
+            release_cell();
+            return Err(err_io(format!("flock {}", self.path)));
+        }
+        Ok(FileLockGuard {
+            os_unlock: Some(Box::new(move || {
+                unsafe { libc::flock(fd, libc::LOCK_UN) };
+                release_cell();
+            })),
+        })
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.label
+    }
+}
+
+/// A real memory mapping. `ptr` points at the page-aligned base; user
+/// offsets are shifted by `delta` (the sub-page part of the file offset).
+struct LocalMap {
+    ptr: *mut u8,
+    delta: usize,
+    len: usize,
+    map_len: usize,
+    cfg: LocalConfig,
+    lock: Arc<LockCell>,
+    dirty_bytes: usize,
+}
+
+// Safety: the mapping is owned by this region and unmapped on drop; access
+// is through &mut self.
+unsafe impl Send for LocalMap {}
+
+impl MappedRegion for LocalMap {
+    fn read(&mut self, region_off: usize, buf: &mut [u8]) -> Result<()> {
+        check_bounds(region_off, buf.len(), self.len)?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.ptr.add(self.delta + region_off),
+                buf.as_mut_ptr(),
+                buf.len(),
+            );
+        }
+        Ok(())
+    }
+
+    fn write(&mut self, region_off: usize, data: &[u8]) -> Result<()> {
+        check_bounds(region_off, data.len(), self.len)?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr(),
+                self.ptr.add(self.delta + region_off),
+                data.len(),
+            );
+        }
+        self.dirty_bytes += data.len();
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        // Writeback pays the modelled device bandwidth (serialized at the
+        // device) for the bytes written through the mapping.
+        if let Some(bw) = self.cfg.write_bw_mbs {
+            if self.dirty_bytes > 0 {
+                let d = Duration::from_secs_f64(self.dirty_bytes as f64 / (bw * 1e6));
+                if self.cfg.scale.scale(d) > Duration::ZERO {
+                    let release = self.lock.acquire();
+                    self.cfg.scale.pay(d);
+                    release();
+                }
+                self.dirty_bytes = 0;
+            }
+        }
+        let rc =
+            unsafe { libc::msync(self.ptr as *mut libc::c_void, self.map_len, libc::MS_SYNC) };
+        if rc != 0 {
+            return Err(IoError::from_os(std::io::Error::last_os_error(), "msync"));
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+impl Drop for LocalMap {
+    fn drop(&mut self) {
+        unsafe { libc::munmap(self.ptr as *mut libc::c_void, self.map_len) };
+    }
+}
+
+pub(crate) fn check_bounds(off: usize, len: usize, region: usize) -> Result<()> {
+    if off + len > region {
+        return Err(crate::io::errors::err_arg(format!(
+            "mapped access [{off}, {}) outside region of {region}",
+            off + len
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::errors::ErrorClass;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-local-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let b = LocalBackend::instant();
+        let path = tmp("rw");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(10, b"hello").unwrap();
+        let mut buf = [0u8; 5];
+        assert_eq!(f.read_at(10, &mut buf).unwrap(), 5);
+        assert_eq!(&buf, b"hello");
+        assert_eq!(f.size().unwrap(), 15);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn read_past_eof_is_short() {
+        let b = LocalBackend::instant();
+        let path = tmp("eof");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, b"abc").unwrap();
+        let mut buf = [0u8; 10];
+        assert_eq!(f.read_at(0, &mut buf).unwrap(), 3);
+        assert_eq!(f.read_at(100, &mut buf).unwrap(), 0);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn excl_create_fails_on_existing() {
+        let b = LocalBackend::instant();
+        let path = tmp("excl");
+        let _ = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let mut opts = OpenOptions::rw_create();
+        opts.excl = true;
+        let err = b.open(&path, opts).map(|_| ()).unwrap_err();
+        assert_eq!(err.class, ErrorClass::FileExists);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_maps_to_no_such_file() {
+        let b = LocalBackend::instant();
+        let err = b.open("/tmp/jpio-definitely-missing-9x7", OpenOptions::read_only()).map(|_| ()).unwrap_err();
+        assert_eq!(err.class, ErrorClass::NoSuchFile);
+        let err = b.delete("/tmp/jpio-definitely-missing-9x7").unwrap_err();
+        assert_eq!(err.class, ErrorClass::NoSuchFile);
+    }
+
+    #[test]
+    fn set_size_and_preallocate() {
+        let b = LocalBackend::instant();
+        let path = tmp("size");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(4096).unwrap();
+        assert_eq!(f.size().unwrap(), 4096);
+        f.preallocate(8192).unwrap();
+        assert!(f.size().unwrap() >= 4096);
+        f.set_size(100).unwrap();
+        assert_eq!(f.size().unwrap(), 100);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn mmap_roundtrip_and_persistence() {
+        let b = LocalBackend::instant();
+        let path = tmp("map");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        {
+            let mut m = f.map(0, 4096, true).unwrap();
+            m.write(100, b"mapped data").unwrap();
+            m.flush().unwrap();
+            let mut back = [0u8; 11];
+            m.read(100, &mut back).unwrap();
+            assert_eq!(&back, b"mapped data");
+        }
+        // Visible through normal reads after unmap.
+        let mut buf = [0u8; 11];
+        f.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf, b"mapped data");
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn mmap_bounds_checked() {
+        let b = LocalBackend::instant();
+        let path = tmp("mapbounds");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let mut m = f.map(0, 1024, true).unwrap();
+        let mut buf = [0u8; 16];
+        let err = m.read(1020, &mut buf).unwrap_err();
+        assert_eq!(err.class, ErrorClass::Arg);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn lock_exclusive_serializes_threads() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let b = LocalBackend::instant();
+        let path = tmp("lock");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let in_section = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..10 {
+                        let _g = f.lock_exclusive().unwrap();
+                        let v = in_section.fetch_add(1, Ordering::SeqCst);
+                        assert_eq!(v, 0, "two threads inside the exclusive section");
+                        std::thread::yield_now();
+                        in_section.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn modelled_write_bandwidth_is_paid() {
+        let b = LocalBackend::new(LocalConfig {
+            write_bw_mbs: Some(100.0),
+            read_bw_mbs: None,
+            scale: TimeScale(1.0),
+        });
+        let path = tmp("bw");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let start = std::time::Instant::now();
+        f.write_at(0, &vec![0u8; 1 << 20]).unwrap(); // 1 MiB @100MB/s ≈ 10.5ms
+        assert!(start.elapsed() >= Duration::from_millis(9));
+        b.delete(&path).unwrap();
+    }
+}

@@ -1,0 +1,182 @@
+//! Storage substrates: where the shared file lives.
+//!
+//! The paper evaluates three placements of the shared file: the local disk
+//! of the shared-memory machine (Fig 4-3), NFS storage attached to it
+//! (Fig 4-4), and the NFS/SAN storage of the distributed-memory RCMS
+//! cluster (Fig 4-5). We model each as a [`Backend`] producing
+//! [`StorageFile`] handles with positioned I/O, an mmap-style interface
+//! (so the *mapped-mode* access strategy works on every backend, with
+//! backend-appropriate costs), byte-range/whole-file locking (for MPI
+//! atomic mode), and durability (`sync`).
+//!
+//! Real bytes always land in a real local file — data correctness is never
+//! simulated — while *performance* (NFS RPC latency, server ingest
+//! bandwidth, disk write bandwidth) is modelled per backend, per the
+//! substitution table in DESIGN.md §2.
+
+pub mod faults;
+pub mod local;
+pub mod nfs;
+pub mod san;
+
+use crate::io::errors::Result;
+use std::sync::Arc;
+
+/// Open options for a storage file.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpenOptions {
+    /// Open for reading.
+    pub read: bool,
+    /// Open for writing.
+    pub write: bool,
+    /// Create if missing.
+    pub create: bool,
+    /// Fail if the file already exists.
+    pub excl: bool,
+    /// Truncate on open.
+    pub truncate: bool,
+}
+
+impl OpenOptions {
+    /// Read/write + create — the common test configuration.
+    pub fn rw_create() -> Self {
+        OpenOptions { read: true, write: true, create: true, ..Default::default() }
+    }
+
+    /// Read-only.
+    pub fn read_only() -> Self {
+        OpenOptions { read: true, ..Default::default() }
+    }
+}
+
+/// A storage backend: a place files live, with a performance model.
+pub trait Backend: Send + Sync {
+    /// Open (or create) a file.
+    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>>;
+
+    /// Delete a file (`MPI_FILE_DELETE`).
+    fn delete(&self, path: &str) -> Result<()>;
+
+    /// Backend name for reports ("local", "nfs", "san").
+    fn name(&self) -> &'static str;
+}
+
+/// An open file on some backend. Handles are shared between ranks of a
+/// thread world (`Arc`) and duplicated across processes (each process
+/// opens its own).
+pub trait StorageFile: Send + Sync {
+    /// Positioned read; returns bytes read (short only at EOF).
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize>;
+
+    /// Positioned write; returns bytes written (never short on success).
+    fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize>;
+
+    /// Vectored positioned read of disjoint runs: `(file_offset, len)`
+    /// pairs filled into `buf` back-to-back. Default loops `read_at`.
+    fn read_runs(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        let mut pos = 0;
+        for &(off, len) in runs {
+            pos += self.read_at(off, &mut buf[pos..pos + len])?;
+        }
+        Ok(pos)
+    }
+
+    /// Vectored positioned write; mirror of [`StorageFile::read_runs`].
+    fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        let mut pos = 0;
+        for &(off, len) in runs {
+            pos += self.write_at(off, &buf[pos..pos + len])?;
+        }
+        Ok(pos)
+    }
+
+    /// Current size in bytes (`MPI_FILE_GET_SIZE`).
+    fn size(&self) -> Result<u64>;
+
+    /// Truncate/extend (`MPI_FILE_SET_SIZE`).
+    fn set_size(&self, size: u64) -> Result<()>;
+
+    /// Preallocate storage (`MPI_FILE_PREALLOCATE`).
+    fn preallocate(&self, size: u64) -> Result<()>;
+
+    /// Flush this handle's writes to the storage device
+    /// (`MPI_FILE_SYNC`). On NFS this is the COMMIT that makes updates
+    /// visible to other clients (close-to-open consistency).
+    fn sync(&self) -> Result<()>;
+
+    /// Create a mapped region of `[offset, offset+len)` — the *mapped
+    /// mode* strategy. Local backends return a real `mmap`; NFS returns a
+    /// fault-accounted emulation.
+    fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>>;
+
+    /// Acquire an exclusive whole-file lock shared across ranks *and*
+    /// processes (used by MPI atomic mode and by the NFS server model for
+    /// request serialization). Returns a guard; dropping it unlocks.
+    fn lock_exclusive(&self) -> Result<FileLockGuard>;
+
+    /// Backend name (for metrics labels).
+    fn backend_name(&self) -> &'static str;
+}
+
+/// A mapped view of a file region. The local implementation is a real
+/// memory mapping; the NFS implementation emulates demand paging with
+/// modelled RPC costs per faulted page (which is exactly why the paper's
+/// mapped mode "performed inefficiently when file was moved to NFS
+/// storage").
+pub trait MappedRegion: Send {
+    /// Copy `buf.len()` bytes from the region at `region_off`.
+    fn read(&mut self, region_off: usize, buf: &mut [u8]) -> Result<()>;
+
+    /// Copy `data` into the region at `region_off`.
+    fn write(&mut self, region_off: usize, data: &[u8]) -> Result<()>;
+
+    /// Write dirty pages back (`msync` analogue).
+    fn flush(&mut self) -> Result<()>;
+
+    /// Region length.
+    fn len(&self) -> usize;
+
+    /// True if the region is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// RAII guard for [`StorageFile::lock_exclusive`]. Combines an in-process
+/// mutex guard (threads) with an OS `flock` (processes).
+pub struct FileLockGuard {
+    /// Keeps the fd-level flock alive; unlocked on drop.
+    pub(crate) os_unlock: Option<Box<dyn FnOnce() + Send>>,
+}
+
+impl Drop for FileLockGuard {
+    fn drop(&mut self) {
+        if let Some(f) = self.os_unlock.take() {
+            f();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::local::LocalBackend;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-storage-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn default_run_helpers_compose() {
+        let b = LocalBackend::instant();
+        let path = tmp("runs");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(100).unwrap();
+        let data = [1u8, 2, 3, 4, 5, 6];
+        f.write_runs(&[(0, 3), (10, 3)], &data).unwrap();
+        let mut out = [0u8; 6];
+        f.read_runs(&[(0, 3), (10, 3)], &mut out).unwrap();
+        assert_eq!(out, data);
+        b.delete(&path).unwrap();
+    }
+}

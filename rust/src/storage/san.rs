@@ -1,0 +1,100 @@
+//! SAN backend: the RCMS cluster's fibre-channel SAN (Table 4-2).
+//!
+//! "A high-performance and reliable SAN storage is linked by Servers,
+//! accessible by all computational nodes." Modelled as a shared-disk
+//! device: much higher ingest bandwidth than NFS, negligible per-op
+//! latency, no client-side protocol costs. Used by the checkpoint examples
+//! and the ablation benches as the fast-storage contrast to NFS.
+
+use std::sync::Arc;
+
+use crate::comm::netmodel::TimeScale;
+use crate::io::errors::Result;
+
+use super::local::{LocalConfig, LocalFile};
+use super::{Backend, OpenOptions, StorageFile};
+
+/// SAN device model.
+#[derive(Clone, Copy, Debug)]
+pub struct SanConfig {
+    /// Aggregate device write bandwidth, MB/s.
+    pub write_bw_mbs: f64,
+    /// Delay scale.
+    pub scale: TimeScale,
+}
+
+impl SanConfig {
+    /// Functional (instant) configuration.
+    pub fn instant() -> Self {
+        SanConfig { write_bw_mbs: f64::INFINITY, scale: TimeScale::OFF }
+    }
+
+    /// The RCMS 22 TB fibre-channel SAN with RAID controller.
+    pub fn rcms() -> Self {
+        SanConfig { write_bw_mbs: 1200.0, scale: TimeScale::default() }
+    }
+}
+
+/// The SAN backend.
+pub struct SanBackend {
+    cfg: SanConfig,
+}
+
+impl SanBackend {
+    /// Backend with the given model.
+    pub fn new(cfg: SanConfig) -> Self {
+        SanBackend { cfg }
+    }
+
+    /// Functional configuration.
+    pub fn instant() -> Self {
+        SanBackend::new(SanConfig::instant())
+    }
+
+    /// RCMS SAN model.
+    pub fn rcms() -> Self {
+        SanBackend::new(SanConfig::rcms())
+    }
+}
+
+impl Backend for SanBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
+        let local_cfg = LocalConfig {
+            write_bw_mbs: if self.cfg.write_bw_mbs.is_infinite() {
+                None
+            } else {
+                Some(self.cfg.write_bw_mbs)
+            },
+            read_bw_mbs: None,
+            scale: self.cfg.scale,
+        };
+        Ok(Arc::new(LocalFile::open(path, opts, local_cfg, "san")?))
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        std::fs::remove_file(path)
+            .map_err(|e| crate::io::errors::IoError::from_os(e, format!("san delete {path}")))
+    }
+
+    fn name(&self) -> &'static str {
+        "san"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn san_behaves_like_a_fast_local_disk() {
+        let b = SanBackend::instant();
+        let path = format!("/tmp/jpio-san-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, b"on the san").unwrap();
+        let mut buf = [0u8; 10];
+        f.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"on the san");
+        assert_eq!(f.backend_name(), "san");
+        b.delete(&path).unwrap();
+    }
+}

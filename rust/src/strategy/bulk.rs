@@ -1,0 +1,56 @@
+//! Bulk strategy — the `BulkRandomAccessFiles` analogue (§3.2.1).
+//!
+//! The Berkeley "Bulk File I/O Extensions to Java" class the paper cites
+//! performs one native read/write per whole array. The Rust analogue is
+//! simply one positioned syscall per contiguous run: no staging copy, no
+//! per-element overhead.
+
+use super::{check_total, AccessStrategy};
+use crate::io::errors::Result;
+use crate::storage::StorageFile;
+
+/// One positioned transfer per run.
+pub struct BulkStrategy;
+
+impl AccessStrategy for BulkStrategy {
+    fn name(&self) -> &'static str {
+        "bulk"
+    }
+
+    fn read(
+        &self,
+        file: &dyn StorageFile,
+        runs: &[(u64, usize)],
+        buf: &mut [u8],
+    ) -> Result<usize> {
+        check_total(runs, buf.len())?;
+        file.read_runs(runs, buf)
+    }
+
+    fn write(&self, file: &dyn StorageFile, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        check_total(runs, buf.len())?;
+        file.write_runs(runs, buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::testutil::roundtrip;
+
+    #[test]
+    fn bulk_roundtrip() {
+        roundtrip(&BulkStrategy);
+    }
+
+    #[test]
+    fn bulk_rejects_short_buffer() {
+        let b = crate::storage::local::LocalBackend::instant();
+        let path = format!("/tmp/jpio-bulk-short-{}", std::process::id());
+        let f = crate::storage::Backend::open(&b, &path, crate::storage::OpenOptions::rw_create())
+            .unwrap();
+        let mut small = [0u8; 2];
+        assert!(BulkStrategy.read(f.as_ref(), &[(0, 10)], &mut small).is_err());
+        crate::storage::Backend::delete(&b, &path).unwrap();
+    }
+}

@@ -1,0 +1,139 @@
+//! Mapped-mode strategy — the `FileChannel.map(MappedByteBuffer)`
+//! analogue (§3.2.4).
+//!
+//! "The memory mapping is done and a portion of memory is brought into
+//! memory so we can create and edit large files. It gives illusion of file
+//! existence in memory." On the local backend this is a real `mmap`;
+//! on the NFS backend it is the demand-paged emulation whose per-page
+//! costs produce the paper's Fig 4-4 mapped-mode collapse.
+
+use super::{check_total, AccessStrategy};
+use crate::io::errors::Result;
+use crate::storage::StorageFile;
+
+/// Access through a memory-mapped region spanning the runs.
+pub struct MappedStrategy;
+
+impl MappedStrategy {
+    fn region_bounds(runs: &[(u64, usize)]) -> (u64, usize) {
+        let start = runs.iter().map(|&(o, _)| o).min().unwrap_or(0);
+        let end = runs.iter().map(|&(o, l)| o + l as u64).max().unwrap_or(start);
+        (start, (end - start) as usize)
+    }
+}
+
+impl AccessStrategy for MappedStrategy {
+    fn name(&self) -> &'static str {
+        "mapped"
+    }
+
+    fn read(
+        &self,
+        file: &dyn StorageFile,
+        runs: &[(u64, usize)],
+        buf: &mut [u8],
+    ) -> Result<usize> {
+        check_total(runs, buf.len())?;
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        let (start, span) = Self::region_bounds(runs);
+        // Clamp to EOF: mapping past end is not readable.
+        let fsize = file.size()?;
+        if start >= fsize {
+            return Ok(0);
+        }
+        let span = span.min((fsize - start) as usize);
+        if span == 0 {
+            return Ok(0);
+        }
+        let mut region = file.map(start, span, false)?;
+        let mut pos = 0;
+        let mut total = 0;
+        for &(off, len) in runs {
+            let roff = (off - start) as usize;
+            let avail = span.saturating_sub(roff).min(len);
+            if avail > 0 {
+                region.read(roff, &mut buf[pos..pos + avail])?;
+            }
+            pos += len;
+            total += avail;
+        }
+        Ok(total)
+    }
+
+    fn write(&self, file: &dyn StorageFile, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        check_total(runs, buf.len())?;
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        let (start, span) = Self::region_bounds(runs);
+        let mut region = file.map(start, span, true)?;
+        let mut pos = 0;
+        for &(off, len) in runs {
+            let roff = (off - start) as usize;
+            region.write(roff, &buf[pos..pos + len])?;
+            pos += len;
+        }
+        region.flush()?;
+        Ok(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::local::LocalBackend;
+    use crate::storage::nfs::NfsBackend;
+    use crate::storage::{Backend, OpenOptions};
+    use crate::strategy::testutil::roundtrip;
+
+    #[test]
+    fn mapped_roundtrip_local() {
+        roundtrip(&MappedStrategy);
+    }
+
+    #[test]
+    fn mapped_roundtrip_nfs_emulation() {
+        let b = NfsBackend::instant();
+        let path = format!("/tmp/jpio-mapped-nfs-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(8192).unwrap();
+        let runs = [(4000u64, 32usize), (100, 8)];
+        let data: Vec<u8> = (0..40u8).collect();
+        MappedStrategy.write(f.as_ref(), &runs, &data).unwrap();
+        let mut back = vec![0u8; 40];
+        MappedStrategy.read(f.as_ref(), &runs, &mut back).unwrap();
+        assert_eq!(back, data);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn mapped_read_clamps_at_eof() {
+        let b = LocalBackend::instant();
+        let path = format!("/tmp/jpio-mapped-eof-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[7u8; 100]).unwrap();
+        let mut buf = [0u8; 64];
+        // Run extends past EOF: read what exists.
+        let got = MappedStrategy.read(f.as_ref(), &[(80, 64)], &mut buf).unwrap();
+        assert_eq!(got, 20);
+        assert_eq!(&buf[..20], &[7u8; 20]);
+        // Entirely past EOF.
+        assert_eq!(MappedStrategy.read(f.as_ref(), &[(500, 8)], &mut buf).unwrap(), 0);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn mapped_write_extends_file() {
+        let b = LocalBackend::instant();
+        let path = format!("/tmp/jpio-mapped-extend-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        MappedStrategy.write(f.as_ref(), &[(10000, 16)], &[3u8; 16]).unwrap();
+        assert!(f.size().unwrap() >= 10016);
+        let mut buf = [0u8; 16];
+        f.read_at(10000, &mut buf).unwrap();
+        assert_eq!(buf, [3u8; 16]);
+        b.delete(&path).unwrap();
+    }
+}

@@ -1,0 +1,228 @@
+//! Write data sieving — ROMIO's other signature optimization (§2.2.1:
+//! "ROMIO is optimized for noncontiguous access patterns").
+//!
+//! A strided write of many small pieces touches the file once per piece.
+//! Data sieving instead reads the whole span into a staging buffer,
+//! patches the pieces in memory, and writes the span back with one large
+//! transfer — a read-modify-write that must hold the file lock so
+//! concurrent writers cannot be clobbered by the write-back of stale gap
+//! bytes.
+//!
+//! Enabled per-file with the `romio_ds_write = enable` hint; the
+//! `ablations` bench measures the crossover against per-run writes.
+
+use super::{check_total, AccessStrategy, ViewBufStrategy};
+use crate::io::errors::Result;
+use crate::storage::StorageFile;
+
+/// Read-modify-write sieving strategy for noncontiguous writes.
+/// Reads delegate to [`ViewBufStrategy`] (read sieving is its batching).
+pub struct SieveStrategy {
+    /// Maximum span handled by one read-modify-write round.
+    pub stage_size: usize,
+}
+
+impl Default for SieveStrategy {
+    fn default() -> Self {
+        SieveStrategy { stage_size: 8 << 20 }
+    }
+}
+
+impl SieveStrategy {
+    /// Strategy with an explicit staging capacity.
+    pub fn with_stage(stage_size: usize) -> Self {
+        assert!(stage_size > 0);
+        SieveStrategy { stage_size }
+    }
+}
+
+impl AccessStrategy for SieveStrategy {
+    fn name(&self) -> &'static str {
+        "data_sieving"
+    }
+
+    fn read(
+        &self,
+        file: &dyn StorageFile,
+        runs: &[(u64, usize)],
+        buf: &mut [u8],
+    ) -> Result<usize> {
+        ViewBufStrategy::with_stage(self.stage_size).read(file, runs, buf)
+    }
+
+    fn write(&self, file: &dyn StorageFile, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        check_total(runs, buf.len())?;
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        // Fast path: contiguous single run needs no sieve.
+        if let [(off, len)] = runs {
+            return file.write_at(*off, &buf[..*len]);
+        }
+        let mut pos = 0;
+        let mut i = 0;
+        let mut stage = Vec::new();
+        while i < runs.len() {
+            // Group runs whose span fits the stage.
+            let start = runs[i].0;
+            let mut end = runs[i].0 + runs[i].1 as u64;
+            let mut j = i + 1;
+            while j < runs.len() {
+                let (o, l) = runs[j];
+                let ne = o + l as u64;
+                if o < end || ne - start > self.stage_size as u64 {
+                    break;
+                }
+                end = ne;
+                j += 1;
+            }
+            let span = (end - start) as usize;
+            if j - i == 1 {
+                // Lone run: direct write.
+                let (o, l) = runs[i];
+                file.write_at(o, &buf[pos..pos + l])?;
+                pos += l;
+            } else {
+                stage.resize(span, 0);
+                // Read-modify-write under the file lock: the gap bytes we
+                // read back must not race concurrent writers.
+                let _guard = file.lock_exclusive()?;
+                let got = file.read_at(start, &mut stage[..span])?;
+                // Bytes past EOF read as zero — already the case since
+                // resize zero-fills and read_at is short at EOF.
+                let _ = got;
+                for &(o, l) in &runs[i..j] {
+                    let s = (o - start) as usize;
+                    stage[s..s + l].copy_from_slice(&buf[pos..pos + l]);
+                    pos += l;
+                }
+                file.write_at(start, &stage[..span])?;
+            }
+            i = j;
+        }
+        Ok(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::local::LocalBackend;
+    use crate::storage::{Backend, OpenOptions};
+    use crate::strategy::testutil::roundtrip;
+    use crate::testing::{forall, Config};
+
+    #[test]
+    fn sieve_roundtrip() {
+        roundtrip(&SieveStrategy::default());
+    }
+
+    #[test]
+    fn sieve_preserves_gap_bytes() {
+        let b = LocalBackend::instant();
+        let path = format!("/tmp/jpio-sieve-gaps-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[0xEEu8; 256]).unwrap();
+        let s = SieveStrategy::with_stage(256);
+        // Pieces at 10, 50, 90 — gaps must keep 0xEE.
+        s.write(f.as_ref(), &[(10, 8), (50, 8), (90, 8)], &[1u8; 24]).unwrap();
+        let mut all = [0u8; 128];
+        f.read_at(0, &mut all).unwrap();
+        for (i, &v) in all.iter().enumerate() {
+            let inside = (10..18).contains(&i) || (50..58).contains(&i) || (90..98).contains(&i);
+            assert_eq!(v, if inside { 1 } else { 0xEE }, "byte {i}");
+        }
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn sieve_extends_past_eof() {
+        let b = LocalBackend::instant();
+        let path = format!("/tmp/jpio-sieve-eof-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let s = SieveStrategy::default();
+        // File is empty; sieved RMW of pieces beyond EOF must still land.
+        s.write(f.as_ref(), &[(100, 4), (200, 4)], &[9u8; 8]).unwrap();
+        let mut back = [0u8; 4];
+        f.read_at(200, &mut back).unwrap();
+        assert_eq!(back, [9u8; 4]);
+        let mut gap = [0xFFu8; 4];
+        f.read_at(150, &mut gap).unwrap();
+        assert_eq!(gap, [0u8; 4], "gap must be zero-filled, not garbage");
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn concurrent_sieved_writers_do_not_clobber() {
+        // Two threads sieve-write interleaved pieces of the same span;
+        // without the RMW lock one's write-back would erase the other's.
+        let b = LocalBackend::instant();
+        let path = format!("/tmp/jpio-sieve-race-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(4096).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..2u8 {
+                let f = &f;
+                scope.spawn(move || {
+                    let s = SieveStrategy::with_stage(4096);
+                    // Thread t owns pieces at offsets ≡ t (mod 2) * 64.
+                    for round in 0..20 {
+                        let runs: Vec<(u64, usize)> = (0..16)
+                            .map(|k| ((k * 128 + t as u64 * 64), 64usize))
+                            .collect();
+                        let payload = vec![t + 1 + (round % 2) as u8 * 0; 16 * 64];
+                        s.write(f.as_ref(), &runs, &payload).unwrap();
+                    }
+                });
+            }
+        });
+        let mut all = vec![0u8; 2048];
+        f.read_at(0, &mut all).unwrap();
+        for (i, chunk) in all.chunks_exact(64).enumerate() {
+            let want = (i % 2) as u8 + 1;
+            assert!(chunk.iter().all(|&v| v == want), "piece {i} clobbered: {:?}", &chunk[..4]);
+        }
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn prop_sieve_equals_bulk_on_disjoint_runs() {
+        use crate::strategy::BulkStrategy;
+        let b = LocalBackend::instant();
+        let path = format!("/tmp/jpio-sieve-prop-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(8192).unwrap();
+        forall(
+            Config::default().cases(40),
+            |r| {
+                let n = r.range(1, 10);
+                let mut runs = Vec::new();
+                let mut cursor = 0u64;
+                for _ in 0..n {
+                    let gap = r.range(0, 100) as u64;
+                    let len = r.range(1, 300);
+                    if cursor + gap + len as u64 > 8192 {
+                        break;
+                    }
+                    runs.push((cursor + gap, len));
+                    cursor += gap + len as u64;
+                }
+                if runs.is_empty() {
+                    runs.push((0, 32));
+                }
+                let total = runs.iter().map(|&(_, l)| l).sum();
+                let mut data = vec![0u8; total];
+                r.fill_bytes(&mut data);
+                (runs, data, r.range(64, 4096))
+            },
+            |(runs, data, stage)| {
+                let s = SieveStrategy::with_stage(*stage);
+                s.write(f.as_ref(), runs, data).unwrap();
+                let mut got = vec![0u8; data.len()];
+                BulkStrategy.read(f.as_ref(), runs, &mut got).unwrap();
+                got == *data
+            },
+        );
+        b.delete(&path).unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Test-support utilities: a deterministic PRNG and a small
+//! property-based-testing runner (the offline build environment has no
+//! `proptest`; `prop` provides the subset we need with shrinking).
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{forall, Config};
+pub use rng::SplitMix64;

@@ -1,0 +1,174 @@
+//! A minimal property-based-testing runner with shrinking.
+//!
+//! The offline crate cache has no `proptest`, so this module supplies the
+//! subset used by jpio's invariant tests: run a property over `n` random
+//! inputs produced by a generator closure, and on failure shrink the
+//! failing input with a caller-supplied shrinker before reporting.
+//!
+//! ```no_run
+//! use jpio::testing::{forall, Config};
+//! forall(Config::default().cases(64), |rng| rng.range(0, 1000), |&n| {
+//!     // property: usize addition with 1 never decreases
+//!     n + 1 > n
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i` so failures name a single seed.
+    pub seed: u64,
+    /// Maximum shrink iterations.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0x5EED, max_shrink: 512 }
+    }
+}
+
+impl Config {
+    /// Override the number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics (with the seed
+/// and debug form of the input) on the first falsified case.
+pub fn forall<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = SplitMix64::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified (case {i}, seed {seed:#x}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but with a shrinker: on failure, `shrink` proposes
+/// smaller candidates (return `None` when no smaller candidate exists) and
+/// the runner reports the smallest falsifying input it can find.
+pub fn forall_shrink<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut SplitMix64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> bool,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = SplitMix64::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut smallest = input.clone();
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&smallest) {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        smallest = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property falsified (case {i}, seed {seed:#x}):\n  original = {input:?}\n  shrunk   = {smallest:?}"
+            );
+        }
+    }
+}
+
+/// Standard shrinker for vectors: halves, removals, and element shrinks
+/// toward zero for integer-like payloads provided by `elem_shrink`.
+pub fn shrink_vec<T: Clone>(v: &[T], elem_shrink: impl Fn(&T) -> Option<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    // Halves.
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    // Drop one element (first, middle, last).
+    for &idx in &[0, v.len() / 2, v.len() - 1] {
+        let mut c = v.to_vec();
+        c.remove(idx.min(c.len() - 1));
+        out.push(c);
+    }
+    // Shrink one element.
+    for idx in [0, v.len() / 2, v.len() - 1] {
+        if let Some(e) = elem_shrink(&v[idx]) {
+            let mut c = v.to_vec();
+            c[idx] = e;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::default().cases(50), |r| r.next_u64(), |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_panics() {
+        forall(Config::default().cases(50), |r| r.range(0, 100), |&n| n < 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn shrinker_reduces_input() {
+        forall_shrink(
+            Config::default().cases(20),
+            |r| {
+                let n = r.range(5, 30);
+                r.vec_i32(n)
+            },
+            |v| shrink_vec(v, |&x| if x != 0 { Some(x / 2) } else { None }),
+            |v| v.len() < 3, // fails for any vec of len >= 3; shrinks toward len 3
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_candidates() {
+        let v = vec![8, 9, 10, 11];
+        let cands = shrink_vec(&v, |&x| if x != 0 { Some(x / 2) } else { None });
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+    }
+}

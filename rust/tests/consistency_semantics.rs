@@ -1,0 +1,155 @@
+//! The consistency-semantics examples of §7.2.6.10, executed as tests.
+//!
+//! * Example 1 — sequential consistency via **atomic mode**: process 0
+//!   writes, process 1 reads the same region; with atomicity enabled the
+//!   read sees either none or all of the write, never a torn mix.
+//! * Example 2 — the **sync / barrier / sync** recipe in nonatomic mode.
+//! * Example 3 — the *erroneous* shortcut (one sync only) the spec warns
+//!   about: we verify the legal recipe works rather than relying on the
+//!   illegal one failing (it may "work" by luck on a local FS — that is
+//!   exactly the paper's point about implementation-defined outcomes).
+
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::{amode, File, Info};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-consistency-{}-{name}", std::process::id())
+}
+
+/// §7.2.6.10 Example 1: atomic mode makes concurrent conflicting access
+/// well-defined.
+#[test]
+fn example1_sequential_consistency_by_atomic_mode() {
+    let path = tmp("ex1");
+    threads::run(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        f.set_atomicity(true).unwrap();
+        // Pre-fill with a known pattern so "none of the write" is
+        // distinguishable.
+        if c.rank() == 0 {
+            f.write_at(0, vec![-1i32; 10].as_slice(), 0, 10, &Datatype::INT).unwrap();
+            f.sync().unwrap();
+        }
+        c.barrier();
+        for round in 0..50 {
+            if c.rank() == 0 {
+                let a = vec![round as i32; 10];
+                f.write_at(0, a.as_slice(), 0, 10, &Datatype::INT).unwrap();
+            } else {
+                let mut b = vec![0i32; 10];
+                let st = f.read_at(0, b.as_mut_slice(), 0, 10, &Datatype::INT).unwrap();
+                assert_eq!(st.bytes, 40);
+                // Atomicity: all ten ints must be identical (some round's
+                // complete write, or the prefill) — never torn.
+                assert!(
+                    b.windows(2).all(|w| w[0] == w[1]),
+                    "torn read in atomic mode: {b:?}"
+                );
+            }
+        }
+        c.barrier();
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// §7.2.6.10 Example 2: nonatomic mode + sync/barrier/sync.
+#[test]
+fn example2_sync_barrier_sync() {
+    let path = tmp("ex2");
+    threads::run(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        if c.rank() == 0 {
+            let a = vec![5i32; 10];
+            f.write_at(0, a.as_slice(), 0, 10, &Datatype::INT).unwrap();
+            f.sync().unwrap(); // flush my writes
+            c.barrier();
+            f.sync().unwrap(); // see others' (none here)
+        } else {
+            f.sync().unwrap();
+            c.barrier();
+            f.sync().unwrap(); // makes rank 0's flushed data visible
+            let mut b = vec![0i32; 10];
+            let st = f.read_at(0, b.as_mut_slice(), 0, 10, &Datatype::INT).unwrap();
+            assert_eq!(st.bytes, 40);
+            assert_eq!(b, vec![5i32; 10]);
+        }
+        c.barrier();
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// §7.2.6.10 Example 3 (the erroneous variant, made legal): the full
+/// recipe must also work through two *separate* collective opens.
+#[test]
+fn example3_two_separate_opens() {
+    let path = tmp("ex3");
+    threads::run(2, |c| {
+        // Writer epoch.
+        let f1 = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        if c.rank() == 0 {
+            f1.write_at(0, vec![9i32; 10].as_slice(), 0, 10 * 4, &Datatype::BYTE)
+                .map(|_| ())
+                .unwrap_err(); // datatype mismatch guard (BYTE vs i32 buf)
+            f1.write_at(0, vec![9u8; 40].as_slice(), 0, 40, &Datatype::BYTE).unwrap();
+            f1.sync().unwrap();
+        }
+        f1.close().unwrap(); // close is a sync point
+        c.barrier();
+        // Reader epoch: a second collective open must observe the data.
+        let f2 = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+        let mut b = vec![0u8; 40];
+        let st = f2.read_at(0, b.as_mut_slice(), 0, 40, &Datatype::BYTE).unwrap();
+        assert_eq!(st.bytes, 40);
+        assert!(b.iter().all(|&v| v == 9));
+        f2.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// Concurrent non-overlapping writes need no atomicity (§3.5.3:
+/// "MPI-IO guarantees the concurrent nonoverlapping writes correctly").
+#[test]
+fn nonoverlapping_writes_are_always_safe() {
+    let path = tmp("nonoverlap");
+    threads::run(8, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        assert!(!f.get_atomicity());
+        let mine = vec![c.rank() as u8; 4096];
+        f.write_at((c.rank() * 4096) as i64, mine.as_slice(), 0, 4096, &Datatype::BYTE)
+            .unwrap();
+        c.barrier();
+        let mut all = vec![0u8; 8 * 4096];
+        f.read_at(0, all.as_mut_slice(), 0, 8 * 4096, &Datatype::BYTE).unwrap();
+        for (i, chunk) in all.chunks_exact(4096).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as u8), "region {i} corrupted");
+        }
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// Atomic-mode overlapping writes from many ranks leave one complete
+/// winner per region (stress version of Example 1).
+#[test]
+fn atomic_overlapping_writes_are_untorn() {
+    let path = tmp("atomicstress");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_atomicity(true).unwrap();
+        let mine = vec![c.rank() as i32 + 1; 1024];
+        for _ in 0..8 {
+            f.write_at(0, mine.as_slice(), 0, 1024, &Datatype::INT).unwrap();
+        }
+        c.barrier();
+        let mut back = vec![0i32; 1024];
+        f.read_at(0, back.as_mut_slice(), 0, 1024, &Datatype::INT).unwrap();
+        assert!(back.windows(2).all(|w| w[0] == w[1]), "torn atomic write");
+        assert!((1..=4).contains(&back[0]));
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}

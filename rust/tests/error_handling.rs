@@ -1,0 +1,195 @@
+//! Error handling (§7.2.7/7.2.8) under fault injection: failures must
+//! surface with the correct MPI error class, not corrupt library state,
+//! and the handle must stay usable afterwards.
+
+use std::sync::Arc;
+
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::{amode, ErrorClass, File, Info};
+use jpio::storage::faults::{FaultBackend, FaultOp, FaultPlan, FaultRule};
+use jpio::storage::local::LocalBackend;
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-errors-{}-{name}", std::process::id())
+}
+
+fn faulty_backend(rules: Vec<FaultRule>) -> Arc<FaultBackend<LocalBackend>> {
+    Arc::new(FaultBackend::new(LocalBackend::instant(), FaultPlan::new(rules)))
+}
+
+#[test]
+fn write_fault_surfaces_class_and_handle_survives() {
+    let path = tmp("writefault");
+    let backend = faulty_backend(vec![FaultRule {
+        op: FaultOp::Write,
+        nth: 1,
+        class: ErrorClass::NoSpace,
+    }]);
+    threads::run(1, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        let data = vec![1u8; 64];
+        f.write_at(0, data.as_slice(), 0, 64, &Datatype::BYTE).unwrap(); // #0 ok
+        let err = f.write_at(64, data.as_slice(), 0, 64, &Datatype::BYTE).unwrap_err();
+        assert_eq!(err.class, ErrorClass::NoSpace);
+        assert!(err.to_string().contains("MPI_ERR_NO_SPACE"));
+        // Handle still usable.
+        f.write_at(64, data.as_slice(), 0, 64, &Datatype::BYTE).unwrap();
+        let mut back = vec![0u8; 128];
+        f.read_at(0, back.as_mut_slice(), 0, 128, &Datatype::BYTE).unwrap();
+        assert!(back.iter().all(|&b| b == 1));
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn read_fault_in_nonblocking_op_propagates_through_request() {
+    let path = tmp("ireadfault");
+    let backend = faulty_backend(vec![FaultRule {
+        op: FaultOp::Read,
+        nth: 0,
+        class: ErrorClass::Io,
+    }]);
+    threads::run(1, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        f.write_at(0, vec![3u8; 32].as_slice(), 0, 32, &Datatype::BYTE).unwrap();
+        let req = f.iread_at(0, vec![0u8; 32], 0, 32, &Datatype::BYTE).unwrap();
+        let err = req.wait().unwrap_err();
+        assert_eq!(err.class, ErrorClass::Io);
+        // Second attempt (rule fired once) succeeds.
+        let req = f.iread_at(0, vec![0u8; 32], 0, 32, &Datatype::BYTE).unwrap();
+        let (st, buf) = req.wait().unwrap();
+        assert_eq!(st.bytes, 32);
+        assert!(buf.iter().all(|&b| b == 3));
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn sync_fault_is_reported() {
+    let path = tmp("syncfault");
+    let backend = faulty_backend(vec![FaultRule {
+        op: FaultOp::Sync,
+        nth: 0,
+        class: ErrorClass::Quota,
+    }]);
+    threads::run(1, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        assert_eq!(f.sync().unwrap_err().class, ErrorClass::Quota);
+        f.sync().unwrap();
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn fault_during_split_collective_write() {
+    let path = tmp("splitfault");
+    // Fail the second storage write: first collective write succeeds,
+    // second one's END reports the error.
+    let backend = faulty_backend(vec![FaultRule {
+        op: FaultOp::Write,
+        nth: 1,
+        class: ErrorClass::NoSpace,
+    }]);
+    threads::run(1, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        let d = vec![1i32; 256];
+        f.write_at_all_begin(0, d.as_slice(), 0, 256, &Datatype::INT).unwrap();
+        f.write_at_all_end().unwrap();
+        // On a single rank the collective degenerates to an independent
+        // write performed at BEGIN; on larger worlds the storage phase
+        // runs on the engine and the error surfaces at END. Accept both.
+        let err = match f.write_at_all_begin(256, d.as_slice(), 0, 256, &Datatype::INT) {
+            Err(e) => e,
+            Ok(()) => f.write_at_all_end().unwrap_err(),
+        };
+        assert_eq!(err.class, ErrorClass::NoSpace);
+        // Handle reusable after the failed split op.
+        f.write_at_all_begin(256, d.as_slice(), 0, 256, &Datatype::INT).unwrap();
+        f.write_at_all_end().unwrap();
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn open_error_classes() {
+    threads::run(1, |c| {
+        // Missing file.
+        let err = File::open(c, "/tmp/jpio-no-such-file-xyz", amode::RDWR, Info::null())
+            .map(|_| ())
+            .unwrap_err();
+        assert_eq!(err.class, ErrorClass::NoSuchFile);
+        // Invalid amode.
+        let err = File::open(c, "/tmp/x", amode::RDONLY | amode::CREATE, Info::null())
+            .map(|_| ())
+            .unwrap_err();
+        assert_eq!(err.class, ErrorClass::Amode);
+        // Unknown backend hint.
+        let err = File::open(
+            c,
+            "/tmp/x",
+            amode::RDWR | amode::CREATE,
+            Info::from([("jpio_backend", "punchcards")]),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert_eq!(err.class, ErrorClass::Arg);
+    });
+}
+
+#[test]
+fn collective_open_failure_propagates_to_all_ranks() {
+    // Rank 0 fails the create (missing directory); every rank must get an
+    // error, not a hang.
+    threads::run(3, |c| {
+        let err = File::open(
+            c,
+            "/tmp/jpio-missing-dir-abc/file.dat",
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(
+            err.class == ErrorClass::NoSuchFile || err.class == ErrorClass::File,
+            "rank {} got {:?}",
+            c.rank(),
+            err.class
+        );
+    });
+}

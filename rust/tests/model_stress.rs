@@ -1,0 +1,216 @@
+//! Model-based differential testing: random operation sequences against
+//! an in-memory mirror of the file.
+//!
+//! A single rank drives randomized `write_at`/`read_at`/`write`/`read`/
+//! `seek`/`set_size`/`write_shared`/view changes against both the real
+//! `File` and a `Vec<u8>` model that implements POSIX semantics (sparse
+//! zero fill, EOF-short reads). After every read the two must agree; at
+//! the end the raw file must equal the model byte-for-byte.
+//!
+//! This is the invariant net under the whole flattening/strategy/pointer
+//! machinery — any disagreement between the view math and the actual byte
+//! placement shows up here with a reproducible seed.
+
+use jpio::comm::datatype::Datatype;
+use jpio::comm::threads;
+use jpio::io::{amode, seek, File, Info};
+use jpio::testing::SplitMix64;
+
+/// In-memory POSIX-file model.
+struct ModelFile {
+    data: Vec<u8>,
+}
+
+impl ModelFile {
+    fn new() -> Self {
+        ModelFile { data: Vec::new() }
+    }
+
+    fn write_at(&mut self, off: usize, buf: &[u8]) {
+        if self.data.len() < off + buf.len() {
+            self.data.resize(off + buf.len(), 0);
+        }
+        self.data[off..off + buf.len()].copy_from_slice(buf);
+    }
+
+    fn read_at(&self, off: usize, len: usize) -> Vec<u8> {
+        let mut out = vec![0u8; len];
+        if off < self.data.len() {
+            let n = (self.data.len() - off).min(len);
+            out[..n].copy_from_slice(&self.data[off..off + n]);
+        }
+        out
+    }
+
+    fn visible(&self, off: usize, len: usize) -> usize {
+        self.data.len().saturating_sub(off).min(len)
+    }
+
+    fn set_size(&mut self, size: usize) {
+        self.data.resize(size, 0);
+    }
+}
+
+fn run_stress(seed: u64, strategy: &str) {
+    let path = format!("/tmp/jpio-stress-{}-{seed}-{strategy}", std::process::id());
+    let strategy = strategy.to_string();
+    let p = path.clone();
+    threads::run(1, move |c| {
+        let info = Info::from([("access_style", strategy.as_str())]);
+        let f = File::open(c, &p, amode::RDWR | amode::CREATE, info).unwrap();
+        let mut model = ModelFile::new();
+        let mut rng = SplitMix64::new(seed);
+        let mut ptr = 0usize; // mirror of the individual pointer (bytes)
+        for step in 0..400 {
+            match rng.below(8) {
+                // write_at
+                0 | 1 => {
+                    let off = rng.range(0, 4096);
+                    let len = rng.range(1, 512);
+                    let mut buf = vec![0u8; len];
+                    rng.fill_bytes(&mut buf);
+                    let st = f.write_at(off as i64, buf.as_slice(), 0, len, &Datatype::BYTE)
+                        .unwrap();
+                    assert_eq!(st.bytes, len);
+                    model.write_at(off, &buf);
+                }
+                // read_at
+                2 | 3 => {
+                    let off = rng.range(0, 5000);
+                    let len = rng.range(1, 512);
+                    let mut buf = vec![0xABu8; len];
+                    let st = f.read_at(off as i64, buf.as_mut_slice(), 0, len, &Datatype::BYTE)
+                        .unwrap();
+                    let want_bytes = model.visible(off, len);
+                    assert_eq!(st.bytes, want_bytes, "step {step} read_at count (seed {seed:#x})");
+                    let want = model.read_at(off, len);
+                    assert_eq!(
+                        &buf[..want_bytes],
+                        &want[..want_bytes],
+                        "step {step} read_at data (seed {seed:#x})"
+                    );
+                }
+                // sequential write via individual pointer
+                4 => {
+                    let len = rng.range(1, 256);
+                    let mut buf = vec![0u8; len];
+                    rng.fill_bytes(&mut buf);
+                    f.write(buf.as_slice(), 0, len, &Datatype::BYTE).unwrap();
+                    model.write_at(ptr, &buf);
+                    ptr += len;
+                    assert_eq!(f.get_position().unwrap(), ptr as i64);
+                }
+                // sequential read via individual pointer
+                5 => {
+                    let len = rng.range(1, 256);
+                    let mut buf = vec![0u8; len];
+                    let st = f.read(buf.as_mut_slice(), 0, len, &Datatype::BYTE).unwrap();
+                    let want_bytes = model.visible(ptr, len);
+                    assert_eq!(st.bytes, want_bytes, "step {step} read count (seed {seed:#x})");
+                    let want = model.read_at(ptr, len);
+                    assert_eq!(&buf[..want_bytes], &want[..want_bytes]);
+                    ptr += want_bytes;
+                }
+                // seek
+                6 => {
+                    let target = rng.range(0, 4096);
+                    f.seek(target as i64, seek::SET).unwrap();
+                    ptr = target;
+                }
+                // resize (grow or shrink)
+                _ => {
+                    let size = rng.range(0, 6000);
+                    f.set_size(size as i64).unwrap();
+                    model.set_size(size);
+                }
+            }
+        }
+        // Final: whole-file comparison.
+        let fsize = f.get_size().unwrap() as usize;
+        assert_eq!(fsize, model.data.len(), "final size (seed {seed:#x})");
+        let mut all = vec![0u8; fsize];
+        if fsize > 0 {
+            f.read_at(0, all.as_mut_slice(), 0, fsize, &Datatype::BYTE).unwrap();
+        }
+        assert_eq!(all, model.data, "final contents (seed {seed:#x})");
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn stress_view_buffer() {
+    for seed in [1, 2, 3, 0xDEAD] {
+        run_stress(seed, "view_buffer");
+    }
+}
+
+#[test]
+fn stress_bulk() {
+    for seed in [4, 5, 0xBEEF] {
+        run_stress(seed, "bulk");
+    }
+}
+
+#[test]
+fn stress_data_sieving() {
+    for seed in [6, 7, 0xCAFE] {
+        run_stress(seed, "data_sieving");
+    }
+}
+
+#[test]
+fn stress_per_item() {
+    run_stress(8, "per_item"); // slow strategy: one seed suffices
+}
+
+/// Same differential net through a *strided view*: writes through the
+/// view land at the flattened positions the model predicts.
+#[test]
+fn stress_strided_view_against_model() {
+    let path = format!("/tmp/jpio-stress-view-{}", std::process::id());
+    let p = path.clone();
+    threads::run(1, move |c| {
+        let f = File::open(c, &p, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let mut rng = SplitMix64::new(0x57EED);
+        for round in 0..30 {
+            // Random interleave geometry.
+            let nslots = rng.range(2, 5);
+            let myslot = rng.range(0, nslots - 1);
+            let blocklen = rng.range(1, 4);
+            let cell = Datatype::vector(1, blocklen, blocklen as i64, &Datatype::INT).unwrap();
+            let ft =
+                Datatype::resized(&cell, 0, (nslots * blocklen * 4) as i64).unwrap();
+            f.set_view(
+                (myslot * blocklen * 4) as i64,
+                &Datatype::INT,
+                &ft,
+                "native",
+                &Info::null(),
+            )
+            .unwrap();
+            let k = rng.range(1, 40);
+            let vals: Vec<i32> = (0..k).map(|_| rng.next_u64() as i32).collect();
+            let off = rng.range(0, 20) as i64;
+            f.write_at(off, vals.as_slice(), 0, k, &Datatype::INT).unwrap();
+            // Model: compute expected absolute int positions.
+            let frame = nslots * blocklen;
+            let mut expected = Vec::with_capacity(k);
+            for i in 0..k {
+                let e = off as usize + i;
+                let inst = e / blocklen;
+                let inner = e % blocklen;
+                expected.push(inst * frame + myslot * blocklen + inner);
+            }
+            // Verify through a flat view read.
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            for (i, &pos) in expected.iter().enumerate() {
+                let mut one = [0i32];
+                f.read_at(pos as i64, one.as_mut_slice(), 0, 1, &Datatype::INT).unwrap();
+                assert_eq!(one[0], vals[i], "round {round} element {i} at int {pos}");
+            }
+        }
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}

@@ -1,0 +1,166 @@
+//! Distributed-memory integration: the full io layer across *forked
+//! processes* (the paper's MPJ Express configuration), including the NFS
+//! backend, collective I/O, shared pointers and ordered writes — the
+//! paths where cross-address-space coordination (flock sidecars, the
+//! socket-mesh communicator) actually matters.
+
+use jpio::comm::{process, Comm, Datatype};
+use jpio::io::{amode, File, Info};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-multiproc-{}-{name}", std::process::id())
+}
+
+#[test]
+fn collective_write_read_across_processes() {
+    let path = tmp("coll");
+    process::run_local(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let r = c.rank();
+        let mine: Vec<i32> = (0..512).map(|i| (r * 512 + i) as i32).collect();
+        f.write_at_all((r * 512) as i64, mine.as_slice(), 0, 512, &Datatype::INT).unwrap();
+        c.barrier();
+        let n = 512 * c.size();
+        let mut all = vec![0i32; n];
+        f.read_at_all(0, all.as_mut_slice(), 0, n, &Datatype::INT).unwrap();
+        assert_eq!(all, (0..n as i32).collect::<Vec<_>>());
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn strided_two_phase_across_processes() {
+    let path = tmp("strided");
+    process::run_local(3, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let n = c.size();
+        let r = c.rank();
+        let slot = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+        let ft = Datatype::resized(&slot, 0, (n * 4) as i64).unwrap();
+        f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+        let k = 300;
+        let mine: Vec<i32> = (0..k).map(|i| (i * n + r) as i32).collect();
+        f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+        c.barrier();
+        let mut back = vec![0i32; k];
+        f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+        assert_eq!(back, mine);
+        f.close().unwrap();
+    });
+    let raw = std::fs::read(&path).unwrap();
+    let ints: Vec<i32> =
+        raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+    assert_eq!(ints, (0..900).collect::<Vec<_>>());
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn shared_pointer_across_processes() {
+    // The sidecar flock fetch-and-add must serialize across address
+    // spaces, not just threads.
+    let path = tmp("sfp");
+    process::run_local(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let mine = vec![c.rank() as i32; 64];
+        for _ in 0..4 {
+            f.write_shared(mine.as_slice(), 0, 64, &Datatype::INT).unwrap();
+        }
+        c.barrier();
+        assert_eq!(f.get_position_shared().unwrap(), 4 * 4 * 64);
+        f.close().unwrap();
+    });
+    let raw = std::fs::read(&path).unwrap();
+    let ints: Vec<i32> =
+        raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+    let mut counts = [0usize; 4];
+    for run in ints.chunks_exact(64) {
+        assert!(run.iter().all(|&v| v == run[0]), "interleaved shared append");
+        counts[run[0] as usize] += 1;
+    }
+    assert_eq!(counts, [4, 4, 4, 4]);
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn ordered_write_across_processes() {
+    let path = tmp("ordered");
+    process::run_local(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let mine = vec![c.rank() as i32; (c.rank() + 1) * 8];
+        f.write_ordered(mine.as_slice(), 0, mine.len(), &Datatype::INT).unwrap();
+        f.close().unwrap();
+    });
+    let raw = std::fs::read(&path).unwrap();
+    let ints: Vec<i32> =
+        raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+    let mut want = Vec::new();
+    for r in 0..4 {
+        want.extend(std::iter::repeat(r as i32).take((r + 1) * 8));
+    }
+    assert_eq!(ints, want);
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn nfs_backend_across_processes() {
+    // Full protocol paths (chunked writes, server lock, COMMIT) across
+    // processes, instant cost profile.
+    let path = tmp("nfs");
+    process::run_local(3, |c| {
+        let info = Info::from([("jpio_backend", "nfs")]);
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
+        let mine = vec![c.rank() as u8; 128 * 1024];
+        f.write_at((c.rank() * 128 * 1024) as i64, mine.as_slice(), 0, mine.len(), &Datatype::BYTE)
+            .unwrap();
+        f.sync().unwrap();
+        c.barrier();
+        let n = 128 * 1024;
+        let mut peer = vec![0u8; n];
+        let p = (c.rank() + 1) % c.size();
+        f.read_at((p * n) as i64, peer.as_mut_slice(), 0, n, &Datatype::BYTE)
+            .unwrap();
+        assert!(peer.iter().all(|&v| v == p as u8));
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn atomic_mode_across_processes() {
+    let path = tmp("atomic");
+    process::run_local(3, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_atomicity(true).unwrap();
+        let mine = vec![c.rank() as i32 + 10; 2048];
+        for _ in 0..5 {
+            f.write_at(0, mine.as_slice(), 0, 2048, &Datatype::INT).unwrap();
+        }
+        c.barrier();
+        let mut back = vec![0i32; 2048];
+        f.read_at(0, back.as_mut_slice(), 0, 2048, &Datatype::INT).unwrap();
+        assert!(back.windows(2).all(|w| w[0] == w[1]), "torn cross-process atomic write");
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn delete_on_close_across_processes() {
+    let path = tmp("doc");
+    process::run_local(2, |c| {
+        let f = File::open(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE | amode::DELETE_ON_CLOSE,
+            Info::null(),
+        )
+        .unwrap();
+        f.write_at(0, b"temp".as_slice(), 0, 4, &Datatype::BYTE).unwrap();
+        f.close().unwrap();
+    });
+    assert!(!std::path::Path::new(&path).exists());
+}

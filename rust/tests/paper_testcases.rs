@@ -1,0 +1,140 @@
+//! The paper's §3.6 prototype test cases, reproduced one-for-one:
+//! `Coll_test.java`, `Async_test.java`, `Atomicity_test.java`,
+//! `Misc_test.java`, `Perf.java`.
+
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::{amode, seek, File, Info};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-papertest-{}-{name}", std::process::id())
+}
+
+/// §3.6.1 Coll_test: "uses collective read and write operation to write
+/// and then read file. 1KB data is first written and then read."
+#[test]
+fn paper_coll_test() {
+    let path = tmp("coll");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let buf: Vec<u8> = (0..1024u32).map(|i| (i + c.rank() as u32) as u8).collect();
+        let st = f
+            .write_at_all((c.rank() * 1024) as i64, buf.as_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        assert_eq!(st.bytes, 1024);
+        c.barrier();
+        let mut back = vec![0u8; 1024];
+        let st = f
+            .read_at_all((c.rank() * 1024) as i64, back.as_mut_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        assert_eq!(st.bytes, 1024);
+        assert_eq!(back, buf);
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// §3.6.2 Async_test: "uses non-blocking read and write operation to
+/// write and then read file. 1KB data."
+#[test]
+fn paper_async_test() {
+    let path = tmp("async");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let buf: Vec<u8> = vec![c.rank() as u8; 1024];
+        let req = f
+            .iwrite_at((c.rank() * 1024) as i64, buf.as_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 1024);
+        c.barrier();
+        let req = f
+            .iread_at((c.rank() * 1024) as i64, vec![0u8; 1024], 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        let (st, back) = req.wait().unwrap();
+        assert_eq!(st.bytes, 1024);
+        assert_eq!(back, buf);
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// §3.6.3 Atomicity_test: "simple blocking read and write operation with
+/// an addition of set_atomicity() and get_atomicity() methods."
+#[test]
+fn paper_atomicity_test() {
+    let path = tmp("atomicity");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_atomicity(true).unwrap();
+        assert!(f.get_atomicity());
+        let buf = vec![c.rank() as u8; 1024];
+        f.write_at((c.rank() * 1024) as i64, buf.as_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        c.barrier();
+        let mut back = vec![0u8; 1024];
+        f.read_at((c.rank() * 1024) as i64, back.as_mut_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        assert_eq!(back, buf);
+        f.set_atomicity(false).unwrap();
+        assert!(!f.get_atomicity());
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// §3.6.4 Misc_test: "blocking read and write operations along with ...
+/// getPosition(), getByteOffset() and seek()."
+#[test]
+fn paper_misc_test() {
+    let path = tmp("misc");
+    threads::run(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let buf: Vec<i32> = (0..256).collect(); // 1 KB of ints
+        f.seek((c.rank() * 256) as i64, seek::SET).unwrap();
+        f.write(buf.as_slice(), 0, 256, &Datatype::INT).unwrap();
+        assert_eq!(f.get_position().unwrap(), (c.rank() * 256 + 256) as i64);
+        assert_eq!(
+            f.get_byte_offset((c.rank() * 256) as i64).unwrap(),
+            (c.rank() * 1024) as i64
+        );
+        f.seek(-256, seek::CUR).unwrap();
+        let mut back = vec![0i32; 256];
+        f.read(back.as_mut_slice(), 0, 256, &Datatype::INT).unwrap();
+        assert_eq!(back, buf);
+        c.barrier();
+        f.seek(0, seek::END).unwrap();
+        assert_eq!(f.get_position().unwrap(), 512);
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+/// §3.6.5 Perf: "simple read and write operations are performed without
+/// sync() ... after this ... with the sync() method call" — functional
+/// version (the measured version is `cargo bench --bench fig4_6_prototype`).
+#[test]
+fn paper_perf_test_functional() {
+    let path = tmp("perf");
+    threads::run(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let buf = vec![7u8; 1024];
+        f.seek((c.rank() * 64 * 1024) as i64, seek::SET).unwrap();
+        for _ in 0..32 {
+            f.write(buf.as_slice(), 0, 1024, &Datatype::BYTE).unwrap();
+        }
+        for _ in 0..32 {
+            f.write(buf.as_slice(), 0, 1024, &Datatype::BYTE).unwrap();
+            f.sync().unwrap();
+        }
+        f.seek((c.rank() * 64 * 1024) as i64, seek::SET).unwrap();
+        let mut back = vec![0u8; 1024];
+        for _ in 0..64 {
+            let st = f.read(back.as_mut_slice(), 0, 1024, &Datatype::BYTE).unwrap();
+            assert_eq!(st.bytes, 1024);
+            assert_eq!(back, buf);
+        }
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
