@@ -9,6 +9,9 @@
 //! 4. **atomic mode cost** — the §7.2.6.1 locking overhead per write.
 //! 5. **PJRT pack kernel vs Rust scalar pack** — L1 ablation (skipped if
 //!    artifacts are absent).
+//! 6. **striped storage** — stripe-count × stripe-unit sweep (aggregate
+//!    bandwidth scaling past one server's ingest rate) and stripe-aligned
+//!    vs unaligned collective file domains (the Thakur alignment win).
 
 #[path = "common.rs"]
 mod common;
@@ -220,6 +223,98 @@ fn pjrt_pack_vs_rust() {
     );
 }
 
+fn cleanup_striped(path: &str, servers: usize) {
+    common::cleanup(path);
+    // Delete through the backend so the stripe-object naming stays in
+    // one place (the unit is irrelevant for deletion).
+    let b = jpio::storage::striped::StripedBackend::local(servers, 1);
+    let _ = jpio::storage::Backend::delete(&b, path);
+}
+
+fn striped_storage_scaling() {
+    println!("\n--- ablation 6a: striped NFS — aggregate write bandwidth vs stripe count ---");
+    // Each of 4 rank-threads streams its contiguous partition. Round-robin
+    // striping spreads every partition over all servers, so the per-server
+    // ingest serialization (one NFS server ≈ 275 MB/s, Fig 4-5) stops
+    // being a single global bottleneck and aggregate bandwidth scales
+    // with the stripe count.
+    let total = 16 << 20;
+    for servers in [1usize, 2, 4] {
+        for unit in [64usize << 10, 1 << 20] {
+            let path = format!("/tmp/jpio-abl6-{}-{servers}-{unit}.dat", std::process::id());
+            let backend: std::sync::Arc<dyn jpio::storage::Backend> =
+                std::sync::Arc::new(jpio::storage::striped::StripedBackend::nfs(
+                    servers,
+                    unit as u64,
+                    jpio::storage::nfs::NfsConfig::rcms(),
+                ));
+            let st = common::thread_sweep_case(backend, &path, total, 4, "view_buffer", true);
+            println!(
+                "  {servers} server(s), unit {unit:>8} B: {:8.1} MB/s aggregate write",
+                st.mbs()
+            );
+            cleanup_striped(&path, servers);
+        }
+    }
+}
+
+fn striped_alignment_on_off() {
+    println!("\n--- ablation 6b: collective write — stripe-aligned vs unaligned file domains ---");
+    // 4 ranks, 4 NFS stripe servers, cb_nodes = 4. Aligned (stripe-cyclic)
+    // domains hand each aggregator exactly one server, so the four ingest
+    // sections run in parallel; unaligned contiguous domains make every
+    // aggregator write through all four servers and contend for every
+    // ingest lock (Thakur/Gropp/Lusk's file-domain alignment).
+    let servers = 4usize;
+    let unit = 256usize << 10;
+    let ranks = 4usize;
+    let per_rank = 4usize << 20;
+    let mut mbs = Vec::new();
+    for (label, align) in [("aligned  ", "true"), ("unaligned", "false")] {
+        let path = format!("/tmp/jpio-abl6b-{}-{align}.dat", std::process::id());
+        let stats = bench(label, 1, common::reps(), ranks * per_rank, || {
+            threads::run(ranks, |c| {
+                let info = Info::from([
+                    ("jpio_cb_stripe_align", align),
+                    ("cb_nodes", "4"),
+                ]);
+                let backend: std::sync::Arc<dyn jpio::storage::Backend> =
+                    std::sync::Arc::new(jpio::storage::striped::StripedBackend::nfs(
+                        servers,
+                        unit as u64,
+                        jpio::storage::nfs::NfsConfig::rcms(),
+                    ));
+                let f = File::open_with_backend(
+                    c,
+                    &path,
+                    amode::RDWR | amode::CREATE,
+                    info,
+                    backend,
+                )
+                .unwrap();
+                let r = c.rank();
+                let mine = vec![r as u8; per_rank];
+                f.write_at_all(
+                    (r * per_rank) as i64,
+                    mine.as_slice(),
+                    0,
+                    per_rank,
+                    &Datatype::BYTE,
+                )
+                .unwrap();
+                f.close().unwrap();
+            });
+        });
+        println!("  {label}: {:8.1} MB/s aggregate", stats.mbs());
+        mbs.push(stats.mbs());
+        cleanup_striped(&path, servers);
+    }
+    println!(
+        "  alignment speedup: {:.2}x (aggregators stop contending for each other's servers)",
+        mbs[0] / mbs[1]
+    );
+}
+
 fn main() {
     println!("jpio ablation suite");
     per_item_vs_bulk();
@@ -227,6 +322,8 @@ fn main() {
     sieving_stage_size();
     write_sieving_on_off();
     atomic_mode_cost();
+    striped_storage_scaling();
+    striped_alignment_on_off();
     pjrt_pack_vs_rust();
     let _ = FigureReport::new("ablations", "case"); // keep the type exercised
     println!("\nablations done");

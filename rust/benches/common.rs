@@ -7,7 +7,7 @@ use std::sync::Arc;
 use jpio::bench::{bench, BenchStats};
 use jpio::comm::{threads, Comm};
 use jpio::io::{amode, File, Info};
-use jpio::storage::Backend;
+use jpio::storage::{Backend, StorageFile};
 use jpio::strategy;
 
 /// Per-worker payload bytes for the sweep. The paper used a 1 GiB file;
@@ -97,7 +97,7 @@ pub fn cleanup(path: &str) {
 /// Prepare a file of `bytes` (so read sweeps have data and the page cache
 /// is warm, matching the paper's read-after-write methodology).
 pub fn prewrite(backend: &Arc<dyn Backend>, path: &str, bytes: usize) {
-    let f = backend
+    let f: Arc<dyn StorageFile> = backend
         .open(path, jpio::storage::OpenOptions::rw_create())
         .unwrap();
     let chunk = vec![0xA5u8; 8 << 20];

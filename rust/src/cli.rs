@@ -59,6 +59,25 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
+
+    /// Flag value parsed as a byte size (`64k`, `1m`, ...), with default.
+    pub fn get_size_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(parse_size).unwrap_or(default)
+    }
+}
+
+/// Parse a byte count with an optional binary suffix: `k`/`K` (KiB),
+/// `m`/`M` (MiB), `g`/`G` (GiB). Used by the stripe-unit and buffer-size
+/// flags so `--stripe-unit 64k` works.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (digits, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    digits.parse::<u64>().ok().and_then(|v| v.checked_mul(mult))
 }
 
 #[cfg(test)]
@@ -93,5 +112,21 @@ mod tests {
     fn trailing_switch_without_value() {
         let a = parse("x --flag");
         assert!(a.has("flag"));
+    }
+
+    #[test]
+    fn size_suffixes_parse() {
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("64k"), Some(64 << 10));
+        assert_eq!(parse_size("64K"), Some(64 << 10));
+        assert_eq!(parse_size("2m"), Some(2 << 20));
+        assert_eq!(parse_size("1G"), Some(1 << 30));
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("k"), None);
+        assert_eq!(parse_size("ten"), None);
+        assert_eq!(parse_size("20000000000g"), None, "overflow must not wrap");
+        let a = parse("x --stripe-unit 128k");
+        assert_eq!(a.get_size_or("stripe-unit", 0), 128 << 10);
+        assert_eq!(a.get_size_or("missing", 7), 7);
     }
 }

@@ -163,18 +163,27 @@ impl fmt::Display for Datatype {
 }
 
 /// Error from a datatype constructor.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum TypeError {
     /// Mismatched argument vector lengths for indexed/struct constructors.
-    #[error("argument length mismatch: {0}")]
     ArgMismatch(String),
     /// Subarray bounds fall outside the full array.
-    #[error("subarray out of bounds: {0}")]
     SubarrayBounds(String),
     /// A size/stride argument was invalid (zero or negative where not allowed).
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 }
+
+impl fmt::Display for TypeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TypeError::ArgMismatch(m) => write!(f, "argument length mismatch: {m}"),
+            TypeError::SubarrayBounds(m) => write!(f, "subarray out of bounds: {m}"),
+            TypeError::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TypeError {}
 
 impl Datatype {
     /// `MPI_BYTE`.

@@ -17,6 +17,20 @@
 //! The I/O phase touches only storage, which is what lets the split
 //! collectives ([`crate::io::split`]) run it on the request engine while
 //! the application computes (§7.2.9.1 double buffering).
+//!
+//! ## Stripe-aligned file domains
+//!
+//! On striped storage ([`crate::storage::striped`]) the aggregator
+//! domains are not contiguous byte ranges but *stripe-cyclic* sets:
+//! stripe unit `i` belongs to aggregator `i % cb_nodes`, so domain
+//! boundaries always coincide with stripe boundaries and — when
+//! `cb_nodes` equals the striping factor — each aggregator's I/O lands on
+//! exactly one server. This is the file-domain alignment of Thakur,
+//! Gropp & Lusk ("Optimizing Noncontiguous Accesses in MPI-IO") in its
+//! Lustre/PVFS group-cyclic form: aggregators stop contending for each
+//! other's servers, and aggregate bandwidth scales with the stripe count.
+//! Disable with the `jpio_cb_stripe_align = false` hint (the ablation
+//! bench measures the difference).
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::{Comm, ReduceOp, Status};
@@ -24,6 +38,7 @@ use crate::io::access::{pack_payload, read_payload, unpack_payload, write_payloa
 use crate::io::errors::Result;
 use crate::io::file::File;
 use crate::io::hints::keys;
+use crate::storage::layout::StripeLayout;
 use crate::strategy::{AccessStrategy, ViewBufStrategy};
 
 /// One rank's pieces destined for a single aggregator.
@@ -74,6 +89,56 @@ fn decode_runs(msg: &[u8]) -> (Vec<(u64, usize)>, usize) {
     (runs, pos)
 }
 
+/// Aggregator file-domain assignment for one collective operation.
+pub(crate) enum FileDomains {
+    /// Contiguous near-even byte ranges (the classic ROMIO default).
+    Contiguous(Vec<(u64, u64)>),
+    /// Stripe-cyclic: stripe unit `i` belongs to aggregator `i % naggr`
+    /// (see the module docs). Domains are unions of stripe units, so the
+    /// global byte range needs no explicit bounds here.
+    StripeCyclic { unit: u64, naggr: usize },
+}
+
+impl FileDomains {
+    /// Pick the domain shape: stripe-cyclic when the file sits on striped
+    /// storage and alignment is enabled, contiguous otherwise.
+    fn choose(ctx: &TransferCtx, lo: u64, hi: u64, naggr: usize, stripe_align: bool) -> FileDomains {
+        if stripe_align {
+            if let Some(layout) = ctx.storage.stripe_layout() {
+                return FileDomains::StripeCyclic { unit: layout.unit, naggr };
+            }
+        }
+        FileDomains::Contiguous(split_domains(lo, hi, naggr))
+    }
+
+    /// This rank's request pieces destined for aggregator `a`:
+    /// `(file_off, len, payload_pos)` clipped to the aggregator's domain.
+    fn pieces_for(
+        &self,
+        runs: &[(u64, usize)],
+        positions: &[usize],
+        a: usize,
+    ) -> Vec<(u64, usize, usize)> {
+        match self {
+            FileDomains::Contiguous(domains) => slice_runs_for_domain(runs, positions, domains[a]),
+            FileDomains::StripeCyclic { unit, naggr } => {
+                // Reuse the layout walk with the aggregator count as the
+                // "factor": the piece's server index *is* its aggregator.
+                let cyclic = StripeLayout { unit: *unit, factor: *naggr };
+                let mut out = Vec::new();
+                for (i, &(off, len)) in runs.iter().enumerate() {
+                    cyclic.for_each_piece(off, len, |aggr, cur, piece_len| {
+                        if aggr == a {
+                            out.push((cur, piece_len, positions[i] + (cur - off) as usize));
+                        }
+                    });
+                }
+                out
+            }
+        }
+    }
+}
+
 /// Work an aggregator owes the I/O phase of a collective write.
 pub(crate) struct WriteIoWork {
     /// Per-source (in rank order) decoded runs + their bytes, already
@@ -115,20 +180,30 @@ impl WriteIoWork {
     }
 }
 
+/// Collective-buffering parameters snapshotted from the Info hints.
+pub(crate) struct CbParams {
+    /// `cb_nodes`: number of aggregators (`None` = every rank).
+    pub nodes: Option<usize>,
+    /// `cb_buffer_size`: aggregator staging-buffer bytes.
+    pub buffer: Option<usize>,
+    /// `romio_cb_read`: collective buffering on/off.
+    pub enabled: bool,
+    /// `jpio_cb_stripe_align`: stripe-aligned file domains on/off.
+    pub stripe_align: bool,
+}
+
 /// Outcome of the exchange phase of a collective write: the I/O work this
 /// rank must perform as an aggregator (empty for non-aggregators).
 pub(crate) fn exchange_write(
     comm: &dyn Comm,
     ctx: &TransferCtx,
-    info_cb_nodes: Option<usize>,
-    info_cb_buffer: Option<usize>,
-    collective_buffering: bool,
+    cb: &CbParams,
     etype_off: i64,
     payload: &[u8],
 ) -> Result<(WriteIoWork, usize)> {
     let n = comm.size();
     let runs = ctx.view.runs(etype_off, payload.len())?;
-    if !collective_buffering || n == 1 {
+    if !cb.enabled || n == 1 {
         // Degenerate: independent write, collective completion only.
         write_payload(ctx, etype_off, payload)?;
         return Ok((WriteIoWork { writes: Vec::new(), cb_buffer: 1 }, payload.len()));
@@ -148,13 +223,13 @@ pub(crate) fn exchange_write(
     if gmin >= gmax {
         return Ok((WriteIoWork { writes: Vec::new(), cb_buffer: 1 }, payload.len()));
     }
-    let naggr = info_cb_nodes.unwrap_or(n).clamp(1, n);
-    let domains = split_domains(gmin as u64, gmax as u64, naggr);
+    let naggr = cb.nodes.unwrap_or(n).clamp(1, n);
+    let domains = FileDomains::choose(ctx, gmin as u64, gmax as u64, naggr, cb.stripe_align);
     // Build one message per rank (non-aggregators get empty messages).
     let mut msgs = vec![Vec::new(); n];
-    for (a, &dom) in domains.iter().enumerate() {
-        let pieces = slice_runs_for_domain(&runs, &positions, dom);
-        msgs[a] = encode_write_msg(&pieces, payload);
+    for (a, msg) in msgs.iter_mut().enumerate().take(naggr) {
+        let pieces = domains.pieces_for(&runs, &positions, a);
+        *msg = encode_write_msg(&pieces, payload);
     }
     for m in msgs.iter_mut().skip(naggr) {
         m.extend_from_slice(&0u32.to_le_bytes());
@@ -174,7 +249,7 @@ pub(crate) fn exchange_write(
     }
     writes.sort_by_key(|&(off, _)| off);
     Ok((
-        WriteIoWork { writes, cb_buffer: info_cb_buffer.unwrap_or(16 << 20).max(4096) },
+        WriteIoWork { writes, cb_buffer: cb.buffer.unwrap_or(16 << 20).max(4096) },
         payload.len(),
     ))
 }
@@ -184,16 +259,14 @@ pub(crate) fn exchange_write(
 pub(crate) fn collective_read(
     comm: &dyn Comm,
     ctx: &TransferCtx,
-    info_cb_nodes: Option<usize>,
-    info_cb_buffer: Option<usize>,
-    collective_buffering: bool,
+    cb: &CbParams,
     etype_off: i64,
     payload: &mut [u8],
 ) -> Result<usize> {
     let n = comm.size();
-    if !collective_buffering || n == 1 {
+    if !cb.enabled || n == 1 {
         let got = read_payload(ctx, etype_off, payload)?;
-        if collective_buffering {
+        if cb.enabled {
             comm.barrier();
         }
         return Ok(got);
@@ -212,21 +285,21 @@ pub(crate) fn collective_read(
     if gmin >= gmax {
         return Ok(0);
     }
-    let naggr = info_cb_nodes.unwrap_or(n).clamp(1, n);
-    let domains = split_domains(gmin as u64, gmax as u64, naggr);
+    let naggr = cb.nodes.unwrap_or(n).clamp(1, n);
+    let domains = FileDomains::choose(ctx, gmin as u64, gmax as u64, naggr, cb.stripe_align);
     // Request phase: ship (off,len) lists to aggregators.
     let mut reqs = vec![Vec::new(); n];
     let mut my_pieces: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n];
-    for (a, &dom) in domains.iter().enumerate() {
-        let pieces = slice_runs_for_domain(&runs, &positions, dom);
+    for (a, (req, mine)) in reqs.iter_mut().zip(my_pieces.iter_mut()).enumerate().take(naggr) {
+        let pieces = domains.pieces_for(&runs, &positions, a);
         let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
         msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
         for &(off, len, _) in &pieces {
             msg.extend_from_slice(&off.to_le_bytes());
             msg.extend_from_slice(&(len as u64).to_le_bytes());
         }
-        reqs[a] = msg;
-        my_pieces[a] = pieces;
+        *req = msg;
+        *mine = pieces;
     }
     for m in reqs.iter_mut().skip(naggr) {
         m.extend_from_slice(&0u32.to_le_bytes());
@@ -245,7 +318,7 @@ pub(crate) fn collective_read(
         per_src_runs.push(rs);
     }
     let merged = merge_intervals(&mut intervals);
-    let strat = ViewBufStrategy::with_stage(info_cb_buffer.unwrap_or(16 << 20).max(4096));
+    let strat = ViewBufStrategy::with_stage(cb.buffer.unwrap_or(16 << 20).max(4096));
     let merged_runs: Vec<(u64, usize)> =
         merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
     let total: usize = merged_runs.iter().map(|r| r.1).sum();
@@ -331,13 +404,14 @@ fn merge_intervals(iv: &mut Vec<(u64, u64)>) -> Vec<(u64, u64)> {
 }
 
 impl File<'_> {
-    pub(crate) fn cb_params(&self) -> (Option<usize>, Option<usize>, bool) {
+    pub(crate) fn cb_params(&self) -> CbParams {
         let info = self.info.lock().unwrap();
-        (
-            info.get_usize(keys::CB_NODES),
-            info.get_usize(keys::CB_BUFFER_SIZE),
-            info.get_flag(keys::COLLECTIVE_BUFFERING).unwrap_or(true),
-        )
+        CbParams {
+            nodes: info.get_usize(keys::CB_NODES),
+            buffer: info.get_usize(keys::CB_BUFFER_SIZE),
+            enabled: info.get_flag(keys::COLLECTIVE_BUFFERING).unwrap_or(true),
+            stripe_align: info.get_flag(keys::CB_STRIPE_ALIGN).unwrap_or(true),
+        }
     }
 
     /// `MPI_FILE_WRITE_AT_ALL`: collective write at explicit offsets.
@@ -353,9 +427,8 @@ impl File<'_> {
         self.check_writable()?;
         let ctx = self.transfer_ctx();
         let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?;
-        let (nodes, cb, on) = self.cb_params();
-        let (work, bytes) =
-            exchange_write(self.comm, &ctx, nodes, cb, on, offset, &payload)?;
+        let cb = self.cb_params();
+        let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
         work.execute(&ctx)?;
         self.comm.barrier();
         Ok(Status::of_bytes(bytes))
@@ -374,8 +447,8 @@ impl File<'_> {
         self.check_readable()?;
         let ctx = self.transfer_ctx();
         let mut payload = vec![0u8; count * datatype.size()];
-        let (nodes, cb, on) = self.cb_params();
-        let got = collective_read(self.comm, &ctx, nodes, cb, on, offset, &mut payload)?;
+        let cb = self.cb_params();
+        let got = collective_read(self.comm, &ctx, &cb, offset, &mut payload)?;
         unpack_payload(buf, buf_offset, count, datatype, &payload, got)?;
         Ok(Status::of_bytes(got))
     }
@@ -438,6 +511,73 @@ mod tests {
     fn merge_intervals_handles_overlap_and_adjacency() {
         let mut iv = vec![(10, 20), (0, 5), (5, 8), (15, 30), (40, 41)];
         assert_eq!(merge_intervals(&mut iv), vec![(0, 8), (10, 30), (40, 41)]);
+    }
+
+    #[test]
+    fn stripe_cyclic_domains_partition_at_unit_boundaries() {
+        let d = FileDomains::StripeCyclic { unit: 10, naggr: 2 };
+        // One run [5, 45): stripes 0..4 → aggregator 0 gets stripes 0 and
+        // 2, aggregator 1 gets stripes 1 and 3.
+        let runs = [(5u64, 40usize)];
+        let positions = [100usize];
+        let a0 = d.pieces_for(&runs, &positions, 0);
+        let a1 = d.pieces_for(&runs, &positions, 1);
+        assert_eq!(a0, vec![(5, 5, 100), (20, 10, 115), (40, 5, 135)]);
+        assert_eq!(a1, vec![(10, 10, 105), (30, 10, 125)]);
+        // Together the pieces cover the run exactly.
+        let total: usize = a0.iter().chain(&a1).map(|p| p.1).sum();
+        assert_eq!(total, 40);
+        for &(off, len, _) in a0.iter().chain(&a1) {
+            assert_eq!(off / 10, (off + len as u64 - 1) / 10, "piece crosses a boundary");
+        }
+    }
+
+    #[test]
+    fn collective_on_striped_storage_aligned_and_not() {
+        use crate::storage::striped::StripedBackend;
+        for align in ["true", "false"] {
+            let path = tmp(&format!("striped-{align}"));
+            threads::run(4, |c| {
+                let backend: std::sync::Arc<dyn crate::storage::Backend> =
+                    std::sync::Arc::new(StripedBackend::local(4, 64));
+                let info = Info::from([(keys::CB_STRIPE_ALIGN, align), (keys::CB_NODES, "4")]);
+                let f = File::open_with_backend(
+                    c,
+                    &path,
+                    amode::RDWR | amode::CREATE,
+                    info,
+                    backend,
+                )
+                .unwrap();
+                let n = c.size();
+                let r = c.rank();
+                // Interleaved strided pattern: rank r owns every n-th int.
+                let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+                let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+                f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null())
+                    .unwrap();
+                let k = 300; // spans many 64-byte stripe units
+                let mine: Vec<i32> = (0..k).map(|i| (i * n + r) as i32).collect();
+                f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+                c.barrier();
+                let mut back = vec![0i32; k];
+                let st = f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+                assert_eq!(st.bytes, k * 4);
+                assert_eq!(back, mine);
+                // Flat logical contents check through the striped file.
+                f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null())
+                    .unwrap();
+                let total = k * n;
+                let mut all = vec![0i32; total];
+                f.read_at(0, all.as_mut_slice(), 0, total, &Datatype::INT).unwrap();
+                let want: Vec<i32> = (0..total as i32).collect();
+                assert_eq!(all, want);
+                f.close().unwrap();
+            });
+            let backend = StripedBackend::local(4, 64);
+            crate::storage::Backend::delete(&backend, &path).unwrap();
+            let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+        }
     }
 
     #[test]

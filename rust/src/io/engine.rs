@@ -24,6 +24,11 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Pool {
     tx: mpsc::Sender<Job>,
+    /// Process that spawned the workers. A forked child (the process-
+    /// based communicator) inherits the initialized statics but *not* the
+    /// worker threads; submitting there would hang forever, so callers
+    /// fall back to inline execution on a pid mismatch.
+    pid: u32,
 }
 
 static POOL: Lazy<Mutex<Pool>> = Lazy::new(|| {
@@ -46,8 +51,98 @@ static POOL: Lazy<Mutex<Pool>> = Lazy::new(|| {
             })
             .expect("spawn io worker");
     }
-    Mutex::new(Pool { tx })
+    Mutex::new(Pool { tx, pid: std::process::id() })
 });
+
+// ----------------------------------------------------------------------
+// Stripe fan-out pool
+// ----------------------------------------------------------------------
+//
+// The striped storage backend issues its per-server I/O concurrently. It
+// cannot share `POOL`: a split collective's I/O phase already runs *on* a
+// `POOL` worker, and if that job then waited for nested per-server jobs in
+// the same pool, enough concurrent collectives would occupy every worker
+// with waiters and deadlock. Per-server jobs therefore run on their own
+// pool, whose workers never submit back into it (a nested striped backend
+// falls back to inline execution, detected by the worker thread name).
+
+static STRIPE_POOL: Lazy<Mutex<Pool>> = Lazy::new(|| {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let rx = std::sync::Arc::new(Mutex::new(rx));
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get() * 2)
+        .unwrap_or(8)
+        .clamp(8, 32);
+    for i in 0..workers {
+        let rx = rx.clone();
+        std::thread::Builder::new()
+            .name(format!("jpio-stripe-{i}"))
+            .spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break,
+                }
+            })
+            .expect("spawn stripe worker");
+    }
+    Mutex::new(Pool { tx, pid: std::process::id() })
+});
+
+/// Clone a pool's job sender if its worker threads exist in this
+/// process; `None` means "run the work inline". The lock is held only
+/// long enough to read the pid and clone the sender, and acquisition is
+/// a bounded `try_lock` spin so a mutex left permanently locked by a
+/// pre-fork thread can never hang a forked child.
+fn pool_sender(pool: &Lazy<Mutex<Pool>>) -> Option<mpsc::Sender<Job>> {
+    for _ in 0..64 {
+        match pool.try_lock() {
+            Ok(p) => {
+                return if p.pid == std::process::id() { Some(p.tx.clone()) } else { None };
+            }
+            Err(std::sync::TryLockError::WouldBlock) => std::thread::yield_now(),
+            Err(std::sync::TryLockError::Poisoned(_)) => return None,
+        }
+    }
+    None
+}
+
+/// Run independent storage jobs concurrently on the dedicated stripe
+/// worker pool, returning their results in submission order. Falls back
+/// to inline sequential execution for a single job, when already on a
+/// stripe worker (so a striped backend nested inside another striped
+/// backend cannot deadlock the pool against itself), or in a forked child
+/// that inherited a pool without its worker threads.
+pub fn fanout<T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let on_stripe_worker = std::thread::current()
+        .name()
+        .map(|n| n.starts_with("jpio-stripe-"))
+        .unwrap_or(false);
+    if jobs.len() <= 1 || on_stripe_worker {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let sender = match pool_sender(&STRIPE_POOL) {
+        Some(sender) => sender,
+        None => return jobs.into_iter().map(|j| j()).collect(),
+    };
+    let mut rxs = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let (tx, rx) = mpsc::channel();
+        let boxed: Job = Box::new(move || {
+            let _ = tx.send(job());
+        });
+        sender.send(boxed).expect("stripe pool alive");
+        rxs.push(rx);
+    }
+    rxs.into_iter().map(|rx| rx.recv().expect("stripe worker died mid-job")).collect()
+}
 
 /// Submit a job producing `(Status, payload)`; returns the request handle.
 pub fn submit<T, F>(f: F) -> Request<T>
@@ -55,13 +150,19 @@ where
     T: Send + 'static,
     F: FnOnce() -> (Result<Status>, T) + Send + 'static,
 {
-    let (tx, rx) = mpsc::channel();
-    let job: Job = Box::new(move || {
-        let out = f();
-        let _ = tx.send(out); // receiver may have been dropped (cancelled)
-    });
-    POOL.lock().unwrap().tx.send(job).expect("io pool alive");
-    Request { rx: Some(rx), done: None }
+    if let Some(sender) = pool_sender(&POOL) {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let out = f();
+            let _ = tx.send(out); // receiver may have been dropped (cancelled)
+        });
+        sender.send(job).expect("io pool alive");
+        return Request { rx: Some(rx), done: None };
+    }
+    // Forked child without worker threads (or a pool mutex orphaned by
+    // fork): complete synchronously.
+    let done = f();
+    Request { rx: None, done: Some(done) }
 }
 
 /// A nonblocking operation handle (`mpj.Request`).
@@ -175,6 +276,36 @@ mod tests {
             assert_eq!(st.bytes, i);
             assert_eq!(v, i);
         }
+    }
+
+    #[test]
+    fn fanout_preserves_order_and_runs_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let peak = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..6usize)
+            .map(|i| {
+                let peak = peak.clone();
+                let live = live.clone();
+                move || {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    i * 10
+                }
+            })
+            .collect();
+        let out = fanout(jobs);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50]);
+        assert!(peak.load(Ordering::SeqCst) >= 2, "jobs never overlapped");
+    }
+
+    #[test]
+    fn fanout_single_job_runs_inline() {
+        let out = fanout(vec![|| 41 + 1]);
+        assert_eq!(out, vec![42]);
     }
 
     #[test]

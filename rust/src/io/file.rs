@@ -21,6 +21,7 @@ use crate::io::view::FileView;
 use crate::storage::local::LocalBackend;
 use crate::storage::nfs::NfsBackend;
 use crate::storage::san::SanBackend;
+use crate::storage::striped::StripedBackend;
 use crate::storage::{Backend, OpenOptions, StorageFile};
 use crate::strategy::{self, AccessStrategy};
 
@@ -85,9 +86,31 @@ pub struct File<'c> {
 }
 
 /// Resolve the backend named by the info hints.
+///
+/// `jpio_backend = striped` builds a [`StripedBackend`] from the ROMIO
+/// striping hints: `striping_factor` servers (default 4) of
+/// `striping_unit` bytes (default 64 KiB), each server running the
+/// `jpio_stripe_backend` child kind (default `local`) at the
+/// `jpio_backend_profile` cost profile.
 pub fn backend_from_info(info: &Info) -> Result<Arc<dyn Backend>> {
     let profile = info.get(keys::BACKEND_PROFILE).unwrap_or("instant");
     let kind = info.get(keys::BACKEND).unwrap_or("local");
+    if kind == "striped" {
+        let factor = info.get_usize(keys::STRIPING_FACTOR).unwrap_or(4);
+        let unit = info.get_usize(keys::STRIPING_UNIT).unwrap_or(64 << 10) as u64;
+        let child_kind = info.get(keys::STRIPE_CHILD_BACKEND).unwrap_or("local");
+        if child_kind == "striped" {
+            return Err(err_arg("jpio_stripe_backend cannot itself be striped"));
+        }
+        let child_info = Info::null()
+            .with(keys::BACKEND, child_kind)
+            .with(keys::BACKEND_PROFILE, profile);
+        let mut children = Vec::with_capacity(factor);
+        for _ in 0..factor {
+            children.push(backend_from_info(&child_info)?);
+        }
+        return Ok(Arc::new(StripedBackend::new(children, unit)?));
+    }
     match (kind, profile) {
         ("local", "instant") => Ok(Arc::new(LocalBackend::instant())),
         ("local", "barq") => Ok(Arc::new(LocalBackend::barq())),
@@ -462,6 +485,23 @@ mod tests {
             validate_amode(amode::RDWR | amode::SEQUENTIAL).unwrap_err().class,
             ErrorClass::Amode
         );
+    }
+
+    #[test]
+    fn striped_backend_resolves_from_hints() {
+        let info = Info::from([
+            (keys::BACKEND, "striped"),
+            (keys::STRIPING_FACTOR, "3"),
+            (keys::STRIPING_UNIT, "128"),
+        ]);
+        let b = backend_from_info(&info).unwrap();
+        assert_eq!(b.name(), "striped");
+        // Nested striping via hints is rejected.
+        let bad = Info::from([
+            (keys::BACKEND, "striped"),
+            (keys::STRIPE_CHILD_BACKEND, "striped"),
+        ]);
+        assert_eq!(backend_from_info(&bad).map(|_| ()).unwrap_err().class, ErrorClass::Arg);
     }
 
     #[test]

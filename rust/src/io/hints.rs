@@ -30,12 +30,24 @@ pub mod keys {
     pub const IND_WR_BUFFER_SIZE: &str = "ind_wr_buffer_size";
     /// Data sieving for independent reads: `enable` (default) | `disable`.
     pub const DATA_SIEVING: &str = "romio_ds_read";
-    /// Storage backend: `local` (default) | `nfs` | `san`.
+    /// Storage backend: `local` (default) | `nfs` | `san` | `striped`.
     pub const BACKEND: &str = "jpio_backend";
     /// Backend performance profile: `instant` (default) | `barq` | `rcms`.
     pub const BACKEND_PROFILE: &str = "jpio_backend_profile";
-    /// File-system striping factor (accepted, unused — single device).
+    /// Number of stripe servers for the `striped` backend (ROMIO
+    /// `striping_factor`); default 4.
     pub const STRIPING_FACTOR: &str = "striping_factor";
+    /// Stripe unit in bytes for the `striped` backend (ROMIO
+    /// `striping_unit`); default 64 KiB.
+    pub const STRIPING_UNIT: &str = "striping_unit";
+    /// Child backend each stripe server runs on when `jpio_backend =
+    /// striped`: `local` (default) | `nfs` | `san`. The
+    /// `jpio_backend_profile` hint applies to every child.
+    pub const STRIPE_CHILD_BACKEND: &str = "jpio_stripe_backend";
+    /// Align collective (two-phase) file domains to stripe boundaries on
+    /// striped storage, giving each aggregator a disjoint server subset:
+    /// `true` (default) | `false`. Ignored on unstriped backends.
+    pub const CB_STRIPE_ALIGN: &str = "jpio_cb_stripe_align";
 }
 
 impl Info {

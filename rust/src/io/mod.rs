@@ -11,6 +11,7 @@
 //! | §7.2.4.4 shared file pointers | [`shared`] |
 //! | §7.2.4.5 split collectives | [`split`] |
 //! | `*_ALL` collective routines + two-phase optimization | [`collective`] |
+//! | stripe-aligned file domains (striped storage) | [`collective`], [`crate::storage::striped`] |
 //! | §7.2.5 file interoperability (datareps) | [`datarep`] |
 //! | §7.2.6 consistency & semantics | [`file`] (atomicity/sync) |
 //! | §7.2.7/8 error handling & classes | [`errors`] |

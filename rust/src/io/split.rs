@@ -70,9 +70,9 @@ impl File<'_> {
         check_no_pending!(self);
         let ctx = self.transfer_ctx();
         let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        let (nodes, cb, on) = self.cb_params();
+        let cb = self.cb_params();
         // Exchange phase: synchronous (uses the communicator).
-        let (work, bytes) = exchange_write(self.comm, &ctx, nodes, cb, on, offset, &payload)?;
+        let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
         // I/O phase: on the engine.
         let req = engine::submit(move || match work.execute(&ctx) {
             Ok(()) => (Ok(Status::of_bytes(bytes)), ()),
@@ -104,9 +104,9 @@ impl File<'_> {
         self.check_readable()?;
         check_no_pending!(self);
         let ctx = self.transfer_ctx();
-        let (nodes, cb, on) = self.cb_params();
+        let cb = self.cb_params();
         let mut payload = vec![0u8; payload_len];
-        let got = collective_read(self.comm, &ctx, nodes, cb, on, offset, &mut payload)?;
+        let got = collective_read(self.comm, &ctx, &cb, offset, &mut payload)?;
         payload.truncate(payload_len);
         let req = Request::ready(Status::of_bytes(got), payload);
         self.stash(SplitPending::Read { kind, req });

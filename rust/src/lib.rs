@@ -15,7 +15,11 @@
 //! * [`strategy`] — the four file-access strategies the paper evaluates
 //!   (per-item, bulk, view-buffer, memory-mapped).
 //! * [`storage`] — storage substrates: local disk, a simulated NFS
-//!   server (the paper's NFS storage), and a SAN model (RCMS cluster).
+//!   server (the paper's NFS storage), a SAN model (RCMS cluster), and a
+//!   striped parallel-file-system backend ([`storage::striped`]) that
+//!   declusters a logical file round-robin over N child backends with
+//!   stripe-aligned collective I/O (the ViPIOS/PVFS direction the paper's
+//!   related work points at).
 //! * [`runtime`] — PJRT artifact loading/execution for the AOT-compiled
 //!   JAX/Pallas compute layer (build-time Python, never on the I/O path).
 //! * [`coordinator`] — a data-pipeline orchestrator (stage graph,

@@ -6,6 +6,8 @@
 //! jpio artifacts [--dir artifacts]  # load + list PJRT artifacts
 //! jpio demo [--ranks 4] [--backend nfs] [--procs]
 //!                                   # small shared-file write/read demo
+//! jpio demo --backend striped [--servers 4] [--stripe-unit 64k]
+//!                                   # ... on declustered striped storage
 //! jpio version
 //! ```
 
@@ -72,11 +74,20 @@ fn artifacts(args: &Args) {
 fn demo(args: &Args) {
     let ranks = args.get_or("ranks", 4usize);
     let backend = args.get("backend").unwrap_or("local").to_string();
+    let servers = args.get_or("servers", 4usize);
+    let stripe_unit = args.get_size_or("stripe-unit", 64 << 10);
     let path = format!("/tmp/jpio-demo-{}.dat", std::process::id());
+    if backend == "striped" {
+        println!("striped storage: {servers} servers × {stripe_unit} B stripe units");
+    }
     let body = {
         let path = path.clone();
         move |c: &dyn Comm| {
-            let info = Info::from([("jpio_backend", backend.as_str())]);
+            let mut info = Info::from([("jpio_backend", backend.as_str())]);
+            if backend == "striped" {
+                info.set("striping_factor", servers.to_string());
+                info.set("striping_unit", stripe_unit.to_string());
+            }
             let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
             f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null())
                 .unwrap();
@@ -107,5 +118,10 @@ fn demo(args: &Args) {
         threads::run(ranks, |c| body(c));
     }
     let _ = std::fs::remove_file(&path);
+    for i in 0..servers {
+        let _ = std::fs::remove_file(jpio::storage::striped::StripedBackend::object_path(
+            &path, i, servers,
+        ));
+    }
     let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
 }

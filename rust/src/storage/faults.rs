@@ -151,6 +151,10 @@ impl StorageFile for FaultFile {
     fn backend_name(&self) -> &'static str {
         "faulty"
     }
+
+    fn stripe_layout(&self) -> Option<super::layout::StripeLayout> {
+        self.inner.stripe_layout()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,209 @@
+//! Stripe-layout arithmetic for the declustered [`striped`] backend.
+//!
+//! A logical file is declustered round-robin across `factor` servers in
+//! fixed-size *stripe units* (the ViPIOS/PVFS regular declustering):
+//! logical stripe `i` — the byte range `[i*unit, (i+1)*unit)` — lives on
+//! server `i % factor`, at offset `(i / factor) * unit` inside that
+//! server's *stripe object* (a plain file on the child backend). All the
+//! offset mapping lives here so the backend, the collective layer (file-
+//! domain alignment) and the tests share one set of formulas.
+//!
+//! [`striped`]: super::striped
+
+use crate::io::errors::{err_arg, Result};
+
+/// Round-robin stripe layout: `factor` servers × `unit`-byte stripe units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeLayout {
+    /// Stripe unit in bytes (ROMIO `striping_unit`).
+    pub unit: u64,
+    /// Number of stripe servers (ROMIO `striping_factor`).
+    pub factor: usize,
+}
+
+/// One server-local piece of a logical byte range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Server (stripe object) index.
+    pub server: usize,
+    /// Offset within the server's stripe object.
+    pub child_off: u64,
+    /// Piece length in bytes.
+    pub len: usize,
+    /// Position of this piece within the flattened payload buffer.
+    pub buf_pos: usize,
+}
+
+impl StripeLayout {
+    /// A layout of `factor` servers with `unit`-byte stripe units.
+    pub fn new(unit: u64, factor: usize) -> Result<StripeLayout> {
+        if unit == 0 {
+            return Err(err_arg("stripe layout: unit must be > 0"));
+        }
+        if factor == 0 {
+            return Err(err_arg("stripe layout: factor must be > 0"));
+        }
+        Ok(StripeLayout { unit, factor })
+    }
+
+    /// Width of one full stripe row (`unit * factor` bytes).
+    pub fn width(&self) -> u64 {
+        self.unit * self.factor as u64
+    }
+
+    /// Index of the stripe unit holding logical offset `off`.
+    pub fn stripe_of(&self, off: u64) -> u64 {
+        off / self.unit
+    }
+
+    /// Server holding logical offset `off`.
+    pub fn server_of(&self, off: u64) -> usize {
+        (self.stripe_of(off) % self.factor as u64) as usize
+    }
+
+    /// Offset of logical offset `off` within its server's stripe object.
+    pub fn child_offset(&self, off: u64) -> u64 {
+        let stripe = self.stripe_of(off);
+        (stripe / self.factor as u64) * self.unit + off % self.unit
+    }
+
+    /// Walk the logical range `[off, off+len)` piece by piece, where a
+    /// piece is the largest sub-range not crossing a stripe boundary.
+    /// Calls `f(server, logical_off, piece_len)` in logical order. The
+    /// collective layer reuses this walk (with `factor = cb_nodes`) to
+    /// assign stripe-aligned file domains, so the boundary arithmetic
+    /// lives in exactly one place.
+    pub fn for_each_piece(&self, off: u64, len: usize, mut f: impl FnMut(usize, u64, usize)) {
+        let end = off + len as u64;
+        let mut cur = off;
+        while cur < end {
+            let boundary = (self.stripe_of(cur) + 1) * self.unit;
+            let piece_end = boundary.min(end);
+            f(self.server_of(cur), cur, (piece_end - cur) as usize);
+            cur = piece_end;
+        }
+    }
+
+    /// Split the logical range `[off, off+len)` at stripe boundaries,
+    /// appending one [`Segment`] per piece (in logical-offset order) to
+    /// `out`. `buf_pos` is the payload position of the range's first byte.
+    pub fn split_run(&self, off: u64, len: usize, buf_pos: usize, out: &mut Vec<Segment>) {
+        self.for_each_piece(off, len, |server, cur, piece_len| {
+            out.push(Segment {
+                server,
+                child_off: self.child_offset(cur),
+                len: piece_len,
+                buf_pos: buf_pos + (cur - off) as usize,
+            });
+        });
+    }
+
+    /// Size of `server`'s stripe object for a logical file of
+    /// `logical_size` bytes with no holes.
+    pub fn child_len(&self, server: usize, logical_size: u64) -> u64 {
+        let full_units = logical_size / self.unit;
+        let rem = logical_size % self.unit;
+        let cycles = full_units / self.factor as u64;
+        let extra = full_units % self.factor as u64;
+        let s = server as u64;
+        cycles * self.unit
+            + if s < extra {
+                self.unit
+            } else if s == extra {
+                rem
+            } else {
+                0
+            }
+    }
+
+    /// The logical file size implied by `server`'s stripe object being
+    /// `child_len` bytes long (logical offset just past its last byte).
+    /// The logical size of a striped file is the max of this over servers.
+    pub fn logical_end(&self, server: usize, child_len: u64) -> u64 {
+        if child_len == 0 {
+            return 0;
+        }
+        let last = child_len - 1;
+        let child_stripe = last / self.unit;
+        let within = last % self.unit;
+        let logical_stripe = child_stripe * self.factor as u64 + server as u64;
+        logical_stripe * self.unit + within + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_degenerate_layouts() {
+        assert!(StripeLayout::new(0, 4).is_err());
+        assert!(StripeLayout::new(64, 0).is_err());
+        assert!(StripeLayout::new(1, 1).is_ok());
+    }
+
+    #[test]
+    fn round_robin_mapping() {
+        let l = StripeLayout::new(10, 3).unwrap();
+        // Stripes: [0,10)→s0, [10,20)→s1, [20,30)→s2, [30,40)→s0@10, ...
+        assert_eq!(l.server_of(0), 0);
+        assert_eq!(l.server_of(9), 0);
+        assert_eq!(l.server_of(10), 1);
+        assert_eq!(l.server_of(29), 2);
+        assert_eq!(l.server_of(30), 0);
+        assert_eq!(l.child_offset(0), 0);
+        assert_eq!(l.child_offset(35), 15);
+        assert_eq!(l.child_offset(29), 9);
+        assert_eq!(l.width(), 30);
+    }
+
+    #[test]
+    fn split_covers_exactly_and_respects_boundaries() {
+        let l = StripeLayout::new(16, 4).unwrap();
+        let mut segs = Vec::new();
+        l.split_run(5, 100, 7, &mut segs);
+        // Total coverage, in order, without gaps.
+        let total: usize = segs.iter().map(|s| s.len).sum();
+        assert_eq!(total, 100);
+        assert_eq!(segs[0].buf_pos, 7);
+        let mut logical = 5u64;
+        let mut pos = 7usize;
+        for s in &segs {
+            assert_eq!(s.server, l.server_of(logical));
+            assert_eq!(s.child_off, l.child_offset(logical));
+            assert_eq!(s.buf_pos, pos);
+            assert!(s.len <= 16, "piece crosses a stripe boundary");
+            // A piece never straddles a unit boundary.
+            assert_eq!(logical / 16, (logical + s.len as u64 - 1) / 16);
+            logical += s.len as u64;
+            pos += s.len;
+        }
+        assert_eq!(logical, 105);
+    }
+
+    #[test]
+    fn child_len_and_logical_end_are_inverse() {
+        for (unit, factor) in [(1u64, 1usize), (7, 3), (16, 4), (4096, 2)] {
+            let l = StripeLayout::new(unit, factor).unwrap();
+            for logical in [0u64, 1, unit - 1, unit, unit + 1, 3 * unit, l.width(), l.width() + 5, 10 * l.width() + unit / 2 + 1]
+            {
+                let sum: u64 = (0..factor).map(|s| l.child_len(s, logical)).sum();
+                assert_eq!(sum, logical, "children must hold exactly the file");
+                let back = (0..factor)
+                    .map(|s| l.logical_end(s, l.child_len(s, logical)))
+                    .max()
+                    .unwrap();
+                assert_eq!(back, logical, "unit={unit} factor={factor} L={logical}");
+            }
+        }
+    }
+
+    #[test]
+    fn logical_end_of_partial_object() {
+        let l = StripeLayout::new(10, 4).unwrap();
+        // Server 2's object is 15 bytes: its last byte sits in child
+        // stripe 1 (offset 4), i.e. logical stripe 1*4+2 = 6, offset 64.
+        assert_eq!(l.logical_end(2, 15), 65);
+        assert_eq!(l.logical_end(0, 0), 0);
+    }
+}

@@ -3,7 +3,11 @@
 //! The paper evaluates three placements of the shared file: the local disk
 //! of the shared-memory machine (Fig 4-3), NFS storage attached to it
 //! (Fig 4-4), and the NFS/SAN storage of the distributed-memory RCMS
-//! cluster (Fig 4-5). We model each as a [`Backend`] producing
+//! cluster (Fig 4-5). A fourth placement goes past the paper's evaluation:
+//! [`striped`] declusters the logical file round-robin over N child
+//! backends ([`layout`] holds the stripe arithmetic), removing the
+//! single-server ingest bottleneck the way a parallel file system (ViPIOS,
+//! PVFS) does. We model each as a [`Backend`] producing
 //! [`StorageFile`] handles with positioned I/O, an mmap-style interface
 //! (so the *mapped-mode* access strategy works on every backend, with
 //! backend-appropriate costs), byte-range/whole-file locking (for MPI
@@ -15,9 +19,11 @@
 //! substitution table in DESIGN.md §2.
 
 pub mod faults;
+pub mod layout;
 pub mod local;
 pub mod nfs;
 pub mod san;
+pub mod striped;
 
 use crate::io::errors::Result;
 use std::sync::Arc;
@@ -72,11 +78,18 @@ pub trait StorageFile: Send + Sync {
     fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize>;
 
     /// Vectored positioned read of disjoint runs: `(file_offset, len)`
-    /// pairs filled into `buf` back-to-back. Default loops `read_at`.
+    /// pairs filled into `buf` back-to-back. Default loops `read_at`,
+    /// stopping at the first short (EOF) read so every byte returned sits
+    /// at the position its run prescribes — continuing past a short read
+    /// would misalign all subsequent runs within `buf`.
     fn read_runs(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
         let mut pos = 0;
         for &(off, len) in runs {
-            pos += self.read_at(off, &mut buf[pos..pos + len])?;
+            let got = self.read_at(off, &mut buf[pos..pos + len])?;
+            pos += got;
+            if got < len {
+                break;
+            }
         }
         Ok(pos)
     }
@@ -116,6 +129,14 @@ pub trait StorageFile: Send + Sync {
 
     /// Backend name (for metrics labels).
     fn backend_name(&self) -> &'static str;
+
+    /// Stripe layout when this file is declustered across multiple
+    /// servers ([`striped::StripedBackend`]); `None` for single-device
+    /// backends. The collective layer queries this to hand two-phase
+    /// aggregators file domains aligned to stripe boundaries.
+    fn stripe_layout(&self) -> Option<layout::StripeLayout> {
+        None
+    }
 }
 
 /// A mapped view of a file region. The local implementation is a real
@@ -177,6 +198,28 @@ mod tests {
         let mut out = [0u8; 6];
         f.read_runs(&[(0, 3), (10, 3)], &mut out).unwrap();
         assert_eq!(out, data);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn default_read_runs_stops_at_short_read() {
+        let b = LocalBackend::instant();
+        let path = tmp("shortruns");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, b"abcdefghij").unwrap(); // 10-byte file
+        // Second run crosses EOF: the read must stop there, not continue
+        // with the third run at a misaligned buffer position.
+        let mut buf = [0xEEu8; 16];
+        let got = f.read_runs(&[(0, 4), (8, 4), (20, 4)], &mut buf).unwrap();
+        assert_eq!(got, 6);
+        assert_eq!(&buf[..6], b"abcdij");
+        assert_eq!(&buf[6..], &[0xEEu8; 10], "bytes past the short read must be untouched");
+        // Unsorted runs: a short first run must not shift the second run's
+        // bytes to the wrong position.
+        let mut buf = [0u8; 8];
+        let got = f.read_runs(&[(8, 4), (0, 4)], &mut buf).unwrap();
+        assert_eq!(got, 2);
+        assert_eq!(&buf[..2], b"ij");
         b.delete(&path).unwrap();
     }
 }

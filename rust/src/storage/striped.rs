@@ -1,0 +1,589 @@
+//! Striped parallel-file-system backend.
+//!
+//! The paper's evaluation stops at single-server storage — local disk, one
+//! NFS server, a SAN — so aggregate write bandwidth is capped by one
+//! server's ingest rate (the ~250 MB/s plateau of Fig 4-4). Parallel file
+//! systems remove that cap by *declustering* the logical file over many
+//! I/O servers (ViPIOS; PVFS; Lustre). [`StripedBackend`] does exactly
+//! that: a logical file is split into fixed-size stripe units laid out
+//! round-robin over N child [`Backend`]s (any mix of local/NFS/SAN
+//! backends, each with its own performance model and fault injector), each
+//! holding one *stripe object* — a plain file on that child.
+//!
+//! * **Data path** — `read_at`/`write_at`/`read_runs`/`write_runs` split
+//!   logical runs at stripe boundaries ([`StripeLayout`]), group
+//!   the pieces per server, and issue one vectored transfer per server
+//!   *concurrently* on the [`engine`](crate::io::engine) stripe pool, so
+//!   aggregate bandwidth scales with servers instead of serializing at
+//!   one ingest lock.
+//! * **Metadata** — the logical size is the max over servers of the
+//!   logical offset implied by each stripe object's length;
+//!   `set_size`/`preallocate` distribute the per-server object sizes.
+//! * **Locking** — `lock_exclusive` acquires every child's lock in server
+//!   order (the classic total-order protocol), so concurrent distributed
+//!   lockers cannot deadlock; the guard releases all of them.
+//! * **Mapped mode** — a buffered region emulation (like the NFS one):
+//!   loaded from the stripes on creation, dirty ranges written back
+//!   vectored on `flush`.
+//!
+//! The collective layer reads [`StorageFile::stripe_layout`] off these
+//! files to align two-phase file domains to stripe boundaries — see
+//! `io::collective`.
+
+use std::sync::Arc;
+
+use crate::io::engine;
+use crate::io::errors::{err_arg, ErrorClass, Result};
+
+use super::layout::{Segment, StripeLayout};
+use super::local::{check_bounds, LocalBackend};
+use super::nfs::{NfsBackend, NfsConfig};
+use super::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
+
+/// A backend declustering files round-robin across child backends.
+pub struct StripedBackend {
+    children: Vec<Arc<dyn Backend>>,
+    layout: StripeLayout,
+}
+
+impl StripedBackend {
+    /// Stripe across the given children with `unit`-byte stripe units.
+    /// The striping factor is `children.len()`.
+    pub fn new(children: Vec<Arc<dyn Backend>>, unit: u64) -> Result<StripedBackend> {
+        let layout = StripeLayout::new(unit, children.len())?;
+        Ok(StripedBackend { children, layout })
+    }
+
+    /// `factor` unmodelled local children (functional tests).
+    pub fn local(factor: usize, unit: u64) -> StripedBackend {
+        let children = (0..factor)
+            .map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>)
+            .collect();
+        StripedBackend::new(children, unit).expect("valid stripe parameters")
+    }
+
+    /// `factor` simulated NFS servers, each with its own copy of `cfg`
+    /// (so each server serializes its own ingest, independently).
+    pub fn nfs(factor: usize, unit: u64, cfg: NfsConfig) -> StripedBackend {
+        let children = (0..factor)
+            .map(|_| Arc::new(NfsBackend::new(cfg)) as Arc<dyn Backend>)
+            .collect();
+        StripedBackend::new(children, unit).expect("valid stripe parameters")
+    }
+
+    /// The stripe layout of this backend.
+    pub fn layout(&self) -> StripeLayout {
+        self.layout
+    }
+
+    /// Path of `server`'s stripe object for logical file `path`. Public
+    /// so tests and tooling can inspect physical placement.
+    pub fn object_path(path: &str, server: usize, factor: usize) -> String {
+        format!("{path}.jpio-s{server}of{factor}")
+    }
+}
+
+impl Backend for StripedBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
+        if path.is_empty() {
+            return Err(crate::io::errors::err_bad_file("empty file name"));
+        }
+        let factor = self.layout.factor;
+        let mut files = Vec::with_capacity(factor);
+        for (i, child) in self.children.iter().enumerate() {
+            files.push(child.open(&Self::object_path(path, i, factor), opts)?);
+        }
+        Ok(Arc::new(StripedFile {
+            inner: Arc::new(StripedInner { children: files, layout: self.layout }),
+        }))
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        let factor = self.layout.factor;
+        let mut first_err = None;
+        for (i, child) in self.children.iter().enumerate() {
+            match child.delete(&Self::object_path(path, i, factor)) {
+                Ok(()) => {}
+                // A logical file whose later stripes were never touched
+                // has no objects there; only stripe 0 decides existence.
+                Err(e) if i > 0 && e.class == ErrorClass::NoSuchFile => {}
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "striped"
+    }
+}
+
+/// Shared state of an open striped file.
+struct StripedInner {
+    children: Vec<Arc<dyn StorageFile>>,
+    layout: StripeLayout,
+}
+
+impl StripedInner {
+    /// Logical file size: the furthest logical byte implied by any stripe
+    /// object's length.
+    fn logical_size(&self) -> Result<u64> {
+        let mut max = 0u64;
+        for (s, child) in self.children.iter().enumerate() {
+            max = max.max(self.layout.logical_end(s, child.size()?));
+        }
+        Ok(max)
+    }
+
+    /// Group segments per server, sorted by child offset. The sort is
+    /// load-bearing for reads: a child's default `read_runs` stops at its
+    /// first short read, which on a sparse stripe object is only correct
+    /// (everything after is past that object's EOF, i.e. zeros) when the
+    /// runs are issued in ascending child order — unsorted vectored
+    /// requests would otherwise drop real data behind a hole.
+    fn group(&self, segs: &[Segment]) -> Vec<Vec<Segment>> {
+        let mut per = vec![Vec::new(); self.layout.factor];
+        for seg in segs {
+            per[seg.server].push(*seg);
+        }
+        for server in &mut per {
+            server.sort_unstable_by_key(|s: &Segment| s.child_off);
+        }
+        per
+    }
+
+    /// Concurrent vectored read of `segs` into `buf`. Pieces inside the
+    /// logical file but beyond a child object's end (holes) read as
+    /// zeros; the caller has already clamped `segs` to the logical size.
+    fn read_segments(&self, segs: &[Segment], buf: &mut [u8]) -> Result<()> {
+        let per = self.group(segs);
+        let mut jobs = Vec::new();
+        let mut dests: Vec<Vec<Segment>> = Vec::new();
+        for (server, segs) in per.into_iter().enumerate() {
+            if segs.is_empty() {
+                continue;
+            }
+            let child = self.children[server].clone();
+            let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+            let total: usize = segs.iter().map(|s| s.len).sum();
+            dests.push(segs);
+            jobs.push(move || -> Result<Vec<u8>> {
+                // Zero-filled so short child reads (sparse holes) leave
+                // zeros — the POSIX hole semantics of the logical file.
+                let mut tmp = vec![0u8; total];
+                child.read_runs(&runs, &mut tmp)?;
+                Ok(tmp)
+            });
+        }
+        for (result, segs) in engine::fanout(jobs).into_iter().zip(dests) {
+            let tmp = result?;
+            let mut cursor = 0usize;
+            for seg in segs {
+                buf[seg.buf_pos..seg.buf_pos + seg.len]
+                    .copy_from_slice(&tmp[cursor..cursor + seg.len]);
+                cursor += seg.len;
+            }
+        }
+        Ok(())
+    }
+
+    /// Concurrent vectored write of `segs` from `buf`.
+    fn write_segments(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
+        let per = self.group(segs);
+        let mut jobs = Vec::new();
+        for (server, segs) in per.into_iter().enumerate() {
+            if segs.is_empty() {
+                continue;
+            }
+            let child = self.children[server].clone();
+            let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+            let total: usize = segs.iter().map(|s| s.len).sum();
+            let mut payload = Vec::with_capacity(total);
+            for seg in &segs {
+                payload.extend_from_slice(&buf[seg.buf_pos..seg.buf_pos + seg.len]);
+            }
+            jobs.push(move || -> Result<usize> { child.write_runs(&runs, &payload) });
+        }
+        for result in engine::fanout(jobs) {
+            result?;
+        }
+        Ok(())
+    }
+
+    fn set_size(&self, size: u64) -> Result<()> {
+        for (s, child) in self.children.iter().enumerate() {
+            child.set_size(self.layout.child_len(s, size))?;
+        }
+        Ok(())
+    }
+}
+
+/// An open file declustered over the child backends.
+pub struct StripedFile {
+    inner: Arc<StripedInner>,
+}
+
+impl StorageFile for StripedFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let size = self.inner.logical_size()?;
+        if offset >= size {
+            return Ok(0);
+        }
+        let want = buf.len().min((size - offset) as usize);
+        let mut segs = Vec::new();
+        self.inner.layout.split_run(offset, want, 0, &mut segs);
+        self.inner.read_segments(&segs, buf)?;
+        Ok(want)
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut segs = Vec::new();
+        self.inner.layout.split_run(offset, buf.len(), 0, &mut segs);
+        self.inner.write_segments(&segs, buf)?;
+        Ok(buf.len())
+    }
+
+    fn read_runs(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        let size = self.inner.logical_size()?;
+        let mut segs = Vec::new();
+        let mut pos = 0usize;
+        let mut total = 0usize;
+        for &(off, len) in runs {
+            let avail = (size.saturating_sub(off) as usize).min(len);
+            if avail > 0 {
+                self.inner.layout.split_run(off, avail, pos, &mut segs);
+            }
+            total += avail;
+            if avail < len {
+                // Short at logical EOF: stop, same contract as the
+                // default implementation.
+                break;
+            }
+            pos += len;
+        }
+        self.inner.read_segments(&segs, buf)?;
+        Ok(total)
+    }
+
+    fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        let mut segs = Vec::new();
+        let mut pos = 0usize;
+        for &(off, len) in runs {
+            self.inner.layout.split_run(off, len, pos, &mut segs);
+            pos += len;
+        }
+        self.inner.write_segments(&segs, buf)?;
+        Ok(pos)
+    }
+
+    fn size(&self) -> Result<u64> {
+        self.inner.logical_size()
+    }
+
+    fn set_size(&self, size: u64) -> Result<()> {
+        self.inner.set_size(size)
+    }
+
+    fn preallocate(&self, size: u64) -> Result<()> {
+        for (s, child) in self.inner.children.iter().enumerate() {
+            let len = self.inner.layout.child_len(s, size);
+            if len > 0 {
+                child.preallocate(len)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn sync(&self) -> Result<()> {
+        let jobs: Vec<_> = self
+            .inner
+            .children
+            .iter()
+            .map(|c| {
+                let c = c.clone();
+                move || c.sync()
+            })
+            .collect();
+        for result in engine::fanout(jobs) {
+            result?;
+        }
+        Ok(())
+    }
+
+    fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>> {
+        if len == 0 {
+            return Err(err_arg("map: zero-length region"));
+        }
+        // One metadata fan-out serves both the grow check and the prefill
+        // clamp; any grown region is zeros, which the buffer already is.
+        let old_size = self.inner.logical_size()?;
+        if writable && old_size < offset + len as u64 {
+            self.inner.set_size(offset + len as u64)?;
+        }
+        let mut buf = vec![0u8; len];
+        if offset < old_size {
+            let want = len.min((old_size - offset) as usize);
+            let mut segs = Vec::new();
+            self.inner.layout.split_run(offset, want, 0, &mut segs);
+            self.inner.read_segments(&segs, &mut buf)?;
+        }
+        Ok(Box::new(StripedMap {
+            inner: self.inner.clone(),
+            base: offset,
+            buf,
+            dirty: Vec::new(),
+            writable,
+        }))
+    }
+
+    fn lock_exclusive(&self) -> Result<FileLockGuard> {
+        // Acquire the child locks in server order — every holder uses the
+        // same total order, so distributed acquisition cannot deadlock.
+        let mut guards = Vec::with_capacity(self.inner.children.len());
+        for child in &self.inner.children {
+            guards.push(child.lock_exclusive()?);
+        }
+        Ok(FileLockGuard {
+            os_unlock: Some(Box::new(move || drop(guards))),
+        })
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "striped"
+    }
+
+    fn stripe_layout(&self) -> Option<StripeLayout> {
+        Some(self.inner.layout)
+    }
+}
+
+/// Buffered mapped-region emulation over the stripes: the region is read
+/// at creation; writes record dirty byte ranges; `flush` writes the dirty
+/// ranges back with one vectored striped transfer (so gap bytes between
+/// writes are never clobbered).
+struct StripedMap {
+    inner: Arc<StripedInner>,
+    base: u64,
+    buf: Vec<u8>,
+    dirty: Vec<(usize, usize)>, // (start, end) byte ranges, unmerged
+    writable: bool,
+}
+
+impl MappedRegion for StripedMap {
+    fn read(&mut self, region_off: usize, buf: &mut [u8]) -> Result<()> {
+        check_bounds(region_off, buf.len(), self.buf.len())?;
+        buf.copy_from_slice(&self.buf[region_off..region_off + buf.len()]);
+        Ok(())
+    }
+
+    fn write(&mut self, region_off: usize, data: &[u8]) -> Result<()> {
+        if !self.writable {
+            return Err(crate::io::errors::err_read_only("write to read-only mapping"));
+        }
+        check_bounds(region_off, data.len(), self.buf.len())?;
+        if data.is_empty() {
+            return Ok(());
+        }
+        self.buf[region_off..region_off + data.len()].copy_from_slice(data);
+        self.dirty.push((region_off, region_off + data.len()));
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.dirty.is_empty() {
+            return Ok(());
+        }
+        // Merge overlapping/adjacent dirty ranges into maximal runs.
+        self.dirty.sort_unstable();
+        let mut merged: Vec<(usize, usize)> = Vec::with_capacity(self.dirty.len());
+        for &(s, e) in &self.dirty {
+            if let Some(last) = merged.last_mut() {
+                if s <= last.1 {
+                    last.1 = last.1.max(e);
+                    continue;
+                }
+            }
+            merged.push((s, e));
+        }
+        let mut segs = Vec::new();
+        let mut payload = Vec::new();
+        for &(s, e) in &merged {
+            self.inner
+                .layout
+                .split_run(self.base + s as u64, e - s, payload.len(), &mut segs);
+            payload.extend_from_slice(&self.buf[s..e]);
+        }
+        self.inner.write_segments(&segs, &payload)?;
+        // Only a successful write-back retires the dirty state: a failed
+        // flush (e.g. transient child fault) must stay retryable instead
+        // of silently reporting Ok on the next call.
+        self.dirty.clear();
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+impl Drop for StripedMap {
+    fn drop(&mut self) {
+        if self.writable && !self.dirty.is_empty() {
+            let _ = self.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-striped-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn roundtrip_spanning_stripe_boundaries() {
+        let b = StripedBackend::local(4, 16);
+        let path = tmp("rt");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        // 100 bytes at offset 5 cross six unit boundaries.
+        let data: Vec<u8> = (0..100u8).collect();
+        assert_eq!(f.write_at(5, &data).unwrap(), 100);
+        assert_eq!(f.size().unwrap(), 105);
+        let mut back = vec![0u8; 100];
+        assert_eq!(f.read_at(5, &mut back).unwrap(), 100);
+        assert_eq!(back, data);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn physical_placement_is_round_robin() {
+        let b = StripedBackend::local(2, 8);
+        let path = tmp("placement");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let data: Vec<u8> = (0..32u8).collect();
+        f.write_at(0, &data).unwrap();
+        drop(f);
+        // Server 0: stripes 0 and 2 → bytes 0..8 and 16..24.
+        let s0 = std::fs::read(StripedBackend::object_path(&path, 0, 2)).unwrap();
+        let s1 = std::fs::read(StripedBackend::object_path(&path, 1, 2)).unwrap();
+        let want0: Vec<u8> = (0..8u8).chain(16..24).collect();
+        let want1: Vec<u8> = (8..16u8).chain(24..32).collect();
+        assert_eq!(s0, want0);
+        assert_eq!(s1, want1);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn sparse_write_reads_zero_holes() {
+        let b = StripedBackend::local(4, 10);
+        let path = tmp("sparse");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(95, b"tail").unwrap(); // only touches server (95/10)%4 = 1
+        assert_eq!(f.size().unwrap(), 99);
+        let mut buf = vec![0xAAu8; 40];
+        assert_eq!(f.read_at(30, &mut buf).unwrap(), 40);
+        assert!(buf.iter().all(|&v| v == 0), "holes must read as zeros");
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn set_size_distributes_and_shrinks() {
+        let b = StripedBackend::local(3, 10);
+        let path = tmp("setsize");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(65).unwrap(); // 6 full units + 5 → objects of 25, 20, 20
+        assert_eq!(f.size().unwrap(), 65);
+        f.set_size(7).unwrap(); // shrink below one unit
+        assert_eq!(f.size().unwrap(), 7);
+        let meta1 = std::fs::metadata(StripedBackend::object_path(&path, 1, 3)).unwrap();
+        assert_eq!(meta1.len(), 0, "shrink must truncate later servers");
+        f.set_size(0).unwrap();
+        assert_eq!(f.size().unwrap(), 0);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn vectored_runs_roundtrip() {
+        let b = StripedBackend::local(4, 8);
+        let path = tmp("runs");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(256).unwrap();
+        let runs = [(3u64, 20usize), (40, 9), (100, 30)];
+        let data: Vec<u8> = (0..59u8).collect();
+        assert_eq!(f.write_runs(&runs, &data).unwrap(), 59);
+        let mut back = vec![0u8; 59];
+        assert_eq!(f.read_runs(&runs, &mut back).unwrap(), 59);
+        assert_eq!(back, data);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn mapped_region_roundtrip_and_persistence() {
+        let b = StripedBackend::local(4, 16);
+        let path = tmp("map");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        {
+            let mut m = f.map(10, 100, true).unwrap();
+            m.write(5, b"across the stripes").unwrap();
+            m.flush().unwrap();
+            let mut back = [0u8; 18];
+            m.read(5, &mut back).unwrap();
+            assert_eq!(&back, b"across the stripes");
+        }
+        let mut check = [0u8; 18];
+        f.read_at(15, &mut check).unwrap();
+        assert_eq!(&check, b"across the stripes");
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn exclusive_lock_serializes_threads() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let b = StripedBackend::local(4, 8);
+        let path = tmp("lock");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let in_section = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        let _g = f.lock_exclusive().unwrap();
+                        let v = in_section.fetch_add(1, Ordering::SeqCst);
+                        assert_eq!(v, 0, "two threads inside the distributed lock");
+                        std::thread::yield_now();
+                        in_section.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn delete_removes_all_objects_and_missing_is_no_such_file() {
+        let b = StripedBackend::local(3, 8);
+        let path = tmp("del");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[1u8; 64]).unwrap();
+        drop(f);
+        b.delete(&path).unwrap();
+        for i in 0..3 {
+            assert!(!std::path::Path::new(&StripedBackend::object_path(&path, i, 3)).exists());
+        }
+        let err = b.delete(&path).unwrap_err();
+        assert_eq!(err.class, ErrorClass::NoSuchFile);
+    }
+}

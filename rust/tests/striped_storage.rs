@@ -1,0 +1,440 @@
+//! Striped-backend integration: stripe-boundary semantics, distributed
+//! metadata, fault surfacing, all four access strategies, and the paper's
+//! §3.6 scenarios rerun against a `StripedBackend` with ≥ 4 servers —
+//! across thread ranks *and* forked-process ranks.
+
+use std::sync::Arc;
+
+use jpio::comm::{process, threads, Comm, Datatype};
+use jpio::io::{amode, ErrorClass, File, Info};
+use jpio::storage::faults::{FaultBackend, FaultOp, FaultPlan, FaultRule};
+use jpio::storage::local::LocalBackend;
+use jpio::storage::nfs::NfsConfig;
+use jpio::storage::striped::StripedBackend;
+use jpio::storage::{Backend, MappedRegion, OpenOptions, StorageFile};
+use jpio::strategy::{self, AccessStrategy, ALL_STRATEGIES};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-stripetest-{}-{name}", std::process::id())
+}
+
+fn striped4(unit: u64) -> StripedBackend {
+    StripedBackend::local(4, unit)
+}
+
+/// Remove a logical striped file's objects + the io-layer sidecar.
+fn cleanup(path: &str, servers: usize) {
+    for s in 0..servers {
+        let _ = std::fs::remove_file(StripedBackend::object_path(path, s, servers));
+    }
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+// ----------------------------------------------------------------------
+// Stripe-boundary semantics (raw Backend/StorageFile surface)
+// ----------------------------------------------------------------------
+
+#[test]
+fn rw_spanning_multiple_stripe_units() {
+    let b = striped4(16);
+    let path = tmp("span");
+    let f: Arc<dyn StorageFile> = b.open(&path, OpenOptions::rw_create()).unwrap();
+    let data: Vec<u8> = (0..200u8).collect();
+    f.write_at(9, &data).unwrap(); // crosses 13 unit boundaries
+    assert_eq!(f.size().unwrap(), 209);
+    let mut back = vec![0u8; 200];
+    assert_eq!(f.read_at(9, &mut back).unwrap(), 200);
+    assert_eq!(back, data);
+    // Every server holds part of the file.
+    for s in 0..4 {
+        let len = std::fs::metadata(StripedBackend::object_path(&path, s, 4)).unwrap().len();
+        assert!(len > 0, "server {s} got no data");
+    }
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn zero_length_ops_at_stripe_boundary() {
+    let b = striped4(32);
+    let path = tmp("zero");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.write_at(0, &[7u8; 64]).unwrap();
+    // Zero-length write/read exactly on a boundary: no-ops, no error.
+    assert_eq!(f.write_at(32, &[]).unwrap(), 0);
+    let mut empty = [0u8; 0];
+    assert_eq!(f.read_at(32, &mut empty).unwrap(), 0);
+    assert_eq!(f.size().unwrap(), 64);
+    // A zero-length run inside a vectored read is complete, not short.
+    let mut buf = [0u8; 4];
+    assert_eq!(f.read_runs(&[(32, 0), (0, 4)], &mut buf).unwrap(), 4);
+    assert_eq!(buf, [7u8; 4]);
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn set_size_shrinks_across_servers() {
+    let b = striped4(10);
+    let path = tmp("shrink");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.write_at(0, &vec![1u8; 200]).unwrap(); // 50 bytes per server
+    f.set_size(45).unwrap(); // 4 full units + 5 → objects 15, 10, 10, 10
+    assert_eq!(f.size().unwrap(), 45);
+    for (s, want) in [(0usize, 15u64), (1, 10), (2, 10), (3, 10)] {
+        let len = std::fs::metadata(StripedBackend::object_path(&path, s, 4)).unwrap().len();
+        assert_eq!(len, want, "server {s} object size after shrink");
+    }
+    let mut buf = vec![0xEEu8; 100];
+    assert_eq!(f.read_at(0, &mut buf).unwrap(), 45);
+    assert!(buf[..45].iter().all(|&v| v == 1));
+    // Growing back exposes zeros, not stale bytes.
+    f.set_size(80).unwrap();
+    assert_eq!(f.size().unwrap(), 80);
+    let mut buf = vec![0xEEu8; 80];
+    assert_eq!(f.read_at(0, &mut buf).unwrap(), 80);
+    assert!(buf[45..].iter().all(|&v| v == 0), "grown region must read zero");
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn vectored_read_stops_at_logical_eof() {
+    let b = striped4(8);
+    let path = tmp("eofruns");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.write_at(0, &[9u8; 20]).unwrap();
+    let mut buf = [0u8; 30];
+    // Second run crosses EOF (20): 4 of 10 bytes; third must not run.
+    let got = f.read_runs(&[(0, 10), (16, 10), (40, 10)], &mut buf).unwrap();
+    assert_eq!(got, 14);
+    assert_eq!(&buf[..14], &[9u8; 14]);
+    assert_eq!(&buf[14..], &[0u8; 16]);
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn unsorted_vectored_read_over_sparse_objects_keeps_all_data() {
+    // Server 0's stripe object is short (only logical [0, 5) written on
+    // it) while the logical file extends to 99 via server 1. A vectored
+    // read whose runs arrive in descending child order on server 0 —
+    // first the hole at logical 40, then the real data at logical 0 —
+    // must still return the real bytes: the per-server batch has to be
+    // issued in ascending child order or the child's short read at the
+    // hole drops the later run.
+    let b = striped4(10);
+    let path = tmp("sparse-unsorted");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.write_at(0, b"ABCDE").unwrap();
+    f.write_at(95, b"tail").unwrap();
+    assert_eq!(f.size().unwrap(), 99);
+    let mut buf = [0xEEu8; 10];
+    let got = f.read_runs(&[(40, 5), (0, 5)], &mut buf).unwrap();
+    assert_eq!(got, 10);
+    assert_eq!(&buf[..5], &[0u8; 5], "hole must read as zeros");
+    assert_eq!(&buf[5..], b"ABCDE", "data behind the hole must not be dropped");
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn one_server_fault_surfaces_error_class() {
+    let plan = FaultPlan::new(vec![
+        FaultRule { op: FaultOp::Write, nth: 0, class: ErrorClass::NoSpace },
+        FaultRule { op: FaultOp::Read, nth: 0, class: ErrorClass::Io },
+    ]);
+    let children: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(LocalBackend::instant()),
+        Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone())),
+        Arc::new(LocalBackend::instant()),
+        Arc::new(LocalBackend::instant()),
+    ];
+    let b = StripedBackend::new(children, 8).unwrap();
+    let path = tmp("fault");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    // The write crosses all four servers; server 1's injected ENOSPC must
+    // surface as the whole operation's error class.
+    let err = f.write_at(0, &[0u8; 64]).unwrap_err();
+    assert_eq!(err.class, ErrorClass::NoSpace);
+    // The rule fired once; a retry lands everywhere.
+    assert_eq!(f.write_at(0, &[1u8; 64]).unwrap(), 64);
+    let mut back = [0u8; 64];
+    let err = f.read_at(0, &mut back).unwrap_err();
+    assert_eq!(err.class, ErrorClass::Io);
+    assert_eq!(f.read_at(0, &mut back).unwrap(), 64);
+    assert!(back.iter().all(|&v| v == 1));
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn all_access_strategies_roundtrip_on_striped() {
+    for name in ALL_STRATEGIES {
+        let strat: Box<dyn AccessStrategy> = strategy::by_name(name).unwrap();
+        let b = striped4(16);
+        let path = tmp(&format!("strat-{name}"));
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.set_size(4096).unwrap();
+        // Scattered, unsorted runs crossing stripe boundaries.
+        let runs = [(100u64, 16usize), (900, 8), (40, 4)];
+        let data: Vec<u8> = (0..28u8).collect();
+        assert_eq!(strat.write(f.as_ref(), &runs, &data).unwrap(), 28, "{name}");
+        let mut back = vec![0u8; 28];
+        assert_eq!(strat.read(f.as_ref(), &runs, &mut back).unwrap(), 28, "{name}");
+        assert_eq!(back, data, "strategy {name} corrupted data");
+        b.delete(&path).unwrap();
+    }
+}
+
+#[test]
+fn mapped_region_readonly_rejects_and_rw_persists() {
+    let b = striped4(64);
+    let path = tmp("map");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.set_size(1024).unwrap();
+    {
+        let mut m: Box<dyn MappedRegion> = f.map(0, 1024, false).unwrap();
+        let err = m.write(0, b"x").unwrap_err();
+        assert_eq!(err.class, ErrorClass::ReadOnly);
+    }
+    {
+        let mut m = f.map(60, 200, true).unwrap(); // straddles units 0..4
+        m.write(0, &[5u8; 200]).unwrap();
+        m.flush().unwrap();
+    }
+    let mut back = [0u8; 200];
+    f.read_at(60, &mut back).unwrap();
+    assert_eq!(back, [5u8; 200]);
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn mapped_flush_retries_after_transient_fault() {
+    let plan = FaultPlan::new(vec![FaultRule {
+        op: FaultOp::Write,
+        nth: 0,
+        class: ErrorClass::NoSpace,
+    }]);
+    let children: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(FaultBackend::new(LocalBackend::instant(), plan)),
+        Arc::new(LocalBackend::instant()),
+    ];
+    let b = StripedBackend::new(children, 8).unwrap();
+    let path = tmp("map-retry");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.set_size(64).unwrap();
+    let mut m = f.map(0, 16, true).unwrap();
+    m.write(0, b"persist me!!").unwrap();
+    // First flush hits the injected fault; the dirty state must survive
+    // so the retry actually writes instead of reporting a hollow Ok.
+    let err = m.flush().unwrap_err();
+    assert_eq!(err.class, ErrorClass::NoSpace);
+    m.flush().unwrap();
+    let mut back = [0u8; 12];
+    f.read_at(0, &mut back).unwrap();
+    assert_eq!(&back, b"persist me!!");
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn striped_over_nfs_children_roundtrip() {
+    let b = StripedBackend::nfs(4, 1024, NfsConfig::instant());
+    let path = tmp("nfs");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    let data: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+    f.write_at(13, &data).unwrap();
+    f.sync().unwrap();
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(13, &mut back).unwrap(), data.len());
+    assert_eq!(back, data);
+    b.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// The paper's §3.6 scenarios on striped storage, 4 thread ranks
+// ----------------------------------------------------------------------
+
+fn open_striped<'c>(c: &'c dyn Comm, path: &str, unit: u64, info: Info) -> File<'c> {
+    let backend: Arc<dyn Backend> = Arc::new(StripedBackend::local(4, unit));
+    File::open_with_backend(c, path, amode::RDWR | amode::CREATE, info, backend).unwrap()
+}
+
+#[test]
+fn paper_coll_scenario_on_striped() {
+    let path = tmp("coll");
+    threads::run(4, |c| {
+        let f = open_striped(c, &path, 64, Info::null());
+        let buf: Vec<u8> = (0..1024u32).map(|i| (i + c.rank() as u32) as u8).collect();
+        let st = f
+            .write_at_all((c.rank() * 1024) as i64, buf.as_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        assert_eq!(st.bytes, 1024);
+        c.barrier();
+        let mut back = vec![0u8; 1024];
+        let st = f
+            .read_at_all((c.rank() * 1024) as i64, back.as_mut_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        assert_eq!(st.bytes, 1024);
+        assert_eq!(back, buf);
+        f.close().unwrap();
+    });
+    cleanup(&path, 4);
+}
+
+#[test]
+fn paper_async_scenario_on_striped() {
+    let path = tmp("async");
+    threads::run(4, |c| {
+        let f = open_striped(c, &path, 128, Info::null());
+        let buf: Vec<u8> = vec![c.rank() as u8; 1024];
+        let req = f
+            .iwrite_at((c.rank() * 1024) as i64, buf.as_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 1024);
+        c.barrier();
+        let req = f
+            .iread_at((c.rank() * 1024) as i64, vec![0u8; 1024], 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        let (st, back) = req.wait().unwrap();
+        assert_eq!(st.bytes, 1024);
+        assert_eq!(back, buf);
+        f.close().unwrap();
+    });
+    cleanup(&path, 4);
+}
+
+#[test]
+fn paper_atomicity_scenario_on_striped() {
+    let path = tmp("atomic");
+    threads::run(4, |c| {
+        let f = open_striped(c, &path, 256, Info::null());
+        f.set_atomicity(true).unwrap();
+        assert!(f.get_atomicity());
+        let buf = vec![c.rank() as u8; 1024];
+        f.write_at((c.rank() * 1024) as i64, buf.as_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        c.barrier();
+        let mut back = vec![0u8; 1024];
+        f.read_at((c.rank() * 1024) as i64, back.as_mut_slice(), 0, 1024, &Datatype::BYTE)
+            .unwrap();
+        assert_eq!(back, buf);
+        f.set_atomicity(false).unwrap();
+        f.close().unwrap();
+    });
+    cleanup(&path, 4);
+}
+
+#[test]
+fn paper_misc_scenario_on_striped() {
+    let path = tmp("misc");
+    threads::run(4, |c| {
+        let f = open_striped(c, &path, 64, Info::null());
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let buf: Vec<i32> = (0..256).collect();
+        f.seek((c.rank() * 256) as i64, jpio::io::seek::SET).unwrap();
+        f.write(buf.as_slice(), 0, 256, &Datatype::INT).unwrap();
+        assert_eq!(f.get_position().unwrap(), (c.rank() * 256 + 256) as i64);
+        f.seek(-256, jpio::io::seek::CUR).unwrap();
+        let mut back = vec![0i32; 256];
+        f.read(back.as_mut_slice(), 0, 256, &Datatype::INT).unwrap();
+        assert_eq!(back, buf);
+        c.barrier();
+        f.seek(0, jpio::io::seek::END).unwrap();
+        assert_eq!(f.get_position().unwrap(), 1024);
+        f.close().unwrap();
+    });
+    cleanup(&path, 4);
+}
+
+#[test]
+fn striped_hints_end_to_end() {
+    let path = tmp("hints");
+    let info = Info::from([
+        ("jpio_backend", "striped"),
+        ("striping_factor", "4"),
+        ("striping_unit", "4096"),
+    ]);
+    {
+        let path = &path;
+        let info = &info;
+        threads::run(2, move |c| {
+            let f = File::open(c, path, amode::RDWR | amode::CREATE, info.clone()).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let r = c.rank();
+            let mine = vec![(r + 1) as i32; 2048]; // 8 KiB each: crosses units
+            f.write_at((r * 2048) as i64, mine.as_slice(), 0, 2048, &Datatype::INT).unwrap();
+            c.barrier();
+            let mut all = vec![0i32; 4096];
+            f.read_at(0, all.as_mut_slice(), 0, 4096, &Datatype::INT).unwrap();
+            assert!(all[..2048].iter().all(|&v| v == 1));
+            assert!(all[2048..].iter().all(|&v| v == 2));
+            f.close().unwrap();
+        });
+    }
+    // File::delete resolves the same striped backend and removes the
+    // stripe objects.
+    File::delete(&path, &info).unwrap();
+    for s in 0..4 {
+        assert!(
+            !std::path::Path::new(&StripedBackend::object_path(&path, s, 4)).exists(),
+            "stripe object {s} survived delete"
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// Forked-process ranks on striped storage
+// ----------------------------------------------------------------------
+
+#[test]
+fn multiprocess_collective_on_striped() {
+    let path = tmp("mp-coll");
+    process::run_local(4, |c| {
+        let backend: Arc<dyn Backend> = Arc::new(StripedBackend::local(4, 32));
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend,
+        )
+        .unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let r = c.rank();
+        let mine: Vec<i32> = (0..512).map(|i| (r * 512 + i) as i32).collect();
+        f.write_at_all((r * 512) as i64, mine.as_slice(), 0, 512, &Datatype::INT).unwrap();
+        c.barrier();
+        let n = 512 * c.size();
+        let mut all = vec![0i32; n];
+        f.read_at_all(0, all.as_mut_slice(), 0, n, &Datatype::INT).unwrap();
+        assert_eq!(all, (0..n as i32).collect::<Vec<_>>());
+        f.close().unwrap();
+    });
+    cleanup(&path, 4);
+}
+
+#[test]
+fn multiprocess_atomic_mode_on_striped() {
+    let path = tmp("mp-atomic");
+    process::run_local(3, |c| {
+        let backend: Arc<dyn Backend> = Arc::new(StripedBackend::local(4, 64));
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend,
+        )
+        .unwrap();
+        f.set_atomicity(true).unwrap();
+        let mine = vec![c.rank() as i32 + 10; 2048]; // 8 KiB over 64 B units
+        for _ in 0..5 {
+            f.write_at(0, mine.as_slice(), 0, 2048, &Datatype::INT).unwrap();
+        }
+        c.barrier();
+        let mut back = vec![0i32; 2048];
+        f.read_at(0, back.as_mut_slice(), 0, 2048, &Datatype::INT).unwrap();
+        assert!(
+            back.windows(2).all(|w| w[0] == w[1]),
+            "torn cross-process atomic write on striped storage"
+        );
+        f.close().unwrap();
+    });
+    cleanup(&path, 4);
+}
