@@ -23,10 +23,27 @@ pub fn file_mb() -> usize {
 
 /// Repetitions per case.
 pub fn reps() -> usize {
-    if std::env::var("JPIO_BENCH_FULL").is_ok() {
+    if smoke() {
+        1
+    } else if std::env::var("JPIO_BENCH_FULL").is_ok() {
         5
     } else {
         3
+    }
+}
+
+/// CI smoke mode (`JPIO_SMOKE=1`): tiny sizes, one repetition — the
+/// bench code compiles *and runs* on every PR without burning minutes.
+pub fn smoke() -> bool {
+    std::env::var("JPIO_SMOKE").is_ok()
+}
+
+/// Scale a workload size down 16× in smoke mode (floor 1).
+pub fn sz(full: usize) -> usize {
+    if smoke() {
+        (full / 16).max(1)
+    } else {
+        full
     }
 }
 

@@ -1,22 +1,30 @@
 //! Data access with explicit offsets and individual file pointers
 //! (§7.2.4.2 / §7.2.4.3), blocking and nonblocking.
 //!
-//! All routines funnel through one transfer core:
+//! All routines funnel through the unified pipeline:
 //!
 //! 1. flatten the *memory* side `(buf, bufOffset, count, datatype)` into a
-//!    packed payload (zero-copy when the memory type is contiguous and no
-//!    representation conversion applies);
-//! 2. flatten the *file* side through the current view into absolute byte
-//!    runs ([`FileView::runs`]);
-//! 3. hand both to the selected access strategy;
-//! 4. apply datarep conversion on the packed payload;
-//! 5. take the whole-file lock when atomic mode is on (§7.2.6.1).
+//!    packed payload ([`pack_payload`]; zero-copy when the memory type is
+//!    contiguous and no representation conversion applies);
+//! 2. compile the *file* side into an [`IoPlan`] (view-flattened absolute
+//!    byte runs + payload map + datarep + atomicity);
+//! 3. hand the plan to the [`IoScheduler`], which executes it
+//!    synchronously or on the request engine through the selected access
+//!    strategy (taking the whole-file lock when atomic mode is on,
+//!    §7.2.6.1, and converting the payload at the datarep edge).
+//!
+//! The other access families — shared pointers, collectives,
+//! split/nonblocking collectives — compile into the same [`IoPlan`]
+//! representation; this module owns only the memory-side helpers and the
+//! explicit-offset/individual-pointer API surface.
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::Status;
 use crate::io::engine::{self, Request};
 use crate::io::errors::{err_arg, err_unsupported_op, Result};
 use crate::io::file::{amode, seek, File};
+use crate::io::plan::IoPlan;
+use crate::io::schedule::IoScheduler;
 use crate::io::view::FileView;
 use crate::storage::StorageFile;
 use crate::strategy::AccessStrategy;
@@ -105,7 +113,7 @@ pub(crate) fn unpack_payload(
     Ok(())
 }
 
-fn check_mem_args(
+pub(crate) fn check_mem_args(
     buf: &(impl IoBuf + ?Sized),
     buf_offset: usize,
     count: usize,
@@ -131,17 +139,11 @@ fn check_mem_args(
     Ok(())
 }
 
-/// Blocking write of a packed payload at an etype offset.
+/// Blocking write of a packed payload at an etype offset: compile an
+/// [`IoPlan`] and execute it synchronously.
 pub(crate) fn write_payload(ctx: &TransferCtx, etype_off: i64, payload: &[u8]) -> Result<Status> {
-    let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
-    // Allocation-free path for gap-free views (the common case).
-    if let Some(run) = ctx.view.contiguous_run(etype_off, payload.len()) {
-        let n = ctx.strategy.write(ctx.storage.as_ref(), &[run], payload)?;
-        return Ok(Status::of_bytes(n));
-    }
-    let runs = ctx.view.runs(etype_off, payload.len())?;
-    let n = ctx.strategy.write(ctx.storage.as_ref(), &runs, payload)?;
-    Ok(Status::of_bytes(n))
+    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
+    IoScheduler::write(ctx, &plan, payload)
 }
 
 /// Blocking read into a packed payload buffer at an etype offset; returns
@@ -151,18 +153,8 @@ pub(crate) fn read_payload(
     etype_off: i64,
     payload: &mut [u8],
 ) -> Result<usize> {
-    let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
-    let got = if let Some(run) = ctx.view.contiguous_run(etype_off, payload.len()) {
-        ctx.strategy.read(ctx.storage.as_ref(), &[run], payload)?
-    } else {
-        let runs = ctx.view.runs(etype_off, payload.len())?;
-        ctx.strategy.read(ctx.storage.as_ref(), &runs, payload)?
-    };
-    if !ctx.view.datarep.is_identity() {
-        let elems = ctx.view.payload_elems(got);
-        ctx.view.datarep.decode(&mut payload[..got], &elems);
-    }
-    Ok(got)
+    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
+    IoScheduler::read(ctx, &plan, payload)
 }
 
 impl File<'_> {
@@ -241,11 +233,14 @@ impl File<'_> {
         self.check_readable()?;
         let ctx = self.transfer_ctx();
         check_mem_args(buf.as_slice(), buf_offset, count, datatype)?;
+        // Compile on the caller (argument errors surface here); execute
+        // on the engine.
+        let plan = IoPlan::compile(&ctx.view, ctx.atomic, offset, count * datatype.size())?;
         let dt = datatype.clone();
         Ok(engine::submit(move || {
             let mut buf = buf;
             let mut payload = vec![0u8; count * dt.size()];
-            let res = read_payload(&ctx, offset, &mut payload).and_then(|got| {
+            let res = IoScheduler::read(&ctx, &plan, &mut payload).and_then(|got| {
                 unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)?;
                 Ok(Status::of_bytes(got))
             });
@@ -267,7 +262,8 @@ impl File<'_> {
         self.check_writable()?;
         let ctx = self.transfer_ctx();
         let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        Ok(engine::submit(move || (write_payload(&ctx, offset, &payload), ())))
+        let plan = IoPlan::compile(&ctx.view, ctx.atomic, offset, payload.len())?;
+        Ok(IoScheduler::write_async(ctx, plan, payload))
     }
 
     // ------------------------------------------------------------------

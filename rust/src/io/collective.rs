@@ -1,22 +1,33 @@
 //! Collective data access (`*_ALL`, §7.2.4) with two-phase collective
 //! buffering — ROMIO's flagship optimization ("an optimized implementation
-//! of collective I/O, an important optimization in parallel I/O", §2.2.1).
+//! of collective I/O, an important optimization in parallel I/O", §2.2.1) —
+//! plus the MPI-3.1 nonblocking collectives `iread_all`/`iwrite_all`.
 //!
 //! ## Two-phase algorithm
 //!
-//! 1. Every rank flattens its request through its view into absolute byte
-//!    runs and the ranks agree on the global byte range.
-//! 2. The range is split into contiguous *aggregator domains* (`cb_nodes`
-//!    hint; default: every rank aggregates).
-//! 3. **Exchange phase** (communication): each rank ships the pieces of
-//!    its request that fall into each domain to that domain's aggregator.
+//! 1. Every rank compiles its request into an [`IoPlan`] (view-flattened
+//!    absolute byte runs + payload map) and the ranks agree on the global
+//!    byte range.
+//! 2. The range is split into *aggregator domains* (`cb_nodes` hint;
+//!    default: every rank aggregates). `cb_config_list` pins the
+//!    aggregator role of each domain to an explicit rank.
+//! 3. **Exchange phase** (communication): each rank clips its plan to
+//!    each domain ([`IoPlan::clip`]) and ships the pieces to that
+//!    domain's aggregator.
 //! 4. **I/O phase** (storage): aggregators merge the pieces into large,
 //!    mostly-contiguous transfers (data sieving on reads) and hit the
-//!    file once, instead of N ranks issuing interleaved small I/O.
+//!    file once, instead of N ranks issuing interleaved small I/O. The
+//!    phase is executed by the [`IoScheduler`] — synchronously for the
+//!    blocking `*_ALL` routines, on the request engine for the split and
+//!    nonblocking collectives.
 //!
 //! The I/O phase touches only storage, which is what lets the split
-//! collectives ([`crate::io::split`]) run it on the request engine while
-//! the application computes (§7.2.9.1 double buffering).
+//! collectives ([`crate::io::split`]) and `iwrite_all` run it on the
+//! request engine while the application computes (§7.2.9.1 double
+//! buffering). Collective *reads* must finish their reply exchange on the
+//! calling thread (the communicator cannot leave it), so `iread_all`
+//! completes the aggregation in the call and defers only the local
+//! scatter/decode to the engine — the same contract as the split reads.
 //!
 //! ## Stripe-aligned file domains
 //!
@@ -30,36 +41,23 @@
 //! Lustre/PVFS group-cyclic form: aggregators stop contending for each
 //! other's servers, and aggregate bandwidth scales with the stripe count.
 //! Disable with the `jpio_cb_stripe_align = false` hint (the ablation
-//! bench measures the difference).
+//! bench measures the difference). The ROMIO-style `cb_config_list` hint
+//! ([`parse_cb_config_list`]) additionally pins *which rank* serves each
+//! stripe server's domain; absent the hint, domain `i` falls back to the
+//! stripe-cyclic default of rank `i`.
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::{Comm, ReduceOp, Status};
-use crate::io::access::{pack_payload, read_payload, unpack_payload, write_payload, TransferCtx};
+use crate::io::access::{
+    check_mem_args, pack_payload, read_payload, unpack_payload, write_payload, TransferCtx,
+};
+use crate::io::engine::{self, Request};
 use crate::io::errors::Result;
 use crate::io::file::File;
 use crate::io::hints::keys;
+use crate::io::plan::IoPlan;
+use crate::io::schedule::IoScheduler;
 use crate::storage::layout::StripeLayout;
-use crate::strategy::{AccessStrategy, ViewBufStrategy};
-
-/// One rank's pieces destined for a single aggregator.
-fn slice_runs_for_domain(
-    runs: &[(u64, usize)],
-    payload_positions: &[usize],
-    domain: (u64, u64),
-) -> Vec<(u64, usize, usize)> {
-    // Returns (file_off, len, payload_pos) clipped to the domain.
-    let mut out = Vec::new();
-    for (i, &(off, len)) in runs.iter().enumerate() {
-        let end = off + len as u64;
-        let s = off.max(domain.0);
-        let e = end.min(domain.1);
-        if s < e {
-            let head = (s - off) as usize;
-            out.push((s, (e - s) as usize, payload_positions[i] + head));
-        }
-    }
-    out
-}
 
 /// Serialize pieces + payload bytes into one exchange message.
 fn encode_write_msg(pieces: &[(u64, usize, usize)], payload: &[u8]) -> Vec<u8> {
@@ -111,25 +109,20 @@ impl FileDomains {
         FileDomains::Contiguous(split_domains(lo, hi, naggr))
     }
 
-    /// This rank's request pieces destined for aggregator `a`:
-    /// `(file_off, len, payload_pos)` clipped to the aggregator's domain.
-    fn pieces_for(
-        &self,
-        runs: &[(u64, usize)],
-        positions: &[usize],
-        a: usize,
-    ) -> Vec<(u64, usize, usize)> {
+    /// This rank's plan pieces destined for file domain `a`:
+    /// `(file_off, len, payload_pos)` clipped to the domain.
+    fn pieces_for(&self, plan: &IoPlan, a: usize) -> Vec<(u64, usize, usize)> {
         match self {
-            FileDomains::Contiguous(domains) => slice_runs_for_domain(runs, positions, domains[a]),
+            FileDomains::Contiguous(domains) => plan.clip(domains[a]),
             FileDomains::StripeCyclic { unit, naggr } => {
                 // Reuse the layout walk with the aggregator count as the
-                // "factor": the piece's server index *is* its aggregator.
+                // "factor": the piece's server index *is* its domain.
                 let cyclic = StripeLayout { unit: *unit, factor: *naggr };
                 let mut out = Vec::new();
-                for (i, &(off, len)) in runs.iter().enumerate() {
+                for (i, &(off, len)) in plan.runs.iter().enumerate() {
                     cyclic.for_each_piece(off, len, |aggr, cur, piece_len| {
                         if aggr == a {
-                            out.push((cur, piece_len, positions[i] + (cur - off) as usize));
+                            out.push((cur, piece_len, plan.positions[i] + (cur - off) as usize));
                         }
                     });
                 }
@@ -139,44 +132,20 @@ impl FileDomains {
     }
 }
 
-/// Work an aggregator owes the I/O phase of a collective write.
+/// Work an aggregator owes the I/O phase of a collective write; executed
+/// by [`IoScheduler::write_phase`] / [`IoScheduler::write_phase_async`].
 pub(crate) struct WriteIoWork {
-    /// Per-source (in rank order) decoded runs + their bytes, already
-    /// flattened to (off, len, bytes) writes in arrival order.
+    /// Decoded pieces flattened to (off, bytes) writes, sorted by offset
+    /// with rank order preserved on ties (deterministic overwrite).
     pub writes: Vec<(u64, Vec<u8>)>,
     /// Staging-buffer size for the aggregator strategy.
     pub cb_buffer: usize,
 }
 
 impl WriteIoWork {
-    /// Execute the I/O phase (storage only — engine-safe).
-    pub(crate) fn execute(self, ctx: &TransferCtx) -> Result<()> {
-        let strat = ViewBufStrategy::with_stage(self.cb_buffer);
-        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
-        // Coalesce strictly-adjacent pieces into single large transfers —
-        // the whole point of aggregation. (Overlapping pieces are never
-        // merged: sorted order preserves the deterministic rank-order
-        // overwrite semantics.)
-        let mut pending: Option<(u64, Vec<u8>)> = None;
-        for (off, bytes) in self.writes {
-            match &mut pending {
-                Some((poff, pbuf))
-                    if *poff + pbuf.len() as u64 == off
-                        && pbuf.len() + bytes.len() <= self.cb_buffer =>
-                {
-                    pbuf.extend_from_slice(&bytes);
-                }
-                Some((poff, pbuf)) => {
-                    strat.write(ctx.storage.as_ref(), &[(*poff, pbuf.len())], pbuf)?;
-                    pending = Some((off, bytes));
-                }
-                None => pending = Some((off, bytes)),
-            }
-        }
-        if let Some((poff, pbuf)) = pending {
-            strat.write(ctx.storage.as_ref(), &[(poff, pbuf.len())], &pbuf)?;
-        }
-        Ok(())
+    /// No aggregator work (non-aggregators, degenerate collectives).
+    pub(crate) fn empty() -> WriteIoWork {
+        WriteIoWork { writes: Vec::new(), cb_buffer: 1 }
     }
 }
 
@@ -190,6 +159,96 @@ pub(crate) struct CbParams {
     pub enabled: bool,
     /// `jpio_cb_stripe_align`: stripe-aligned file domains on/off.
     pub stripe_align: bool,
+    /// Parsed `cb_config_list`: explicit aggregator-rank placement per
+    /// file domain; `None` falls back to rank `i` aggregating domain `i`.
+    pub config_list: Option<Vec<usize>>,
+}
+
+/// Parse a ROMIO-style `cb_config_list` hint into an aggregator rank
+/// list. ROMIO's grammar names hosts; in a single-machine world ranks
+/// stand in for hosts, so entries are `rank` or `rank:count` (the rank
+/// serves `count` consecutive file domains), with `*` expanding to all
+/// ranks. Returns `None` — fall back to the default placement — when the
+/// spec is empty or malformed, per the MPI rule that unrecognized hint
+/// values are ignored.
+pub(crate) fn parse_cb_config_list(spec: &str, n: usize) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        if tok == "*" {
+            out.extend(0..n);
+            continue;
+        }
+        let (rank_s, count_s) = match tok.split_once(':') {
+            Some((r, c)) => (r, c),
+            None => (tok, "1"),
+        };
+        let rank: usize = rank_s.trim().parse().ok()?;
+        let count: usize = count_s.trim().parse().ok()?;
+        if rank >= n || count == 0 {
+            return None;
+        }
+        out.resize(out.len() + count, rank);
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// The rank owning each file domain of a collective: `aggr[j]` is the
+/// rank that aggregates domain `j`. Without `cb_config_list` this is the
+/// identity on the first `cb_nodes` ranks (the stripe-cyclic default);
+/// with it, the parsed list is tiled across the domains, pinning e.g.
+/// stripe server `j`'s traffic to the listed rank.
+pub(crate) fn aggregator_ranks(cb: &CbParams, n: usize) -> Vec<usize> {
+    match &cb.config_list {
+        Some(list) if !list.is_empty() => {
+            let naggr = cb.nodes.unwrap_or(list.len()).clamp(1, n.max(list.len()));
+            (0..naggr).map(|j| list[j % list.len()]).collect()
+        }
+        _ => {
+            let naggr = cb.nodes.unwrap_or(n).clamp(1, n);
+            (0..naggr).collect()
+        }
+    }
+}
+
+/// The shared first half of every two-phase collective: agree on the
+/// global byte range and clip this rank's plan into per-aggregator-rank
+/// piece lists (`result[rank]` = sorted pieces destined for `rank`; a
+/// rank pinned to several domains receives them concatenated). `None`
+/// when the collective's global byte range is empty.
+fn route_to_aggregators(
+    comm: &dyn Comm,
+    ctx: &TransferCtx,
+    cb: &CbParams,
+    plan: &IoPlan,
+) -> Option<Vec<Vec<(u64, usize, usize)>>> {
+    let n = comm.size();
+    let (my_min, my_max) = match plan.bounds() {
+        Some((lo, hi)) => (lo as i64, hi as i64),
+        None => (i64::MAX, 0),
+    };
+    let gmin = comm.allreduce_i64(ReduceOp::Min, my_min);
+    let gmax = comm.allreduce_i64(ReduceOp::Max, my_max);
+    if gmin >= gmax {
+        return None;
+    }
+    let owners = aggregator_ranks(cb, n);
+    let domains = FileDomains::choose(ctx, gmin as u64, gmax as u64, owners.len(), cb.stripe_align);
+    let mut per_rank: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n];
+    for (j, &rank) in owners.iter().enumerate() {
+        per_rank[rank].extend(domains.pieces_for(plan, j));
+    }
+    for pieces in &mut per_rank {
+        pieces.sort_unstable_by_key(|&(off, _, _)| off);
+    }
+    Some(per_rank)
 }
 
 /// Outcome of the exchange phase of a collective write: the I/O work this
@@ -202,38 +261,18 @@ pub(crate) fn exchange_write(
     payload: &[u8],
 ) -> Result<(WriteIoWork, usize)> {
     let n = comm.size();
-    let runs = ctx.view.runs(etype_off, payload.len())?;
     if !cb.enabled || n == 1 {
         // Degenerate: independent write, collective completion only.
         write_payload(ctx, etype_off, payload)?;
-        return Ok((WriteIoWork { writes: Vec::new(), cb_buffer: 1 }, payload.len()));
+        return Ok((WriteIoWork::empty(), payload.len()));
     }
-    // Payload position of each run.
-    let mut positions = Vec::with_capacity(runs.len());
-    let mut acc = 0usize;
-    for &(_, len) in &runs {
-        positions.push(acc);
-        acc += len;
-    }
-    // Global byte range.
-    let my_min = runs.first().map(|&(o, _)| o as i64).unwrap_or(i64::MAX);
-    let my_max = runs.last().map(|&(o, l)| (o + l as u64) as i64).unwrap_or(0);
-    let gmin = comm.allreduce_i64(ReduceOp::Min, my_min);
-    let gmax = comm.allreduce_i64(ReduceOp::Max, my_max);
-    if gmin >= gmax {
-        return Ok((WriteIoWork { writes: Vec::new(), cb_buffer: 1 }, payload.len()));
-    }
-    let naggr = cb.nodes.unwrap_or(n).clamp(1, n);
-    let domains = FileDomains::choose(ctx, gmin as u64, gmax as u64, naggr, cb.stripe_align);
-    // Build one message per rank (non-aggregators get empty messages).
-    let mut msgs = vec![Vec::new(); n];
-    for (a, msg) in msgs.iter_mut().enumerate().take(naggr) {
-        let pieces = domains.pieces_for(&runs, &positions, a);
-        *msg = encode_write_msg(&pieces, payload);
-    }
-    for m in msgs.iter_mut().skip(naggr) {
-        m.extend_from_slice(&0u32.to_le_bytes());
-    }
+    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
+    let per_rank = match route_to_aggregators(comm, ctx, cb, &plan) {
+        Some(p) => p,
+        None => return Ok((WriteIoWork::empty(), payload.len())),
+    };
+    let msgs: Vec<Vec<u8>> =
+        per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
     let inbound = comm.alltoall(&msgs);
     // Decode in rank order (deterministic overlap resolution).
     let mut writes = Vec::new();
@@ -271,42 +310,26 @@ pub(crate) fn collective_read(
         }
         return Ok(got);
     }
-    let runs = ctx.view.runs(etype_off, payload.len())?;
-    let mut positions = Vec::with_capacity(runs.len());
-    let mut acc = 0usize;
-    for &(_, len) in &runs {
-        positions.push(acc);
-        acc += len;
-    }
-    let my_min = runs.first().map(|&(o, _)| o as i64).unwrap_or(i64::MAX);
-    let my_max = runs.last().map(|&(o, l)| (o + l as u64) as i64).unwrap_or(0);
-    let gmin = comm.allreduce_i64(ReduceOp::Min, my_min);
-    let gmax = comm.allreduce_i64(ReduceOp::Max, my_max);
-    if gmin >= gmax {
-        return Ok(0);
-    }
-    let naggr = cb.nodes.unwrap_or(n).clamp(1, n);
-    let domains = FileDomains::choose(ctx, gmin as u64, gmax as u64, naggr, cb.stripe_align);
-    // Request phase: ship (off,len) lists to aggregators.
-    let mut reqs = vec![Vec::new(); n];
-    let mut my_pieces: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n];
-    for (a, (req, mine)) in reqs.iter_mut().zip(my_pieces.iter_mut()).enumerate().take(naggr) {
-        let pieces = domains.pieces_for(&runs, &positions, a);
+    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
+    // Request phase: ship (off,len) lists to the owning aggregator ranks.
+    let my_pieces = match route_to_aggregators(comm, ctx, cb, &plan) {
+        Some(p) => p,
+        None => return Ok(0),
+    };
+    let mut reqs = Vec::with_capacity(n);
+    for pieces in &my_pieces {
         let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
         msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
-        for &(off, len, _) in &pieces {
+        for &(off, len, _) in pieces.iter() {
             msg.extend_from_slice(&off.to_le_bytes());
             msg.extend_from_slice(&(len as u64).to_le_bytes());
         }
-        *req = msg;
-        *mine = pieces;
-    }
-    for m in reqs.iter_mut().skip(naggr) {
-        m.extend_from_slice(&0u32.to_le_bytes());
+        reqs.push(msg);
     }
     let inbound = comm.alltoall(&reqs);
 
-    // Aggregator I/O phase: merge all requested intervals, sieved read.
+    // Aggregator I/O phase: merge all requested intervals, sieved read
+    // through the scheduler.
     let eof = ctx.storage.size()?;
     let mut per_src_runs: Vec<Vec<(u64, usize)>> = Vec::with_capacity(n);
     let mut intervals: Vec<(u64, u64)> = Vec::new();
@@ -318,15 +341,12 @@ pub(crate) fn collective_read(
         per_src_runs.push(rs);
     }
     let merged = merge_intervals(&mut intervals);
-    let strat = ViewBufStrategy::with_stage(cb.buffer.unwrap_or(16 << 20).max(4096));
     let merged_runs: Vec<(u64, usize)> =
         merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
     let total: usize = merged_runs.iter().map(|r| r.1).sum();
     let mut agg_buf = vec![0u8; total];
-    if total > 0 {
-        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
-        strat.read(ctx.storage.as_ref(), &merged_runs, &mut agg_buf)?;
-    }
+    let stage = cb.buffer.unwrap_or(16 << 20).max(4096);
+    IoScheduler::read_phase(ctx, &merged_runs, stage, &mut agg_buf)?;
     // Reply phase: slice the aggregated buffer per source request.
     let locate = |off: u64| -> Option<usize> {
         // Position of `off` within agg_buf.
@@ -365,9 +385,8 @@ pub(crate) fn collective_read(
         }
     }
     // Datarep decode on the assembled payload.
-    if !ctx.view.datarep.is_identity() {
-        let elems = ctx.view.payload_elems(got);
-        ctx.view.datarep.decode(&mut payload[..got], &elems);
+    if plan.needs_convert() {
+        plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
     }
     Ok(got)
 }
@@ -411,6 +430,9 @@ impl File<'_> {
             buffer: info.get_usize(keys::CB_BUFFER_SIZE),
             enabled: info.get_flag(keys::COLLECTIVE_BUFFERING).unwrap_or(true),
             stripe_align: info.get_flag(keys::CB_STRIPE_ALIGN).unwrap_or(true),
+            config_list: info
+                .get(keys::CB_CONFIG_LIST)
+                .and_then(|spec| parse_cb_config_list(spec, self.comm.size())),
         }
     }
 
@@ -429,7 +451,7 @@ impl File<'_> {
         let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?;
         let cb = self.cb_params();
         let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
-        work.execute(&ctx)?;
+        IoScheduler::write_phase(&ctx, work)?;
         self.comm.barrier();
         Ok(Status::of_bytes(bytes))
     }
@@ -482,6 +504,116 @@ impl File<'_> {
         *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
         Ok(st)
     }
+
+    // ------------------------------------------------------------------
+    // MPI-3.1 nonblocking collectives
+    // ------------------------------------------------------------------
+
+    /// `MPI_FILE_IWRITE_AT_ALL` (MPI-3.1): nonblocking collective write
+    /// at an explicit offset. The exchange phase runs in this call (it
+    /// needs the communicator, which cannot leave the calling thread);
+    /// the I/O phase is scheduled on the request engine exactly like the
+    /// split collectives, so the storage work overlaps computation.
+    /// Completion ([`Request::wait`]) is local — no barrier.
+    pub fn iwrite_at_all(
+        &self,
+        offset: Offset,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<()>> {
+        self.check_open()?;
+        self.check_writable()?;
+        let cb = self.cb_params();
+        if !cb.enabled || self.comm.size() == 1 {
+            // No aggregation: the whole operation runs on the engine.
+            return self.iwrite_at(offset, buf, buf_offset, count, datatype);
+        }
+        let ctx = self.transfer_ctx();
+        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
+        let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
+        Ok(IoScheduler::write_phase_async(ctx, work, bytes))
+    }
+
+    /// `MPI_FILE_IREAD_AT_ALL` (MPI-3.1): nonblocking collective read at
+    /// an explicit offset. The exchange *and* aggregation complete in
+    /// this call (the reply exchange needs the communicator — the same
+    /// constraint the split collective reads document); the local
+    /// scatter into `buf` and datarep decode run on the engine.
+    pub fn iread_at_all<T>(
+        &self,
+        offset: Offset,
+        buf: Vec<T>,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        self.check_open()?;
+        self.check_readable()?;
+        let cb = self.cb_params();
+        if !cb.enabled || self.comm.size() == 1 {
+            return self.iread_at(offset, buf, buf_offset, count, datatype);
+        }
+        let ctx = self.transfer_ctx();
+        check_mem_args(buf.as_slice(), buf_offset, count, datatype)?;
+        let mut payload = vec![0u8; count * datatype.size()];
+        let got = collective_read(self.comm, &ctx, &cb, offset, &mut payload)?;
+        let dt = datatype.clone();
+        Ok(engine::submit(move || {
+            let mut buf = buf;
+            let res = unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)
+                .map(|()| Status::of_bytes(got));
+            (res, buf)
+        }))
+    }
+
+    /// `MPI_FILE_IWRITE_ALL` (MPI-3.1): nonblocking collective write at
+    /// the individual pointer. The pointer advances immediately by the
+    /// full request size (the same MPI semantics as [`File::iwrite`]).
+    pub fn iwrite_all(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<()>> {
+        // Advance the pointer and release its lock before entering the
+        // collective (like the split BEGINs): holding it across the
+        // exchange would stall every other thread's pointer op for the
+        // whole collective.
+        let view = self.view_snapshot();
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let off = *ptr;
+        *ptr = off + view.bytes_to_etypes(count * datatype.size());
+        drop(ptr);
+        self.iwrite_at_all(off, buf, buf_offset, count, datatype)
+    }
+
+    /// `MPI_FILE_IREAD_ALL` (MPI-3.1): nonblocking collective read at the
+    /// individual pointer.
+    pub fn iread_all<T>(
+        &self,
+        buf: Vec<T>,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        let view = self.view_snapshot();
+        let mut ptr = self.indiv_ptr.lock().unwrap();
+        let off = *ptr;
+        *ptr = off + view.bytes_to_etypes(count * datatype.size());
+        drop(ptr);
+        self.iread_at_all(off, buf, buf_offset, count, datatype)
+    }
 }
 
 #[cfg(test)]
@@ -518,10 +650,10 @@ mod tests {
         let d = FileDomains::StripeCyclic { unit: 10, naggr: 2 };
         // One run [5, 45): stripes 0..4 → aggregator 0 gets stripes 0 and
         // 2, aggregator 1 gets stripes 1 and 3.
-        let runs = [(5u64, 40usize)];
-        let positions = [100usize];
-        let a0 = d.pieces_for(&runs, &positions, 0);
-        let a1 = d.pieces_for(&runs, &positions, 1);
+        let mut plan = IoPlan::from_runs(vec![(5u64, 40usize)], false);
+        plan.positions = vec![100]; // pretend the payload starts at 100
+        let a0 = d.pieces_for(&plan, 0);
+        let a1 = d.pieces_for(&plan, 1);
         assert_eq!(a0, vec![(5, 5, 100), (20, 10, 115), (40, 5, 135)]);
         assert_eq!(a1, vec![(10, 10, 105), (30, 10, 125)]);
         // Together the pieces cover the run exactly.
@@ -530,6 +662,39 @@ mod tests {
         for &(off, len, _) in a0.iter().chain(&a1) {
             assert_eq!(off / 10, (off + len as u64 - 1) / 10, "piece crosses a boundary");
         }
+    }
+
+    #[test]
+    fn cb_config_list_parses_romio_style() {
+        assert_eq!(parse_cb_config_list("0,2,5", 8), Some(vec![0, 2, 5]));
+        assert_eq!(parse_cb_config_list("1:3", 4), Some(vec![1, 1, 1]));
+        assert_eq!(parse_cb_config_list("3, 1:2 ,0", 4), Some(vec![3, 1, 1, 0]));
+        assert_eq!(parse_cb_config_list("*", 3), Some(vec![0, 1, 2]));
+        // Out-of-range rank, zero count, garbage → ignored hint.
+        assert_eq!(parse_cb_config_list("7", 4), None);
+        assert_eq!(parse_cb_config_list("1:0", 4), None);
+        assert_eq!(parse_cb_config_list("host1:2", 4), None);
+        assert_eq!(parse_cb_config_list("", 4), None);
+    }
+
+    #[test]
+    fn aggregator_ranks_pin_and_fall_back() {
+        let base = CbParams {
+            nodes: None,
+            buffer: None,
+            enabled: true,
+            stripe_align: true,
+            config_list: None,
+        };
+        // Default: stripe-cyclic identity placement.
+        assert_eq!(aggregator_ranks(&base, 4), vec![0, 1, 2, 3]);
+        let two = CbParams { nodes: Some(2), ..base };
+        assert_eq!(aggregator_ranks(&two, 4), vec![0, 1]);
+        // Pinned: domain j → list[j % len], tiled across cb_nodes domains.
+        let pinned = CbParams { config_list: Some(vec![3, 1]), nodes: None, ..two };
+        assert_eq!(aggregator_ranks(&pinned, 4), vec![3, 1]);
+        let pinned4 = CbParams { config_list: Some(vec![3, 1]), nodes: Some(4), ..pinned };
+        assert_eq!(aggregator_ranks(&pinned4, 4), vec![3, 1, 3, 1]);
     }
 
     #[test]
@@ -577,6 +742,55 @@ mod tests {
             let backend = StripedBackend::local(4, 64);
             crate::storage::Backend::delete(&backend, &path).unwrap();
             let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+        }
+    }
+
+    #[test]
+    fn cb_config_list_pins_aggregators_and_stays_correct() {
+        // Pin every file domain to rank 2 ("2:4"), then to a reversed
+        // rank list on striped storage; the data path must stay correct
+        // either way (placement changes who does the I/O, not what lands).
+        use crate::storage::striped::StripedBackend;
+        for (list, striped) in [("2:4", false), ("3,2,1,0", true)] {
+            let path = tmp(&format!("cbcfg-{}", if striped { "striped" } else { "flat" }));
+            threads::run(4, |c| {
+                let info = Info::from([(keys::CB_CONFIG_LIST, list), (keys::CB_NODES, "4")]);
+                let backend: std::sync::Arc<dyn crate::storage::Backend> = if striped {
+                    std::sync::Arc::new(StripedBackend::local(4, 64))
+                } else {
+                    std::sync::Arc::new(crate::storage::local::LocalBackend::instant())
+                };
+                let f = File::open_with_backend(
+                    c,
+                    &path,
+                    amode::RDWR | amode::CREATE,
+                    info,
+                    backend,
+                )
+                .unwrap();
+                let n = c.size();
+                let r = c.rank();
+                let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+                let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+                f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null())
+                    .unwrap();
+                let k = 256;
+                let mine: Vec<i32> = (0..k).map(|i| (i * n + r) as i32).collect();
+                f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+                c.barrier();
+                let mut back = vec![0i32; k];
+                let st = f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+                assert_eq!(st.bytes, k * 4);
+                assert_eq!(back, mine);
+                f.close().unwrap();
+            });
+            if striped {
+                let backend = StripedBackend::local(4, 64);
+                let _ = crate::storage::Backend::delete(&backend, &path);
+                let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+            } else {
+                File::delete(&path, &Info::null()).unwrap();
+            }
         }
     }
 
@@ -697,6 +911,42 @@ mod tests {
             assert_eq!(st.count(&Datatype::INT), Some(10));
             f.close().unwrap();
         });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn nonblocking_collective_roundtrip_threaded() {
+        // iwrite_all / iread_all through the strided interleave: the
+        // engine-scheduled I/O phase must produce the same file as the
+        // blocking two-phase path, and the individual pointer advances
+        // immediately.
+        let path = tmp("nbcoll");
+        threads::run(4, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let n = c.size();
+            let r = c.rank();
+            let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+            let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+            f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+            let k = 256;
+            let mine: Vec<i32> = (0..k).map(|i| (i * n + r) as i32).collect();
+            let req = f.iwrite_all(mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            assert_eq!(f.get_position().unwrap(), k as i64, "pointer advances at call");
+            let (st, ()) = req.wait().unwrap();
+            assert_eq!(st.bytes, k * 4);
+            c.barrier();
+            f.seek(0, crate::io::file::seek::SET).unwrap();
+            let req = f.iread_all(vec![0i32; k], 0, k, &Datatype::INT).unwrap();
+            let (st, back) = req.wait().unwrap();
+            assert_eq!(st.bytes, k * 4);
+            assert_eq!(back, mine);
+            f.close().unwrap();
+        });
+        let raw = std::fs::read(&path).unwrap();
+        let ints: Vec<i32> =
+            raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        let want: Vec<i32> = (0..ints.len() as i32).collect();
+        assert_eq!(ints, want);
         File::delete(&path, &Info::null()).unwrap();
     }
 }

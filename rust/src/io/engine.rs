@@ -1,10 +1,15 @@
 //! Nonblocking request engine.
 //!
-//! `MPI_FILE_IREAD`/`IWRITE` and the asynchronous half of the split
-//! collectives run on a small shared worker pool (the same design ROMIO
-//! uses for its nonblocking file I/O: the "async" operations are real
-//! threads doing blocking positioned I/O). The offline environment has no
-//! tokio; this pool is the substitution documented in DESIGN.md §2.
+//! `MPI_FILE_IREAD`/`IWRITE`, the asynchronous half of the split
+//! collectives, and the MPI-3.1 `iread_all`/`iwrite_all` I/O phases run
+//! on a small shared worker pool (the same design ROMIO uses for its
+//! nonblocking file I/O: the "async" operations are real threads doing
+//! blocking positioned I/O). The engine knows nothing about plans —
+//! compiled [`crate::io::plan::IoPlan`]s reach it through the
+//! [`crate::io::schedule::IoScheduler`]'s engine mode (typed reads add a
+//! memory-side unpack around the scheduled plan). The offline
+//! environment has no tokio; this pool is the substitution documented in
+//! DESIGN.md §2.
 //!
 //! Ownership model: Rust cannot express MPI's "don't touch the buffer
 //! until wait" rule for borrowed buffers, so nonblocking operations *take

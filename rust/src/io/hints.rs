@@ -24,6 +24,13 @@ pub mod keys {
     pub const CB_BUFFER_SIZE: &str = "cb_buffer_size";
     /// Number of aggregator ranks (ROMIO `cb_nodes`).
     pub const CB_NODES: &str = "cb_nodes";
+    /// Explicit aggregator placement (ROMIO `cb_config_list`): entries
+    /// `rank` or `rank:count`, comma-separated, `*` = all ranks; entry
+    /// `j` of the expansion aggregates file domain `j`, which on striped
+    /// storage with `cb_nodes = striping_factor` pins stripe server `j`'s
+    /// traffic to that rank. Malformed lists are ignored (MPI hint
+    /// semantics) and placement falls back to the stripe-cyclic default.
+    pub const CB_CONFIG_LIST: &str = "cb_config_list";
     /// Independent-read data-sieving buffer, bytes.
     pub const IND_RD_BUFFER_SIZE: &str = "ind_rd_buffer_size";
     /// Independent-write staging buffer, bytes.

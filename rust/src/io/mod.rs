@@ -16,10 +16,19 @@
 //! | §7.2.6 consistency & semantics | [`file`] (atomicity/sync) |
 //! | §7.2.7/8 error handling & classes | [`errors`] |
 //! | Info hints | [`hints`] |
+//! | unified access-plan compiler | [`plan`] |
+//! | plan execution (sync / engine / two-phase) | [`schedule`] |
 //! | nonblocking request engine | [`engine`] |
 //!
+//! Every data-access family — explicit-offset, individual-pointer,
+//! shared-pointer, collective, and split/nonblocking — compiles its
+//! request into an [`plan::IoPlan`] and executes it on the
+//! [`schedule::IoScheduler`]; no access path flattens view runs on its
+//! own.
+//!
 //! The paper's prototype implemented 19 of the 52 data-access routines;
-//! this implementation covers the full matrix (`jpio routines` prints it).
+//! this implementation covers the full matrix plus the four MPI-3.1
+//! nonblocking collectives (`jpio routines` prints all 56).
 
 pub mod access;
 pub mod collective;
@@ -28,6 +37,8 @@ pub mod engine;
 pub mod errors;
 pub mod file;
 pub mod hints;
+pub mod plan;
+pub mod schedule;
 pub mod shared;
 pub mod split;
 pub mod view;
@@ -37,6 +48,7 @@ pub use engine::Request;
 pub use errors::{ErrorClass, IoError};
 pub use file::{amode, seek, File};
 pub use hints::Info;
+pub use plan::IoPlan;
 pub use view::FileView;
 
 use crate::comm::datatype::Datatype;
@@ -48,9 +60,10 @@ pub fn get_type_extent(_file: &File<'_>, datatype: &Datatype) -> i64 {
     datatype.extent()
 }
 
-/// The full 52-routine data-access matrix of Table 3-1 / 7-1, with the
-/// implementation status of each routine (all implemented). Used by the
-/// `jpio routines` CLI command and the docs.
+/// The full 52-routine data-access matrix of Table 3-1 / 7-1 plus the
+/// four MPI-3.1 nonblocking collectives, with the implementation status
+/// of each routine (all implemented). Used by the `jpio routines` CLI
+/// command and the docs.
 pub fn routine_matrix() -> Vec<(&'static str, &'static str)> {
     // (MPI routine, jpio method)
     vec![
@@ -78,6 +91,10 @@ pub fn routine_matrix() -> Vec<(&'static str, &'static str)> {
         ("MPI_FILE_WRITE_ALL", "File::write_all"),
         ("MPI_FILE_IREAD", "File::iread"),
         ("MPI_FILE_IWRITE", "File::iwrite"),
+        ("MPI_FILE_IREAD_AT_ALL", "File::iread_at_all"),
+        ("MPI_FILE_IWRITE_AT_ALL", "File::iwrite_at_all"),
+        ("MPI_FILE_IREAD_ALL", "File::iread_all"),
+        ("MPI_FILE_IWRITE_ALL", "File::iwrite_all"),
         ("MPI_FILE_SEEK", "File::seek"),
         ("MPI_FILE_GET_POSITION", "File::get_position"),
         ("MPI_FILE_GET_BYTE_OFFSET", "File::get_byte_offset"),
@@ -114,11 +131,12 @@ mod tests {
     #[test]
     fn routine_matrix_covers_the_spec() {
         let m = super::routine_matrix();
-        assert_eq!(m.len(), 52);
+        // 52 MPI-2.2 routines + 4 MPI-3.1 nonblocking collectives.
+        assert_eq!(m.len(), 56);
         // No duplicates.
         let mut names: Vec<_> = m.iter().map(|(mpi, _)| *mpi).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 52);
+        assert_eq!(names.len(), 56);
     }
 }

@@ -1,0 +1,269 @@
+//! The `IoPlan` compiler — the single representation every data-access
+//! path lowers to before touching storage.
+//!
+//! The MPJ-IO surface spans five access families (§7.2.4): explicit
+//! offsets, individual pointers, shared pointers, collectives, and
+//! split/nonblocking operations. Before this module existed each family
+//! re-derived its own flatten → pack → dispatch pipeline; ROMIO's lesson
+//! (Thakur, Gropp & Lusk, "Optimizing Noncontiguous Accesses in MPI-IO")
+//! is that *one* shared flattened-request representation is what lets data
+//! sieving, two-phase aggregation and coalescing compose. An [`IoPlan`]
+//! is that representation:
+//!
+//! * the view-flattened **absolute byte runs** of the access, sorted and
+//!   adjacent-coalesced;
+//! * the **packed-payload map** (`positions[i]` = payload byte where run
+//!   `i`'s data starts);
+//! * the **data representation** and element primitive (for
+//!   encode/decode at the payload boundary);
+//! * the **atomicity** of the operation (whether execution must hold the
+//!   whole-file lock, §7.2.6.1).
+//!
+//! Plans are *compiled* here and *executed* by
+//! [`IoScheduler`](crate::io::schedule::IoScheduler) — synchronously, on
+//! the request engine, or phase-by-phase for two-phase collectives. The
+//! collective layer additionally slices plans into aggregator file
+//! domains ([`IoPlan::clip`]), and the staging strategies share one
+//! span-batching helper ([`batch_runs`]) instead of each re-implementing
+//! the grouping arithmetic.
+
+use crate::comm::datatype::Prim;
+use crate::io::datarep::DataRep;
+use crate::io::errors::Result;
+use crate::io::view::FileView;
+
+/// One compiled data access: where the bytes live in the file, how the
+/// packed payload maps onto those runs, and how execution must behave.
+#[derive(Clone, Debug)]
+pub struct IoPlan {
+    /// Absolute `(byte_offset, len)` runs, sorted and adjacent-coalesced.
+    pub runs: Vec<(u64, usize)>,
+    /// Payload byte position of each run (prefix sums of run lengths).
+    pub positions: Vec<usize>,
+    /// Total payload bytes the plan moves.
+    pub bytes: usize,
+    /// File data representation (datarep conversion at the payload edge).
+    pub datarep: DataRep,
+    /// Element primitive of the view (unit of datarep conversion).
+    pub prim: Prim,
+    /// Whether execution must hold the whole-file lock (atomic mode).
+    pub atomic: bool,
+}
+
+impl IoPlan {
+    /// Compile an access of `payload_bytes` at view-relative etype offset
+    /// `etype_off` through `view` into absolute byte runs.
+    pub fn compile(
+        view: &FileView,
+        atomic: bool,
+        etype_off: i64,
+        payload_bytes: usize,
+    ) -> Result<IoPlan> {
+        // Gap-free views (the common case) compile to a single run
+        // without walking the filetype map or the coalesce pass.
+        if let Some((off, len)) = view.contiguous_run(etype_off, payload_bytes) {
+            if len == 0 {
+                return Ok(IoPlan::assemble(Vec::new(), view.datarep.clone(), view.prim(), atomic));
+            }
+            return Ok(IoPlan {
+                runs: vec![(off, len)],
+                positions: vec![0],
+                bytes: len,
+                datarep: view.datarep.clone(),
+                prim: view.prim(),
+                atomic,
+            });
+        }
+        let runs = view.runs(etype_off, payload_bytes)?;
+        Ok(IoPlan::assemble(runs, view.datarep.clone(), view.prim(), atomic))
+    }
+
+    /// A plan over pre-flattened absolute runs (aggregator-side plans in
+    /// the I/O phase of two-phase collectives, where the payload is
+    /// already in file representation).
+    pub fn from_runs(runs: Vec<(u64, usize)>, atomic: bool) -> IoPlan {
+        IoPlan::assemble(runs, DataRep::Native, Prim::Byte, atomic)
+    }
+
+    /// Coalesce adjacent sorted runs and compute the payload map.
+    fn assemble(runs: Vec<(u64, usize)>, datarep: DataRep, prim: Prim, atomic: bool) -> IoPlan {
+        let mut coalesced: Vec<(u64, usize)> = Vec::with_capacity(runs.len());
+        for (off, len) in runs {
+            if len == 0 {
+                continue;
+            }
+            if let Some(last) = coalesced.last_mut() {
+                if last.0 + last.1 as u64 == off {
+                    last.1 += len;
+                    continue;
+                }
+            }
+            coalesced.push((off, len));
+        }
+        let mut positions = Vec::with_capacity(coalesced.len());
+        let mut acc = 0usize;
+        for &(_, len) in &coalesced {
+            positions.push(acc);
+            acc += len;
+        }
+        IoPlan { runs: coalesced, positions, bytes: acc, datarep, prim, atomic }
+    }
+
+    /// True when the plan moves no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// The file byte range `[min, max)` the plan touches, `None` when
+    /// empty. Runs are sorted, so this is first-start .. last-end.
+    pub fn bounds(&self) -> Option<(u64, u64)> {
+        match (self.runs.first(), self.runs.last()) {
+            (Some(&(lo, _)), Some(&(o, l))) => Some((lo, o + l as u64)),
+            _ => None,
+        }
+    }
+
+    /// The pieces of this plan inside the byte domain `[domain.0,
+    /// domain.1)`, as `(file_off, len, payload_pos)` — the unit the
+    /// exchange phase of two-phase collectives ships to each aggregator.
+    pub fn clip(&self, domain: (u64, u64)) -> Vec<(u64, usize, usize)> {
+        let mut out = Vec::new();
+        for (i, &(off, len)) in self.runs.iter().enumerate() {
+            let end = off + len as u64;
+            let s = off.max(domain.0);
+            let e = end.min(domain.1);
+            if s < e {
+                let head = (s - off) as usize;
+                out.push((s, (e - s) as usize, self.positions[i] + head));
+            }
+        }
+        out
+    }
+
+    /// The `(prim, count)` element runs describing `payload_bytes` of the
+    /// packed payload — input to datarep conversion. Views enforce
+    /// homogeneity at construction, so this is one run.
+    pub fn decode_elems(&self, payload_bytes: usize) -> Vec<(Prim, usize)> {
+        vec![(self.prim, payload_bytes / self.prim.size())]
+    }
+
+    /// True when the payload needs datarep conversion at the file edge.
+    pub fn needs_convert(&self) -> bool {
+        !self.datarep.is_identity()
+    }
+}
+
+/// A group of consecutive runs whose file span fits one staging buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunBatch {
+    /// Index of the first run in the batch.
+    pub first: usize,
+    /// Number of runs in the batch.
+    pub count: usize,
+    /// File offset of the batch span start.
+    pub start: u64,
+    /// Length of the batch span (last run end − span start).
+    pub span: usize,
+}
+
+/// Group consecutive sorted runs into batches whose file span is at most
+/// `stage_size` bytes — the shared grouping arithmetic of the view-buffer
+/// and data-sieving strategies. Unsorted inputs degrade to one batch per
+/// run (never incorrect, only unbatched).
+pub fn batch_runs(runs: &[(u64, usize)], stage_size: usize) -> Vec<RunBatch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < runs.len() {
+        let (start, len) = runs[i];
+        let mut end = start + len as u64;
+        let mut j = i + 1;
+        while j < runs.len() {
+            let (o, l) = runs[j];
+            let new_end = o + l as u64;
+            if o < end || new_end - start > stage_size as u64 {
+                break;
+            }
+            end = new_end;
+            j += 1;
+        }
+        out.push(RunBatch { first: i, count: j - i, start, span: (end - start) as usize });
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::datatype::Datatype;
+
+    #[test]
+    fn contiguous_view_compiles_to_one_run() {
+        let v = FileView::default();
+        let p = IoPlan::compile(&v, false, 25, 100).unwrap();
+        assert_eq!(p.runs, vec![(25, 100)]);
+        assert_eq!(p.positions, vec![0]);
+        assert_eq!(p.bytes, 100);
+        assert!(!p.atomic);
+        assert_eq!(p.bounds(), Some((25, 125)));
+    }
+
+    #[test]
+    fn strided_view_compiles_with_payload_map() {
+        let ft = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
+        let ft = Datatype::resized(&ft, 0, 16).unwrap();
+        let v = FileView::new(0, Datatype::INT, ft, DataRep::Native).unwrap();
+        let p = IoPlan::compile(&v, true, 0, 16).unwrap();
+        assert_eq!(p.runs, vec![(0, 8), (16, 8)]);
+        assert_eq!(p.positions, vec![0, 8]);
+        assert_eq!(p.bytes, 16);
+        assert!(p.atomic);
+    }
+
+    #[test]
+    fn negative_offset_is_rejected() {
+        let v = FileView::default();
+        assert!(IoPlan::compile(&v, false, -1, 4).is_err());
+    }
+
+    #[test]
+    fn empty_plan_has_no_bounds() {
+        let v = FileView::default();
+        let p = IoPlan::compile(&v, false, 0, 0).unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.bounds(), None);
+        assert_eq!(p.clip((0, 100)), vec![]);
+    }
+
+    #[test]
+    fn assemble_coalesces_adjacent_and_drops_empty() {
+        let p = IoPlan::from_runs(vec![(0, 4), (4, 4), (10, 0), (12, 4)], false);
+        assert_eq!(p.runs, vec![(0, 8), (12, 4)]);
+        assert_eq!(p.positions, vec![0, 8]);
+        assert_eq!(p.bytes, 12);
+    }
+
+    #[test]
+    fn clip_slices_runs_to_domains() {
+        let p = IoPlan::from_runs(vec![(0, 10), (20, 10)], false);
+        // Domain [5, 25): tail of run 0, head of run 1.
+        assert_eq!(p.clip((5, 25)), vec![(5, 5, 5), (20, 5, 10)]);
+        // Full cover.
+        assert_eq!(p.clip((0, 100)), vec![(0, 10, 0), (20, 10, 10)]);
+        // Disjoint.
+        assert_eq!(p.clip((40, 50)), vec![]);
+    }
+
+    #[test]
+    fn batch_runs_groups_within_stage() {
+        let runs = [(0u64, 10usize), (20, 10), (200, 10), (250, 10)];
+        let b = batch_runs(&runs, 100);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], RunBatch { first: 0, count: 2, start: 0, span: 30 });
+        assert_eq!(b[1], RunBatch { first: 2, count: 2, start: 200, span: 60 });
+        // A stage smaller than any span: one batch per run.
+        let b = batch_runs(&runs, 5);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|x| x.count == 1));
+    }
+}

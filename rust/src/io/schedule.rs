@@ -1,0 +1,218 @@
+//! The `IoScheduler` — the single executor every compiled [`IoPlan`]
+//! runs on.
+//!
+//! Compilation ([`crate::io::plan`]) decides *what* bytes move;
+//! scheduling decides *how and when*, in one of three modes (the
+//! ViPIOS decoupling of request preparation from an asynchronous
+//! execution engine):
+//!
+//! * **synchronous** ([`IoScheduler::write`] / [`IoScheduler::read`]) —
+//!   the blocking routines of every access family;
+//! * **engine** ([`IoScheduler::write_async`] /
+//!   [`IoScheduler::read_async`]) — nonblocking routines; the plan is
+//!   compiled on the caller and executed on the request-engine worker
+//!   pool ([`crate::io::engine`]);
+//! * **phase-by-phase** ([`IoScheduler::write_phase`],
+//!   [`IoScheduler::write_phase_async`], [`IoScheduler::read_phase`]) —
+//!   two-phase collectives: the exchange phase has already run on the
+//!   caller (it needs the communicator, which cannot leave the calling
+//!   thread), and the storage-only I/O phase runs here, synchronously for
+//!   the blocking `*_ALL` routines or on the engine for the split and
+//!   MPI-3.1 nonblocking collectives.
+//!
+//! Execution routes through the access strategy's plan entry points, or
+//! hands whole multi-run plans straight to storage backends that dispatch
+//! vectored plans themselves
+//! ([`crate::storage::StorageFile::prefers_plan_execution`] — the striped
+//! backend's per-server concurrent fan-out).
+
+use crate::comm::Status;
+use crate::io::access::TransferCtx;
+use crate::io::collective::WriteIoWork;
+use crate::io::engine::{self, Request};
+use crate::io::errors::Result;
+use crate::io::plan::IoPlan;
+use crate::strategy::{AccessStrategy, ViewBufStrategy};
+
+/// Executes compiled plans; see the module docs for the three modes.
+pub(crate) struct IoScheduler;
+
+impl IoScheduler {
+    /// Synchronous write of a packed (already datarep-encoded) payload.
+    pub(crate) fn write(ctx: &TransferCtx, plan: &IoPlan, payload: &[u8]) -> Result<Status> {
+        let _guard = if plan.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        let n = if ctx.storage.prefers_plan_execution() && plan.runs.len() > 1 {
+            ctx.storage.write_plan(&plan.runs, payload)?
+        } else {
+            ctx.strategy.write_plan(ctx.storage.as_ref(), plan, payload)?
+        };
+        Ok(Status::of_bytes(n))
+    }
+
+    /// Synchronous read into a packed payload buffer; returns bytes read
+    /// (short at EOF) after datarep decode.
+    pub(crate) fn read(ctx: &TransferCtx, plan: &IoPlan, payload: &mut [u8]) -> Result<usize> {
+        let got = {
+            let _guard = if plan.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+            if ctx.storage.prefers_plan_execution() && plan.runs.len() > 1 {
+                ctx.storage.read_plan(&plan.runs, payload)?
+            } else {
+                ctx.strategy.read_plan(ctx.storage.as_ref(), plan, payload)?
+            }
+        };
+        if plan.needs_convert() {
+            plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
+        }
+        Ok(got)
+    }
+
+    /// Engine-scheduled write: the caller keeps computing while the plan
+    /// executes on the worker pool.
+    pub(crate) fn write_async(ctx: TransferCtx, plan: IoPlan, payload: Vec<u8>) -> Request<()> {
+        engine::submit(move || (Self::write(&ctx, &plan, &payload), ()))
+    }
+
+    /// Engine-scheduled read returning the packed payload.
+    pub(crate) fn read_async(
+        ctx: TransferCtx,
+        plan: IoPlan,
+        payload_len: usize,
+    ) -> Request<Vec<u8>> {
+        engine::submit(move || {
+            let mut payload = vec![0u8; payload_len];
+            match Self::read(&ctx, &plan, &mut payload) {
+                Ok(got) => (Ok(Status::of_bytes(got)), payload),
+                Err(e) => (Err(e), payload),
+            }
+        })
+    }
+
+    /// The storage-only I/O phase of a two-phase collective write:
+    /// coalesce the exchanged pieces into large transfers and hit the
+    /// file once per coalesced extent. Touches no communicator state, so
+    /// it is safe on the engine.
+    pub(crate) fn write_phase(ctx: &TransferCtx, work: WriteIoWork) -> Result<()> {
+        let strat = ViewBufStrategy::with_stage(work.cb_buffer);
+        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        // Coalesce strictly-adjacent pieces into single large transfers —
+        // the whole point of aggregation. (Overlapping pieces are never
+        // merged: sorted order preserves the deterministic rank-order
+        // overwrite semantics.)
+        let cb_buffer = work.cb_buffer;
+        let mut pending: Option<(u64, Vec<u8>)> = None;
+        for (off, bytes) in work.writes {
+            if let Some((poff, pbuf)) = &mut pending {
+                if *poff + pbuf.len() as u64 == off && pbuf.len() + bytes.len() <= cb_buffer {
+                    pbuf.extend_from_slice(&bytes);
+                    continue;
+                }
+                strat.write(ctx.storage.as_ref(), &[(*poff, pbuf.len())], pbuf)?;
+            }
+            pending = Some((off, bytes));
+        }
+        if let Some((poff, pbuf)) = pending {
+            strat.write(ctx.storage.as_ref(), &[(poff, pbuf.len())], &pbuf)?;
+        }
+        Ok(())
+    }
+
+    /// [`IoScheduler::write_phase`] on the request engine — the split
+    /// collectives' and `iwrite_all`'s overlap path. `bytes` is the
+    /// payload size reported on completion.
+    pub(crate) fn write_phase_async(
+        ctx: TransferCtx,
+        work: WriteIoWork,
+        bytes: usize,
+    ) -> Request<()> {
+        engine::submit(move || match Self::write_phase(&ctx, work) {
+            Ok(()) => (Ok(Status::of_bytes(bytes)), ()),
+            Err(e) => (Err(e), ()),
+        })
+    }
+
+    /// The aggregator read of the I/O phase of a collective read: one
+    /// sieved pass over the merged request intervals with a
+    /// `cb_buffer_size` staging buffer.
+    pub(crate) fn read_phase(
+        ctx: &TransferCtx,
+        runs: &[(u64, usize)],
+        stage: usize,
+        buf: &mut [u8],
+    ) -> Result<usize> {
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        // `runs` are already merged sorted intervals (an aggregator-side
+        // plan in all but name) — no recompilation needed.
+        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        if ctx.storage.prefers_plan_execution() && runs.len() > 1 {
+            ctx.storage.read_plan(runs, buf)
+        } else {
+            ViewBufStrategy::with_stage(stage).read(ctx.storage.as_ref(), runs, buf)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::view::FileView;
+    use crate::storage::local::LocalBackend;
+    use crate::storage::{Backend, OpenOptions};
+    use crate::strategy;
+    use std::sync::Arc;
+
+    fn ctx(path: &str) -> TransferCtx {
+        let b = LocalBackend::instant();
+        TransferCtx {
+            storage: b.open(path, OpenOptions::rw_create()).unwrap(),
+            strategy: Arc::from(strategy::by_name("view_buffer").unwrap()),
+            view: Arc::new(FileView::default()),
+            atomic: false,
+        }
+    }
+
+    #[test]
+    fn sync_plan_roundtrip() {
+        let path = format!("/tmp/jpio-sched-sync-{}", std::process::id());
+        let c = ctx(&path);
+        let plan = IoPlan::from_runs(vec![(3, 4), (20, 4)], false);
+        let st = IoScheduler::write(&c, &plan, b"abcdwxyz").unwrap();
+        assert_eq!(st.bytes, 8);
+        let mut back = [0u8; 8];
+        assert_eq!(IoScheduler::read(&c, &plan, &mut back).unwrap(), 8);
+        assert_eq!(&back, b"abcdwxyz");
+        LocalBackend::instant().delete(&path).unwrap();
+    }
+
+    #[test]
+    fn async_plan_roundtrip() {
+        let path = format!("/tmp/jpio-sched-async-{}", std::process::id());
+        let c = ctx(&path);
+        let plan = IoPlan::from_runs(vec![(0, 6)], false);
+        let req = IoScheduler::write_async(ctx(&path), plan.clone(), b"hello!".to_vec());
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 6);
+        let (st, payload) = IoScheduler::read_async(c, plan, 6).wait().unwrap();
+        assert_eq!(st.bytes, 6);
+        assert_eq!(&payload, b"hello!");
+        LocalBackend::instant().delete(&path).unwrap();
+    }
+
+    #[test]
+    fn write_phase_coalesces_adjacent_pieces() {
+        let path = format!("/tmp/jpio-sched-phase-{}", std::process::id());
+        let c = ctx(&path);
+        let work = WriteIoWork {
+            writes: vec![(0, vec![1u8; 4]), (4, vec![2u8; 4]), (16, vec![3u8; 4])],
+            cb_buffer: 4096,
+        };
+        IoScheduler::write_phase(&c, work).unwrap();
+        let mut back = [0u8; 20];
+        c.storage.read_at(0, &mut back).unwrap();
+        assert_eq!(&back[..4], &[1u8; 4]);
+        assert_eq!(&back[4..8], &[2u8; 4]);
+        assert_eq!(&back[16..20], &[3u8; 4]);
+        LocalBackend::instant().delete(&path).unwrap();
+    }
+}

@@ -14,8 +14,7 @@ use std::os::unix::io::AsRawFd;
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::Status;
-use crate::io::access::{read_payload, write_payload};
-use crate::io::engine::{self, Request};
+use crate::io::engine::Request;
 use crate::io::errors::{err_arg, IoError, Result};
 use crate::io::file::{seek, File};
 
@@ -210,31 +209,6 @@ impl File<'_> {
         self.check_open()?;
         self.read_sfp()
     }
-}
-
-// Re-exported for the split module: a write at a precomputed etype offset
-// running fully on the engine.
-pub(crate) fn async_write_at(
-    ctx: crate::io::access::TransferCtx,
-    etype_off: i64,
-    payload: Vec<u8>,
-) -> Request<()> {
-    engine::submit(move || (write_payload(&ctx, etype_off, &payload), ()))
-}
-
-/// Async read at a precomputed offset, returning the packed payload.
-pub(crate) fn async_read_at(
-    ctx: crate::io::access::TransferCtx,
-    etype_off: i64,
-    payload_len: usize,
-) -> Request<Vec<u8>> {
-    engine::submit(move || {
-        let mut payload = vec![0u8; payload_len];
-        match read_payload(&ctx, etype_off, &mut payload) {
-            Ok(got) => (Ok(Status::of_bytes(got)), payload),
-            Err(e) => (Err(e), payload),
-        }
-    })
 }
 
 #[cfg(test)]

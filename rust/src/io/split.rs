@@ -6,20 +6,25 @@
 //! ownership through the request, like the nonblocking ops).
 //!
 //! For writes, the communication (exchange) phase runs in `BEGIN` and the
-//! storage phase runs on the request engine — so computation between
-//! `BEGIN` and `END` genuinely overlaps the file I/O, which is the whole
-//! point of the double-buffering pattern in §7.2.9.1. Reads complete
-//! their aggregation in `BEGIN` (the reply exchange needs the
-//! communicator, which cannot leave the calling thread) and hand the
-//! payload to `END`.
+//! storage phase is handed to the [`IoScheduler`]'s engine mode — so
+//! computation between `BEGIN` and `END` genuinely overlaps the file I/O,
+//! which is the whole point of the double-buffering pattern in §7.2.9.1.
+//! Reads complete their aggregation in `BEGIN` (the reply exchange needs
+//! the communicator, which cannot leave the calling thread) and hand the
+//! payload to `END`. The MPI-3.1 nonblocking collectives
+//! ([`File::iwrite_all`]/[`File::iread_all`]) follow exactly the same
+//! phase split, with a [`crate::io::engine::Request`] in place of the
+//! `END` call.
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::Status;
 use crate::io::access::{pack_payload, unpack_payload};
 use crate::io::collective::{collective_read, exchange_write};
-use crate::io::engine::{self, Request};
+use crate::io::engine::Request;
 use crate::io::errors::{err_io, err_request, Result};
 use crate::io::file::{File, SplitPending};
+use crate::io::plan::IoPlan;
+use crate::io::schedule::IoScheduler;
 
 macro_rules! check_no_pending {
     ($self:ident) => {{
@@ -73,11 +78,8 @@ impl File<'_> {
         let cb = self.cb_params();
         // Exchange phase: synchronous (uses the communicator).
         let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
-        // I/O phase: on the engine.
-        let req = engine::submit(move || match work.execute(&ctx) {
-            Ok(()) => (Ok(Status::of_bytes(bytes)), ()),
-            Err(e) => (Err(e), ()),
-        });
+        // I/O phase: scheduled on the engine.
+        let req = IoScheduler::write_phase_async(ctx, work, bytes);
         self.stash(SplitPending::Write { kind, req });
         Ok(())
     }
@@ -235,7 +237,9 @@ impl File<'_> {
         let my = view.bytes_to_etypes(count * datatype.size());
         let off = self.ordered_offsets(my)?;
         let ctx = self.transfer_ctx();
-        let req = crate::io::shared::async_read_at(ctx, off, count * datatype.size());
+        let len = count * datatype.size();
+        let plan = IoPlan::compile(&ctx.view, ctx.atomic, off, len)?;
+        let req = IoScheduler::read_async(ctx, plan, len);
         self.stash(SplitPending::Read { kind: "readOrderedEnd", req });
         Ok(())
     }
@@ -269,7 +273,8 @@ impl File<'_> {
         let off = self.ordered_offsets(my)?;
         let ctx = self.transfer_ctx();
         let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        let req = crate::io::shared::async_write_at(ctx, off, payload);
+        let plan = IoPlan::compile(&ctx.view, ctx.atomic, off, payload.len())?;
+        let req = IoScheduler::write_async(ctx, plan, payload);
         self.stash(SplitPending::Write { kind: "writeOrderedEnd", req });
         Ok(())
     }

@@ -8,10 +8,12 @@
 //!   collectives, thread-based (shared-memory) and process-based
 //!   (distributed-memory) communicators.
 //! * [`io`] — the paper's contribution: the full MPJ-IO v0.1 API surface
-//!   (all 52 MPI-2.2 chapter-13 data-access routines, file views,
-//!   consistency semantics, collective two-phase I/O, split collectives,
-//!   shared file pointers, nonblocking requests, Info hints, data
-//!   representations, error classes).
+//!   (all 52 MPI-2.2 chapter-13 data-access routines plus the MPI-3.1
+//!   nonblocking collectives, file views, consistency semantics,
+//!   collective two-phase I/O, split collectives, shared file pointers,
+//!   nonblocking requests, Info hints, data representations, error
+//!   classes), with every access family compiled into one [`io::IoPlan`]
+//!   representation and executed by the `io::schedule::IoScheduler`.
 //! * [`strategy`] — the four file-access strategies the paper evaluates
 //!   (per-item, bulk, view-buffer, memory-mapped).
 //! * [`storage`] — storage substrates: local disk, a simulated NFS

@@ -103,6 +103,31 @@ pub trait StorageFile: Send + Sync {
         Ok(pos)
     }
 
+    /// Plan-execution entry point: read the whole coalesced run set of a
+    /// compiled [`IoPlan`](crate::io::plan::IoPlan) in one call. `runs`
+    /// are disjoint and sorted with payload packed back-to-back in `buf`.
+    /// Single-device backends delegate to the vectored helpers; backends
+    /// that dispatch runs concurrently themselves (striped) see the
+    /// entire plan at once instead of strategy-sized fragments.
+    fn read_plan(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        self.read_runs(runs, buf)
+    }
+
+    /// Plan-execution entry point for writes; mirror of
+    /// [`StorageFile::read_plan`].
+    fn write_plan(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        self.write_runs(runs, buf)
+    }
+
+    /// True when this backend executes whole vectored plans itself (the
+    /// striped backend's concurrent per-server dispatch) and the
+    /// scheduler should hand it complete multi-run plans rather than
+    /// staging them through an access strategy. Access-style hints stay
+    /// advisory on such backends, per the MPI hint semantics.
+    fn prefers_plan_execution(&self) -> bool {
+        false
+    }
+
     /// Current size in bytes (`MPI_FILE_GET_SIZE`).
     fn size(&self) -> Result<u64>;
 

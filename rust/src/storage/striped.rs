@@ -16,9 +16,16 @@
 //!   *concurrently* on the [`engine`](crate::io::engine) stripe pool, so
 //!   aggregate bandwidth scales with servers instead of serializing at
 //!   one ingest lock.
-//! * **Metadata** — the logical size is the max over servers of the
-//!   logical offset implied by each stripe object's length;
-//!   `set_size`/`preallocate` distribute the per-server object sizes.
+//! * **Metadata** — the logical size lives in a flocked metadata sidecar
+//!   (`<name>.jpio-size`), the substitution for a parallel file system's
+//!   metadata server (PVFS's mgr, ViPIOS's directory service): `size()`
+//!   reads one 8-byte sidecar instead of issuing a GETATTR to every
+//!   child server, writes that extend the file publish the new EOF (an
+//!   unlocked 8-byte sidecar check skips the flock cycle when the file
+//!   already covers the write), and `set_size`/`truncate`/`preallocate`
+//!   invalidate by publishing the exact new size. A missing sidecar
+//!   (objects created by other means) is rebuilt from a one-time full
+//!   child poll at open.
 //! * **Locking** — `lock_exclusive` acquires every child's lock in server
 //!   order (the classic total-order protocol), so concurrent distributed
 //!   lockers cannot deadlock; the guard releases all of them.
@@ -30,10 +37,12 @@
 //! files to align two-phase file domains to stripe boundaries — see
 //! `io::collective`.
 
+use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
 use std::sync::Arc;
 
 use crate::io::engine;
-use crate::io::errors::{err_arg, ErrorClass, Result};
+use crate::io::errors::{err_arg, err_io, ErrorClass, IoError, Result};
 
 use super::layout::{Segment, StripeLayout};
 use super::local::{check_bounds, LocalBackend};
@@ -81,6 +90,108 @@ impl StripedBackend {
     pub fn object_path(path: &str, server: usize, factor: usize) -> String {
         format!("{path}.jpio-s{server}of{factor}")
     }
+
+    /// Path of the logical-size metadata sidecar for logical file `path`
+    /// (the metadata-server substitution; see the module docs).
+    pub fn size_meta_path(path: &str) -> String {
+        format!("{path}.jpio-size")
+    }
+}
+
+/// The logical-EOF metadata sidecar: an 8-byte LE size updated under an
+/// OS file lock, shared across handles, threads and forked processes.
+/// Every decision reads the *shared* sidecar, never a per-handle copy —
+/// a cached skip would be unsound the moment another handle shrinks the
+/// file (`set_size` runs on rank 0 only), and a stale-high cache would
+/// then suppress the publish that readers depend on.
+struct SizeMeta {
+    path: String,
+}
+
+impl SizeMeta {
+    fn new(path: &str) -> SizeMeta {
+        SizeMeta { path: StripedBackend::size_meta_path(path) }
+    }
+
+    fn with_locked_file<T>(&self, f: impl FnOnce(&std::fs::File) -> Result<T>) -> Result<T> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&self.path)
+            .map_err(|e| IoError::from_os(e, "striped size metadata"))?;
+        let fd = file.as_raw_fd();
+        if unsafe { libc::flock(fd, libc::LOCK_EX) } != 0 {
+            return Err(err_io("flock striped size metadata"));
+        }
+        let out = f(&file);
+        unsafe { libc::flock(fd, libc::LOCK_UN) };
+        out
+    }
+
+    fn read_value(file: &std::fs::File) -> Result<Option<u64>> {
+        let mut buf = [0u8; 8];
+        match file.read_exact_at(&mut buf, 0) {
+            Ok(()) => Ok(Some(u64::from_le_bytes(buf))),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+            Err(e) => Err(IoError::from_os(e, "striped size metadata read")),
+        }
+    }
+
+    fn write_value(file: &std::fs::File, value: u64) -> Result<()> {
+        file.write_all_at(&value.to_le_bytes(), 0)
+            .map_err(|e| IoError::from_os(e, "striped size metadata write"))
+    }
+
+    /// The current logical size, or `None` when the sidecar does not
+    /// exist yet (rebuild via [`SizeMeta::read_or_init`]).
+    fn read_fast(&self) -> Result<Option<u64>> {
+        let file = match std::fs::File::open(&self.path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(IoError::from_os(e, "striped size metadata")),
+        };
+        Self::read_value(&file)
+    }
+
+    /// Read the size, initializing the sidecar from `init` (a full child
+    /// poll) when missing — all under the lock, so concurrent openers
+    /// cannot clobber a published extension with a stale poll.
+    fn read_or_init(&self, init: impl FnOnce() -> Result<u64>) -> Result<u64> {
+        self.with_locked_file(|file| {
+            if let Some(v) = Self::read_value(file)? {
+                return Ok(v);
+            }
+            let v = init()?;
+            Self::write_value(file, v)?;
+            Ok(v)
+        })
+    }
+
+    /// A successful write reached logical offset `end`: grow the shared
+    /// size monotonically. The covered-already check reads the shared
+    /// sidecar unlocked (one 8-byte pread, no flock cycle); a write
+    /// racing a truncation is unsynchronized application behaviour, so
+    /// the lock-free check cannot lose a legitimate extension.
+    fn publish_extend(&self, end: u64) -> Result<()> {
+        if let Some(cur) = self.read_fast()? {
+            if cur >= end {
+                return Ok(());
+            }
+        }
+        self.with_locked_file(|file| {
+            let cur = Self::read_value(file)?.unwrap_or(0);
+            if end > cur {
+                Self::write_value(file, end)?;
+            }
+            Ok(())
+        })
+    }
+
+    /// Truncate/resize invalidation: publish the exact new size.
+    fn publish_exact(&self, size: u64) -> Result<()> {
+        self.with_locked_file(|file| Self::write_value(file, size))
+    }
 }
 
 impl Backend for StripedBackend {
@@ -93,12 +204,21 @@ impl Backend for StripedBackend {
         for (i, child) in self.children.iter().enumerate() {
             files.push(child.open(&Self::object_path(path, i, factor), opts)?);
         }
-        Ok(Arc::new(StripedFile {
-            inner: Arc::new(StripedInner { children: files, layout: self.layout }),
-        }))
+        let inner =
+            StripedInner { children: files, layout: self.layout, meta: SizeMeta::new(path) };
+        if opts.truncate {
+            // Children were truncated at open; the sidecar must follow.
+            inner.meta.publish_exact(0)?;
+        }
+        // Ensure the size sidecar exists (rebuilding from a one-time
+        // child poll for pre-existing objects) so the data path never
+        // GETATTRs every server again.
+        inner.logical_size()?;
+        Ok(Arc::new(StripedFile { inner: Arc::new(inner) }))
     }
 
     fn delete(&self, path: &str) -> Result<()> {
+        let _ = std::fs::remove_file(Self::size_meta_path(path));
         let factor = self.layout.factor;
         let mut first_err = None;
         for (i, child) in self.children.iter().enumerate() {
@@ -127,12 +247,23 @@ impl Backend for StripedBackend {
 struct StripedInner {
     children: Vec<Arc<dyn StorageFile>>,
     layout: StripeLayout,
+    meta: SizeMeta,
 }
 
 impl StripedInner {
-    /// Logical file size: the furthest logical byte implied by any stripe
-    /// object's length.
+    /// Logical file size, from the metadata sidecar — one 8-byte read
+    /// instead of a GETATTR fan-out over every child server. A missing
+    /// sidecar is rebuilt (under its lock) from a full child poll.
     fn logical_size(&self) -> Result<u64> {
+        if let Some(size) = self.meta.read_fast()? {
+            return Ok(size);
+        }
+        self.meta.read_or_init(|| self.poll_children_size())
+    }
+
+    /// The furthest logical byte implied by any stripe object's length —
+    /// the pre-sidecar fan-out, now only the sidecar (re)build path.
+    fn poll_children_size(&self) -> Result<u64> {
         let mut max = 0u64;
         for (s, child) in self.children.iter().enumerate() {
             max = max.max(self.layout.logical_end(s, child.size()?));
@@ -219,7 +350,8 @@ impl StripedInner {
         for (s, child) in self.children.iter().enumerate() {
             child.set_size(self.layout.child_len(s, size))?;
         }
-        Ok(())
+        // Truncate/extend publishes the exact new EOF.
+        self.meta.publish_exact(size)
     }
 }
 
@@ -251,6 +383,7 @@ impl StorageFile for StripedFile {
         let mut segs = Vec::new();
         self.inner.layout.split_run(offset, buf.len(), 0, &mut segs);
         self.inner.write_segments(&segs, buf)?;
+        self.inner.meta.publish_extend(offset + buf.len() as u64)?;
         Ok(buf.len())
     }
 
@@ -279,11 +412,16 @@ impl StorageFile for StripedFile {
     fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
         let mut segs = Vec::new();
         let mut pos = 0usize;
+        let mut end = 0u64;
         for &(off, len) in runs {
             self.inner.layout.split_run(off, len, pos, &mut segs);
             pos += len;
+            end = end.max(off + len as u64);
         }
         self.inner.write_segments(&segs, buf)?;
+        if pos > 0 {
+            self.inner.meta.publish_extend(end)?;
+        }
         Ok(pos)
     }
 
@@ -302,7 +440,8 @@ impl StorageFile for StripedFile {
                 child.preallocate(len)?;
             }
         }
-        Ok(())
+        // Preallocation makes the file at least `size` bytes.
+        self.inner.meta.publish_extend(size)
     }
 
     fn sync(&self) -> Result<()> {
@@ -366,6 +505,12 @@ impl StorageFile for StripedFile {
     fn stripe_layout(&self) -> Option<StripeLayout> {
         Some(self.inner.layout)
     }
+
+    fn prefers_plan_execution(&self) -> bool {
+        // Multi-run plans become one per-server concurrent fan-out here;
+        // staging them through a strategy would fragment the dispatch.
+        true
+    }
 }
 
 /// Buffered mapped-region emulation over the stripes: the region is read
@@ -425,6 +570,9 @@ impl MappedRegion for StripedMap {
             payload.extend_from_slice(&self.buf[s..e]);
         }
         self.inner.write_segments(&segs, &payload)?;
+        if let Some(&(_, e)) = merged.last() {
+            self.inner.meta.publish_extend(self.base + e as u64)?;
+        }
         // Only a successful write-back retires the dirty state: a failed
         // flush (e.g. transient child fault) must stay retryable instead
         // of silently reporting Ok on the next call.
@@ -569,6 +717,163 @@ mod tests {
                 });
             }
         });
+        b.delete(&path).unwrap();
+    }
+
+    /// A child backend that counts `StorageFile::size` calls — the
+    /// GETATTR fan-out the metadata sidecar is supposed to eliminate.
+    struct CountingBackend {
+        inner: LocalBackend,
+        size_calls: Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    struct CountingFile {
+        inner: Arc<dyn StorageFile>,
+        size_calls: Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl Backend for CountingBackend {
+        fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
+            Ok(Arc::new(CountingFile {
+                inner: self.inner.open(path, opts)?,
+                size_calls: self.size_calls.clone(),
+            }))
+        }
+
+        fn delete(&self, path: &str) -> Result<()> {
+            self.inner.delete(path)
+        }
+
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    impl StorageFile for CountingFile {
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+            self.inner.read_at(offset, buf)
+        }
+
+        fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
+            self.inner.write_at(offset, buf)
+        }
+
+        fn size(&self) -> Result<u64> {
+            self.size_calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            self.inner.size()
+        }
+
+        fn set_size(&self, size: u64) -> Result<()> {
+            self.inner.set_size(size)
+        }
+
+        fn preallocate(&self, size: u64) -> Result<()> {
+            self.inner.preallocate(size)
+        }
+
+        fn sync(&self) -> Result<()> {
+            self.inner.sync()
+        }
+
+        fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>> {
+            self.inner.map(offset, len, writable)
+        }
+
+        fn lock_exclusive(&self) -> Result<super::FileLockGuard> {
+            self.inner.lock_exclusive()
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    #[test]
+    fn size_queries_do_not_fan_out_to_children() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let size_calls = Arc::new(AtomicUsize::new(0));
+        let children: Vec<Arc<dyn Backend>> = (0..4)
+            .map(|_| {
+                Arc::new(CountingBackend {
+                    inner: LocalBackend::instant(),
+                    size_calls: size_calls.clone(),
+                }) as Arc<dyn Backend>
+            })
+            .collect();
+        let b = StripedBackend::new(children, 16).unwrap();
+        let path = tmp("eofcache");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        // Opening rebuilt the missing sidecar: exactly one poll of all
+        // four children.
+        assert_eq!(size_calls.load(Ordering::SeqCst), 4);
+        f.write_at(0, &[7u8; 100]).unwrap();
+        for _ in 0..5 {
+            assert_eq!(f.size().unwrap(), 100);
+        }
+        let mut back = vec![0u8; 100];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 100);
+        // Every size query and read clamp above came from the cached
+        // sidecar — zero additional GETATTRs on the children.
+        assert_eq!(size_calls.load(Ordering::SeqCst), 4);
+        // Truncation invalidates through the sidecar, still fan-out-free.
+        f.set_size(40).unwrap();
+        assert_eq!(f.size().unwrap(), 40);
+        f.preallocate(80).unwrap();
+        assert_eq!(f.size().unwrap(), 80);
+        assert_eq!(size_calls.load(Ordering::SeqCst), 4);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_size_sidecar_is_rebuilt_from_children() {
+        let b = StripedBackend::local(3, 8);
+        let path = tmp("szrebuild");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[3u8; 50]).unwrap();
+        drop(f);
+        std::fs::remove_file(StripedBackend::size_meta_path(&path)).unwrap();
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        assert_eq!(f.size().unwrap(), 50);
+        b.delete(&path).unwrap();
+        assert!(!std::path::Path::new(&StripedBackend::size_meta_path(&path)).exists());
+    }
+
+    #[test]
+    fn shrink_by_one_handle_then_extend_by_another_republishes() {
+        // Regression: a handle that once knew a larger size must not
+        // skip publishing after another handle shrank the file — the
+        // covered-check has to consult the shared sidecar, not a
+        // per-handle cache.
+        let b = StripedBackend::local(4, 8);
+        let path = tmp("szshrink");
+        let f1 = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let f2 = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f2.write_at(0, &[9u8; 100]).unwrap(); // f2 observes size 100
+        f1.set_size(40).unwrap(); // shrink through the other handle
+        assert_eq!(f2.size().unwrap(), 40);
+        f2.write_at(0, &[1u8; 50]).unwrap(); // 50 < 100: must still publish
+        assert_eq!(f1.size().unwrap(), 50);
+        let mut back = [0u8; 50];
+        assert_eq!(f1.read_at(0, &mut back).unwrap(), 50);
+        assert!(back.iter().all(|&v| v == 1), "bytes past the stale shrink point lost");
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn cross_handle_extension_is_visible_immediately() {
+        // The EOF lives in the shared sidecar, so one handle's cached
+        // value can never hide another handle's extension — the
+        // invalidation property the barrier-only access patterns rely on.
+        let b = StripedBackend::local(4, 8);
+        let path = tmp("szxhandle");
+        let f1 = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let f2 = b.open(&path, OpenOptions::rw_create()).unwrap();
+        assert_eq!(f1.size().unwrap(), 0);
+        f2.write_at(0, &[1u8; 64]).unwrap();
+        assert_eq!(f1.size().unwrap(), 64);
+        let mut back = [0u8; 64];
+        assert_eq!(f1.read_at(0, &mut back).unwrap(), 64);
+        assert!(back.iter().all(|&v| v == 1));
         b.delete(&path).unwrap();
     }
 

@@ -13,6 +13,7 @@
 
 use super::{check_total, AccessStrategy, ViewBufStrategy};
 use crate::io::errors::Result;
+use crate::io::plan::batch_runs;
 use crate::storage::StorageFile;
 
 /// Read-modify-write sieving strategy for noncontiguous writes.
@@ -60,36 +61,25 @@ impl AccessStrategy for SieveStrategy {
             return file.write_at(*off, &buf[..*len]);
         }
         let mut pos = 0;
-        let mut i = 0;
         let mut stage = Vec::new();
-        while i < runs.len() {
-            // Group runs whose span fits the stage.
-            let start = runs[i].0;
-            let mut end = runs[i].0 + runs[i].1 as u64;
-            let mut j = i + 1;
-            while j < runs.len() {
-                let (o, l) = runs[j];
-                let ne = o + l as u64;
-                if o < end || ne - start > self.stage_size as u64 {
-                    break;
-                }
-                end = ne;
-                j += 1;
-            }
-            let span = (end - start) as usize;
-            if j - i == 1 {
+        // Span grouping shared with the view-buffer strategy
+        // (io::plan::batch_runs) — one RMW round per in-stage span.
+        for b in batch_runs(runs, self.stage_size) {
+            let (i, j, start, span) = (b.first, b.first + b.count, b.start, b.span);
+            if b.count == 1 {
                 // Lone run: direct write.
                 let (o, l) = runs[i];
                 file.write_at(o, &buf[pos..pos + l])?;
                 pos += l;
             } else {
+                stage.clear();
                 stage.resize(span, 0);
                 // Read-modify-write under the file lock: the gap bytes we
                 // read back must not race concurrent writers.
                 let _guard = file.lock_exclusive()?;
                 let got = file.read_at(start, &mut stage[..span])?;
                 // Bytes past EOF read as zero — already the case since
-                // resize zero-fills and read_at is short at EOF.
+                // the stage is zero-filled and read_at is short at EOF.
                 let _ = got;
                 for &(o, l) in &runs[i..j] {
                     let s = (o - start) as usize;
@@ -98,7 +88,6 @@ impl AccessStrategy for SieveStrategy {
                 }
                 file.write_at(start, &stage[..span])?;
             }
-            i = j;
         }
         Ok(pos)
     }

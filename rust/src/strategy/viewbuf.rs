@@ -14,6 +14,7 @@
 
 use super::{check_total, AccessStrategy};
 use crate::io::errors::Result;
+use crate::io::plan::batch_runs;
 use crate::storage::StorageFile;
 
 /// Typed staging buffer strategy.
@@ -36,33 +37,6 @@ impl ViewBufStrategy {
         assert!(stage_size > 0);
         ViewBufStrategy { stage_size }
     }
-
-    /// Group consecutive runs into batches whose file span fits the
-    /// staging buffer, returning `(first_run_idx, run_count, span_start,
-    /// span_len)` tuples. Runs are assumed sorted by offset (the view
-    /// flattener guarantees it); unsorted inputs fall back to one batch
-    /// per run.
-    fn batches(&self, runs: &[(u64, usize)]) -> Vec<(usize, usize, u64, usize)> {
-        let mut out = Vec::new();
-        let mut i = 0;
-        while i < runs.len() {
-            let (start, len) = runs[i];
-            let mut end = start + len as u64;
-            let mut j = i + 1;
-            while j < runs.len() {
-                let (o, l) = runs[j];
-                let new_end = o + l as u64;
-                if o < end || new_end - start > self.stage_size as u64 {
-                    break;
-                }
-                end = new_end;
-                j += 1;
-            }
-            out.push((i, j - i, start, (end - start) as usize));
-            i = j;
-        }
-        out
-    }
 }
 
 impl AccessStrategy for ViewBufStrategy {
@@ -84,7 +58,8 @@ impl AccessStrategy for ViewBufStrategy {
         let mut stage = vec![0u8; self.stage_size.min(span(runs))];
         let mut pos = 0;
         let mut total = 0;
-        for (first, count, start, span_len) in self.batches(runs) {
+        for b in batch_runs(runs, self.stage_size) {
+            let (first, count, start, span_len) = (b.first, b.count, b.start, b.span);
             if span_len <= stage.len() {
                 // One bulk read covering the whole batch span, then
                 // scatter from the staging buffer.
@@ -125,7 +100,8 @@ impl AccessStrategy for ViewBufStrategy {
         }
         let mut stage = vec![0u8; self.stage_size.min(span(runs))];
         let mut pos = 0;
-        for (first, count, start, span_len) in self.batches(runs) {
+        for b in batch_runs(runs, self.stage_size) {
+            let (first, count, start, span_len) = (b.first, b.count, b.start, b.span);
             let contiguous =
                 count == 1 || runs[first..first + count].windows(2).all(|w| w[0].0 + w[0].1 as u64 == w[1].0);
             if span_len <= stage.len() && contiguous {
@@ -186,13 +162,14 @@ mod tests {
     }
 
     #[test]
-    fn batches_group_within_stage() {
-        let s = ViewBufStrategy::with_stage(100);
+    fn shared_batching_groups_within_stage() {
+        // The grouping arithmetic lives in io::plan::batch_runs (shared
+        // with the sieve strategy); this asserts the strategy's view.
         let runs = [(0u64, 10usize), (20, 10), (200, 10), (250, 10)];
-        let b = s.batches(&runs);
+        let b = batch_runs(&runs, 100);
         assert_eq!(b.len(), 2);
-        assert_eq!(b[0], (0, 2, 0, 30));
-        assert_eq!(b[1], (2, 2, 200, 60));
+        assert_eq!((b[0].first, b[0].count, b[0].start, b[0].span), (0, 2, 0, 30));
+        assert_eq!((b[1].first, b[1].count, b[1].start, b[1].span), (2, 2, 200, 60));
     }
 
     #[test]
