@@ -10,8 +10,11 @@
 //! 5. **PJRT pack kernel vs Rust scalar pack** — L1 ablation (skipped if
 //!    artifacts are absent).
 //! 6. **striped storage** — stripe-count × stripe-unit sweep (aggregate
-//!    bandwidth scaling past one server's ingest rate) and stripe-aligned
-//!    vs unaligned collective file domains (the Thakur alignment win).
+//!    bandwidth scaling past one server's ingest rate), stripe-aligned
+//!    vs unaligned collective file domains (the Thakur alignment win),
+//!    and redundancy modes (6c: none vs replica:2 vs parity write
+//!    overhead — the RAID-5 small-write penalty — plus degraded-read
+//!    bandwidth with one server killed).
 //! 7. **nonblocking collective overlap** — `iwrite_at_all` hiding its
 //!    I/O phase behind computation vs the blocking `write_at_all`.
 //! 8. **IoPlan pipeline parity** — the same strided access through the
@@ -323,6 +326,77 @@ fn striped_alignment_on_off() {
     );
 }
 
+fn striped_redundancy_modes() {
+    println!("\n--- ablation 6c: stripe redundancy — write overhead and degraded reads ---");
+    // 4 local children, 64 KiB units. Replica writes pay k× the bytes;
+    // parity writes pay the RAID-5 read-modify-write (row reads + the
+    // stripe-consistency lock). Degraded reads (one server killed via
+    // faults.rs) pay reconstruction: replica falls over to a copy,
+    // parity XORs the surviving three servers. This is also the CI
+    // smoke gate's degraded-read configuration (JPIO_SMOKE=1).
+    use jpio::io::ErrorClass;
+    use jpio::storage::faults::{FaultBackend, FaultPlan};
+    use jpio::storage::layout::Redundancy;
+    use jpio::storage::local::LocalBackend;
+    use jpio::storage::striped::StripedBackend;
+    use jpio::storage::{Backend, OpenOptions, StorageFile};
+    let total = common::sz(16 << 20);
+    let unit = 64u64 << 10;
+    for (label, redundancy) in [
+        ("none     ", Redundancy::None),
+        ("replica:2", Redundancy::Replica(2)),
+        ("parity   ", Redundancy::Parity),
+    ] {
+        let plan = FaultPlan::new(vec![]);
+        let children: Vec<std::sync::Arc<dyn Backend>> = (0..4)
+            .map(|i| {
+                if i == 1 {
+                    std::sync::Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                        as std::sync::Arc<dyn Backend>
+                } else {
+                    std::sync::Arc::new(LocalBackend::instant()) as std::sync::Arc<dyn Backend>
+                }
+            })
+            .collect();
+        let backend =
+            StripedBackend::with_redundancy(children, unit, redundancy).unwrap();
+        let path = format!("/tmp/jpio-abl6c-{}-{}.dat", std::process::id(), label.trim());
+        let payload = vec![0x5Au8; total];
+        let f = backend.open(&path, OpenOptions::rw_create()).unwrap();
+        let wr = bench(format!("write/{label}"), 1, common::reps(), total, || {
+            f.write_at(0, &payload).unwrap();
+        });
+        let mut buf = vec![0u8; total];
+        let healthy = bench(format!("read/{label}"), 1, common::reps(), total, || {
+            assert_eq!(f.read_at(0, &mut buf).unwrap(), total);
+        });
+        print!(
+            "  {label}: write {:8.1} MB/s   healthy read {:8.1} MB/s",
+            wr.mbs(),
+            healthy.mbs()
+        );
+        if redundancy == Redundancy::None {
+            println!("   degraded read: n/a (a lost server fails the file)");
+        } else {
+            // Kill server 1 and read through reconstruction.
+            plan.inject_kill(ErrorClass::Io);
+            let degraded = bench(format!("degraded/{label}"), 1, common::reps(), total, || {
+                assert_eq!(f.read_at(0, &mut buf).unwrap(), total);
+            });
+            assert_eq!(buf, payload, "degraded read corrupted data ({label})");
+            let advisories = f.take_advisories();
+            assert!(
+                advisories.iter().all(|a| a.class == ErrorClass::Degraded)
+                    && !advisories.is_empty(),
+                "degraded read must surface JPIO_ERR_DEGRADED advisories"
+            );
+            println!("   degraded read {:8.1} MB/s", degraded.mbs());
+        }
+        drop(f);
+        let _ = jpio::storage::Backend::delete(&backend, &path);
+    }
+}
+
 fn nonblocking_collective_overlap() {
     println!("\n--- ablation 7: iwrite_at_all overlap vs blocking write_at_all (NFS) ---");
     // Each rank writes its block collectively, then "computes" a fixed
@@ -432,6 +506,7 @@ fn main() {
     atomic_mode_cost();
     striped_storage_scaling();
     striped_alignment_on_off();
+    striped_redundancy_modes();
     nonblocking_collective_overlap();
     plan_pipeline_parity();
     pjrt_pack_vs_rust();

@@ -40,6 +40,10 @@
 //! Gropp & Lusk ("Optimizing Noncontiguous Accesses in MPI-IO") in its
 //! Lustre/PVFS group-cyclic form: aggregators stop contending for each
 //! other's servers, and aggregate bandwidth scales with the stripe count.
+//! Under parity redundancy (`jpio_stripe_redundancy = parity`) the
+//! rotation permutes the unit→server mapping, so the assignment follows
+//! the unit's *data server* instead of the raw unit cycle — domains
+//! stay server-disjoint on redundant files too.
 //! Disable with the `jpio_cb_stripe_align = false` hint (the ablation
 //! bench measures the difference). The ROMIO-style `cb_config_list` hint
 //! ([`parse_cb_config_list`]) additionally pins *which rank* serves each
@@ -57,7 +61,7 @@ use crate::io::file::File;
 use crate::io::hints::keys;
 use crate::io::plan::IoPlan;
 use crate::io::schedule::IoScheduler;
-use crate::storage::layout::StripeLayout;
+use crate::storage::layout::{Redundancy, StripeMap};
 
 /// Serialize pieces + payload bytes into one exchange message.
 fn encode_write_msg(pieces: &[(u64, usize, usize)], payload: &[u8]) -> Vec<u8> {
@@ -91,10 +95,25 @@ fn decode_runs(msg: &[u8]) -> (Vec<(u64, usize)>, usize) {
 pub(crate) enum FileDomains {
     /// Contiguous near-even byte ranges (the classic ROMIO default).
     Contiguous(Vec<(u64, u64)>),
-    /// Stripe-cyclic: stripe unit `i` belongs to aggregator `i % naggr`
-    /// (see the module docs). Domains are unions of stripe units, so the
+    /// Stripe-cyclic: stripe unit `i` belongs to aggregator
+    /// [`cyclic_aggregator`] of `i` (the plain `i % naggr` cycle, or the
+    /// unit's data server modulo `naggr` under parity redundancy — see
+    /// the module docs). Domains are unions of stripe units, so the
     /// global byte range needs no explicit bounds here.
-    StripeCyclic { unit: u64, naggr: usize },
+    StripeCyclic { map: StripeMap, naggr: usize },
+}
+
+/// Aggregator owning the stripe unit at logical offset `off`. Plain and
+/// replica layouts use the documented unit cycle (`unit i → aggregator
+/// i % naggr`, which with `naggr == factor` is exactly the unit's
+/// server). Parity rotation permutes the unit→server mapping, so there
+/// the unit's *data server* modulo `naggr` keeps each aggregator's
+/// domain on a disjoint server subset — the whole point of alignment.
+fn cyclic_aggregator(map: &StripeMap, naggr: usize, off: u64) -> usize {
+    match map.redundancy {
+        Redundancy::Parity => map.locate(off).0 % naggr,
+        _ => (map.layout.stripe_of(off) % naggr as u64) as usize,
+    }
 }
 
 impl FileDomains {
@@ -102,8 +121,8 @@ impl FileDomains {
     /// storage and alignment is enabled, contiguous otherwise.
     fn choose(ctx: &TransferCtx, lo: u64, hi: u64, naggr: usize, stripe_align: bool) -> FileDomains {
         if stripe_align {
-            if let Some(layout) = ctx.storage.stripe_layout() {
-                return FileDomains::StripeCyclic { unit: layout.unit, naggr };
+            if let Some(map) = ctx.storage.stripe_map() {
+                return FileDomains::StripeCyclic { map, naggr };
             }
         }
         FileDomains::Contiguous(split_domains(lo, hi, naggr))
@@ -114,14 +133,13 @@ impl FileDomains {
     fn pieces_for(&self, plan: &IoPlan, a: usize) -> Vec<(u64, usize, usize)> {
         match self {
             FileDomains::Contiguous(domains) => plan.clip(domains[a]),
-            FileDomains::StripeCyclic { unit, naggr } => {
-                // Reuse the layout walk with the aggregator count as the
-                // "factor": the piece's server index *is* its domain.
-                let cyclic = StripeLayout { unit: *unit, factor: *naggr };
+            FileDomains::StripeCyclic { map, naggr } => {
                 let mut out = Vec::new();
                 for (i, &(off, len)) in plan.runs.iter().enumerate() {
-                    cyclic.for_each_piece(off, len, |aggr, cur, piece_len| {
-                        if aggr == a {
+                    // The walk splits at unit boundaries; the assignment
+                    // comes from the redundancy-aware mapping.
+                    map.layout.for_each_piece(off, len, |_, cur, piece_len| {
+                        if cyclic_aggregator(map, *naggr, cur) == a {
                             out.push((cur, piece_len, plan.positions[i] + (cur - off) as usize));
                         }
                     });
@@ -647,7 +665,9 @@ mod tests {
 
     #[test]
     fn stripe_cyclic_domains_partition_at_unit_boundaries() {
-        let d = FileDomains::StripeCyclic { unit: 10, naggr: 2 };
+        use crate::storage::layout::StripeLayout;
+        let map = StripeMap::new(StripeLayout::new(10, 2).unwrap(), Redundancy::None).unwrap();
+        let d = FileDomains::StripeCyclic { map, naggr: 2 };
         // One run [5, 45): stripes 0..4 → aggregator 0 gets stripes 0 and
         // 2, aggregator 1 gets stripes 1 and 3.
         let mut plan = IoPlan::from_runs(vec![(5u64, 40usize)], false);
@@ -662,6 +682,26 @@ mod tests {
         for &(off, len, _) in a0.iter().chain(&a1) {
             assert_eq!(off / 10, (off + len as u64 - 1) / 10, "piece crosses a boundary");
         }
+    }
+
+    #[test]
+    fn stripe_cyclic_domains_follow_parity_data_servers() {
+        use crate::storage::layout::StripeLayout;
+        // Under parity the rotation permutes the unit→server mapping;
+        // with naggr == factor each aggregator's pieces must still land
+        // on exactly one server — its own.
+        let map = StripeMap::new(StripeLayout::new(10, 4).unwrap(), Redundancy::Parity).unwrap();
+        let d = FileDomains::StripeCyclic { map, naggr: 4 };
+        let plan = IoPlan::from_runs(vec![(5u64, 110usize)], false);
+        let mut total = 0usize;
+        for a in 0..4 {
+            for &(off, len, _) in &d.pieces_for(&plan, a) {
+                assert_eq!(map.locate(off).0, a, "piece at {off} not on aggregator {a}'s server");
+                total += len;
+            }
+        }
+        // Together the pieces cover the run exactly once.
+        assert_eq!(total, 110);
     }
 
     #[test]

@@ -46,6 +46,13 @@ pub enum ErrorClass {
     Request,
     /// `MPI_ERR_ARG` — invalid argument (count/offset/datatype).
     Arg,
+    /// `JPIO_ERR_DEGRADED` — jpio extension (no MPI equivalent): the
+    /// operation *succeeded* by reconstructing data around a failed
+    /// stripe server (replica/parity redundancy). Never returned as an
+    /// `Err`; surfaced through the advisory path
+    /// ([`StorageFile::take_advisories`](crate::storage::StorageFile::take_advisories)
+    /// / [`File::take_advisories`](crate::io::File::take_advisories)).
+    Degraded,
 }
 
 impl ErrorClass {
@@ -70,6 +77,7 @@ impl ErrorClass {
             ErrorClass::Io => "MPI_ERR_IO",
             ErrorClass::Request => "MPI_ERR_REQUEST",
             ErrorClass::Arg => "MPI_ERR_ARG",
+            ErrorClass::Degraded => "JPIO_ERR_DEGRADED",
         }
     }
 }
@@ -156,6 +164,7 @@ err_ctor!(err_conversion, Conversion);
 err_ctor!(err_io, Io);
 err_ctor!(err_request, Request);
 err_ctor!(err_arg, Arg);
+err_ctor!(err_degraded, Degraded);
 
 #[cfg(test)]
 mod tests {

@@ -18,6 +18,7 @@ use crate::io::errors::{
 };
 use crate::io::hints::{keys, Info};
 use crate::io::view::FileView;
+use crate::storage::layout::Redundancy;
 use crate::storage::local::LocalBackend;
 use crate::storage::nfs::NfsBackend;
 use crate::storage::san::SanBackend;
@@ -91,7 +92,8 @@ pub struct File<'c> {
 /// striping hints: `striping_factor` servers (default 4) of
 /// `striping_unit` bytes (default 64 KiB), each server running the
 /// `jpio_stripe_backend` child kind (default `local`) at the
-/// `jpio_backend_profile` cost profile.
+/// `jpio_backend_profile` cost profile, with `jpio_stripe_redundancy`
+/// replica/parity stripes (default `none`).
 pub fn backend_from_info(info: &Info) -> Result<Arc<dyn Backend>> {
     let profile = info.get(keys::BACKEND_PROFILE).unwrap_or("instant");
     let kind = info.get(keys::BACKEND).unwrap_or("local");
@@ -102,6 +104,12 @@ pub fn backend_from_info(info: &Info) -> Result<Arc<dyn Backend>> {
         if child_kind == "striped" {
             return Err(err_arg("jpio_stripe_backend cannot itself be striped"));
         }
+        // Malformed redundancy values are ignored (MPI hint semantics);
+        // a well-formed mode the factor cannot host errors below.
+        let redundancy = info
+            .get(keys::STRIPE_REDUNDANCY)
+            .and_then(Redundancy::parse)
+            .unwrap_or(Redundancy::None);
         let child_info = Info::null()
             .with(keys::BACKEND, child_kind)
             .with(keys::BACKEND_PROFILE, profile);
@@ -109,7 +117,7 @@ pub fn backend_from_info(info: &Info) -> Result<Arc<dyn Backend>> {
         for _ in 0..factor {
             children.push(backend_from_info(&child_info)?);
         }
-        return Ok(Arc::new(StripedBackend::new(children, unit)?));
+        return Ok(Arc::new(StripedBackend::with_redundancy(children, unit, redundancy)?));
     }
     match (kind, profile) {
         ("local", "instant") => Ok(Arc::new(LocalBackend::instant())),
@@ -375,6 +383,18 @@ impl<'c> File<'c> {
         self.storage.sync()
     }
 
+    /// Drain pending degraded-mode advisories (jpio extension): each is
+    /// an [`ErrorClass::Degraded`](crate::io::errors::ErrorClass) error
+    /// recording an operation that *succeeded* by reconstructing data
+    /// around a failed stripe server (`jpio_stripe_redundancy`
+    /// replica/parity stripes). Empty on healthy files and on backends
+    /// without redundancy. Local to this rank's handle — on collective
+    /// operations the rank that performed the degraded storage access
+    /// (the aggregator) observes the advisory.
+    pub fn take_advisories(&self) -> Vec<crate::io::errors::IoError> {
+        self.storage.take_advisories()
+    }
+
     // ------------------------------------------------------------------
     // Internal helpers shared by the data-access modules
     // ------------------------------------------------------------------
@@ -500,6 +520,44 @@ mod tests {
         let bad = Info::from([
             (keys::BACKEND, "striped"),
             (keys::STRIPE_CHILD_BACKEND, "striped"),
+        ]);
+        assert_eq!(backend_from_info(&bad).map(|_| ()).unwrap_err().class, ErrorClass::Arg);
+    }
+
+    #[test]
+    fn stripe_redundancy_resolves_from_hints() {
+        // replica:2 over 2 servers: a write through the hint-resolved
+        // backend must materialize the replica objects.
+        let info = Info::from([
+            (keys::BACKEND, "striped"),
+            (keys::STRIPING_FACTOR, "2"),
+            (keys::STRIPING_UNIT, "8"),
+            (keys::STRIPE_REDUNDANCY, "replica:2"),
+        ]);
+        let b = backend_from_info(&info).unwrap();
+        let path = tmp("redhint");
+        let f = b.open(&path, crate::storage::OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[1u8; 32]).unwrap();
+        drop(f);
+        for s in 0..2 {
+            assert!(
+                std::path::Path::new(&StripedBackend::replica_object_path(&path, s, 2, 1))
+                    .exists(),
+                "replica object for server {s} missing: hint not applied"
+            );
+        }
+        b.delete(&path).unwrap();
+        // Malformed values are ignored per MPI hint semantics.
+        let ignored = Info::from([
+            (keys::BACKEND, "striped"),
+            (keys::STRIPE_REDUNDANCY, "raid6"),
+        ]);
+        assert!(backend_from_info(&ignored).is_ok());
+        // Well-formed but unhostable: more copies than servers.
+        let bad = Info::from([
+            (keys::BACKEND, "striped"),
+            (keys::STRIPING_FACTOR, "4"),
+            (keys::STRIPE_REDUNDANCY, "replica:9"),
         ]);
         assert_eq!(backend_from_info(&bad).map(|_| ()).unwrap_err().class, ErrorClass::Arg);
     }

@@ -51,6 +51,14 @@ pub mod keys {
     /// striped`: `local` (default) | `nfs` | `san`. The
     /// `jpio_backend_profile` hint applies to every child.
     pub const STRIPE_CHILD_BACKEND: &str = "jpio_stripe_backend";
+    /// Redundancy mode for the `striped` backend: `none` (default) |
+    /// `replica:<k>` (k total copies of every stripe unit, tolerating
+    /// k-1 lost servers) | `parity` (RAID-5-style rotating parity,
+    /// tolerating one lost server). Survivable failures surface as
+    /// `Degraded` advisories instead of errors. Malformed values are
+    /// ignored; well-formed values the striping factor cannot host
+    /// (e.g. `replica:9` over 4 servers) are an error.
+    pub const STRIPE_REDUNDANCY: &str = "jpio_stripe_redundancy";
     /// Align collective (two-phase) file domains to stripe boundaries on
     /// striped storage, giving each aggregator a disjoint server subset:
     /// `true` (default) | `false`. Ignored on unstriped backends.

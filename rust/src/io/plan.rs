@@ -169,16 +169,36 @@ pub struct RunBatch {
 /// Group consecutive sorted runs into batches whose file span is at most
 /// `stage_size` bytes — the shared grouping arithmetic of the view-buffer
 /// and data-sieving strategies. Unsorted inputs degrade to one batch per
-/// run (never incorrect, only unbatched).
+/// run (never incorrect, only unbatched). Zero-length runs move no bytes
+/// and never seed a batch: a zero-length run at a batch boundary would
+/// otherwise emit an empty `RunBatch` that the sieve stage treats as a
+/// full read-modify-write round (and compiled `IoPlan`s drop them, but
+/// this helper also sees raw caller runs). In-order zero-length runs
+/// inside a batch are absorbed so batch index ranges stay contiguous.
 pub fn batch_runs(runs: &[(u64, usize)], stage_size: usize) -> Vec<RunBatch> {
     let mut out = Vec::new();
     let mut i = 0;
     while i < runs.len() {
         let (start, len) = runs[i];
+        if len == 0 {
+            i += 1;
+            continue;
+        }
         let mut end = start + len as u64;
         let mut j = i + 1;
         while j < runs.len() {
             let (o, l) = runs[j];
+            if l == 0 {
+                // A zero-length run within the batch's span keeps the
+                // [first, first+count) range contiguous without moving
+                // bytes; out-of-order ones end the batch (and are then
+                // skipped by the outer loop).
+                if o >= start && o <= end {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
             let new_end = o + l as u64;
             if o < end || new_end - start > stage_size as u64 {
                 break;
@@ -265,5 +285,47 @@ mod tests {
         let b = batch_runs(&runs, 5);
         assert_eq!(b.len(), 4);
         assert!(b.iter().all(|x| x.count == 1));
+    }
+
+    #[test]
+    fn batch_runs_never_emits_empty_batches() {
+        // Regression (PR 3): a zero-length run at a batch boundary used
+        // to seed a RunBatch with span 0, which the sieve stage treats
+        // as a full read-modify-write round.
+        // Leading, trailing, and lone zero-length runs:
+        assert_eq!(batch_runs(&[(0, 0)], 100), vec![]);
+        assert_eq!(batch_runs(&[(0, 0), (5, 0)], 100), vec![]);
+        let b = batch_runs(&[(0, 0), (10, 4), (20, 4), (30, 0)], 100);
+        assert_eq!(b.len(), 1);
+        // The trailing zero-length run sits past the batch span and is
+        // dropped rather than emitted as an empty batch.
+        assert_eq!(b[0], RunBatch { first: 1, count: 2, start: 10, span: 14 });
+        assert!(b.iter().all(|x| x.span > 0));
+        // A zero-length run exactly at a stage boundary between two
+        // batches must not become its own empty batch.
+        let b = batch_runs(&[(0, 10), (10, 0), (200, 10)], 16);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], RunBatch { first: 0, count: 2, start: 0, span: 10 });
+        assert_eq!(b[1], RunBatch { first: 2, count: 1, start: 200, span: 10 });
+        // In-span zero-length runs are absorbed so index ranges stay
+        // contiguous.
+        let b = batch_runs(&[(0, 4), (4, 0), (8, 4)], 100);
+        assert_eq!(b, vec![RunBatch { first: 0, count: 3, start: 0, span: 12 }]);
+    }
+
+    #[test]
+    fn batch_runs_unsorted_inputs_stay_safe() {
+        // Unsorted runs degrade to smaller batches without panicking on
+        // the span arithmetic (an out-of-order run behind the batch
+        // start must not underflow `new_end - start`).
+        let b = batch_runs(&[(100, 10), (0, 10), (50, 10)], 1000);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], RunBatch { first: 0, count: 1, start: 100, span: 10 });
+        assert_eq!(b[1], RunBatch { first: 1, count: 2, start: 0, span: 60 });
+        // Out-of-order zero-length runs end the batch and vanish.
+        let b = batch_runs(&[(100, 10), (0, 0), (120, 10)], 1000);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0], RunBatch { first: 0, count: 1, start: 100, span: 10 });
+        assert_eq!(b[1], RunBatch { first: 2, count: 1, start: 120, span: 10 });
     }
 }

@@ -200,6 +200,52 @@ mod tests {
     }
 
     #[test]
+    fn degraded_plan_execution_on_striped_parity() {
+        // A multi-run plan on striped parity storage with one dead
+        // child: the whole-plan dispatch (prefers_plan_execution) must
+        // still round-trip, reporting Degraded advisories instead of
+        // errors — the scheduler sees a plain Ok.
+        use crate::io::errors::ErrorClass;
+        use crate::storage::faults::{FaultBackend, FaultPlan};
+        use crate::storage::layout::Redundancy;
+        use crate::storage::striped::StripedBackend;
+        let plan_faults = FaultPlan::new(vec![]);
+        let children: Vec<Arc<dyn Backend>> = (0..4)
+            .map(|i| {
+                if i == 2 {
+                    Arc::new(FaultBackend::new(LocalBackend::instant(), plan_faults.clone()))
+                        as Arc<dyn Backend>
+                } else {
+                    Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+                }
+            })
+            .collect();
+        let b = StripedBackend::with_redundancy(children, 8, Redundancy::Parity).unwrap();
+        let path = format!("/tmp/jpio-sched-degraded-{}", std::process::id());
+        let c = TransferCtx {
+            storage: b.open(&path, OpenOptions::rw_create()).unwrap(),
+            strategy: Arc::from(strategy::by_name("view_buffer").unwrap()),
+            view: Arc::new(FileView::default()),
+            atomic: false,
+        };
+        let plan = IoPlan::from_runs(vec![(3, 20), (40, 9), (70, 12)], false);
+        let payload: Vec<u8> = (0..41u8).collect();
+        let st = IoScheduler::write(&c, &plan, &payload).unwrap();
+        assert_eq!(st.bytes, 41);
+        assert!(c.storage.take_advisories().is_empty(), "healthy write must not degrade");
+        // Kill child 2 and read the plan back: reconstruction under the
+        // scheduler, correct bytes, Degraded advisory.
+        plan_faults.inject_kill(ErrorClass::Io);
+        let mut back = vec![0u8; 41];
+        assert_eq!(IoScheduler::read(&c, &plan, &mut back).unwrap(), 41);
+        assert_eq!(back, payload);
+        let advisories = c.storage.take_advisories();
+        assert!(!advisories.is_empty(), "degraded read must be advised");
+        assert!(advisories.iter().all(|a| a.class == ErrorClass::Degraded));
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
     fn write_phase_coalesces_adjacent_pieces() {
         let path = format!("/tmp/jpio-sched-phase-{}", std::process::id());
         let c = ctx(&path);

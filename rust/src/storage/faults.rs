@@ -3,10 +3,21 @@
 //! Wraps any [`Backend`] and injects MPJ-IO error classes on chosen
 //! operations — used by the error-handling tests (§7.2.7/7.2.8) to prove
 //! that failures surface with the right class instead of corrupting state,
-//! and by the collective-I/O tests to exercise partial-failure paths.
+//! by the collective-I/O tests to exercise partial-failure paths, and by
+//! the redundancy tests to kill a stripe server outright.
+//!
+//! Every data-path method of [`StorageFile`] is intercepted under its own
+//! [`FaultOp`], including the PR 2 plan entry points (`read_plan` /
+//! `write_plan`) and the vectored helpers (`read_runs` / `write_runs`)
+//! the striped backend's per-server fan-out actually calls — a rule on
+//! `FaultOp::Write` alone would never see a striped child's vectored
+//! dispatch. Rules fire once (`nth`) or persistently (`sticky`, from
+//! `nth` onward); [`FaultPlan::kill`] arms sticky rules on every op,
+//! modelling a failed-stop server, and rules can be injected after open
+//! ([`FaultPlan::inject`]) to kill a server mid-workload.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::io::errors::{ErrorClass, IoError, Result};
 
@@ -21,11 +32,45 @@ pub enum FaultOp {
     Write,
     /// Fail `sync`.
     Sync,
+    /// Fail the vectored `read_runs` (the striped read fan-out unit).
+    ReadRuns,
+    /// Fail the vectored `write_runs` (the striped write fan-out unit).
+    WriteRuns,
+    /// Fail the whole-plan `read_plan` dispatch.
+    ReadPlan,
+    /// Fail the whole-plan `write_plan` dispatch.
+    WritePlan,
 }
 
-/// A single fault rule: fail the `nth` invocation (0-based) of `op` with
-/// `class`. Each rule fires once.
-#[derive(Debug)]
+/// Every interceptable operation, in counter order.
+const ALL_OPS: [FaultOp; 7] = [
+    FaultOp::Read,
+    FaultOp::Write,
+    FaultOp::Sync,
+    FaultOp::ReadRuns,
+    FaultOp::WriteRuns,
+    FaultOp::ReadPlan,
+    FaultOp::WritePlan,
+];
+
+impl FaultOp {
+    fn index(self) -> usize {
+        match self {
+            FaultOp::Read => 0,
+            FaultOp::Write => 1,
+            FaultOp::Sync => 2,
+            FaultOp::ReadRuns => 3,
+            FaultOp::WriteRuns => 4,
+            FaultOp::ReadPlan => 5,
+            FaultOp::WritePlan => 6,
+        }
+    }
+}
+
+/// A single fault rule: fail invocation(s) of `op` with `class` — the
+/// `nth` invocation (0-based) when `sticky` is false, every invocation
+/// from the `nth` onward when true.
+#[derive(Clone, Copy, Debug)]
 pub struct FaultRule {
     /// Operation to intercept.
     pub op: FaultOp,
@@ -33,49 +78,79 @@ pub struct FaultRule {
     pub nth: u64,
     /// Error class to inject.
     pub class: ErrorClass,
+    /// Fail every invocation from `nth` onward instead of just `nth`.
+    pub sticky: bool,
+}
+
+impl FaultRule {
+    /// A one-shot rule: fail the `nth` invocation of `op`.
+    pub fn once(op: FaultOp, nth: u64, class: ErrorClass) -> FaultRule {
+        FaultRule { op, nth, class, sticky: false }
+    }
+
+    /// A persistent rule: fail every invocation of `op` from the `nth`
+    /// onward (a server that dies partway through a workload).
+    pub fn from_nth(op: FaultOp, nth: u64, class: ErrorClass) -> FaultRule {
+        FaultRule { op, nth, class, sticky: true }
+    }
+
+    /// Fail every invocation of `op`.
+    pub fn always(op: FaultOp, class: ErrorClass) -> FaultRule {
+        FaultRule::from_nth(op, 0, class)
+    }
 }
 
 /// Shared fault schedule + counters.
 pub struct FaultPlan {
-    rules: Vec<FaultRule>,
-    reads: AtomicU64,
-    writes: AtomicU64,
-    syncs: AtomicU64,
+    rules: Mutex<Vec<FaultRule>>,
+    counters: [AtomicU64; 7],
 }
 
 impl FaultPlan {
     /// Build a plan from rules.
     pub fn new(rules: Vec<FaultRule>) -> Arc<FaultPlan> {
-        Arc::new(FaultPlan {
-            rules,
-            reads: AtomicU64::new(0),
-            writes: AtomicU64::new(0),
-            syncs: AtomicU64::new(0),
-        })
+        Arc::new(FaultPlan { rules: Mutex::new(rules), counters: Default::default() })
+    }
+
+    /// A failed-stop server: every *data-path* operation
+    /// (read/write/sync and their vectored/plan variants) fails with
+    /// `class`, forever. Metadata ops (`size`/`set_size`/`preallocate`)
+    /// and `open` still answer — the model is a failed data service,
+    /// not a vanished host; the striped GETATTR fallback additionally
+    /// tolerates children whose metadata is gone too.
+    pub fn kill(class: ErrorClass) -> Arc<FaultPlan> {
+        FaultPlan::new(ALL_OPS.iter().map(|&op| FaultRule::always(op, class)).collect())
+    }
+
+    /// Arm additional rules on a live plan (kill a server mid-workload).
+    pub fn inject(&self, rules: impl IntoIterator<Item = FaultRule>) {
+        self.rules.lock().unwrap().extend(rules);
+    }
+
+    /// Arm failed-stop rules on every op of a live plan.
+    pub fn inject_kill(&self, class: ErrorClass) {
+        self.inject(ALL_OPS.iter().map(|&op| FaultRule::always(op, class)));
     }
 
     fn check(&self, op: FaultOp) -> Result<()> {
-        let counter = match op {
-            FaultOp::Read => &self.reads,
-            FaultOp::Write => &self.writes,
-            FaultOp::Sync => &self.syncs,
-        };
-        let n = counter.fetch_add(1, Ordering::SeqCst);
-        for r in &self.rules {
-            if r.op == op && r.nth == n {
+        let n = self.counters[op.index()].fetch_add(1, Ordering::SeqCst);
+        for r in self.rules.lock().unwrap().iter() {
+            if r.op == op && (n == r.nth || (r.sticky && n >= r.nth)) {
                 return Err(IoError::new(r.class, format!("injected fault on {op:?} #{n}")));
             }
         }
         Ok(())
     }
 
-    /// Number of intercepted operations so far, by kind.
+    /// Number of intercepted invocations so far, by kind.
+    pub fn count(&self, op: FaultOp) -> u64 {
+        self.counters[op.index()].load(Ordering::SeqCst)
+    }
+
+    /// `(read_at, write_at, sync)` invocation counts — the original
+    /// counter triple; use [`FaultPlan::count`] for the runs/plan ops.
     pub fn counts(&self) -> (u64, u64, u64) {
-        (
-            self.reads.load(Ordering::SeqCst),
-            self.writes.load(Ordering::SeqCst),
-            self.syncs.load(Ordering::SeqCst),
-        )
+        (self.count(FaultOp::Read), self.count(FaultOp::Write), self.count(FaultOp::Sync))
     }
 }
 
@@ -123,6 +198,32 @@ impl StorageFile for FaultFile {
         self.inner.write_at(offset, buf)
     }
 
+    fn read_runs(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        self.plan.check(FaultOp::ReadRuns)?;
+        self.inner.read_runs(runs, buf)
+    }
+
+    fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        self.plan.check(FaultOp::WriteRuns)?;
+        self.inner.write_runs(runs, buf)
+    }
+
+    fn read_plan(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        self.plan.check(FaultOp::ReadPlan)?;
+        self.inner.read_plan(runs, buf)
+    }
+
+    fn write_plan(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        self.plan.check(FaultOp::WritePlan)?;
+        self.inner.write_plan(runs, buf)
+    }
+
+    fn prefers_plan_execution(&self) -> bool {
+        // Forwarded so a fault wrapper around the striped backend still
+        // exercises the whole-plan dispatch it is meant to test.
+        self.inner.prefers_plan_execution()
+    }
+
     fn size(&self) -> Result<u64> {
         self.inner.size()
     }
@@ -155,6 +256,14 @@ impl StorageFile for FaultFile {
     fn stripe_layout(&self) -> Option<super::layout::StripeLayout> {
         self.inner.stripe_layout()
     }
+
+    fn stripe_map(&self) -> Option<super::layout::StripeMap> {
+        self.inner.stripe_map()
+    }
+
+    fn take_advisories(&self) -> Vec<IoError> {
+        self.inner.take_advisories()
+    }
 }
 
 #[cfg(test)]
@@ -164,11 +273,7 @@ mod tests {
 
     #[test]
     fn injects_on_the_scheduled_invocation() {
-        let plan = FaultPlan::new(vec![FaultRule {
-            op: FaultOp::Write,
-            nth: 1,
-            class: ErrorClass::NoSpace,
-        }]);
+        let plan = FaultPlan::new(vec![FaultRule::once(FaultOp::Write, 1, ErrorClass::NoSpace)]);
         let b = FaultBackend::new(LocalBackend::instant(), plan.clone());
         let path = format!("/tmp/jpio-fault-{}", std::process::id());
         let f = b.open(&path, OpenOptions::rw_create()).unwrap();
@@ -182,16 +287,62 @@ mod tests {
 
     #[test]
     fn sync_faults() {
-        let plan = FaultPlan::new(vec![FaultRule {
-            op: FaultOp::Sync,
-            nth: 0,
-            class: ErrorClass::Io,
-        }]);
+        let plan = FaultPlan::new(vec![FaultRule::once(FaultOp::Sync, 0, ErrorClass::Io)]);
         let b = FaultBackend::new(LocalBackend::instant(), plan);
         let path = format!("/tmp/jpio-fault-sync-{}", std::process::id());
         let f = b.open(&path, OpenOptions::rw_create()).unwrap();
         assert_eq!(f.sync().unwrap_err().class, ErrorClass::Io);
         f.sync().unwrap();
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn runs_and_plan_paths_are_interceptable() {
+        // Regression (PR 3): the plan pipeline reaches storage through
+        // read_runs/write_runs/read_plan/write_plan; rules on those ops
+        // must fire there instead of being bypassed.
+        let plan = FaultPlan::new(vec![
+            FaultRule::once(FaultOp::WriteRuns, 0, ErrorClass::NoSpace),
+            FaultRule::once(FaultOp::ReadRuns, 0, ErrorClass::Io),
+            FaultRule::once(FaultOp::WritePlan, 0, ErrorClass::Quota),
+            FaultRule::once(FaultOp::ReadPlan, 0, ErrorClass::Access),
+        ]);
+        let b = FaultBackend::new(LocalBackend::instant(), plan.clone());
+        let path = format!("/tmp/jpio-fault-runs-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let runs = [(0u64, 4usize), (8, 4)];
+        assert_eq!(f.write_runs(&runs, b"abcdefgh").unwrap_err().class, ErrorClass::NoSpace);
+        assert_eq!(f.write_runs(&runs, b"abcdefgh").unwrap(), 8);
+        let mut buf = [0u8; 8];
+        assert_eq!(f.read_runs(&runs, &mut buf).unwrap_err().class, ErrorClass::Io);
+        assert_eq!(f.read_runs(&runs, &mut buf).unwrap(), 8);
+        assert_eq!(f.write_plan(&runs, b"abcdefgh").unwrap_err().class, ErrorClass::Quota);
+        assert_eq!(f.read_plan(&runs, &mut buf).unwrap_err().class, ErrorClass::Access);
+        assert_eq!(&buf, b"abcdefgh");
+        assert_eq!(plan.count(FaultOp::WriteRuns), 2);
+        // write_plan/read_plan delegate to the runs helpers underneath
+        // the interception point, so their counters saw exactly one call.
+        assert_eq!(plan.count(FaultOp::WritePlan), 1);
+        assert_eq!(plan.count(FaultOp::ReadPlan), 1);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn sticky_rules_model_a_dead_server() {
+        let plan = FaultPlan::new(vec![FaultRule::from_nth(FaultOp::Read, 1, ErrorClass::Io)]);
+        let b = FaultBackend::new(LocalBackend::instant(), plan.clone());
+        let path = format!("/tmp/jpio-fault-sticky-{}", std::process::id());
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, b"data").unwrap();
+        let mut buf = [0u8; 4];
+        f.read_at(0, &mut buf).unwrap(); // read #0 passes
+        for _ in 0..3 {
+            assert_eq!(f.read_at(0, &mut buf).unwrap_err().class, ErrorClass::Io);
+        }
+        // Killing mid-workload arms every op.
+        plan.inject_kill(ErrorClass::Io);
+        assert!(f.write_at(0, b"x").is_err());
+        assert!(f.sync().is_err());
         b.delete(&path).unwrap();
     }
 }

@@ -8,9 +8,90 @@
 //! offset mapping lives here so the backend, the collective layer (file-
 //! domain alignment) and the tests share one set of formulas.
 //!
+//! ## Redundancy mapping
+//!
+//! [`Redundancy`] changes how logical bytes map onto the stripe
+//! objects; [`StripeMap`] (layout + redundancy) is the mapping every
+//! data path uses, so the formulas live here next to the plain ones.
+//!
+//! * `replica:<k>` keeps the round-robin data mapping untouched and
+//!   adds `k-1` *replica objects* per server: copy `c` (1 ≤ c < k) of
+//!   server `s`'s stripe object lives on server `(s + c) % factor`,
+//!   byte-identical at the same child offsets, so any `k-1` lost
+//!   servers leave one intact copy of every unit.
+//! * `parity` interleaves one parity unit per stripe *row* into the
+//!   data objects themselves (RAID-5): row `r` consists of `factor`
+//!   unit-sized *slots*, one per server, all at child offset
+//!   `[r*unit, (r+1)*unit)`. The slot on server
+//!   [`StripeMap::parity_server`]`(r) = r % factor` holds the XOR of
+//!   the other `factor-1` slots (each zero-filled past its object's
+//!   EOF); those `factor-1` slots hold data units
+//!   `i = r*(factor-1) + q` in server order, skipping the parity
+//!   server. The XOR of all `factor` slots of a row is therefore zero,
+//!   so *any* one lost server's slot — data or parity — is the XOR of
+//!   the surviving `factor-1` slots, and the rotation spreads
+//!   parity-update traffic over all servers instead of bottlenecking
+//!   one (the RAID-4 → RAID-5 step).
+//!
 //! [`striped`]: super::striped
 
 use crate::io::errors::{err_arg, Result};
+
+/// Redundancy mode of a striped file (the `jpio_stripe_redundancy`
+/// hint): how many server losses the data path survives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Redundancy {
+    /// No redundancy: any server failure fails the operation.
+    None,
+    /// `k` total copies of every stripe unit (primary + `k-1` replicas
+    /// on the next servers round-robin); tolerates `k-1` lost servers.
+    Replica(usize),
+    /// One rotating parity unit per stripe row (RAID-4/5 style);
+    /// tolerates one lost server.
+    Parity,
+}
+
+impl Redundancy {
+    /// Parse a `jpio_stripe_redundancy` hint value: `none`,
+    /// `replica:<k>`, or `parity`. Malformed values return `None`
+    /// (MPI hint semantics: unrecognized hints are ignored).
+    pub fn parse(s: &str) -> Option<Redundancy> {
+        match s {
+            "none" => Some(Redundancy::None),
+            "parity" => Some(Redundancy::Parity),
+            _ => {
+                let k = s.strip_prefix("replica:")?.parse().ok()?;
+                Some(Redundancy::Replica(k))
+            }
+        }
+    }
+
+    /// Number of simultaneous server losses the mode survives.
+    pub fn tolerates(&self) -> usize {
+        match *self {
+            Redundancy::None => 0,
+            Redundancy::Replica(k) => k - 1,
+            Redundancy::Parity => 1,
+        }
+    }
+
+    /// Reject configurations the layout cannot host: `replica:<k>`
+    /// needs `2 ≤ k ≤ factor` distinct servers per unit, parity needs
+    /// at least two servers.
+    pub fn validate(&self, factor: usize) -> Result<()> {
+        match *self {
+            Redundancy::None => Ok(()),
+            Redundancy::Replica(k) if k < 2 || k > factor => Err(err_arg(format!(
+                "stripe redundancy replica:{k} needs 2 <= k <= striping_factor ({factor})"
+            ))),
+            Redundancy::Replica(_) => Ok(()),
+            Redundancy::Parity if factor < 2 => {
+                Err(err_arg("stripe redundancy parity needs striping_factor >= 2"))
+            }
+            Redundancy::Parity => Ok(()),
+        }
+    }
+}
 
 /// Round-robin stripe layout: `factor` servers × `unit`-byte stripe units.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -116,6 +197,13 @@ impl StripeLayout {
             }
     }
 
+    /// Index of the stripe row containing the byte at offset
+    /// `child_off` of any server's stripe object: row `r` occupies the
+    /// slot `[r*unit, (r+1)*unit)` in every object.
+    pub fn row_of_child_off(&self, child_off: u64) -> u64 {
+        child_off / self.unit
+    }
+
     /// The logical file size implied by `server`'s stripe object being
     /// `child_len` bytes long (logical offset just past its last byte).
     /// The logical size of a striped file is the max of this over servers.
@@ -128,6 +216,171 @@ impl StripeLayout {
         let within = last % self.unit;
         let logical_stripe = child_stripe * self.factor as u64 + server as u64;
         logical_stripe * self.unit + within + 1
+    }
+}
+
+/// The redundancy-aware stripe mapping: where each logical byte (and,
+/// under `parity`, each row's parity unit) physically lives. With
+/// `Redundancy::None`/`Replica` this is exactly the plain round-robin
+/// [`StripeLayout`] mapping; with `Redundancy::Parity` each row
+/// dedicates one rotating slot to parity and declusters data over the
+/// remaining `factor-1` slots (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeMap {
+    /// The raw unit/factor geometry.
+    pub layout: StripeLayout,
+    /// The redundancy mode shaping the data mapping.
+    pub redundancy: Redundancy,
+}
+
+impl StripeMap {
+    /// Build a map, validating the redundancy against the factor.
+    pub fn new(layout: StripeLayout, redundancy: Redundancy) -> Result<StripeMap> {
+        redundancy.validate(layout.factor)?;
+        Ok(StripeMap { layout, redundancy })
+    }
+
+    /// Data units per stripe row (`factor`, or `factor-1` under parity).
+    pub fn data_units_per_row(&self) -> usize {
+        match self.redundancy {
+            Redundancy::Parity => self.layout.factor - 1,
+            _ => self.layout.factor,
+        }
+    }
+
+    /// Logical bytes per stripe row.
+    pub fn data_width(&self) -> u64 {
+        self.layout.unit * self.data_units_per_row() as u64
+    }
+
+    /// Server whose slot holds row `r`'s parity unit (rotating RAID-5
+    /// placement). Only meaningful under `Redundancy::Parity`.
+    pub fn parity_server(&self, row: u64) -> usize {
+        (row % self.layout.factor as u64) as usize
+    }
+
+    /// Server holding data unit `q` (0-based within its row) of row
+    /// `r`: server order with the parity slot skipped.
+    pub fn data_server(&self, row: u64, q: usize) -> usize {
+        match self.redundancy {
+            Redundancy::Parity => {
+                let p = self.parity_server(row);
+                if q < p {
+                    q
+                } else {
+                    q + 1
+                }
+            }
+            _ => q,
+        }
+    }
+
+    /// `(server, child_offset)` of the logical byte at `off`.
+    pub fn locate(&self, off: u64) -> (usize, u64) {
+        match self.redundancy {
+            Redundancy::Parity => {
+                let unit = self.layout.unit;
+                let du = self.data_units_per_row() as u64;
+                let i = off / unit; // data unit index
+                let row = i / du;
+                let q = (i % du) as usize;
+                (self.data_server(row, q), row * unit + off % unit)
+            }
+            _ => (self.layout.server_of(off), self.layout.child_offset(off)),
+        }
+    }
+
+    /// Split the logical range `[off, off+len)` at data-unit
+    /// boundaries, appending one [`Segment`] per piece in logical
+    /// order — the redundancy-aware version of
+    /// [`StripeLayout::split_run`].
+    pub fn split_run(&self, off: u64, len: usize, buf_pos: usize, out: &mut Vec<Segment>) {
+        match self.redundancy {
+            Redundancy::Parity => {
+                let unit = self.layout.unit;
+                let end = off + len as u64;
+                let mut cur = off;
+                while cur < end {
+                    let boundary = (cur / unit + 1) * unit;
+                    let piece_end = boundary.min(end);
+                    let (server, child_off) = self.locate(cur);
+                    out.push(Segment {
+                        server,
+                        child_off,
+                        len: (piece_end - cur) as usize,
+                        buf_pos: buf_pos + (cur - off) as usize,
+                    });
+                    cur = piece_end;
+                }
+            }
+            _ => self.layout.split_run(off, len, buf_pos, out),
+        }
+    }
+
+    /// Size of `server`'s stripe object for a hole-free logical file of
+    /// `logical_size` bytes, *including* the interleaved parity slots
+    /// under `Redundancy::Parity` (the parity unit of a partial final
+    /// row is materialized full-length: parity covers the zero-padded
+    /// row).
+    pub fn child_len(&self, server: usize, logical_size: u64) -> u64 {
+        match self.redundancy {
+            Redundancy::Parity => {
+                if logical_size == 0 {
+                    return 0;
+                }
+                let unit = self.layout.unit;
+                let du = self.data_units_per_row() as u64;
+                let last_unit = (logical_size - 1) / unit;
+                let last_row = last_unit / du;
+                let q_last = (last_unit % du) as usize;
+                let rem = logical_size - last_unit * unit; // 1..=unit
+                let base = last_row * unit; // full slots of earlier rows
+                let p = self.parity_server(last_row);
+                if server == p {
+                    return base + unit;
+                }
+                let q = if server < p { server } else { server - 1 };
+                if q < q_last {
+                    base + unit
+                } else if q == q_last {
+                    base + rem
+                } else {
+                    base
+                }
+            }
+            _ => self.layout.child_len(server, logical_size),
+        }
+    }
+
+    /// The logical file size implied by `server`'s stripe object being
+    /// `child_len` bytes long. Under parity the object's last byte may
+    /// sit in a parity slot, which only proves the row exists; the max
+    /// over all servers is still exact, because the server holding the
+    /// last *data* unit yields the exact size.
+    pub fn logical_end(&self, server: usize, child_len: u64) -> u64 {
+        match self.redundancy {
+            Redundancy::Parity => {
+                if child_len == 0 {
+                    return 0;
+                }
+                let unit = self.layout.unit;
+                let du = self.data_units_per_row() as u64;
+                let last = child_len - 1;
+                let row = last / unit;
+                let within = last % unit;
+                let p = self.parity_server(row);
+                if server == p {
+                    // A materialized parity slot implies the row holds
+                    // at least one data byte.
+                    row * self.data_width() + 1
+                } else {
+                    let q = if server < p { server } else { server - 1 };
+                    let i = row * du + q as u64;
+                    i * unit + within + 1
+                }
+            }
+            _ => self.layout.logical_end(server, child_len),
+        }
     }
 }
 
@@ -205,5 +458,115 @@ mod tests {
         // stripe 1 (offset 4), i.e. logical stripe 1*4+2 = 6, offset 64.
         assert_eq!(l.logical_end(2, 15), 65);
         assert_eq!(l.logical_end(0, 0), 0);
+    }
+
+    #[test]
+    fn redundancy_parses_and_validates() {
+        assert_eq!(Redundancy::parse("none"), Some(Redundancy::None));
+        assert_eq!(Redundancy::parse("parity"), Some(Redundancy::Parity));
+        assert_eq!(Redundancy::parse("replica:2"), Some(Redundancy::Replica(2)));
+        assert_eq!(Redundancy::parse("replica:"), None);
+        assert_eq!(Redundancy::parse("replica:x"), None);
+        assert_eq!(Redundancy::parse("raid6"), None);
+        assert_eq!(Redundancy::None.tolerates(), 0);
+        assert_eq!(Redundancy::Replica(3).tolerates(), 2);
+        assert_eq!(Redundancy::Parity.tolerates(), 1);
+        assert!(Redundancy::Replica(2).validate(4).is_ok());
+        assert!(Redundancy::Replica(4).validate(4).is_ok());
+        assert!(Redundancy::Replica(1).validate(4).is_err());
+        assert!(Redundancy::Replica(5).validate(4).is_err());
+        assert!(Redundancy::Parity.validate(1).is_err());
+        assert!(Redundancy::Parity.validate(2).is_ok());
+    }
+
+    #[test]
+    fn parity_map_rotates_and_skips_the_parity_slot() {
+        let l = StripeLayout::new(10, 4).unwrap();
+        let m = StripeMap::new(l, Redundancy::Parity).unwrap();
+        assert_eq!(m.data_units_per_row(), 3);
+        assert_eq!(m.data_width(), 30);
+        // Rotation: row r's parity slot is on server r % 4.
+        assert_eq!(m.parity_server(0), 0);
+        assert_eq!(m.parity_server(3), 3);
+        assert_eq!(m.parity_server(4), 0);
+        // Row 0 (parity on 0): data units 0,1,2 → servers 1,2,3.
+        assert_eq!(m.locate(0), (1, 0));
+        assert_eq!(m.locate(10), (2, 0));
+        assert_eq!(m.locate(25), (3, 5));
+        // Row 1 (parity on 1): data units 3,4,5 → servers 0,2,3 at
+        // child slot [10, 20).
+        assert_eq!(m.locate(30), (0, 10));
+        assert_eq!(m.locate(40), (2, 10));
+        assert_eq!(m.locate(59), (3, 19));
+        // Row of a child-object byte: slot r spans [r*unit, (r+1)*unit)
+        // in every object.
+        assert_eq!(l.row_of_child_off(0), 0);
+        assert_eq!(l.row_of_child_off(9), 0);
+        assert_eq!(l.row_of_child_off(10), 1);
+    }
+
+    #[test]
+    fn parity_split_covers_exactly_and_respects_units() {
+        let m = StripeMap::new(StripeLayout::new(16, 4).unwrap(), Redundancy::Parity).unwrap();
+        let mut segs = Vec::new();
+        m.split_run(5, 100, 7, &mut segs);
+        let total: usize = segs.iter().map(|s| s.len).sum();
+        assert_eq!(total, 100);
+        let mut logical = 5u64;
+        let mut pos = 7usize;
+        for s in &segs {
+            let (server, child_off) = m.locate(logical);
+            assert_eq!(s.server, server);
+            assert_eq!(s.child_off, child_off);
+            assert_eq!(s.buf_pos, pos);
+            assert!(s.len <= 16, "piece crosses a unit boundary");
+            assert_eq!(logical / 16, (logical + s.len as u64 - 1) / 16);
+            // A data segment never lands on its row's parity slot.
+            let row = child_off / 16;
+            assert_ne!(s.server, m.parity_server(row));
+            logical += s.len as u64;
+            pos += s.len;
+        }
+        assert_eq!(logical, 105);
+    }
+
+    #[test]
+    fn parity_child_len_and_logical_end_are_inverse() {
+        for (unit, factor) in [(7u64, 3usize), (10, 4), (16, 2), (4096, 5)] {
+            let m =
+                StripeMap::new(StripeLayout::new(unit, factor).unwrap(), Redundancy::Parity)
+                    .unwrap();
+            let dw = m.data_width();
+            for logical in
+                [0u64, 1, unit - 1, unit, unit + 1, dw - 1, dw, dw + 1, 3 * dw + unit / 2 + 1, 10 * dw]
+            {
+                let back = (0..factor)
+                    .map(|s| m.logical_end(s, m.child_len(s, logical)))
+                    .max()
+                    .unwrap();
+                assert_eq!(back, logical, "unit={unit} factor={factor} L={logical}");
+                // Every slot of every spanned row is materialized: the
+                // object byte total is (data + one parity unit per row),
+                // with only the last data unit allowed to be partial.
+                let sum: u64 = (0..factor).map(|s| m.child_len(s, logical)).sum();
+                let rows = logical.div_ceil(dw);
+                assert_eq!(sum, logical + rows * unit, "unit={unit} factor={factor} L={logical}");
+            }
+        }
+    }
+
+    #[test]
+    fn replica_map_matches_plain_layout() {
+        let l = StripeLayout::new(16, 4).unwrap();
+        let m = StripeMap::new(l, Redundancy::Replica(2)).unwrap();
+        for off in [0u64, 5, 16, 63, 64, 129] {
+            assert_eq!(m.locate(off), (l.server_of(off), l.child_offset(off)));
+        }
+        for size in [0u64, 1, 64, 65, 1000] {
+            for s in 0..4 {
+                assert_eq!(m.child_len(s, size), l.child_len(s, size));
+            }
+        }
+        assert_eq!(m.data_width(), l.width());
     }
 }

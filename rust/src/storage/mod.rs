@@ -162,6 +162,27 @@ pub trait StorageFile: Send + Sync {
     fn stripe_layout(&self) -> Option<layout::StripeLayout> {
         None
     }
+
+    /// The redundancy-aware stripe mapping, when striped. Defaults to
+    /// the plain layout with no redundancy; the striped backend
+    /// overrides it so the collective layer can assign stripe-aligned
+    /// file domains that follow the *data* placement, which the parity
+    /// rotation permutes away from the plain unit cycle.
+    fn stripe_map(&self) -> Option<layout::StripeMap> {
+        self.stripe_layout()
+            .map(|layout| layout::StripeMap { layout, redundancy: layout::Redundancy::None })
+    }
+
+    /// Drain pending advisory errors: conditions where an operation
+    /// *succeeded* but the file is running degraded — today the striped
+    /// backend's replica/parity reconstruction around a failed server
+    /// (class [`ErrorClass::Degraded`](crate::io::errors::ErrorClass)).
+    /// Returning them as `Err` would turn a survivable failure into a
+    /// failed operation, so they travel out-of-band; single-device
+    /// backends have none.
+    fn take_advisories(&self) -> Vec<crate::io::errors::IoError> {
+        Vec::new()
+    }
 }
 
 /// A mapped view of a file region. The local implementation is a real

@@ -11,21 +11,45 @@
 //! holding one *stripe object* — a plain file on that child.
 //!
 //! * **Data path** — `read_at`/`write_at`/`read_runs`/`write_runs` split
-//!   logical runs at stripe boundaries ([`StripeLayout`]), group
+//!   logical runs at stripe boundaries ([`StripeMap`]), group
 //!   the pieces per server, and issue one vectored transfer per server
 //!   *concurrently* on the [`engine`](crate::io::engine) stripe pool, so
 //!   aggregate bandwidth scales with servers instead of serializing at
 //!   one ingest lock.
+//! * **Redundancy** — the `jpio_stripe_redundancy` hint
+//!   ([`Redundancy`]) makes a lost server degrade service instead of
+//!   failing the file (the ViPIOS case for pushing redundancy into the
+//!   parallel I/O layer):
+//!   - `replica:<k>` mirrors every stripe object onto the next `k-1`
+//!     servers round-robin (separate *replica objects*); reads fall
+//!     over to a surviving copy, writes update all copies.
+//!   - `parity` interleaves one rotating parity unit per stripe row
+//!     into the stripe objects themselves (RAID-5; see
+//!     [`layout`](super::layout)); a failed server's slot — data or
+//!     parity — is reconstructed as the XOR of the surviving slots.
+//!     Parity updates are read-modify-write over the affected rows and
+//!     serialize on a per-file stripe-consistency lock
+//!     (`<name>.jpio-plock`) — the classic RAID-5 small-write penalty,
+//!     measured in ablation 6c.
+//!   Operations that survive a failure report it out-of-band as an
+//!   [`ErrorClass::Degraded`] advisory ([`StorageFile::take_advisories`])
+//!   instead of an `Err`; failures beyond the mode's tolerance surface
+//!   as plain errors. A server that fails a write is assumed
+//!   *failed-stop* (dead for the file's lifetime): redundant copies and
+//!   parity are updated with the intended contents, so a server that
+//!   "comes back" with stale data is outside the model.
 //! * **Metadata** — the logical size lives in a flocked metadata sidecar
 //!   (`<name>.jpio-size`), the substitution for a parallel file system's
 //!   metadata server (PVFS's mgr, ViPIOS's directory service): `size()`
 //!   reads one 8-byte sidecar instead of issuing a GETATTR to every
-//!   child server, writes that extend the file publish the new EOF (an
-//!   unlocked 8-byte sidecar check skips the flock cycle when the file
-//!   already covers the write), and `set_size`/`truncate`/`preallocate`
-//!   invalidate by publishing the exact new size. A missing sidecar
-//!   (objects created by other means) is rebuilt from a one-time full
-//!   child poll at open.
+//!   child server, writes that extend the file publish the new EOF *after*
+//!   the data dispatch succeeded (an unlocked 8-byte sidecar check skips
+//!   the flock cycle when the file already covers the write), and
+//!   `set_size`/`truncate`/`preallocate` invalidate by publishing the
+//!   exact new size. A missing sidecar (objects created by other means)
+//!   is rebuilt from a one-time full child poll at open, and a sidecar
+//!   that cannot be read or published falls back to that same GETATTR
+//!   fan-out instead of serving (or leaving behind) a stale EOF.
 //! * **Locking** — `lock_exclusive` acquires every child's lock in server
 //!   order (the classic total-order protocol), so concurrent distributed
 //!   lockers cannot deadlock; the guard releases all of them.
@@ -39,36 +63,53 @@
 
 use std::os::unix::fs::FileExt;
 use std::os::unix::io::AsRawFd;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::io::engine;
 use crate::io::errors::{err_arg, err_io, ErrorClass, IoError, Result};
 
-use super::layout::{Segment, StripeLayout};
-use super::local::{check_bounds, LocalBackend};
+use super::layout::{Redundancy, Segment, StripeLayout, StripeMap};
+use super::local::{check_bounds, lock_cell_for, LocalBackend};
 use super::nfs::{NfsBackend, NfsConfig};
 use super::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
 
 /// A backend declustering files round-robin across child backends.
 pub struct StripedBackend {
     children: Vec<Arc<dyn Backend>>,
-    layout: StripeLayout,
+    map: StripeMap,
 }
 
 impl StripedBackend {
     /// Stripe across the given children with `unit`-byte stripe units.
     /// The striping factor is `children.len()`.
     pub fn new(children: Vec<Arc<dyn Backend>>, unit: u64) -> Result<StripedBackend> {
+        StripedBackend::with_redundancy(children, unit, Redundancy::None)
+    }
+
+    /// [`StripedBackend::new`] with a redundancy mode (replica/parity
+    /// stripes; see the module docs).
+    pub fn with_redundancy(
+        children: Vec<Arc<dyn Backend>>,
+        unit: u64,
+        redundancy: Redundancy,
+    ) -> Result<StripedBackend> {
         let layout = StripeLayout::new(unit, children.len())?;
-        Ok(StripedBackend { children, layout })
+        let map = StripeMap::new(layout, redundancy)?;
+        Ok(StripedBackend { children, map })
     }
 
     /// `factor` unmodelled local children (functional tests).
     pub fn local(factor: usize, unit: u64) -> StripedBackend {
+        StripedBackend::local_redundant(factor, unit, Redundancy::None)
+    }
+
+    /// [`StripedBackend::local`] with a redundancy mode.
+    pub fn local_redundant(factor: usize, unit: u64, redundancy: Redundancy) -> StripedBackend {
         let children = (0..factor)
             .map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>)
             .collect();
-        StripedBackend::new(children, unit).expect("valid stripe parameters")
+        StripedBackend::with_redundancy(children, unit, redundancy)
+            .expect("valid stripe parameters")
     }
 
     /// `factor` simulated NFS servers, each with its own copy of `cfg`
@@ -82,7 +123,12 @@ impl StripedBackend {
 
     /// The stripe layout of this backend.
     pub fn layout(&self) -> StripeLayout {
-        self.layout
+        self.map.layout
+    }
+
+    /// The redundancy mode of this backend.
+    pub fn redundancy(&self) -> Redundancy {
+        self.map.redundancy
     }
 
     /// Path of `server`'s stripe object for logical file `path`. Public
@@ -91,10 +137,23 @@ impl StripedBackend {
         format!("{path}.jpio-s{server}of{factor}")
     }
 
+    /// Path of replica copy `copy` (1-based) of `server`'s stripe
+    /// object; the object physically lives on child `(server + copy) %
+    /// factor`.
+    pub fn replica_object_path(path: &str, server: usize, factor: usize, copy: usize) -> String {
+        format!("{path}.jpio-s{server}of{factor}.r{copy}")
+    }
+
     /// Path of the logical-size metadata sidecar for logical file `path`
     /// (the metadata-server substitution; see the module docs).
     pub fn size_meta_path(path: &str) -> String {
         format!("{path}.jpio-size")
+    }
+
+    /// Path of the stripe-consistency lock serializing parity
+    /// read-modify-write cycles across handles and processes.
+    pub fn parity_lock_path(path: &str) -> String {
+        format!("{path}.jpio-plock")
     }
 }
 
@@ -192,6 +251,15 @@ impl SizeMeta {
     fn publish_exact(&self, size: u64) -> Result<()> {
         self.with_locked_file(|file| Self::write_value(file, size))
     }
+
+    /// Remove the sidecar so the next `size()` rebuilds from the child
+    /// GETATTR fan-out. Returns whether the stale sidecar is gone.
+    fn invalidate(&self) -> bool {
+        match std::fs::remove_file(&self.path) {
+            Ok(()) => true,
+            Err(e) => e.kind() == std::io::ErrorKind::NotFound,
+        }
+    }
 }
 
 impl Backend for StripedBackend {
@@ -199,13 +267,32 @@ impl Backend for StripedBackend {
         if path.is_empty() {
             return Err(crate::io::errors::err_bad_file("empty file name"));
         }
-        let factor = self.layout.factor;
+        let factor = self.map.layout.factor;
         let mut files = Vec::with_capacity(factor);
         for (i, child) in self.children.iter().enumerate() {
             files.push(child.open(&Self::object_path(path, i, factor), opts)?);
         }
-        let inner =
-            StripedInner { children: files, layout: self.layout, meta: SizeMeta::new(path) };
+        // Replica objects: copy c of server s's object lives on child
+        // (s + c) % factor.
+        let mut replicas = Vec::new();
+        if let Redundancy::Replica(k) = self.map.redundancy {
+            for c in 1..k {
+                let mut copies = Vec::with_capacity(factor);
+                for s in 0..factor {
+                    let holder = &self.children[replica_holder(s, c, factor)];
+                    copies.push(holder.open(&Self::replica_object_path(path, s, factor, c), opts)?);
+                }
+                replicas.push(copies);
+            }
+        }
+        let inner = StripedInner {
+            children: files,
+            replicas,
+            map: self.map,
+            meta: SizeMeta::new(path),
+            plock_path: StripedBackend::parity_lock_path(path),
+            advisories: Mutex::new(Vec::new()),
+        };
         if opts.truncate {
             // Children were truncated at open; the sidecar must follow.
             inner.meta.publish_exact(0)?;
@@ -219,7 +306,8 @@ impl Backend for StripedBackend {
 
     fn delete(&self, path: &str) -> Result<()> {
         let _ = std::fs::remove_file(Self::size_meta_path(path));
-        let factor = self.layout.factor;
+        let _ = std::fs::remove_file(Self::parity_lock_path(path));
+        let factor = self.map.layout.factor;
         let mut first_err = None;
         for (i, child) in self.children.iter().enumerate() {
             match child.delete(&Self::object_path(path, i, factor)) {
@@ -229,6 +317,20 @@ impl Backend for StripedBackend {
                 Err(e) if i > 0 && e.class == ErrorClass::NoSuchFile => {}
                 Err(e) => {
                     first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Redundancy::Replica(k) = self.map.redundancy {
+            for c in 1..k {
+                for s in 0..factor {
+                    let holder = &self.children[replica_holder(s, c, factor)];
+                    match holder.delete(&Self::replica_object_path(path, s, factor, c)) {
+                        Ok(()) => {}
+                        Err(e) if e.class == ErrorClass::NoSuchFile => {}
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                        }
+                    }
                 }
             }
         }
@@ -243,32 +345,242 @@ impl Backend for StripedBackend {
     }
 }
 
+/// Boxed per-server dispatch job: data, replica, and parity transfers
+/// of one operation mix in a single fan-out, so the closure type is
+/// erased.
+type IoJob<T> = Box<dyn FnOnce() -> Result<T> + Send>;
+
+/// Copy a per-server packed read result back into the caller's buffer.
+fn scatter(segs: &[Segment], tmp: &[u8], buf: &mut [u8]) {
+    let mut cursor = 0usize;
+    for seg in segs {
+        buf[seg.buf_pos..seg.buf_pos + seg.len].copy_from_slice(&tmp[cursor..cursor + seg.len]);
+        cursor += seg.len;
+    }
+}
+
+/// Pack the caller-buffer bytes of `segs` back-to-back — the inverse of
+/// [`scatter`], shared by every write dispatch path.
+fn gather(segs: &[Segment], buf: &[u8]) -> Vec<u8> {
+    let total: usize = segs.iter().map(|s| s.len).sum();
+    let mut payload = Vec::with_capacity(total);
+    for seg in segs {
+        payload.extend_from_slice(&buf[seg.buf_pos..seg.buf_pos + seg.len]);
+    }
+    payload
+}
+
+/// Child physically holding replica copy `copy` (1-based) of `server`'s
+/// stripe object — the one place the replica placement rule lives.
+fn replica_holder(server: usize, copy: usize, factor: usize) -> usize {
+    (server + copy) % factor
+}
+
+fn xor_into(acc: &mut [u8], src: &[u8]) {
+    for (a, b) in acc.iter_mut().zip(src) {
+        *a ^= b;
+    }
+}
+
+/// Whether the (unsorted, possibly overlapping) intervals cover the
+/// whole `[0, unit)` slot. Sorts in place.
+fn covers_unit(iv: &mut [(u64, u64)], unit: u64) -> bool {
+    iv.sort_unstable();
+    let mut end = 0u64;
+    for &(a, b) in iv.iter() {
+        if a > end {
+            return false;
+        }
+        end = end.max(b);
+    }
+    end >= unit
+}
+
+/// Record the first error seen per child; the degraded-mode tolerance
+/// counts *distinct failed children*, not failed operations.
+fn record_failure(failed: &mut Vec<(usize, IoError)>, child: usize, err: IoError) {
+    if !failed.iter().any(|(c, _)| *c == child) {
+        failed.push((child, err));
+    }
+}
+
 /// Shared state of an open striped file.
 struct StripedInner {
     children: Vec<Arc<dyn StorageFile>>,
-    layout: StripeLayout,
+    /// `replicas[c-1][s]` = copy `c` of server `s`'s stripe object,
+    /// physically on child `(s + c) % factor`. Empty unless
+    /// `Redundancy::Replica`.
+    replicas: Vec<Vec<Arc<dyn StorageFile>>>,
+    map: StripeMap,
     meta: SizeMeta,
+    /// Stripe-consistency lock file path (parity read-modify-write).
+    plock_path: String,
+    /// Pending degraded-mode advisories, drained by `take_advisories`.
+    advisories: Mutex<Vec<IoError>>,
 }
 
 impl StripedInner {
+    fn factor(&self) -> usize {
+        self.map.layout.factor
+    }
+
+    fn unit(&self) -> u64 {
+        self.map.layout.unit
+    }
+
+    /// Push a degraded-mode advisory for a survived failure on `child`.
+    /// The buffer is bounded: an application that never drains it (the
+    /// plain MPI surface has no advisory call) must not leak one
+    /// formatted advisory per operation while running degraded — past
+    /// the cap the freshest advisory replaces the last slot.
+    fn advise_degraded(&self, op: &str, child: usize, err: &IoError) {
+        const ADVISORY_CAP: usize = 128;
+        let advisory = IoError::new(
+            ErrorClass::Degraded,
+            format!("{op}: stripe server {child} failed ({err}); served degraded"),
+        );
+        let mut pending = self.advisories.lock().unwrap();
+        if pending.len() < ADVISORY_CAP {
+            pending.push(advisory);
+        } else {
+            *pending.last_mut().expect("cap > 0") = advisory;
+        }
+    }
+
+    fn take_advisories(&self) -> Vec<IoError> {
+        std::mem::take(&mut *self.advisories.lock().unwrap())
+    }
+
+    /// Acquire the per-file stripe-consistency lock: an in-process
+    /// queue for threads sharing this process plus an OS flock for
+    /// sibling processes — the same two-level protocol the child
+    /// backends use for `lock_exclusive`. Parity read-modify-write
+    /// cycles serialize on it (the RAID-5 small-write cost); the lock
+    /// file is opened per acquisition so forked children never inherit
+    /// a locked fd.
+    fn lock_parity(&self) -> Result<FileLockGuard> {
+        let release_cell = lock_cell_for(&self.plock_path).acquire();
+        let file = match std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&self.plock_path)
+        {
+            Ok(f) => f,
+            Err(e) => {
+                release_cell();
+                return Err(IoError::from_os(e, "stripe parity lock"));
+            }
+        };
+        if unsafe { libc::flock(file.as_raw_fd(), libc::LOCK_EX) } != 0 {
+            release_cell();
+            return Err(err_io("flock stripe parity lock"));
+        }
+        Ok(FileLockGuard {
+            os_unlock: Some(Box::new(move || {
+                unsafe { libc::flock(file.as_raw_fd(), libc::LOCK_UN) };
+                drop(file);
+                release_cell();
+            })),
+        })
+    }
+
     /// Logical file size, from the metadata sidecar — one 8-byte read
     /// instead of a GETATTR fan-out over every child server. A missing
-    /// sidecar is rebuilt (under its lock) from a full child poll.
+    /// sidecar is rebuilt (under its lock) from a full child poll; a
+    /// sidecar that cannot be read or locked degrades to the poll
+    /// instead of failing reads that only needed an EOF clamp.
     fn logical_size(&self) -> Result<u64> {
-        if let Some(size) = self.meta.read_fast()? {
-            return Ok(size);
+        match self.meta.read_fast() {
+            Ok(Some(size)) => Ok(size),
+            // Seed the sidecar only from a strict poll: a degraded poll
+            // may under-report (see poll_children_size) and must stay
+            // transient, never persisted as the published EOF.
+            Ok(None) => match self.meta.read_or_init(|| self.poll_children_size_strict()) {
+                Ok(v) => Ok(v),
+                Err(_) => self.poll_children_size(),
+            },
+            Err(_) => self.poll_children_size(),
         }
-        self.meta.read_or_init(|| self.poll_children_size())
+    }
+
+    /// [`StripedInner::poll_children_size`] with no failure tolerance —
+    /// the sidecar (re)build seed, where an under-reported degraded
+    /// value must never be persisted.
+    fn poll_children_size_strict(&self) -> Result<u64> {
+        let mut max = 0u64;
+        for (s, child) in self.children.iter().enumerate() {
+            max = max.max(self.map.logical_end(s, child.size()?));
+        }
+        Ok(max)
     }
 
     /// The furthest logical byte implied by any stripe object's length —
-    /// the pre-sidecar fan-out, now only the sidecar (re)build path.
+    /// the pre-sidecar fan-out, now the serve-only fallback path.
+    /// Redundancy-aware: up to `tolerates()` children may refuse
+    /// the GETATTR. A failed replica source is recovered exactly from a
+    /// surviving copy's length; under parity the max over survivors is
+    /// exact unless the dead server held the unique last data unit, in
+    /// which case the poll may under-report by at most one unit — still
+    /// strictly better than failing every size-clamped read, and only
+    /// reachable when the sidecar itself is already gone.
     fn poll_children_size(&self) -> Result<u64> {
         let mut max = 0u64;
+        let mut failed = 0usize;
+        let mut first_err = None;
         for (s, child) in self.children.iter().enumerate() {
-            max = max.max(self.layout.logical_end(s, child.size()?));
+            match child.size() {
+                Ok(len) => max = max.max(self.map.logical_end(s, len)),
+                Err(e) => {
+                    let mut recovered = false;
+                    for copies in &self.replicas {
+                        if let Ok(len) = copies[s].size() {
+                            max = max.max(self.map.logical_end(s, len));
+                            recovered = true;
+                            break;
+                        }
+                    }
+                    if !recovered {
+                        failed += 1;
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
         }
-        Ok(max)
+        match first_err {
+            Some(e) if failed > self.map.redundancy.tolerates() => Err(e),
+            _ => Ok(max),
+        }
+    }
+
+    /// Shared fallback of the publish paths: if the sidecar cannot be
+    /// updated, drop it entirely (the next `size()` rebuilds from the
+    /// GETATTR fan-out) — a successful data operation must never leave
+    /// a sidecar claiming a stale size *or* fail over metadata
+    /// bookkeeping it can route around.
+    fn or_invalidate(&self, published: Result<()>) -> Result<()> {
+        match published {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if self.meta.invalidate() {
+                    Ok(())
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    /// Publish an extended EOF after a successful data dispatch.
+    fn publish_extend(&self, end: u64) -> Result<()> {
+        let published = self.meta.publish_extend(end);
+        self.or_invalidate(published)
+    }
+
+    /// Publish the exact EOF after a truncate/resize.
+    fn publish_exact(&self, size: u64) -> Result<()> {
+        let published = self.meta.publish_exact(size);
+        self.or_invalidate(published)
     }
 
     /// Group segments per server, sorted by child offset. The sort is
@@ -278,7 +590,7 @@ impl StripedInner {
     /// runs are issued in ascending child order — unsorted vectored
     /// requests would otherwise drop real data behind a hole.
     fn group(&self, segs: &[Segment]) -> Vec<Vec<Segment>> {
-        let mut per = vec![Vec::new(); self.layout.factor];
+        let mut per = vec![Vec::new(); self.factor()];
         for seg in segs {
             per[seg.server].push(*seg);
         }
@@ -291,10 +603,12 @@ impl StripedInner {
     /// Concurrent vectored read of `segs` into `buf`. Pieces inside the
     /// logical file but beyond a child object's end (holes) read as
     /// zeros; the caller has already clamped `segs` to the logical size.
+    /// A failed server within the redundancy tolerance is reconstructed
+    /// from replicas or parity and reported as a `Degraded` advisory.
     fn read_segments(&self, segs: &[Segment], buf: &mut [u8]) -> Result<()> {
         let per = self.group(segs);
         let mut jobs = Vec::new();
-        let mut dests: Vec<Vec<Segment>> = Vec::new();
+        let mut dests: Vec<(usize, Vec<Segment>)> = Vec::new();
         for (server, segs) in per.into_iter().enumerate() {
             if segs.is_empty() {
                 continue;
@@ -302,7 +616,7 @@ impl StripedInner {
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
             let total: usize = segs.iter().map(|s| s.len).sum();
-            dests.push(segs);
+            dests.push((server, segs));
             jobs.push(move || -> Result<Vec<u8>> {
                 // Zero-filled so short child reads (sparse holes) leave
                 // zeros — the POSIX hole semantics of the logical file.
@@ -311,20 +625,97 @@ impl StripedInner {
                 Ok(tmp)
             });
         }
-        for (result, segs) in engine::fanout(jobs).into_iter().zip(dests) {
-            let tmp = result?;
-            let mut cursor = 0usize;
-            for seg in segs {
-                buf[seg.buf_pos..seg.buf_pos + seg.len]
-                    .copy_from_slice(&tmp[cursor..cursor + seg.len]);
-                cursor += seg.len;
+        let mut failed: Vec<(usize, Vec<Segment>, IoError)> = Vec::new();
+        for (result, (server, segs)) in engine::fanout(jobs).into_iter().zip(dests) {
+            match result {
+                Ok(tmp) => scatter(&segs, &tmp, buf),
+                Err(e) => failed.push((server, segs, e)),
             }
+        }
+        if failed.is_empty() {
+            return Ok(());
+        }
+        if failed.len() > self.map.redundancy.tolerates() {
+            return Err(failed.swap_remove(0).2);
+        }
+        for (server, segs, err) in failed {
+            let tmp = self.reconstruct_segments(server, &segs)?;
+            scatter(&segs, &tmp, buf);
+            self.advise_degraded("read", server, &err);
         }
         Ok(())
     }
 
-    /// Concurrent vectored write of `segs` from `buf`.
+    /// Rebuild the packed bytes of `segs` (all on failed server
+    /// `server`, sorted by child offset) from the surviving redundancy.
+    fn reconstruct_segments(&self, server: usize, segs: &[Segment]) -> Result<Vec<u8>> {
+        let total: usize = segs.iter().map(|s| s.len).sum();
+        match self.map.redundancy {
+            Redundancy::None => Err(err_io(format!(
+                "stripe server {server} failed and the file has no redundancy"
+            ))),
+            Redundancy::Replica(k) => {
+                // Fall over to the first surviving copy; the replica
+                // objects are byte-identical at the same child offsets.
+                let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+                let mut last = None;
+                for c in 1..k {
+                    let mut tmp = vec![0u8; total];
+                    match self.replicas[c - 1][server].read_runs(&runs, &mut tmp) {
+                        Ok(_) => return Ok(tmp),
+                        Err(e) => last = Some(e),
+                    }
+                }
+                Err(last.expect("replica:<k> has k >= 2"))
+            }
+            Redundancy::Parity => {
+                // Any one row slot is the XOR of the other factor-1
+                // slots (data XOR parity == 0 per row), and every
+                // server stores a row's slot at the same child offset —
+                // so the lost bytes are the XOR of the *same vectored
+                // run set* read from each survivor, one concurrent
+                // fan-out like the healthy path. Serialize against
+                // parity read-modify-write cycles so a half-updated row
+                // is never used for reconstruction.
+                let _guard = self.lock_parity()?;
+                let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+                let jobs: Vec<_> = (0..self.factor())
+                    .filter(|&s| s != server)
+                    .map(|s| {
+                        let child = self.children[s].clone();
+                        let runs = runs.clone();
+                        move || -> Result<Vec<u8>> {
+                            let mut tmp = vec![0u8; total];
+                            child.read_runs(&runs, &mut tmp)?;
+                            Ok(tmp)
+                        }
+                    })
+                    .collect();
+                let mut out = vec![0u8; total];
+                for result in engine::fanout(jobs) {
+                    xor_into(&mut out, &result?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Concurrent vectored write of `segs` from `buf`, updating
+    /// replicas/parity per the redundancy mode. Failures on at most
+    /// `tolerates()` distinct children degrade (advisory) instead of
+    /// failing the operation.
     fn write_segments(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
+        if segs.is_empty() {
+            return Ok(());
+        }
+        match self.map.redundancy {
+            Redundancy::None => self.write_segments_plain(segs, buf),
+            Redundancy::Replica(k) => self.write_segments_replica(segs, buf, k),
+            Redundancy::Parity => self.write_segments_parity(segs, buf),
+        }
+    }
+
+    fn write_segments_plain(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
         let per = self.group(segs);
         let mut jobs = Vec::new();
         for (server, segs) in per.into_iter().enumerate() {
@@ -333,11 +724,7 @@ impl StripedInner {
             }
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
-            let total: usize = segs.iter().map(|s| s.len).sum();
-            let mut payload = Vec::with_capacity(total);
-            for seg in &segs {
-                payload.extend_from_slice(&buf[seg.buf_pos..seg.buf_pos + seg.len]);
-            }
+            let payload = gather(&segs, buf);
             jobs.push(move || -> Result<usize> { child.write_runs(&runs, &payload) });
         }
         for result in engine::fanout(jobs) {
@@ -346,12 +733,279 @@ impl StripedInner {
         Ok(())
     }
 
-    fn set_size(&self, size: u64) -> Result<()> {
+    fn write_segments_replica(&self, segs: &[Segment], buf: &[u8], k: usize) -> Result<()> {
+        let factor = self.factor();
+        let per = self.group(segs);
+        let mut jobs: Vec<IoJob<usize>> = Vec::new();
+        let mut holders = Vec::new();
+        for (server, segs) in per.into_iter().enumerate() {
+            if segs.is_empty() {
+                continue;
+            }
+            let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+            // All k copies read the same packed bytes — share them
+            // instead of materializing the payload once per copy.
+            let runs = Arc::new(runs);
+            let payload = Arc::new(gather(&segs, buf));
+            for c in 0..k {
+                let handle = if c == 0 {
+                    self.children[server].clone()
+                } else {
+                    self.replicas[c - 1][server].clone()
+                };
+                let runs = runs.clone();
+                let payload = payload.clone();
+                jobs.push(Box::new(move || handle.write_runs(&runs, &payload)));
+                holders.push(replica_holder(server, c, factor));
+            }
+        }
+        let mut failed: Vec<(usize, IoError)> = Vec::new();
+        for (holder, result) in holders.into_iter().zip(engine::fanout(jobs)) {
+            if let Err(e) = result {
+                record_failure(&mut failed, holder, e);
+            }
+        }
+        self.settle_write_failures("write", failed)
+    }
+
+    /// For each affected row, whether the write fully overlays every
+    /// data slot of that row — the RAID-5 full-stripe case whose parity
+    /// needs no pre-read. Overlapping caller runs merge like any other
+    /// intervals, so coverage is never over-counted.
+    fn fully_covered_rows(&self, segs: &[Segment], rows: &[u64]) -> Vec<bool> {
+        let unit = self.unit();
+        let factor = self.factor();
+        let mut intervals: Vec<Vec<Vec<(u64, u64)>>> =
+            vec![vec![Vec::new(); factor]; rows.len()];
+        for seg in segs {
+            let r = self.map.layout.row_of_child_off(seg.child_off);
+            let idx = rows.binary_search(&r).expect("affected row present");
+            let start = seg.child_off % unit;
+            intervals[idx][seg.server].push((start, start + seg.len as u64));
+        }
+        rows.iter()
+            .enumerate()
+            .map(|(idx, &r)| {
+                let p = self.map.parity_server(r);
+                (0..factor)
+                    .filter(|&s| s != p)
+                    .all(|s| covers_unit(&mut intervals[idx][s], unit))
+            })
+            .collect()
+    }
+
+    /// Parity read-modify-write: read the affected rows' current slots
+    /// from every server, reconstruct a single failed server's slots as
+    /// the XOR of the rest, overlay the new payload, recompute each
+    /// row's parity slot, then dispatch the seg-exact data writes and
+    /// the full-unit parity writes concurrently. The whole cycle holds
+    /// the stripe-consistency lock; see the module docs.
+    fn write_segments_parity(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
+        let unit = self.unit() as usize;
+        let factor = self.factor();
+        let _guard = self.lock_parity()?;
+
+        // Affected rows, ascending.
+        let mut rows: Vec<u64> =
+            segs.iter().map(|s| self.map.layout.row_of_child_off(s.child_off)).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        let nrows = rows.len();
+
+        // Full-stripe rows (every data slot fully overlaid) need no
+        // pre-read: their parity is computable from the payload alone —
+        // the classic RAID-5 full-stripe-write fast path that spares
+        // sequential and data_width-aligned collective writes the
+        // read-modify-write cost.
+        let full = self.fully_covered_rows(segs, &rows);
+        let read_idx: Vec<usize> = (0..nrows).filter(|&i| !full[i]).collect();
+
+        let mut failed: Vec<(usize, IoError)> = Vec::new();
+
+        // 1. Read every server's slots for the partially-covered rows
+        //    (one vectored read per server), zero-filled past each
+        //    object's EOF.
+        let mut slots: Vec<Vec<u8>> = vec![vec![0u8; nrows * unit]; factor];
+        if !read_idx.is_empty() {
+            let row_runs: Vec<(u64, usize)> =
+                read_idx.iter().map(|&i| (rows[i] * unit as u64, unit)).collect();
+            let read_jobs: Vec<_> = self
+                .children
+                .iter()
+                .map(|child| {
+                    let child = child.clone();
+                    let runs = row_runs.clone();
+                    let total = runs.len() * unit;
+                    move || -> Result<Vec<u8>> {
+                        let mut tmp = vec![0u8; total];
+                        child.read_runs(&runs, &mut tmp)?;
+                        Ok(tmp)
+                    }
+                })
+                .collect();
+            for (server, result) in engine::fanout(read_jobs).into_iter().enumerate() {
+                match result {
+                    Ok(tmp) => {
+                        for (j, &i) in read_idx.iter().enumerate() {
+                            slots[server][i * unit..(i + 1) * unit]
+                                .copy_from_slice(&tmp[j * unit..(j + 1) * unit]);
+                        }
+                    }
+                    Err(e) => record_failure(&mut failed, server, e),
+                }
+            }
+            if failed.len() > 1 {
+                return Err(failed.swap_remove(0).1);
+            }
+        }
+        let dead = failed.first().map(|&(c, _)| c);
+
+        // 2. A failed server's old slots are the XOR of everyone
+        //    else's (the per-row invariant: data XOR parity == 0).
+        //    Full-stripe rows are wholly overlaid below and need no
+        //    reconstruction.
+        if let Some(d) = dead {
+            for &idx in &read_idx {
+                let span = idx * unit..(idx + 1) * unit;
+                let mut acc = vec![0u8; unit];
+                for (s, slot) in slots.iter().enumerate() {
+                    if s != d {
+                        xor_into(&mut acc, &slot[span.clone()]);
+                    }
+                }
+                slots[d][span].copy_from_slice(&acc);
+            }
+        }
+
+        // 3. Overlay the new payload into the data slots.
+        for seg in segs {
+            let r = self.map.layout.row_of_child_off(seg.child_off);
+            let idx = rows.binary_search(&r).expect("affected row present");
+            let within = (seg.child_off % unit as u64) as usize;
+            slots[seg.server][idx * unit + within..idx * unit + within + seg.len]
+                .copy_from_slice(&buf[seg.buf_pos..seg.buf_pos + seg.len]);
+        }
+
+        // 4. Recompute each affected row's parity slot (XOR of its
+        //    factor-1 data slots), grouped into one vectored write per
+        //    parity server. Rows whose parity slot sits on the dead
+        //    server skip the update — nothing there can be written, and
+        //    reconstruction never consults a dead server's slots.
+        let mut parity_runs: Vec<Vec<(u64, usize)>> = vec![Vec::new(); factor];
+        let mut parity_payloads: Vec<Vec<u8>> = vec![Vec::new(); factor];
+        for (idx, &r) in rows.iter().enumerate() {
+            let p = self.map.parity_server(r);
+            if Some(p) == dead {
+                continue;
+            }
+            let mut acc = vec![0u8; unit];
+            for (s, slot) in slots.iter().enumerate() {
+                if s != p {
+                    xor_into(&mut acc, &slot[idx * unit..(idx + 1) * unit]);
+                }
+            }
+            parity_runs[p].push((r * unit as u64, unit));
+            parity_payloads[p].extend_from_slice(&acc);
+        }
+
+        // 5. Dispatch the seg-exact data writes and the parity writes
+        //    concurrently (skipping the dead server).
+        let per = self.group(segs);
+        let mut jobs: Vec<IoJob<usize>> = Vec::new();
+        let mut holders = Vec::new();
+        for (server, segs) in per.into_iter().enumerate() {
+            if segs.is_empty() || Some(server) == dead {
+                continue;
+            }
+            let child = self.children[server].clone();
+            let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+            let payload = gather(&segs, buf);
+            jobs.push(Box::new(move || child.write_runs(&runs, &payload)));
+            holders.push(server);
+        }
+        for (p, (runs, payload)) in
+            parity_runs.into_iter().zip(parity_payloads).enumerate()
+        {
+            if runs.is_empty() {
+                continue;
+            }
+            let child = self.children[p].clone();
+            jobs.push(Box::new(move || child.write_runs(&runs, &payload)));
+            holders.push(p);
+        }
+        for (holder, result) in holders.into_iter().zip(engine::fanout(jobs)) {
+            if let Err(e) = result {
+                record_failure(&mut failed, holder, e);
+            }
+        }
+        self.settle_write_failures("write", failed)
+    }
+
+    /// Degrade or fail a write based on how many distinct children
+    /// failed versus the redundancy tolerance.
+    fn settle_write_failures(&self, op: &str, mut failed: Vec<(usize, IoError)>) -> Result<()> {
+        if failed.len() > self.map.redundancy.tolerates() {
+            return Err(failed.swap_remove(0).1);
+        }
+        for (child, err) in &failed {
+            self.advise_degraded(op, *child, err);
+        }
+        Ok(())
+    }
+
+    /// Recompute one row's parity slot from its current data slots —
+    /// the truncate/resize repair path (strict: no degraded mode on
+    /// metadata ops). Caller holds the stripe-consistency lock.
+    fn recompute_row_parity(&self, row: u64) -> Result<()> {
+        let unit = self.unit() as usize;
+        let p = self.map.parity_server(row);
+        let mut acc = vec![0u8; unit];
+        let mut piece = vec![0u8; unit];
         for (s, child) in self.children.iter().enumerate() {
-            child.set_size(self.layout.child_len(s, size))?;
+            if s == p {
+                continue;
+            }
+            piece.fill(0);
+            child.read_at(row * unit as u64, &mut piece)?;
+            xor_into(&mut acc, &piece);
+        }
+        self.children[p].write_at(row * unit as u64, &acc)?;
+        Ok(())
+    }
+
+    fn set_size(&self, size: u64) -> Result<()> {
+        let _guard = match self.map.redundancy {
+            Redundancy::Parity => Some(self.lock_parity()?),
+            _ => None,
+        };
+        // Shrink detection for the parity repair below; an unknowable
+        // old size conservatively repairs. Read before truncating.
+        let shrinks = self.map.redundancy == Redundancy::Parity
+            && self.logical_size().map(|old| size < old).unwrap_or(true);
+        for (s, child) in self.children.iter().enumerate() {
+            child.set_size(self.map.child_len(s, size))?;
+        }
+        for copies in &self.replicas {
+            for (s, replica) in copies.iter().enumerate() {
+                replica.set_size(self.map.child_len(s, size))?;
+            }
+        }
+        if shrinks && size > 0 && size % self.map.data_width() != 0 {
+            // A shrink that cuts mid-row leaves the boundary row's
+            // parity covering bytes that no longer exist; rebuild it
+            // from the now-zero-padded data slots. Growth appends
+            // zeros, which never change a XOR — no repair (and no
+            // strict child reads that a degraded file would fail).
+            if let Err(e) = self.recompute_row_parity((size - 1) / self.map.data_width()) {
+                // The children are already truncated: drop the sidecar
+                // so size() repolls the new physical lengths instead of
+                // serving the stale pre-truncate EOF behind this error.
+                self.meta.invalidate();
+                return Err(e);
+            }
         }
         // Truncate/extend publishes the exact new EOF.
-        self.meta.publish_exact(size)
+        self.publish_exact(size)
     }
 }
 
@@ -371,7 +1025,7 @@ impl StorageFile for StripedFile {
         }
         let want = buf.len().min((size - offset) as usize);
         let mut segs = Vec::new();
-        self.inner.layout.split_run(offset, want, 0, &mut segs);
+        self.inner.map.split_run(offset, want, 0, &mut segs);
         self.inner.read_segments(&segs, buf)?;
         Ok(want)
     }
@@ -381,9 +1035,9 @@ impl StorageFile for StripedFile {
             return Ok(0);
         }
         let mut segs = Vec::new();
-        self.inner.layout.split_run(offset, buf.len(), 0, &mut segs);
+        self.inner.map.split_run(offset, buf.len(), 0, &mut segs);
         self.inner.write_segments(&segs, buf)?;
-        self.inner.meta.publish_extend(offset + buf.len() as u64)?;
+        self.inner.publish_extend(offset + buf.len() as u64)?;
         Ok(buf.len())
     }
 
@@ -395,7 +1049,7 @@ impl StorageFile for StripedFile {
         for &(off, len) in runs {
             let avail = (size.saturating_sub(off) as usize).min(len);
             if avail > 0 {
-                self.inner.layout.split_run(off, avail, pos, &mut segs);
+                self.inner.map.split_run(off, avail, pos, &mut segs);
             }
             total += avail;
             if avail < len {
@@ -414,13 +1068,17 @@ impl StorageFile for StripedFile {
         let mut pos = 0usize;
         let mut end = 0u64;
         for &(off, len) in runs {
-            self.inner.layout.split_run(off, len, pos, &mut segs);
+            self.inner.map.split_run(off, len, pos, &mut segs);
             pos += len;
-            end = end.max(off + len as u64);
+            // A zero-length run moves no bytes and (POSIX zero-length
+            // write semantics) must not extend the file.
+            if len > 0 {
+                end = end.max(off + len as u64);
+            }
         }
         self.inner.write_segments(&segs, buf)?;
-        if pos > 0 {
-            self.inner.meta.publish_extend(end)?;
+        if end > 0 {
+            self.inner.publish_extend(end)?;
         }
         Ok(pos)
     }
@@ -435,29 +1093,47 @@ impl StorageFile for StripedFile {
 
     fn preallocate(&self, size: u64) -> Result<()> {
         for (s, child) in self.inner.children.iter().enumerate() {
-            let len = self.inner.layout.child_len(s, size);
+            let len = self.inner.map.child_len(s, size);
             if len > 0 {
                 child.preallocate(len)?;
             }
         }
-        // Preallocation makes the file at least `size` bytes.
-        self.inner.meta.publish_extend(size)
+        for copies in &self.inner.replicas {
+            for (s, replica) in copies.iter().enumerate() {
+                let len = self.inner.map.child_len(s, size);
+                if len > 0 {
+                    replica.preallocate(len)?;
+                }
+            }
+        }
+        // Preallocation makes the file at least `size` bytes. (The
+        // zero extension never changes a parity XOR, so no repair.)
+        self.inner.publish_extend(size)
     }
 
     fn sync(&self) -> Result<()> {
-        let jobs: Vec<_> = self
-            .inner
-            .children
-            .iter()
-            .map(|c| {
-                let c = c.clone();
-                move || c.sync()
-            })
-            .collect();
-        for result in engine::fanout(jobs) {
-            result?;
+        let factor = self.inner.factor();
+        let mut jobs: Vec<IoJob<()>> = Vec::new();
+        let mut holders = Vec::new();
+        for (s, c) in self.inner.children.iter().enumerate() {
+            let c = c.clone();
+            jobs.push(Box::new(move || c.sync()));
+            holders.push(s);
         }
-        Ok(())
+        for (c, copies) in self.inner.replicas.iter().enumerate() {
+            for (s, replica) in copies.iter().enumerate() {
+                let replica = replica.clone();
+                jobs.push(Box::new(move || replica.sync()));
+                holders.push(replica_holder(s, c + 1, factor));
+            }
+        }
+        let mut failed: Vec<(usize, IoError)> = Vec::new();
+        for (holder, result) in holders.into_iter().zip(engine::fanout(jobs)) {
+            if let Err(e) = result {
+                record_failure(&mut failed, holder, e);
+            }
+        }
+        self.inner.settle_write_failures("sync", failed)
     }
 
     fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>> {
@@ -474,7 +1150,7 @@ impl StorageFile for StripedFile {
         if offset < old_size {
             let want = len.min((old_size - offset) as usize);
             let mut segs = Vec::new();
-            self.inner.layout.split_run(offset, want, 0, &mut segs);
+            self.inner.map.split_run(offset, want, 0, &mut segs);
             self.inner.read_segments(&segs, &mut buf)?;
         }
         Ok(Box::new(StripedMap {
@@ -503,13 +1179,21 @@ impl StorageFile for StripedFile {
     }
 
     fn stripe_layout(&self) -> Option<StripeLayout> {
-        Some(self.inner.layout)
+        Some(self.inner.map.layout)
+    }
+
+    fn stripe_map(&self) -> Option<StripeMap> {
+        Some(self.inner.map)
     }
 
     fn prefers_plan_execution(&self) -> bool {
         // Multi-run plans become one per-server concurrent fan-out here;
         // staging them through a strategy would fragment the dispatch.
         true
+    }
+
+    fn take_advisories(&self) -> Vec<IoError> {
+        self.inner.take_advisories()
     }
 }
 
@@ -565,13 +1249,13 @@ impl MappedRegion for StripedMap {
         let mut payload = Vec::new();
         for &(s, e) in &merged {
             self.inner
-                .layout
+                .map
                 .split_run(self.base + s as u64, e - s, payload.len(), &mut segs);
             payload.extend_from_slice(&self.buf[s..e]);
         }
         self.inner.write_segments(&segs, &payload)?;
         if let Some(&(_, e)) = merged.last() {
-            self.inner.meta.publish_extend(self.base + e as u64)?;
+            self.inner.publish_extend(self.base + e as u64)?;
         }
         // Only a successful write-back retires the dirty state: a failed
         // flush (e.g. transient child fault) must stay retryable instead
@@ -679,6 +1363,21 @@ mod tests {
     }
 
     #[test]
+    fn zero_length_write_runs_do_not_extend_the_file() {
+        // Regression (PR 3): a zero-length run used to feed the
+        // published EOF even though it writes nothing.
+        let b = StripedBackend::local(4, 8);
+        let path = tmp("zerorun");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[1u8; 10]).unwrap();
+        assert_eq!(f.write_runs(&[(0, 4), (1000, 0)], &[2u8; 4]).unwrap(), 4);
+        assert_eq!(f.size().unwrap(), 10, "zero-length run must not move the EOF");
+        assert_eq!(f.write_runs(&[(500, 0)], &[]).unwrap(), 0);
+        assert_eq!(f.size().unwrap(), 10);
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
     fn mapped_region_roundtrip_and_persistence() {
         let b = StripedBackend::local(4, 16);
         let path = tmp("map");
@@ -718,6 +1417,106 @@ mod tests {
             }
         });
         b.delete(&path).unwrap();
+    }
+
+    // ------------------------------------------------------------------
+    // Redundancy: healthy-path behaviour (degraded-mode coverage lives
+    // in tests/degraded_redundancy.rs).
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn replica_roundtrip_and_physical_copies() {
+        let b = StripedBackend::local_redundant(4, 8, Redundancy::Replica(2));
+        let path = tmp("replica");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let data: Vec<u8> = (0..64u8).collect();
+        f.write_at(0, &data).unwrap();
+        let mut back = vec![0u8; 64];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 64);
+        assert_eq!(back, data);
+        drop(f);
+        // Every replica object is byte-identical to its source.
+        for s in 0..4 {
+            let primary = std::fs::read(StripedBackend::object_path(&path, s, 4)).unwrap();
+            let copy =
+                std::fs::read(StripedBackend::replica_object_path(&path, s, 4, 1)).unwrap();
+            assert_eq!(primary, copy, "server {s} replica diverged");
+        }
+        b.delete(&path).unwrap();
+        for s in 0..4 {
+            assert!(!std::path::Path::new(&StripedBackend::replica_object_path(&path, s, 4, 1))
+                .exists());
+        }
+    }
+
+    #[test]
+    fn parity_roundtrip_and_row_xor_invariant() {
+        let b = StripedBackend::local_redundant(4, 8, Redundancy::Parity);
+        let path = tmp("parity");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        // Two writes: one spanning several rows, one overwrite in the
+        // middle (exercises the read-modify-write path).
+        let data: Vec<u8> = (0..200u8).collect();
+        f.write_at(0, &data).unwrap();
+        f.write_at(30, &[0xEEu8; 40]).unwrap();
+        let mut want = data.clone();
+        want[30..70].fill(0xEE);
+        let mut back = vec![0u8; 200];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 200);
+        assert_eq!(back, want);
+        assert_eq!(f.size().unwrap(), 200);
+        drop(f);
+        // Physical invariant: the XOR of all four objects' bytes at
+        // every row slot is zero (zero-filled past each object's EOF).
+        let objs: Vec<Vec<u8>> = (0..4)
+            .map(|s| std::fs::read(StripedBackend::object_path(&path, s, 4)).unwrap())
+            .collect();
+        let max_len = objs.iter().map(|o| o.len()).max().unwrap();
+        for i in 0..max_len {
+            let x = objs.iter().fold(0u8, |a, o| a ^ o.get(i).copied().unwrap_or(0));
+            assert_eq!(x, 0, "row-slot XOR broken at object byte {i}");
+        }
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn parity_set_size_repairs_boundary_row() {
+        let b = StripedBackend::local_redundant(3, 4, Redundancy::Parity);
+        let path = tmp("paritytrunc");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let data: Vec<u8> = (1..=48u8).collect();
+        f.write_at(0, &data).unwrap();
+        f.set_size(13).unwrap(); // mid-row shrink
+        assert_eq!(f.size().unwrap(), 13);
+        let mut back = vec![0u8; 13];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 13);
+        assert_eq!(&back[..], &data[..13]);
+        drop(f);
+        let objs: Vec<Vec<u8>> = (0..3)
+            .map(|s| std::fs::read(StripedBackend::object_path(&path, s, 3)).unwrap())
+            .collect();
+        let max_len = objs.iter().map(|o| o.len()).max().unwrap();
+        for i in 0..max_len {
+            let x = objs.iter().fold(0u8, |a, o| a ^ o.get(i).copied().unwrap_or(0));
+            assert_eq!(x, 0, "parity not repaired after truncate, byte {i}");
+        }
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn redundant_config_validation() {
+        assert!(StripedBackend::with_redundancy(
+            (0..2).map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>).collect(),
+            8,
+            Redundancy::Replica(3),
+        )
+        .is_err());
+        assert!(StripedBackend::with_redundancy(
+            vec![Arc::new(LocalBackend::instant()) as Arc<dyn Backend>],
+            8,
+            Redundancy::Parity,
+        )
+        .is_err());
     }
 
     /// A child backend that counts `StorageFile::size` calls — the
@@ -836,6 +1635,47 @@ mod tests {
         assert_eq!(f.size().unwrap(), 50);
         b.delete(&path).unwrap();
         assert!(!std::path::Path::new(&StripedBackend::size_meta_path(&path)).exists());
+    }
+
+    #[test]
+    fn parity_size_sidecar_rebuild_discounts_parity_slots() {
+        // The sidecar rebuild (GETATTR fan-out) must invert the
+        // parity-aware layout: materialized parity slots do not extend
+        // the logical size.
+        let b = StripedBackend::local_redundant(4, 8, Redundancy::Parity);
+        let path = tmp("parityrebuild");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[9u8; 75]).unwrap();
+        drop(f);
+        std::fs::remove_file(StripedBackend::size_meta_path(&path)).unwrap();
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        assert_eq!(f.size().unwrap(), 75);
+        let mut back = vec![0u8; 75];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 75);
+        assert!(back.iter().all(|&v| v == 9));
+        b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn unreadable_size_sidecar_falls_back_to_getattr_fanout() {
+        // A sidecar that exists but cannot be read (here: a directory)
+        // must degrade size() to the child poll, not fail reads.
+        let b = StripedBackend::local(3, 8);
+        let path = tmp("szfallback");
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &[5u8; 40]).unwrap();
+        drop(f);
+        let meta = StripedBackend::size_meta_path(&path);
+        std::fs::remove_file(&meta).unwrap();
+        std::fs::create_dir(&meta).unwrap();
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        assert_eq!(f.size().unwrap(), 40);
+        let mut back = vec![0u8; 40];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 40);
+        assert!(back.iter().all(|&v| v == 5));
+        drop(f);
+        std::fs::remove_dir(&meta).unwrap();
+        b.delete(&path).unwrap();
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! Redundant stripes (replica/parity) under fault injection: a killed
+//! stripe server must degrade service — correct bytes plus
+//! `ErrorClass::Degraded` advisories — instead of corrupting or failing
+//! the file, for independent access, whole-plan dispatch, and the
+//! two-phase collective path (exchange above, reconstruction below, per
+//! Thakur-style two-phase I/O). Failures beyond the mode's tolerance
+//! still surface as plain errors.
+
+use std::sync::Arc;
+
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::{amode, ErrorClass, File, Info};
+use jpio::storage::faults::{FaultBackend, FaultOp, FaultPlan, FaultRule};
+use jpio::storage::layout::Redundancy;
+use jpio::storage::local::LocalBackend;
+use jpio::storage::striped::StripedBackend;
+use jpio::storage::{Backend, OpenOptions, StorageFile};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-degraded-{}-{name}", std::process::id())
+}
+
+/// A striped backend over `factor` local children where `victim` is
+/// wrapped with an (initially empty) fault plan — kill it later with
+/// `plan.inject_kill(..)`.
+fn backend_with_victim(
+    factor: usize,
+    unit: u64,
+    redundancy: Redundancy,
+    victim: usize,
+) -> (StripedBackend, Arc<FaultPlan>) {
+    let plan = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..factor)
+        .map(|i| {
+            if i == victim {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let b = StripedBackend::with_redundancy(children, unit, redundancy).unwrap();
+    (b, plan)
+}
+
+fn assert_all_degraded(advisories: &[jpio::io::IoError]) {
+    assert!(!advisories.is_empty(), "degraded operation must leave an advisory");
+    for a in advisories {
+        assert_eq!(a.class, ErrorClass::Degraded, "{a}");
+        assert!(a.to_string().contains("JPIO_ERR_DEGRADED"), "{a}");
+    }
+}
+
+// ----------------------------------------------------------------------
+// Raw backend surface: reads after a server dies
+// ----------------------------------------------------------------------
+
+#[test]
+fn replica_read_survives_any_single_dead_server() {
+    for victim in 0..4 {
+        let (b, plan) = backend_with_victim(4, 8, Redundancy::Replica(2), victim);
+        let path = tmp(&format!("rep-read-{victim}"));
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let data: Vec<u8> = (0..200u8).collect();
+        f.write_at(3, &data).unwrap();
+        assert!(f.take_advisories().is_empty(), "healthy write must not degrade");
+        plan.inject_kill(ErrorClass::Io);
+        let mut back = vec![0u8; 200];
+        assert_eq!(f.read_at(3, &mut back).unwrap(), 200, "victim {victim}");
+        assert_eq!(back, data, "victim {victim}");
+        assert_all_degraded(&f.take_advisories());
+        // Advisories are drained, not repeated forever.
+        let mut again = vec![0u8; 200];
+        f.read_at(3, &mut again).unwrap();
+        assert_eq!(again, data);
+        assert_all_degraded(&f.take_advisories());
+        b.delete(&path).unwrap();
+    }
+}
+
+#[test]
+fn parity_read_survives_any_single_dead_server() {
+    for victim in 0..4 {
+        let (b, plan) = backend_with_victim(4, 8, Redundancy::Parity, victim);
+        let path = tmp(&format!("par-read-{victim}"));
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        let data: Vec<u8> = (0..251u8).cycle().take(500).collect();
+        f.write_at(0, &data).unwrap();
+        // Overwrite a middle range so reconstruction also covers
+        // read-modify-written rows.
+        f.write_at(100, &[0xA5u8; 60]).unwrap();
+        let mut want = data.clone();
+        want[100..160].fill(0xA5);
+        assert!(f.take_advisories().is_empty());
+        plan.inject_kill(ErrorClass::Io);
+        let mut back = vec![0u8; 500];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 500, "victim {victim}");
+        assert_eq!(back, want, "victim {victim}");
+        assert_all_degraded(&f.take_advisories());
+        b.delete(&path).unwrap();
+    }
+}
+
+#[test]
+fn degraded_vectored_runs_and_sparse_holes() {
+    let (b, plan) = backend_with_victim(4, 8, Redundancy::Parity, 1);
+    let path = tmp("par-runs");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    let data: Vec<u8> = (0..59u8).collect();
+    let runs = [(3u64, 20usize), (40, 9), (100, 30)];
+    f.write_runs(&runs, &data).unwrap();
+    plan.inject_kill(ErrorClass::Io);
+    let mut back = vec![0u8; 59];
+    assert_eq!(f.read_runs(&runs, &mut back).unwrap(), 59);
+    assert_eq!(back, data);
+    // Sparse hole between the runs still reads as zeros, reconstructed
+    // or not.
+    let mut hole = vec![0xEEu8; 10];
+    assert_eq!(f.read_at(60, &mut hole).unwrap(), 10);
+    assert!(hole.iter().all(|&v| v == 0), "reconstructed holes must stay zero");
+    assert_all_degraded(&f.take_advisories());
+    b.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Raw backend surface: writes while a server is dead
+// ----------------------------------------------------------------------
+
+#[test]
+fn replica_write_survives_dead_server_and_reads_back() {
+    for victim in 0..3 {
+        let (b, plan) = backend_with_victim(3, 8, Redundancy::Replica(2), victim);
+        let path = tmp(&format!("rep-write-{victim}"));
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        plan.inject_kill(ErrorClass::Io);
+        let data: Vec<u8> = (0..150u8).collect();
+        assert_eq!(f.write_at(7, &data).unwrap(), 150, "victim {victim}");
+        assert_all_degraded(&f.take_advisories());
+        assert_eq!(f.size().unwrap(), 157);
+        let mut back = vec![0u8; 150];
+        assert_eq!(f.read_at(7, &mut back).unwrap(), 150);
+        assert_eq!(back, data, "victim {victim}");
+        f.take_advisories();
+        b.delete(&path).unwrap();
+    }
+}
+
+#[test]
+fn parity_write_survives_dead_server_and_reads_back() {
+    for victim in 0..4 {
+        let (b, plan) = backend_with_victim(4, 8, Redundancy::Parity, victim);
+        let path = tmp(&format!("par-write-{victim}"));
+        let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+        // Seed healthy data so the degraded write also exercises the
+        // reconstruct-old-rows path of the parity RMW.
+        f.write_at(0, &[0x11u8; 96]).unwrap();
+        plan.inject_kill(ErrorClass::Io);
+        let data: Vec<u8> = (0..120u8).collect();
+        assert_eq!(f.write_at(13, &data).unwrap(), 120, "victim {victim}");
+        assert_all_degraded(&f.take_advisories());
+        let mut want = vec![0x11u8; 133];
+        want[13..133].copy_from_slice(&data);
+        let mut back = vec![0u8; 133];
+        assert_eq!(f.read_at(0, &mut back).unwrap(), 133);
+        assert_eq!(back, want, "victim {victim}");
+        f.take_advisories();
+        b.delete(&path).unwrap();
+    }
+}
+
+#[test]
+fn parity_grow_set_size_succeeds_on_degraded_file() {
+    let (b, plan) = backend_with_victim(4, 8, Redundancy::Parity, 0);
+    let path = tmp("par-grow");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.write_at(0, &[3u8; 50]).unwrap();
+    plan.inject_kill(ErrorClass::Io);
+    // Growth appends zeros and needs no parity repair, so it must not
+    // trip over the dead server's intercepted read path.
+    f.set_size(100).unwrap();
+    assert_eq!(f.size().unwrap(), 100);
+    let mut back = vec![0u8; 100];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), 100);
+    assert!(back[..50].iter().all(|&v| v == 3), "data lost growing degraded file");
+    assert!(back[50..].iter().all(|&v| v == 0), "grown region must read zeros");
+    f.take_advisories();
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn failures_beyond_tolerance_are_errors() {
+    // Parity tolerates one lost server, not two.
+    let plan0 = FaultPlan::kill(ErrorClass::Io);
+    let plan2 = FaultPlan::kill(ErrorClass::NoSpace);
+    let children: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(FaultBackend::new(LocalBackend::instant(), plan0)),
+        Arc::new(LocalBackend::instant()),
+        Arc::new(FaultBackend::new(LocalBackend::instant(), plan2)),
+        Arc::new(LocalBackend::instant()),
+    ];
+    let b = StripedBackend::with_redundancy(children, 8, Redundancy::Parity).unwrap();
+    let path = tmp("two-dead");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    let err = f.write_at(0, &[1u8; 64]).unwrap_err();
+    assert_eq!(err.class, ErrorClass::Io, "first failed server's class surfaces");
+    assert!(f.take_advisories().is_empty(), "a failed op must not also advise");
+    // No redundancy at all: a single fault is already an error (the
+    // pre-PR 3 behaviour is preserved).
+    let (b2, plan) = backend_with_victim(4, 8, Redundancy::None, 2);
+    let path2 = tmp("none-dead");
+    let f2 = b2.open(&path2, OpenOptions::rw_create()).unwrap();
+    f2.write_at(0, &[2u8; 64]).unwrap();
+    plan.inject_kill(ErrorClass::Io);
+    let mut back = [0u8; 64];
+    assert_eq!(f2.read_at(0, &mut back).unwrap_err().class, ErrorClass::Io);
+    let _ = b.delete(&path);
+    let _ = b2.delete(&path2);
+}
+
+#[test]
+fn replica3_tolerates_two_dead_servers() {
+    let plan_a = FaultPlan::new(vec![]);
+    let plan_b = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(FaultBackend::new(LocalBackend::instant(), plan_a.clone())),
+        Arc::new(LocalBackend::instant()),
+        Arc::new(FaultBackend::new(LocalBackend::instant(), plan_b.clone())),
+        Arc::new(LocalBackend::instant()),
+    ];
+    let b = StripedBackend::with_redundancy(children, 8, Redundancy::Replica(3)).unwrap();
+    let path = tmp("rep3");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    let data: Vec<u8> = (0..160u8).collect();
+    f.write_at(0, &data).unwrap();
+    plan_a.inject_kill(ErrorClass::Io);
+    plan_b.inject_kill(ErrorClass::Io);
+    let mut back = vec![0u8; 160];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), 160);
+    assert_eq!(back, data);
+    assert_all_degraded(&f.take_advisories());
+    b.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// File surface: two-phase collectives over a noncontiguous view
+// ----------------------------------------------------------------------
+
+/// Interleaved per-rank vector view (the two-phase sweet spot): rank r
+/// owns `chunk`-int cells at stride `ranks*chunk`.
+fn set_interleaved_view(f: &File<'_>, ranks: usize, rank: usize, chunk: usize) {
+    let cell = Datatype::vector(1, chunk, chunk as i64, &Datatype::INT).unwrap();
+    let ft = Datatype::resized(&cell, 0, (ranks * chunk * 4) as i64).unwrap();
+    f.set_view((rank * chunk * 4) as i64, &Datatype::INT, &ft, "native", &Info::null())
+        .unwrap();
+}
+
+/// The acceptance scenario: over 4 child backends, kill any single one
+/// and a collective write + read of a noncontiguous view still
+/// round-trips byte-for-byte, surfacing Degraded advisories instead of
+/// an error.
+fn collective_roundtrip_with_dead_server(redundancy: Redundancy, label: &str) {
+    let ranks = 4usize;
+    let chunk = 16usize; // ints per cell → 64 B pieces over 8 B units
+    let k = 256usize; // ints per rank
+    for victim in 0..4 {
+        let (b, plan) = backend_with_victim(4, 8, redundancy, victim);
+        let backend: Arc<dyn Backend> = Arc::new(b);
+        let path = tmp(&format!("coll-{label}-{victim}"));
+        let advisory_counts = threads::run(ranks, |c| {
+            let f = File::open_with_backend(
+                c,
+                &path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                backend.clone(),
+            )
+            .unwrap();
+            let r = c.rank();
+            set_interleaved_view(&f, c.size(), r, chunk);
+            let mine: Vec<i32> = (0..k).map(|i| (r * k + i) as i32).collect();
+            f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            // Kill the victim once, after every rank finished writing.
+            c.barrier();
+            if r == 0 {
+                plan.inject_kill(ErrorClass::Io);
+            }
+            c.barrier();
+            let mut back = vec![0i32; k];
+            f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+            assert_eq!(back, mine, "rank {r} victim {victim} ({label})");
+            let advisories = f.take_advisories();
+            for a in &advisories {
+                assert_eq!(a.class, ErrorClass::Degraded, "rank {r}: {a}");
+            }
+            f.close().unwrap();
+            advisories.len()
+        });
+        assert!(
+            advisory_counts.iter().sum::<usize>() > 0,
+            "victim {victim} ({label}): some aggregator must report Degraded"
+        );
+        File::delete(&path, &Info::null()).ok();
+        let _ = backend.delete(&path);
+        let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    }
+}
+
+#[test]
+fn collective_view_roundtrip_with_dead_server_parity() {
+    collective_roundtrip_with_dead_server(Redundancy::Parity, "parity");
+}
+
+#[test]
+fn collective_view_roundtrip_with_dead_server_replica() {
+    collective_roundtrip_with_dead_server(Redundancy::Replica(2), "replica");
+}
+
+#[test]
+fn collective_write_with_server_already_dead_roundtrips() {
+    // The write side of the acceptance criterion: the server dies
+    // *before* the collective write; the data must still round-trip
+    // (replicas/parity carry the dead server's intended bytes).
+    for (redundancy, label) in
+        [(Redundancy::Parity, "parity"), (Redundancy::Replica(2), "replica")]
+    {
+        let ranks = 4usize;
+        let chunk = 16usize;
+        let k = 128usize;
+        let victim = 2usize;
+        let (b, plan) = backend_with_victim(4, 8, redundancy, victim);
+        plan.inject_kill(ErrorClass::Io);
+        let backend: Arc<dyn Backend> = Arc::new(b);
+        let path = tmp(&format!("collw-{label}"));
+        let advisory_counts = threads::run(ranks, |c| {
+            let f = File::open_with_backend(
+                c,
+                &path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                backend.clone(),
+            )
+            .unwrap();
+            let r = c.rank();
+            set_interleaved_view(&f, c.size(), r, chunk);
+            let mine: Vec<i32> = (0..k).map(|i| (7 * r * k + i) as i32).collect();
+            f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            c.barrier();
+            let mut back = vec![0i32; k];
+            f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+            assert_eq!(back, mine, "rank {r} ({label})");
+            let advisories = f.take_advisories();
+            for a in &advisories {
+                assert_eq!(a.class, ErrorClass::Degraded, "rank {r}: {a}");
+            }
+            f.close().unwrap();
+            advisories.len()
+        });
+        assert!(
+            advisory_counts.iter().sum::<usize>() > 0,
+            "({label}) some aggregator must report Degraded"
+        );
+        let _ = backend.delete(&path);
+        let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    }
+}
+
+#[test]
+fn server_dying_mid_collective_read_degrades() {
+    // The victim answers its first vectored read, then dies — some
+    // aggregators see the failure mid-collective and must reconstruct.
+    let ranks = 4usize;
+    let chunk = 16usize;
+    let k = 512usize; // large enough that every aggregator touches every server
+    let (b, plan) = backend_with_victim(4, 8, Redundancy::Parity, 1);
+    let backend: Arc<dyn Backend> = Arc::new(b);
+    let path = tmp("midcoll");
+    let advisory_counts = threads::run(ranks, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        let r = c.rank();
+        set_interleaved_view(&f, c.size(), r, chunk);
+        let mine: Vec<i32> = (0..k).map(|i| (r * k + i) as i32).collect();
+        f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+        c.barrier();
+        if r == 0 {
+            // Let exactly one more vectored read through, then fail all.
+            let next = plan.count(FaultOp::ReadRuns);
+            plan.inject(vec![FaultRule::from_nth(FaultOp::ReadRuns, next + 1, ErrorClass::Io)]);
+        }
+        c.barrier();
+        let mut back = vec![0i32; k];
+        f.read_at_all(0, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+        assert_eq!(back, mine, "rank {r}");
+        let advisories = f.take_advisories();
+        f.close().unwrap();
+        advisories.len()
+    });
+    assert!(
+        advisory_counts.iter().sum::<usize>() > 0,
+        "a mid-collective death must degrade at least one aggregator"
+    );
+    let _ = backend.delete(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+// ----------------------------------------------------------------------
+// Sidecar fault path (satellite): failed writes must not publish
+// ----------------------------------------------------------------------
+
+#[test]
+fn failed_write_does_not_publish_stale_size() {
+    // One-shot fault on the vectored write path: the dispatch fails
+    // after some children may already have written, and the logical
+    // size must not include the failed extension.
+    let (b, plan) = backend_with_victim(4, 8, Redundancy::None, 1);
+    let path = tmp("stale-size");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    f.write_at(0, &[1u8; 10]).unwrap();
+    assert_eq!(f.size().unwrap(), 10);
+    plan.inject(vec![FaultRule::once(
+        FaultOp::WriteRuns,
+        plan.count(FaultOp::WriteRuns),
+        ErrorClass::NoSpace,
+    )]);
+    let err = f.write_at(0, &[2u8; 200]).unwrap_err();
+    assert_eq!(err.class, ErrorClass::NoSpace);
+    assert_eq!(f.size().unwrap(), 10, "failed dispatch must not move the EOF");
+    // The handle stays usable and the retry publishes normally.
+    assert_eq!(f.write_at(0, &[2u8; 200]).unwrap(), 200);
+    assert_eq!(f.size().unwrap(), 200);
+    b.delete(&path).unwrap();
+}

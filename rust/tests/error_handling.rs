@@ -20,11 +20,7 @@ fn faulty_backend(rules: Vec<FaultRule>) -> Arc<FaultBackend<LocalBackend>> {
 #[test]
 fn write_fault_surfaces_class_and_handle_survives() {
     let path = tmp("writefault");
-    let backend = faulty_backend(vec![FaultRule {
-        op: FaultOp::Write,
-        nth: 1,
-        class: ErrorClass::NoSpace,
-    }]);
+    let backend = faulty_backend(vec![FaultRule::once(FaultOp::Write, 1, ErrorClass::NoSpace)]);
     threads::run(1, |c| {
         let f = File::open_with_backend(
             c,
@@ -53,11 +49,7 @@ fn write_fault_surfaces_class_and_handle_survives() {
 #[test]
 fn read_fault_in_nonblocking_op_propagates_through_request() {
     let path = tmp("ireadfault");
-    let backend = faulty_backend(vec![FaultRule {
-        op: FaultOp::Read,
-        nth: 0,
-        class: ErrorClass::Io,
-    }]);
+    let backend = faulty_backend(vec![FaultRule::once(FaultOp::Read, 0, ErrorClass::Io)]);
     threads::run(1, |c| {
         let f = File::open_with_backend(
             c,
@@ -85,11 +77,7 @@ fn read_fault_in_nonblocking_op_propagates_through_request() {
 #[test]
 fn sync_fault_is_reported() {
     let path = tmp("syncfault");
-    let backend = faulty_backend(vec![FaultRule {
-        op: FaultOp::Sync,
-        nth: 0,
-        class: ErrorClass::Quota,
-    }]);
+    let backend = faulty_backend(vec![FaultRule::once(FaultOp::Sync, 0, ErrorClass::Quota)]);
     threads::run(1, |c| {
         let f = File::open_with_backend(
             c,
@@ -112,11 +100,7 @@ fn fault_during_split_collective_write() {
     let path = tmp("splitfault");
     // Fail the second storage write: first collective write succeeds,
     // second one's END reports the error.
-    let backend = faulty_backend(vec![FaultRule {
-        op: FaultOp::Write,
-        nth: 1,
-        class: ErrorClass::NoSpace,
-    }]);
+    let backend = faulty_backend(vec![FaultRule::once(FaultOp::Write, 1, ErrorClass::NoSpace)]);
     threads::run(1, |c| {
         let f = File::open_with_backend(
             c,

@@ -135,9 +135,12 @@ fn unsorted_vectored_read_over_sparse_objects_keeps_all_data() {
 
 #[test]
 fn one_server_fault_surfaces_error_class() {
+    // The striped fan-out reaches each child through the vectored
+    // write_runs/read_runs entry points, which carry their own fault
+    // ops since PR 3.
     let plan = FaultPlan::new(vec![
-        FaultRule { op: FaultOp::Write, nth: 0, class: ErrorClass::NoSpace },
-        FaultRule { op: FaultOp::Read, nth: 0, class: ErrorClass::Io },
+        FaultRule::once(FaultOp::WriteRuns, 0, ErrorClass::NoSpace),
+        FaultRule::once(FaultOp::ReadRuns, 0, ErrorClass::Io),
     ]);
     let children: Vec<Arc<dyn Backend>> = vec![
         Arc::new(LocalBackend::instant()),
@@ -205,11 +208,7 @@ fn mapped_region_readonly_rejects_and_rw_persists() {
 
 #[test]
 fn mapped_flush_retries_after_transient_fault() {
-    let plan = FaultPlan::new(vec![FaultRule {
-        op: FaultOp::Write,
-        nth: 0,
-        class: ErrorClass::NoSpace,
-    }]);
+    let plan = FaultPlan::new(vec![FaultRule::once(FaultOp::WriteRuns, 0, ErrorClass::NoSpace)]);
     let children: Vec<Arc<dyn Backend>> = vec![
         Arc::new(FaultBackend::new(LocalBackend::instant(), plan)),
         Arc::new(LocalBackend::instant()),
