@@ -1,161 +1,20 @@
 //! Data access with explicit offsets and individual file pointers
 //! (§7.2.4.2 / §7.2.4.3), blocking and nonblocking.
 //!
-//! All routines funnel through the unified pipeline:
-//!
-//! 1. flatten the *memory* side `(buf, bufOffset, count, datatype)` into a
-//!    packed payload ([`pack_payload`]; zero-copy when the memory type is
-//!    contiguous and no representation conversion applies);
-//! 2. compile the *file* side into an [`IoPlan`] (view-flattened absolute
-//!    byte runs + payload map + datarep + atomicity);
-//! 3. hand the plan to the [`IoScheduler`], which executes it
-//!    synchronously or on the request engine through the selected access
-//!    strategy (taking the whole-file lock when atomic mode is on,
-//!    §7.2.6.1, and converting the payload at the datarep edge).
-//!
-//! The other access families — shared pointers, collectives,
-//! split/nonblocking collectives — compile into the same [`IoPlan`]
-//! representation; this module owns only the memory-side helpers and the
-//! explicit-offset/individual-pointer API surface.
+//! Every routine here is a thin wrapper: it names its cell of the
+//! data-access matrix as an [`AccessOp`] descriptor and delegates to the
+//! core entry points [`File::submit_read`] / [`File::submit_write`] /
+//! [`File::submit_read_owned`] in [`crate::io::op`], which own argument
+//! validation, pointer bookkeeping, payload pack/unpack, plan
+//! compilation, and scheduler dispatch. The pointer-manipulation
+//! routines (`seek`, `get_position`, `get_byte_offset`) also live here.
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::Status;
-use crate::io::engine::{self, Request};
-use crate::io::errors::{err_arg, err_unsupported_op, Result};
-use crate::io::file::{amode, seek, File};
-use crate::io::plan::IoPlan;
-use crate::io::schedule::IoScheduler;
-use crate::io::view::FileView;
-use crate::storage::StorageFile;
-use crate::strategy::AccessStrategy;
-use std::sync::Arc;
-
-/// Everything a transfer needs, snapshotted from the file handle so the
-/// nonblocking engine can run it without borrowing the `File`.
-pub(crate) struct TransferCtx {
-    pub storage: Arc<dyn StorageFile>,
-    pub strategy: Arc<dyn AccessStrategy>,
-    pub view: Arc<FileView>,
-    pub atomic: bool,
-}
-
-impl File<'_> {
-    pub(crate) fn transfer_ctx(&self) -> TransferCtx {
-        TransferCtx {
-            storage: self.storage.clone(),
-            strategy: self.strategy_snapshot(),
-            view: self.view_snapshot(),
-            atomic: self.get_atomicity(),
-        }
-    }
-}
-
-/// Validate the memory-side arguments and return the packed payload for a
-/// write (borrowed when possible).
-pub(crate) fn pack_payload<'b>(
-    buf: &'b (impl IoBuf + ?Sized),
-    buf_offset: usize,
-    count: usize,
-    datatype: &Datatype,
-    view: &FileView,
-) -> Result<std::borrow::Cow<'b, [u8]>> {
-    let bytes = buf.as_bytes();
-    let psz = buf.prim().size();
-    let base = buf_offset * psz;
-    let payload_len = count * datatype.size();
-    check_mem_args(buf, buf_offset, count, datatype)?;
-    if datatype.is_contiguous() && view.datarep.is_identity() {
-        return Ok(std::borrow::Cow::Borrowed(&bytes[base..base + payload_len]));
-    }
-    // Gather the memory runs into a packed buffer.
-    let mut payload = Vec::with_capacity(payload_len);
-    for run in datatype.byte_runs(count) {
-        let s = base + run.offset as usize;
-        payload.extend_from_slice(&bytes[s..s + run.len()]);
-    }
-    // Representation conversion (memory → file).
-    if !view.datarep.is_identity() {
-        let elems = view.payload_elems(payload.len());
-        view.datarep.encode(&mut payload, &elems);
-    }
-    Ok(std::borrow::Cow::Owned(payload))
-}
-
-/// Scatter a packed payload (already datarep-decoded) into the memory runs
-/// of `(buf, buf_offset, count, datatype)`. `got` bytes are valid.
-pub(crate) fn unpack_payload(
-    buf: &mut (impl IoBufMut + ?Sized),
-    buf_offset: usize,
-    count: usize,
-    datatype: &Datatype,
-    payload: &[u8],
-    got: usize,
-) -> Result<()> {
-    check_mem_args(buf, buf_offset, count, datatype)?;
-    let psz = buf.prim().size();
-    let base = buf_offset * psz;
-    let bytes = buf.as_bytes_mut();
-    if datatype.is_contiguous() {
-        let n = (count * datatype.size()).min(got);
-        bytes[base..base + n].copy_from_slice(&payload[..n]);
-        return Ok(());
-    }
-    let mut pos = 0;
-    for run in datatype.byte_runs(count) {
-        if pos >= got {
-            break;
-        }
-        let n = run.len().min(got - pos);
-        let d = base + run.offset as usize;
-        bytes[d..d + n].copy_from_slice(&payload[pos..pos + n]);
-        pos += n;
-    }
-    Ok(())
-}
-
-pub(crate) fn check_mem_args(
-    buf: &(impl IoBuf + ?Sized),
-    buf_offset: usize,
-    count: usize,
-    datatype: &Datatype,
-) -> Result<()> {
-    let psz = buf.prim().size();
-    if datatype.size() % psz != 0 || datatype.base_prim().size() != psz {
-        return Err(err_arg(format!(
-            "datatype {datatype} does not match buffer element size {psz}"
-        )));
-    }
-    let need_bytes = if count == 0 {
-        0
-    } else {
-        (count as i64 - 1) * datatype.extent() + datatype.true_lb() + datatype.true_extent()
-    };
-    let have = buf.elems().saturating_sub(buf_offset) * psz;
-    if need_bytes > have as i64 {
-        return Err(err_arg(format!(
-            "buffer too small: need {need_bytes} bytes at element offset {buf_offset}, have {have}"
-        )));
-    }
-    Ok(())
-}
-
-/// Blocking write of a packed payload at an etype offset: compile an
-/// [`IoPlan`] and execute it synchronously.
-pub(crate) fn write_payload(ctx: &TransferCtx, etype_off: i64, payload: &[u8]) -> Result<Status> {
-    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
-    IoScheduler::write(ctx, &plan, payload)
-}
-
-/// Blocking read into a packed payload buffer at an etype offset; returns
-/// bytes read (short at EOF) after datarep decode.
-pub(crate) fn read_payload(
-    ctx: &TransferCtx,
-    etype_off: i64,
-    payload: &mut [u8],
-) -> Result<usize> {
-    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
-    IoScheduler::read(ctx, &plan, payload)
-}
+use crate::io::engine::Request;
+use crate::io::errors::{err_arg, Result};
+use crate::io::file::{seek, File};
+use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism};
 
 impl File<'_> {
     // ------------------------------------------------------------------
@@ -172,23 +31,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.check_open()?;
-        self.check_readable()?;
-        let ctx = self.transfer_ctx();
-        check_mem_args(buf, buf_offset, count, datatype)?;
-        let payload_len = count * datatype.size();
-        // Fast path: contiguous memory type + identity representation →
-        // the storage strategy fills the user buffer directly.
-        if datatype.is_contiguous() && ctx.view.datarep.is_identity() {
-            let base = buf_offset * buf.prim().size();
-            let got =
-                read_payload(&ctx, offset, &mut buf.as_bytes_mut()[base..base + payload_len])?;
-            return Ok(Status::of_bytes(got));
-        }
-        let mut payload = vec![0u8; payload_len];
-        let got = read_payload(&ctx, offset, &mut payload)?;
-        unpack_payload(buf, buf_offset, count, datatype, &payload, got)?;
-        Ok(Status::of_bytes(got))
+        let op = AccessOp::read(
+            Positioning::Explicit(offset),
+            Coordination::Independent,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     /// `MPI_FILE_WRITE_AT`: blocking noncollective write at an explicit
@@ -201,14 +52,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.check_open()?;
-        self.check_writable()?;
-        if self.amode & amode::APPEND != 0 {
-            return Err(err_unsupported_op("explicit-offset write in MODE_APPEND"));
-        }
-        let ctx = self.transfer_ctx();
-        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?;
-        write_payload(&ctx, offset, &payload)
+        let op = AccessOp::write(
+            Positioning::Explicit(offset),
+            Coordination::Independent,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.status()
     }
 
     // ------------------------------------------------------------------
@@ -229,23 +81,15 @@ impl File<'_> {
         T: Send + 'static,
         [T]: IoBufMut,
     {
-        self.check_open()?;
-        self.check_readable()?;
-        let ctx = self.transfer_ctx();
-        check_mem_args(buf.as_slice(), buf_offset, count, datatype)?;
-        // Compile on the caller (argument errors surface here); execute
-        // on the engine.
-        let plan = IoPlan::compile(&ctx.view, ctx.atomic, offset, count * datatype.size())?;
-        let dt = datatype.clone();
-        Ok(engine::submit(move || {
-            let mut buf = buf;
-            let mut payload = vec![0u8; count * dt.size()];
-            let res = IoScheduler::read(&ctx, &plan, &mut payload).and_then(|got| {
-                unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)?;
-                Ok(Status::of_bytes(got))
-            });
-            (res, buf)
-        }))
+        let op = AccessOp::read(
+            Positioning::Explicit(offset),
+            Coordination::Independent,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read_owned(&op, buf)
     }
 
     /// `MPI_FILE_IWRITE_AT`: nonblocking write at an explicit offset.
@@ -258,12 +102,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Request<()>> {
-        self.check_open()?;
-        self.check_writable()?;
-        let ctx = self.transfer_ctx();
-        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        let plan = IoPlan::compile(&ctx.view, ctx.atomic, offset, payload.len())?;
-        Ok(IoScheduler::write_async(ctx, plan, payload))
+        let op = AccessOp::write(
+            Positioning::Explicit(offset),
+            Coordination::Independent,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.request()
     }
 
     // ------------------------------------------------------------------
@@ -279,11 +126,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        let off = *self.indiv_ptr.lock().unwrap();
-        let st = self.read_at(off, buf, buf_offset, count, datatype)?;
-        let view = self.view_snapshot();
-        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
-        Ok(st)
+        let op = AccessOp::read(
+            Positioning::Individual,
+            Coordination::Independent,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     /// `MPI_FILE_WRITE`: blocking noncollective write at the individual
@@ -295,11 +146,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        let off = *self.indiv_ptr.lock().unwrap();
-        let st = self.write_at(off, buf, buf_offset, count, datatype)?;
-        let view = self.view_snapshot();
-        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
-        Ok(st)
+        let op = AccessOp::write(
+            Positioning::Individual,
+            Coordination::Independent,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.status()
     }
 
     /// `MPI_FILE_IREAD`: nonblocking read at the individual pointer. The
@@ -316,12 +171,15 @@ impl File<'_> {
         T: Send + 'static,
         [T]: IoBufMut,
     {
-        let view = self.view_snapshot();
-        let mut ptr = self.indiv_ptr.lock().unwrap();
-        let off = *ptr;
-        let req = self.iread_at(off, buf, buf_offset, count, datatype)?;
-        *ptr = off + view.bytes_to_etypes(count * datatype.size());
-        Ok(req)
+        let op = AccessOp::read(
+            Positioning::Individual,
+            Coordination::Independent,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read_owned(&op, buf)
     }
 
     /// `MPI_FILE_IWRITE`: nonblocking write at the individual pointer.
@@ -332,12 +190,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Request<()>> {
-        let view = self.view_snapshot();
-        let mut ptr = self.indiv_ptr.lock().unwrap();
-        let off = *ptr;
-        let req = self.iwrite_at(off, buf, buf_offset, count, datatype)?;
-        *ptr = off + view.bytes_to_etypes(count * datatype.size());
-        Ok(req)
+        let op = AccessOp::write(
+            Positioning::Individual,
+            Coordination::Independent,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.request()
     }
 
     /// `MPI_FILE_SEEK`: update the individual pointer (etype units).
@@ -403,6 +264,7 @@ mod tests {
     use crate::comm::threads;
     use crate::comm::Comm;
     use crate::io::errors::ErrorClass;
+    use crate::io::file::amode;
     use crate::io::hints::Info;
 
     fn tmp(name: &str) -> String {

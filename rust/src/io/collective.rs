@@ -16,18 +16,20 @@
 //!    domain's aggregator.
 //! 4. **I/O phase** (storage): aggregators merge the pieces into large,
 //!    mostly-contiguous transfers (data sieving on reads) and hit the
-//!    file once, instead of N ranks issuing interleaved small I/O. The
-//!    phase is executed by the [`IoScheduler`] — synchronously for the
-//!    blocking `*_ALL` routines, on the request engine for the split and
-//!    nonblocking collectives.
+//!    file once, instead of N ranks issuing interleaved small I/O.
 //!
-//! The I/O phase touches only storage, which is what lets the split
-//! collectives ([`crate::io::split`]) and `iwrite_all` run it on the
-//! request engine while the application computes (§7.2.9.1 double
-//! buffering). Collective *reads* must finish their reply exchange on the
-//! calling thread (the communicator cannot leave it), so `iread_all`
-//! completes the aggregation in the call and defers only the local
-//! scatter/decode to the engine — the same contract as the split reads.
+//! The *execution* of both phases lives in the [`AccessOp`] core
+//! ([`crate::io::op`]) and the [`IoScheduler`](crate::io::schedule) —
+//! this module owns the pure machinery (file-domain assignment,
+//! aggregator placement, exchange message codecs) and the thin public
+//! wrappers that name their matrix cell. The I/O phase touches only
+//! storage, which is what lets the split collectives
+//! ([`crate::io::split`]) and `iwrite_all` run it on the request engine
+//! while the application computes (§7.2.9.1 double buffering). Collective
+//! *reads* must finish their reply exchange on the calling thread (the
+//! communicator cannot leave it), so `iread_all` completes the
+//! aggregation in the call and defers only the local scatter/decode to
+//! the engine — the same contract as the split reads.
 //!
 //! ## Stripe-aligned file domains
 //!
@@ -52,19 +54,16 @@
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::{Comm, ReduceOp, Status};
-use crate::io::access::{
-    check_mem_args, pack_payload, read_payload, unpack_payload, write_payload, TransferCtx,
-};
-use crate::io::engine::{self, Request};
+use crate::io::engine::Request;
 use crate::io::errors::Result;
 use crate::io::file::File;
 use crate::io::hints::keys;
+use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism, TransferCtx};
 use crate::io::plan::IoPlan;
-use crate::io::schedule::IoScheduler;
 use crate::storage::layout::{Redundancy, StripeMap};
 
 /// Serialize pieces + payload bytes into one exchange message.
-fn encode_write_msg(pieces: &[(u64, usize, usize)], payload: &[u8]) -> Vec<u8> {
+pub(crate) fn encode_write_msg(pieces: &[(u64, usize, usize)], payload: &[u8]) -> Vec<u8> {
     let total: usize = pieces.iter().map(|p| p.1).sum();
     let mut msg = Vec::with_capacity(4 + pieces.len() * 16 + total);
     msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
@@ -78,7 +77,8 @@ fn encode_write_msg(pieces: &[(u64, usize, usize)], payload: &[u8]) -> Vec<u8> {
     msg
 }
 
-fn decode_runs(msg: &[u8]) -> (Vec<(u64, usize)>, usize) {
+/// Decode an exchange message's run list; returns `(runs, payload_pos)`.
+pub(crate) fn decode_runs(msg: &[u8]) -> (Vec<(u64, usize)>, usize) {
     let n = u32::from_le_bytes(msg[..4].try_into().unwrap()) as usize;
     let mut runs = Vec::with_capacity(n);
     let mut pos = 4;
@@ -151,7 +151,7 @@ impl FileDomains {
 }
 
 /// Work an aggregator owes the I/O phase of a collective write; executed
-/// by [`IoScheduler::write_phase`] / [`IoScheduler::write_phase_async`].
+/// by `IoScheduler::write_phase` / `IoScheduler::write_phase_async`.
 pub(crate) struct WriteIoWork {
     /// Decoded pieces flattened to (off, bytes) writes, sorted by offset
     /// with rank order preserved on ties (deterministic overwrite).
@@ -241,7 +241,7 @@ pub(crate) fn aggregator_ranks(cb: &CbParams, n: usize) -> Vec<usize> {
 /// piece lists (`result[rank]` = sorted pieces destined for `rank`; a
 /// rank pinned to several domains receives them concatenated). `None`
 /// when the collective's global byte range is empty.
-fn route_to_aggregators(
+pub(crate) fn route_to_aggregators(
     comm: &dyn Comm,
     ctx: &TransferCtx,
     cb: &CbParams,
@@ -269,146 +269,6 @@ fn route_to_aggregators(
     Some(per_rank)
 }
 
-/// Outcome of the exchange phase of a collective write: the I/O work this
-/// rank must perform as an aggregator (empty for non-aggregators).
-pub(crate) fn exchange_write(
-    comm: &dyn Comm,
-    ctx: &TransferCtx,
-    cb: &CbParams,
-    etype_off: i64,
-    payload: &[u8],
-) -> Result<(WriteIoWork, usize)> {
-    let n = comm.size();
-    if !cb.enabled || n == 1 {
-        // Degenerate: independent write, collective completion only.
-        write_payload(ctx, etype_off, payload)?;
-        return Ok((WriteIoWork::empty(), payload.len()));
-    }
-    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
-    let per_rank = match route_to_aggregators(comm, ctx, cb, &plan) {
-        Some(p) => p,
-        None => return Ok((WriteIoWork::empty(), payload.len())),
-    };
-    let msgs: Vec<Vec<u8>> =
-        per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
-    let inbound = comm.alltoall(&msgs);
-    // Decode in rank order (deterministic overlap resolution).
-    let mut writes = Vec::new();
-    for msg in &inbound {
-        if msg.len() < 4 {
-            continue;
-        }
-        let (rs, mut pos) = decode_runs(msg);
-        for (off, len) in rs {
-            writes.push((off, msg[pos..pos + len].to_vec()));
-            pos += len;
-        }
-    }
-    writes.sort_by_key(|&(off, _)| off);
-    Ok((
-        WriteIoWork { writes, cb_buffer: cb.buffer.unwrap_or(16 << 20).max(4096) },
-        payload.len(),
-    ))
-}
-
-/// Full collective read: exchange requests, aggregator sieved reads,
-/// reply exchange, local reassembly. Returns bytes read into `payload`.
-pub(crate) fn collective_read(
-    comm: &dyn Comm,
-    ctx: &TransferCtx,
-    cb: &CbParams,
-    etype_off: i64,
-    payload: &mut [u8],
-) -> Result<usize> {
-    let n = comm.size();
-    if !cb.enabled || n == 1 {
-        let got = read_payload(ctx, etype_off, payload)?;
-        if cb.enabled {
-            comm.barrier();
-        }
-        return Ok(got);
-    }
-    let plan = IoPlan::compile(&ctx.view, ctx.atomic, etype_off, payload.len())?;
-    // Request phase: ship (off,len) lists to the owning aggregator ranks.
-    let my_pieces = match route_to_aggregators(comm, ctx, cb, &plan) {
-        Some(p) => p,
-        None => return Ok(0),
-    };
-    let mut reqs = Vec::with_capacity(n);
-    for pieces in &my_pieces {
-        let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
-        msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
-        for &(off, len, _) in pieces.iter() {
-            msg.extend_from_slice(&off.to_le_bytes());
-            msg.extend_from_slice(&(len as u64).to_le_bytes());
-        }
-        reqs.push(msg);
-    }
-    let inbound = comm.alltoall(&reqs);
-
-    // Aggregator I/O phase: merge all requested intervals, sieved read
-    // through the scheduler.
-    let eof = ctx.storage.size()?;
-    let mut per_src_runs: Vec<Vec<(u64, usize)>> = Vec::with_capacity(n);
-    let mut intervals: Vec<(u64, u64)> = Vec::new();
-    for msg in &inbound {
-        let (rs, _) = decode_runs(msg);
-        for &(off, len) in &rs {
-            intervals.push((off, off + len as u64));
-        }
-        per_src_runs.push(rs);
-    }
-    let merged = merge_intervals(&mut intervals);
-    let merged_runs: Vec<(u64, usize)> =
-        merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
-    let total: usize = merged_runs.iter().map(|r| r.1).sum();
-    let mut agg_buf = vec![0u8; total];
-    let stage = cb.buffer.unwrap_or(16 << 20).max(4096);
-    IoScheduler::read_phase(ctx, &merged_runs, stage, &mut agg_buf)?;
-    // Reply phase: slice the aggregated buffer per source request.
-    let locate = |off: u64| -> Option<usize> {
-        // Position of `off` within agg_buf.
-        let mut base = 0usize;
-        for &(s, e) in &merged {
-            if off >= s && off < e {
-                return Some(base + (off - s) as usize);
-            }
-            base += (e - s) as usize;
-        }
-        None
-    };
-    let mut replies = vec![Vec::new(); n];
-    for (src, rs) in per_src_runs.iter().enumerate() {
-        let bytes: usize = rs.iter().map(|r| r.1).sum();
-        let mut reply = Vec::with_capacity(bytes);
-        for &(off, len) in rs {
-            let p = locate(off).expect("requested run must be inside merged intervals");
-            reply.extend_from_slice(&agg_buf[p..p + len]);
-        }
-        replies[src] = reply;
-    }
-    let mut answers = comm.alltoall(&replies);
-
-    // Reassemble my payload from the per-aggregator answers; compute the
-    // EOF-clamped byte count.
-    let mut got = 0usize;
-    for (a, pieces) in my_pieces.iter().enumerate() {
-        let ans = std::mem::take(&mut answers[a]);
-        let mut cursor = 0usize;
-        for &(off, len, pos) in pieces {
-            payload[pos..pos + len].copy_from_slice(&ans[cursor..cursor + len]);
-            cursor += len;
-            let visible = (eof.saturating_sub(off) as usize).min(len);
-            got += visible;
-        }
-    }
-    // Datarep decode on the assembled payload.
-    if plan.needs_convert() {
-        plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
-    }
-    Ok(got)
-}
-
 /// Split `[lo, hi)` into `n` near-even contiguous domains.
 fn split_domains(lo: u64, hi: u64, n: usize) -> Vec<(u64, u64)> {
     let total = hi - lo;
@@ -425,7 +285,7 @@ fn split_domains(lo: u64, hi: u64, n: usize) -> Vec<(u64, u64)> {
 }
 
 /// Sort + merge overlapping/adjacent intervals.
-fn merge_intervals(iv: &mut Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+pub(crate) fn merge_intervals(iv: &mut Vec<(u64, u64)>) -> Vec<(u64, u64)> {
     iv.sort_unstable();
     let mut out: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
     for &(s, e) in iv.iter() {
@@ -463,15 +323,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.check_open()?;
-        self.check_writable()?;
-        let ctx = self.transfer_ctx();
-        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?;
-        let cb = self.cb_params();
-        let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
-        IoScheduler::write_phase(&ctx, work)?;
-        self.comm.barrier();
-        Ok(Status::of_bytes(bytes))
+        let op = AccessOp::write(
+            Positioning::Explicit(offset),
+            Coordination::Collective,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.status()
     }
 
     /// `MPI_FILE_READ_AT_ALL`: collective read at explicit offsets.
@@ -483,14 +343,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.check_open()?;
-        self.check_readable()?;
-        let ctx = self.transfer_ctx();
-        let mut payload = vec![0u8; count * datatype.size()];
-        let cb = self.cb_params();
-        let got = collective_read(self.comm, &ctx, &cb, offset, &mut payload)?;
-        unpack_payload(buf, buf_offset, count, datatype, &payload, got)?;
-        Ok(Status::of_bytes(got))
+        let op = AccessOp::read(
+            Positioning::Explicit(offset),
+            Coordination::Collective,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     /// `MPI_FILE_WRITE_ALL`: collective write at the individual pointer.
@@ -501,11 +362,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        let off = *self.indiv_ptr.lock().unwrap();
-        let st = self.write_at_all(off, buf, buf_offset, count, datatype)?;
-        let view = self.view_snapshot();
-        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
-        Ok(st)
+        let op = AccessOp::write(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.status()
     }
 
     /// `MPI_FILE_READ_ALL`: collective read at the individual pointer.
@@ -516,11 +381,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        let off = *self.indiv_ptr.lock().unwrap();
-        let st = self.read_at_all(off, buf, buf_offset, count, datatype)?;
-        let view = self.view_snapshot();
-        *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(st.bytes);
-        Ok(st)
+        let op = AccessOp::read(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     // ------------------------------------------------------------------
@@ -541,17 +410,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Request<()>> {
-        self.check_open()?;
-        self.check_writable()?;
-        let cb = self.cb_params();
-        if !cb.enabled || self.comm.size() == 1 {
-            // No aggregation: the whole operation runs on the engine.
-            return self.iwrite_at(offset, buf, buf_offset, count, datatype);
-        }
-        let ctx = self.transfer_ctx();
-        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
-        Ok(IoScheduler::write_phase_async(ctx, work, bytes))
+        let op = AccessOp::write(
+            Positioning::Explicit(offset),
+            Coordination::Collective,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.request()
     }
 
     /// `MPI_FILE_IREAD_AT_ALL` (MPI-3.1): nonblocking collective read at
@@ -571,23 +438,15 @@ impl File<'_> {
         T: Send + 'static,
         [T]: IoBufMut,
     {
-        self.check_open()?;
-        self.check_readable()?;
-        let cb = self.cb_params();
-        if !cb.enabled || self.comm.size() == 1 {
-            return self.iread_at(offset, buf, buf_offset, count, datatype);
-        }
-        let ctx = self.transfer_ctx();
-        check_mem_args(buf.as_slice(), buf_offset, count, datatype)?;
-        let mut payload = vec![0u8; count * datatype.size()];
-        let got = collective_read(self.comm, &ctx, &cb, offset, &mut payload)?;
-        let dt = datatype.clone();
-        Ok(engine::submit(move || {
-            let mut buf = buf;
-            let res = unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)
-                .map(|()| Status::of_bytes(got));
-            (res, buf)
-        }))
+        let op = AccessOp::read(
+            Positioning::Explicit(offset),
+            Coordination::Collective,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read_owned(&op, buf)
     }
 
     /// `MPI_FILE_IWRITE_ALL` (MPI-3.1): nonblocking collective write at
@@ -600,16 +459,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Request<()>> {
-        // Advance the pointer and release its lock before entering the
-        // collective (like the split BEGINs): holding it across the
-        // exchange would stall every other thread's pointer op for the
-        // whole collective.
-        let view = self.view_snapshot();
-        let mut ptr = self.indiv_ptr.lock().unwrap();
-        let off = *ptr;
-        *ptr = off + view.bytes_to_etypes(count * datatype.size());
-        drop(ptr);
-        self.iwrite_at_all(off, buf, buf_offset, count, datatype)
+        let op = AccessOp::write(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.request()
     }
 
     /// `MPI_FILE_IREAD_ALL` (MPI-3.1): nonblocking collective read at the
@@ -625,12 +483,15 @@ impl File<'_> {
         T: Send + 'static,
         [T]: IoBufMut,
     {
-        let view = self.view_snapshot();
-        let mut ptr = self.indiv_ptr.lock().unwrap();
-        let off = *ptr;
-        *ptr = off + view.bytes_to_etypes(count * datatype.size());
-        drop(ptr);
-        self.iread_at_all(off, buf, buf_offset, count, datatype)
+        let op = AccessOp::read(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read_owned(&op, buf)
     }
 }
 

@@ -17,6 +17,7 @@ use crate::io::errors::{
     err_amode, err_arg, err_file, err_not_same, err_read_only, Result,
 };
 use crate::io::hints::{keys, Info};
+use crate::io::schedule::PlanCache;
 use crate::io::view::FileView;
 use crate::storage::layout::Redundancy;
 use crate::storage::local::LocalBackend;
@@ -42,10 +43,14 @@ pub mod amode {
     pub const UNIQUE_OPEN: u32 = 0x020;
     /// Fail if the file exists.
     pub const EXCL: u32 = 0x040;
-    /// All writes append (unsupported-operation for data access with
-    /// explicit offsets).
+    /// All writes append. Explicit-offset data access raises
+    /// `MPI_ERR_UNSUPPORTED_OPERATION`
+    /// ([`AccessOp::validate`](crate::io::op::AccessOp::validate)).
     pub const APPEND: u32 = 0x080;
-    /// The file will be accessed sequentially.
+    /// The file will be accessed sequentially: only shared-pointer data
+    /// access is permitted — explicit-offset and individual-pointer
+    /// (mixed-positioning) access raises `MPI_ERR_UNSUPPORTED_OPERATION`
+    /// ([`AccessOp::validate`](crate::io::op::AccessOp::validate)).
     pub const SEQUENTIAL: u32 = 0x100;
 }
 
@@ -83,6 +88,10 @@ pub struct File<'c> {
     /// Sidecar path holding the shared file pointer.
     pub(crate) sfp_path: String,
     pub(crate) split: Mutex<Option<SplitPending>>,
+    /// Compiled-plan cache shared by every access cell (see
+    /// [`crate::io::schedule`]): repeated same-shape accesses reuse the
+    /// compiled `IoPlan` instead of re-flattening the view.
+    pub(crate) plan_cache: PlanCache,
     pub(crate) closed: AtomicBool,
 }
 
@@ -177,20 +186,32 @@ impl<'c> File<'c> {
         };
         // Rank 0 performs the create (and the EXCL check) so EXCL races
         // between ranks of one open cannot trip each other; the rest open
-        // without CREATE after the barrier.
+        // without CREATE after the barrier. The success flag travels in a
+        // named buffer on *both* sides — the broadcast mutates its
+        // argument, so handing it a discarded temporary would throw away
+        // the flag the collective exists to agree on (regression test:
+        // `collective_open_failure_reports_file_error_on_all_ranks`).
         let sfp_path = format!("{filename}.jpio-sfp");
         let storage = if comm.rank() == 0 {
             let st = backend.open(filename, opts);
-            // Initialize the shared-file-pointer sidecar.
-            if st.is_ok() && !std::path::Path::new(&sfp_path).exists() {
-                let _ = std::fs::write(&sfp_path, 0u64.to_le_bytes());
+            // Initialize the shared-file-pointer sidecar. In MODE_APPEND
+            // the shared pointer starts at EOF (§7.2.2.1 "all file
+            // pointers are set to the end of file"); the default view's
+            // etype is BYTE, so EOF in etypes is the byte size.
+            if let Ok(f) = &st {
+                if mode & amode::APPEND != 0 {
+                    let eof = f.size().unwrap_or(0) as i64;
+                    let _ = std::fs::write(&sfp_path, eof.to_le_bytes());
+                } else if !std::path::Path::new(&sfp_path).exists() {
+                    let _ = std::fs::write(&sfp_path, 0u64.to_le_bytes());
+                }
             }
-            let ok = st.is_ok() as i64;
-            comm.bcast(0, &mut ok.to_le_bytes().to_vec());
+            let mut flag = (st.is_ok() as i64).to_le_bytes().to_vec();
+            comm.bcast(0, &mut flag);
             comm.barrier();
             st?
         } else {
-            let mut flag = Vec::new();
+            let mut flag = vec![0u8; 8];
             comm.bcast(0, &mut flag);
             let rank0_ok = i64::from_le_bytes(flag[..8].try_into().unwrap()) == 1;
             comm.barrier();
@@ -205,6 +226,12 @@ impl<'c> File<'c> {
 
         let strategy_name = info.get(keys::ACCESS_STYLE).unwrap_or("view_buffer");
         let strategy: Arc<dyn AccessStrategy> = Arc::from(strategy::by_name(strategy_name)?);
+        // MODE_APPEND: the individual pointer also starts at EOF, so
+        // pointer-positioned writes append instead of overwriting the
+        // head (explicit-offset access is rejected outright by
+        // `AccessOp::validate`).
+        let indiv_init =
+            if mode & amode::APPEND != 0 { storage.size().unwrap_or(0) as i64 } else { 0 };
         Ok(File {
             comm,
             storage,
@@ -213,11 +240,12 @@ impl<'c> File<'c> {
             amode: mode,
             info: Mutex::new(info),
             view: Mutex::new(Arc::new(FileView::default())),
-            indiv_ptr: Mutex::new(0),
+            indiv_ptr: Mutex::new(indiv_init),
             atomic: AtomicBool::new(false),
             strategy: Mutex::new(strategy),
             sfp_path,
             split: Mutex::new(None),
+            plan_cache: PlanCache::new(),
             closed: AtomicBool::new(false),
         })
     }
@@ -393,6 +421,14 @@ impl<'c> File<'c> {
     /// (the aggregator) observes the advisory.
     pub fn take_advisories(&self) -> Vec<crate::io::errors::IoError> {
         self.storage.take_advisories()
+    }
+
+    /// Plan-cache counters `(hits, misses)` (jpio extension): a hit means
+    /// a repeated same-shape access reused its compiled
+    /// [`IoPlan`](crate::io::plan::IoPlan) at the scheduler instead of
+    /// re-flattening the view.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plan_cache.stats()
     }
 
     // ------------------------------------------------------------------

@@ -7,6 +7,7 @@
 //! |---|---|
 //! | §7.2.2 file manipulation | [`file`] |
 //! | §7.2.3 file views | [`view`] |
+//! | §7.2.4 data access — the orthogonal descriptor core | [`op`] |
 //! | §7.2.4.2 explicit offsets, §7.2.4.3 individual pointers | [`access`] |
 //! | §7.2.4.4 shared file pointers | [`shared`] |
 //! | §7.2.4.5 split collectives | [`split`] |
@@ -17,18 +18,23 @@
 //! | §7.2.7/8 error handling & classes | [`errors`] |
 //! | Info hints | [`hints`] |
 //! | unified access-plan compiler | [`plan`] |
-//! | plan execution (sync / engine / two-phase) | [`schedule`] |
+//! | plan execution (sync / engine / two-phase) + plan cache | [`schedule`] |
 //! | nonblocking request engine | [`engine`] |
 //!
-//! Every data-access family — explicit-offset, individual-pointer,
-//! shared-pointer, collective, and split/nonblocking — compiles its
-//! request into an [`plan::IoPlan`] and executes it on the
-//! [`schedule::IoScheduler`]; no access path flattens view runs on its
-//! own.
+//! Every data-access routine — explicit-offset, individual-pointer,
+//! shared-pointer, collective, ordered, and split/nonblocking — is a thin
+//! wrapper constructing an [`op::AccessOp`] descriptor for its cell of
+//! the (positioning × coordination × synchronism) matrix and delegating
+//! to the core entry points [`File::submit_read`] / [`File::submit_write`]
+//! / [`File::submit_read_owned`]; the core compiles one
+//! [`plan::IoPlan`] and executes it on the [`schedule::IoScheduler`]. No
+//! access family keeps a private pipeline.
 //!
 //! The paper's prototype implemented 19 of the 52 data-access routines;
 //! this implementation covers the full matrix plus the four MPI-3.1
-//! nonblocking collectives (`jpio routines` prints all 56).
+//! nonblocking collectives (`jpio routines` prints all 56, and the
+//! transfer half of the table is *derived* from the op dimensions by
+//! [`op::access_cells`] so it cannot drift from the implementation).
 
 pub mod access;
 pub mod collective;
@@ -37,6 +43,7 @@ pub mod engine;
 pub mod errors;
 pub mod file;
 pub mod hints;
+pub mod op;
 pub mod plan;
 pub mod schedule;
 pub mod shared;
@@ -48,6 +55,10 @@ pub use engine::Request;
 pub use errors::{ErrorClass, IoError};
 pub use file::{amode, seek, File};
 pub use hints::Info;
+pub use op::{
+    access_cells, AccessCell, AccessOp, Coordination, Direction, Positioning, PositioningKind,
+    SplitPhase, Submission, Synchronism,
+};
 pub use plan::IoPlan;
 pub use view::FileView;
 
@@ -60,70 +71,48 @@ pub fn get_type_extent(_file: &File<'_>, datatype: &Datatype) -> i64 {
     datatype.extent()
 }
 
+/// The 22 file-manipulation and query routines of the matrix — the
+/// non-transfer half, which has no op dimensions to derive from.
+const MANIPULATION_ROUTINES: [(&str, &str); 22] = [
+    ("MPI_FILE_OPEN", "File::open"),
+    ("MPI_FILE_CLOSE", "File::close"),
+    ("MPI_FILE_DELETE", "File::delete"),
+    ("MPI_FILE_SET_SIZE", "File::set_size"),
+    ("MPI_FILE_PREALLOCATE", "File::preallocate"),
+    ("MPI_FILE_GET_SIZE", "File::get_size"),
+    ("MPI_FILE_GET_GROUP", "File::get_group"),
+    ("MPI_FILE_GET_AMODE", "File::get_amode"),
+    ("MPI_FILE_SET_INFO", "File::set_info"),
+    ("MPI_FILE_GET_INFO", "File::get_info"),
+    ("MPI_FILE_SET_VIEW", "File::set_view"),
+    ("MPI_FILE_GET_VIEW", "File::get_view"),
+    ("MPI_FILE_SEEK", "File::seek"),
+    ("MPI_FILE_GET_POSITION", "File::get_position"),
+    ("MPI_FILE_GET_BYTE_OFFSET", "File::get_byte_offset"),
+    ("MPI_FILE_SEEK_SHARED", "File::seek_shared"),
+    ("MPI_FILE_GET_POSITION_SHARED", "File::get_position_shared"),
+    ("MPI_FILE_SET_ATOMICITY", "File::set_atomicity"),
+    ("MPI_FILE_GET_ATOMICITY", "File::get_atomicity"),
+    ("MPI_FILE_SYNC", "File::sync"),
+    ("MPI_FILE_GET_TYPE_EXTENT", "io::get_type_extent"),
+    ("MPI_REGISTER_DATAREP", "io::register_datarep"),
+];
+
 /// The full 52-routine data-access matrix of Table 3-1 / 7-1 plus the
-/// four MPI-3.1 nonblocking collectives, with the implementation status
-/// of each routine (all implemented). Used by the `jpio routines` CLI
-/// command and the docs.
-pub fn routine_matrix() -> Vec<(&'static str, &'static str)> {
-    // (MPI routine, jpio method)
-    vec![
-        ("MPI_FILE_OPEN", "File::open"),
-        ("MPI_FILE_CLOSE", "File::close"),
-        ("MPI_FILE_DELETE", "File::delete"),
-        ("MPI_FILE_SET_SIZE", "File::set_size"),
-        ("MPI_FILE_PREALLOCATE", "File::preallocate"),
-        ("MPI_FILE_GET_SIZE", "File::get_size"),
-        ("MPI_FILE_GET_GROUP", "File::get_group"),
-        ("MPI_FILE_GET_AMODE", "File::get_amode"),
-        ("MPI_FILE_SET_INFO", "File::set_info"),
-        ("MPI_FILE_GET_INFO", "File::get_info"),
-        ("MPI_FILE_SET_VIEW", "File::set_view"),
-        ("MPI_FILE_GET_VIEW", "File::get_view"),
-        ("MPI_FILE_READ_AT", "File::read_at"),
-        ("MPI_FILE_READ_AT_ALL", "File::read_at_all"),
-        ("MPI_FILE_WRITE_AT", "File::write_at"),
-        ("MPI_FILE_WRITE_AT_ALL", "File::write_at_all"),
-        ("MPI_FILE_IREAD_AT", "File::iread_at"),
-        ("MPI_FILE_IWRITE_AT", "File::iwrite_at"),
-        ("MPI_FILE_READ", "File::read"),
-        ("MPI_FILE_READ_ALL", "File::read_all"),
-        ("MPI_FILE_WRITE", "File::write"),
-        ("MPI_FILE_WRITE_ALL", "File::write_all"),
-        ("MPI_FILE_IREAD", "File::iread"),
-        ("MPI_FILE_IWRITE", "File::iwrite"),
-        ("MPI_FILE_IREAD_AT_ALL", "File::iread_at_all"),
-        ("MPI_FILE_IWRITE_AT_ALL", "File::iwrite_at_all"),
-        ("MPI_FILE_IREAD_ALL", "File::iread_all"),
-        ("MPI_FILE_IWRITE_ALL", "File::iwrite_all"),
-        ("MPI_FILE_SEEK", "File::seek"),
-        ("MPI_FILE_GET_POSITION", "File::get_position"),
-        ("MPI_FILE_GET_BYTE_OFFSET", "File::get_byte_offset"),
-        ("MPI_FILE_READ_SHARED", "File::read_shared"),
-        ("MPI_FILE_WRITE_SHARED", "File::write_shared"),
-        ("MPI_FILE_IREAD_SHARED", "File::iread_shared"),
-        ("MPI_FILE_IWRITE_SHARED", "File::iwrite_shared"),
-        ("MPI_FILE_READ_ORDERED", "File::read_ordered"),
-        ("MPI_FILE_WRITE_ORDERED", "File::write_ordered"),
-        ("MPI_FILE_SEEK_SHARED", "File::seek_shared"),
-        ("MPI_FILE_GET_POSITION_SHARED", "File::get_position_shared"),
-        ("MPI_FILE_READ_AT_ALL_BEGIN", "File::read_at_all_begin"),
-        ("MPI_FILE_READ_AT_ALL_END", "File::read_at_all_end"),
-        ("MPI_FILE_WRITE_AT_ALL_BEGIN", "File::write_at_all_begin"),
-        ("MPI_FILE_WRITE_AT_ALL_END", "File::write_at_all_end"),
-        ("MPI_FILE_READ_ALL_BEGIN", "File::read_all_begin"),
-        ("MPI_FILE_READ_ALL_END", "File::read_all_end"),
-        ("MPI_FILE_WRITE_ALL_BEGIN", "File::write_all_begin"),
-        ("MPI_FILE_WRITE_ALL_END", "File::write_all_end"),
-        ("MPI_FILE_READ_ORDERED_BEGIN", "File::read_ordered_begin"),
-        ("MPI_FILE_READ_ORDERED_END", "File::read_ordered_end"),
-        ("MPI_FILE_WRITE_ORDERED_BEGIN", "File::write_ordered_begin"),
-        ("MPI_FILE_WRITE_ORDERED_END", "File::write_ordered_end"),
-        ("MPI_FILE_SET_ATOMICITY", "File::set_atomicity"),
-        ("MPI_FILE_GET_ATOMICITY", "File::get_atomicity"),
-        ("MPI_FILE_SYNC", "File::sync"),
-        ("MPI_FILE_GET_TYPE_EXTENT", "io::get_type_extent"),
-        ("MPI_REGISTER_DATAREP", "io::register_datarep"),
-    ]
+/// four MPI-3.1 nonblocking collectives, with the jpio binding of each
+/// routine (all implemented). The 34 transfer routines are *derived*
+/// from the [`op::AccessOp`] dimensions ([`op::access_cells`]), so this
+/// table cannot drift from the implementation; the 22 manipulation
+/// routines are the static remainder. Used by the `jpio routines` CLI
+/// command (whose `--check` flag additionally dispatches every derived
+/// cell through its public wrapper) and the docs.
+pub fn routine_matrix() -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = MANIPULATION_ROUTINES
+        .iter()
+        .map(|&(mpi, method)| (mpi.to_string(), method.to_string()))
+        .collect();
+    out.extend(op::access_cells().into_iter().map(|c| (c.mpi_name(), c.method_name())));
+    out
 }
 
 #[cfg(test)]
@@ -133,10 +122,36 @@ mod tests {
         let m = super::routine_matrix();
         // 52 MPI-2.2 routines + 4 MPI-3.1 nonblocking collectives.
         assert_eq!(m.len(), 56);
-        // No duplicates.
-        let mut names: Vec<_> = m.iter().map(|(mpi, _)| *mpi).collect();
+        // No duplicates on either column.
+        let mut names: Vec<_> = m.iter().map(|(mpi, _)| mpi.clone()).collect();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), 56);
+        let mut methods: Vec<_> = m.iter().map(|(_, method)| method.clone()).collect();
+        methods.sort_unstable();
+        methods.dedup();
+        assert_eq!(methods.len(), 56);
+    }
+
+    #[test]
+    fn derived_half_matches_the_mpi_table() {
+        // Spot-check that the derivation produces the exact routine names
+        // of the MPI table (the property test in rust/tests/op_matrix.rs
+        // dispatches each one).
+        let m = super::routine_matrix();
+        for (mpi, method) in [
+            ("MPI_FILE_READ_AT", "File::read_at"),
+            ("MPI_FILE_WRITE_AT_ALL", "File::write_at_all"),
+            ("MPI_FILE_IREAD", "File::iread"),
+            ("MPI_FILE_IWRITE_ALL", "File::iwrite_all"),
+            ("MPI_FILE_READ_SHARED", "File::read_shared"),
+            ("MPI_FILE_WRITE_ORDERED_BEGIN", "File::write_ordered_begin"),
+            ("MPI_FILE_READ_ALL_END", "File::read_all_end"),
+        ] {
+            assert!(
+                m.iter().any(|(a, b)| a == mpi && b == method),
+                "matrix is missing {mpi} -> {method}"
+            );
+        }
     }
 }

@@ -1,0 +1,1237 @@
+//! The orthogonal `AccessOp` descriptor core — one entry point for the
+//! whole data-access matrix.
+//!
+//! MPI defines data access along three orthogonal axes (§7.2.4):
+//! *positioning* (explicit offset / individual pointer / shared pointer),
+//! *coordination* (independent / collective / ordered), and *synchronism*
+//! (blocking / nonblocking / split). The 34 transfer routines of the
+//! 52+4-routine matrix are the legal cells of that cube, crossed with the
+//! transfer direction. Instead of hand-rolling each cell, every public
+//! routine constructs an [`AccessOp`] describing its cell and delegates to
+//! the single core pair [`File::submit_read`] / [`File::submit_write`]
+//! (plus [`File::submit_read_owned`], the owned-buffer front the
+//! nonblocking reads need under Rust's ownership rules).
+//!
+//! The core owns, in order:
+//!
+//! 1. **validation** — open/permission checks and the amode×op legality
+//!    rules ([`AccessOp::validate`]: `MODE_APPEND` rejects explicit
+//!    offsets, `MODE_SEQUENTIAL` rejects everything but shared-pointer
+//!    access);
+//! 2. **memory-side checks and payload pack/unpack**
+//!    ([`check_mem_args`], [`pack_payload`], [`unpack_payload`]);
+//! 3. **pointer resolution and update** — individual pointer (advance by
+//!    the actual transfer for blocking ops, immediately by the full
+//!    request for nonblocking/split, per MPI), shared-pointer sidecar
+//!    fetch-and-add, ordered prefix-sum offsets;
+//! 4. **plan compilation** through the scheduler's plan cache
+//!    ([`crate::io::schedule::PlanCache`]);
+//! 5. **dispatch** — synchronous, request-engine, or phase-by-phase
+//!    two-phase collective execution on the
+//!    [`IoScheduler`](crate::io::schedule::IoScheduler).
+//!
+//! No access family keeps a private copy of this pipeline: `access.rs`,
+//! `shared.rs`, `collective.rs` and `split.rs` only build descriptors.
+//! The routine matrix itself ([`access_cells`]) is *derived* from the op
+//! dimensions, so the table printed by `jpio routines` cannot drift from
+//! the implementation (`jpio routines --check` additionally dispatches
+//! every cell through its public wrapper).
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
+use crate::comm::Status;
+use crate::io::collective::{
+    decode_runs, encode_write_msg, merge_intervals, route_to_aggregators, CbParams, WriteIoWork,
+};
+use crate::io::engine::{self, Request};
+use crate::io::errors::{err_arg, err_io, err_request, err_unsupported_op, Result};
+use crate::io::file::{amode, File, SplitPending};
+use crate::io::plan::IoPlan;
+use crate::io::schedule::IoScheduler;
+use crate::io::view::FileView;
+use crate::storage::StorageFile;
+use crate::strategy::AccessStrategy;
+
+// ----------------------------------------------------------------------
+// The descriptor
+// ----------------------------------------------------------------------
+
+/// Transfer direction.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Direction {
+    /// File → memory.
+    Read,
+    /// Memory → file.
+    Write,
+}
+
+/// Positioning axis: where the access starts.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Positioning {
+    /// Explicit etype offset (`*_at` routines).
+    Explicit(Offset),
+    /// The per-handle individual file pointer.
+    Individual,
+    /// The per-file shared pointer (flocked sidecar).
+    Shared,
+}
+
+impl Positioning {
+    /// The offset-free kind of this positioning (the matrix dimension).
+    pub fn kind(self) -> PositioningKind {
+        match self {
+            Positioning::Explicit(_) => PositioningKind::Explicit,
+            Positioning::Individual => PositioningKind::Individual,
+            Positioning::Shared => PositioningKind::Shared,
+        }
+    }
+}
+
+/// [`Positioning`] without its offset payload — the matrix dimension.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PositioningKind {
+    /// Explicit etype offset.
+    Explicit,
+    /// Individual file pointer.
+    Individual,
+    /// Shared file pointer.
+    Shared,
+}
+
+/// Coordination axis: which ranks take part.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Coordination {
+    /// This rank alone.
+    Independent,
+    /// All ranks, two-phase collective buffering (`*_all`).
+    Collective,
+    /// All ranks in rank order at the shared pointer (`*_ordered`).
+    Ordered,
+}
+
+/// The half of a split collective an op describes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SplitPhase {
+    /// `*_begin`: start the collective; the handle stashes the pending op.
+    Begin,
+    /// `*_end`: complete the pending op (binds the read buffer).
+    End,
+}
+
+/// Synchronism axis: when the call returns.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Synchronism {
+    /// Complete before returning.
+    Blocking,
+    /// Return a [`Request`]; complete on the engine.
+    Nonblocking,
+    /// Split collective `*_begin` / `*_end` pair.
+    Split(SplitPhase),
+}
+
+/// One fully-described data access: a cell of the routine matrix plus the
+/// buffer spec `(buf_offset, count, datatype)`. The buffer itself is
+/// passed alongside (Rust ownership: blocking ops borrow, nonblocking
+/// reads own).
+#[derive(Clone, Debug)]
+pub struct AccessOp {
+    /// Transfer direction.
+    pub direction: Direction,
+    /// Positioning axis (with the explicit offset when applicable).
+    pub positioning: Positioning,
+    /// Coordination axis.
+    pub coordination: Coordination,
+    /// Synchronism axis.
+    pub synchronism: Synchronism,
+    /// Element offset into the user buffer.
+    pub buf_offset: usize,
+    /// Number of `datatype` items to transfer.
+    pub count: usize,
+    /// Memory datatype of the transfer.
+    pub datatype: Datatype,
+}
+
+impl AccessOp {
+    /// Build a descriptor.
+    pub fn new(
+        direction: Direction,
+        positioning: Positioning,
+        coordination: Coordination,
+        synchronism: Synchronism,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> AccessOp {
+        AccessOp {
+            direction,
+            positioning,
+            coordination,
+            synchronism,
+            buf_offset,
+            count,
+            datatype: datatype.clone(),
+        }
+    }
+
+    /// A read descriptor.
+    pub fn read(
+        positioning: Positioning,
+        coordination: Coordination,
+        synchronism: Synchronism,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> AccessOp {
+        AccessOp::new(
+            Direction::Read,
+            positioning,
+            coordination,
+            synchronism,
+            buf_offset,
+            count,
+            datatype,
+        )
+    }
+
+    /// A write descriptor.
+    pub fn write(
+        positioning: Positioning,
+        coordination: Coordination,
+        synchronism: Synchronism,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> AccessOp {
+        AccessOp::new(
+            Direction::Write,
+            positioning,
+            coordination,
+            synchronism,
+            buf_offset,
+            count,
+            datatype,
+        )
+    }
+
+    /// Packed payload bytes this op moves.
+    pub fn payload_len(&self) -> usize {
+        self.count * self.datatype.size()
+    }
+
+    /// Validate the op against the file's access mode: the cell must be a
+    /// legal point of the matrix, `MODE_APPEND` rejects explicit-offset
+    /// access, and `MODE_SEQUENTIAL` rejects explicit-offset and
+    /// individual-pointer (mixed-positioning) access — only shared-pointer
+    /// access is sequential. The mode rules raise
+    /// `MPI_ERR_UNSUPPORTED_OPERATION` (§7.2.2.1).
+    pub fn validate(&self, mode: u32) -> Result<()> {
+        let kind = self.positioning.kind();
+        if !cell_is_legal(kind, self.coordination, self.synchronism) {
+            return Err(err_arg(format!(
+                "no routine exists for access cell {:?}/{:?}/{:?}",
+                kind, self.coordination, self.synchronism
+            )));
+        }
+        if mode & amode::APPEND != 0 && kind == PositioningKind::Explicit {
+            return Err(err_unsupported_op("explicit-offset access in MODE_APPEND"));
+        }
+        if mode & amode::SEQUENTIAL != 0 && kind != PositioningKind::Shared {
+            return Err(err_unsupported_op(
+                "MODE_SEQUENTIAL permits only shared-pointer data access",
+            ));
+        }
+        Ok(())
+    }
+
+    /// The pending-operation tag of this op's split `*_end` routine —
+    /// derived from the cell so BEGIN/END matching cannot drift.
+    pub(crate) fn end_kind(&self) -> &'static str {
+        match (self.direction, self.positioning.kind(), self.coordination) {
+            (Direction::Read, PositioningKind::Explicit, Coordination::Collective) => {
+                "readAtAllEnd"
+            }
+            (Direction::Read, PositioningKind::Individual, Coordination::Collective) => {
+                "readAllEnd"
+            }
+            (Direction::Read, PositioningKind::Shared, Coordination::Ordered) => "readOrderedEnd",
+            (Direction::Write, PositioningKind::Explicit, Coordination::Collective) => {
+                "writeAtAllEnd"
+            }
+            (Direction::Write, PositioningKind::Individual, Coordination::Collective) => {
+                "writeAllEnd"
+            }
+            (Direction::Write, PositioningKind::Shared, Coordination::Ordered) => {
+                "writeOrderedEnd"
+            }
+            _ => "invalidSplitEnd",
+        }
+    }
+}
+
+/// Whether a (positioning, coordination, synchronism) triple is a routine
+/// of the MPI data-access matrix:
+///
+/// * independent access has no split form;
+/// * the shared pointer has no plain collective (`*_ALL`) form — its
+///   collective form *is* the ordered access;
+/// * ordered access exists only on the shared pointer and has no
+///   nonblocking form.
+pub fn cell_is_legal(pos: PositioningKind, coord: Coordination, sync: Synchronism) -> bool {
+    match coord {
+        Coordination::Independent => !matches!(sync, Synchronism::Split(_)),
+        Coordination::Collective => pos != PositioningKind::Shared,
+        Coordination::Ordered => {
+            pos == PositioningKind::Shared && !matches!(sync, Synchronism::Nonblocking)
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// The derived routine matrix
+// ----------------------------------------------------------------------
+
+/// One legal transfer cell of the data-access matrix (direction ×
+/// positioning × coordination × synchronism, split phases as separate
+/// routines). [`access_cells`] enumerates all 34.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct AccessCell {
+    /// Transfer direction.
+    pub direction: Direction,
+    /// Positioning dimension.
+    pub positioning: PositioningKind,
+    /// Coordination dimension.
+    pub coordination: Coordination,
+    /// Synchronism dimension.
+    pub synchronism: Synchronism,
+}
+
+impl AccessCell {
+    /// The routine's method stem, e.g. `read_at_all_begin`.
+    fn stem(&self) -> String {
+        let mut s = String::new();
+        if matches!(self.synchronism, Synchronism::Nonblocking) {
+            s.push('i');
+        }
+        s.push_str(match self.direction {
+            Direction::Read => "read",
+            Direction::Write => "write",
+        });
+        if self.positioning == PositioningKind::Explicit {
+            s.push_str("_at");
+        }
+        match self.coordination {
+            Coordination::Collective => s.push_str("_all"),
+            Coordination::Ordered => s.push_str("_ordered"),
+            Coordination::Independent => {
+                if self.positioning == PositioningKind::Shared {
+                    s.push_str("_shared");
+                }
+            }
+        }
+        match self.synchronism {
+            Synchronism::Split(SplitPhase::Begin) => s.push_str("_begin"),
+            Synchronism::Split(SplitPhase::End) => s.push_str("_end"),
+            _ => {}
+        }
+        s
+    }
+
+    /// The MPI routine name, e.g. `MPI_FILE_READ_AT_ALL_BEGIN`.
+    pub fn mpi_name(&self) -> String {
+        format!("MPI_FILE_{}", self.stem().to_uppercase())
+    }
+
+    /// The jpio binding name, e.g. `File::read_at_all_begin`.
+    pub fn method_name(&self) -> String {
+        format!("File::{}", self.stem())
+    }
+}
+
+/// Every legal transfer cell, enumerated from the op dimensions — the
+/// derived half of [`crate::io::routine_matrix`]. 34 cells: 2 directions
+/// × (6 independent + 8 collective + 3 ordered) synchronism/positioning
+/// combinations.
+pub fn access_cells() -> Vec<AccessCell> {
+    let mut out = Vec::new();
+    for &direction in &[Direction::Read, Direction::Write] {
+        for &positioning in &[
+            PositioningKind::Explicit,
+            PositioningKind::Individual,
+            PositioningKind::Shared,
+        ] {
+            for &coordination in &[
+                Coordination::Independent,
+                Coordination::Collective,
+                Coordination::Ordered,
+            ] {
+                for &synchronism in &[
+                    Synchronism::Blocking,
+                    Synchronism::Nonblocking,
+                    Synchronism::Split(SplitPhase::Begin),
+                    Synchronism::Split(SplitPhase::End),
+                ] {
+                    if cell_is_legal(positioning, coordination, synchronism) {
+                        out.push(AccessCell { direction, positioning, coordination, synchronism });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// Submission outcome
+// ----------------------------------------------------------------------
+
+/// What a write submission produced; which variant is fixed by the op's
+/// synchronism, so the typed accessors never fail on descriptors built by
+/// the public wrappers.
+pub enum Submission {
+    /// Completed synchronously (blocking routines, split `*_end`).
+    Done(Status),
+    /// Queued on the request engine (nonblocking routines).
+    Queued(Request<()>),
+    /// A split `*_begin` was stashed on the handle; complete at `*_end`.
+    Begun,
+}
+
+impl Submission {
+    /// The completion status of a synchronous submission.
+    pub fn status(self) -> Result<Status> {
+        match self {
+            Submission::Done(st) => Ok(st),
+            _ => Err(err_request("submission did not complete synchronously")),
+        }
+    }
+
+    /// The request handle of a nonblocking submission.
+    pub fn request(self) -> Result<Request<()>> {
+        match self {
+            Submission::Queued(req) => Ok(req),
+            _ => Err(err_request("submission was not queued on the engine")),
+        }
+    }
+
+    /// Confirm a split `*_begin` was stashed.
+    pub fn begun(self) -> Result<()> {
+        match self {
+            Submission::Begun => Ok(()),
+            _ => Err(err_request("submission was not a split begin")),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Transfer context + memory-side helpers
+// ----------------------------------------------------------------------
+
+/// Everything a transfer needs, snapshotted from the file handle so the
+/// nonblocking engine can run it without borrowing the `File`.
+pub(crate) struct TransferCtx {
+    pub storage: Arc<dyn StorageFile>,
+    pub strategy: Arc<dyn AccessStrategy>,
+    pub view: Arc<FileView>,
+    pub atomic: bool,
+}
+
+/// Validate the memory-side arguments of `(buf, buf_offset, count,
+/// datatype)`.
+pub(crate) fn check_mem_args(
+    buf: &(impl IoBuf + ?Sized),
+    buf_offset: usize,
+    count: usize,
+    datatype: &Datatype,
+) -> Result<()> {
+    let psz = buf.prim().size();
+    if datatype.size() % psz != 0 || datatype.base_prim().size() != psz {
+        return Err(err_arg(format!(
+            "datatype {datatype} does not match buffer element size {psz}"
+        )));
+    }
+    let need_bytes = if count == 0 {
+        0
+    } else {
+        (count as i64 - 1) * datatype.extent() + datatype.true_lb() + datatype.true_extent()
+    };
+    let have = buf.elems().saturating_sub(buf_offset) * psz;
+    if need_bytes > have as i64 {
+        return Err(err_arg(format!(
+            "buffer too small: need {need_bytes} bytes at element offset {buf_offset}, have {have}"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate the memory-side arguments and return the packed payload for a
+/// write (borrowed when possible).
+pub(crate) fn pack_payload<'b>(
+    buf: &'b (impl IoBuf + ?Sized),
+    buf_offset: usize,
+    count: usize,
+    datatype: &Datatype,
+    view: &FileView,
+) -> Result<Cow<'b, [u8]>> {
+    let bytes = buf.as_bytes();
+    let psz = buf.prim().size();
+    let base = buf_offset * psz;
+    let payload_len = count * datatype.size();
+    check_mem_args(buf, buf_offset, count, datatype)?;
+    if datatype.is_contiguous() && view.datarep.is_identity() {
+        return Ok(Cow::Borrowed(&bytes[base..base + payload_len]));
+    }
+    // Gather the memory runs into a packed buffer.
+    let mut payload = Vec::with_capacity(payload_len);
+    for run in datatype.byte_runs(count) {
+        let s = base + run.offset as usize;
+        payload.extend_from_slice(&bytes[s..s + run.len()]);
+    }
+    // Representation conversion (memory → file).
+    if !view.datarep.is_identity() {
+        let elems = view.payload_elems(payload.len());
+        view.datarep.encode(&mut payload, &elems);
+    }
+    Ok(Cow::Owned(payload))
+}
+
+/// Scatter a packed payload (already datarep-decoded) into the memory runs
+/// of `(buf, buf_offset, count, datatype)`. `got` bytes are valid.
+pub(crate) fn unpack_payload(
+    buf: &mut (impl IoBufMut + ?Sized),
+    buf_offset: usize,
+    count: usize,
+    datatype: &Datatype,
+    payload: &[u8],
+    got: usize,
+) -> Result<()> {
+    check_mem_args(buf, buf_offset, count, datatype)?;
+    let psz = buf.prim().size();
+    let base = buf_offset * psz;
+    let bytes = buf.as_bytes_mut();
+    if datatype.is_contiguous() {
+        let n = (count * datatype.size()).min(got);
+        bytes[base..base + n].copy_from_slice(&payload[..n]);
+        return Ok(());
+    }
+    let mut pos = 0;
+    for run in datatype.byte_runs(count) {
+        if pos >= got {
+            break;
+        }
+        let n = run.len().min(got - pos);
+        let d = base + run.offset as usize;
+        bytes[d..d + n].copy_from_slice(&payload[pos..pos + n]);
+        pos += n;
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// The core
+// ----------------------------------------------------------------------
+
+impl File<'_> {
+    pub(crate) fn transfer_ctx(&self) -> TransferCtx {
+        TransferCtx {
+            storage: self.storage.clone(),
+            strategy: self.strategy_snapshot(),
+            view: self.view_snapshot(),
+            atomic: self.get_atomicity(),
+        }
+    }
+
+    /// Compile (or reuse from the scheduler's plan cache) the plan of an
+    /// access of `len` payload bytes at etype offset `off`.
+    fn plan_for(
+        &self,
+        ctx: &TransferCtx,
+        direction: Direction,
+        off: Offset,
+        len: usize,
+    ) -> Result<Arc<IoPlan>> {
+        self.plan_cache.lookup(&ctx.view, direction, ctx.atomic, off, len)
+    }
+
+    /// The validation prologue every submission runs: handle state,
+    /// direction permissions, amode×op legality, split-pending exclusion.
+    fn prologue(&self, op: &AccessOp) -> Result<TransferCtx> {
+        self.check_open()?;
+        match op.direction {
+            Direction::Read => self.check_readable()?,
+            Direction::Write => self.check_writable()?,
+        }
+        op.validate(self.amode)?;
+        if matches!(op.synchronism, Synchronism::Split(SplitPhase::Begin))
+            && self.split.lock().unwrap().is_some()
+        {
+            return Err(err_request(
+                "a split collective is already active on this file handle",
+            ));
+        }
+        Ok(self.transfer_ctx())
+    }
+
+    /// Resolve the op's starting etype offset and update the pointer it
+    /// names. Returns `(offset, advance_by_actual)`: blocking
+    /// individual-pointer ops advance by the *actual* transfer size after
+    /// completion (via [`File::commit_indiv_ptr`]); nonblocking and split
+    /// BEGIN ops advance immediately by the full request (MPI semantics —
+    /// the pointer update is not deferred to completion). The shared
+    /// pointer is reserved here by sidecar fetch-and-add (independent) or
+    /// the ordered prefix-sum pass (ordered).
+    fn resolve_offset(&self, op: &AccessOp, view: &FileView) -> Result<(Offset, bool)> {
+        let req_etypes = view.bytes_to_etypes(op.payload_len());
+        match (op.positioning, op.coordination) {
+            (Positioning::Explicit(off), _) => Ok((off, false)),
+            (Positioning::Individual, _) => {
+                // Take the lock briefly and release it before any
+                // collective exchange: holding it across the exchange
+                // would stall every other thread's pointer op for the
+                // whole collective.
+                let mut ptr = self.indiv_ptr.lock().unwrap();
+                let off = *ptr;
+                if matches!(op.synchronism, Synchronism::Blocking) {
+                    Ok((off, true))
+                } else {
+                    *ptr = off + req_etypes;
+                    Ok((off, false))
+                }
+            }
+            (Positioning::Shared, Coordination::Ordered) => {
+                Ok((self.ordered_offsets(req_etypes)?, false))
+            }
+            (Positioning::Shared, _) => Ok((self.sfp_fetch_add(req_etypes)?, false)),
+        }
+    }
+
+    /// Commit a deferred individual-pointer update (blocking ops): the
+    /// pointer lands at `off` + the etypes actually transferred.
+    fn commit_indiv_ptr(&self, advance: bool, off: Offset, view: &FileView, actual_bytes: usize) {
+        if advance {
+            *self.indiv_ptr.lock().unwrap() = off + view.bytes_to_etypes(actual_bytes);
+        }
+    }
+
+    fn stash(&self, p: SplitPending) {
+        *self.split.lock().unwrap() = Some(p);
+    }
+
+    fn take_pending(&self, want: &'static str) -> Result<SplitPending> {
+        let mut slot = self.split.lock().unwrap();
+        match slot.take() {
+            None => Err(err_request(format!("{want}: no split collective is active"))),
+            Some(p) => {
+                let kind = match &p {
+                    SplitPending::Read { kind, .. } | SplitPending::Write { kind, .. } => kind,
+                };
+                if *kind != want {
+                    let msg = format!("{want} does not match pending {kind}");
+                    *slot = Some(p);
+                    return Err(err_request(msg));
+                }
+                Ok(p)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // submit_write: every write cell
+    // ------------------------------------------------------------------
+
+    /// The single write entry point: every write routine of the matrix —
+    /// blocking, nonblocking, collective, ordered, and split — constructs
+    /// an [`AccessOp`] and lands here. Split `*_end` ops ignore `buf`
+    /// (the data was bound at BEGIN; pass an empty slice).
+    pub fn submit_write(&self, op: &AccessOp, buf: &(impl IoBuf + ?Sized)) -> Result<Submission> {
+        if let Synchronism::Split(SplitPhase::End) = op.synchronism {
+            // END binds no buffer or offset, but still runs the
+            // validation prologue: illegal End cells are MPI_ERR_ARG
+            // like every other cell, not a confusing pending-mismatch.
+            self.prologue(op)?;
+            return self.end_write(op).map(Submission::Done);
+        }
+        let ctx = self.prologue(op)?;
+        let payload = pack_payload(buf, op.buf_offset, op.count, &op.datatype, &ctx.view)?;
+        let (off, advance) = self.resolve_offset(op, &ctx.view)?;
+        match (op.coordination, op.synchronism) {
+            (Coordination::Independent, Synchronism::Blocking)
+            | (Coordination::Ordered, Synchronism::Blocking) => {
+                let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
+                let st = IoScheduler::write(&ctx, &plan, &payload)?;
+                self.commit_indiv_ptr(advance, off, &ctx.view, st.bytes);
+                if op.coordination == Coordination::Ordered {
+                    // Ordered collective completion.
+                    self.comm.barrier();
+                }
+                Ok(Submission::Done(st))
+            }
+            (Coordination::Independent, Synchronism::Nonblocking) => {
+                let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
+                Ok(Submission::Queued(IoScheduler::write_async(ctx, plan, payload.into_owned())))
+            }
+            (Coordination::Ordered, Synchronism::Split(SplitPhase::Begin)) => {
+                // Ordered BEGIN: offset already reserved in rank order;
+                // the independent transfer overlaps on the engine.
+                let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
+                let req = IoScheduler::write_async(ctx, plan, payload.into_owned());
+                self.stash(SplitPending::Write { kind: op.end_kind(), req });
+                Ok(Submission::Begun)
+            }
+            (Coordination::Collective, Synchronism::Blocking) => {
+                let cb = self.cb_params();
+                let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
+                IoScheduler::write_phase(&ctx, work)?;
+                self.comm.barrier();
+                self.commit_indiv_ptr(advance, off, &ctx.view, bytes);
+                Ok(Submission::Done(Status::of_bytes(bytes)))
+            }
+            (Coordination::Collective, Synchronism::Nonblocking) => {
+                let cb = self.cb_params();
+                if !cb.enabled || self.comm.size() == 1 {
+                    // No aggregation: the whole operation runs on the
+                    // engine, like an independent nonblocking write.
+                    let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
+                    return Ok(Submission::Queued(IoScheduler::write_async(
+                        ctx,
+                        plan,
+                        payload.into_owned(),
+                    )));
+                }
+                // Exchange phase on the caller (it needs the
+                // communicator); I/O phase overlaps on the engine.
+                let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
+                Ok(Submission::Queued(IoScheduler::write_phase_async(ctx, work, bytes)))
+            }
+            (Coordination::Collective, Synchronism::Split(SplitPhase::Begin)) => {
+                let cb = self.cb_params();
+                let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
+                let req = IoScheduler::write_phase_async(ctx, work, bytes);
+                self.stash(SplitPending::Write { kind: op.end_kind(), req });
+                Ok(Submission::Begun)
+            }
+            _ => Err(err_arg("illegal write cell")), // unreachable after validate
+        }
+    }
+
+    fn end_write(&self, op: &AccessOp) -> Result<Status> {
+        match self.take_pending(op.end_kind())? {
+            SplitPending::Write { req, .. } => {
+                let (st, ()) = req.wait()?;
+                // Collective completion.
+                self.comm.barrier();
+                Ok(st)
+            }
+            SplitPending::Read { .. } => unreachable!("kind checked in take_pending"),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // submit_read: blocking + split read cells
+    // ------------------------------------------------------------------
+
+    /// The single read entry point for borrowed buffers: blocking reads
+    /// of every family, split `*_begin` (which ignores `buf` — the
+    /// buffer binds at END; pass an empty slice) and split `*_end`.
+    /// Nonblocking reads own their buffer and enter through
+    /// [`File::submit_read_owned`], which shares every pipeline stage.
+    pub fn submit_read(
+        &self,
+        op: &AccessOp,
+        buf: &mut (impl IoBufMut + ?Sized),
+    ) -> Result<Status> {
+        match op.synchronism {
+            Synchronism::Split(SplitPhase::End) => {
+                self.prologue(op)?;
+                return self.end_read(op, buf);
+            }
+            Synchronism::Nonblocking => {
+                return Err(err_arg(
+                    "nonblocking reads own their buffer: use File::submit_read_owned",
+                ))
+            }
+            _ => {}
+        }
+        let ctx = self.prologue(op)?;
+        let payload_len = op.payload_len();
+        if let Synchronism::Split(SplitPhase::Begin) = op.synchronism {
+            let (off, _) = self.resolve_offset(op, &ctx.view)?;
+            self.begin_read(op, ctx, off, payload_len)?;
+            return Ok(Status::of_bytes(0));
+        }
+        // Blocking. Memory-side arguments are pre-checked for
+        // noncollective cells only: a blocking collective *read* can
+        // reach the exchange even with bad arguments (its peers would
+        // block in the alltoall otherwise) — the check runs in
+        // unpack_payload after the exchange, surfacing the error
+        // locally. (Writes cannot defer it: the exchange ships the
+        // packed payload, so packing — and its validation — must come
+        // first, as it always has.)
+        if op.coordination != Coordination::Collective {
+            check_mem_args(buf, op.buf_offset, op.count, &op.datatype)?;
+        }
+        let (off, advance) = self.resolve_offset(op, &ctx.view)?;
+        let got = if op.coordination == Coordination::Collective {
+            let cb = self.cb_params();
+            let mut payload = vec![0u8; payload_len];
+            let got = self.collective_read(&ctx, &cb, off, &mut payload)?;
+            unpack_payload(buf, op.buf_offset, op.count, &op.datatype, &payload, got)?;
+            got
+        } else if op.datatype.is_contiguous() && ctx.view.datarep.is_identity() {
+            // Fast path: contiguous memory type + identity representation
+            // → the storage strategy fills the user buffer directly.
+            let base = op.buf_offset * buf.prim().size();
+            let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+            IoScheduler::read(&ctx, &plan, &mut buf.as_bytes_mut()[base..base + payload_len])?
+        } else {
+            let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+            let mut payload = vec![0u8; payload_len];
+            let got = IoScheduler::read(&ctx, &plan, &mut payload)?;
+            unpack_payload(buf, op.buf_offset, op.count, &op.datatype, &payload, got)?;
+            got
+        };
+        self.commit_indiv_ptr(advance, off, &ctx.view, got);
+        if op.coordination == Coordination::Ordered {
+            self.comm.barrier();
+        }
+        Ok(Status::of_bytes(got))
+    }
+
+    /// The owned-buffer front of [`File::submit_read`]: nonblocking reads
+    /// take ownership of the buffer ([`Request::wait`] returns it filled)
+    /// and run the same validation / pointer / plan / dispatch stages.
+    pub fn submit_read_owned<T>(&self, op: &AccessOp, buf: Vec<T>) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        if !matches!(op.synchronism, Synchronism::Nonblocking) {
+            return Err(err_arg("submit_read_owned handles only nonblocking reads"));
+        }
+        let ctx = self.prologue(op)?;
+        check_mem_args(buf.as_slice(), op.buf_offset, op.count, &op.datatype)?;
+        let payload_len = op.payload_len();
+        let (buf_offset, count, dt) = (op.buf_offset, op.count, op.datatype.clone());
+        if op.coordination == Coordination::Collective {
+            let cb = self.cb_params();
+            if cb.enabled && self.comm.size() > 1 {
+                // The exchange *and* aggregation complete in this call
+                // (the reply exchange needs the communicator, which
+                // cannot leave the calling thread); only the local
+                // scatter/decode runs on the engine.
+                let (off, _) = self.resolve_offset(op, &ctx.view)?;
+                let mut payload = vec![0u8; payload_len];
+                let got = self.collective_read(&ctx, &cb, off, &mut payload)?;
+                return Ok(engine::submit(move || {
+                    let mut buf = buf;
+                    let res =
+                        unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)
+                            .map(|()| Status::of_bytes(got));
+                    (res, buf)
+                }));
+            }
+            // Degenerate collective: fall through to the engine path.
+        }
+        let (off, _) = self.resolve_offset(op, &ctx.view)?;
+        // Compile on the caller (argument errors surface here); execute
+        // on the engine.
+        let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+        Ok(engine::submit(move || {
+            let mut buf = buf;
+            let mut payload = vec![0u8; payload_len];
+            let res = IoScheduler::read(&ctx, &plan, &mut payload).and_then(|got| {
+                unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)?;
+                Ok(Status::of_bytes(got))
+            });
+            (res, buf)
+        }))
+    }
+
+    /// Start a split read: collective reads finish their aggregation here
+    /// (the reply exchange needs the communicator) and stash a ready
+    /// payload; ordered reads overlap on the engine.
+    fn begin_read(
+        &self,
+        op: &AccessOp,
+        ctx: TransferCtx,
+        off: Offset,
+        payload_len: usize,
+    ) -> Result<()> {
+        let req = match op.coordination {
+            Coordination::Collective => {
+                let cb = self.cb_params();
+                let mut payload = vec![0u8; payload_len];
+                let got = self.collective_read(&ctx, &cb, off, &mut payload)?;
+                Request::ready(Status::of_bytes(got), payload)
+            }
+            Coordination::Ordered => {
+                let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+                IoScheduler::read_async(ctx, plan, payload_len)
+            }
+            Coordination::Independent => {
+                return Err(err_arg("independent access has no split form"))
+            }
+        };
+        self.stash(SplitPending::Read { kind: op.end_kind(), req });
+        Ok(())
+    }
+
+    fn end_read(&self, op: &AccessOp, buf: &mut (impl IoBufMut + ?Sized)) -> Result<Status> {
+        match self.take_pending(op.end_kind())? {
+            SplitPending::Read { req, .. } => {
+                let (st, payload) = req.wait()?;
+                if payload.len() < op.payload_len() {
+                    return Err(err_io("split read payload shorter than END request"));
+                }
+                unpack_payload(buf, op.buf_offset, op.count, &op.datatype, &payload, st.bytes)?;
+                if op.coordination == Coordination::Ordered {
+                    self.comm.barrier();
+                }
+                Ok(st)
+            }
+            SplitPending::Write { .. } => unreachable!("kind checked in take_pending"),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Two-phase collective machinery (the exchange halves live here —
+    // collective.rs keeps the pure domain/aggregator arithmetic)
+    // ------------------------------------------------------------------
+
+    /// Exchange phase of a collective write: route this rank's plan
+    /// pieces to their aggregators and collect the I/O work this rank
+    /// owes as an aggregator. On degenerate collectives (buffering
+    /// disabled or a single rank) the payload is written independently
+    /// here and the returned work is empty.
+    fn exchange_write(
+        &self,
+        ctx: &TransferCtx,
+        cb: &CbParams,
+        etype_off: Offset,
+        payload: &[u8],
+    ) -> Result<(WriteIoWork, usize)> {
+        let comm = self.comm;
+        let n = comm.size();
+        if !cb.enabled || n == 1 {
+            // Degenerate: independent write, collective completion only.
+            let plan = self.plan_for(ctx, Direction::Write, etype_off, payload.len())?;
+            IoScheduler::write(ctx, &plan, payload)?;
+            return Ok((WriteIoWork::empty(), payload.len()));
+        }
+        let plan = self.plan_for(ctx, Direction::Write, etype_off, payload.len())?;
+        let per_rank = match route_to_aggregators(comm, ctx, cb, &plan) {
+            Some(p) => p,
+            None => return Ok((WriteIoWork::empty(), payload.len())),
+        };
+        let msgs: Vec<Vec<u8>> =
+            per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
+        let inbound = comm.alltoall(&msgs);
+        // Decode in rank order (deterministic overlap resolution).
+        let mut writes = Vec::new();
+        for msg in &inbound {
+            if msg.len() < 4 {
+                continue;
+            }
+            let (rs, mut pos) = decode_runs(msg);
+            for (off, len) in rs {
+                writes.push((off, msg[pos..pos + len].to_vec()));
+                pos += len;
+            }
+        }
+        writes.sort_by_key(|&(off, _)| off);
+        Ok((
+            WriteIoWork { writes, cb_buffer: cb.buffer.unwrap_or(16 << 20).max(4096) },
+            payload.len(),
+        ))
+    }
+
+    /// Full collective read: exchange requests, aggregator sieved reads,
+    /// reply exchange, local reassembly. Returns bytes read into
+    /// `payload`.
+    fn collective_read(
+        &self,
+        ctx: &TransferCtx,
+        cb: &CbParams,
+        etype_off: Offset,
+        payload: &mut [u8],
+    ) -> Result<usize> {
+        let comm = self.comm;
+        let n = comm.size();
+        if !cb.enabled || n == 1 {
+            let plan = self.plan_for(ctx, Direction::Read, etype_off, payload.len())?;
+            let got = IoScheduler::read(ctx, &plan, payload)?;
+            if cb.enabled {
+                comm.barrier();
+            }
+            return Ok(got);
+        }
+        let plan = self.plan_for(ctx, Direction::Read, etype_off, payload.len())?;
+        // Request phase: ship (off,len) lists to the owning aggregators.
+        let my_pieces = match route_to_aggregators(comm, ctx, cb, &plan) {
+            Some(p) => p,
+            None => return Ok(0),
+        };
+        let mut reqs = Vec::with_capacity(n);
+        for pieces in &my_pieces {
+            let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
+            msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
+            for &(off, len, _) in pieces.iter() {
+                msg.extend_from_slice(&off.to_le_bytes());
+                msg.extend_from_slice(&(len as u64).to_le_bytes());
+            }
+            reqs.push(msg);
+        }
+        let inbound = comm.alltoall(&reqs);
+
+        // Aggregator I/O phase: merge all requested intervals, sieved
+        // read through the scheduler.
+        let eof = ctx.storage.size()?;
+        let mut per_src_runs: Vec<Vec<(u64, usize)>> = Vec::with_capacity(n);
+        let mut intervals: Vec<(u64, u64)> = Vec::new();
+        for msg in &inbound {
+            let (rs, _) = decode_runs(msg);
+            for &(off, len) in &rs {
+                intervals.push((off, off + len as u64));
+            }
+            per_src_runs.push(rs);
+        }
+        let merged = merge_intervals(&mut intervals);
+        let merged_runs: Vec<(u64, usize)> =
+            merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
+        let total: usize = merged_runs.iter().map(|r| r.1).sum();
+        let mut agg_buf = vec![0u8; total];
+        let stage = cb.buffer.unwrap_or(16 << 20).max(4096);
+        IoScheduler::read_phase(ctx, &merged_runs, stage, &mut agg_buf)?;
+        // Reply phase: slice the aggregated buffer per source request.
+        let locate = |off: u64| -> Option<usize> {
+            // Position of `off` within agg_buf.
+            let mut base = 0usize;
+            for &(s, e) in &merged {
+                if off >= s && off < e {
+                    return Some(base + (off - s) as usize);
+                }
+                base += (e - s) as usize;
+            }
+            None
+        };
+        let mut replies = vec![Vec::new(); n];
+        for (src, rs) in per_src_runs.iter().enumerate() {
+            let bytes: usize = rs.iter().map(|r| r.1).sum();
+            let mut reply = Vec::with_capacity(bytes);
+            for &(off, len) in rs {
+                let p = locate(off).expect("requested run must be inside merged intervals");
+                reply.extend_from_slice(&agg_buf[p..p + len]);
+            }
+            replies[src] = reply;
+        }
+        let mut answers = comm.alltoall(&replies);
+
+        // Reassemble my payload from the per-aggregator answers; compute
+        // the EOF-clamped byte count.
+        let mut got = 0usize;
+        for (a, pieces) in my_pieces.iter().enumerate() {
+            let ans = std::mem::take(&mut answers[a]);
+            let mut cursor = 0usize;
+            for &(off, len, pos) in pieces {
+                payload[pos..pos + len].copy_from_slice(&ans[cursor..cursor + len]);
+                cursor += len;
+                let visible = (eof.saturating_sub(off) as usize).min(len);
+                got += visible;
+            }
+        }
+        // Datarep decode on the assembled payload.
+        if plan.needs_convert() {
+            plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
+        }
+        Ok(got)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+    use crate::io::errors::ErrorClass;
+    use crate::io::hints::Info;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-op-{}-{name}", std::process::id())
+    }
+
+    #[test]
+    fn matrix_has_34_unique_cells() {
+        let cells = access_cells();
+        assert_eq!(cells.len(), 34);
+        let mut mpi: Vec<String> = cells.iter().map(|c| c.mpi_name()).collect();
+        mpi.sort();
+        mpi.dedup();
+        assert_eq!(mpi.len(), 34);
+        let mut methods: Vec<String> = cells.iter().map(|c| c.method_name()).collect();
+        methods.sort();
+        methods.dedup();
+        assert_eq!(methods.len(), 34);
+    }
+
+    #[test]
+    fn derived_names_match_the_spec() {
+        let cells = access_cells();
+        let has = |mpi: &str, method: &str| {
+            cells.iter().any(|c| c.mpi_name() == mpi && c.method_name() == method)
+        };
+        assert!(has("MPI_FILE_READ_AT", "File::read_at"));
+        assert!(has("MPI_FILE_IWRITE_AT_ALL", "File::iwrite_at_all"));
+        assert!(has("MPI_FILE_READ_AT_ALL_BEGIN", "File::read_at_all_begin"));
+        assert!(has("MPI_FILE_WRITE_ORDERED_END", "File::write_ordered_end"));
+        assert!(has("MPI_FILE_IREAD_SHARED", "File::iread_shared"));
+        assert!(has("MPI_FILE_WRITE", "File::write"));
+        // Illegal cells stay out: no nonblocking ordered, no shared
+        // collective, no independent split.
+        assert!(!cells.iter().any(|c| c.mpi_name().contains("IREAD_ORDERED")));
+        assert!(!cells.iter().any(|c| c.mpi_name() == "MPI_FILE_READ_SHARED_ALL"));
+        assert!(!cells.iter().any(|c| c.mpi_name() == "MPI_FILE_READ_BEGIN"));
+    }
+
+    #[test]
+    fn legality_rules() {
+        use Coordination::*;
+        use PositioningKind::*;
+        use Synchronism::*;
+        assert!(cell_is_legal(Explicit, Independent, Blocking));
+        assert!(cell_is_legal(Shared, Ordered, Split(SplitPhase::Begin)));
+        assert!(!cell_is_legal(Shared, Collective, Blocking));
+        assert!(!cell_is_legal(Shared, Ordered, Nonblocking));
+        assert!(!cell_is_legal(Explicit, Independent, Split(SplitPhase::End)));
+        assert!(!cell_is_legal(Individual, Ordered, Blocking));
+    }
+
+    #[test]
+    fn amode_legality_is_centralized() {
+        let op = |pos| {
+            AccessOp::write(
+                pos,
+                Coordination::Independent,
+                Synchronism::Blocking,
+                0,
+                1,
+                &Datatype::BYTE,
+            )
+        };
+        // APPEND rejects explicit offsets, allows pointer access.
+        let e = op(Positioning::Explicit(0)).validate(amode::WRONLY | amode::APPEND).unwrap_err();
+        assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+        assert!(op(Positioning::Individual).validate(amode::WRONLY | amode::APPEND).is_ok());
+        // SEQUENTIAL permits only shared-pointer access.
+        let e = op(Positioning::Explicit(0))
+            .validate(amode::WRONLY | amode::SEQUENTIAL)
+            .unwrap_err();
+        assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+        let e =
+            op(Positioning::Individual).validate(amode::WRONLY | amode::SEQUENTIAL).unwrap_err();
+        assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+        assert!(op(Positioning::Shared).validate(amode::WRONLY | amode::SEQUENTIAL).is_ok());
+        // Illegal cells are MPI_ERR_ARG regardless of mode.
+        let bad = AccessOp::read(
+            Positioning::Shared,
+            Coordination::Collective,
+            Synchronism::Blocking,
+            0,
+            1,
+            &Datatype::BYTE,
+        );
+        assert_eq!(bad.validate(amode::RDWR).unwrap_err().class, ErrorClass::Arg);
+    }
+
+    #[test]
+    fn submit_matches_wrapper_for_explicit_blocking() {
+        let path = tmp("core");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let data: Vec<i32> = (0..16).collect();
+            let op = AccessOp::write(
+                Positioning::Explicit(0),
+                Coordination::Independent,
+                Synchronism::Blocking,
+                0,
+                16,
+                &Datatype::INT,
+            );
+            let st = f.submit_write(&op, data.as_slice()).unwrap().status().unwrap();
+            assert_eq!(st.bytes, 64);
+            let mut back = vec![0i32; 16];
+            let op = AccessOp::read(
+                Positioning::Explicit(0),
+                Coordination::Independent,
+                Synchronism::Blocking,
+                0,
+                16,
+                &Datatype::INT,
+            );
+            let st = f.submit_read(&op, back.as_mut_slice()).unwrap();
+            assert_eq!(st.bytes, 64);
+            assert_eq!(back, data);
+            // The wrapper is the same path.
+            let mut again = vec![0i32; 16];
+            f.read_at(0, again.as_mut_slice(), 0, 16, &Datatype::INT).unwrap();
+            assert_eq!(again, data);
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn append_mode_rejects_explicit_access_and_appends_pointer_writes() {
+        let path = tmp("append");
+        std::fs::write(&path, vec![7u8; 16]).unwrap();
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::APPEND, Info::null()).unwrap();
+            let mut b = vec![0u8; 4];
+            let e = f.read_at(0, b.as_mut_slice(), 0, 4, &Datatype::BYTE).unwrap_err();
+            assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+            let e = f.write_at(0, b.as_slice(), 0, 4, &Datatype::BYTE).unwrap_err();
+            assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+            // Both file pointers start at EOF (§7.2.2.1), so pointer
+            // writes append instead of overwriting the head.
+            assert_eq!(f.get_position().unwrap(), 16);
+            assert_eq!(f.get_position_shared().unwrap(), 16);
+            f.write(vec![9u8; 4].as_slice(), 0, 4, &Datatype::BYTE).unwrap();
+            assert_eq!(f.get_position().unwrap(), 20);
+            f.close().unwrap();
+        });
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(raw.len(), 20, "pointer write must land at EOF");
+        assert!(raw[..16].iter().all(|&v| v == 7), "existing data must survive APPEND writes");
+        assert!(raw[16..].iter().all(|&v| v == 9));
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn sequential_mode_rejects_mixed_positioning() {
+        let path = tmp("seq");
+        std::fs::write(&path, vec![9u8; 64]).unwrap();
+        threads::run(1, |c| {
+            let f =
+                File::open(c, &path, amode::RDONLY | amode::SEQUENTIAL, Info::null()).unwrap();
+            let mut b = vec![0u8; 8];
+            let e = f.read_at(0, b.as_mut_slice(), 0, 8, &Datatype::BYTE).unwrap_err();
+            assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+            let e = f.read(b.as_mut_slice(), 0, 8, &Datatype::BYTE).unwrap_err();
+            assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+            // Shared-pointer access is the sequential mode's one path.
+            let st = f.read_shared(b.as_mut_slice(), 0, 8, &Datatype::BYTE).unwrap();
+            assert_eq!(st.bytes, 8);
+            assert!(b.iter().all(|&v| v == 9));
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn submission_accessors_reject_mismatches() {
+        assert!(Submission::Begun.status().is_err());
+        assert!(Submission::Done(Status::of_bytes(1)).request().is_err());
+        assert!(Submission::Done(Status::of_bytes(1)).begun().is_err());
+        assert_eq!(Submission::Done(Status::of_bytes(9)).status().unwrap().bytes, 9);
+        assert!(Submission::Begun.begun().is_ok());
+    }
+}

@@ -1,5 +1,5 @@
 //! The `IoScheduler` — the single executor every compiled [`IoPlan`]
-//! runs on.
+//! runs on — and its [`PlanCache`].
 //!
 //! Compilation ([`crate::io::plan`]) decides *what* bytes move;
 //! scheduling decides *how and when*, in one of three modes (the
@@ -20,19 +20,140 @@
 //!   the blocking `*_ALL` routines or on the engine for the split and
 //!   MPI-3.1 nonblocking collectives.
 //!
+//! Since every access cell funnels through the [`AccessOp`] core
+//! ([`crate::io::op`]), the scheduler is the one place plan reuse can
+//! live: [`PlanCache`] memoizes compiled plans keyed by *(view identity,
+//! direction, atomicity, etype offset, payload length)* — the steady
+//! state of every bench repeats the same access shape, and a hit skips
+//! the whole view flatten/coalesce pass, not just the view's run cache.
+//!
 //! Execution routes through the access strategy's plan entry points, or
 //! hands whole multi-run plans straight to storage backends that dispatch
 //! vectored plans themselves
 //! ([`crate::storage::StorageFile::prefers_plan_execution`] — the striped
 //! backend's per-server concurrent fan-out).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::comm::Status;
-use crate::io::access::TransferCtx;
 use crate::io::collective::WriteIoWork;
 use crate::io::engine::{self, Request};
 use crate::io::errors::Result;
+use crate::io::op::{Direction, TransferCtx};
 use crate::io::plan::IoPlan;
+use crate::io::view::FileView;
 use crate::strategy::{AccessStrategy, ViewBufStrategy};
+
+/// Capacity of the per-file plan cache. Small on purpose: the cache
+/// exists for the repeat-same-shape steady state, not as a general
+/// memoizer, and entries pin their `Arc<FileView>` alive.
+const PLAN_CACHE_CAP: usize = 16;
+
+struct PlanCacheEntry {
+    /// The view the plan was compiled against. Holding the `Arc` keeps
+    /// the pointer alive, so identity comparison (`Arc::ptr_eq`) can
+    /// never alias a reallocated view.
+    view: Arc<FileView>,
+    direction: Direction,
+    atomic: bool,
+    etype_off: i64,
+    len: usize,
+    plan: Arc<IoPlan>,
+}
+
+/// Memoizes compiled [`IoPlan`]s per file handle, keyed by
+/// *(view identity, direction, atomicity, etype offset, payload len)*.
+/// A `set_view` installs a new `Arc<FileView>`, so stale entries can
+/// never match again and simply age out of the small LRU. Gap-free
+/// (contiguous) views bypass the cache entirely: their plans compile in
+/// O(1), and caching them would evict the noncontiguous flattens the
+/// cache exists to keep.
+pub(crate) struct PlanCache {
+    entries: Mutex<Vec<PlanCacheEntry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+impl PlanCache {
+    /// An empty cache (one per open file handle).
+    pub(crate) fn new() -> PlanCache {
+        PlanCache {
+            entries: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Return the cached plan for the key, or compile and insert it.
+    pub(crate) fn lookup(
+        &self,
+        view: &Arc<FileView>,
+        direction: Direction,
+        atomic: bool,
+        etype_off: i64,
+        len: usize,
+    ) -> Result<Arc<IoPlan>> {
+        // Gap-free views compile to a single run in O(1) — IoPlan's own
+        // fast path. Caching them would only churn the LRU slots the
+        // expensive noncontiguous flattens need, so they bypass the
+        // cache (and its counters).
+        if view.contiguous_run(etype_off, len).is_some() {
+            return Ok(Arc::new(IoPlan::compile(view, atomic, etype_off, len)?));
+        }
+        let probe = |entries: &mut Vec<PlanCacheEntry>| -> Option<Arc<IoPlan>> {
+            let i = entries.iter().position(|e| {
+                Arc::ptr_eq(&e.view, view)
+                    && e.direction == direction
+                    && e.atomic == atomic
+                    && e.etype_off == etype_off
+                    && e.len == len
+            })?;
+            let e = entries.remove(i);
+            let plan = e.plan.clone();
+            entries.insert(0, e);
+            Some(plan)
+        };
+        if let Some(plan) = probe(&mut self.entries.lock().unwrap()) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(plan);
+        }
+        // Compile outside the lock; the compile walk can be expensive.
+        let plan = Arc::new(IoPlan::compile(view, atomic, etype_off, len)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut entries = self.entries.lock().unwrap();
+        // Re-probe: a concurrent first access of the same shape may have
+        // inserted while we compiled — serve its entry rather than
+        // stuffing the small LRU with duplicates.
+        if let Some(existing) = probe(&mut entries) {
+            return Ok(existing);
+        }
+        entries.insert(
+            0,
+            PlanCacheEntry {
+                view: view.clone(),
+                direction,
+                atomic,
+                etype_off,
+                len,
+                plan: plan.clone(),
+            },
+        );
+        entries.truncate(PLAN_CACHE_CAP);
+        Ok(plan)
+    }
+
+    /// `(hits, misses)` counters.
+    pub(crate) fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
 
 /// Executes compiled plans; see the module docs for the three modes.
 pub(crate) struct IoScheduler;
@@ -68,14 +189,18 @@ impl IoScheduler {
 
     /// Engine-scheduled write: the caller keeps computing while the plan
     /// executes on the worker pool.
-    pub(crate) fn write_async(ctx: TransferCtx, plan: IoPlan, payload: Vec<u8>) -> Request<()> {
+    pub(crate) fn write_async(
+        ctx: TransferCtx,
+        plan: Arc<IoPlan>,
+        payload: Vec<u8>,
+    ) -> Request<()> {
         engine::submit(move || (Self::write(&ctx, &plan, &payload), ()))
     }
 
     /// Engine-scheduled read returning the packed payload.
     pub(crate) fn read_async(
         ctx: TransferCtx,
-        plan: IoPlan,
+        plan: Arc<IoPlan>,
         payload_len: usize,
     ) -> Request<Vec<u8>> {
         engine::submit(move || {
@@ -189,7 +314,7 @@ mod tests {
     fn async_plan_roundtrip() {
         let path = format!("/tmp/jpio-sched-async-{}", std::process::id());
         let c = ctx(&path);
-        let plan = IoPlan::from_runs(vec![(0, 6)], false);
+        let plan = Arc::new(IoPlan::from_runs(vec![(0, 6)], false));
         let req = IoScheduler::write_async(ctx(&path), plan.clone(), b"hello!".to_vec());
         let (st, ()) = req.wait().unwrap();
         assert_eq!(st.bytes, 6);
@@ -197,6 +322,66 @@ mod tests {
         assert_eq!(st.bytes, 6);
         assert_eq!(&payload, b"hello!");
         LocalBackend::instant().delete(&path).unwrap();
+    }
+
+    /// A strided (noncontiguous) view — the kind of plan the cache keeps.
+    fn strided_view() -> Arc<FileView> {
+        use crate::comm::datatype::Datatype;
+        use crate::io::datarep::DataRep;
+        let ft = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
+        let ft = Datatype::resized(&ft, 0, 16).unwrap();
+        Arc::new(FileView::new(0, Datatype::INT, ft, DataRep::Native).unwrap())
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeat_shapes_and_respects_identity() {
+        let cache = PlanCache::new();
+        let v1 = strided_view();
+        let p1 = cache.lookup(&v1, Direction::Read, false, 0, 64).unwrap();
+        assert_eq!(cache.stats(), (0, 1));
+        let p2 = cache.lookup(&v1, Direction::Read, false, 0, 64).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "same key must reuse the compiled plan");
+        assert_eq!(cache.stats(), (1, 1));
+        // Different direction, offset, len, atomicity: distinct keys.
+        cache.lookup(&v1, Direction::Write, false, 0, 64).unwrap();
+        cache.lookup(&v1, Direction::Read, false, 8, 64).unwrap();
+        cache.lookup(&v1, Direction::Read, false, 0, 32).unwrap();
+        cache.lookup(&v1, Direction::Read, true, 0, 64).unwrap();
+        assert_eq!(cache.stats(), (1, 5));
+        // A new view Arc (set_view) never matches the old identity.
+        let v2 = strided_view();
+        cache.lookup(&v2, Direction::Read, false, 0, 64).unwrap();
+        assert_eq!(cache.stats(), (1, 6));
+    }
+
+    #[test]
+    fn plan_cache_bypasses_contiguous_views() {
+        // Gap-free views compile O(1); they must not occupy LRU slots or
+        // touch the counters.
+        let cache = PlanCache::new();
+        let flat = Arc::new(FileView::default());
+        let p = cache.lookup(&flat, Direction::Read, false, 3, 64).unwrap();
+        assert_eq!(p.runs, vec![(3, 64)]);
+        cache.lookup(&flat, Direction::Read, false, 3, 64).unwrap();
+        assert_eq!(cache.stats(), (0, 0), "contiguous plans must bypass the cache");
+    }
+
+    #[test]
+    fn plan_cache_evicts_beyond_capacity() {
+        let cache = PlanCache::new();
+        let v = strided_view();
+        for i in 0..(PLAN_CACHE_CAP + 4) {
+            cache.lookup(&v, Direction::Read, false, i as i64, 8).unwrap();
+        }
+        // The oldest keys were evicted: looking one up again is a miss.
+        let (_, misses_before) = cache.stats();
+        cache.lookup(&v, Direction::Read, false, 0, 8).unwrap();
+        let (_, misses_after) = cache.stats();
+        assert_eq!(misses_after, misses_before + 1);
+        // The most recent key is still cached.
+        let (hits_before, _) = cache.stats();
+        cache.lookup(&v, Direction::Read, false, (PLAN_CACHE_CAP + 3) as i64, 8).unwrap();
+        assert_eq!(cache.stats().0, hits_before + 1);
     }
 
     #[test]

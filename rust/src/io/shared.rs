@@ -9,6 +9,12 @@
 //! The ordered collectives (`READ_ORDERED`/`WRITE_ORDERED`) instead give
 //! each rank the prefix-sum offset of the ranks before it (rank order), a
 //! deterministic single pass over the pointer.
+//!
+//! The data-access routines are thin wrappers over the [`AccessOp`] core
+//! ([`crate::io::op`]): pointer reservation (sidecar fetch-and-add or the
+//! ordered prefix-sum pass below) happens inside the core's
+//! offset-resolution stage; this module owns only the sidecar mechanism
+//! and the pointer-manipulation routines.
 
 use std::os::unix::io::AsRawFd;
 
@@ -17,6 +23,7 @@ use crate::comm::Status;
 use crate::io::engine::Request;
 use crate::io::errors::{err_arg, IoError, Result};
 use crate::io::file::{seek, File};
+use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism};
 
 impl File<'_> {
     /// Atomically fetch the shared pointer (etype units) and advance it by
@@ -45,86 +52,15 @@ impl File<'_> {
         result
     }
 
-    /// `MPI_FILE_READ_SHARED`: blocking noncollective read at the shared
-    /// pointer; the pointer advances by the requested etype count.
-    pub fn read_shared(
-        &self,
-        buf: &mut (impl IoBufMut + ?Sized),
-        buf_offset: usize,
-        count: usize,
-        datatype: &Datatype,
-    ) -> Result<Status> {
-        self.check_open()?;
-        self.check_readable()?;
-        let view = self.view_snapshot();
-        let etypes = view.bytes_to_etypes(count * datatype.size());
-        let off = self.sfp_fetch_add(etypes)?;
-        self.read_at(off, buf, buf_offset, count, datatype)
-    }
-
-    /// `MPI_FILE_WRITE_SHARED`: blocking noncollective write at the
-    /// shared pointer.
-    pub fn write_shared(
-        &self,
-        buf: &(impl IoBuf + ?Sized),
-        buf_offset: usize,
-        count: usize,
-        datatype: &Datatype,
-    ) -> Result<Status> {
-        self.check_open()?;
-        self.check_writable()?;
-        let view = self.view_snapshot();
-        let etypes = view.bytes_to_etypes(count * datatype.size());
-        let off = self.sfp_fetch_add(etypes)?;
-        self.write_at(off, buf, buf_offset, count, datatype)
-    }
-
-    /// `MPI_FILE_IREAD_SHARED`: nonblocking shared-pointer read.
-    pub fn iread_shared<T>(
-        &self,
-        buf: Vec<T>,
-        buf_offset: usize,
-        count: usize,
-        datatype: &Datatype,
-    ) -> Result<Request<Vec<T>>>
-    where
-        T: Send + 'static,
-        [T]: IoBufMut,
-    {
-        self.check_open()?;
-        self.check_readable()?;
-        let view = self.view_snapshot();
-        let etypes = view.bytes_to_etypes(count * datatype.size());
-        // Pointer reservation is immediate (ordering guarantee); only the
-        // transfer is asynchronous.
-        let off = self.sfp_fetch_add(etypes)?;
-        self.iread_at(off, buf, buf_offset, count, datatype)
-    }
-
-    /// `MPI_FILE_IWRITE_SHARED`: nonblocking shared-pointer write.
-    pub fn iwrite_shared(
-        &self,
-        buf: &(impl IoBuf + ?Sized),
-        buf_offset: usize,
-        count: usize,
-        datatype: &Datatype,
-    ) -> Result<Request<()>> {
-        self.check_open()?;
-        self.check_writable()?;
-        let view = self.view_snapshot();
-        let etypes = view.bytes_to_etypes(count * datatype.size());
-        let off = self.sfp_fetch_add(etypes)?;
-        self.iwrite_at(off, buf, buf_offset, count, datatype)
-    }
-
-    /// Offsets for an ordered collective: returns `(my_offset, total)`
-    /// in etypes and advances the shared pointer by `total` (once).
+    /// Offsets for an ordered collective: returns this rank's prefix-sum
+    /// offset (etypes) and advances the shared pointer by the global
+    /// total (once).
     pub(crate) fn ordered_offsets(&self, my_etypes: i64) -> Result<i64> {
         // Base: rank 0 reads the pointer; everyone gets base + prefix.
         let mut base_bytes = if self.comm.rank() == 0 {
             self.read_sfp()?.to_le_bytes().to_vec()
         } else {
-            Vec::new()
+            vec![0u8; 8]
         };
         self.comm.bcast(0, &mut base_bytes);
         let base = i64::from_le_bytes(base_bytes[..8].try_into().unwrap());
@@ -138,6 +74,90 @@ impl File<'_> {
         Ok(base + prefix)
     }
 
+    /// `MPI_FILE_READ_SHARED`: blocking noncollective read at the shared
+    /// pointer; the pointer advances by the requested etype count.
+    pub fn read_shared(
+        &self,
+        buf: &mut (impl IoBufMut + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let op = AccessOp::read(
+            Positioning::Shared,
+            Coordination::Independent,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
+    }
+
+    /// `MPI_FILE_WRITE_SHARED`: blocking noncollective write at the
+    /// shared pointer.
+    pub fn write_shared(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Status> {
+        let op = AccessOp::write(
+            Positioning::Shared,
+            Coordination::Independent,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.status()
+    }
+
+    /// `MPI_FILE_IREAD_SHARED`: nonblocking shared-pointer read. Pointer
+    /// reservation is immediate (ordering guarantee); only the transfer
+    /// is asynchronous.
+    pub fn iread_shared<T>(
+        &self,
+        buf: Vec<T>,
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        let op = AccessOp::read(
+            Positioning::Shared,
+            Coordination::Independent,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read_owned(&op, buf)
+    }
+
+    /// `MPI_FILE_IWRITE_SHARED`: nonblocking shared-pointer write.
+    pub fn iwrite_shared(
+        &self,
+        buf: &(impl IoBuf + ?Sized),
+        buf_offset: usize,
+        count: usize,
+        datatype: &Datatype,
+    ) -> Result<Request<()>> {
+        let op = AccessOp::write(
+            Positioning::Shared,
+            Coordination::Independent,
+            Synchronism::Nonblocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.request()
+    }
+
     /// `MPI_FILE_READ_ORDERED`: collective shared-pointer read in rank
     /// order.
     pub fn read_ordered(
@@ -147,14 +167,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.check_open()?;
-        self.check_readable()?;
-        let view = self.view_snapshot();
-        let my = view.bytes_to_etypes(count * datatype.size());
-        let off = self.ordered_offsets(my)?;
-        let st = self.read_at(off, buf, buf_offset, count, datatype)?;
-        self.comm.barrier();
-        Ok(st)
+        let op = AccessOp::read(
+            Positioning::Shared,
+            Coordination::Ordered,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     /// `MPI_FILE_WRITE_ORDERED`: collective shared-pointer write in rank
@@ -166,14 +187,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.check_open()?;
-        self.check_writable()?;
-        let view = self.view_snapshot();
-        let my = view.bytes_to_etypes(count * datatype.size());
-        let off = self.ordered_offsets(my)?;
-        let st = self.write_at(off, buf, buf_offset, count, datatype)?;
-        self.comm.barrier();
-        Ok(st)
+        let op = AccessOp::write(
+            Positioning::Shared,
+            Coordination::Ordered,
+            Synchronism::Blocking,
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.status()
     }
 
     /// `MPI_FILE_SEEK_SHARED`: collective seek of the shared pointer. All

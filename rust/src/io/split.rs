@@ -1,141 +1,34 @@
 //! Split collective data access (§7.2.4.5): `*_BEGIN` / `*_END` pairs.
 //!
-//! MPI's rules, all enforced here: at most one split collective may be
-//! active per file handle; the `END` call must match the pending `BEGIN`;
-//! the buffer must not be touched in between (expressed in Rust by moving
-//! ownership through the request, like the nonblocking ops).
+//! MPI's rules, all enforced by the [`AccessOp`] core
+//! ([`crate::io::op`]): at most one split collective may be active per
+//! file handle; the `END` call must match the pending `BEGIN` (the
+//! matching tag is *derived* from the op's matrix cell); the buffer must
+//! not be touched in between (expressed in Rust by binding the read
+//! buffer only at `END`, like the nonblocking ops' ownership transfer).
 //!
 //! For writes, the communication (exchange) phase runs in `BEGIN` and the
-//! storage phase is handed to the [`IoScheduler`]'s engine mode — so
-//! computation between `BEGIN` and `END` genuinely overlaps the file I/O,
-//! which is the whole point of the double-buffering pattern in §7.2.9.1.
-//! Reads complete their aggregation in `BEGIN` (the reply exchange needs
-//! the communicator, which cannot leave the calling thread) and hand the
+//! storage phase lands on the request engine — so computation between
+//! `BEGIN` and `END` genuinely overlaps the file I/O, which is the whole
+//! point of the double-buffering pattern in §7.2.9.1. Reads complete
+//! their aggregation in `BEGIN` (the reply exchange needs the
+//! communicator, which cannot leave the calling thread) and hand the
 //! payload to `END`. The MPI-3.1 nonblocking collectives
 //! ([`File::iwrite_all`]/[`File::iread_all`]) follow exactly the same
 //! phase split, with a [`crate::io::engine::Request`] in place of the
 //! `END` call.
+//!
+//! Every routine here is a thin wrapper naming its matrix cell; `BEGIN`
+//! reads and `END` writes carry no buffer, so they pass an empty slice
+//! to the core (the core never touches it for those phases).
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::Status;
-use crate::io::access::{pack_payload, unpack_payload};
-use crate::io::collective::{collective_read, exchange_write};
-use crate::io::engine::Request;
-use crate::io::errors::{err_io, err_request, Result};
-use crate::io::file::{File, SplitPending};
-use crate::io::plan::IoPlan;
-use crate::io::schedule::IoScheduler;
-
-macro_rules! check_no_pending {
-    ($self:ident) => {{
-        let pending = $self.split.lock().unwrap();
-        if pending.is_some() {
-            return Err(err_request(
-                "a split collective is already active on this file handle",
-            ));
-        }
-        drop(pending);
-    }};
-}
+use crate::io::errors::Result;
+use crate::io::file::File;
+use crate::io::op::{AccessOp, Coordination, Positioning, SplitPhase, Synchronism};
 
 impl File<'_> {
-    fn stash(&self, p: SplitPending) {
-        *self.split.lock().unwrap() = Some(p);
-    }
-
-    fn take_pending(&self, want: &'static str) -> Result<SplitPending> {
-        let mut slot = self.split.lock().unwrap();
-        match slot.take() {
-            None => Err(err_request(format!("{want}: no split collective is active"))),
-            Some(p) => {
-                let kind = match &p {
-                    SplitPending::Read { kind, .. } | SplitPending::Write { kind, .. } => kind,
-                };
-                if *kind != want {
-                    let msg = format!("{want} does not match pending {kind}");
-                    *slot = Some(p);
-                    return Err(err_request(msg));
-                }
-                Ok(p)
-            }
-        }
-    }
-
-    fn begin_write(
-        &self,
-        kind: &'static str,
-        offset: Offset,
-        buf: &(impl IoBuf + ?Sized),
-        buf_offset: usize,
-        count: usize,
-        datatype: &Datatype,
-    ) -> Result<()> {
-        self.check_open()?;
-        self.check_writable()?;
-        check_no_pending!(self);
-        let ctx = self.transfer_ctx();
-        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        let cb = self.cb_params();
-        // Exchange phase: synchronous (uses the communicator).
-        let (work, bytes) = exchange_write(self.comm, &ctx, &cb, offset, &payload)?;
-        // I/O phase: scheduled on the engine.
-        let req = IoScheduler::write_phase_async(ctx, work, bytes);
-        self.stash(SplitPending::Write { kind, req });
-        Ok(())
-    }
-
-    fn end_write(&self, kind: &'static str) -> Result<Status> {
-        match self.take_pending(kind)? {
-            SplitPending::Write { req, .. } => {
-                let (st, ()) = req.wait()?;
-                // Collective completion.
-                self.comm.barrier();
-                Ok(st)
-            }
-            SplitPending::Read { .. } => unreachable!("kind checked in take_pending"),
-        }
-    }
-
-    fn begin_read(
-        &self,
-        kind: &'static str,
-        offset: Offset,
-        payload_len: usize,
-    ) -> Result<()> {
-        self.check_open()?;
-        self.check_readable()?;
-        check_no_pending!(self);
-        let ctx = self.transfer_ctx();
-        let cb = self.cb_params();
-        let mut payload = vec![0u8; payload_len];
-        let got = collective_read(self.comm, &ctx, &cb, offset, &mut payload)?;
-        payload.truncate(payload_len);
-        let req = Request::ready(Status::of_bytes(got), payload);
-        self.stash(SplitPending::Read { kind, req });
-        Ok(())
-    }
-
-    fn end_read(
-        &self,
-        kind: &'static str,
-        buf: &mut (impl IoBufMut + ?Sized),
-        buf_offset: usize,
-        count: usize,
-        datatype: &Datatype,
-    ) -> Result<Status> {
-        match self.take_pending(kind)? {
-            SplitPending::Read { req, .. } => {
-                let (st, payload) = req.wait()?;
-                if payload.len() < count * datatype.size() {
-                    return Err(err_io("split read payload shorter than END request"));
-                }
-                unpack_payload(buf, buf_offset, count, datatype, &payload, st.bytes)?;
-                Ok(st)
-            }
-            SplitPending::Write { .. } => unreachable!("kind checked in take_pending"),
-        }
-    }
-
     // ------------------------------------------------------------------
     // Explicit offsets (§7.2.4.5)
     // ------------------------------------------------------------------
@@ -147,7 +40,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<()> {
-        self.begin_read("readAtAllEnd", offset, count * datatype.size())
+        let op = AccessOp::read(
+            Positioning::Explicit(offset),
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::Begin),
+            0,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, [0u8; 0].as_mut_slice()).map(|_| ())
     }
 
     /// `MPI_FILE_READ_AT_ALL_END`.
@@ -158,7 +59,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.end_read("readAtAllEnd", buf, buf_offset, count, datatype)
+        let op = AccessOp::read(
+            Positioning::Explicit(0),
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::End),
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     /// `MPI_FILE_WRITE_AT_ALL_BEGIN`.
@@ -170,26 +79,46 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<()> {
-        self.begin_write("writeAtAllEnd", offset, buf, buf_offset, count, datatype)
+        let op = AccessOp::write(
+            Positioning::Explicit(offset),
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::Begin),
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.begun()
     }
 
     /// `MPI_FILE_WRITE_AT_ALL_END`.
     pub fn write_at_all_end(&self) -> Result<Status> {
-        self.end_write("writeAtAllEnd")
+        let op = AccessOp::write(
+            Positioning::Explicit(0),
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::End),
+            0,
+            0,
+            &Datatype::BYTE,
+        );
+        self.submit_write(&op, [0u8; 0].as_slice())?.status()
     }
 
     // ------------------------------------------------------------------
     // Individual file pointers (§7.2.4.5)
     // ------------------------------------------------------------------
 
-    /// `MPI_FILE_READ_ALL_BEGIN`.
+    /// `MPI_FILE_READ_ALL_BEGIN`. The individual pointer advances
+    /// immediately by the full request size.
     pub fn read_all_begin(&self, count: usize, datatype: &Datatype) -> Result<()> {
-        let view = self.view_snapshot();
-        let mut ptr = self.indiv_ptr.lock().unwrap();
-        let off = *ptr;
-        *ptr = off + view.bytes_to_etypes(count * datatype.size());
-        drop(ptr);
-        self.begin_read("readAllEnd", off, count * datatype.size())
+        let op = AccessOp::read(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::Begin),
+            0,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, [0u8; 0].as_mut_slice()).map(|_| ())
     }
 
     /// `MPI_FILE_READ_ALL_END`.
@@ -200,10 +129,19 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        self.end_read("readAllEnd", buf, buf_offset, count, datatype)
+        let op = AccessOp::read(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::End),
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
-    /// `MPI_FILE_WRITE_ALL_BEGIN`.
+    /// `MPI_FILE_WRITE_ALL_BEGIN`. The individual pointer advances
+    /// immediately by the full request size.
     pub fn write_all_begin(
         &self,
         buf: &(impl IoBuf + ?Sized),
@@ -211,17 +149,28 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<()> {
-        let view = self.view_snapshot();
-        let mut ptr = self.indiv_ptr.lock().unwrap();
-        let off = *ptr;
-        *ptr = off + view.bytes_to_etypes(count * datatype.size());
-        drop(ptr);
-        self.begin_write("writeAllEnd", off, buf, buf_offset, count, datatype)
+        let op = AccessOp::write(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::Begin),
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.begun()
     }
 
     /// `MPI_FILE_WRITE_ALL_END`.
     pub fn write_all_end(&self) -> Result<Status> {
-        self.end_write("writeAllEnd")
+        let op = AccessOp::write(
+            Positioning::Individual,
+            Coordination::Collective,
+            Synchronism::Split(SplitPhase::End),
+            0,
+            0,
+            &Datatype::BYTE,
+        );
+        self.submit_write(&op, [0u8; 0].as_slice())?.status()
     }
 
     // ------------------------------------------------------------------
@@ -230,18 +179,15 @@ impl File<'_> {
 
     /// `MPI_FILE_READ_ORDERED_BEGIN`.
     pub fn read_ordered_begin(&self, count: usize, datatype: &Datatype) -> Result<()> {
-        self.check_open()?;
-        self.check_readable()?;
-        check_no_pending!(self);
-        let view = self.view_snapshot();
-        let my = view.bytes_to_etypes(count * datatype.size());
-        let off = self.ordered_offsets(my)?;
-        let ctx = self.transfer_ctx();
-        let len = count * datatype.size();
-        let plan = IoPlan::compile(&ctx.view, ctx.atomic, off, len)?;
-        let req = IoScheduler::read_async(ctx, plan, len);
-        self.stash(SplitPending::Read { kind: "readOrderedEnd", req });
-        Ok(())
+        let op = AccessOp::read(
+            Positioning::Shared,
+            Coordination::Ordered,
+            Synchronism::Split(SplitPhase::Begin),
+            0,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, [0u8; 0].as_mut_slice()).map(|_| ())
     }
 
     /// `MPI_FILE_READ_ORDERED_END`.
@@ -252,9 +198,15 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<Status> {
-        let st = self.end_read("readOrderedEnd", buf, buf_offset, count, datatype)?;
-        self.comm.barrier();
-        Ok(st)
+        let op = AccessOp::read(
+            Positioning::Shared,
+            Coordination::Ordered,
+            Synchronism::Split(SplitPhase::End),
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_read(&op, buf)
     }
 
     /// `MPI_FILE_WRITE_ORDERED_BEGIN`.
@@ -265,24 +217,28 @@ impl File<'_> {
         count: usize,
         datatype: &Datatype,
     ) -> Result<()> {
-        self.check_open()?;
-        self.check_writable()?;
-        check_no_pending!(self);
-        let view = self.view_snapshot();
-        let my = view.bytes_to_etypes(count * datatype.size());
-        let off = self.ordered_offsets(my)?;
-        let ctx = self.transfer_ctx();
-        let payload = pack_payload(buf, buf_offset, count, datatype, &ctx.view)?.into_owned();
-        let plan = IoPlan::compile(&ctx.view, ctx.atomic, off, payload.len())?;
-        let req = IoScheduler::write_async(ctx, plan, payload);
-        self.stash(SplitPending::Write { kind: "writeOrderedEnd", req });
-        Ok(())
+        let op = AccessOp::write(
+            Positioning::Shared,
+            Coordination::Ordered,
+            Synchronism::Split(SplitPhase::Begin),
+            buf_offset,
+            count,
+            datatype,
+        );
+        self.submit_write(&op, buf)?.begun()
     }
 
     /// `MPI_FILE_WRITE_ORDERED_END`.
     pub fn write_ordered_end(&self) -> Result<Status> {
-        let st = self.end_write("writeOrderedEnd")?;
-        Ok(st)
+        let op = AccessOp::write(
+            Positioning::Shared,
+            Coordination::Ordered,
+            Synchronism::Split(SplitPhase::End),
+            0,
+            0,
+            &Datatype::BYTE,
+        );
+        self.submit_write(&op, [0u8; 0].as_slice())?.status()
     }
 }
 

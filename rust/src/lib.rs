@@ -12,8 +12,11 @@
 //!   nonblocking collectives, file views, consistency semantics,
 //!   collective two-phase I/O, split collectives, shared file pointers,
 //!   nonblocking requests, Info hints, data representations, error
-//!   classes), with every access family compiled into one [`io::IoPlan`]
-//!   representation and executed by the `io::schedule::IoScheduler`.
+//!   classes), with every data-access routine a thin wrapper over the
+//!   orthogonal [`io::AccessOp`] descriptor core (`io/op.rs`): one
+//!   submit path compiles each access into an [`io::IoPlan`] and
+//!   executes it on the `io::schedule::IoScheduler` (with plan caching
+//!   for repeated same-shape accesses).
 //! * [`strategy`] — the four file-access strategies the paper evaluates
 //!   (per-item, bulk, view-buffer, memory-mapped).
 //! * [`storage`] — storage substrates: local disk, a simulated NFS

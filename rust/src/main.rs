@@ -2,6 +2,9 @@
 //!
 //! ```text
 //! jpio routines                     # the routine matrix (Table 3-1/7-1 + MPI-3.1)
+//! jpio routines --check             # verify the derived matrix: 56 unique
+//!                                   # routines, every transfer wrapper
+//!                                   # dispatches (exits nonzero on drift)
 //! jpio testbed [--cluster rcms]     # Tables 4-1 / 4-2
 //! jpio artifacts [--dir artifacts]  # load + list PJRT artifacts
 //! jpio demo [--ranks 4] [--backend nfs] [--procs]
@@ -20,7 +23,7 @@ use jpio::io::{amode, File, Info};
 fn main() {
     let args = Args::from_env();
     match args.command.as_deref() {
-        Some("routines") => routines(),
+        Some("routines") => routines(&args),
         Some("testbed") => testbed(&args),
         Some("artifacts") => artifacts(&args),
         Some("demo") => demo(&args),
@@ -38,7 +41,7 @@ fn main() {
     }
 }
 
-fn routines() {
+fn routines(args: &Args) {
     println!("MPJ-IO data-access & manipulation routines (Table 3-1 / 7-1):");
     println!("{:<36} {:<36} status", "MPI routine", "jpio binding");
     for (mpi, rust) in jpio::io::routine_matrix() {
@@ -46,8 +49,133 @@ fn routines() {
     }
     println!(
         "\n56/56 routines implemented: the 52-routine MPI-2.2 matrix plus the \
-         MPI-3.1 nonblocking collectives (the paper's prototype had 19)."
+         MPI-3.1 nonblocking collectives (the paper's prototype had 19). The \
+         34 transfer routines are derived from the AccessOp dimensions."
     );
+    if args.has("check") {
+        routines_check();
+    }
+}
+
+/// `jpio routines --check`: fail (exit nonzero) if the derived matrix is
+/// not 56 unique routines / 34 unique transfer cells, or if any public
+/// wrapper fails to dispatch through the `AccessOp` core. The dispatch
+/// sweep runs every one of the 34 transfer wrappers on a 2-rank world;
+/// the match in [`dispatch_all_cells`] is the compile-time guarantee that
+/// a wrapper exists for every derived cell.
+fn routines_check() {
+    let m = jpio::io::routine_matrix();
+    let mut mpi: Vec<String> = m.iter().map(|(a, _)| a.clone()).collect();
+    mpi.sort_unstable();
+    mpi.dedup();
+    let mut methods: Vec<String> = m.iter().map(|(_, b)| b.clone()).collect();
+    methods.sort_unstable();
+    methods.dedup();
+    let cells = jpio::io::access_cells();
+    if m.len() != 56 || mpi.len() != 56 || methods.len() != 56 || cells.len() != 34 {
+        eprintln!(
+            "routine matrix check: FAILED (routines={}, unique mpi={}, unique methods={}, \
+             transfer cells={}; expected 56/56/56/34)",
+            m.len(),
+            mpi.len(),
+            methods.len(),
+            cells.len()
+        );
+        std::process::exit(1);
+    }
+    let path = format!("/tmp/jpio-routines-check-{}.dat", std::process::id());
+    // A wrapper that panics or errors fails the rank thread, which
+    // propagates out of threads::run and exits nonzero.
+    threads::run(2, |c| dispatch_all_cells(c, &path));
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    println!(
+        "routine matrix check: OK (56 routines, 34 derived transfer cells, every \
+         wrapper dispatches through the AccessOp core)"
+    );
+}
+
+/// Exercise all 34 transfer wrappers — one call per derived cell — on a
+/// small shared file. Layout: ints, rank r owns [r*64, (r+1)*64).
+fn dispatch_all_cells(c: &dyn Comm, path: &str) {
+    use jpio::io::seek;
+    let f = File::open(c, path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+    f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+    let r = c.rank() as i64;
+    let k = 64usize;
+    let kb = k * 4;
+    let data: Vec<i32> = (0..k as i64).map(|i| (r * k as i64 + i) as i32).collect();
+    let mut back = vec![0i32; k];
+    // Explicit × independent × {blocking, nonblocking}.
+    assert_eq!(f.write_at(r * k as i64, data.as_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(f.read_at(r * k as i64, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(back, data);
+    f.iwrite_at(r * k as i64, data.as_slice(), 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    let (st, owned) = f.iread_at(r * k as i64, vec![0i32; k], 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    assert_eq!((st.bytes, &owned), (kb, &data));
+    // Explicit × collective × {blocking, nonblocking, split}.
+    assert_eq!(f.write_at_all(r * k as i64, data.as_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(f.read_at_all(r * k as i64, back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.iwrite_at_all(r * k as i64, data.as_slice(), 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    f.iread_at_all(r * k as i64, vec![0i32; k], 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    f.write_at_all_begin(r * k as i64, data.as_slice(), 0, k, &Datatype::INT).unwrap();
+    assert_eq!(f.write_at_all_end().unwrap().bytes, kb);
+    f.read_at_all_begin(r * k as i64, k, &Datatype::INT).unwrap();
+    assert_eq!(f.read_at_all_end(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(back, data);
+    // Individual × independent × {blocking, nonblocking}.
+    f.seek(r * k as i64, seek::SET).unwrap();
+    assert_eq!(f.write(data.as_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.seek(r * k as i64, seek::SET).unwrap();
+    assert_eq!(f.read(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.seek(r * k as i64, seek::SET).unwrap();
+    f.iwrite(data.as_slice(), 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    f.seek(r * k as i64, seek::SET).unwrap();
+    f.iread(vec![0i32; k], 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    // Individual × collective × {blocking, nonblocking, split}.
+    f.seek(r * k as i64, seek::SET).unwrap();
+    assert_eq!(f.write_all(data.as_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.seek(r * k as i64, seek::SET).unwrap();
+    assert_eq!(f.read_all(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.seek(r * k as i64, seek::SET).unwrap();
+    f.iwrite_all(data.as_slice(), 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    f.seek(r * k as i64, seek::SET).unwrap();
+    f.iread_all(vec![0i32; k], 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    f.seek(r * k as i64, seek::SET).unwrap();
+    f.write_all_begin(data.as_slice(), 0, k, &Datatype::INT).unwrap();
+    assert_eq!(f.write_all_end().unwrap().bytes, kb);
+    f.seek(r * k as i64, seek::SET).unwrap();
+    f.read_all_begin(k, &Datatype::INT).unwrap();
+    assert_eq!(f.read_all_end(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(back, data);
+    // Shared × independent × {blocking, nonblocking}: racing ranks, so
+    // write identical bytes and assert sizes only.
+    let same: Vec<i32> = (0..k as i32).collect();
+    c.barrier();
+    f.seek_shared(0, seek::SET).unwrap();
+    c.barrier();
+    assert_eq!(f.write_shared(same.as_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.iwrite_shared(same.as_slice(), 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    c.barrier();
+    f.seek_shared(0, seek::SET).unwrap();
+    c.barrier();
+    assert_eq!(f.read_shared(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.iread_shared(vec![0i32; k], 0, k, &Datatype::INT).unwrap().wait().unwrap();
+    // Shared × ordered × {blocking, split}.
+    c.barrier();
+    f.seek_shared(0, seek::SET).unwrap();
+    assert_eq!(f.write_ordered(data.as_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    f.seek_shared(0, seek::SET).unwrap();
+    assert_eq!(f.read_ordered(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(back, data);
+    f.seek_shared(0, seek::SET).unwrap();
+    f.write_ordered_begin(data.as_slice(), 0, k, &Datatype::INT).unwrap();
+    assert_eq!(f.write_ordered_end().unwrap().bytes, kb);
+    f.seek_shared(0, seek::SET).unwrap();
+    f.read_ordered_begin(k, &Datatype::INT).unwrap();
+    assert_eq!(f.read_ordered_end(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
+    assert_eq!(back, data);
+    f.close().unwrap();
 }
 
 fn testbed(args: &Args) {

@@ -5,9 +5,10 @@
 use std::sync::Arc;
 
 use jpio::comm::{threads, Comm, Datatype};
-use jpio::io::{amode, ErrorClass, File, Info};
+use jpio::io::{amode, ErrorClass, File, Info, IoError};
 use jpio::storage::faults::{FaultBackend, FaultOp, FaultPlan, FaultRule};
 use jpio::storage::local::LocalBackend;
+use jpio::storage::{Backend, OpenOptions, StorageFile};
 
 fn tmp(name: &str) -> String {
     format!("/tmp/jpio-errors-{}-{name}", std::process::id())
@@ -154,6 +155,46 @@ fn open_error_classes() {
         .unwrap_err();
         assert_eq!(err.class, ErrorClass::Arg);
     });
+}
+
+/// A backend whose every `open` fails with `MPI_ERR_FILE`.
+struct FailingOpenBackend;
+
+impl Backend for FailingOpenBackend {
+    fn open(&self, _path: &str, _opts: OpenOptions) -> jpio::io::errors::Result<Arc<dyn StorageFile>> {
+        Err(IoError::new(ErrorClass::File, "injected open failure"))
+    }
+
+    fn delete(&self, _path: &str) -> jpio::io::errors::Result<()> {
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "failing-open"
+    }
+}
+
+#[test]
+fn collective_open_failure_reports_file_error_on_all_ranks() {
+    // Regression: the rank-0 success broadcast used to hand the
+    // communicator a discarded temporary as its flag buffer. With a real
+    // buffer on both sides, a failed rank-0 open must surface
+    // MPI_ERR_FILE on *every* rank — rank 0 from the backend, the rest
+    // from the broadcast flag — instead of hanging or misreading the
+    // flag.
+    threads::run(3, |c| {
+        let err = File::open_with_backend(
+            c,
+            "/tmp/jpio-failing-open.dat",
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            Arc::new(FailingOpenBackend),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert_eq!(err.class, ErrorClass::File, "rank {} got {:?}", c.rank(), err.class);
+    });
+    let _ = std::fs::remove_file("/tmp/jpio-failing-open.dat.jpio-sfp");
 }
 
 #[test]

@@ -1,0 +1,411 @@
+//! Matrix-sweep property test: every public data-access wrapper must
+//! produce byte-identical file contents and equal `Status` counts to the
+//! `AccessOp` core submit path (`File::submit_read` / `File::submit_write`
+//! / `File::submit_read_owned`).
+//!
+//! The sweep enumerates the legal (positioning × coordination ×
+//! synchronism) cells derived by `io::op` — split `*_begin`/`*_end`
+//! executed as one pair — crossed with {contiguous, vector-view} file
+//! views and {native, external32} data representations. Each scenario
+//! runs twice on a 2-rank world (once through the wrapper, once through
+//! a directly-constructed `AccessOp`) and the two runs must agree on the
+//! raw file bytes, the per-rank write/read `Status`, and the data read
+//! back.
+
+use jpio::comm::{threads, Comm, Datatype};
+use jpio::io::op::cell_is_legal;
+use jpio::io::{
+    amode, seek, AccessOp, Coordination, File, Info, Positioning, PositioningKind, SplitPhase,
+    Synchronism,
+};
+
+const K: usize = 16; // ints per rank per transfer
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Mode {
+    Blocking,
+    Nonblocking,
+    SplitPair,
+}
+
+impl Mode {
+    fn sync(self) -> Synchronism {
+        match self {
+            Mode::Blocking => Synchronism::Blocking,
+            Mode::Nonblocking => Synchronism::Nonblocking,
+            Mode::SplitPair => Synchronism::Split(SplitPhase::Begin),
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ViewKind {
+    Contig,
+    Vector,
+}
+
+/// Per-rank observation of one scenario run.
+type RankResult = (usize, usize, Option<usize>, Vec<i32>);
+
+fn positioning_for(pos: PositioningKind, off: i64) -> Positioning {
+    match pos {
+        PositioningKind::Explicit => Positioning::Explicit(off),
+        PositioningKind::Individual => Positioning::Individual,
+        PositioningKind::Shared => Positioning::Shared,
+    }
+}
+
+fn set_view_for(f: &File<'_>, view: ViewKind, datarep: &str, rank: usize, n: usize) {
+    match view {
+        ViewKind::Contig => {
+            f.set_view(0, &Datatype::INT, &Datatype::INT, datarep, &Info::null()).unwrap()
+        }
+        ViewKind::Vector => {
+            // The canonical interleave: rank r owns every n-th int.
+            let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+            let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+            f.set_view((rank * 4) as i64, &Datatype::INT, &ft, datarep, &Info::null()).unwrap()
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn do_write(
+    f: &File<'_>,
+    pos: PositioningKind,
+    coord: Coordination,
+    mode: Mode,
+    use_core: bool,
+    off: i64,
+    data: &[i32],
+) -> usize {
+    let dt = Datatype::INT;
+    if pos == PositioningKind::Individual {
+        f.seek(off, seek::SET).unwrap();
+    }
+    if use_core {
+        return match mode {
+            Mode::Blocking => {
+                let op = AccessOp::write(positioning_for(pos, off), coord, mode.sync(), 0, K, &dt);
+                f.submit_write(&op, data).unwrap().status().unwrap().bytes
+            }
+            Mode::Nonblocking => {
+                let op = AccessOp::write(positioning_for(pos, off), coord, mode.sync(), 0, K, &dt);
+                f.submit_write(&op, data).unwrap().request().unwrap().wait().unwrap().0.bytes
+            }
+            Mode::SplitPair => {
+                let op = AccessOp::write(positioning_for(pos, off), coord, mode.sync(), 0, K, &dt);
+                f.submit_write(&op, data).unwrap().begun().unwrap();
+                let end = AccessOp::write(
+                    positioning_for(pos, 0),
+                    coord,
+                    Synchronism::Split(SplitPhase::End),
+                    0,
+                    0,
+                    &Datatype::BYTE,
+                );
+                f.submit_write(&end, [0u8; 0].as_slice()).unwrap().status().unwrap().bytes
+            }
+        };
+    }
+    match (pos, coord, mode) {
+        (PositioningKind::Explicit, Coordination::Independent, Mode::Blocking) => {
+            f.write_at(off, data, 0, K, &dt).unwrap().bytes
+        }
+        (PositioningKind::Explicit, Coordination::Independent, Mode::Nonblocking) => {
+            f.iwrite_at(off, data, 0, K, &dt).unwrap().wait().unwrap().0.bytes
+        }
+        (PositioningKind::Explicit, Coordination::Collective, Mode::Blocking) => {
+            f.write_at_all(off, data, 0, K, &dt).unwrap().bytes
+        }
+        (PositioningKind::Explicit, Coordination::Collective, Mode::Nonblocking) => {
+            f.iwrite_at_all(off, data, 0, K, &dt).unwrap().wait().unwrap().0.bytes
+        }
+        (PositioningKind::Explicit, Coordination::Collective, Mode::SplitPair) => {
+            f.write_at_all_begin(off, data, 0, K, &dt).unwrap();
+            f.write_at_all_end().unwrap().bytes
+        }
+        (PositioningKind::Individual, Coordination::Independent, Mode::Blocking) => {
+            f.write(data, 0, K, &dt).unwrap().bytes
+        }
+        (PositioningKind::Individual, Coordination::Independent, Mode::Nonblocking) => {
+            f.iwrite(data, 0, K, &dt).unwrap().wait().unwrap().0.bytes
+        }
+        (PositioningKind::Individual, Coordination::Collective, Mode::Blocking) => {
+            f.write_all(data, 0, K, &dt).unwrap().bytes
+        }
+        (PositioningKind::Individual, Coordination::Collective, Mode::Nonblocking) => {
+            f.iwrite_all(data, 0, K, &dt).unwrap().wait().unwrap().0.bytes
+        }
+        (PositioningKind::Individual, Coordination::Collective, Mode::SplitPair) => {
+            f.write_all_begin(data, 0, K, &dt).unwrap();
+            f.write_all_end().unwrap().bytes
+        }
+        (PositioningKind::Shared, Coordination::Independent, Mode::Blocking) => {
+            f.write_shared(data, 0, K, &dt).unwrap().bytes
+        }
+        (PositioningKind::Shared, Coordination::Independent, Mode::Nonblocking) => {
+            f.iwrite_shared(data, 0, K, &dt).unwrap().wait().unwrap().0.bytes
+        }
+        (PositioningKind::Shared, Coordination::Ordered, Mode::Blocking) => {
+            f.write_ordered(data, 0, K, &dt).unwrap().bytes
+        }
+        (PositioningKind::Shared, Coordination::Ordered, Mode::SplitPair) => {
+            f.write_ordered_begin(data, 0, K, &dt).unwrap();
+            f.write_ordered_end().unwrap().bytes
+        }
+        other => panic!("no write wrapper for cell {other:?}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn do_read(
+    f: &File<'_>,
+    pos: PositioningKind,
+    coord: Coordination,
+    mode: Mode,
+    use_core: bool,
+    off: i64,
+    back: &mut [i32],
+) -> (usize, Option<usize>) {
+    let dt = Datatype::INT;
+    if pos == PositioningKind::Individual {
+        f.seek(off, seek::SET).unwrap();
+    }
+    let st = if use_core {
+        match mode {
+            Mode::Blocking => {
+                let op = AccessOp::read(positioning_for(pos, off), coord, mode.sync(), 0, K, &dt);
+                f.submit_read(&op, back).unwrap()
+            }
+            Mode::Nonblocking => {
+                let op = AccessOp::read(positioning_for(pos, off), coord, mode.sync(), 0, K, &dt);
+                let (st, buf) = f.submit_read_owned(&op, vec![0i32; K]).unwrap().wait().unwrap();
+                back.copy_from_slice(&buf);
+                st
+            }
+            Mode::SplitPair => {
+                let op = AccessOp::read(positioning_for(pos, off), coord, mode.sync(), 0, K, &dt);
+                f.submit_read(&op, [0u8; 0].as_mut_slice()).unwrap();
+                let end = AccessOp::read(
+                    positioning_for(pos, 0),
+                    coord,
+                    Synchronism::Split(SplitPhase::End),
+                    0,
+                    K,
+                    &dt,
+                );
+                f.submit_read(&end, back).unwrap()
+            }
+        }
+    } else {
+        match (pos, coord, mode) {
+            (PositioningKind::Explicit, Coordination::Independent, Mode::Blocking) => {
+                f.read_at(off, back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Explicit, Coordination::Independent, Mode::Nonblocking) => {
+                let (st, buf) = f.iread_at(off, vec![0i32; K], 0, K, &dt).unwrap().wait().unwrap();
+                back.copy_from_slice(&buf);
+                st
+            }
+            (PositioningKind::Explicit, Coordination::Collective, Mode::Blocking) => {
+                f.read_at_all(off, back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Explicit, Coordination::Collective, Mode::Nonblocking) => {
+                let (st, buf) =
+                    f.iread_at_all(off, vec![0i32; K], 0, K, &dt).unwrap().wait().unwrap();
+                back.copy_from_slice(&buf);
+                st
+            }
+            (PositioningKind::Explicit, Coordination::Collective, Mode::SplitPair) => {
+                f.read_at_all_begin(off, K, &dt).unwrap();
+                f.read_at_all_end(back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Individual, Coordination::Independent, Mode::Blocking) => {
+                f.read(back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Individual, Coordination::Independent, Mode::Nonblocking) => {
+                let (st, buf) = f.iread(vec![0i32; K], 0, K, &dt).unwrap().wait().unwrap();
+                back.copy_from_slice(&buf);
+                st
+            }
+            (PositioningKind::Individual, Coordination::Collective, Mode::Blocking) => {
+                f.read_all(back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Individual, Coordination::Collective, Mode::Nonblocking) => {
+                let (st, buf) = f.iread_all(vec![0i32; K], 0, K, &dt).unwrap().wait().unwrap();
+                back.copy_from_slice(&buf);
+                st
+            }
+            (PositioningKind::Individual, Coordination::Collective, Mode::SplitPair) => {
+                f.read_all_begin(K, &dt).unwrap();
+                f.read_all_end(back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Shared, Coordination::Independent, Mode::Blocking) => {
+                f.read_shared(back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Shared, Coordination::Independent, Mode::Nonblocking) => {
+                let (st, buf) = f.iread_shared(vec![0i32; K], 0, K, &dt).unwrap().wait().unwrap();
+                back.copy_from_slice(&buf);
+                st
+            }
+            (PositioningKind::Shared, Coordination::Ordered, Mode::Blocking) => {
+                f.read_ordered(back, 0, K, &dt).unwrap()
+            }
+            (PositioningKind::Shared, Coordination::Ordered, Mode::SplitPair) => {
+                f.read_ordered_begin(K, &dt).unwrap();
+                f.read_ordered_end(back, 0, K, &dt).unwrap()
+            }
+            other => panic!("no read wrapper for cell {other:?}"),
+        }
+    };
+    (st.bytes, st.count(&dt))
+}
+
+/// One full scenario: write each rank's slot through the cell, then read
+/// it back through the same cell. Returns per-rank
+/// `(write_bytes, read_bytes, read_count, data_read_back)`.
+fn run_scenario(
+    pos: PositioningKind,
+    coord: Coordination,
+    mode: Mode,
+    view: ViewKind,
+    datarep: &str,
+    use_core: bool,
+    path: &str,
+) -> Vec<RankResult> {
+    threads::run(2, |c| {
+        let f = File::open(c, path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let n = c.size();
+        let r = c.rank();
+        set_view_for(&f, view, datarep, r, n);
+        // Shared-pointer *independent* cells are noncollective and their
+        // rank interleave is nondeterministic by spec; rank 0 performs
+        // the transfer alone so both runs are comparable.
+        let participates = !(pos == PositioningKind::Shared && coord == Coordination::Independent)
+            || r == 0;
+        let off = match view {
+            ViewKind::Contig => (r * K) as i64,
+            ViewKind::Vector => 0,
+        };
+        let data: Vec<i32> = (0..K as i32).map(|i| (r as i32 + 1) * 1000 + i).collect();
+        let wbytes = if participates { do_write(&f, pos, coord, mode, use_core, off, &data) } else { 0 };
+        c.barrier();
+        if pos == PositioningKind::Shared {
+            f.seek_shared(0, seek::SET).unwrap(); // collective
+        }
+        let mut back = vec![0i32; K];
+        let (rbytes, rcount) = if participates {
+            do_read(&f, pos, coord, mode, use_core, off, back.as_mut_slice())
+        } else {
+            (0, None)
+        };
+        if participates {
+            assert_eq!(back, data, "cell {pos:?}/{coord:?}/{mode:?} corrupted its data");
+        }
+        c.barrier();
+        f.close().unwrap();
+        (wbytes, rbytes, rcount, back)
+    })
+}
+
+fn sweep(cells: &[(PositioningKind, Coordination, Mode)], tag: &str) {
+    for &(pos, coord, mode) in cells {
+        assert!(
+            cell_is_legal(pos, coord, mode.sync()),
+            "sweep enumerates an illegal cell {pos:?}/{coord:?}/{mode:?}"
+        );
+        for view in [ViewKind::Contig, ViewKind::Vector] {
+            for datarep in ["native", "external32"] {
+                let base = format!(
+                    "/tmp/jpio-opmatrix-{}-{tag}-{pos:?}-{coord:?}-{mode:?}-{view:?}-{datarep}",
+                    std::process::id()
+                );
+                let wrapper_path = format!("{base}-wrapper.dat");
+                let core_path = format!("{base}-core.dat");
+                let via_wrapper =
+                    run_scenario(pos, coord, mode, view, datarep, false, &wrapper_path);
+                let via_core = run_scenario(pos, coord, mode, view, datarep, true, &core_path);
+                assert_eq!(
+                    via_wrapper, via_core,
+                    "wrapper and core Status/data disagree for \
+                     {pos:?}/{coord:?}/{mode:?}/{view:?}/{datarep}"
+                );
+                let wrapper_bytes = std::fs::read(&wrapper_path).unwrap();
+                let core_bytes = std::fs::read(&core_path).unwrap();
+                assert_eq!(
+                    wrapper_bytes, core_bytes,
+                    "wrapper and core file contents disagree for \
+                     {pos:?}/{coord:?}/{mode:?}/{view:?}/{datarep}"
+                );
+                File::delete(&wrapper_path, &Info::null()).unwrap();
+                File::delete(&core_path, &Info::null()).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn independent_cells_match_core() {
+    sweep(
+        &[
+            (PositioningKind::Explicit, Coordination::Independent, Mode::Blocking),
+            (PositioningKind::Explicit, Coordination::Independent, Mode::Nonblocking),
+            (PositioningKind::Individual, Coordination::Independent, Mode::Blocking),
+            (PositioningKind::Individual, Coordination::Independent, Mode::Nonblocking),
+            (PositioningKind::Shared, Coordination::Independent, Mode::Blocking),
+            (PositioningKind::Shared, Coordination::Independent, Mode::Nonblocking),
+        ],
+        "indep",
+    );
+}
+
+#[test]
+fn collective_cells_match_core() {
+    sweep(
+        &[
+            (PositioningKind::Explicit, Coordination::Collective, Mode::Blocking),
+            (PositioningKind::Explicit, Coordination::Collective, Mode::Nonblocking),
+            (PositioningKind::Explicit, Coordination::Collective, Mode::SplitPair),
+            (PositioningKind::Individual, Coordination::Collective, Mode::Blocking),
+            (PositioningKind::Individual, Coordination::Collective, Mode::Nonblocking),
+            (PositioningKind::Individual, Coordination::Collective, Mode::SplitPair),
+        ],
+        "coll",
+    );
+}
+
+#[test]
+fn ordered_cells_match_core() {
+    sweep(
+        &[
+            (PositioningKind::Shared, Coordination::Ordered, Mode::Blocking),
+            (PositioningKind::Shared, Coordination::Ordered, Mode::SplitPair),
+        ],
+        "ordered",
+    );
+}
+
+#[test]
+fn sweep_covers_every_derived_write_cell() {
+    // The three sweeps above plus this census: every legal (positioning,
+    // coordination, synchronism-mode) combination is exercised. (BEGIN
+    // and END are one executed pair.)
+    let mut legal = 0;
+    for pos in
+        [PositioningKind::Explicit, PositioningKind::Individual, PositioningKind::Shared]
+    {
+        for coord in
+            [Coordination::Independent, Coordination::Collective, Coordination::Ordered]
+        {
+            for mode in [Mode::Blocking, Mode::Nonblocking, Mode::SplitPair] {
+                if cell_is_legal(pos, coord, mode.sync()) {
+                    legal += 1;
+                }
+            }
+        }
+    }
+    // 6 independent + 6 collective + 2 ordered == the 14 pair-collapsed
+    // cells the sweeps enumerate.
+    assert_eq!(legal, 14);
+}

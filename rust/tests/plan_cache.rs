@@ -1,0 +1,158 @@
+//! Plan caching at the scheduler: a repeated same-shape access must skip
+//! run recompilation (plan-cache hit) while still performing the storage
+//! I/O — proven with a counting backend that tallies every positioned
+//! read/write reaching storage.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use jpio::comm::{threads, Datatype};
+use jpio::io::errors::Result as IoResult;
+use jpio::io::{amode, File, Info};
+use jpio::storage::local::LocalBackend;
+use jpio::storage::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
+
+struct CountingBackend {
+    inner: LocalBackend,
+    reads: Arc<AtomicUsize>,
+    writes: Arc<AtomicUsize>,
+}
+
+struct CountingFile {
+    inner: Arc<dyn StorageFile>,
+    reads: Arc<AtomicUsize>,
+    writes: Arc<AtomicUsize>,
+}
+
+impl Backend for CountingBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> IoResult<Arc<dyn StorageFile>> {
+        Ok(Arc::new(CountingFile {
+            inner: self.inner.open(path, opts)?,
+            reads: self.reads.clone(),
+            writes: self.writes.clone(),
+        }))
+    }
+
+    fn delete(&self, path: &str) -> IoResult<()> {
+        self.inner.delete(path)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+impl StorageFile for CountingFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> IoResult<usize> {
+        self.reads.fetch_add(1, Ordering::SeqCst);
+        self.inner.read_at(offset, buf)
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> IoResult<usize> {
+        self.writes.fetch_add(1, Ordering::SeqCst);
+        self.inner.write_at(offset, buf)
+    }
+
+    fn size(&self) -> IoResult<u64> {
+        self.inner.size()
+    }
+
+    fn set_size(&self, size: u64) -> IoResult<()> {
+        self.inner.set_size(size)
+    }
+
+    fn preallocate(&self, size: u64) -> IoResult<()> {
+        self.inner.preallocate(size)
+    }
+
+    fn sync(&self) -> IoResult<()> {
+        self.inner.sync()
+    }
+
+    fn map(&self, offset: u64, len: usize, writable: bool) -> IoResult<Box<dyn MappedRegion>> {
+        self.inner.map(offset, len, writable)
+    }
+
+    fn lock_exclusive(&self) -> IoResult<FileLockGuard> {
+        self.inner.lock_exclusive()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+#[test]
+fn repeated_same_shape_access_reuses_the_plan_but_still_hits_storage() {
+    let path = format!("/tmp/jpio-plancache-{}", std::process::id());
+    let reads = Arc::new(AtomicUsize::new(0));
+    let writes = Arc::new(AtomicUsize::new(0));
+    let backend = Arc::new(CountingBackend {
+        inner: LocalBackend::instant(),
+        reads: reads.clone(),
+        writes: writes.clone(),
+    });
+    threads::run(1, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        // A strided file view: compiling its plan walks the filetype map,
+        // which is exactly the work the cache exists to skip.
+        let ft = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
+        let ft = Datatype::resized(&ft, 0, 16).unwrap();
+        f.set_view(0, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+        let data: Vec<i32> = (0..32).collect();
+
+        f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
+        let (h0, m0) = f.plan_cache_stats();
+        assert_eq!(h0, 0, "first access of a shape cannot hit");
+        assert!(m0 >= 1);
+        let w0 = writes.load(Ordering::SeqCst);
+        assert!(w0 > 0, "the write must reach storage");
+
+        // The repeated same-shape access: same (view, direction, offset,
+        // len) — the plan is reused, no recompilation...
+        f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
+        let (h1, m1) = f.plan_cache_stats();
+        assert_eq!(h1, 1, "repeated same-shape write must reuse the compiled plan");
+        assert_eq!(m1, m0, "repeated same-shape write must not recompile");
+        // ...but the storage I/O still happens (as many writes as round 1).
+        let w1 = writes.load(Ordering::SeqCst);
+        assert_eq!(w1, 2 * w0, "the repeated write must hit storage like the first");
+
+        // Same shape, other direction: a distinct key.
+        let mut back = vec![0i32; 32];
+        f.read_at(0, back.as_mut_slice(), 0, 32, &Datatype::INT).unwrap();
+        let (h2, m2) = f.plan_cache_stats();
+        assert_eq!((h2, m2), (1, m1 + 1));
+        f.read_at(0, back.as_mut_slice(), 0, 32, &Datatype::INT).unwrap();
+        assert_eq!(f.plan_cache_stats(), (2, m2), "repeated read reuses its plan");
+        assert_eq!(back, data);
+        assert!(reads.load(Ordering::SeqCst) > 0);
+
+        // A different shape misses; the old shape stays cached.
+        f.write_at(4, data.as_slice(), 0, 16, &Datatype::INT).unwrap();
+        let (h3, m3) = f.plan_cache_stats();
+        assert_eq!((h3, m3), (2, m2 + 1));
+        f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
+        assert_eq!(f.plan_cache_stats(), (3, m3));
+
+        // set_view installs a new view identity: same shape recompiles.
+        let ft2 = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
+        let ft2 = Datatype::resized(&ft2, 0, 16).unwrap();
+        f.set_view(0, &Datatype::INT, &ft2, "native", &Info::null()).unwrap();
+        f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
+        let (h4, m4) = f.plan_cache_stats();
+        assert_eq!(h4, 3, "a new view identity must not hit stale plans");
+        assert_eq!(m4, m3 + 1);
+
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
