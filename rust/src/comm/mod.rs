@@ -19,6 +19,7 @@ pub mod datatype;
 pub mod group;
 pub mod netmodel;
 pub mod process;
+pub mod progress;
 pub mod request;
 pub mod status;
 pub mod sub;
@@ -26,6 +27,7 @@ pub mod threads;
 
 pub use datatype::{ArrayOrder, Datatype, Offset, Prim};
 pub use group::Group;
+pub use progress::{ProgressEngine, ProgressLane};
 pub use request::{CommNonblocking, RecvRequest, SendRequest};
 pub use status::Status;
 pub use sub::SubComm;
@@ -253,6 +255,18 @@ pub trait Comm: Send + Sync {
     /// The group of this communicator.
     fn group(&self) -> Group {
         Group::new((0..self.size()).collect())
+    }
+
+    /// This rank's progress lane — a per-world background thread plus a
+    /// `'static` endpoint in a reserved tag band ([`progress`]) — used by
+    /// the I/O layer to run nonblocking collective operations entirely
+    /// off the calling thread. Transports that cannot hand out a
+    /// `'static` endpoint (e.g. the borrowing [`SubComm`]) return `None`
+    /// and nonblocking collectives fall back to caller-side exchange.
+    /// The capability must be uniform across a world: every rank of a
+    /// given communicator answers the same way.
+    fn progress_lane(&self) -> Option<ProgressLane> {
+        None
     }
 }
 

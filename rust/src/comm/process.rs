@@ -10,20 +10,32 @@
 //!
 //! ## Progress engine
 //!
-//! Sockets are non-blocking. `send` loops on partial writes and, whenever
-//! the pipe is full, drains every readable peer into per-source pending
+//! Sockets are non-blocking. `send` appends whole frames to a per-peer
+//! outbound buffer and flushes what the socket accepts; whenever the
+//! pipe is full it drains every readable peer into per-source pending
 //! queues — so two ranks streaming large messages at each other cannot
 //! deadlock (the classic eager/rendezvous problem; ROMIO's aggregation
 //! exchange hits exactly this pattern). `recv` polls all peers, not just
 //! the awaited source, for the same reason.
+//!
+//! Two threads of one rank — the application thread and the rank's
+//! [`progress`](super::progress) thread — share the endpoint state.
+//! Blocking waits therefore poll in bounded slices and release the state
+//! lock between slices, so neither thread can starve the other: whoever
+//! holds the lock drains *every* readable peer into the shared pending
+//! queues (disjoint tag bands keep the two threads' traffic apart), and
+//! the other thread gets a turn at most one slice later.
 
 use std::collections::VecDeque;
 use std::io;
 use std::os::unix::io::RawFd;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use once_cell::sync::OnceCell;
+
 use super::netmodel::{Link, TimeScale};
+use super::progress::{self, ProgressEngine, ProgressLane};
 use super::Comm;
 
 /// Frame header: tag (i32 LE) + payload length (u64 LE).
@@ -35,11 +47,44 @@ struct PeerState {
     rbuf: Vec<u8>,
     /// Parsed frames not yet consumed by `recv`.
     pending: VecDeque<(i32, Vec<u8>)>,
+    /// Outbound bytes the socket has not accepted yet. Senders append
+    /// whole frames under the state lock (frame atomicity) and then
+    /// flush in bounded slices, so the lock never blocks on a full pipe.
+    wbuf: VecDeque<u8>,
+    /// Total bytes ever appended to / flushed from `wbuf`: a sender's
+    /// frame is on the wire once `wflushed` reaches the `wqueued` value
+    /// observed at append time (another thread may flush it for us).
+    wqueued: u64,
+    /// See `wqueued`.
+    wflushed: u64,
 }
 
 struct Inner {
     peers: Vec<Option<PeerState>>, // None at self index
 }
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        for p in self.peers.iter().flatten() {
+            unsafe { libc::close(p.fd) };
+        }
+    }
+}
+
+/// Endpoint state shared between the application thread's handle and any
+/// progress-lane endpoints cloned from it; the sockets close when the
+/// last holder drops.
+struct ProcShared {
+    inner: Mutex<Inner>,
+    /// The rank's lazily-spawned progress engine (one per process).
+    progress: OnceCell<Arc<ProgressEngine>>,
+}
+
+/// Bounded poll slice for blocking waits: long enough that an idle
+/// single-threaded rank burns ~no CPU, short enough that the rank's
+/// other thread (application vs progress) never waits noticeably for
+/// the state lock.
+const POLL_SLICE_MS: i32 = 5;
 
 /// Configuration for a process world.
 #[derive(Clone, Copy, Debug)]
@@ -60,7 +105,7 @@ impl Default for ProcConfig {
 pub struct ProcComm {
     rank: usize,
     n: usize,
-    inner: Mutex<Inner>,
+    shared: Arc<ProcShared>,
     cfg: ProcConfig,
 }
 
@@ -72,9 +117,56 @@ impl ProcComm {
         io::Error::last_os_error().raw_os_error().unwrap_or(0)
     }
 
-    /// Drain every readable peer into its pending queue. `block` waits
-    /// until at least one fd is readable (or `want_writable` is writable).
-    fn progress(&self, inner: &mut Inner, block: bool, want_writable: Option<RawFd>) {
+    /// Lock the shared endpoint state, recovering from poisoning: a
+    /// fatal transport panic on one of the rank's threads (app or
+    /// progress) must not turn every later operation on the other
+    /// thread into a `PoisonError` abort. The state is byte
+    /// buffers/queues whose partially-updated worst case is a protocol
+    /// error on one peer, not memory unsafety.
+    fn inner(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.shared.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Write as much of `buf` as the socket accepts right now
+    /// (nonblocking); returns the bytes accepted.
+    fn write_some(fd: RawFd, buf: &[u8], peer_rank: usize) -> usize {
+        let mut written = 0;
+        while written < buf.len() {
+            let rc = unsafe {
+                libc::write(
+                    fd,
+                    buf[written..].as_ptr() as *const libc::c_void,
+                    buf.len() - written,
+                )
+            };
+            if rc > 0 {
+                written += rc as usize;
+            } else {
+                let e = Self::errno();
+                if e == libc::EAGAIN || e == libc::EWOULDBLOCK {
+                    break;
+                }
+                if e == libc::EINTR {
+                    continue;
+                }
+                panic!("write to rank {peer_rank}: {}", io::Error::last_os_error());
+            }
+        }
+        written
+    }
+
+    /// Take a pending frame matching `(src, tag)`, if one has been
+    /// drained already (possibly by the rank's other thread).
+    fn take_pending(inner: &mut Inner, src: usize, tag: i32) -> Option<Vec<u8>> {
+        let p = inner.peers[src].as_mut().unwrap();
+        let pos = p.pending.iter().position(|(t, _)| *t == tag)?;
+        Some(p.pending.remove(pos).unwrap().1)
+    }
+
+    /// Drain every readable peer into its pending queue. `timeout_ms`
+    /// bounds the wait for at least one readable fd (or `want_writable`
+    /// becoming writable): `0` = just drain what is already there.
+    fn progress(&self, inner: &mut Inner, timeout_ms: i32, want_writable: Option<RawFd>) {
         let mut fds: Vec<libc::pollfd> = Vec::with_capacity(self.n);
         let mut idx: Vec<usize> = Vec::with_capacity(self.n);
         for (i, p) in inner.peers.iter().enumerate() {
@@ -87,8 +179,7 @@ impl ProcComm {
                 idx.push(i);
             }
         }
-        let timeout = if block { -1 } else { 0 };
-        let rc = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout) };
+        let rc = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout_ms) };
         if rc < 0 {
             if Self::errno() == libc::EINTR {
                 return;
@@ -99,6 +190,22 @@ impl ProcComm {
             if f.revents & (libc::POLLIN | libc::POLLHUP | libc::POLLERR) != 0 {
                 self.drain_peer(inner.peers[i].as_mut().unwrap(), i);
             }
+        }
+    }
+
+    /// Write as much of the peer's buffered outbound bytes as the socket
+    /// accepts right now (nonblocking).
+    fn flush_peer(p: &mut PeerState, peer_rank: usize) {
+        while !p.wbuf.is_empty() {
+            let n = {
+                let (head, _) = p.wbuf.as_slices();
+                Self::write_some(p.fd, head, peer_rank)
+            };
+            if n == 0 {
+                break;
+            }
+            p.wbuf.drain(..n);
+            p.wflushed += n as u64;
         }
     }
 
@@ -167,55 +274,91 @@ impl Comm for ProcComm {
         frame.extend_from_slice(&(data.len() as u64).to_le_bytes());
         frame.extend_from_slice(data);
 
-        let mut inner = self.inner.lock().unwrap();
-        let fd = inner.peers[dest].as_ref().unwrap().fd;
-        let mut written = 0;
-        while written < frame.len() {
-            let rc = unsafe {
-                libc::write(
-                    fd,
-                    frame[written..].as_ptr() as *const libc::c_void,
-                    frame.len() - written,
-                )
-            };
-            if rc > 0 {
-                written += rc as usize;
+        // Append the whole frame to the peer's outbound buffer under the
+        // lock (frames from the rank's two threads must land atomically
+        // on the socket), then flush in bounded slices with the lock
+        // released between slices — the invariant that keeps either
+        // thread from starving the other on a full pipe. Whichever
+        // thread holds the lock flushes the shared buffer, so our frame
+        // may well reach the wire while the other thread holds it.
+        let (fd, target) = {
+            let mut inner = self.inner();
+            let p = inner.peers[dest].as_mut().unwrap();
+            p.wqueued += frame.len() as u64;
+            let target = p.wqueued;
+            let fd = p.fd;
+            if p.wbuf.is_empty() {
+                // Fast path: the socket usually accepts the whole frame
+                // at once — write straight from it and buffer only the
+                // unaccepted tail, avoiding the staging copy.
+                let n = Self::write_some(fd, &frame, dest);
+                p.wflushed += n as u64;
+                if n == frame.len() {
+                    return;
+                }
+                p.wbuf.extend(frame[n..].iter().copied());
             } else {
-                let e = Self::errno();
-                if e == libc::EAGAIN || e == libc::EWOULDBLOCK {
-                    // Pipe full: make progress on inbound traffic so the
-                    // peer (which may be blocked writing to us) can drain.
-                    self.progress(&mut inner, true, Some(fd));
-                } else if e == libc::EINTR {
-                    continue;
-                } else {
-                    panic!("write to rank {dest}: {}", io::Error::last_os_error());
+                p.wbuf.extend(frame);
+                Self::flush_peer(&mut *p, dest);
+                if p.wflushed >= target {
+                    return;
                 }
             }
+            (fd, target)
+        };
+        loop {
+            {
+                let mut inner = self.inner();
+                // Wait (bounded) for writability, draining inbound so
+                // the peer — possibly blocked writing to us — can make
+                // progress too, then push more bytes out.
+                self.progress(&mut inner, POLL_SLICE_MS, Some(fd));
+                let p = inner.peers[dest].as_mut().unwrap();
+                Self::flush_peer(&mut *p, dest);
+                if p.wflushed >= target {
+                    return;
+                }
+            }
+            std::thread::yield_now();
         }
     }
 
     fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
         assert!(src < self.n && src != self.rank, "recv from rank {src}");
-        let mut inner = self.inner.lock().unwrap();
         loop {
             {
-                let p = inner.peers[src].as_mut().unwrap();
-                if let Some(pos) = p.pending.iter().position(|(t, _)| *t == tag) {
-                    return p.pending.remove(pos).unwrap().1;
+                let mut inner = self.inner();
+                // The awaited frame may already be pending — drained by
+                // this thread earlier or by the rank's other thread.
+                if let Some(msg) = Self::take_pending(&mut inner, src, tag) {
+                    return msg;
+                }
+                self.progress(&mut inner, POLL_SLICE_MS, None);
+                if let Some(msg) = Self::take_pending(&mut inner, src, tag) {
+                    return msg;
                 }
             }
-            self.progress(&mut inner, true, None);
+            // Lock released between slices: the rank's other thread
+            // (application vs progress) takes its turn.
+            std::thread::yield_now();
         }
     }
 
     fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
         assert!(src < self.n && src != self.rank, "try_recv from rank {src}");
-        let mut inner = self.inner.lock().unwrap();
-        self.progress(&mut inner, false, None);
-        let p = inner.peers[src].as_mut().unwrap();
-        let pos = p.pending.iter().position(|(t, _)| *t == tag)?;
-        Some(p.pending.remove(pos).unwrap().1)
+        let mut inner = self.inner();
+        self.progress(&mut inner, 0, None);
+        Self::take_pending(&mut inner, src, tag)
+    }
+
+    fn progress_lane(&self) -> Option<ProgressLane> {
+        let endpoint: Arc<dyn Comm> = Arc::new(ProcComm {
+            rank: self.rank,
+            n: self.n,
+            shared: self.shared.clone(),
+            cfg: self.cfg,
+        });
+        Some(progress::lane(&self.shared.progress, self.rank, endpoint))
     }
 }
 
@@ -238,7 +381,15 @@ where
 {
     assert!(n > 0);
     if n == 1 {
-        let comm = ProcComm { rank: 0, n: 1, inner: Mutex::new(Inner { peers: vec![None] }), cfg };
+        let comm = ProcComm {
+            rank: 0,
+            n: 1,
+            shared: Arc::new(ProcShared {
+                inner: Mutex::new(Inner { peers: vec![None] }),
+                progress: OnceCell::new(),
+            }),
+            cfg,
+        };
         return f(&comm);
     }
     // Socket pairs for every unordered pair {i, j}, i < j.
@@ -276,9 +427,24 @@ where
                 let fl = libc::fcntl(fd, libc::F_GETFL);
                 libc::fcntl(fd, libc::F_SETFL, fl | libc::O_NONBLOCK);
             }
-            peers[other] = Some(PeerState { fd, rbuf: Vec::new(), pending: VecDeque::new() });
+            peers[other] = Some(PeerState {
+                fd,
+                rbuf: Vec::new(),
+                pending: VecDeque::new(),
+                wbuf: VecDeque::new(),
+                wqueued: 0,
+                wflushed: 0,
+            });
         }
-        ProcComm { rank: me, n, inner: Mutex::new(Inner { peers }), cfg }
+        ProcComm {
+            rank: me,
+            n,
+            shared: Arc::new(ProcShared {
+                inner: Mutex::new(Inner { peers }),
+                progress: OnceCell::new(),
+            }),
+            cfg,
+        }
     };
 
     let mut children = Vec::with_capacity(n - 1);
@@ -328,14 +494,9 @@ pub fn modelled_rtt(cfg: &ProcConfig, bytes: usize) -> Duration {
     cfg.scale.scale(cfg.link.transfer_time(bytes)) * 2
 }
 
-impl Drop for ProcComm {
-    fn drop(&mut self) {
-        let inner = self.inner.lock().unwrap();
-        for p in inner.peers.iter().flatten() {
-            unsafe { libc::close(p.fd) };
-        }
-    }
-}
+// Socket teardown lives in `Inner::drop`: the fds close when the last
+// holder of the shared endpoint state (application handle or an
+// in-flight progress-lane endpoint) goes away.
 
 #[cfg(test)]
 mod tests {

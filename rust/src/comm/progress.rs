@@ -1,0 +1,255 @@
+//! Per-world progress engine: a dedicated thread per rank that drives
+//! message exchange and plan execution while the application computes.
+//!
+//! The MPI-3.1 nonblocking collectives only pay off when the *whole*
+//! operation — the alltoall exchange halves as much as the storage I/O —
+//! leaves the calling thread. ROMIO reaches that state with an
+//! asynchronous progress thread per process; ViPIOS dedicates whole I/O
+//! server processes. jpio's analogue is the **progress lane**: each rank
+//! of a communicator world owns (lazily) one background thread
+//! ([`ProgressEngine`]) plus a `'static` endpoint onto the same rank
+//! whose traffic lives in a reserved tag band ([`shifted`]), so the
+//! background collective exchange can never match — or steal — the
+//! application thread's messages.
+//!
+//! Two invariants make this safe:
+//!
+//! * **FIFO per rank.** Each rank's engine executes submitted jobs in
+//!   submission order. MPI already requires every rank to issue
+//!   collective operations in the same order, so the background
+//!   collectives of a world match up exactly like foreground ones.
+//! * **Disjoint tag bands.** The shifted endpoint moves every tag by
+//!   `PROGRESS_TAG_SHIFT`, placing internal-protocol tags below the
+//!   bands used by the application thread, user tags, and every
+//!   [`SubComm`](super::SubComm) context salt. A blocking collective on
+//!   the application thread can therefore overlap a background exchange
+//!   on the same mailboxes/sockets without interference. The shifted
+//!   endpoint also never touches transport fast paths with no sender
+//!   identity (e.g. the thread transport's native barrier): it inherits
+//!   the default message-based collectives, which route through the
+//!   shifted tags.
+//!
+//! Transports opt in via [`Comm::progress_lane`]; the default is `None`
+//! (e.g. [`SubComm`](super::SubComm) borrows its parent and cannot hand
+//! out a `'static` endpoint), in which case nonblocking collectives fall
+//! back to running their exchange on the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use super::Comm;
+
+/// Tag displacement of the progress lane. Chosen so that shifted
+/// internal tags (near `i32::MIN/2`) stay above `i32::MIN`, and so the
+/// shift is not a multiple of the sub-communicator context salt
+/// (`(context+1) * 2^20`): no salted sub-communicator band and no user
+/// tag can alias progress-lane traffic.
+const PROGRESS_TAG_SHIFT: i32 = 300 * (1 << 20) + 12_345;
+
+/// A communicator endpoint whose every tag is displaced into the
+/// progress band. Collectives come from the `Comm` defaults, so they
+/// route through the shifted `send`/`recv` (never through transport
+/// fast paths that assume application-thread identity).
+struct ShiftedComm {
+    inner: Arc<dyn Comm>,
+}
+
+impl Comm for ShiftedComm {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&self, dest: usize, tag: i32, data: &[u8]) {
+        self.inner.send(dest, tag - PROGRESS_TAG_SHIFT, data);
+    }
+
+    fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
+        self.inner.recv(src, tag - PROGRESS_TAG_SHIFT)
+    }
+
+    fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
+        self.inner.try_recv(src, tag - PROGRESS_TAG_SHIFT)
+    }
+}
+
+/// Wrap a `'static` per-rank endpoint so all of its traffic lives in the
+/// progress tag band. Transports call this from their
+/// [`Comm::progress_lane`] implementation.
+pub fn shifted(inner: Arc<dyn Comm>) -> Arc<dyn Comm> {
+    Arc::new(ShiftedComm { inner })
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One rank's background progress thread: a FIFO executor for the
+/// off-caller halves of nonblocking collective operations.
+///
+/// The engine owns only the job *sender*; the worker thread owns the
+/// receiver and exits when the engine (and with it the world that stores
+/// it) is dropped. Jobs capture everything they need — including their
+/// shifted endpoint — so the engine itself keeps no reference back to
+/// the world and world teardown cannot cycle.
+pub struct ProgressEngine {
+    tx: Mutex<mpsc::Sender<Job>>,
+    /// Process that spawned the worker. A forked child inherits the
+    /// engine struct but not the thread; submitting there would queue
+    /// jobs nobody runs, so callers check [`ProgressEngine::usable`]
+    /// and fall back to caller-side execution on a mismatch.
+    pid: u32,
+    queued: AtomicUsize,
+    completed: Arc<AtomicUsize>,
+}
+
+impl ProgressEngine {
+    /// Spawn the rank's progress thread. `name` labels the thread for
+    /// debuggers (`jpio-progress-<rank>` by convention).
+    pub fn spawn(name: String) -> ProgressEngine {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let completed = Arc::new(AtomicUsize::new(0));
+        let done = completed.clone();
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                // FIFO: one job at a time, in submission order — the
+                // property that keeps background collectives matched
+                // across ranks. A panicking job must not kill the lane:
+                // its completion sender drops (so that one Request
+                // reports a completer-died error) but the worker lives
+                // on for subsequent collectives; the panic itself is
+                // still reported by the default hook.
+                while let Ok(job) = rx.recv() {
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job()));
+                    done.fetch_add(1, Ordering::Release);
+                }
+            })
+            .expect("spawn progress thread");
+        ProgressEngine {
+            tx: Mutex::new(tx),
+            pid: std::process::id(),
+            queued: AtomicUsize::new(0),
+            completed,
+        }
+    }
+
+    /// Whether this engine's worker thread exists in the current process
+    /// (false in a forked child that inherited the world).
+    pub fn usable(&self) -> bool {
+        self.pid == std::process::id()
+    }
+
+    /// Enqueue a job on the rank's progress thread. Returns `false` —
+    /// without running the job — when the worker does not exist in this
+    /// process ([`ProgressEngine::usable`]).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        if !self.usable() {
+            return false;
+        }
+        let sent = self.tx.lock().unwrap().send(Box::new(job)).is_ok();
+        if sent {
+            self.queued.fetch_add(1, Ordering::Release);
+        }
+        sent
+    }
+
+    /// `(submitted, completed)` job counters — `submitted > completed`
+    /// means work is in flight on the progress thread.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.queued.load(Ordering::Acquire), self.completed.load(Ordering::Acquire))
+    }
+}
+
+/// One rank's progress lane: the FIFO background executor plus the
+/// `'static` shifted endpoint its jobs exchange messages through.
+///
+/// The endpoint is constructed fresh per call (it holds the world
+/// alive only as long as a job captures it); the engine is the world's
+/// lazily-spawned singleton for this rank.
+pub struct ProgressLane {
+    /// The rank's background executor.
+    pub engine: Arc<ProgressEngine>,
+    /// A `'static` endpoint onto the same rank, in the progress tag band.
+    pub comm: Arc<dyn Comm>,
+}
+
+/// Build a rank's lane from its world slot: spawn the engine on first
+/// use (one per rank, `jpio-progress-<rank>`), wrap the fresh `'static`
+/// `endpoint` into the shifted tag band. The one place the lane
+/// contract lives — both transports delegate here.
+pub(crate) fn lane(
+    slot: &OnceCell<Arc<ProgressEngine>>,
+    rank: usize,
+    endpoint: Arc<dyn Comm>,
+) -> ProgressLane {
+    let engine = slot
+        .get_or_init(|| Arc::new(ProgressEngine::spawn(format!("jpio-progress-{rank}"))))
+        .clone();
+    ProgressLane { engine, comm: shifted(endpoint) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::threads;
+
+    #[test]
+    fn engine_runs_jobs_in_submission_order() {
+        let engine = ProgressEngine::spawn("jpio-progress-test".into());
+        assert!(engine.usable());
+        let (tx, rx) = mpsc::channel();
+        for i in 0..16 {
+            let tx = tx.clone();
+            assert!(engine.submit(move || {
+                let _ = tx.send(i);
+            }));
+        }
+        let got: Vec<i32> = (0..16).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, (0..16).collect::<Vec<_>>(), "jobs must run FIFO");
+        let (q, c) = engine.stats();
+        assert_eq!(q, 16);
+        assert!(c <= 16);
+    }
+
+    #[test]
+    fn shifted_endpoint_does_not_steal_app_traffic() {
+        threads::run(2, |c| {
+            let lane = c.progress_lane().expect("thread transport has a lane");
+            if c.rank() == 0 {
+                // Same (peer, tag) on both lanes: each message must be
+                // delivered to the lane it was sent on.
+                c.send(1, 7, b"app");
+                lane.comm.send(1, 7, b"progress");
+            } else {
+                let lane_msg = lane.comm.recv(0, 7);
+                let app_msg = c.recv(0, 7);
+                assert_eq!(lane_msg, b"progress");
+                assert_eq!(app_msg, b"app");
+            }
+        });
+    }
+
+    #[test]
+    fn background_collectives_run_while_app_thread_waits() {
+        // Every rank submits the same collective job; the progress
+        // threads rendezvous among themselves (message-based barrier +
+        // allgather in the shifted band) while the app threads block on
+        // the result channel.
+        threads::run(3, |c| {
+            let lane = c.progress_lane().unwrap();
+            let (tx, rx) = mpsc::channel();
+            let comm = lane.comm.clone();
+            assert!(lane.engine.submit(move || {
+                comm.barrier();
+                let parts = comm.allgather(&[comm.rank() as u8]);
+                let _ = tx.send(parts);
+            }));
+            let parts = rx.recv().unwrap();
+            assert_eq!(parts, vec![vec![0u8], vec![1u8], vec![2u8]]);
+        });
+    }
+}

@@ -8,6 +8,9 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 
+use once_cell::sync::OnceCell;
+
+use super::progress::{self, ProgressEngine, ProgressLane};
 use super::Comm;
 
 struct Msg {
@@ -25,6 +28,12 @@ struct Shared {
     n: usize,
     mailboxes: Vec<Mailbox>,
     barrier: Barrier,
+    /// Per-rank progress engines, spawned lazily on first
+    /// [`Comm::progress_lane`] use. The engine holds only a job sender
+    /// (never the `Shared` itself), so a world with idle lanes tears
+    /// down normally: dropping the last handle drops the engines, which
+    /// ends the worker threads.
+    progress: Vec<OnceCell<Arc<ProgressEngine>>>,
 }
 
 /// A thread-transport communicator handle; one per rank.
@@ -44,6 +53,7 @@ impl ThreadComm {
                 .map(|_| Mailbox { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
                 .collect(),
             barrier: Barrier::new(n),
+            progress: (0..n).map(|_| OnceCell::new()).collect(),
         });
         (0..n)
             .map(|rank| ThreadComm { rank, shared: shared.clone() })
@@ -88,6 +98,16 @@ impl Comm for ThreadComm {
 
     fn barrier(&self) {
         self.shared.barrier.wait();
+    }
+
+    fn progress_lane(&self) -> Option<ProgressLane> {
+        // A fresh endpoint per call: only in-flight jobs keep the world
+        // alive, never the engine stored inside it. The shifted wrapper
+        // keeps the lane's collectives off the native barrier (which has
+        // no sender identity) and out of the app thread's tag space.
+        let endpoint: Arc<dyn Comm> =
+            Arc::new(ThreadComm { rank: self.rank, shared: self.shared.clone() });
+        Some(progress::lane(&self.shared.progress[self.rank], self.rank, endpoint))
     }
 }
 

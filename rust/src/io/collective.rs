@@ -21,15 +21,24 @@
 //! The *execution* of both phases lives in the [`AccessOp`] core
 //! ([`crate::io::op`]) and the [`IoScheduler`](crate::io::schedule) —
 //! this module owns the pure machinery (file-domain assignment,
-//! aggregator placement, exchange message codecs) and the thin public
-//! wrappers that name their matrix cell. The I/O phase touches only
-//! storage, which is what lets the split collectives
-//! ([`crate::io::split`]) and `iwrite_all` run it on the request engine
-//! while the application computes (§7.2.9.1 double buffering). Collective
-//! *reads* must finish their reply exchange on the calling thread (the
-//! communicator cannot leave it), so `iread_all` completes the
-//! aggregation in the call and defers only the local scatter/decode to
-//! the engine — the same contract as the split reads.
+//! aggregator placement, exchange message codecs, and the
+//! thread-agnostic phase drivers [`exchange_write`]/[`collective_read`])
+//! plus the thin public wrappers that name their matrix cell.
+//!
+//! *Which thread* runs each phase depends on the routine:
+//!
+//! * blocking `*_ALL`: both phases on the caller;
+//! * split collectives: exchange on the caller at `BEGIN`, storage-only
+//!   I/O phase on the request engine (§7.2.9.1 double buffering);
+//! * MPI-3.1 nonblocking collectives (`iread_(at_)all` /
+//!   `iwrite_(at_)all`): when the world has a progress lane
+//!   ([`Comm::progress_lane`]), *both* phases — including the reply
+//!   exchange a collective read needs — run on the rank's progress
+//!   thread, so the call returns after registering the operation and
+//!   the whole collective overlaps computation (DESIGN.md §2). Without
+//!   a lane (sub-communicators, forked inheritors, or
+//!   `jpio_progress_threads = 0`) they fall back to the split
+//!   collectives' contract: exchange on the caller, I/O on the engine.
 //!
 //! ## Stripe-aligned file domains
 //!
@@ -60,6 +69,7 @@ use crate::io::file::File;
 use crate::io::hints::keys;
 use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism, TransferCtx};
 use crate::io::plan::IoPlan;
+use crate::io::schedule::IoScheduler;
 use crate::storage::layout::{Redundancy, StripeMap};
 
 /// Serialize pieces + payload bytes into one exchange message.
@@ -153,17 +163,20 @@ impl FileDomains {
 /// Work an aggregator owes the I/O phase of a collective write; executed
 /// by `IoScheduler::write_phase` / `IoScheduler::write_phase_async`.
 pub(crate) struct WriteIoWork {
-    /// Decoded pieces flattened to (off, bytes) writes, sorted by offset
-    /// with rank order preserved on ties (deterministic overwrite).
-    pub writes: Vec<(u64, Vec<u8>)>,
-    /// Staging-buffer size for the aggregator strategy.
+    /// Raw inbound exchange messages in rank order. Run *headers* are
+    /// decoded up front by the I/O phase; payload bytes stay in place
+    /// until their staging round is built, so the decode of round `n+1`
+    /// can overlap the storage write of round `n` (the double-buffer
+    /// pipeline in `IoScheduler::write_phase`).
+    pub inbound: Vec<Vec<u8>>,
+    /// Staging-buffer (round) size for the aggregator pipeline.
     pub cb_buffer: usize,
 }
 
 impl WriteIoWork {
     /// No aggregator work (non-aggregators, degenerate collectives).
     pub(crate) fn empty() -> WriteIoWork {
-        WriteIoWork { writes: Vec::new(), cb_buffer: 1 }
+        WriteIoWork { inbound: Vec::new(), cb_buffer: 1 }
     }
 }
 
@@ -173,6 +186,9 @@ pub(crate) struct CbParams {
     pub nodes: Option<usize>,
     /// `cb_buffer_size`: aggregator staging-buffer bytes.
     pub buffer: Option<usize>,
+    /// `jpio_staging_buffer_size`: round size of the aggregator
+    /// double-buffer pipeline; defaults to `cb_buffer_size`.
+    pub staging: Option<usize>,
     /// `romio_cb_read`: collective buffering on/off.
     pub enabled: bool,
     /// `jpio_cb_stripe_align`: stripe-aligned file domains on/off.
@@ -180,6 +196,14 @@ pub(crate) struct CbParams {
     /// Parsed `cb_config_list`: explicit aggregator-rank placement per
     /// file domain; `None` falls back to rank `i` aggregating domain `i`.
     pub config_list: Option<Vec<usize>>,
+}
+
+impl CbParams {
+    /// Aggregator staging bytes for the phase pipelines
+    /// (`jpio_staging_buffer_size`, defaulting to `cb_buffer_size`).
+    pub(crate) fn staging_bytes(&self) -> usize {
+        self.staging.or(self.buffer).unwrap_or(16 << 20).max(4096)
+    }
 }
 
 /// Parse a ROMIO-style `cb_config_list` hint into an aggregator rank
@@ -300,12 +324,173 @@ pub(crate) fn merge_intervals(iv: &mut Vec<(u64, u64)>) -> Vec<(u64, u64)> {
     out
 }
 
+// ----------------------------------------------------------------------
+// Thread-agnostic phase drivers
+// ----------------------------------------------------------------------
+//
+// Both drivers take the communicator endpoint explicitly, so the same
+// code runs on the application thread (blocking and split collectives,
+// lane-less fallbacks) and on the rank's progress thread (the MPI-3.1
+// nonblocking collectives' off-caller path). Plans are compiled by the
+// caller — through the handle's plan cache — before the hand-off.
+
+/// Exchange phase of a collective write: route this rank's plan pieces
+/// to their aggregators and collect, still encoded, the messages this
+/// rank owes the I/O phase as an aggregator. On degenerate collectives
+/// (buffering disabled or a single rank) the payload is written
+/// independently here and the returned work is empty. Returns the work
+/// plus this rank's payload byte count.
+pub(crate) fn exchange_write(
+    comm: &dyn Comm,
+    ctx: &TransferCtx,
+    cb: &CbParams,
+    plan: &IoPlan,
+    payload: &[u8],
+) -> Result<(WriteIoWork, usize)> {
+    let n = comm.size();
+    if !cb.enabled || n == 1 {
+        // Degenerate: independent write, collective completion only.
+        IoScheduler::write(ctx, plan, payload)?;
+        return Ok((WriteIoWork::empty(), payload.len()));
+    }
+    let per_rank = match route_to_aggregators(comm, ctx, cb, plan) {
+        Some(p) => p,
+        None => return Ok((WriteIoWork::empty(), payload.len())),
+    };
+    let msgs: Vec<Vec<u8>> =
+        per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
+    let inbound = comm.alltoall(&msgs);
+    Ok((WriteIoWork { inbound, cb_buffer: cb.staging_bytes() }, payload.len()))
+}
+
+/// Full collective read: request exchange, aggregator pipelined sieved
+/// reads (reply slicing of round `n` overlapped with the storage read of
+/// round `n+1`), reply exchange, local reassembly. Returns the
+/// EOF-clamped bytes read into `payload`.
+pub(crate) fn collective_read(
+    comm: &dyn Comm,
+    ctx: &TransferCtx,
+    cb: &CbParams,
+    plan: &IoPlan,
+    payload: &mut [u8],
+) -> Result<usize> {
+    let n = comm.size();
+    if !cb.enabled || n == 1 {
+        let got = IoScheduler::read(ctx, plan, payload)?;
+        if cb.enabled {
+            comm.barrier();
+        }
+        return Ok(got);
+    }
+    // Request phase: ship (off,len) lists to the owning aggregators.
+    let my_pieces = match route_to_aggregators(comm, ctx, cb, plan) {
+        Some(p) => p,
+        None => return Ok(0),
+    };
+    let mut reqs = Vec::with_capacity(n);
+    for pieces in &my_pieces {
+        let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
+        msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
+        for &(off, len, _) in pieces.iter() {
+            msg.extend_from_slice(&off.to_le_bytes());
+            msg.extend_from_slice(&(len as u64).to_le_bytes());
+        }
+        reqs.push(msg);
+    }
+    let inbound = comm.alltoall(&reqs);
+
+    // Aggregator I/O phase: merge all requested intervals, then read
+    // them through the pipelined scheduler.
+    let eof = ctx.storage.size()?;
+    let mut per_src_runs: Vec<Vec<(u64, usize)>> = Vec::with_capacity(n);
+    let mut intervals: Vec<(u64, u64)> = Vec::new();
+    for msg in &inbound {
+        let (rs, _) = decode_runs(msg);
+        for &(off, len) in &rs {
+            intervals.push((off, off + len as u64));
+        }
+        per_src_runs.push(rs);
+    }
+    let merged = merge_intervals(&mut intervals);
+    let merged_runs: Vec<(u64, usize)> =
+        merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
+    let total: usize = merged_runs.iter().map(|r| r.1).sum();
+    let mut agg_buf = vec![0u8; total];
+    let locate = |off: u64| -> Option<usize> {
+        // Position of `off` within the packed agg_buf.
+        let mut base = 0usize;
+        for &(s, e) in &merged {
+            if off >= s && off < e {
+                return Some(base + (off - s) as usize);
+            }
+            base += (e - s) as usize;
+        }
+        None
+    };
+    // Reply layout: each source's reply is its runs concatenated in
+    // request order. Every requested run lies inside exactly one merged
+    // interval — and rounds never split an interval — so each run can be
+    // sliced into its reply the moment its round's bytes land, while the
+    // next round is still being read from storage.
+    let mut reply_len = vec![0usize; n];
+    let mut scatter: Vec<(usize, usize, usize, usize)> = Vec::new(); // (agg pos, len, src, cursor)
+    for (src, rs) in per_src_runs.iter().enumerate() {
+        for &(off, len) in rs {
+            let p = locate(off).expect("requested run must be inside merged intervals");
+            scatter.push((p, len, src, reply_len[src]));
+            reply_len[src] += len;
+        }
+    }
+    scatter.sort_unstable_by_key(|&(p, ..)| p);
+    let mut replies: Vec<Vec<u8>> = reply_len.iter().map(|&l| vec![0u8; l]).collect();
+    let mut si = 0usize;
+    IoScheduler::read_phase_pipelined(
+        ctx,
+        &merged_runs,
+        cb.staging_bytes(),
+        &mut agg_buf,
+        |base, round: &[u8]| {
+            while si < scatter.len() {
+                let (p, len, src, cursor) = scatter[si];
+                if p >= base + round.len() {
+                    break;
+                }
+                let s = p - base;
+                replies[src][cursor..cursor + len].copy_from_slice(&round[s..s + len]);
+                si += 1;
+            }
+        },
+    )?;
+    debug_assert_eq!(si, scatter.len(), "every requested run must be sliced into a reply");
+    let mut answers = comm.alltoall(&replies);
+
+    // Reassemble my payload from the per-aggregator answers; compute
+    // the EOF-clamped byte count.
+    let mut got = 0usize;
+    for (a, pieces) in my_pieces.iter().enumerate() {
+        let ans = std::mem::take(&mut answers[a]);
+        let mut cursor = 0usize;
+        for &(off, len, pos) in pieces {
+            payload[pos..pos + len].copy_from_slice(&ans[cursor..cursor + len]);
+            cursor += len;
+            let visible = (eof.saturating_sub(off) as usize).min(len);
+            got += visible;
+        }
+    }
+    // Datarep decode on the assembled payload.
+    if plan.needs_convert() {
+        plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
+    }
+    Ok(got)
+}
+
 impl File<'_> {
     pub(crate) fn cb_params(&self) -> CbParams {
         let info = self.info.lock().unwrap();
         CbParams {
             nodes: info.get_usize(keys::CB_NODES),
             buffer: info.get_usize(keys::CB_BUFFER_SIZE),
+            staging: info.get_usize(keys::STAGING_BUFFER_SIZE),
             enabled: info.get_flag(keys::COLLECTIVE_BUFFERING).unwrap_or(true),
             stripe_align: info.get_flag(keys::CB_STRIPE_ALIGN).unwrap_or(true),
             config_list: info
@@ -397,10 +582,13 @@ impl File<'_> {
     // ------------------------------------------------------------------
 
     /// `MPI_FILE_IWRITE_AT_ALL` (MPI-3.1): nonblocking collective write
-    /// at an explicit offset. The exchange phase runs in this call (it
-    /// needs the communicator, which cannot leave the calling thread);
-    /// the I/O phase is scheduled on the request engine exactly like the
-    /// split collectives, so the storage work overlaps computation.
+    /// at an explicit offset. On worlds with a progress lane (the thread
+    /// and process transports) the call returns after registering the
+    /// operation, and *both* phases — aggregator exchange and storage
+    /// I/O — run on the rank's progress thread, fully overlapping
+    /// computation. Without a lane (sub-communicators, or
+    /// `jpio_progress_threads = 0`) the exchange runs in this call and
+    /// only the I/O phase overlaps, like the split collectives.
     /// Completion ([`Request::wait`]) is local — no barrier.
     pub fn iwrite_at_all(
         &self,
@@ -422,10 +610,12 @@ impl File<'_> {
     }
 
     /// `MPI_FILE_IREAD_AT_ALL` (MPI-3.1): nonblocking collective read at
-    /// an explicit offset. The exchange *and* aggregation complete in
-    /// this call (the reply exchange needs the communicator — the same
-    /// constraint the split collective reads document); the local
-    /// scatter into `buf` and datarep decode run on the engine.
+    /// an explicit offset. On worlds with a progress lane the request
+    /// exchange, aggregation, reply exchange, and the scatter into `buf`
+    /// all run on the rank's progress thread — the call returns before
+    /// any byte moves. Without a lane the exchange and aggregation
+    /// complete in this call (the split-read contract) and only the
+    /// local scatter/decode runs on the engine.
     pub fn iread_at_all<T>(
         &self,
         offset: Offset,
@@ -583,6 +773,7 @@ mod tests {
         let base = CbParams {
             nodes: None,
             buffer: None,
+            staging: None,
             enabled: true,
             stripe_align: true,
             config_list: None,

@@ -1,10 +1,13 @@
 //! Nonblocking request engine.
 //!
 //! `MPI_FILE_IREAD`/`IWRITE`, the asynchronous half of the split
-//! collectives, and the MPI-3.1 `iread_all`/`iwrite_all` I/O phases run
-//! on a small shared worker pool (the same design ROMIO uses for its
-//! nonblocking file I/O: the "async" operations are real threads doing
-//! blocking positioned I/O). The engine knows nothing about plans —
+//! collectives, and the lane-less fallbacks of the MPI-3.1
+//! `iread_all`/`iwrite_all` run on a small shared worker pool (the same
+//! design ROMIO uses for its nonblocking file I/O: the "async"
+//! operations are real threads doing blocking positioned I/O; the
+//! nonblocking *collectives* normally run whole on the per-world
+//! progress threads instead — [`crate::comm::progress`]). The engine
+//! knows nothing about plans —
 //! compiled [`crate::io::plan::IoPlan`]s reach it through the
 //! [`crate::io::schedule::IoScheduler`]'s engine mode (typed reads add a
 //! memory-side unpack around the scheduled plan). The offline
@@ -162,12 +165,12 @@ where
             let _ = tx.send(out); // receiver may have been dropped (cancelled)
         });
         sender.send(job).expect("io pool alive");
-        return Request { rx: Some(rx), done: None };
+        return Request { rx: Some(rx), done: None, failed: None };
     }
     // Forked child without worker threads (or a pool mutex orphaned by
     // fork): complete synchronously.
     let done = f();
-    Request { rx: None, done: Some(done) }
+    Request { rx: None, done: Some(done), failed: None }
 }
 
 /// A nonblocking operation handle (`mpj.Request`).
@@ -177,12 +180,34 @@ where
 pub struct Request<T> {
     rx: Option<mpsc::Receiver<(Result<Status>, T)>>,
     done: Option<(Result<Status>, T)>,
+    /// The completion channel disconnected without a result: the worker
+    /// or progress thread died mid-operation. Always `Some(Err(..))`
+    /// when set; [`Request::test`] reports it and [`Request::wait`]
+    /// returns it (the buffer is lost with the thread).
+    failed: Option<Result<Status>>,
+}
+
+fn completer_died() -> IoError {
+    IoError::new(
+        crate::io::errors::ErrorClass::Request,
+        "the completing thread died without finishing the request",
+    )
 }
 
 impl<T> Request<T> {
     /// An already-completed request (used for zero-byte operations).
     pub fn ready(status: Status, value: T) -> Request<T> {
-        Request { rx: None, done: Some((Ok(status), value)) }
+        Request { rx: None, done: Some((Ok(status), value)), failed: None }
+    }
+
+    /// A request completed externally: whoever holds the paired sender —
+    /// the per-world progress thread, for the off-caller nonblocking
+    /// collectives — delivers `(status, buffer)` when the operation
+    /// finishes. Dropping the sender without sending surfaces as a
+    /// request error at `test`/`wait` (the completing thread died).
+    pub(crate) fn pending() -> (Request<T>, mpsc::Sender<(Result<Status>, T)>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { rx: Some(rx), done: None, failed: None }, tx)
     }
 
     /// Block until completion (`MPI_Wait`); returns the status and the
@@ -193,8 +218,11 @@ impl<T> Request<T> {
     }
 
     /// Non-blocking completion test (`MPI_Test`): `Some` if complete.
+    /// A dead completer (worker/progress thread died mid-job) reports a
+    /// `Request`-class error here rather than aborting the application —
+    /// the sanctioned test-then-wait pattern sees the same error twice.
     pub fn test(&mut self) -> Option<&Result<Status>> {
-        if self.done.is_none() {
+        if self.done.is_none() && self.failed.is_none() {
             let rx = self.rx.as_ref()?;
             match rx.try_recv() {
                 Ok(out) => {
@@ -202,12 +230,14 @@ impl<T> Request<T> {
                     self.rx = None;
                 }
                 Err(mpsc::TryRecvError::Empty) => return None,
-                // Workers always send before exiting; a disconnect means
-                // the worker thread died mid-job.
                 Err(mpsc::TryRecvError::Disconnected) => {
-                    panic!("jpio io worker died without completing a request")
+                    self.failed = Some(Err(completer_died()));
+                    self.rx = None;
                 }
             }
+        }
+        if let Some(res) = &self.failed {
+            return Some(res);
         }
         self.done.as_ref().map(|(s, _)| s)
     }
@@ -216,13 +246,11 @@ impl<T> Request<T> {
         if let Some(done) = self.done.take() {
             return Ok(done);
         }
+        if self.failed.take().is_some() {
+            return Err(completer_died());
+        }
         let rx = self.rx.take().ok_or_else(|| err_request("request already waited"))?;
-        rx.recv().map_err(|_| {
-            IoError::new(
-                crate::io::errors::ErrorClass::Request,
-                "io worker died without completing the request",
-            )
-        })
+        rx.recv().map_err(|_| completer_died())
     }
 }
 

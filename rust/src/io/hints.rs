@@ -63,6 +63,18 @@ pub mod keys {
     /// striped storage, giving each aggregator a disjoint server subset:
     /// `true` (default) | `false`. Ignored on unstriped backends.
     pub const CB_STRIPE_ALIGN: &str = "jpio_cb_stripe_align";
+    /// Per-world progress threads driving the MPI-3.1 nonblocking
+    /// collectives entirely off the caller: `1` (default; one progress
+    /// thread per rank, spawned lazily) | `0` (disable — nonblocking
+    /// collectives run their exchange on the calling thread like the
+    /// split collectives). Collective: every rank of a file must agree,
+    /// like all collective-buffering hints. Values above 1 behave as 1.
+    pub const PROGRESS_THREADS: &str = "jpio_progress_threads";
+    /// Staging-buffer (round) size in bytes for the aggregator
+    /// double-buffer pipeline — the unit at which exchange decode of one
+    /// round overlaps storage I/O of the previous round in the two-phase
+    /// I/O phases. Defaults to `cb_buffer_size`.
+    pub const STAGING_BUFFER_SIZE: &str = "jpio_staging_buffer_size";
 }
 
 impl Info {

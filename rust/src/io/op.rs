@@ -26,8 +26,10 @@
 //!    fetch-and-add, ordered prefix-sum offsets;
 //! 4. **plan compilation** through the scheduler's plan cache
 //!    ([`crate::io::schedule::PlanCache`]);
-//! 5. **dispatch** — synchronous, request-engine, or phase-by-phase
-//!    two-phase collective execution on the
+//! 5. **dispatch** — synchronous, request-engine, progress-lane
+//!    (the MPI-3.1 nonblocking collectives run both two-phase halves on
+//!    the rank's [`progress`](crate::comm::progress) thread), or
+//!    phase-by-phase two-phase collective execution on the
 //!    [`IoScheduler`](crate::io::schedule::IoScheduler).
 //!
 //! No access family keeps a private copy of this pipeline: `access.rs`,
@@ -41,13 +43,13 @@ use std::borrow::Cow;
 use std::sync::Arc;
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
+use crate::comm::progress::ProgressLane;
 use crate::comm::Status;
-use crate::io::collective::{
-    decode_runs, encode_write_msg, merge_intervals, route_to_aggregators, CbParams, WriteIoWork,
-};
+use crate::io::collective::{self, CbParams, WriteIoWork};
 use crate::io::engine::{self, Request};
 use crate::io::errors::{err_arg, err_io, err_request, err_unsupported_op, Result};
 use crate::io::file::{amode, File, SplitPending};
+use crate::io::hints::keys;
 use crate::io::plan::IoPlan;
 use crate::io::schedule::IoScheduler;
 use crate::io::view::FileView;
@@ -699,8 +701,29 @@ impl File<'_> {
                         payload.into_owned(),
                     )));
                 }
-                // Exchange phase on the caller (it needs the
-                // communicator); I/O phase overlaps on the engine.
+                if let Some(ProgressLane { engine, comm }) = self.progress_lane() {
+                    // Truly asynchronous: exchange *and* I/O phases run
+                    // on the rank's progress thread; this call returns
+                    // after registering the op, before any byte moves.
+                    let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
+                    let payload = payload.into_owned();
+                    let (req, tx) = Request::pending();
+                    // A failed submit (fork race) drops `tx`, surfacing
+                    // a request error at wait instead of hanging.
+                    engine.submit(move || {
+                        let res =
+                            collective::exchange_write(comm.as_ref(), &ctx, &cb, &plan, &payload)
+                                .and_then(|(work, bytes)| {
+                                    IoScheduler::write_phase(&ctx, work)?;
+                                    Ok(Status::of_bytes(bytes))
+                                });
+                        let _ = tx.send((res, ()));
+                    });
+                    return Ok(Submission::Queued(req));
+                }
+                // No progress lane (sub-communicator, disabled by hint):
+                // exchange phase on the caller, I/O phase overlaps on
+                // the engine — the split collectives' contract.
                 let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
                 Ok(Submission::Queued(IoScheduler::write_phase_async(ctx, work, bytes)))
             }
@@ -816,11 +839,43 @@ impl File<'_> {
         if op.coordination == Coordination::Collective {
             let cb = self.cb_params();
             if cb.enabled && self.comm.size() > 1 {
-                // The exchange *and* aggregation complete in this call
-                // (the reply exchange needs the communicator, which
-                // cannot leave the calling thread); only the local
-                // scatter/decode runs on the engine.
                 let (off, _) = self.resolve_offset(op, &ctx.view)?;
+                if let Some(ProgressLane { engine, comm }) = self.progress_lane() {
+                    // Truly asynchronous read: request exchange,
+                    // aggregation, reply exchange, and the scatter into
+                    // `buf` all run on the rank's progress thread; this
+                    // call returns before any byte moves.
+                    let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+                    let (req, tx) = Request::pending();
+                    engine.submit(move || {
+                        let mut buf = buf;
+                        let mut payload = vec![0u8; payload_len];
+                        let res = collective::collective_read(
+                            comm.as_ref(),
+                            &ctx,
+                            &cb,
+                            &plan,
+                            &mut payload,
+                        )
+                        .and_then(|got| {
+                            unpack_payload(
+                                buf.as_mut_slice(),
+                                buf_offset,
+                                count,
+                                &dt,
+                                &payload,
+                                got,
+                            )?;
+                            Ok(Status::of_bytes(got))
+                        });
+                        let _ = tx.send((res, buf));
+                    });
+                    return Ok(req);
+                }
+                // No progress lane: the exchange *and* aggregation
+                // complete in this call (the reply exchange needs a
+                // communicator endpoint); only the local scatter/decode
+                // runs on the engine.
                 let mut payload = vec![0u8; payload_len];
                 let got = self.collective_read(&ctx, &cb, off, &mut payload)?;
                 return Ok(engine::submit(move || {
@@ -895,15 +950,31 @@ impl File<'_> {
     }
 
     // ------------------------------------------------------------------
-    // Two-phase collective machinery (the exchange halves live here —
-    // collective.rs keeps the pure domain/aggregator arithmetic)
+    // Two-phase collective plumbing (the thread-agnostic phase drivers
+    // live in collective.rs; these wrappers bind the handle's
+    // communicator and plan cache for the on-caller paths)
     // ------------------------------------------------------------------
 
-    /// Exchange phase of a collective write: route this rank's plan
-    /// pieces to their aggregators and collect the I/O work this rank
-    /// owes as an aggregator. On degenerate collectives (buffering
-    /// disabled or a single rank) the payload is written independently
-    /// here and the returned work is empty.
+    /// The communicator's progress lane, unless the collective
+    /// `jpio_progress_threads` hint disables it or the engine is
+    /// unusable (a forked child that inherited the world — a
+    /// whole-world condition, so every rank answers alike and the
+    /// fallback stays collectively consistent).
+    fn progress_lane(&self) -> Option<ProgressLane> {
+        let disabled =
+            self.info.lock().unwrap().get_usize(keys::PROGRESS_THREADS) == Some(0);
+        if disabled {
+            return None;
+        }
+        let lane = self.comm.progress_lane()?;
+        if !lane.engine.usable() {
+            return None;
+        }
+        Some(lane)
+    }
+
+    /// [`collective::exchange_write`] on the calling thread — the
+    /// blocking and split collectives' exchange half.
     fn exchange_write(
         &self,
         ctx: &TransferCtx,
@@ -911,44 +982,12 @@ impl File<'_> {
         etype_off: Offset,
         payload: &[u8],
     ) -> Result<(WriteIoWork, usize)> {
-        let comm = self.comm;
-        let n = comm.size();
-        if !cb.enabled || n == 1 {
-            // Degenerate: independent write, collective completion only.
-            let plan = self.plan_for(ctx, Direction::Write, etype_off, payload.len())?;
-            IoScheduler::write(ctx, &plan, payload)?;
-            return Ok((WriteIoWork::empty(), payload.len()));
-        }
         let plan = self.plan_for(ctx, Direction::Write, etype_off, payload.len())?;
-        let per_rank = match route_to_aggregators(comm, ctx, cb, &plan) {
-            Some(p) => p,
-            None => return Ok((WriteIoWork::empty(), payload.len())),
-        };
-        let msgs: Vec<Vec<u8>> =
-            per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
-        let inbound = comm.alltoall(&msgs);
-        // Decode in rank order (deterministic overlap resolution).
-        let mut writes = Vec::new();
-        for msg in &inbound {
-            if msg.len() < 4 {
-                continue;
-            }
-            let (rs, mut pos) = decode_runs(msg);
-            for (off, len) in rs {
-                writes.push((off, msg[pos..pos + len].to_vec()));
-                pos += len;
-            }
-        }
-        writes.sort_by_key(|&(off, _)| off);
-        Ok((
-            WriteIoWork { writes, cb_buffer: cb.buffer.unwrap_or(16 << 20).max(4096) },
-            payload.len(),
-        ))
+        collective::exchange_write(self.comm, ctx, cb, &plan, payload)
     }
 
-    /// Full collective read: exchange requests, aggregator sieved reads,
-    /// reply exchange, local reassembly. Returns bytes read into
-    /// `payload`.
+    /// [`collective::collective_read`] on the calling thread — the
+    /// blocking, split, and lane-less nonblocking collective reads.
     fn collective_read(
         &self,
         ctx: &TransferCtx,
@@ -956,95 +995,8 @@ impl File<'_> {
         etype_off: Offset,
         payload: &mut [u8],
     ) -> Result<usize> {
-        let comm = self.comm;
-        let n = comm.size();
-        if !cb.enabled || n == 1 {
-            let plan = self.plan_for(ctx, Direction::Read, etype_off, payload.len())?;
-            let got = IoScheduler::read(ctx, &plan, payload)?;
-            if cb.enabled {
-                comm.barrier();
-            }
-            return Ok(got);
-        }
         let plan = self.plan_for(ctx, Direction::Read, etype_off, payload.len())?;
-        // Request phase: ship (off,len) lists to the owning aggregators.
-        let my_pieces = match route_to_aggregators(comm, ctx, cb, &plan) {
-            Some(p) => p,
-            None => return Ok(0),
-        };
-        let mut reqs = Vec::with_capacity(n);
-        for pieces in &my_pieces {
-            let mut msg = Vec::with_capacity(4 + pieces.len() * 16);
-            msg.extend_from_slice(&(pieces.len() as u32).to_le_bytes());
-            for &(off, len, _) in pieces.iter() {
-                msg.extend_from_slice(&off.to_le_bytes());
-                msg.extend_from_slice(&(len as u64).to_le_bytes());
-            }
-            reqs.push(msg);
-        }
-        let inbound = comm.alltoall(&reqs);
-
-        // Aggregator I/O phase: merge all requested intervals, sieved
-        // read through the scheduler.
-        let eof = ctx.storage.size()?;
-        let mut per_src_runs: Vec<Vec<(u64, usize)>> = Vec::with_capacity(n);
-        let mut intervals: Vec<(u64, u64)> = Vec::new();
-        for msg in &inbound {
-            let (rs, _) = decode_runs(msg);
-            for &(off, len) in &rs {
-                intervals.push((off, off + len as u64));
-            }
-            per_src_runs.push(rs);
-        }
-        let merged = merge_intervals(&mut intervals);
-        let merged_runs: Vec<(u64, usize)> =
-            merged.iter().map(|&(s, e)| (s, (e - s) as usize)).collect();
-        let total: usize = merged_runs.iter().map(|r| r.1).sum();
-        let mut agg_buf = vec![0u8; total];
-        let stage = cb.buffer.unwrap_or(16 << 20).max(4096);
-        IoScheduler::read_phase(ctx, &merged_runs, stage, &mut agg_buf)?;
-        // Reply phase: slice the aggregated buffer per source request.
-        let locate = |off: u64| -> Option<usize> {
-            // Position of `off` within agg_buf.
-            let mut base = 0usize;
-            for &(s, e) in &merged {
-                if off >= s && off < e {
-                    return Some(base + (off - s) as usize);
-                }
-                base += (e - s) as usize;
-            }
-            None
-        };
-        let mut replies = vec![Vec::new(); n];
-        for (src, rs) in per_src_runs.iter().enumerate() {
-            let bytes: usize = rs.iter().map(|r| r.1).sum();
-            let mut reply = Vec::with_capacity(bytes);
-            for &(off, len) in rs {
-                let p = locate(off).expect("requested run must be inside merged intervals");
-                reply.extend_from_slice(&agg_buf[p..p + len]);
-            }
-            replies[src] = reply;
-        }
-        let mut answers = comm.alltoall(&replies);
-
-        // Reassemble my payload from the per-aggregator answers; compute
-        // the EOF-clamped byte count.
-        let mut got = 0usize;
-        for (a, pieces) in my_pieces.iter().enumerate() {
-            let ans = std::mem::take(&mut answers[a]);
-            let mut cursor = 0usize;
-            for &(off, len, pos) in pieces {
-                payload[pos..pos + len].copy_from_slice(&ans[cursor..cursor + len]);
-                cursor += len;
-                let visible = (eof.saturating_sub(off) as usize).min(len);
-                got += visible;
-            }
-        }
-        // Datarep decode on the assembled payload.
-        if plan.needs_convert() {
-            plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
-        }
-        Ok(got)
+        collective::collective_read(self.comm, ctx, cb, &plan, payload)
     }
 }
 

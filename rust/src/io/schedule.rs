@@ -13,12 +13,16 @@
 //!   compiled on the caller and executed on the request-engine worker
 //!   pool ([`crate::io::engine`]);
 //! * **phase-by-phase** ([`IoScheduler::write_phase`],
-//!   [`IoScheduler::write_phase_async`], [`IoScheduler::read_phase`]) —
-//!   two-phase collectives: the exchange phase has already run on the
-//!   caller (it needs the communicator, which cannot leave the calling
-//!   thread), and the storage-only I/O phase runs here, synchronously for
-//!   the blocking `*_ALL` routines or on the engine for the split and
-//!   MPI-3.1 nonblocking collectives.
+//!   [`IoScheduler::write_phase_async`],
+//!   [`IoScheduler::read_phase_pipelined`]) — two-phase collectives: the
+//!   exchange phase ran wherever the communicator endpoint lives (the
+//!   caller for blocking/split collectives, the rank's progress thread
+//!   for the off-caller nonblocking collectives), and the storage-only
+//!   I/O phase runs here. Both phase executors pipeline their work in
+//!   staging-buffer-sized **rounds** with one helper thread at depth 1 —
+//!   the aggregator double buffer: exchange decode (write) or reply
+//!   slicing (read) of round *n+1* overlaps the storage I/O of round
+//!   *n*.
 //!
 //! Since every access cell funnels through the [`AccessOp`] core
 //! ([`crate::io::op`]), the scheduler is the one place plan reuse can
@@ -34,10 +38,10 @@
 //! backend's per-server concurrent fan-out).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::comm::Status;
-use crate::io::collective::WriteIoWork;
+use crate::io::collective::{decode_runs, WriteIoWork};
 use crate::io::engine::{self, Request};
 use crate::io::errors::Result;
 use crate::io::op::{Direction, TransferCtx};
@@ -213,32 +217,106 @@ impl IoScheduler {
     }
 
     /// The storage-only I/O phase of a two-phase collective write:
-    /// coalesce the exchanged pieces into large transfers and hit the
-    /// file once per coalesced extent. Touches no communicator state, so
-    /// it is safe on the engine.
+    /// decode the exchanged messages into staging **rounds** of
+    /// strictly-adjacent pieces (up to `cb_buffer` bytes each) and hit
+    /// the file once per round. Rounds are pipelined at depth 1 to a
+    /// scoped writer thread, so decoding (gathering payload bytes out of
+    /// the raw exchange messages) of round *n+1* overlaps the storage
+    /// write of round *n* — the aggregator double buffer; spent staging
+    /// buffers ping-pong back for reuse. Touches no communicator state,
+    /// so it is safe on the engine and on progress threads.
     pub(crate) fn write_phase(ctx: &TransferCtx, work: WriteIoWork) -> Result<()> {
-        let strat = ViewBufStrategy::with_stage(work.cb_buffer);
-        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
-        // Coalesce strictly-adjacent pieces into single large transfers —
-        // the whole point of aggregation. (Overlapping pieces are never
-        // merged: sorted order preserves the deterministic rank-order
-        // overwrite semantics.)
+        // Header pass: run lists only; payload bytes stay in the raw
+        // messages until their round is staged. Message order is rank
+        // order, and the stable sort keeps it on equal offsets — the
+        // deterministic overwrite semantics. (Overlapping pieces are
+        // never merged; the single writer stores rounds in order.)
+        let mut pieces: Vec<(u64, usize, usize, usize)> = Vec::new(); // (off, len, msg, pos)
+        for (m, msg) in work.inbound.iter().enumerate() {
+            if msg.len() < 4 {
+                continue;
+            }
+            let (rs, mut pos) = decode_runs(msg);
+            for (off, len) in rs {
+                pieces.push((off, len, m, pos));
+                pos += len;
+            }
+        }
+        pieces.sort_by_key(|&(off, ..)| off);
+        if pieces.is_empty() {
+            return Ok(());
+        }
         let cb_buffer = work.cb_buffer;
-        let mut pending: Option<(u64, Vec<u8>)> = None;
-        for (off, bytes) in work.writes {
-            if let Some((poff, pbuf)) = &mut pending {
-                if *poff + pbuf.len() as u64 == off && pbuf.len() + bytes.len() <= cb_buffer {
-                    pbuf.extend_from_slice(&bytes);
+        let strat = ViewBufStrategy::with_stage(cb_buffer);
+        let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        // Count rounds from the headers alone. The common case — a
+        // contiguous collective whose pieces coalesce into one round —
+        // stages and writes inline: there is nothing to pipeline, so it
+        // skips the writer thread and both channels entirely.
+        let mut nrounds = 0usize;
+        let mut probe: Option<(u64, usize)> = None; // (start, staged len)
+        for &(off, len, ..) in &pieces {
+            match &mut probe {
+                Some((poff, plen)) if *poff + *plen as u64 == off && *plen + len <= cb_buffer => {
+                    *plen += len;
+                }
+                _ => {
+                    nrounds += 1;
+                    probe = Some((off, len));
+                }
+            }
+        }
+        if nrounds == 1 {
+            let (start, total) = probe.expect("pieces is non-empty");
+            let mut buf = Vec::with_capacity(total);
+            for &(_, len, m, pos) in &pieces {
+                buf.extend_from_slice(&work.inbound[m][pos..pos + len]);
+            }
+            strat.write(ctx.storage.as_ref(), &[(start, buf.len())], &buf)?;
+            return Ok(());
+        }
+        let storage = &ctx.storage;
+        std::thread::scope(|s| -> Result<()> {
+            // Depth-1 pipeline: one round queued while one is written.
+            let (tx, rx) = mpsc::sync_channel::<(u64, Vec<u8>)>(1);
+            let (back_tx, back_rx) = mpsc::channel::<Vec<u8>>();
+            let writer = s.spawn(move || -> Result<()> {
+                while let Ok((off, buf)) = rx.recv() {
+                    strat.write(storage.as_ref(), &[(off, buf.len())], &buf)?;
+                    let _ = back_tx.send(buf);
+                }
+                Ok(())
+            });
+            let mut cur: Option<(u64, Vec<u8>)> = None;
+            'stage: for &(off, len, m, pos) in &pieces {
+                let bytes = &work.inbound[m][pos..pos + len];
+                let merges = match &cur {
+                    Some((coff, cbuf)) => {
+                        *coff + cbuf.len() as u64 == off && cbuf.len() + len <= cb_buffer
+                    }
+                    None => false,
+                };
+                if merges {
+                    cur.as_mut().unwrap().1.extend_from_slice(bytes);
                     continue;
                 }
-                strat.write(ctx.storage.as_ref(), &[(*poff, pbuf.len())], pbuf)?;
+                if let Some(round) = cur.take() {
+                    if tx.send(round).is_err() {
+                        // Writer failed early; its error surfaces at join.
+                        break 'stage;
+                    }
+                }
+                let mut buf = back_rx.try_recv().unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(bytes);
+                cur = Some((off, buf));
             }
-            pending = Some((off, bytes));
-        }
-        if let Some((poff, pbuf)) = pending {
-            strat.write(ctx.storage.as_ref(), &[(poff, pbuf.len())], &pbuf)?;
-        }
-        Ok(())
+            if let Some(round) = cur.take() {
+                let _ = tx.send(round);
+            }
+            drop(tx);
+            writer.join().expect("aggregator writer thread panicked")
+        })
     }
 
     /// [`IoScheduler::write_phase`] on the request engine — the split
@@ -255,26 +333,91 @@ impl IoScheduler {
         })
     }
 
-    /// The aggregator read of the I/O phase of a collective read: one
-    /// sieved pass over the merged request intervals with a
-    /// `cb_buffer_size` staging buffer.
-    pub(crate) fn read_phase(
+    /// Pipelined aggregator read: the merged request intervals are split
+    /// into **rounds** of whole runs totalling at most `stage` bytes,
+    /// and the storage read of round *n+1* (on a scoped helper thread,
+    /// depth 1) overlaps `consume(base, bytes)` of round *n* — reply
+    /// slicing, in the collective read. `base` is the round's starting
+    /// position within the packed `buf`; rounds arrive in order and
+    /// cover `buf` exactly. Returns total bytes read (short at EOF).
+    ///
+    /// `runs` are already merged sorted intervals (an aggregator-side
+    /// plan in all but name) — no recompilation needed. Backends with
+    /// their own vectored fan-out ([`crate::storage::StorageFile::prefers_plan_execution`] —
+    /// the striped per-server pool) take the whole plan in one shot
+    /// instead: chunking it into rounds would serialize their internal
+    /// concurrency.
+    pub(crate) fn read_phase_pipelined<F>(
         ctx: &TransferCtx,
         runs: &[(u64, usize)],
         stage: usize,
         buf: &mut [u8],
-    ) -> Result<usize> {
+        mut consume: F,
+    ) -> Result<usize>
+    where
+        F: FnMut(usize, &[u8]),
+    {
         if runs.is_empty() {
             return Ok(0);
         }
-        // `runs` are already merged sorted intervals (an aggregator-side
-        // plan in all but name) — no recompilation needed.
         let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
         if ctx.storage.prefers_plan_execution() && runs.len() > 1 {
-            ctx.storage.read_plan(runs, buf)
-        } else {
-            ViewBufStrategy::with_stage(stage).read(ctx.storage.as_ref(), runs, buf)
+            let got = ctx.storage.read_plan(runs, buf)?;
+            consume(0, &buf[..]);
+            return Ok(got);
         }
+        // Round boundaries: whole runs greedily grouped under `stage`
+        // bytes (a run larger than the stage is its own round — the
+        // strategy streams it in stage-sized chunks internally).
+        let mut rounds: Vec<(usize, usize, usize)> = Vec::new(); // (first run, count, bytes)
+        let mut first = 0usize;
+        let mut bytes = 0usize;
+        for (i, &(_, len)) in runs.iter().enumerate() {
+            if i > first && bytes + len > stage {
+                rounds.push((first, i - first, bytes));
+                first = i;
+                bytes = 0;
+            }
+            bytes += len;
+        }
+        rounds.push((first, runs.len() - first, bytes));
+        let strat = ViewBufStrategy::with_stage(stage);
+        if rounds.len() == 1 {
+            let got = strat.read(ctx.storage.as_ref(), runs, buf)?;
+            consume(0, &buf[..]);
+            return Ok(got);
+        }
+        let storage = &ctx.storage;
+        let strat = &strat;
+        std::thread::scope(|s| -> Result<usize> {
+            let mut total = 0usize;
+            let mut rest: &mut [u8] = buf;
+            let mut base = 0usize;
+            let mut prev = None;
+            for &(first, count, bytes) in &rounds {
+                let (slice, tail) = std::mem::take(&mut rest).split_at_mut(bytes);
+                rest = tail;
+                let round_runs = &runs[first..first + count];
+                let handle = s.spawn(move || {
+                    let res = strat.read(storage.as_ref(), round_runs, &mut *slice);
+                    (res, slice)
+                });
+                if let Some((h, pbase)) = prev.replace((handle, base)) {
+                    let (res, done): (Result<usize>, &mut [u8]) =
+                        h.join().expect("aggregator reader thread panicked");
+                    total += res?;
+                    consume(pbase, &done[..]);
+                }
+                base += bytes;
+            }
+            if let Some((h, pbase)) = prev {
+                let (res, done): (Result<usize>, &mut [u8]) =
+                    h.join().expect("aggregator reader thread panicked");
+                total += res?;
+                consume(pbase, &done[..]);
+            }
+            Ok(total)
+        })
     }
 }
 
@@ -432,18 +575,70 @@ mod tests {
 
     #[test]
     fn write_phase_coalesces_adjacent_pieces() {
+        use crate::io::collective::encode_write_msg;
         let path = format!("/tmp/jpio-sched-phase-{}", std::process::id());
         let c = ctx(&path);
-        let work = WriteIoWork {
-            writes: vec![(0, vec![1u8; 4]), (4, vec![2u8; 4]), (16, vec![3u8; 4])],
-            cb_buffer: 4096,
-        };
+        // Two exchange messages, as the aggregator receives them: rank 0
+        // owns [0,4) and [16,20), rank 1 owns the adjacent [4,8).
+        let p0: Vec<u8> = [[1u8; 4], [3u8; 4]].concat();
+        let m0 = encode_write_msg(&[(0, 4, 0), (16, 4, 4)], &p0);
+        let m1 = encode_write_msg(&[(4, 4, 0)], &[2u8; 4]);
+        let work = WriteIoWork { inbound: vec![m0, m1], cb_buffer: 4096 };
         IoScheduler::write_phase(&c, work).unwrap();
         let mut back = [0u8; 20];
         c.storage.read_at(0, &mut back).unwrap();
         assert_eq!(&back[..4], &[1u8; 4]);
         assert_eq!(&back[4..8], &[2u8; 4]);
         assert_eq!(&back[16..20], &[3u8; 4]);
+        LocalBackend::instant().delete(&path).unwrap();
+    }
+
+    #[test]
+    fn write_phase_rank_order_wins_on_overlap() {
+        use crate::io::collective::encode_write_msg;
+        let path = format!("/tmp/jpio-sched-overlap-{}", std::process::id());
+        let c = ctx(&path);
+        // Ranks 0 and 1 both write [0,8): the higher rank's bytes must
+        // land last (deterministic rank-order overwrite), across any
+        // round boundary (cb_buffer = 4 forces one round per piece).
+        let m0 = encode_write_msg(&[(0, 8, 0)], &[7u8; 8]);
+        let m1 = encode_write_msg(&[(0, 8, 0)], &[9u8; 8]);
+        let work = WriteIoWork { inbound: vec![m0, m1], cb_buffer: 4 };
+        IoScheduler::write_phase(&c, work).unwrap();
+        let mut back = [0u8; 8];
+        c.storage.read_at(0, &mut back).unwrap();
+        assert_eq!(back, [9u8; 8]);
+        LocalBackend::instant().delete(&path).unwrap();
+    }
+
+    #[test]
+    fn read_phase_pipelined_rounds_cover_buf_in_order() {
+        let path = format!("/tmp/jpio-sched-rounds-{}", std::process::id());
+        let c = ctx(&path);
+        let data: Vec<u8> = (0..200u8).collect();
+        c.storage.write_at(0, &data).unwrap();
+        // Five disjoint runs, stage = 40 bytes → multiple rounds; the
+        // consumer must see ordered, exactly-covering rounds.
+        let runs = [(0u64, 30usize), (40, 30), (80, 30), (120, 30), (160, 30)];
+        let mut buf = vec![0u8; 150];
+        let mut seen = Vec::new();
+        let got = IoScheduler::read_phase_pipelined(&c, &runs, 40, &mut buf, |base, round| {
+            seen.push((base, round.len()));
+        })
+        .unwrap();
+        assert_eq!(got, 150);
+        let covered: usize = seen.iter().map(|&(_, l)| l).sum();
+        assert_eq!(covered, 150, "rounds must cover the buffer exactly");
+        for w in seen.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0, "rounds must arrive in order");
+        }
+        assert!(seen.len() >= 3, "stage=40 over 150 bytes must split into rounds");
+        // The packed bytes match the runs.
+        let mut want = Vec::new();
+        for &(off, len) in &runs {
+            want.extend_from_slice(&data[off as usize..off as usize + len]);
+        }
+        assert_eq!(buf, want);
         LocalBackend::instant().delete(&path).unwrap();
     }
 }

@@ -11,12 +11,14 @@
 //! storage phase lands on the request engine — so computation between
 //! `BEGIN` and `END` genuinely overlaps the file I/O, which is the whole
 //! point of the double-buffering pattern in §7.2.9.1. Reads complete
-//! their aggregation in `BEGIN` (the reply exchange needs the
-//! communicator, which cannot leave the calling thread) and hand the
-//! payload to `END`. The MPI-3.1 nonblocking collectives
-//! ([`File::iwrite_all`]/[`File::iread_all`]) follow exactly the same
-//! phase split, with a [`crate::io::engine::Request`] in place of the
-//! `END` call.
+//! their aggregation in `BEGIN` (the reply exchange needs a communicator
+//! endpoint, and the split collectives keep theirs on the calling
+//! thread) and hand the payload to `END`. The MPI-3.1 nonblocking
+//! collectives ([`File::iwrite_all`]/[`File::iread_all`]) return a
+//! [`crate::io::engine::Request`] in place of the `END` call and go
+//! further: on worlds with a progress lane
+//! ([`crate::comm::progress`]), *both* phases — the reply exchange
+//! included — leave the caller entirely.
 //!
 //! Every routine here is a thin wrapper naming its matrix cell; `BEGIN`
 //! reads and `END` writes carry no buffer, so they pass an empty slice

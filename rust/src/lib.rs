@@ -6,7 +6,9 @@
 //! * [`comm`] — an MPI-like communicator substrate (the MPJ Express
 //!   analogue): derived datatypes with holes, point-to-point messaging,
 //!   collectives, thread-based (shared-memory) and process-based
-//!   (distributed-memory) communicators.
+//!   (distributed-memory) communicators, and a per-world progress
+//!   engine ([`comm::progress`]) that drives nonblocking collective
+//!   I/O entirely off the calling thread.
 //! * [`io`] — the paper's contribution: the full MPJ-IO v0.1 API surface
 //!   (all 52 MPI-2.2 chapter-13 data-access routines plus the MPI-3.1
 //!   nonblocking collectives, file views, consistency semantics,
@@ -32,6 +34,9 @@
 //! * [`bench`] — the measurement harness that regenerates every table
 //!   and figure of the paper's evaluation chapter.
 //!
+//! A narrative walkthrough with runnable snippets lives in the
+//! [`guide`] module (compiled from `docs/GUIDE.md`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -52,6 +57,8 @@
 //! });
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod bench;
 pub mod cli;
 pub mod comm;
@@ -61,6 +68,14 @@ pub mod runtime;
 pub mod storage;
 pub mod strategy;
 pub mod testing;
+
+#[doc = include_str!("../../docs/GUIDE.md")]
+///
+/// ---
+///
+/// *(This page is compiled from `docs/GUIDE.md`; its code blocks run
+/// under `cargo test --doc`, so the guide cannot drift from the API.)*
+pub mod guide {}
 
 /// Crate-wide result alias using the MPJ-IO error classes of §7.2.8.
 pub type Result<T> = std::result::Result<T, io::errors::IoError>;

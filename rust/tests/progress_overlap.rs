@@ -1,0 +1,377 @@
+//! The per-world progress engine: proofs that the MPI-3.1 nonblocking
+//! collectives are *truly* asynchronous.
+//!
+//! The key instrument is a gated storage backend: every positioned
+//! read/write blocks on a gate until the test releases it, and counts
+//! completions. With the gate closed, `iwrite_all`/`iread_at_all`
+//! returning at all proves no storage I/O runs on the caller; releasing
+//! the gate and watching the completion counter rise — while no rank
+//! re-enters the library — proves the I/O phase finishes entirely in the
+//! background before `wait()` is ever called. Plus request-lifecycle
+//! regressions (mid-flight `drop(File)`, test-then-wait) and the
+//! `jpio_progress_threads = 0` / tiny-staging fallback paths.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use jpio::comm::{process, threads, Comm, Datatype};
+use jpio::io::errors::Result as IoResult;
+use jpio::io::hints::keys;
+use jpio::io::{amode, File, Info};
+use jpio::storage::local::LocalBackend;
+use jpio::storage::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-progress-{}-{name}", std::process::id())
+}
+
+/// A gate every gated storage operation blocks on until released.
+#[derive(Default)]
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Local storage whose positioned reads/writes block on `gate` and count
+/// completions in `done`.
+struct GatedBackend {
+    inner: LocalBackend,
+    gate: Arc<Gate>,
+    done: Arc<AtomicUsize>,
+}
+
+struct GatedFile {
+    inner: Arc<dyn StorageFile>,
+    gate: Arc<Gate>,
+    done: Arc<AtomicUsize>,
+}
+
+impl Backend for GatedBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> IoResult<Arc<dyn StorageFile>> {
+        Ok(Arc::new(GatedFile {
+            inner: self.inner.open(path, opts)?,
+            gate: self.gate.clone(),
+            done: self.done.clone(),
+        }))
+    }
+
+    fn delete(&self, path: &str) -> IoResult<()> {
+        self.inner.delete(path)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+impl StorageFile for GatedFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> IoResult<usize> {
+        self.gate.wait_open();
+        let r = self.inner.read_at(offset, buf);
+        self.done.fetch_add(1, Ordering::SeqCst);
+        r
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> IoResult<usize> {
+        self.gate.wait_open();
+        let r = self.inner.write_at(offset, buf);
+        self.done.fetch_add(1, Ordering::SeqCst);
+        r
+    }
+
+    fn size(&self) -> IoResult<u64> {
+        self.inner.size()
+    }
+
+    fn set_size(&self, size: u64) -> IoResult<()> {
+        self.inner.set_size(size)
+    }
+
+    fn preallocate(&self, size: u64) -> IoResult<()> {
+        self.inner.preallocate(size)
+    }
+
+    fn sync(&self) -> IoResult<()> {
+        self.inner.sync()
+    }
+
+    fn map(&self, offset: u64, len: usize, writable: bool) -> IoResult<Box<dyn MappedRegion>> {
+        self.inner.map(offset, len, writable)
+    }
+
+    fn lock_exclusive(&self) -> IoResult<FileLockGuard> {
+        self.inner.lock_exclusive()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+fn gated() -> (Arc<GatedBackend>, Arc<Gate>, Arc<AtomicUsize>) {
+    let gate = Arc::new(Gate::default());
+    let done = Arc::new(AtomicUsize::new(0));
+    let backend = Arc::new(GatedBackend {
+        inner: LocalBackend::instant(),
+        gate: gate.clone(),
+        done: done.clone(),
+    });
+    (backend, gate, done)
+}
+
+fn poll_until(deadline_s: u64, what: &str, mut ok: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(deadline_s);
+    while !ok() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn iwrite_all_storage_io_completes_in_background_before_wait() {
+    let path = tmp("gated-write");
+    let (backend, gate, done) = gated();
+    threads::run(2, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        let r = c.rank();
+        // Block views: rank r's pointer-relative ints land at byte
+        // displacement r*512.
+        f.set_view((r * 512) as i64, &Datatype::INT, &Datatype::INT, "native", &Info::null())
+            .unwrap();
+        let mine: Vec<i32> = (0..128).map(|i| (r * 128 + i) as i32).collect();
+        // Gate closed: any storage write would block its thread. The call
+        // returning at all proves the caller issues no storage I/O.
+        let req = f.iwrite_all(mine.as_slice(), 0, 128, &Datatype::INT).unwrap();
+        assert_eq!(f.get_position().unwrap(), 128, "pointer advances at the call");
+        c.barrier(); // every rank's call returned
+        if r == 0 {
+            assert_eq!(
+                done.load(Ordering::SeqCst),
+                0,
+                "no storage I/O may complete before the gate opens"
+            );
+            gate.release();
+        }
+        c.barrier();
+        // The I/O phase finishes on the progress threads while no rank
+        // re-enters the library — observable from outside the API.
+        poll_until(10, "background write I/O", || done.load(Ordering::SeqCst) >= 1);
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 512);
+        c.barrier();
+        // Verify through the gated (now open) storage, via a flat view.
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let mut all = vec![0i32; 256];
+        f.read_at(0, all.as_mut_slice(), 0, 256, &Datatype::INT).unwrap();
+        assert_eq!(all, (0..256).collect::<Vec<_>>());
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn iread_all_aggregation_runs_in_background_before_wait() {
+    let path = tmp("gated-read");
+    // Pre-populate outside the gate.
+    let data: Vec<u8> = (0..=255u8).collect();
+    std::fs::write(&path, &data).unwrap();
+    let (backend, gate, done) = gated();
+    threads::run(2, |c| {
+        let f = File::open_with_backend(c, &path, amode::RDONLY, Info::null(), backend.clone())
+            .unwrap();
+        let r = c.rank();
+        // Gate closed: the aggregator read would block its thread — the
+        // call still returns immediately.
+        let req = f
+            .iread_at_all((r * 128) as i64, vec![0u8; 128], 0, 128, &Datatype::BYTE)
+            .unwrap();
+        c.barrier();
+        if r == 0 {
+            assert_eq!(
+                done.load(Ordering::SeqCst),
+                0,
+                "no storage read may complete before the gate opens"
+            );
+            gate.release();
+        }
+        c.barrier();
+        poll_until(10, "background read I/O", || done.load(Ordering::SeqCst) >= 1);
+        let (st, back) = req.wait().unwrap();
+        assert_eq!(st.bytes, 128);
+        assert_eq!(&back[..], &data[r * 128..(r + 1) * 128]);
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn requests_survive_mid_flight_file_drop() {
+    // The ctx snapshot (Arc'd storage) and the job's world endpoint keep
+    // an in-flight nonblocking collective alive after the handle drops.
+    let path = tmp("drop");
+    threads::run(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let r = c.rank();
+        let mine = vec![(r + 1) as u8; 64];
+        let req = f.iwrite_at_all((r * 64) as i64, mine.as_slice(), 0, 64, &Datatype::BYTE)
+            .unwrap();
+        drop(f); // mid-flight: the request must complete anyway
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 64);
+        c.barrier();
+
+        // Same for a read, with the test-then-wait double-completion
+        // pattern on a dropped handle.
+        let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+        let mut req = f.iread_at_all(0, vec![0u8; 128], 0, 128, &Datatype::BYTE).unwrap();
+        drop(f);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(res) = req.test() {
+                assert!(res.is_ok());
+                break;
+            }
+            assert!(Instant::now() < deadline, "request never completed");
+            std::thread::yield_now();
+        }
+        // wait() after a positive test(): the sanctioned double-completion.
+        let (st, back) = req.wait().unwrap();
+        assert_eq!(st.bytes, 128);
+        assert!(back[..64].iter().all(|&v| v == 1));
+        assert!(back[64..].iter().all(|&v| v == 2));
+        c.barrier();
+    });
+    let raw = std::fs::read(&path).unwrap();
+    assert_eq!(raw.len(), 128);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn progress_threads_hint_disables_the_lane_and_still_round_trips() {
+    // jpio_progress_threads = 0 falls back to caller-side exchange (the
+    // split collectives' contract); a tiny jpio_staging_buffer_size
+    // forces many pipeline rounds on both paths. Data must be identical.
+    for (progress, staging) in [("0", "64"), ("1", "64")] {
+        let path = tmp(&format!("hint-{progress}-{staging}"));
+        threads::run(4, |c| {
+            let info = Info::from([
+                (keys::PROGRESS_THREADS, progress),
+                (keys::STAGING_BUFFER_SIZE, staging),
+            ]);
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
+            let n = c.size();
+            let r = c.rank();
+            // Strided interleave: the classic two-phase shape.
+            let ft = Datatype::vector(1, 1, 1, &Datatype::INT).unwrap();
+            let ft = Datatype::resized(&ft, 0, (n * 4) as i64).unwrap();
+            f.set_view((r * 4) as i64, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+            let k = 256;
+            let mine: Vec<i32> = (0..k).map(|i| (i * n + r) as i32).collect();
+            let req = f.iwrite_all(mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            let (st, ()) = req.wait().unwrap();
+            assert_eq!(st.bytes, k * 4);
+            c.barrier();
+            f.seek(0, jpio::io::seek::SET).unwrap();
+            let req = f.iread_all(vec![0i32; k], 0, k, &Datatype::INT).unwrap();
+            let (st, back) = req.wait().unwrap();
+            assert_eq!(st.bytes, k * 4);
+            assert_eq!(back, mine);
+            f.close().unwrap();
+        });
+        let raw = std::fs::read(&path).unwrap();
+        let ints: Vec<i32> =
+            raw.chunks_exact(4).map(|b| i32::from_le_bytes(b.try_into().unwrap())).collect();
+        assert_eq!(ints, (0..ints.len() as i32).collect::<Vec<_>>());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    }
+}
+
+#[test]
+fn app_thread_collectives_overlap_in_flight_background_collectives() {
+    // The tag-band isolation stress: while a nonblocking collective is
+    // in flight on the progress threads, the app threads run a blocking
+    // collective on the same world. Messages must never cross lanes.
+    let path = tmp("lanes");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let r = c.rank();
+        let nb = vec![(10 + r) as i32; 64];
+        let req = f.iwrite_at_all((r * 64) as i64, nb.as_slice(), 0, 64, &Datatype::INT)
+            .unwrap();
+        // Blocking collective write to a disjoint region while the
+        // nonblocking one is (possibly) still exchanging.
+        let bl = vec![(20 + r) as i32; 64];
+        f.write_at_all((256 + r * 64) as i64, bl.as_slice(), 0, 64, &Datatype::INT).unwrap();
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 256);
+        c.barrier();
+        let mut all = vec![0i32; 512];
+        f.read_at_all(0, all.as_mut_slice(), 0, 512, &Datatype::INT).unwrap();
+        for rr in 0..4usize {
+            assert!(all[rr * 64..(rr + 1) * 64].iter().all(|&v| v == (10 + rr) as i32));
+            assert!(all[256 + rr * 64..256 + (rr + 1) * 64]
+                .iter()
+                .all(|&v| v == (20 + rr) as i32));
+        }
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn off_caller_collectives_across_forked_processes() {
+    // The process transport's shared endpoint: the app thread and the
+    // progress thread of each forked rank interleave on one socket mesh
+    // (bounded-slice recv), across real address spaces.
+    let path = tmp("procs");
+    process::run_local(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let r = c.rank();
+        let nb: Vec<i32> = (0..128).map(|i| (r * 128 + i) as i32).collect();
+        let req = f.iwrite_at_all((r * 128) as i64, nb.as_slice(), 0, 128, &Datatype::INT)
+            .unwrap();
+        // App-thread blocking collective while the background one flies.
+        let bl = vec![(7 + r) as i32; 32];
+        f.write_at_all((256 + r * 32) as i64, bl.as_slice(), 0, 32, &Datatype::INT).unwrap();
+        let (st, ()) = req.wait().unwrap();
+        assert_eq!(st.bytes, 512);
+        c.barrier();
+        let req = f.iread_at_all(0, vec![0i32; 320], 0, 320, &Datatype::INT).unwrap();
+        let (st, all) = req.wait().unwrap();
+        assert_eq!(st.bytes, 320 * 4);
+        assert_eq!(&all[..256], &(0..256).collect::<Vec<i32>>()[..]);
+        assert!(all[256..288].iter().all(|&v| v == 7));
+        assert!(all[288..320].iter().all(|&v| v == 8));
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
