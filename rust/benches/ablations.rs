@@ -23,6 +23,11 @@
 //! 8. **IoPlan pipeline parity** — the same strided access through the
 //!    full File → IoPlan → IoScheduler pipeline vs calling the strategy
 //!    on pre-flattened runs (the compiler must cost nothing measurable).
+//! 9. **stats instrumentation cost** — the 4 KiB independent-write hot
+//!    path with `jpio_stats` unset (counters only) vs phase timers on vs
+//!    timers + JSONL tracing; proves the hint-off path records no phase
+//!    samples (timers fully skipped) and validates every emitted trace
+//!    line against the `TraceEvent` schema.
 //!
 //! `JPIO_SMOKE=1` runs everything at 1/16 size with one repetition — the
 //! CI gate that keeps this file compiled and executed on every PR.
@@ -559,6 +564,90 @@ fn plan_pipeline_parity() {
     common::cleanup(&path);
 }
 
+fn stats_instrumentation() {
+    println!("\n--- ablation 9: Darshan-style stats instrumentation cost ---");
+    use jpio::io::{StatsReport, TraceEvent};
+    let path = format!("/tmp/jpio-abl9-{}.dat", std::process::id());
+    let trace = format!("/tmp/jpio-abl9-{}.jsonl", std::process::id());
+    let k = 1024usize; // ints → the 4 KiB independent-write hot path
+    let writes = common::sz(4096); // ops per repetition
+    let payload = vec![3i32; k];
+
+    // One timed case: `writes` independent 4 KiB writes through a handle
+    // opened with `info`. Returns (MB/s, the handle's local report).
+    let case = |label: &str, info: Info| -> (f64, StatsReport) {
+        let payload = payload.clone();
+        let path = path.clone();
+        let mut out = threads::run(1, move |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, info.clone()).unwrap();
+            let st = bench(label, 1, common::reps(), writes * k * 4, || {
+                for i in 0..writes {
+                    f.write_at((i * k) as i64, payload.as_slice(), 0, k, &Datatype::INT)
+                        .unwrap();
+                }
+            });
+            let report = f.stats();
+            f.close().unwrap();
+            (st.mbs(), report)
+        });
+        out.pop().expect("one rank")
+    };
+
+    let (off_mbs, off_report) = case("stats off  ", Info::null());
+    let (on_mbs, on_report) = case("stats on   ", Info::from([("jpio_stats", "true")]));
+    let (trace_mbs, _) = case(
+        "stats+trace",
+        Info::from([("jpio_stats", "true"), ("jpio_stats_trace", trace.as_str())]),
+    );
+    println!("  hint off (counters only): {off_mbs:10.1} MB/s");
+    println!("  phase timers on:          {on_mbs:10.1} MB/s");
+    println!("  timers + JSONL trace:     {trace_mbs:10.1} MB/s");
+    println!(
+        "  off/on ratio: {:.2}x (≥ ~1 means the hint-off hot path pays nothing)",
+        off_mbs / on_mbs
+    );
+
+    // Functional proof of "near-zero cost when off": the hint-off run
+    // counted every op but recorded not a single phase sample — the
+    // timers never read the clock.
+    assert_eq!(off_report.counter("write_ops").sum as usize, writes * (1 + common::reps()));
+    for (name, p) in off_report.phases() {
+        assert_eq!(p.samples.sum, 0, "hint off: phase {name} must record no samples");
+    }
+    assert!(
+        on_report.phase("storage").samples.sum >= writes as u64,
+        "hint on: every write records a storage span"
+    );
+    // Guarded timing assertion (ablation-7 pattern): only when the runs
+    // are far enough above timer noise, the counters-only path must not
+    // run measurably slower than the fully timed path.
+    if off_mbs > 0.0 && on_mbs > 0.0 && writes >= 1024 {
+        assert!(
+            off_mbs >= 0.5 * on_mbs,
+            "hint-off hot path slower than timers-on beyond noise: {off_mbs:.1} vs {on_mbs:.1} MB/s"
+        );
+    }
+
+    // Schema validation of the traced run: every emitted line must parse
+    // with the reference decoder and round-trip byte-identically.
+    let stream = std::fs::read_to_string(format!("{trace}.0")).expect("per-rank trace file");
+    let mut ops = 0usize;
+    for line in stream.lines() {
+        let ev = TraceEvent::parse(line)
+            .unwrap_or_else(|| panic!("trace line failed schema validation: {line}"));
+        assert_eq!(ev.to_json(), line, "canonical encode must round-trip");
+        if ev.kind == "op" {
+            assert_eq!(ev.name, "write_at");
+            assert_eq!(ev.bytes, (k * 4) as u64);
+            ops += 1;
+        }
+    }
+    assert_eq!(ops, writes * (1 + common::reps()), "one op event per write");
+    println!("  trace: {ops} op events validated against the TraceEvent schema");
+    let _ = std::fs::remove_file(format!("{trace}.0"));
+    common::cleanup(&path);
+}
+
 fn main() {
     println!("jpio ablation suite");
     per_item_vs_bulk();
@@ -571,6 +660,7 @@ fn main() {
     striped_redundancy_modes();
     nonblocking_collective_overlap();
     plan_pipeline_parity();
+    stats_instrumentation();
     pjrt_pack_vs_rust();
     let _ = FigureReport::new("ablations", "case"); // keep the type exercised
     println!("\nablations done");

@@ -157,10 +157,13 @@ impl ProgressEngine {
         sent
     }
 
-    /// `(submitted, completed)` job counters — `submitted > completed`
-    /// means work is in flight on the progress thread.
-    pub fn stats(&self) -> (usize, usize) {
-        (self.queued.load(Ordering::Acquire), self.completed.load(Ordering::Acquire))
+    /// Job counters — `queued > completed` means work is in flight on
+    /// the progress thread.
+    pub fn stats(&self) -> crate::io::stats::ProgressStats {
+        crate::io::stats::ProgressStats {
+            queued: self.queued.load(Ordering::Acquire),
+            completed: self.completed.load(Ordering::Acquire),
+        }
     }
 }
 
@@ -210,9 +213,9 @@ mod tests {
         }
         let got: Vec<i32> = (0..16).map(|_| rx.recv().unwrap()).collect();
         assert_eq!(got, (0..16).collect::<Vec<_>>(), "jobs must run FIFO");
-        let (q, c) = engine.stats();
-        assert_eq!(q, 16);
-        assert!(c <= 16);
+        let s = engine.stats();
+        assert_eq!(s.queued, 16);
+        assert!(s.completed <= 16);
     }
 
     #[test]

@@ -1,109 +1,5 @@
-//! Metrics registry: counters and timers, reported at the end of every
-//! example/bench run.
+//! Metrics registry, re-exported from its new home in the I/O
+//! instrumentation subsystem ([`crate::io::stats`]). Kept as a shim so
+//! `coordinator::Metrics` consumers (examples, benches) keep compiling.
 
-use std::collections::BTreeMap;
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
-
-/// A thread-safe counters + timers registry.
-#[derive(Default)]
-pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
-    timers: Mutex<BTreeMap<String, (Duration, u64)>>,
-}
-
-impl Metrics {
-    /// New empty registry.
-    pub fn new() -> Metrics {
-        Metrics::default()
-    }
-
-    /// Add `n` to counter `name`.
-    pub fn add(&self, name: &str, n: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
-    }
-
-    /// Read a counter.
-    pub fn get(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
-    }
-
-    /// Time a closure under timer `name`.
-    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
-        let start = Instant::now();
-        let r = f();
-        self.record(name, start.elapsed());
-        r
-    }
-
-    /// Record an externally-measured duration.
-    pub fn record(&self, name: &str, d: Duration) {
-        let mut t = self.timers.lock().unwrap();
-        let e = t.entry(name.to_string()).or_insert((Duration::ZERO, 0));
-        e.0 += d;
-        e.1 += 1;
-    }
-
-    /// Total time of a timer.
-    pub fn total(&self, name: &str) -> Duration {
-        self.timers.lock().unwrap().get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
-    }
-
-    /// Number of samples of a timer.
-    pub fn samples(&self, name: &str) -> u64 {
-        self.timers.lock().unwrap().get(name).map(|e| e.1).unwrap_or(0)
-    }
-
-    /// Render a report table.
-    pub fn report(&self) -> String {
-        let mut out = String::new();
-        let counters = self.counters.lock().unwrap();
-        let timers = self.timers.lock().unwrap();
-        if !counters.is_empty() {
-            out.push_str("counters:\n");
-            for (k, v) in counters.iter() {
-                out.push_str(&format!("  {k:<40} {v}\n"));
-            }
-        }
-        if !timers.is_empty() {
-            out.push_str("timers:\n");
-            for (k, (total, n)) in timers.iter() {
-                let avg = if *n > 0 { *total / *n as u32 } else { Duration::ZERO };
-                out.push_str(&format!(
-                    "  {k:<40} total {:>10.3?}  n {n:>6}  avg {avg:>10.3?}\n",
-                    total
-                ));
-            }
-        }
-        out
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn counters_accumulate() {
-        let m = Metrics::new();
-        m.add("writes", 3);
-        m.add("writes", 4);
-        assert_eq!(m.get("writes"), 7);
-        assert_eq!(m.get("nonexistent"), 0);
-    }
-
-    #[test]
-    fn timers_accumulate_and_count() {
-        let m = Metrics::new();
-        let out = m.time("op", || {
-            std::thread::sleep(Duration::from_millis(2));
-            42
-        });
-        assert_eq!(out, 42);
-        m.record("op", Duration::from_millis(5));
-        assert_eq!(m.samples("op"), 2);
-        assert!(m.total("op") >= Duration::from_millis(7));
-        let rep = m.report();
-        assert!(rep.contains("op"));
-    }
-}
+pub use crate::io::stats::Metrics;

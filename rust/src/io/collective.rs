@@ -70,6 +70,7 @@ use crate::io::hints::keys;
 use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism, TransferCtx};
 use crate::io::plan::IoPlan;
 use crate::io::schedule::IoScheduler;
+use crate::io::stats::Phase;
 use crate::storage::layout::{Redundancy, StripeMap};
 
 /// Serialize pieces + payload bytes into one exchange message.
@@ -359,7 +360,9 @@ pub(crate) fn exchange_write(
     };
     let msgs: Vec<Vec<u8>> =
         per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
+    let t0 = ctx.stats.start();
     let inbound = comm.alltoall(&msgs);
+    ctx.stats.record(Phase::Exchange, t0);
     Ok((WriteIoWork { inbound, cb_buffer: cb.staging_bytes() }, payload.len()))
 }
 
@@ -397,7 +400,9 @@ pub(crate) fn collective_read(
         }
         reqs.push(msg);
     }
+    let t0 = ctx.stats.start();
     let inbound = comm.alltoall(&reqs);
+    ctx.stats.record(Phase::Exchange, t0);
 
     // Aggregator I/O phase: merge all requested intervals, then read
     // them through the pipelined scheduler.
@@ -462,7 +467,9 @@ pub(crate) fn collective_read(
         },
     )?;
     debug_assert_eq!(si, scatter.len(), "every requested run must be sliced into a reply");
+    let t0 = ctx.stats.start();
     let mut answers = comm.alltoall(&replies);
+    ctx.stats.record(Phase::Exchange, t0);
 
     // Reassemble my payload from the per-aggregator answers; compute
     // the EOF-clamped byte count.

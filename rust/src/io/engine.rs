@@ -27,6 +27,7 @@ use once_cell::sync::Lazy;
 
 use crate::comm::Status;
 use crate::io::errors::{err_request, IoError, Result};
+use crate::io::stats::{FileStats, Phase};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -165,12 +166,12 @@ where
             let _ = tx.send(out); // receiver may have been dropped (cancelled)
         });
         sender.send(job).expect("io pool alive");
-        return Request { rx: Some(rx), done: None, failed: None };
+        return Request { rx: Some(rx), done: None, failed: None, stats: None };
     }
     // Forked child without worker threads (or a pool mutex orphaned by
     // fork): complete synchronously.
     let done = f();
-    Request { rx: None, done: Some(done), failed: None }
+    Request { rx: None, done: Some(done), failed: None, stats: None }
 }
 
 /// A nonblocking operation handle (`mpj.Request`).
@@ -185,6 +186,10 @@ pub struct Request<T> {
     /// when set; [`Request::test`] reports it and [`Request::wait`]
     /// returns it (the buffer is lost with the thread).
     failed: Option<Result<Status>>,
+    /// Instrumentation record of the issuing file handle, when attached
+    /// ([`Request::instrument`]): [`Request::wait`] records its blocking
+    /// span as the `wait` phase.
+    stats: Option<std::sync::Arc<FileStats>>,
 }
 
 fn completer_died() -> IoError {
@@ -197,7 +202,7 @@ fn completer_died() -> IoError {
 impl<T> Request<T> {
     /// An already-completed request (used for zero-byte operations).
     pub fn ready(status: Status, value: T) -> Request<T> {
-        Request { rx: None, done: Some((Ok(status), value)), failed: None }
+        Request { rx: None, done: Some((Ok(status), value)), failed: None, stats: None }
     }
 
     /// A request completed externally: whoever holds the paired sender —
@@ -207,13 +212,26 @@ impl<T> Request<T> {
     /// request error at `test`/`wait` (the completing thread died).
     pub(crate) fn pending() -> (Request<T>, mpsc::Sender<(Result<Status>, T)>) {
         let (tx, rx) = mpsc::channel();
-        (Request { rx: Some(rx), done: None, failed: None }, tx)
+        (Request { rx: Some(rx), done: None, failed: None, stats: None }, tx)
+    }
+
+    /// Attach the issuing handle's instrumentation record so
+    /// [`Request::wait`] reports how long the caller blocked (Darshan's
+    /// request wait-time). Recording is gated inside [`FileStats`], so
+    /// this is free when the `jpio_stats` hint is off.
+    pub(crate) fn instrument(mut self, stats: &std::sync::Arc<FileStats>) -> Request<T> {
+        self.stats = Some(stats.clone());
+        self
     }
 
     /// Block until completion (`MPI_Wait`); returns the status and the
     /// buffer.
     pub fn wait(mut self) -> Result<(Status, T)> {
+        let t0 = self.stats.as_ref().and_then(|s| s.start());
         let (status, value) = self.take_result()?;
+        if let Some(stats) = &self.stats {
+            stats.record(Phase::Wait, t0);
+        }
         Ok((status?, value))
     }
 

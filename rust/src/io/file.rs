@@ -18,6 +18,7 @@ use crate::io::errors::{
 };
 use crate::io::hints::{keys, Info};
 use crate::io::schedule::PlanCache;
+use crate::io::stats::{Counter, FileStats, PlanCacheStats, StatsReport};
 use crate::io::view::FileView;
 use crate::storage::layout::Redundancy;
 use crate::storage::local::LocalBackend;
@@ -92,6 +93,13 @@ pub struct File<'c> {
     /// [`crate::io::schedule`]): repeated same-shape accesses reuse the
     /// compiled `IoPlan` instead of re-flattening the view.
     pub(crate) plan_cache: PlanCache,
+    /// Darshan-style per-rank instrumentation record
+    /// ([`crate::io::stats`]); counters always on, timers/tracing gated
+    /// on the `jpio_stats` hint.
+    pub(crate) stats: Arc<FileStats>,
+    /// The collectively reduced stats report, filled at close when
+    /// `jpio_stats` is set; [`File::stats`] serves it afterwards.
+    pub(crate) reduced_stats: Mutex<Option<StatsReport>>,
     pub(crate) closed: AtomicBool,
 }
 
@@ -232,6 +240,7 @@ impl<'c> File<'c> {
         // `AccessOp::validate`).
         let indiv_init =
             if mode & amode::APPEND != 0 { storage.size().unwrap_or(0) as i64 } else { 0 };
+        let stats = FileStats::from_info(&info, comm.rank());
         Ok(File {
             comm,
             storage,
@@ -246,6 +255,8 @@ impl<'c> File<'c> {
             sfp_path,
             split: Mutex::new(None),
             plan_cache: PlanCache::new(),
+            stats,
+            reduced_stats: Mutex::new(None),
             closed: AtomicBool::new(false),
         })
     }
@@ -266,6 +277,12 @@ impl<'c> File<'c> {
                     let _ = req.wait();
                 }
             }
+        }
+        // Darshan-style shared-file record: reduce the per-rank stats
+        // collectively while the handle is still open. `jpio_stats` is a
+        // collective hint, so every rank reaches this allgather alike.
+        if self.stats.enabled() {
+            self.reduce_stats()?;
         }
         self.closed.store(true, Ordering::SeqCst);
         self.comm.barrier();
@@ -418,16 +435,21 @@ impl<'c> File<'c> {
     /// replica/parity stripes). Empty on healthy files and on backends
     /// without redundancy. Local to this rank's handle — on collective
     /// operations the rank that performed the degraded storage access
-    /// (the aggregator) observes the advisory.
+    /// (the aggregator) observes the advisory. Drained advisories are
+    /// tallied into the `degraded_advisories` stats counter — the
+    /// backend's `degraded_reconstructed_reads` / `parity_rmw_cycles`
+    /// counters in [`File::stats`] persist even after the drain.
     pub fn take_advisories(&self) -> Vec<crate::io::errors::IoError> {
-        self.storage.take_advisories()
+        let advisories = self.storage.take_advisories();
+        self.stats.add(Counter::DegradedAdvisories, advisories.len() as u64);
+        advisories
     }
 
-    /// Plan-cache counters `(hits, misses)` (jpio extension): a hit means
-    /// a repeated same-shape access reused its compiled
+    /// Plan-cache counters (jpio extension): a hit means a repeated
+    /// same-shape access reused its compiled
     /// [`IoPlan`](crate::io::plan::IoPlan) at the scheduler instead of
     /// re-flattening the view.
-    pub fn plan_cache_stats(&self) -> (u64, u64) {
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
         self.plan_cache.stats()
     }
 

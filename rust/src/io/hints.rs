@@ -75,6 +75,20 @@ pub mod keys {
     /// round overlaps storage I/O of the previous round in the two-phase
     /// I/O phases. Defaults to `cb_buffer_size`.
     pub const STAGING_BUFFER_SIZE: &str = "jpio_staging_buffer_size";
+    /// Darshan-style instrumentation (`crate::io::stats`): `false`
+    /// (default; always-on atomic counters only) | `true` (additionally
+    /// record the per-phase wall-clock timers and reduce the per-rank
+    /// records collectively at close). Collective: every rank of a file
+    /// must agree, like all collective-buffering hints — the close-time
+    /// reduction is a collective operation.
+    pub const STATS: &str = "jpio_stats";
+    /// JSONL trace-event stream path (requires `jpio_stats = true`):
+    /// every op and phase span of rank `r` appends one event to
+    /// `<path>.<r>` (one file per rank, so ranks never interleave
+    /// writes). Schema: [`crate::io::stats::TraceEvent`]. An unopenable
+    /// path disables tracing rather than failing the open (MPI hint
+    /// semantics).
+    pub const STATS_TRACE: &str = "jpio_stats_trace";
 }
 
 impl Info {

@@ -20,6 +20,7 @@
 //! | unified access-plan compiler | [`plan`] |
 //! | plan execution (sync / engine / two-phase) + plan cache | [`schedule`] |
 //! | nonblocking request engine | [`engine`] |
+//! | Darshan-style instrumentation (counters, phase timers, traces) | [`stats`] |
 //!
 //! Every data-access routine — explicit-offset, individual-pointer,
 //! shared-pointer, collective, ordered, and split/nonblocking — is a thin
@@ -48,6 +49,7 @@ pub mod plan;
 pub mod schedule;
 pub mod shared;
 pub mod split;
+pub mod stats;
 pub mod view;
 
 pub use datarep::{register_datarep, DataRep};
@@ -60,6 +62,7 @@ pub use op::{
     SplitPhase, Submission, Synchronism,
 };
 pub use plan::IoPlan;
+pub use stats::{PhaseStat, PlanCacheStats, ProgressStats, Reduced, StatsReport, TraceEvent};
 pub use view::FileView;
 
 use crate::comm::datatype::Datatype;

@@ -52,6 +52,7 @@ use crate::io::file::{amode, File, SplitPending};
 use crate::io::hints::keys;
 use crate::io::plan::IoPlan;
 use crate::io::schedule::IoScheduler;
+use crate::io::stats::{FileStats, Phase};
 use crate::io::view::FileView;
 use crate::storage::StorageFile;
 use crate::strategy::AccessStrategy;
@@ -222,6 +223,17 @@ impl AccessOp {
         self.count * self.datatype.size()
     }
 
+    /// The matrix cell this op describes (positioning stripped of its
+    /// offset) — the classification key the instrumentation records.
+    pub fn cell(&self) -> AccessCell {
+        AccessCell {
+            direction: self.direction,
+            positioning: self.positioning.kind(),
+            coordination: self.coordination,
+            synchronism: self.synchronism,
+        }
+    }
+
     /// Validate the op against the file's access mode: the cell must be a
     /// legal point of the matrix, `MODE_APPEND` rejects explicit-offset
     /// access, and `MODE_SEQUENTIAL` rejects explicit-offset and
@@ -310,8 +322,9 @@ pub struct AccessCell {
 }
 
 impl AccessCell {
-    /// The routine's method stem, e.g. `read_at_all_begin`.
-    fn stem(&self) -> String {
+    /// The routine's method stem, e.g. `read_at_all_begin` — also the
+    /// op-cell label in `jpio_stats_trace` events.
+    pub fn stem(&self) -> String {
         let mut s = String::new();
         if matches!(self.synchronism, Synchronism::Nonblocking) {
             s.push('i');
@@ -437,6 +450,10 @@ pub(crate) struct TransferCtx {
     pub strategy: Arc<dyn AccessStrategy>,
     pub view: Arc<FileView>,
     pub atomic: bool,
+    /// The handle's instrumentation record: travels with the snapshot so
+    /// the scheduler, phase drivers, and progress-lane jobs record into
+    /// it without borrowing the `File`.
+    pub stats: Arc<FileStats>,
 }
 
 /// Validate the memory-side arguments of `(buf, buf_offset, count,
@@ -541,11 +558,15 @@ impl File<'_> {
             strategy: self.strategy_snapshot(),
             view: self.view_snapshot(),
             atomic: self.get_atomicity(),
+            stats: self.stats.clone(),
         }
     }
 
     /// Compile (or reuse from the scheduler's plan cache) the plan of an
-    /// access of `len` payload bytes at etype offset `off`.
+    /// access of `len` payload bytes at etype offset `off`. Every
+    /// plan-compiling path funnels through here, so this is also the
+    /// single point recording the run-shape counters (contiguous vs
+    /// strided, run count, bytes moved).
     fn plan_for(
         &self,
         ctx: &TransferCtx,
@@ -553,12 +574,16 @@ impl File<'_> {
         off: Offset,
         len: usize,
     ) -> Result<Arc<IoPlan>> {
-        self.plan_cache.lookup(&ctx.view, direction, ctx.atomic, off, len)
+        let plan = self.plan_cache.lookup(&ctx.view, direction, ctx.atomic, off, len)?;
+        ctx.stats.note_plan(&plan);
+        Ok(plan)
     }
 
     /// The validation prologue every submission runs: handle state,
     /// direction permissions, amode×op legality, split-pending exclusion.
+    /// Timed as the `validate` phase.
     fn prologue(&self, op: &AccessOp) -> Result<TransferCtx> {
+        let t0 = self.stats.start();
         self.check_open()?;
         match op.direction {
             Direction::Read => self.check_readable()?,
@@ -572,7 +597,9 @@ impl File<'_> {
                 "a split collective is already active on this file handle",
             ));
         }
-        Ok(self.transfer_ctx())
+        let ctx = self.transfer_ctx();
+        self.stats.record(Phase::Validate, t0);
+        Ok(ctx)
     }
 
     /// Resolve the op's starting etype offset and update the pointer it
@@ -582,8 +609,20 @@ impl File<'_> {
     /// BEGIN ops advance immediately by the full request (MPI semantics —
     /// the pointer update is not deferred to completion). The shared
     /// pointer is reserved here by sidecar fetch-and-add (independent) or
-    /// the ordered prefix-sum pass (ordered).
+    /// the ordered prefix-sum pass (ordered). Timed as the `resolve`
+    /// phase (the shared-pointer sidecar and ordered prefix-sum variants
+    /// are where the time goes).
     fn resolve_offset(&self, op: &AccessOp, view: &FileView) -> Result<(Offset, bool)> {
+        let t0 = self.stats.start();
+        let resolved = self.resolve_offset_inner(op, view);
+        self.stats.record(Phase::Resolve, t0);
+        if let Ok((off, _)) = resolved {
+            self.stats.note_op(op, off, !view.datarep.is_identity());
+        }
+        resolved
+    }
+
+    fn resolve_offset_inner(&self, op: &AccessOp, view: &FileView) -> Result<(Offset, bool)> {
         let req_etypes = view.bytes_to_etypes(op.payload_len());
         match (op.positioning, op.coordination) {
             (Positioning::Explicit(off), _) => Ok((off, false)),
@@ -671,13 +710,17 @@ impl File<'_> {
             }
             (Coordination::Independent, Synchronism::Nonblocking) => {
                 let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
-                Ok(Submission::Queued(IoScheduler::write_async(ctx, plan, payload.into_owned())))
+                Ok(Submission::Queued(
+                    IoScheduler::write_async(ctx, plan, payload.into_owned())
+                        .instrument(&self.stats),
+                ))
             }
             (Coordination::Ordered, Synchronism::Split(SplitPhase::Begin)) => {
                 // Ordered BEGIN: offset already reserved in rank order;
                 // the independent transfer overlaps on the engine.
                 let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
-                let req = IoScheduler::write_async(ctx, plan, payload.into_owned());
+                let req = IoScheduler::write_async(ctx, plan, payload.into_owned())
+                    .instrument(&self.stats);
                 self.stash(SplitPending::Write { kind: op.end_kind(), req });
                 Ok(Submission::Begun)
             }
@@ -695,11 +738,10 @@ impl File<'_> {
                     // No aggregation: the whole operation runs on the
                     // engine, like an independent nonblocking write.
                     let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
-                    return Ok(Submission::Queued(IoScheduler::write_async(
-                        ctx,
-                        plan,
-                        payload.into_owned(),
-                    )));
+                    return Ok(Submission::Queued(
+                        IoScheduler::write_async(ctx, plan, payload.into_owned())
+                            .instrument(&self.stats),
+                    ));
                 }
                 if let Some(ProgressLane { engine, comm }) = self.progress_lane() {
                     // Truly asynchronous: exchange *and* I/O phases run
@@ -708,9 +750,13 @@ impl File<'_> {
                     let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
                     let payload = payload.into_owned();
                     let (req, tx) = Request::pending();
+                    let req = req.instrument(&self.stats);
+                    let q0 = self.stats.start();
                     // A failed submit (fork race) drops `tx`, surfacing
                     // a request error at wait instead of hanging.
                     engine.submit(move || {
+                        // Queue latency: submit → job start on the lane.
+                        ctx.stats.record(Phase::Queue, q0);
                         let res =
                             collective::exchange_write(comm.as_ref(), &ctx, &cb, &plan, &payload)
                                 .and_then(|(work, bytes)| {
@@ -725,12 +771,15 @@ impl File<'_> {
                 // exchange phase on the caller, I/O phase overlaps on
                 // the engine — the split collectives' contract.
                 let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
-                Ok(Submission::Queued(IoScheduler::write_phase_async(ctx, work, bytes)))
+                Ok(Submission::Queued(
+                    IoScheduler::write_phase_async(ctx, work, bytes).instrument(&self.stats),
+                ))
             }
             (Coordination::Collective, Synchronism::Split(SplitPhase::Begin)) => {
                 let cb = self.cb_params();
                 let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
-                let req = IoScheduler::write_phase_async(ctx, work, bytes);
+                let req =
+                    IoScheduler::write_phase_async(ctx, work, bytes).instrument(&self.stats);
                 self.stash(SplitPending::Write { kind: op.end_kind(), req });
                 Ok(Submission::Begun)
             }
@@ -847,7 +896,11 @@ impl File<'_> {
                     // call returns before any byte moves.
                     let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
                     let (req, tx) = Request::pending();
+                    let req = req.instrument(&self.stats);
+                    let q0 = self.stats.start();
                     engine.submit(move || {
+                        // Queue latency: submit → job start on the lane.
+                        ctx.stats.record(Phase::Queue, q0);
                         let mut buf = buf;
                         let mut payload = vec![0u8; payload_len];
                         let res = collective::collective_read(
@@ -884,7 +937,8 @@ impl File<'_> {
                         unpack_payload(buf.as_mut_slice(), buf_offset, count, &dt, &payload, got)
                             .map(|()| Status::of_bytes(got));
                     (res, buf)
-                }));
+                })
+                .instrument(&self.stats));
             }
             // Degenerate collective: fall through to the engine path.
         }
@@ -900,7 +954,8 @@ impl File<'_> {
                 Ok(Status::of_bytes(got))
             });
             (res, buf)
-        }))
+        })
+        .instrument(&self.stats))
     }
 
     /// Start a split read: collective reads finish their aggregation here
@@ -922,7 +977,7 @@ impl File<'_> {
             }
             Coordination::Ordered => {
                 let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
-                IoScheduler::read_async(ctx, plan, payload_len)
+                IoScheduler::read_async(ctx, plan, payload_len).instrument(&self.stats)
             }
             Coordination::Independent => {
                 return Err(err_arg("independent access has no split form"))
@@ -960,7 +1015,7 @@ impl File<'_> {
     /// unusable (a forked child that inherited the world — a
     /// whole-world condition, so every rank answers alike and the
     /// fallback stays collectively consistent).
-    fn progress_lane(&self) -> Option<ProgressLane> {
+    pub(crate) fn progress_lane(&self) -> Option<ProgressLane> {
         let disabled =
             self.info.lock().unwrap().get_usize(keys::PROGRESS_THREADS) == Some(0);
         if disabled {

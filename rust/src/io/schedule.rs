@@ -46,6 +46,7 @@ use crate::io::engine::{self, Request};
 use crate::io::errors::Result;
 use crate::io::op::{Direction, TransferCtx};
 use crate::io::plan::IoPlan;
+use crate::io::stats::{Phase, PlanCacheStats};
 use crate::io::view::FileView;
 use crate::strategy::{AccessStrategy, ViewBufStrategy};
 
@@ -153,9 +154,12 @@ impl PlanCache {
         Ok(plan)
     }
 
-    /// `(hits, misses)` counters.
-    pub(crate) fn stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    /// Hit/miss counters.
+    pub(crate) fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -164,19 +168,23 @@ pub(crate) struct IoScheduler;
 
 impl IoScheduler {
     /// Synchronous write of a packed (already datarep-encoded) payload.
+    /// Timed as the `storage` phase.
     pub(crate) fn write(ctx: &TransferCtx, plan: &IoPlan, payload: &[u8]) -> Result<Status> {
+        let t0 = ctx.stats.start();
         let _guard = if plan.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
         let n = if ctx.storage.prefers_plan_execution() && plan.runs.len() > 1 {
             ctx.storage.write_plan(&plan.runs, payload)?
         } else {
             ctx.strategy.write_plan(ctx.storage.as_ref(), plan, payload)?
         };
+        ctx.stats.record(Phase::Storage, t0);
         Ok(Status::of_bytes(n))
     }
 
     /// Synchronous read into a packed payload buffer; returns bytes read
-    /// (short at EOF) after datarep decode.
+    /// (short at EOF) after datarep decode. Timed as the `storage` phase.
     pub(crate) fn read(ctx: &TransferCtx, plan: &IoPlan, payload: &mut [u8]) -> Result<usize> {
+        let t0 = ctx.stats.start();
         let got = {
             let _guard = if plan.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
             if ctx.storage.prefers_plan_execution() && plan.runs.len() > 1 {
@@ -188,6 +196,7 @@ impl IoScheduler {
         if plan.needs_convert() {
             plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
         }
+        ctx.stats.record(Phase::Storage, t0);
         Ok(got)
     }
 
@@ -224,8 +233,16 @@ impl IoScheduler {
     /// the raw exchange messages) of round *n+1* overlaps the storage
     /// write of round *n* — the aggregator double buffer; spent staging
     /// buffers ping-pong back for reuse. Touches no communicator state,
-    /// so it is safe on the engine and on progress threads.
+    /// so it is safe on the engine and on progress threads. Timed as the
+    /// `storage` phase.
     pub(crate) fn write_phase(ctx: &TransferCtx, work: WriteIoWork) -> Result<()> {
+        let t0 = ctx.stats.start();
+        Self::write_phase_inner(ctx, work)?;
+        ctx.stats.record(Phase::Storage, t0);
+        Ok(())
+    }
+
+    fn write_phase_inner(ctx: &TransferCtx, work: WriteIoWork) -> Result<()> {
         // Header pass: run lists only; payload bytes stay in the raw
         // messages until their round is staged. Message order is rank
         // order, and the stable sort keeps it on equal offsets — the
@@ -352,6 +369,22 @@ impl IoScheduler {
         runs: &[(u64, usize)],
         stage: usize,
         buf: &mut [u8],
+        consume: F,
+    ) -> Result<usize>
+    where
+        F: FnMut(usize, &[u8]),
+    {
+        let t0 = ctx.stats.start();
+        let got = Self::read_phase_pipelined_inner(ctx, runs, stage, buf, consume)?;
+        ctx.stats.record(Phase::Storage, t0);
+        Ok(got)
+    }
+
+    fn read_phase_pipelined_inner<F>(
+        ctx: &TransferCtx,
+        runs: &[(u64, usize)],
+        stage: usize,
+        buf: &mut [u8],
         mut consume: F,
     ) -> Result<usize>
     where
@@ -437,6 +470,7 @@ mod tests {
             strategy: Arc::from(strategy::by_name("view_buffer").unwrap()),
             view: Arc::new(FileView::default()),
             atomic: false,
+            stats: crate::io::stats::FileStats::disabled(),
         }
     }
 
@@ -481,20 +515,20 @@ mod tests {
         let cache = PlanCache::new();
         let v1 = strided_view();
         let p1 = cache.lookup(&v1, Direction::Read, false, 0, 64).unwrap();
-        assert_eq!(cache.stats(), (0, 1));
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 0, misses: 1 });
         let p2 = cache.lookup(&v1, Direction::Read, false, 0, 64).unwrap();
         assert!(Arc::ptr_eq(&p1, &p2), "same key must reuse the compiled plan");
-        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 1, misses: 1 });
         // Different direction, offset, len, atomicity: distinct keys.
         cache.lookup(&v1, Direction::Write, false, 0, 64).unwrap();
         cache.lookup(&v1, Direction::Read, false, 8, 64).unwrap();
         cache.lookup(&v1, Direction::Read, false, 0, 32).unwrap();
         cache.lookup(&v1, Direction::Read, true, 0, 64).unwrap();
-        assert_eq!(cache.stats(), (1, 5));
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 1, misses: 5 });
         // A new view Arc (set_view) never matches the old identity.
         let v2 = strided_view();
         cache.lookup(&v2, Direction::Read, false, 0, 64).unwrap();
-        assert_eq!(cache.stats(), (1, 6));
+        assert_eq!(cache.stats(), PlanCacheStats { hits: 1, misses: 6 });
     }
 
     #[test]
@@ -506,7 +540,8 @@ mod tests {
         let p = cache.lookup(&flat, Direction::Read, false, 3, 64).unwrap();
         assert_eq!(p.runs, vec![(3, 64)]);
         cache.lookup(&flat, Direction::Read, false, 3, 64).unwrap();
-        assert_eq!(cache.stats(), (0, 0), "contiguous plans must bypass the cache");
+        let s = cache.stats();
+        assert_eq!(s, PlanCacheStats::default(), "contiguous plans must bypass the cache");
     }
 
     #[test]
@@ -517,14 +552,13 @@ mod tests {
             cache.lookup(&v, Direction::Read, false, i as i64, 8).unwrap();
         }
         // The oldest keys were evicted: looking one up again is a miss.
-        let (_, misses_before) = cache.stats();
+        let misses_before = cache.stats().misses;
         cache.lookup(&v, Direction::Read, false, 0, 8).unwrap();
-        let (_, misses_after) = cache.stats();
-        assert_eq!(misses_after, misses_before + 1);
+        assert_eq!(cache.stats().misses, misses_before + 1);
         // The most recent key is still cached.
-        let (hits_before, _) = cache.stats();
+        let hits_before = cache.stats().hits;
         cache.lookup(&v, Direction::Read, false, (PLAN_CACHE_CAP + 3) as i64, 8).unwrap();
-        assert_eq!(cache.stats().0, hits_before + 1);
+        assert_eq!(cache.stats().hits, hits_before + 1);
     }
 
     #[test]
@@ -555,6 +589,7 @@ mod tests {
             strategy: Arc::from(strategy::by_name("view_buffer").unwrap()),
             view: Arc::new(FileView::default()),
             atomic: false,
+            stats: crate::io::stats::FileStats::disabled(),
         };
         let plan = IoPlan::from_runs(vec![(3, 20), (40, 9), (70, 12)], false);
         let payload: Vec<u8> = (0..41u8).collect();

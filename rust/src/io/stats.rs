@@ -1,0 +1,903 @@
+//! Darshan-style per-file I/O instrumentation.
+//!
+//! Darshan characterizes an HPC application's I/O with per-file counters
+//! recorded at every rank and *shared-file records* reduced across ranks
+//! when the file closes. jpio mirrors that design at the [`AccessOp`]
+//! choke point: every data-access routine of the 56-routine matrix
+//! funnels through `File::submit_read`/`submit_write`, so one
+//! [`FileStats`] per handle can classify every operation — its cell
+//! (positioning × coordination × synchronism), run shape, datarep, and
+//! byte counts — without touching any access family's code.
+//!
+//! Three layers, by cost:
+//!
+//! * **Counters** — always on: relaxed atomic adds (a handful of
+//!   uncontended `fetch_add`s per op), like Darshan's always-on counter
+//!   mode. Queried per-rank at any time via `File::stats`.
+//! * **Phase timers** — gated on the `jpio_stats` hint: wall-clock spans
+//!   for the *validate*, pointer-*resolve*, collective *exchange*,
+//!   *storage* I/O, request-*wait*, and progress-lane *queue* phases.
+//!   When the hint is off, [`FileStats::start`] returns `None` and no
+//!   clock is ever read — the timers are compiled in but fully skipped.
+//! * **Trace events** — gated on `jpio_stats_trace = <path>`: one JSONL
+//!   line per op and per phase span (world rank, op cell, offset, bytes,
+//!   microseconds), written to `<path>.<rank>` for offline timeline
+//!   analysis. The schema is [`TraceEvent`]; `TraceEvent::parse` is the
+//!   reference decoder the CI smoke validates emitted logs against.
+//!
+//! At `File::close` the per-rank records are reduced collectively
+//! (min/max/sum over the world, like Darshan's shared-file records) into
+//! a [`StatsReport`], which `File::stats` serves after close; the
+//! `jpio stats` CLI command renders one. The report also folds in the
+//! plan-cache counters ([`PlanCacheStats`]), the progress-lane job
+//! counters ([`ProgressStats`]), and the striped backend's degraded-mode
+//! counters ([`BackendCounters`](crate::storage::BackendCounters)).
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::Comm as _;
+use crate::io::errors::Result;
+use crate::io::file::File;
+use crate::io::hints::{keys, Info};
+use crate::io::op::{AccessOp, Coordination, Direction, Positioning, Synchronism};
+use crate::io::plan::IoPlan;
+
+// ----------------------------------------------------------------------
+// Counter and phase vocabularies
+// ----------------------------------------------------------------------
+
+/// The always-on per-op counters (the Darshan `*_COUNT` analogues).
+/// Indexes into the [`FileStats`] counter array; the wire/report name of
+/// each is [`Counter::name`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Counter {
+    /// Read data-access submissions.
+    ReadOps,
+    /// Write data-access submissions.
+    WriteOps,
+    /// Independent-coordination ops.
+    IndependentOps,
+    /// Collective-coordination ops.
+    CollectiveOps,
+    /// Ordered (shared-pointer collective) ops.
+    OrderedOps,
+    /// Blocking-synchronism ops.
+    BlockingOps,
+    /// Nonblocking ops (`i*` routines).
+    NonblockingOps,
+    /// Split-collective ops (counted at `*_begin`).
+    SplitOps,
+    /// Explicit-offset (`*_at*`) positioning.
+    ExplicitOffsetOps,
+    /// Individual-pointer positioning.
+    IndividualPtrOps,
+    /// Shared-pointer positioning.
+    SharedPtrOps,
+    /// Compiled plans with a single file run (contiguous access shape).
+    ContiguousPlans,
+    /// Compiled plans with multiple file runs (strided access shape).
+    StridedPlans,
+    /// Total file runs across all compiled plans.
+    PlanRuns,
+    /// Payload bytes requested by the application.
+    BytesRequested,
+    /// File bytes the compiled plans move (after view mapping).
+    BytesMoved,
+    /// Ops whose data representation required conversion (non-`native`).
+    DatarepConvertedOps,
+    /// Degraded-mode advisories drained through `File::take_advisories`.
+    DegradedAdvisories,
+}
+
+impl Counter {
+    /// Every counter, in wire order (the close-time reduction serializes
+    /// values in this order, so it must be identical on all ranks).
+    pub(crate) const ALL: [Counter; 18] = [
+        Counter::ReadOps,
+        Counter::WriteOps,
+        Counter::IndependentOps,
+        Counter::CollectiveOps,
+        Counter::OrderedOps,
+        Counter::BlockingOps,
+        Counter::NonblockingOps,
+        Counter::SplitOps,
+        Counter::ExplicitOffsetOps,
+        Counter::IndividualPtrOps,
+        Counter::SharedPtrOps,
+        Counter::ContiguousPlans,
+        Counter::StridedPlans,
+        Counter::PlanRuns,
+        Counter::BytesRequested,
+        Counter::BytesMoved,
+        Counter::DatarepConvertedOps,
+        Counter::DegradedAdvisories,
+    ];
+
+    /// The report/trace name of the counter.
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Counter::ReadOps => "read_ops",
+            Counter::WriteOps => "write_ops",
+            Counter::IndependentOps => "independent_ops",
+            Counter::CollectiveOps => "collective_ops",
+            Counter::OrderedOps => "ordered_ops",
+            Counter::BlockingOps => "blocking_ops",
+            Counter::NonblockingOps => "nonblocking_ops",
+            Counter::SplitOps => "split_ops",
+            Counter::ExplicitOffsetOps => "explicit_offset_ops",
+            Counter::IndividualPtrOps => "individual_ptr_ops",
+            Counter::SharedPtrOps => "shared_ptr_ops",
+            Counter::ContiguousPlans => "contiguous_plans",
+            Counter::StridedPlans => "strided_plans",
+            Counter::PlanRuns => "plan_runs",
+            Counter::BytesRequested => "bytes_requested",
+            Counter::BytesMoved => "bytes_moved",
+            Counter::DatarepConvertedOps => "datarep_converted_ops",
+            Counter::DegradedAdvisories => "degraded_advisories",
+        }
+    }
+}
+
+/// The pipeline phases the hint-gated timers span. Recorded in `op.rs`
+/// (validate, resolve, wait, queue), `schedule.rs` (storage), and
+/// `collective.rs` (exchange) — see DESIGN.md "Instrumentation points".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// The validation prologue (handle state, amode×op legality).
+    Validate,
+    /// File-pointer resolution (individual/shared/ordered offset).
+    Resolve,
+    /// Collective exchange rounds (the two-phase alltoalls).
+    Exchange,
+    /// Storage I/O (plan execution on the scheduler).
+    Storage,
+    /// Request wait-time (`MPI_Wait` / split `*_end` blocking).
+    Wait,
+    /// Progress-lane queue latency (submit → job start).
+    Queue,
+}
+
+impl Phase {
+    /// Every phase, in wire order (must match on all ranks, like
+    /// [`Counter::ALL`]).
+    pub(crate) const ALL: [Phase; 6] = [
+        Phase::Validate,
+        Phase::Resolve,
+        Phase::Exchange,
+        Phase::Storage,
+        Phase::Wait,
+        Phase::Queue,
+    ];
+
+    /// The report/trace name of the phase.
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Phase::Validate => "validate",
+            Phase::Resolve => "resolve",
+            Phase::Exchange => "exchange",
+            Phase::Storage => "storage",
+            Phase::Wait => "wait",
+            Phase::Queue => "queue",
+        }
+    }
+}
+
+const N_COUNTERS: usize = Counter::ALL.len();
+const N_PHASES: usize = Phase::ALL.len();
+
+// ----------------------------------------------------------------------
+// Named counter pairs (satellite structs)
+// ----------------------------------------------------------------------
+
+/// Plan-cache counters of one file handle (`File::plan_cache_stats`): a
+/// hit means a repeated same-shape access reused its compiled
+/// [`IoPlan`] at the scheduler instead of re-flattening the view.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that compiled a fresh plan.
+    pub misses: u64,
+}
+
+/// Progress-lane job counters of one rank's engine
+/// ([`ProgressEngine::stats`](crate::comm::progress::ProgressEngine::stats)):
+/// `queued > completed` means work is in flight on the progress thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProgressStats {
+    /// Jobs submitted to the progress thread.
+    pub queued: usize,
+    /// Jobs the progress thread has finished.
+    pub completed: usize,
+}
+
+// ----------------------------------------------------------------------
+// FileStats: the per-handle, per-rank record
+// ----------------------------------------------------------------------
+
+/// Per-file, per-rank instrumentation record (the Darshan file record
+/// analogue). One lives on every open [`File`] handle; a clone of its
+/// `Arc` travels with each transfer snapshot so the scheduler, the
+/// collective phase drivers, and progress-lane jobs record into it
+/// without borrowing the handle.
+pub struct FileStats {
+    /// Phase timers + tracing on (`jpio_stats` hint). Counters are
+    /// always on regardless.
+    enabled: bool,
+    /// World rank of the owning handle (stamped into trace events).
+    rank: usize,
+    counters: [AtomicU64; N_COUNTERS],
+    phase_nanos: [AtomicU64; N_PHASES],
+    phase_samples: [AtomicU64; N_PHASES],
+    /// JSONL trace sink (`jpio_stats_trace` hint), one file per rank.
+    trace: Option<Mutex<std::io::BufWriter<std::fs::File>>>,
+}
+
+impl FileStats {
+    /// Build a record from the open-time hints: `jpio_stats` turns the
+    /// phase timers on, `jpio_stats_trace = <path>` additionally streams
+    /// trace events to `<path>.<rank>` (per MPI hint semantics an
+    /// unopenable path disables tracing rather than failing the open).
+    pub(crate) fn from_info(info: &Info, rank: usize) -> Arc<FileStats> {
+        let enabled = info.get_flag(keys::STATS).unwrap_or(false);
+        let trace = if enabled {
+            info.get(keys::STATS_TRACE).and_then(|base| {
+                std::fs::File::create(format!("{base}.{rank}"))
+                    .ok()
+                    .map(|f| Mutex::new(std::io::BufWriter::new(f)))
+            })
+        } else {
+            None
+        };
+        Arc::new(FileStats {
+            enabled,
+            rank,
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_nanos: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_samples: std::array::from_fn(|_| AtomicU64::new(0)),
+            trace,
+        })
+    }
+
+    /// A hint-off record (counters only) — the default for contexts
+    /// constructed outside a `File` handle (scheduler unit tests).
+    pub(crate) fn disabled() -> Arc<FileStats> {
+        Self::from_info(&Info::null(), 0)
+    }
+
+    /// Whether the phase timers (and tracing, if hinted) are on.
+    pub(crate) fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Add `n` to a counter. Always on; a single relaxed `fetch_add`.
+    pub(crate) fn add(&self, c: Counter, n: u64) {
+        self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Read a counter.
+    pub(crate) fn value(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    /// Start a phase span: `Some(now)` when timers are on, `None`
+    /// otherwise — the hint-off path never reads the clock.
+    pub(crate) fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a phase span opened by [`FileStats::start`]; a `None` start
+    /// (timers off) records nothing.
+    pub(crate) fn record(&self, p: Phase, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            self.record_span(p, t0.elapsed());
+        }
+    }
+
+    /// Record an externally-measured phase duration.
+    pub(crate) fn record_span(&self, p: Phase, d: Duration) {
+        self.phase_nanos[p as usize].fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.phase_samples[p as usize].fetch_add(1, Ordering::Relaxed);
+        if self.trace.is_none() {
+            return;
+        }
+        self.emit(&TraceEvent {
+            rank: self.rank,
+            kind: "phase".into(),
+            name: p.name().into(),
+            offset: 0,
+            bytes: 0,
+            micros: d.as_micros() as u64,
+        });
+    }
+
+    /// Classify one data-access submission: its op cell along every
+    /// descriptor dimension plus requested bytes and datarep conversion.
+    /// Called once per transfer submission (split collectives count at
+    /// BEGIN), after offset resolution so the trace event carries the
+    /// resolved etype offset.
+    pub(crate) fn note_op(&self, op: &AccessOp, offset: i64, converted: bool) {
+        self.add(
+            match op.direction {
+                Direction::Read => Counter::ReadOps,
+                Direction::Write => Counter::WriteOps,
+            },
+            1,
+        );
+        self.add(
+            match op.coordination {
+                Coordination::Independent => Counter::IndependentOps,
+                Coordination::Collective => Counter::CollectiveOps,
+                Coordination::Ordered => Counter::OrderedOps,
+            },
+            1,
+        );
+        self.add(
+            match op.synchronism {
+                Synchronism::Blocking => Counter::BlockingOps,
+                Synchronism::Nonblocking => Counter::NonblockingOps,
+                Synchronism::Split(_) => Counter::SplitOps,
+            },
+            1,
+        );
+        self.add(
+            match op.positioning {
+                Positioning::Explicit(_) => Counter::ExplicitOffsetOps,
+                Positioning::Individual => Counter::IndividualPtrOps,
+                Positioning::Shared => Counter::SharedPtrOps,
+            },
+            1,
+        );
+        self.add(Counter::BytesRequested, op.payload_len() as u64);
+        if converted {
+            self.add(Counter::DatarepConvertedOps, 1);
+        }
+        if self.trace.is_some() {
+            self.emit(&TraceEvent {
+                rank: self.rank,
+                kind: "op".into(),
+                name: op.cell().stem(),
+                offset,
+                bytes: op.payload_len() as u64,
+                micros: 0,
+            });
+        }
+    }
+
+    /// Classify a compiled plan's run shape: contiguous (single run) vs
+    /// strided, run count, and the file bytes it moves.
+    pub(crate) fn note_plan(&self, plan: &IoPlan) {
+        let moved: u64 = plan.runs.iter().map(|&(_, len)| len as u64).sum();
+        self.add(Counter::BytesMoved, moved);
+        self.add(Counter::PlanRuns, plan.runs.len() as u64);
+        self.add(
+            if plan.runs.len() <= 1 { Counter::ContiguousPlans } else { Counter::StridedPlans },
+            1,
+        );
+    }
+
+    fn emit(&self, ev: &TraceEvent) {
+        if let Some(sink) = &self.trace {
+            if let Ok(mut w) = sink.lock() {
+                let _ = writeln!(w, "{}", ev.to_json());
+            }
+        }
+    }
+
+    /// Flush the trace sink (called at `File::close` so offline tools
+    /// can read the stream immediately).
+    pub(crate) fn flush_trace(&self) {
+        if let Some(sink) = &self.trace {
+            if let Ok(mut w) = sink.lock() {
+                let _ = w.flush();
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Trace events (JSONL schema)
+// ----------------------------------------------------------------------
+
+/// One line of the `jpio_stats_trace` JSONL stream.
+///
+/// Two kinds share the schema: `"op"` events (one per data-access
+/// submission; `name` is the op cell, `offset`/`bytes` the resolved
+/// etype offset and requested payload) and `"phase"` events (one per
+/// timed phase span; `name` is the phase, `micros` the duration).
+/// `TraceEvent::parse` is the reference decoder; the CI smoke parses
+/// every emitted line with it, so schema drift fails the build.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// World rank that recorded the event.
+    pub rank: usize,
+    /// Event kind: `"op"` or `"phase"`.
+    pub kind: String,
+    /// Op cell label (the routine stem, e.g. `"write_at_all"`) or phase
+    /// name (`"storage"`).
+    pub name: String,
+    /// Resolved etype offset (op events; 0 for phase events).
+    pub offset: i64,
+    /// Requested payload bytes (op events; 0 for phase events).
+    pub bytes: u64,
+    /// Span duration in microseconds (phase events; 0 for op events).
+    pub micros: u64,
+}
+
+impl TraceEvent {
+    /// Serialize to one JSON object (no trailing newline). The `kind`
+    /// and `name` vocabularies contain no characters needing escapes,
+    /// so the encoder is a plain format.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"rank\":{},\"kind\":\"{}\",\"name\":\"{}\",\"offset\":{},\"bytes\":{},\"micros\":{}}}",
+            self.rank, self.kind, self.name, self.offset, self.bytes, self.micros
+        )
+    }
+
+    /// Parse one JSONL line; `None` if any schema field is missing or
+    /// malformed. The reference decoder for the trace stream.
+    pub fn parse(line: &str) -> Option<TraceEvent> {
+        fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+            let tag = format!("\"{key}\":");
+            let rest = &line[line.find(&tag)? + tag.len()..];
+            let rest = rest.trim_start();
+            if let Some(stripped) = rest.strip_prefix('"') {
+                stripped.split('"').next()
+            } else {
+                Some(rest.split([',', '}']).next()?.trim())
+            }
+        }
+        Some(TraceEvent {
+            rank: field(line, "rank")?.parse().ok()?,
+            kind: field(line, "kind")?.to_string(),
+            name: field(line, "name")?.to_string(),
+            offset: field(line, "offset")?.parse().ok()?,
+            bytes: field(line, "bytes")?.parse().ok()?,
+            micros: field(line, "micros")?.parse().ok()?,
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reduced reports
+// ----------------------------------------------------------------------
+
+/// One value reduced across the ranks of the world (Darshan shared-file
+/// record semantics): the per-rank minimum, maximum, and sum.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Reduced {
+    /// Smallest per-rank value.
+    pub min: u64,
+    /// Largest per-rank value.
+    pub max: u64,
+    /// Sum over all ranks.
+    pub sum: u64,
+}
+
+impl Reduced {
+    fn of(v: u64) -> Reduced {
+        Reduced { min: v, max: v, sum: v }
+    }
+
+    fn fold(&mut self, v: u64) {
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum = self.sum.wrapping_add(v);
+    }
+}
+
+/// One phase timer reduced across ranks: total nanoseconds and sample
+/// count, each with min/max/sum.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStat {
+    /// Total nanoseconds spent in the phase.
+    pub nanos: Reduced,
+    /// Number of recorded spans.
+    pub samples: Reduced,
+}
+
+impl PhaseStat {
+    /// The summed-across-ranks phase time as a `Duration`.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.nanos.sum)
+    }
+}
+
+/// A file's instrumentation report: every [`Counter`], every [`Phase`]
+/// timer, plus the plan-cache, progress-lane, and backend counters, each
+/// reduced over `ranks` ranks. Before `File::close` the report is the
+/// local rank's snapshot (`ranks == 1`); at close it is reduced
+/// collectively across the world and served unchanged afterwards.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsReport {
+    /// Number of ranks reduced into the report.
+    pub ranks: usize,
+    counters: BTreeMap<String, Reduced>,
+    phases: BTreeMap<String, PhaseStat>,
+}
+
+impl StatsReport {
+    /// A counter by report name (zero if never recorded). Besides the
+    /// per-op counters this includes `plan_cache_hits`/`_misses`,
+    /// `progress_jobs_queued`/`_completed`, and the striped backend's
+    /// `degraded_reconstructed_reads`, `parity_rmw_cycles`, and
+    /// `fanout_bytes`.
+    pub fn counter(&self, name: &str) -> Reduced {
+        self.counters.get(name).copied().unwrap_or_default()
+    }
+
+    /// A phase timer by name (`validate`, `resolve`, `exchange`,
+    /// `storage`, `wait`, `queue`); zero if never recorded.
+    pub fn phase(&self, name: &str) -> PhaseStat {
+        self.phases.get(name).copied().unwrap_or_default()
+    }
+
+    /// Iterate `(name, value)` over all counters, sorted by name.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, Reduced)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate `(name, stat)` over all phase timers, in pipeline order.
+    pub fn phases(&self) -> impl Iterator<Item = (&str, PhaseStat)> {
+        Phase::ALL.into_iter().map(move |p| (p.name(), self.phase(p.name())))
+    }
+
+    /// Render the report as the `jpio stats` CLI table.
+    pub fn render(&self) -> String {
+        let mut out = format!("jpio file statistics ({} rank{})\n", self.ranks, plural(self.ranks));
+        out.push_str(&format!(
+            "  {:<28} {:>12} {:>12} {:>14}\n",
+            "counter", "min", "max", "sum"
+        ));
+        for (name, v) in self.counters() {
+            if v.sum == 0 {
+                continue;
+            }
+            out.push_str(&format!("  {:<28} {:>12} {:>12} {:>14}\n", name, v.min, v.max, v.sum));
+        }
+        out.push_str(&format!(
+            "  {:<28} {:>12} {:>12} {:>14}\n",
+            "phase", "samples", "max/rank", "total"
+        ));
+        for (name, p) in self.phases() {
+            if p.samples.sum == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {:<28} {:>12} {:>12} {:>14}\n",
+                name,
+                p.samples.sum,
+                format_nanos(p.nanos.max),
+                format_nanos(p.nanos.sum),
+            ));
+        }
+        out
+    }
+
+    /// Fold one rank's wire record into the report.
+    fn fold_wire(&mut self, values: &[u64], first: bool) {
+        let mut i = 0usize;
+        let mut next = || {
+            let v = values.get(i).copied().unwrap_or(0);
+            i += 1;
+            v
+        };
+        for c in Counter::ALL {
+            fold_entry(&mut self.counters, c.name(), next(), first);
+        }
+        for name in EXTRA_COUNTERS {
+            fold_entry(&mut self.counters, name, next(), first);
+        }
+        for p in Phase::ALL {
+            let nanos = next();
+            let samples = next();
+            let e = self.phases.entry(p.name().to_string()).or_default();
+            if first {
+                e.nanos = Reduced::of(nanos);
+                e.samples = Reduced::of(samples);
+            } else {
+                e.nanos.fold(nanos);
+                e.samples.fold(samples);
+            }
+        }
+    }
+}
+
+fn fold_entry(map: &mut BTreeMap<String, Reduced>, name: &str, v: u64, first: bool) {
+    let e = map.entry(name.to_string()).or_default();
+    if first {
+        *e = Reduced::of(v);
+    } else {
+        e.fold(v);
+    }
+}
+
+fn plural(n: usize) -> &'static str {
+    if n == 1 {
+        ""
+    } else {
+        "s"
+    }
+}
+
+fn format_nanos(n: u64) -> String {
+    format!("{:.3?}", Duration::from_nanos(n))
+}
+
+/// Non-op counters appended to the wire record after [`Counter::ALL`],
+/// sourced from the plan cache, the progress lane, and the storage
+/// backend at snapshot time. Order is part of the wire format.
+const EXTRA_COUNTERS: [&str; 7] = [
+    "plan_cache_hits",
+    "plan_cache_misses",
+    "progress_jobs_queued",
+    "progress_jobs_completed",
+    "degraded_reconstructed_reads",
+    "parity_rmw_cycles",
+    "fanout_bytes",
+];
+
+// ----------------------------------------------------------------------
+// File integration: snapshot, collective reduction, query
+// ----------------------------------------------------------------------
+
+impl File<'_> {
+    /// This rank's wire record: every counter (op counters, then the
+    /// plan-cache / progress / backend extras), then `(nanos, samples)`
+    /// per phase — fixed order, so the allgathered records of all ranks
+    /// fold positionally.
+    fn stats_wire(&self) -> Vec<u64> {
+        let mut out: Vec<u64> =
+            Counter::ALL.iter().map(|&c| self.stats.value(c)).collect();
+        let pc = self.plan_cache_stats();
+        let ps = self.progress_stats();
+        let bc = self.storage.backend_counters();
+        out.extend([
+            pc.hits,
+            pc.misses,
+            ps.queued as u64,
+            ps.completed as u64,
+            bc.degraded_reads,
+            bc.parity_rmw_cycles,
+            bc.fanout_bytes,
+        ]);
+        for p in Phase::ALL {
+            out.push(self.stats.phase_nanos[p as usize].load(Ordering::Relaxed));
+            out.push(self.stats.phase_samples[p as usize].load(Ordering::Relaxed));
+        }
+        out
+    }
+
+    /// The file's instrumentation report (Darshan-style). After a
+    /// `jpio_stats`-enabled `File::close` this is the collectively
+    /// reduced shared-file record (identical on every rank); before
+    /// close — or when the hint is off — it is this rank's local
+    /// snapshot with `ranks == 1`.
+    pub fn stats(&self) -> StatsReport {
+        if let Some(r) = self.reduced_stats.lock().unwrap().as_ref() {
+            return r.clone();
+        }
+        let mut report = StatsReport { ranks: 1, ..Default::default() };
+        report.fold_wire(&self.stats_wire(), true);
+        report
+    }
+
+    /// The close-time collective reduction (runs on every rank while
+    /// the handle is still open; `jpio_stats` must be set uniformly
+    /// across the world, like every collective hint). Each rank
+    /// allgathers its wire record and folds min/max/sum locally, so all
+    /// ranks hold the identical reduced report without a broadcast.
+    pub(crate) fn reduce_stats(&self) -> Result<()> {
+        let wire = self.stats_wire();
+        let bytes: Vec<u8> = wire.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let all = self.comm.allgather(&bytes);
+        let mut report = StatsReport { ranks: all.len(), ..Default::default() };
+        for (i, rec) in all.iter().enumerate() {
+            let values: Vec<u64> = rec
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                .collect();
+            report.fold_wire(&values, i == 0);
+        }
+        *self.reduced_stats.lock().unwrap() = Some(report);
+        self.stats.flush_trace();
+        Ok(())
+    }
+
+    /// This rank's progress-lane job counters ([`ProgressStats`]);
+    /// zeros when the transport has no lane or the
+    /// `jpio_progress_threads` hint disables it.
+    pub fn progress_stats(&self) -> ProgressStats {
+        self.progress_lane().map(|l| l.engine.stats()).unwrap_or_default()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Metrics registry (folded in from coordinator/metrics.rs)
+// ----------------------------------------------------------------------
+
+/// A thread-safe counters + timers registry for ad-hoc labels — the
+/// bench harness and examples report through this; the per-file
+/// instrumentation above is the structured, reducible form. (Formerly
+/// `coordinator::metrics::Metrics`; re-exported there for
+/// compatibility.)
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, (Duration, u64)>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `n` to counter `name`.
+    pub fn add(&self, name: &str, n: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Read a counter.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Time a closure under timer `name`.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let r = f();
+        self.record(name, start.elapsed());
+        r
+    }
+
+    /// Record an externally-measured duration.
+    pub fn record(&self, name: &str, d: Duration) {
+        let mut t = self.timers.lock().unwrap();
+        let e = t.entry(name.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Total time of a timer.
+    pub fn total(&self, name: &str) -> Duration {
+        self.timers.lock().unwrap().get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    /// Number of samples of a timer.
+    pub fn samples(&self, name: &str) -> u64 {
+        self.timers.lock().unwrap().get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Render a report table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        let timers = self.timers.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("  {k:<40} {v}\n"));
+            }
+        }
+        if !timers.is_empty() {
+            out.push_str("timers:\n");
+            for (k, (total, n)) in timers.iter() {
+                let avg = if *n > 0 { *total / *n as u32 } else { Duration::ZERO };
+                out.push_str(&format!(
+                    "  {k:<40} total {:>10.3?}  n {n:>6}  avg {avg:>10.3?}\n",
+                    total
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add("writes", 3);
+        m.add("writes", 4);
+        assert_eq!(m.get("writes"), 7);
+        assert_eq!(m.get("nonexistent"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate_and_count() {
+        let m = Metrics::new();
+        let out = m.time("op", || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(out, 42);
+        m.record("op", Duration::from_millis(5));
+        assert_eq!(m.samples("op"), 2);
+        assert!(m.total("op") >= Duration::from_millis(7));
+        let rep = m.report();
+        assert!(rep.contains("op"));
+    }
+
+    #[test]
+    fn trace_event_round_trips() {
+        let ev = TraceEvent {
+            rank: 3,
+            kind: "op".into(),
+            name: "write_at_all".into(),
+            offset: -128,
+            bytes: 4096,
+            micros: 0,
+        };
+        assert_eq!(TraceEvent::parse(&ev.to_json()), Some(ev));
+        let ph = TraceEvent {
+            rank: 0,
+            kind: "phase".into(),
+            name: "storage".into(),
+            offset: 0,
+            bytes: 0,
+            micros: 1234,
+        };
+        assert_eq!(TraceEvent::parse(&ph.to_json()), Some(ph));
+        assert_eq!(TraceEvent::parse("not json"), None);
+        assert_eq!(TraceEvent::parse("{\"rank\":1}"), None, "missing fields must not parse");
+    }
+
+    #[test]
+    fn disabled_stats_skip_timers_but_count() {
+        let s = FileStats::disabled();
+        assert!(!s.enabled());
+        assert!(s.start().is_none(), "timers off must never read the clock");
+        s.record(Phase::Storage, s.start());
+        assert_eq!(s.phase_samples[Phase::Storage as usize].load(Ordering::Relaxed), 0);
+        s.add(Counter::WriteOps, 2);
+        assert_eq!(s.value(Counter::WriteOps), 2, "counters stay on with timers off");
+    }
+
+    #[test]
+    fn enabled_stats_record_phase_spans() {
+        let s = FileStats::from_info(&Info::from([(keys::STATS, "true")]), 0);
+        assert!(s.enabled());
+        s.record(Phase::Exchange, s.start());
+        s.record_span(Phase::Exchange, Duration::from_micros(50));
+        assert_eq!(s.phase_samples[Phase::Exchange as usize].load(Ordering::Relaxed), 2);
+        assert!(
+            s.phase_nanos[Phase::Exchange as usize].load(Ordering::Relaxed) >= 50_000,
+            "recorded span must include the explicit 50µs"
+        );
+    }
+
+    #[test]
+    fn reduced_folds_min_max_sum() {
+        let mut r = Reduced::of(5);
+        r.fold(2);
+        r.fold(9);
+        assert_eq!(r, Reduced { min: 2, max: 9, sum: 16 });
+    }
+
+    #[test]
+    fn report_render_skips_zero_rows() {
+        let mut report = StatsReport { ranks: 2, ..Default::default() };
+        let wire = vec![0u64; Counter::ALL.len() + EXTRA_COUNTERS.len() + 2 * Phase::ALL.len()];
+        report.fold_wire(&wire, true);
+        let mut wire2 = wire;
+        wire2[Counter::WriteOps as usize] = 7;
+        report.fold_wire(&wire2, false);
+        let text = report.render();
+        assert!(text.contains("write_ops"));
+        assert!(!text.contains("read_ops"), "zero counters must not clutter the table");
+        assert_eq!(report.counter("write_ops"), Reduced { min: 0, max: 7, sum: 7 });
+    }
+}

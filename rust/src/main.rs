@@ -11,6 +11,9 @@
 //!                                   # small shared-file write/read demo
 //! jpio demo --backend striped [--servers 4] [--stripe-unit 64k]
 //!                                   # ... on declustered striped storage
+//! jpio stats [--ranks 4] [--procs] [--trace /tmp/trace.jsonl]
+//!                                   # run an instrumented workload and render
+//!                                   # the Darshan-style reduced stats report
 //! jpio version
 //! ```
 
@@ -27,13 +30,14 @@ fn main() {
         Some("testbed") => testbed(&args),
         Some("artifacts") => artifacts(&args),
         Some("demo") => demo(&args),
+        Some("stats") => stats(&args),
         Some("version") => println!("jpio {}", env!("CARGO_PKG_VERSION")),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command {cmd:?}\n");
             }
             eprintln!(
-                "usage: jpio <routines|testbed|artifacts|demo|version> [--flags]\n\
+                "usage: jpio <routines|testbed|artifacts|demo|stats|version> [--flags]\n\
                  see `cargo doc` and README.md for the library API"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -176,6 +180,60 @@ fn dispatch_all_cells(c: &dyn Comm, path: &str) {
     assert_eq!(f.read_ordered_end(back.as_mut_slice(), 0, k, &Datatype::INT).unwrap().bytes, kb);
     assert_eq!(back, data);
     f.close().unwrap();
+}
+
+/// `jpio stats`: run the overlap-style workload of `demo` with the
+/// `jpio_stats` phase timers on (and tracing, with `--trace <path>`),
+/// then render the collectively reduced per-file report — per-op cell
+/// counts, run shapes, byte counts, and per-phase wall-clock summed
+/// min/max/sum across the ranks.
+fn stats(args: &Args) {
+    let ranks = args.get_or("ranks", 4usize);
+    let trace = args.get("trace").map(str::to_string);
+    let path = format!("/tmp/jpio-stats-{}.dat", std::process::id());
+    let body = {
+        let path = path.clone();
+        let trace = trace.clone();
+        move |c: &dyn Comm| {
+            let mut info = Info::from([("jpio_stats", "true")]);
+            if let Some(t) = &trace {
+                info.set("jpio_stats_trace", t.as_str());
+            }
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
+            f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+            let r = c.rank();
+            let k = 1024usize;
+            let mine: Vec<i32> = (0..k).map(|i| (r * k + i) as i32).collect();
+            // Independent explicit-offset write of this rank's block.
+            f.write_at((r * k) as i64, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            c.barrier();
+            // Collective read of the whole file (two-phase exchange).
+            let n = k * c.size();
+            let mut all = vec![0i32; n];
+            f.read_at_all(0, all.as_mut_slice(), 0, n, &Datatype::INT).unwrap();
+            assert!(all.iter().enumerate().all(|(i, &v)| v == i as i32));
+            // Nonblocking collective write + overlapped wait (queue/wait
+            // phases) at the second file region.
+            let off2 = ((c.size() + r) * k) as i64;
+            let req = f.iwrite_at_all(off2, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            req.wait().unwrap();
+            // Close performs the Darshan-style collective reduction.
+            f.close().unwrap();
+            if c.rank() == 0 {
+                print!("{}", f.stats().render());
+            }
+        }
+    };
+    if args.has("procs") {
+        process::run_local(ranks, |c| body(c));
+    } else {
+        threads::run(ranks, |c| body(c));
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    if let Some(t) = &trace {
+        println!("trace: one JSONL file per rank at {t}.<rank>");
+    }
 }
 
 fn testbed(args: &Args) {

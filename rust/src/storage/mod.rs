@@ -183,6 +183,33 @@ pub trait StorageFile: Send + Sync {
     fn take_advisories(&self) -> Vec<crate::io::errors::IoError> {
         Vec::new()
     }
+
+    /// Cumulative backend-side event counters since open. Unlike
+    /// [`take_advisories`](StorageFile::take_advisories) these are *not*
+    /// drained on read — the instrumentation layer samples them at close
+    /// for the Darshan-style per-file record. Single-device backends
+    /// report all zeros.
+    fn backend_counters(&self) -> BackendCounters {
+        BackendCounters::default()
+    }
+}
+
+/// Snapshot of per-file backend event counters, sampled by the stats
+/// subsystem ([`crate::io::stats`]). The striped backend is the only
+/// producer today: it counts redundancy-path events that the byte
+/// counters in the I/O layer cannot see.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendCounters {
+    /// Reads served by reconstructing data from a replica or parity
+    /// group instead of the primary server (degraded mode).
+    pub degraded_reads: u64,
+    /// Read-modify-write cycles taken to update parity for partial
+    /// stripe writes.
+    pub parity_rmw_cycles: u64,
+    /// Total bytes dispatched to individual servers, including
+    /// redundancy traffic — the per-server fan-out amplification of
+    /// the bytes the caller asked to move.
+    pub fanout_bytes: u64,
 }
 
 /// A mapped view of a file region. The local implementation is a real

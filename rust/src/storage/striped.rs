@@ -63,6 +63,7 @@
 
 use std::os::unix::fs::FileExt;
 use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::io::engine;
@@ -292,6 +293,9 @@ impl Backend for StripedBackend {
             meta: SizeMeta::new(path),
             plock_path: StripedBackend::parity_lock_path(path),
             advisories: Mutex::new(Vec::new()),
+            degraded_reads: AtomicU64::new(0),
+            parity_rmw_cycles: AtomicU64::new(0),
+            fanout_bytes: AtomicU64::new(0),
         };
         if opts.truncate {
             // Children were truncated at open; the sidecar must follow.
@@ -417,6 +421,14 @@ struct StripedInner {
     plock_path: String,
     /// Pending degraded-mode advisories, drained by `take_advisories`.
     advisories: Mutex<Vec<IoError>>,
+    /// Reads served by replica fall-over or parity XOR reconstruction.
+    degraded_reads: AtomicU64,
+    /// Parity read-modify-write cycles (partial-stripe writes that had
+    /// to pre-read; full-stripe writes skip the cycle).
+    parity_rmw_cycles: AtomicU64,
+    /// Bytes dispatched to individual servers, redundancy traffic
+    /// included — the fan-out amplification of the caller's bytes.
+    fanout_bytes: AtomicU64,
 }
 
 impl StripedInner {
@@ -426,6 +438,12 @@ impl StripedInner {
 
     fn unit(&self) -> u64 {
         self.map.layout.unit
+    }
+
+    /// Count bytes dispatched to individual servers (data, replica, and
+    /// parity traffic alike) for the close-time backend record.
+    fn note_fanout(&self, bytes: u64) {
+        self.fanout_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Push a degraded-mode advisory for a survived failure on `child`.
@@ -616,6 +634,7 @@ impl StripedInner {
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
             let total: usize = segs.iter().map(|s| s.len).sum();
+            self.note_fanout(total as u64);
             dests.push((server, segs));
             jobs.push(move || -> Result<Vec<u8>> {
                 // Zero-filled so short child reads (sparse holes) leave
@@ -641,6 +660,7 @@ impl StripedInner {
         for (server, segs, err) in failed {
             let tmp = self.reconstruct_segments(server, &segs)?;
             scatter(&segs, &tmp, buf);
+            self.degraded_reads.fetch_add(1, Ordering::Relaxed);
             self.advise_degraded("read", server, &err);
         }
         Ok(())
@@ -661,6 +681,7 @@ impl StripedInner {
                 let mut last = None;
                 for c in 1..k {
                     let mut tmp = vec![0u8; total];
+                    self.note_fanout(total as u64);
                     match self.replicas[c - 1][server].read_runs(&runs, &mut tmp) {
                         Ok(_) => return Ok(tmp),
                         Err(e) => last = Some(e),
@@ -679,6 +700,7 @@ impl StripedInner {
                 // is never used for reconstruction.
                 let _guard = self.lock_parity()?;
                 let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+                self.note_fanout((self.factor() as u64 - 1) * total as u64);
                 let jobs: Vec<_> = (0..self.factor())
                     .filter(|&s| s != server)
                     .map(|s| {
@@ -725,6 +747,7 @@ impl StripedInner {
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
             let payload = gather(&segs, buf);
+            self.note_fanout(payload.len() as u64);
             jobs.push(move || -> Result<usize> { child.write_runs(&runs, &payload) });
         }
         for result in engine::fanout(jobs) {
@@ -747,6 +770,7 @@ impl StripedInner {
             // instead of materializing the payload once per copy.
             let runs = Arc::new(runs);
             let payload = Arc::new(gather(&segs, buf));
+            self.note_fanout(k as u64 * payload.len() as u64);
             for c in 0..k {
                 let handle = if c == 0 {
                     self.children[server].clone()
@@ -827,8 +851,12 @@ impl StripedInner {
         //    object's EOF.
         let mut slots: Vec<Vec<u8>> = vec![vec![0u8; nrows * unit]; factor];
         if !read_idx.is_empty() {
+            // A genuine read-modify-write cycle: at least one affected
+            // row is partially covered and its slots must be pre-read.
+            self.parity_rmw_cycles.fetch_add(1, Ordering::Relaxed);
             let row_runs: Vec<(u64, usize)> =
                 read_idx.iter().map(|&i| (rows[i] * unit as u64, unit)).collect();
+            self.note_fanout((factor * read_idx.len() * unit) as u64);
             let read_jobs: Vec<_> = self
                 .children
                 .iter()
@@ -920,6 +948,7 @@ impl StripedInner {
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
             let payload = gather(&segs, buf);
+            self.note_fanout(payload.len() as u64);
             jobs.push(Box::new(move || child.write_runs(&runs, &payload)));
             holders.push(server);
         }
@@ -930,6 +959,7 @@ impl StripedInner {
                 continue;
             }
             let child = self.children[p].clone();
+            self.note_fanout(payload.len() as u64);
             jobs.push(Box::new(move || child.write_runs(&runs, &payload)));
             holders.push(p);
         }
@@ -1194,6 +1224,14 @@ impl StorageFile for StripedFile {
 
     fn take_advisories(&self) -> Vec<IoError> {
         self.inner.take_advisories()
+    }
+
+    fn backend_counters(&self) -> super::BackendCounters {
+        super::BackendCounters {
+            degraded_reads: self.inner.degraded_reads.load(Ordering::Relaxed),
+            parity_rmw_cycles: self.inner.parity_rmw_cycles.load(Ordering::Relaxed),
+            fanout_bytes: self.inner.fanout_bytes.load(Ordering::Relaxed),
+        }
     }
 }
 

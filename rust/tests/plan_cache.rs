@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use jpio::comm::{threads, Datatype};
 use jpio::io::errors::Result as IoResult;
-use jpio::io::{amode, File, Info};
+use jpio::io::{amode, File, Info, PlanCacheStats};
 use jpio::storage::local::LocalBackend;
 use jpio::storage::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
 
@@ -109,18 +109,18 @@ fn repeated_same_shape_access_reuses_the_plan_but_still_hits_storage() {
         let data: Vec<i32> = (0..32).collect();
 
         f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
-        let (h0, m0) = f.plan_cache_stats();
-        assert_eq!(h0, 0, "first access of a shape cannot hit");
-        assert!(m0 >= 1);
+        let s0 = f.plan_cache_stats();
+        assert_eq!(s0.hits, 0, "first access of a shape cannot hit");
+        assert!(s0.misses >= 1);
         let w0 = writes.load(Ordering::SeqCst);
         assert!(w0 > 0, "the write must reach storage");
 
         // The repeated same-shape access: same (view, direction, offset,
         // len) — the plan is reused, no recompilation...
         f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
-        let (h1, m1) = f.plan_cache_stats();
-        assert_eq!(h1, 1, "repeated same-shape write must reuse the compiled plan");
-        assert_eq!(m1, m0, "repeated same-shape write must not recompile");
+        let s1 = f.plan_cache_stats();
+        assert_eq!(s1.hits, 1, "repeated same-shape write must reuse the compiled plan");
+        assert_eq!(s1.misses, s0.misses, "repeated same-shape write must not recompile");
         // ...but the storage I/O still happens (as many writes as round 1).
         let w1 = writes.load(Ordering::SeqCst);
         assert_eq!(w1, 2 * w0, "the repeated write must hit storage like the first");
@@ -128,28 +128,32 @@ fn repeated_same_shape_access_reuses_the_plan_but_still_hits_storage() {
         // Same shape, other direction: a distinct key.
         let mut back = vec![0i32; 32];
         f.read_at(0, back.as_mut_slice(), 0, 32, &Datatype::INT).unwrap();
-        let (h2, m2) = f.plan_cache_stats();
-        assert_eq!((h2, m2), (1, m1 + 1));
+        let s2 = f.plan_cache_stats();
+        assert_eq!((s2.hits, s2.misses), (1, s1.misses + 1));
         f.read_at(0, back.as_mut_slice(), 0, 32, &Datatype::INT).unwrap();
-        assert_eq!(f.plan_cache_stats(), (2, m2), "repeated read reuses its plan");
+        assert_eq!(
+            f.plan_cache_stats(),
+            PlanCacheStats { hits: 2, misses: s2.misses },
+            "repeated read reuses its plan"
+        );
         assert_eq!(back, data);
         assert!(reads.load(Ordering::SeqCst) > 0);
 
         // A different shape misses; the old shape stays cached.
         f.write_at(4, data.as_slice(), 0, 16, &Datatype::INT).unwrap();
-        let (h3, m3) = f.plan_cache_stats();
-        assert_eq!((h3, m3), (2, m2 + 1));
+        let s3 = f.plan_cache_stats();
+        assert_eq!((s3.hits, s3.misses), (2, s2.misses + 1));
         f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
-        assert_eq!(f.plan_cache_stats(), (3, m3));
+        assert_eq!(f.plan_cache_stats(), PlanCacheStats { hits: 3, misses: s3.misses });
 
         // set_view installs a new view identity: same shape recompiles.
         let ft2 = Datatype::vector(1, 2, 4, &Datatype::INT).unwrap();
         let ft2 = Datatype::resized(&ft2, 0, 16).unwrap();
         f.set_view(0, &Datatype::INT, &ft2, "native", &Info::null()).unwrap();
         f.write_at(0, data.as_slice(), 0, 32, &Datatype::INT).unwrap();
-        let (h4, m4) = f.plan_cache_stats();
-        assert_eq!(h4, 3, "a new view identity must not hit stale plans");
-        assert_eq!(m4, m3 + 1);
+        let s4 = f.plan_cache_stats();
+        assert_eq!(s4.hits, 3, "a new view identity must not hit stale plans");
+        assert_eq!(s4.misses, s3.misses + 1);
 
         f.close().unwrap();
     });

@@ -1,0 +1,216 @@
+//! Darshan-style instrumentation: exact per-op counting through the
+//! `AccessOp` choke point, close-time collective reduction agreement
+//! across forked processes, and the JSONL trace stream round-tripping
+//! through its reference decoder.
+
+use jpio::comm::{process, threads, Comm, Datatype};
+use jpio::io::hints::keys;
+use jpio::io::{amode, File, Info, Reduced, TraceEvent};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-stats-test-{}-{name}", std::process::id())
+}
+
+/// Every counter of a known three-op workload — one independent
+/// explicit-offset write, one nonblocking independent write + wait, one
+/// collective strided read — counted exactly, then reduced across the
+/// 2-rank world at close.
+#[test]
+fn exact_counts_reduce_across_ranks() {
+    let path = tmp("exact.dat");
+    threads::run(2, |c| {
+        let f = File::open(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::from([(keys::STATS, "true")]),
+        )
+        .unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let r = c.rank();
+        let k = 8usize;
+
+        // Op 1: independent blocking write of this rank's block — file
+        // ints [r*8, r*8+8) hold their global index.
+        let mine: Vec<i32> = (0..k).map(|i| (r * k + i) as i32).collect();
+        f.write_at((r * k) as i64, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+
+        // Op 2: nonblocking independent write of a second block at
+        // [16 + r*8, ...), completed with a wait.
+        f.iwrite_at(((2 + r) * k) as i64, mine.as_slice(), 0, k, &Datatype::INT)
+            .unwrap()
+            .wait()
+            .unwrap();
+        c.barrier();
+
+        // Op 3: collective strided read — a vector view combing the
+        // first 16 ints: rank 0 the even slots, rank 1 the odd ones.
+        let ft = Datatype::vector(k, 1, 2, &Datatype::INT).unwrap();
+        f.set_view(4 * r as i64, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+        let mut comb = vec![0i32; k];
+        f.read_at_all(0, comb.as_mut_slice(), 0, k, &Datatype::INT).unwrap();
+        for (j, &v) in comb.iter().enumerate() {
+            assert_eq!(v as usize, 2 * j + r, "strided read must comb the file");
+        }
+
+        // Close runs the collective min/max/sum reduction; the report is
+        // then identical on every rank.
+        f.close().unwrap();
+        let report = f.stats();
+        assert_eq!(report.ranks, 2);
+
+        // Per rank: 2 writes + 1 read, 2 independent + 1 collective,
+        // 2 blocking + 1 nonblocking, 3 explicit-offset; each op moved
+        // 8 ints = 32 bytes.
+        let per = |n: u64| Reduced { min: n, max: n, sum: 2 * n };
+        assert_eq!(report.counter("write_ops"), per(2));
+        assert_eq!(report.counter("read_ops"), per(1));
+        assert_eq!(report.counter("independent_ops"), per(2));
+        assert_eq!(report.counter("collective_ops"), per(1));
+        assert_eq!(report.counter("blocking_ops"), per(2));
+        assert_eq!(report.counter("nonblocking_ops"), per(1));
+        assert_eq!(report.counter("explicit_offset_ops"), per(3));
+        assert_eq!(report.counter("split_ops"), per(0));
+        assert_eq!(report.counter("shared_ptr_ops"), per(0));
+        assert_eq!(report.counter("bytes_requested"), per(96));
+        assert_eq!(report.counter("bytes_moved"), per(96));
+        // Run shapes: the two contiguous writes compile 1-run plans, the
+        // vector read an 8-run comb.
+        assert_eq!(report.counter("contiguous_plans"), per(2));
+        assert_eq!(report.counter("strided_plans"), per(1));
+        assert_eq!(report.counter("plan_runs"), per(10));
+        // Only strided lookups consult the plan cache: one fresh compile.
+        assert_eq!(report.counter("plan_cache_misses"), per(1));
+        assert_eq!(report.counter("plan_cache_hits"), per(0));
+        assert_eq!(report.counter("datarep_converted_ops"), per(0));
+
+        // Phase timers were on: every pipeline stage this workload
+        // crosses must have recorded spans.
+        assert!(report.phase("validate").samples.sum >= 6, "3 submissions per rank");
+        assert!(report.phase("resolve").samples.sum >= 6);
+        assert!(report.phase("storage").samples.sum >= 2);
+        assert!(report.phase("wait").samples.sum >= 2, "one wait per rank");
+        assert!(report.phase("exchange").samples.sum >= 2, "collective read exchanges");
+
+        // The render shows per-phase timing and the byte counters.
+        let text = report.render();
+        assert!(text.contains("2 ranks"));
+        assert!(text.contains("bytes_moved"));
+        assert!(text.contains("storage"));
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+/// Counters stay on with the hint off, while the phase timers stay
+/// entirely silent (no samples anywhere).
+#[test]
+fn hint_off_counts_without_timers() {
+    let path = tmp("off.dat");
+    threads::run(1, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let data = [7i32; 4];
+        f.write_at(0, &data[..], 0, 4, &Datatype::INT).unwrap();
+        let report = f.stats();
+        assert_eq!(report.ranks, 1, "hint off: local snapshot, no reduction");
+        assert_eq!(report.counter("write_ops").sum, 1);
+        assert_eq!(report.counter("bytes_requested").sum, 16);
+        for (name, p) in report.phases() {
+            assert_eq!(p.samples.sum, 0, "phase {name} must record nothing with the hint off");
+        }
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+/// The close-time reduction must agree across *forked processes*: every
+/// rank allgathers its rendered report and asserts byte-identical text,
+/// plus exact reduced values for a known one-op-per-rank workload.
+#[test]
+fn forked_ranks_agree_on_reduced_report() {
+    let path = tmp("procs.dat");
+    process::run_local(4, |c| {
+        let f = File::open(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::from([(keys::STATS, "enable")]),
+        )
+        .unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let r = c.rank();
+        let mine: Vec<i32> = (0..64).map(|i| (r * 64 + i) as i32).collect();
+        f.write_at_all((r * 64) as i64, mine.as_slice(), 0, 64, &Datatype::INT).unwrap();
+        f.close().unwrap();
+        let report = f.stats();
+        assert_eq!(report.ranks, 4);
+        assert_eq!(report.counter("write_ops"), Reduced { min: 1, max: 1, sum: 4 });
+        assert_eq!(report.counter("collective_ops"), Reduced { min: 1, max: 1, sum: 4 });
+        assert_eq!(report.counter("bytes_requested"), Reduced { min: 256, max: 256, sum: 1024 });
+        // Byte-identical rendering on every rank — the shared-file
+        // record really is shared.
+        let texts = c.allgather(report.render().as_bytes());
+        for t in &texts {
+            assert_eq!(t, &texts[0], "all ranks must hold the identical reduced report");
+        }
+    });
+    File::delete(&path, &Info::null()).unwrap();
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+/// The `jpio_stats_trace` JSONL stream round-trips through the schema's
+/// reference decoder: every emitted line parses, re-encodes to the same
+/// bytes, and carries the expected op/phase vocabulary.
+#[test]
+fn trace_stream_round_trips_through_schema() {
+    let path = tmp("trace.dat");
+    let trace = tmp("trace.jsonl");
+    threads::run(1, |c| {
+        let f = File::open(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            Info::from([(keys::STATS, "true"), (keys::STATS_TRACE, trace.as_str())]),
+        )
+        .unwrap();
+        f.set_view(0, &Datatype::INT, &Datatype::INT, "native", &Info::null()).unwrap();
+        let data: Vec<i32> = (0..16).collect();
+        f.write_at(0, data.as_slice(), 0, 16, &Datatype::INT).unwrap();
+        let mut back = vec![0i32; 16];
+        f.read_at(0, back.as_mut_slice(), 0, 16, &Datatype::INT).unwrap();
+        assert_eq!(back, data);
+        f.close().unwrap();
+    });
+    let stream = std::fs::read_to_string(format!("{trace}.0")).expect("per-rank trace file");
+    let events: Vec<TraceEvent> = stream
+        .lines()
+        .map(|line| {
+            let ev = TraceEvent::parse(line).expect("every trace line parses");
+            assert_eq!(ev.to_json(), line, "canonical encode must round-trip");
+            ev
+        })
+        .collect();
+    assert!(!events.is_empty());
+    assert!(events.iter().all(|e| e.rank == 0));
+    assert!(
+        events.iter().any(|e| e.kind == "op" && e.name == "write_at" && e.bytes == 64),
+        "the independent write must appear as an op event"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == "op" && e.name == "read_at"),
+        "the independent read must appear as an op event"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == "phase" && e.name == "storage"),
+        "storage phase spans must appear"
+    );
+    assert!(
+        events.iter().any(|e| e.kind == "phase" && e.name == "validate"),
+        "validate phase spans must appear"
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    let _ = std::fs::remove_file(format!("{trace}.0"));
+}
