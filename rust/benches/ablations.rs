@@ -28,6 +28,13 @@
 //!    timers + JSONL tracing; proves the hint-off path records no phase
 //!    samples (timers fully skipped) and validates every emitted trace
 //!    line against the `TraceEvent` schema.
+//! 10. **scale-out exchange** — forked-rank sweep (2→64) of the alltoall
+//!    schedules: a transport tap proves linear/pairwise move `n-1`
+//!    messages per rank (Θ(n²) total) while Bruck moves `⌈lg n⌉`
+//!    (Θ(n lg n) — sub-quadratic), with wall-clock per exchange printed
+//!    alongside; plus the zero-copy collective-write guard — the
+//!    `staging_copy_bytes` counter must be 0 on plan-executing (striped)
+//!    backends and exactly the payload on the staged fallback.
 //!
 //! `JPIO_SMOKE=1` runs everything at 1/16 size with one repetition — the
 //! CI gate that keeps this file compiled and executed on every PR.
@@ -648,6 +655,174 @@ fn stats_instrumentation() {
     common::cleanup(&path);
 }
 
+/// Transport tap for ablation 10: the alltoall schedules run on the
+/// trait's `send`/`recv`/`sendrecv` defaults, so counting here measures
+/// each algorithm's true per-rank transport footprint.
+struct SendTap<'a> {
+    inner: &'a dyn Comm,
+    msgs: std::sync::atomic::AtomicU64,
+    bytes: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> SendTap<'a> {
+    fn new(inner: &'a dyn Comm) -> SendTap<'a> {
+        SendTap {
+            inner,
+            msgs: std::sync::atomic::AtomicU64::new(0),
+            bytes: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+}
+
+impl Comm for SendTap<'_> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&self, dest: usize, tag: i32, data: &[u8]) {
+        use std::sync::atomic::Ordering;
+        self.msgs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.inner.send(dest, tag, data)
+    }
+
+    fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
+        self.inner.recv(src, tag)
+    }
+
+    fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
+        self.inner.try_recv(src, tag)
+    }
+}
+
+fn scaleout_exchange_and_zero_copy() {
+    println!("\n--- ablation 10: scale-out alltoall (forked-rank sweep) + zero-copy write path ---");
+    use jpio::comm::{process, AlltoallAlgorithm};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    // Part A — the exchange sweep. Forked ranks (real address spaces on
+    // the socket mesh) run each schedule at each world size; rank 0
+    // reports the per-exchange wall-clock plus the tap's message and
+    // byte counts. The counts are deterministic, so the sub-quadratic
+    // claim is asserted structurally: linear and pairwise pay n-1
+    // messages per rank, Bruck pays ceil(lg n) bundled frames.
+    let sizes: &[usize] = if common::smoke() { &[2, 4, 8] } else { &[2, 4, 8, 16, 32, 64] };
+    let per_dest = common::sz(16 << 10);
+    let iters = common::reps();
+    let algos = [
+        ("linear", AlltoallAlgorithm::Linear),
+        ("pairwise", AlltoallAlgorithm::Pairwise),
+        ("bruck", AlltoallAlgorithm::Bruck),
+    ];
+    println!("  per-destination payload {per_dest} B, {iters} timed exchanges per cell");
+    println!(
+        "  {:>6} {:>10} {:>14} {:>10} {:>16}",
+        "ranks", "algorithm", "per-exchange", "msgs/rank", "wire B/rank"
+    );
+    for &n in sizes {
+        for &(name, algo) in &algos {
+            let (secs, msgs, bytes) = process::run_local(n, |c| {
+                let tap = SendTap::new(c);
+                let me = tap.rank();
+                // Warm-up doubles as a correctness pass: every payload
+                // byte encodes its (src, dst) pair.
+                let parts: Vec<Vec<u8>> =
+                    (0..n).map(|d| vec![(me * 31 + d) as u8; per_dest]).collect();
+                let inbound = tap.alltoall_with(&parts, algo);
+                for (s, got) in inbound.iter().enumerate() {
+                    assert_eq!(got.len(), per_dest, "rank {me} from {s} under {name}");
+                    assert!(got.iter().all(|&v| v == (s * 31 + me) as u8));
+                }
+                tap.msgs.store(0, Ordering::Relaxed);
+                tap.bytes.store(0, Ordering::Relaxed);
+                c.barrier(); // uncounted: keep the tap to alltoall traffic
+                let start = std::time::Instant::now();
+                for _ in 0..iters {
+                    let parts: Vec<Vec<u8>> =
+                        (0..n).map(|d| vec![(me + d) as u8; per_dest]).collect();
+                    std::hint::black_box(tap.alltoall_with(&parts, algo));
+                }
+                c.barrier();
+                (
+                    start.elapsed().as_secs_f64() / iters as f64,
+                    tap.msgs.load(Ordering::Relaxed) / iters as u64,
+                    tap.bytes.load(Ordering::Relaxed) / iters as u64,
+                )
+            });
+            println!(
+                "  {n:>6} {name:>10} {:>11.3} ms {msgs:>10} {bytes:>16}",
+                secs * 1e3
+            );
+            // Sweep sizes are powers of two, so the pairwise XOR
+            // schedule and the exact Bruck round count both apply.
+            let lg = (usize::BITS - (n - 1).leading_zeros()) as u64;
+            match algo {
+                AlltoallAlgorithm::Bruck => assert_eq!(
+                    msgs, lg,
+                    "bruck at {n} ranks must send ceil(lg n) bundled frames per rank"
+                ),
+                _ => assert_eq!(
+                    msgs,
+                    (n - 1) as u64,
+                    "{name} at {n} ranks must send n-1 messages per rank"
+                ),
+            }
+        }
+    }
+    println!(
+        "  structural: linear/pairwise total messages Θ(n²); bruck Θ(n·lg n) — sub-quadratic"
+    );
+
+    // Part B — bytes copied per collective write. The same collective
+    // write runs against the staged fallback (single-device local
+    // backend) and the zero-copy piece dispatch (plan-executing striped
+    // backend); the `staging_copy_bytes` counter is the regression
+    // guard: exactly the payload when staged, exactly zero when not.
+    let ranks = 4usize;
+    let per_rank = common::sz(1 << 20);
+    let staged_of = |backend: Arc<dyn jpio::storage::Backend>, path: &str| -> u64 {
+        threads::run(ranks, |c| {
+            let f = File::open_with_backend(
+                c,
+                path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                backend.clone(),
+            )
+            .unwrap();
+            let mine = vec![c.rank() as u8; per_rank];
+            f.write_at_all((c.rank() * per_rank) as i64, mine.as_slice(), 0, per_rank, &Datatype::BYTE)
+                .unwrap();
+            let staged = f.stats().counter("staging_copy_bytes").sum;
+            f.close().unwrap();
+            staged
+        })
+        .into_iter()
+        .sum()
+    };
+    let lpath = format!("/tmp/jpio-abl10-local-{}.dat", std::process::id());
+    let spath = format!("/tmp/jpio-abl10-striped-{}.dat", std::process::id());
+    let payload = (ranks * per_rank) as u64;
+    let staged = staged_of(Arc::new(jpio::storage::local::LocalBackend::instant()), &lpath);
+    let zero = staged_of(
+        Arc::new(jpio::storage::striped::StripedBackend::local(4, 64 << 10)),
+        &spath,
+    );
+    println!(
+        "  collective write of {payload} B: staging copies — staged backend {staged} B, \
+         striped (zero-copy) {zero} B"
+    );
+    assert_eq!(staged, payload, "staged fallback must copy each payload byte exactly once");
+    assert_eq!(zero, 0, "zero-copy regression: striped collective write staged payload bytes");
+    common::cleanup(&lpath);
+    cleanup_striped(&spath, 4);
+}
+
 fn main() {
     println!("jpio ablation suite");
     per_item_vs_bulk();
@@ -661,6 +836,7 @@ fn main() {
     nonblocking_collective_overlap();
     plan_pipeline_parity();
     stats_instrumentation();
+    scaleout_exchange_and_zero_copy();
     pjrt_pack_vs_rust();
     let _ = FigureReport::new("ablations", "case"); // keep the type exercised
     println!("\nablations done");

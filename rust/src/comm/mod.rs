@@ -41,6 +41,75 @@ const T_COLL: i32 = INTERNAL_TAG_BASE + 1;
 /// Internal tag for barrier rounds.
 const T_BARRIER: i32 = INTERNAL_TAG_BASE + 2;
 
+/// All-to-all exchange algorithm (ROMIO/MPICH-style selection). The
+/// personalized exchange is the hot phase of two-phase collective I/O
+/// (Thakur et al.), so the schedule matters as soon as worlds grow:
+///
+/// | algorithm  | rounds      | bytes on the wire | sweet spot              |
+/// |------------|-------------|-------------------|-------------------------|
+/// | `Linear`   | `n - 1`     | `sum(parts)`      | small worlds            |
+/// | `Pairwise` | `n - 1`     | `sum(parts)`      | large messages          |
+/// | `Bruck`    | `ceil(lg n)`| `~sum/2 * lg n`   | many ranks, small parts |
+///
+/// `Auto` picks by rank count and message size ([`AUTO_SCALABLE_RANKS`],
+/// [`BRUCK_MSG_CUTOFF`]). Parsed from the `jpio_alltoall_algorithm` hint;
+/// malformed values fall back to `Auto` (MPI hint semantics).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum AlltoallAlgorithm {
+    /// Select by rank threshold and message size.
+    #[default]
+    Auto,
+    /// Ring schedule: round `r` sends to `me+r`, receives from `me-r`.
+    Linear,
+    /// Pairwise exchange: XOR partners on power-of-two worlds (each round
+    /// is one symmetric sendrecv), ring rotation otherwise.
+    Pairwise,
+    /// Bruck's algorithm: `ceil(lg n)` store-and-forward rounds of framed
+    /// block bundles — each block travels up to `lg n` hops, so total
+    /// traffic grows, but the round count (and with it latency and
+    /// endpoint pressure) drops from `n-1` to `lg n`.
+    Bruck,
+}
+
+/// Worlds below this size always use the linear schedule under
+/// [`AlltoallAlgorithm::Auto`] — the scalable schedules only pay off once
+/// the `n - 1` round count hurts.
+pub const AUTO_SCALABLE_RANKS: usize = 8;
+
+/// Largest per-destination payload (bytes) for which `Auto` picks Bruck
+/// on scalable worlds; above it the log-factor wire inflation outweighs
+/// the round-count win and pairwise exchange is used instead.
+pub const BRUCK_MSG_CUTOFF: usize = 4096;
+
+impl AlltoallAlgorithm {
+    /// Parse a `jpio_alltoall_algorithm` hint value. Unknown or absent
+    /// values select `Auto` (hints must never fail).
+    pub fn parse(value: Option<&str>) -> AlltoallAlgorithm {
+        match value {
+            Some("linear") => AlltoallAlgorithm::Linear,
+            Some("pairwise") => AlltoallAlgorithm::Pairwise,
+            Some("bruck") => AlltoallAlgorithm::Bruck,
+            _ => AlltoallAlgorithm::Auto,
+        }
+    }
+
+    /// Resolve `Auto` against a concrete exchange shape.
+    fn resolve(self, n: usize, max_part: usize) -> AlltoallAlgorithm {
+        match self {
+            AlltoallAlgorithm::Auto => {
+                if n < AUTO_SCALABLE_RANKS {
+                    AlltoallAlgorithm::Linear
+                } else if max_part <= BRUCK_MSG_CUTOFF {
+                    AlltoallAlgorithm::Bruck
+                } else {
+                    AlltoallAlgorithm::Pairwise
+                }
+            }
+            other => other,
+        }
+    }
+}
+
 /// Reduction operators for the numeric collectives.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum ReduceOp {
@@ -194,25 +263,125 @@ pub trait Comm: Send + Sync {
         }
     }
 
+    /// Combined send-to-`dest` + receive-from-`src` — the round primitive
+    /// of the pairwise exchange schedules. The symmetric self case
+    /// (`dest == src == rank`) never touches the transport: the payload
+    /// is returned directly.
+    fn sendrecv(&self, dest: usize, send_tag: i32, data: &[u8], src: usize, recv_tag: i32) -> Vec<u8> {
+        let me = self.rank();
+        if dest == me || src == me {
+            assert!(
+                dest == me && src == me && send_tag == recv_tag,
+                "self sendrecv must be symmetric (dest == src == rank, matching tags)"
+            );
+            return data.to_vec();
+        }
+        // Sends are buffered on both transports (mailboxes / outbound
+        // socket buffers with inbound draining), so send-then-recv
+        // cannot deadlock even when both partners send first.
+        self.send(dest, send_tag, data);
+        self.recv(src, recv_tag)
+    }
+
     /// Personalized all-to-all: `parts[d]` goes to rank `d`; returns the
-    /// payloads received from every rank. Sends are rank-ordered with a
-    /// pairwise schedule to avoid head-of-line blocking.
+    /// payloads received from every rank. Algorithm selected by
+    /// [`AlltoallAlgorithm::Auto`]; use [`Comm::alltoall_with`] /
+    /// [`Comm::alltoall_owned`] to choose explicitly.
     fn alltoall(&self, parts: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        self.alltoall_with(parts, AlltoallAlgorithm::Auto)
+    }
+
+    /// [`Comm::alltoall_owned`] over borrowed payloads.
+    fn alltoall_with(&self, parts: &[Vec<u8>], algo: AlltoallAlgorithm) -> Vec<Vec<u8>> {
+        self.alltoall_owned(parts.to_vec(), algo)
+    }
+
+    /// Personalized all-to-all taking ownership of the payloads: the
+    /// rank→self part is *moved* into the result — zero bytes of
+    /// self-traffic ever reach the transport (and none are even cloned),
+    /// on every algorithm.
+    fn alltoall_owned(&self, mut parts: Vec<Vec<u8>>, algo: AlltoallAlgorithm) -> Vec<Vec<u8>> {
         let n = self.size();
         assert_eq!(parts.len(), n, "alltoall payload count != comm size");
         let me = self.rank();
-        let mut out = vec![Vec::new(); n];
-        out[me] = parts[me].clone();
-        // Ring schedule: round r sends to (me+r) and receives from (me-r).
-        // Sends are buffered on both transports (mailboxes / progress
-        // engine), so send-then-recv cannot deadlock.
-        for r in 1..n {
-            let send_to = (me + r) % n;
-            let recv_from = (me + n - r) % n;
-            self.send(send_to, T_COLL, &parts[send_to]);
-            out[recv_from] = self.recv(recv_from, T_COLL);
+        if n == 1 {
+            return parts;
         }
-        out
+        let max_part = parts.iter().map(Vec::len).max().unwrap_or(0);
+        match algo.resolve(n, max_part) {
+            AlltoallAlgorithm::Auto => unreachable!("resolve() returns a concrete algorithm"),
+            AlltoallAlgorithm::Linear => {
+                let mut out = vec![Vec::new(); n];
+                out[me] = std::mem::take(&mut parts[me]);
+                // Ring schedule: round r sends to (me+r), receives from
+                // (me-r); buffered sends make send-then-recv safe.
+                for r in 1..n {
+                    let send_to = (me + r) % n;
+                    let recv_from = (me + n - r) % n;
+                    self.send(send_to, T_COLL, &parts[send_to]);
+                    parts[send_to] = Vec::new(); // free as we go
+                    out[recv_from] = self.recv(recv_from, T_COLL);
+                }
+                out
+            }
+            AlltoallAlgorithm::Pairwise => {
+                let mut out = vec![Vec::new(); n];
+                out[me] = std::mem::take(&mut parts[me]);
+                if n.is_power_of_two() {
+                    // XOR partners: every round is one symmetric
+                    // exchange, so each link is used bidirectionally at
+                    // full rate and no rank waits on a chain of peers.
+                    for r in 1..n {
+                        let peer = me ^ r;
+                        let sent = std::mem::take(&mut parts[peer]);
+                        out[peer] = self.sendrecv(peer, T_COLL, &sent, peer, T_COLL);
+                    }
+                } else {
+                    // Non-power-of-two: rotation schedule where round r
+                    // pairs (me+r, me-r) — send and recv peers differ but
+                    // every round still moves each rank's link once.
+                    for r in 1..n {
+                        let send_to = (me + r) % n;
+                        let recv_from = (me + n - r) % n;
+                        let sent = std::mem::take(&mut parts[send_to]);
+                        self.send(send_to, T_COLL, &sent);
+                        out[recv_from] = self.recv(recv_from, T_COLL);
+                    }
+                }
+                out
+            }
+            AlltoallAlgorithm::Bruck => {
+                // Bruck's algorithm: ceil(lg n) store-and-forward rounds.
+                // 1. Local rotation: block i = the payload for relative
+                //    destination i (distance upward from this rank).
+                let mut blocks: Vec<Vec<u8>> =
+                    (0..n).map(|i| std::mem::take(&mut parts[(me + i) % n])).collect();
+                // 2. Round k ships every block whose relative index has
+                //    bit 2^k set to rank (me + 2^k), bundled in one frame;
+                //    received bundles land in the same slots. Block 0 (the
+                //    self payload) has no bits set and never moves.
+                let mut pow = 1usize;
+                while pow < n {
+                    let dst = (me + pow) % n;
+                    let src = (me + n - pow) % n;
+                    let idxs: Vec<usize> = (0..n).filter(|i| i & pow != 0).collect();
+                    let bundle: Vec<Vec<u8>> =
+                        idxs.iter().map(|&i| std::mem::take(&mut blocks[i])).collect();
+                    let framed = frame(&bundle);
+                    let got = self.sendrecv(dst, T_COLL, &framed, src, T_COLL);
+                    for (&i, b) in idxs.iter().zip(unframe(&got, idxs.len())) {
+                        blocks[i] = b;
+                    }
+                    pow <<= 1;
+                }
+                // 3. Inverse rotation: block i arrived from rank (me - i).
+                let mut out = vec![Vec::new(); n];
+                for (i, b) in blocks.into_iter().enumerate() {
+                    out[(me + n - i) % n] = b;
+                }
+                out
+            }
+        }
     }
 
     /// All-reduce of one i64 (gather/bcast through rank 0).
@@ -257,15 +426,23 @@ pub trait Comm: Send + Sync {
         Group::new((0..self.size()).collect())
     }
 
-    /// This rank's progress lane — a per-world background thread plus a
-    /// `'static` endpoint in a reserved tag band ([`progress`]) — used by
-    /// the I/O layer to run nonblocking collective operations entirely
-    /// off the calling thread. Transports that cannot hand out a
-    /// `'static` endpoint (e.g. the borrowing [`SubComm`]) return `None`
-    /// and nonblocking collectives fall back to caller-side exchange.
-    /// The capability must be uniform across a world: every rank of a
-    /// given communicator answers the same way.
+    /// This rank's first progress lane — see [`Comm::progress_lane_at`].
     fn progress_lane(&self) -> Option<ProgressLane> {
+        self.progress_lane_at(0)
+    }
+
+    /// This rank's progress lane `lane` — a per-world background thread
+    /// plus a `'static` endpoint in that lane's reserved tag band
+    /// ([`progress`]) — used by the I/O layer to run nonblocking and
+    /// split collective operations entirely off the calling thread.
+    /// Independent collectives submitted to different lanes pipeline
+    /// against each other. Transports that cannot hand out a `'static`
+    /// endpoint (e.g. the borrowing [`SubComm`]) return `None` and
+    /// nonblocking collectives fall back to caller-side exchange. The
+    /// capability must be uniform across a world: every rank of a given
+    /// communicator answers the same way.
+    fn progress_lane_at(&self, lane: usize) -> Option<ProgressLane> {
+        let _ = lane;
         None
     }
 }

@@ -32,10 +32,8 @@ use std::os::unix::io::RawFd;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use once_cell::sync::OnceCell;
-
 use super::netmodel::{Link, TimeScale};
-use super::progress::{self, ProgressEngine, ProgressLane};
+use super::progress::{self, ProgressLane};
 use super::Comm;
 
 /// Frame header: tag (i32 LE) + payload length (u64 LE).
@@ -76,8 +74,8 @@ impl Drop for Inner {
 /// last holder drops.
 struct ProcShared {
     inner: Mutex<Inner>,
-    /// The rank's lazily-spawned progress engine (one per process).
-    progress: OnceCell<Arc<ProgressEngine>>,
+    /// The rank's lazily-spawned progress engines, one per lane.
+    progress: progress::LaneBank,
 }
 
 /// Bounded poll slice for blocking waits: long enough that an idle
@@ -351,14 +349,14 @@ impl Comm for ProcComm {
         Self::take_pending(&mut inner, src, tag)
     }
 
-    fn progress_lane(&self) -> Option<ProgressLane> {
+    fn progress_lane_at(&self, lane: usize) -> Option<ProgressLane> {
         let endpoint: Arc<dyn Comm> = Arc::new(ProcComm {
             rank: self.rank,
             n: self.n,
             shared: self.shared.clone(),
             cfg: self.cfg,
         });
-        Some(progress::lane(&self.shared.progress, self.rank, endpoint))
+        Some(progress::lane(&self.shared.progress, self.rank, lane, endpoint))
     }
 }
 
@@ -386,7 +384,7 @@ where
             n: 1,
             shared: Arc::new(ProcShared {
                 inner: Mutex::new(Inner { peers: vec![None] }),
-                progress: OnceCell::new(),
+                progress: progress::LaneBank::new(),
             }),
             cfg,
         };
@@ -441,7 +439,7 @@ where
             n,
             shared: Arc::new(ProcShared {
                 inner: Mutex::new(Inner { peers }),
-                progress: OnceCell::new(),
+                progress: progress::LaneBank::new(),
             }),
             cfg,
         }

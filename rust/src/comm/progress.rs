@@ -12,22 +12,33 @@
 //! background collective exchange can never match — or steal — the
 //! application thread's messages.
 //!
-//! Two invariants make this safe:
+//! Three invariants make this safe:
 //!
-//! * **FIFO per rank.** Each rank's engine executes submitted jobs in
+//! * **FIFO per lane.** Each lane's engine executes submitted jobs in
 //!   submission order. MPI already requires every rank to issue
 //!   collective operations in the same order, so the background
 //!   collectives of a world match up exactly like foreground ones.
-//! * **Disjoint tag bands.** The shifted endpoint moves every tag by
-//!   `PROGRESS_TAG_SHIFT`, placing internal-protocol tags below the
-//!   bands used by the application thread, user tags, and every
-//!   [`SubComm`](super::SubComm) context salt. A blocking collective on
-//!   the application thread can therefore overlap a background exchange
-//!   on the same mailboxes/sockets without interference. The shifted
-//!   endpoint also never touches transport fast paths with no sender
-//!   identity (e.g. the thread transport's native barrier): it inherits
-//!   the default message-based collectives, which route through the
-//!   shifted tags.
+//! * **Deterministic lane assignment.** With `jpio_progress_threads > 1`
+//!   a rank owns several lanes and successive collective operations
+//!   round-robin across them ([`crate::io::file::File`] keeps the per-file
+//!   operation counter). Because every rank issues collectives in the
+//!   same order, operation `k` lands on the *same* lane index everywhere
+//!   and the per-lane FIFO keeps its exchange matched, while operations
+//!   on different lanes pipeline. Cross-lane effects that must stay
+//!   ordered (the storage phase) are sequenced by the engine's
+//!   [`OpSequencer`](crate::io::engine::OpSequencer) tickets.
+//! * **Disjoint tag bands.** Lane `l`'s endpoint moves every tag by
+//!   [`lane_shift`]`(l)`, placing internal-protocol tags below the bands
+//!   used by the application thread, user tags, every
+//!   [`SubComm`](super::SubComm) context salt, and every *other* lane. A
+//!   blocking collective on the application thread can therefore overlap
+//!   any number of background exchanges on the same mailboxes/sockets
+//!   without interference.
+//!
+//! The thread transport hands its lanes *native* banded endpoints
+//! (tag-shifted shared mailboxes plus a per-lane shared-memory barrier —
+//! the same fast path the app lane gets) instead of a generic wrapper;
+//! the process transport wraps its socket endpoint in [`shifted_lane`].
 //!
 //! Transports opt in via [`Comm::progress_lane`]; the default is `None`
 //! (e.g. [`SubComm`](super::SubComm) borrows its parent and cannot hand
@@ -37,23 +48,42 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-use once_cell::sync::OnceCell;
-
 use super::Comm;
 
-/// Tag displacement of the progress lane. Chosen so that shifted
-/// internal tags (near `i32::MIN/2`) stay above `i32::MIN`, and so the
-/// shift is not a multiple of the sub-communicator context salt
-/// (`(context+1) * 2^20`): no salted sub-communicator band and no user
-/// tag can alias progress-lane traffic.
+/// Tag displacement of the first progress lane. Chosen so that shifted
+/// internal tags (near `i32::MIN/2`) stay above `i32::MIN` for every
+/// lane up to [`MAX_LANES`], and so that no shift is a multiple of the
+/// sub-communicator context salt (`(context+1) * 2^20`): no salted
+/// sub-communicator band and no user tag can alias progress-lane
+/// traffic.
 const PROGRESS_TAG_SHIFT: i32 = 300 * (1 << 20) + 12_345;
 
-/// A communicator endpoint whose every tag is displaced into the
+/// Tag-band stride between adjacent lanes. Lane bands keep the
+/// `+ 12_345` residue mod `2^20`, so they stay clear of every context
+/// salt band no matter the lane index.
+const LANE_TAG_STRIDE: i32 = 1 << 20;
+
+/// Upper bound on per-rank progress lanes (`jpio_progress_threads` is
+/// clamped here). Keeps the highest lane band comfortably above
+/// `i32::MIN` when displacing the internal tag range.
+pub const MAX_LANES: usize = 64;
+
+/// The tag displacement of lane `lane` (lane 0 is the classic progress
+/// band).
+pub(crate) fn lane_shift(lane: usize) -> i32 {
+    assert!(lane < MAX_LANES, "progress lane {lane} beyond MAX_LANES");
+    PROGRESS_TAG_SHIFT + (lane as i32) * LANE_TAG_STRIDE
+}
+
+/// A communicator endpoint whose every tag is displaced into one lane's
 /// progress band. Collectives come from the `Comm` defaults, so they
 /// route through the shifted `send`/`recv` (never through transport
-/// fast paths that assume application-thread identity).
+/// fast paths that assume application-thread identity — transports that
+/// can offer the lane a real fast path build a native banded endpoint
+/// instead of this wrapper).
 struct ShiftedComm {
     inner: Arc<dyn Comm>,
+    shift: i32,
 }
 
 impl Comm for ShiftedComm {
@@ -66,23 +96,29 @@ impl Comm for ShiftedComm {
     }
 
     fn send(&self, dest: usize, tag: i32, data: &[u8]) {
-        self.inner.send(dest, tag - PROGRESS_TAG_SHIFT, data);
+        self.inner.send(dest, tag - self.shift, data);
     }
 
     fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
-        self.inner.recv(src, tag - PROGRESS_TAG_SHIFT)
+        self.inner.recv(src, tag - self.shift)
     }
 
     fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
-        self.inner.try_recv(src, tag - PROGRESS_TAG_SHIFT)
+        self.inner.try_recv(src, tag - self.shift)
     }
 }
 
-/// Wrap a `'static` per-rank endpoint so all of its traffic lives in the
-/// progress tag band. Transports call this from their
-/// [`Comm::progress_lane`] implementation.
+/// Wrap a `'static` per-rank endpoint so all of its traffic lives in
+/// lane 0's progress tag band.
 pub fn shifted(inner: Arc<dyn Comm>) -> Arc<dyn Comm> {
-    Arc::new(ShiftedComm { inner })
+    shifted_lane(inner, 0)
+}
+
+/// Wrap a `'static` per-rank endpoint into lane `lane`'s tag band.
+/// Transports without a native banded endpoint call this from their
+/// [`Comm::progress_lane_at`] implementation.
+pub fn shifted_lane(inner: Arc<dyn Comm>, lane: usize) -> Arc<dyn Comm> {
+    Arc::new(ShiftedComm { inner, shift: lane_shift(lane) })
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -168,31 +204,55 @@ impl ProgressEngine {
 }
 
 /// One rank's progress lane: the FIFO background executor plus the
-/// `'static` shifted endpoint its jobs exchange messages through.
+/// `'static` banded endpoint its jobs exchange messages through.
 ///
 /// The endpoint is constructed fresh per call (it holds the world
 /// alive only as long as a job captures it); the engine is the world's
-/// lazily-spawned singleton for this rank.
+/// lazily-spawned singleton for this (rank, lane) pair.
 pub struct ProgressLane {
-    /// The rank's background executor.
+    /// The lane's background executor.
     pub engine: Arc<ProgressEngine>,
-    /// A `'static` endpoint onto the same rank, in the progress tag band.
+    /// A `'static` endpoint onto the same rank, in the lane's tag band.
     pub comm: Arc<dyn Comm>,
 }
 
-/// Build a rank's lane from its world slot: spawn the engine on first
-/// use (one per rank, `jpio-progress-<rank>`), wrap the fresh `'static`
-/// `endpoint` into the shifted tag band. The one place the lane
-/// contract lives — both transports delegate here.
+/// One rank's bank of lane engines, spawned lazily per lane index
+/// (thread `jpio-progress-<rank>.<lane>`). Engines hold only a job
+/// sender, never the world, so idle banks tear down with the world.
+pub(crate) struct LaneBank {
+    engines: Mutex<Vec<Arc<ProgressEngine>>>,
+}
+
+impl LaneBank {
+    /// An empty bank (no threads until the first lane is requested).
+    pub(crate) fn new() -> LaneBank {
+        LaneBank { engines: Mutex::new(Vec::new()) }
+    }
+
+    /// The engine of lane `lane`, spawning it (and any lower lanes) on
+    /// first use.
+    pub(crate) fn engine(&self, rank: usize, lane: usize) -> Arc<ProgressEngine> {
+        assert!(lane < MAX_LANES, "progress lane {lane} beyond MAX_LANES");
+        let mut v = self.engines.lock().unwrap();
+        while v.len() <= lane {
+            let l = v.len();
+            v.push(Arc::new(ProgressEngine::spawn(format!("jpio-progress-{rank}.{l}"))));
+        }
+        v[lane].clone()
+    }
+}
+
+/// Build a rank's lane from its world bank: spawn the engine on first
+/// use, wrap the fresh `'static` `endpoint` into the lane's tag band.
+/// Transports with a native banded endpoint (the thread transport)
+/// build the [`ProgressLane`] themselves instead.
 pub(crate) fn lane(
-    slot: &OnceCell<Arc<ProgressEngine>>,
+    bank: &LaneBank,
     rank: usize,
+    lane: usize,
     endpoint: Arc<dyn Comm>,
 ) -> ProgressLane {
-    let engine = slot
-        .get_or_init(|| Arc::new(ProgressEngine::spawn(format!("jpio-progress-{rank}"))))
-        .clone();
-    ProgressLane { engine, comm: shifted(endpoint) }
+    ProgressLane { engine: bank.engine(rank, lane), comm: shifted_lane(endpoint, lane) }
 }
 
 #[cfg(test)]

@@ -8,9 +8,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 
-use once_cell::sync::OnceCell;
-
-use super::progress::{self, ProgressEngine, ProgressLane};
+use super::progress::{self, ProgressLane};
 use super::Comm;
 
 struct Msg {
@@ -28,18 +26,41 @@ struct Shared {
     n: usize,
     mailboxes: Vec<Mailbox>,
     barrier: Barrier,
-    /// Per-rank progress engines, spawned lazily on first
-    /// [`Comm::progress_lane`] use. The engine holds only a job sender
+    /// Native shared-memory barriers for the progress lanes, created on
+    /// demand per lane index. Each lane's engines are FIFO (at most one
+    /// job per rank per lane at a time), so a dedicated n-thread barrier
+    /// per lane is exactly the app-lane fast path, replayed per band.
+    lane_barriers: Mutex<Vec<Arc<Barrier>>>,
+    /// Per-rank banks of progress-lane engines, spawned lazily on first
+    /// [`Comm::progress_lane_at`] use. Engines hold only a job sender
     /// (never the `Shared` itself), so a world with idle lanes tears
     /// down normally: dropping the last handle drops the engines, which
     /// ends the worker threads.
-    progress: Vec<OnceCell<Arc<ProgressEngine>>>,
+    progress: Vec<progress::LaneBank>,
+}
+
+impl Shared {
+    fn lane_barrier(&self, lane: usize) -> Arc<Barrier> {
+        let mut v = self.lane_barriers.lock().unwrap();
+        while v.len() <= lane {
+            v.push(Arc::new(Barrier::new(self.n)));
+        }
+        v[lane].clone()
+    }
 }
 
 /// A thread-transport communicator handle; one per rank.
 pub struct ThreadComm {
     rank: usize,
     shared: Arc<Shared>,
+    /// Tag displacement of this endpoint (0 for the application lane;
+    /// [`progress::lane_shift`] for a progress lane's native endpoint,
+    /// keeping each lane's traffic in its own band of the same shared
+    /// mailboxes).
+    band: i32,
+    /// The lane's dedicated shared-memory barrier (`None` = the app
+    /// lane, which uses the world barrier).
+    lane_barrier: Option<Arc<Barrier>>,
 }
 
 impl ThreadComm {
@@ -53,10 +74,11 @@ impl ThreadComm {
                 .map(|_| Mailbox { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
                 .collect(),
             barrier: Barrier::new(n),
-            progress: (0..n).map(|_| OnceCell::new()).collect(),
+            lane_barriers: Mutex::new(Vec::new()),
+            progress: (0..n).map(|_| progress::LaneBank::new()).collect(),
         });
         (0..n)
-            .map(|rank| ThreadComm { rank, shared: shared.clone() })
+            .map(|rank| ThreadComm { rank, shared: shared.clone(), band: 0, lane_barrier: None })
             .collect()
     }
 }
@@ -74,11 +96,12 @@ impl Comm for ThreadComm {
         assert!(dest < self.shared.n, "send to rank {dest} of {}", self.shared.n);
         let mb = &self.shared.mailboxes[dest];
         let mut q = mb.q.lock().unwrap();
-        q.push_back(Msg { src: self.rank, tag, data: data.to_vec() });
+        q.push_back(Msg { src: self.rank, tag: tag - self.band, data: data.to_vec() });
         mb.cv.notify_all();
     }
 
     fn recv(&self, src: usize, tag: i32) -> Vec<u8> {
+        let tag = tag - self.band;
         let mb = &self.shared.mailboxes[self.rank];
         let mut q = mb.q.lock().unwrap();
         loop {
@@ -90,6 +113,7 @@ impl Comm for ThreadComm {
     }
 
     fn try_recv(&self, src: usize, tag: i32) -> Option<Vec<u8>> {
+        let tag = tag - self.band;
         let mb = &self.shared.mailboxes[self.rank];
         let mut q = mb.q.lock().unwrap();
         let pos = q.iter().position(|m| m.src == src && m.tag == tag)?;
@@ -97,17 +121,37 @@ impl Comm for ThreadComm {
     }
 
     fn barrier(&self) {
-        self.shared.barrier.wait();
+        // Native shared-memory barrier — the app lane uses the world
+        // barrier, each progress lane its own (FIFO engines guarantee at
+        // most one collective per lane at a time, so the lanes' barriers
+        // never mix generations with the app's or each other's).
+        match &self.lane_barrier {
+            None => {
+                self.shared.barrier.wait();
+            }
+            Some(b) => {
+                b.wait();
+            }
+        }
     }
 
-    fn progress_lane(&self) -> Option<ProgressLane> {
+    fn progress_lane_at(&self, lane: usize) -> Option<ProgressLane> {
         // A fresh endpoint per call: only in-flight jobs keep the world
-        // alive, never the engine stored inside it. The shifted wrapper
-        // keeps the lane's collectives off the native barrier (which has
-        // no sender identity) and out of the app thread's tag space.
-        let endpoint: Arc<dyn Comm> =
-            Arc::new(ThreadComm { rank: self.rank, shared: self.shared.clone() });
-        Some(progress::lane(&self.shared.progress[self.rank], self.rank, endpoint))
+        // alive, never the engine stored inside it. The endpoint is a
+        // *native* banded ThreadComm — same shared mailboxes, tags
+        // displaced into the lane's band, plus the lane's own native
+        // barrier — so the progress band gets the full shared-memory
+        // fast path instead of generic message-based collectives.
+        let endpoint: Arc<dyn Comm> = Arc::new(ThreadComm {
+            rank: self.rank,
+            shared: self.shared.clone(),
+            band: progress::lane_shift(lane),
+            lane_barrier: Some(self.shared.lane_barrier(lane)),
+        });
+        Some(ProgressLane {
+            engine: self.shared.progress[self.rank].engine(self.rank, lane),
+            comm: endpoint,
+        })
     }
 }
 

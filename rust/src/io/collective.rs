@@ -25,20 +25,35 @@
 //! thread-agnostic phase drivers [`exchange_write`]/[`collective_read`])
 //! plus the thin public wrappers that name their matrix cell.
 //!
+//! The exchange alltoall picks its schedule from the
+//! `jpio_alltoall_algorithm` hint ([`AlltoallAlgorithm`]): `linear` for
+//! small worlds, `pairwise` or `bruck` past the `auto` rank threshold,
+//! with the rank-to-self payload always *moved*, never serialized. On
+//! plan-executing backends the I/O phase hands the exchanged pieces
+//! straight to [`StorageFile::write_pieces`](crate::storage::StorageFile)
+//! — no payload-sized staging copy; the `staging_copy_bytes` counter
+//! records what the staged fallback still copies.
+//!
 //! *Which thread* runs each phase depends on the routine:
 //!
 //! * blocking `*_ALL`: both phases on the caller;
-//! * split collectives: exchange on the caller at `BEGIN`, storage-only
-//!   I/O phase on the request engine (§7.2.9.1 double buffering);
+//! * split collectives: when the world has a progress lane
+//!   ([`Comm::progress_lane`]), `BEGIN` registers the op and *both*
+//!   phases run on the lane; without one, exchange on the caller at
+//!   `BEGIN` and storage-only I/O phase on the request engine
+//!   (§7.2.9.1 double buffering);
 //! * MPI-3.1 nonblocking collectives (`iread_(at_)all` /
-//!   `iwrite_(at_)all`): when the world has a progress lane
-//!   ([`Comm::progress_lane`]), *both* phases — including the reply
-//!   exchange a collective read needs — run on the rank's progress
-//!   thread, so the call returns after registering the operation and
-//!   the whole collective overlaps computation (DESIGN.md §2). Without
-//!   a lane (sub-communicators, forked inheritors, or
+//!   `iwrite_(at_)all`): when the world has a progress lane, *both*
+//!   phases — including the reply exchange a collective read needs —
+//!   run on the rank's progress thread, so the call returns after
+//!   registering the operation and the whole collective overlaps
+//!   computation (DESIGN.md §2). With `jpio_progress_threads > 1`
+//!   independent collectives pipeline round-robin across lanes while a
+//!   per-file sequencer keeps their storage phases in issue order.
+//!   Without a lane (sub-communicators, forked inheritors, or
 //!   `jpio_progress_threads = 0`) they fall back to the split
-//!   collectives' contract: exchange on the caller, I/O on the engine.
+//!   collectives' no-lane contract: exchange on the caller, I/O on the
+//!   engine.
 //!
 //! ## Stripe-aligned file domains
 //!
@@ -62,7 +77,7 @@
 //! stripe-cyclic default of rank `i`.
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
-use crate::comm::{Comm, ReduceOp, Status};
+use crate::comm::{AlltoallAlgorithm, Comm, ReduceOp, Status};
 use crate::io::engine::Request;
 use crate::io::errors::Result;
 use crate::io::file::File;
@@ -197,6 +212,9 @@ pub(crate) struct CbParams {
     /// Parsed `cb_config_list`: explicit aggregator-rank placement per
     /// file domain; `None` falls back to rank `i` aggregating domain `i`.
     pub config_list: Option<Vec<usize>>,
+    /// `jpio_alltoall_algorithm`: exchange algorithm for the two-phase
+    /// alltoalls (auto/linear/pairwise/bruck).
+    pub alltoall_algo: AlltoallAlgorithm,
 }
 
 impl CbParams {
@@ -361,7 +379,9 @@ pub(crate) fn exchange_write(
     let msgs: Vec<Vec<u8>> =
         per_rank.iter().map(|pieces| encode_write_msg(pieces, payload)).collect();
     let t0 = ctx.stats.start();
-    let inbound = comm.alltoall(&msgs);
+    // `alltoall_owned` moves the messages into the exchange, so the
+    // rank-to-self slot changes hands without a serialize/copy cycle.
+    let inbound = comm.alltoall_owned(msgs, cb.alltoall_algo);
     ctx.stats.record(Phase::Exchange, t0);
     Ok((WriteIoWork { inbound, cb_buffer: cb.staging_bytes() }, payload.len()))
 }
@@ -401,7 +421,7 @@ pub(crate) fn collective_read(
         reqs.push(msg);
     }
     let t0 = ctx.stats.start();
-    let inbound = comm.alltoall(&reqs);
+    let inbound = comm.alltoall_owned(reqs, cb.alltoall_algo);
     ctx.stats.record(Phase::Exchange, t0);
 
     // Aggregator I/O phase: merge all requested intervals, then read
@@ -468,7 +488,7 @@ pub(crate) fn collective_read(
     )?;
     debug_assert_eq!(si, scatter.len(), "every requested run must be sliced into a reply");
     let t0 = ctx.stats.start();
-    let mut answers = comm.alltoall(&replies);
+    let mut answers = comm.alltoall_owned(replies, cb.alltoall_algo);
     ctx.stats.record(Phase::Exchange, t0);
 
     // Reassemble my payload from the per-aggregator answers; compute
@@ -493,7 +513,26 @@ pub(crate) fn collective_read(
 
 impl File<'_> {
     pub(crate) fn cb_params(&self) -> CbParams {
-        let info = self.info.lock().unwrap();
+        self.cb_params_with(None)
+    }
+
+    /// [`CbParams`] with an optional per-operation hint overlay: the
+    /// overlay's keys shadow the file's Info for this one snapshot, so a
+    /// single operation can switch e.g. the exchange algorithm or the
+    /// staging-round size without mutating the handle (the per-op hints
+    /// of [`File::submit_write_with`]/[`File::submit_read_with`]).
+    pub(crate) fn cb_params_with(&self, overlay: Option<&Info>) -> CbParams {
+        let merged;
+        let guard = self.info.lock().unwrap();
+        let info: &Info = match overlay {
+            Some(over) => {
+                let mut m = guard.clone();
+                m.merge(over);
+                merged = m;
+                &merged
+            }
+            None => &*guard,
+        };
         CbParams {
             nodes: info.get_usize(keys::CB_NODES),
             buffer: info.get_usize(keys::CB_BUFFER_SIZE),
@@ -503,6 +542,7 @@ impl File<'_> {
             config_list: info
                 .get(keys::CB_CONFIG_LIST)
                 .and_then(|spec| parse_cb_config_list(spec, self.comm.size())),
+            alltoall_algo: AlltoallAlgorithm::parse(info.get(keys::ALLTOALL_ALGORITHM)),
         }
     }
 
@@ -784,6 +824,7 @@ mod tests {
             enabled: true,
             stripe_align: true,
             config_list: None,
+            alltoall_algo: AlltoallAlgorithm::Auto,
         };
         // Default: stripe-cyclic identity placement.
         assert_eq!(aggregator_ranks(&base, 4), vec![0, 1, 2, 3]);

@@ -174,6 +174,85 @@ where
     Request { rx: None, done: Some(done), failed: None, stats: None }
 }
 
+// ----------------------------------------------------------------------
+// Per-op ordering across progress lanes
+// ----------------------------------------------------------------------
+
+/// Total order over the operations a file hands to its progress lanes.
+///
+/// With `jpio_progress_threads > 1`, successive collective operations
+/// round-robin across lanes and their *exchange* phases pipeline freely
+/// (disjoint tag bands). Their *storage* phases, however, must still
+/// apply in issue order — two operations touching the same bytes used to
+/// be serialized by the single lane's FIFO, and requests must keep that
+/// deterministic outcome. Each lane-bound operation therefore draws an
+/// [`OpTicket`] at submit time (on the caller, in issue order); the lane
+/// job calls [`OpTicket::wait_turn`] before its storage phase and the
+/// ticket releases on drop, so ticket `k+1`'s storage starts only after
+/// ticket `k` finished — while both exchanges ran concurrently.
+///
+/// Deadlock-free by construction: tickets are issued round-robin in
+/// increasing order, each lane executes its tickets FIFO, so a ticket
+/// only ever waits on strictly smaller tickets that are either already
+/// running on another lane or ahead of it in its own lane's queue.
+pub(crate) struct OpSequencer {
+    next: std::sync::atomic::AtomicU64,
+    done: Mutex<u64>,
+    cv: std::sync::Condvar,
+}
+
+impl OpSequencer {
+    /// A fresh sequencer (one per file handle).
+    pub(crate) fn new() -> OpSequencer {
+        OpSequencer {
+            next: std::sync::atomic::AtomicU64::new(0),
+            done: Mutex::new(0),
+            cv: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Draw the next ticket. Must be called on the submitting thread, in
+    /// operation issue order.
+    pub(crate) fn issue(self: &std::sync::Arc<Self>) -> OpTicket {
+        let ticket = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        OpTicket { seq: self.clone(), ticket, waited: false }
+    }
+}
+
+/// One operation's place in its file's cross-lane order — see
+/// [`OpSequencer`]. Dropping the ticket (normally, on error, or during a
+/// panic unwind of the lane job) releases the turn to the next
+/// operation, so a failed exchange can never wedge the sequence.
+pub(crate) struct OpTicket {
+    seq: std::sync::Arc<OpSequencer>,
+    ticket: u64,
+    waited: bool,
+}
+
+impl OpTicket {
+    /// Block until every earlier ticket has been released.
+    pub(crate) fn wait_turn(&mut self) {
+        if self.waited {
+            return;
+        }
+        let mut done = self.seq.done.lock().unwrap();
+        while *done != self.ticket {
+            done = self.seq.cv.wait(done).unwrap();
+        }
+        self.waited = true;
+    }
+}
+
+impl Drop for OpTicket {
+    fn drop(&mut self) {
+        // Waiting first keeps releases in ticket order, which is what
+        // lets `wait_turn` track a single low-water mark.
+        self.wait_turn();
+        *self.seq.done.lock().unwrap() += 1;
+        self.seq.cv.notify_all();
+    }
+}
+
 /// A nonblocking operation handle (`mpj.Request`).
 ///
 /// `T` is the buffer type carried through the operation (`Vec<i32>` for a
@@ -357,6 +436,31 @@ mod tests {
     fn fanout_single_job_runs_inline() {
         let out = fanout(vec![|| 41 + 1]);
         assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn op_tickets_serialize_guarded_sections_in_issue_order() {
+        use std::sync::{Arc, Mutex};
+        let seq = Arc::new(OpSequencer::new());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut t0 = seq.issue();
+        let mut t1 = seq.issue();
+        let t2 = seq.issue(); // released by drop alone, no explicit wait
+        let h = {
+            let log = log.clone();
+            std::thread::spawn(move || {
+                t1.wait_turn(); // must block until t0 is released
+                log.lock().unwrap().push(1);
+                drop(t1);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        t0.wait_turn(); // front of the line: returns immediately
+        log.lock().unwrap().push(0);
+        drop(t0);
+        h.join().unwrap();
+        drop(t2);
+        assert_eq!(*log.lock().unwrap(), vec![0, 1]);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! live in the sibling modules (`access`, `collective`, `shared`,
 //! `split`) as `impl File` blocks.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::comm::datatype::{Datatype, Offset};
@@ -100,6 +100,17 @@ pub struct File<'c> {
     /// The collectively reduced stats report, filled at close when
     /// `jpio_stats` is set; [`File::stats`] serves it afterwards.
     pub(crate) reduced_stats: Mutex<Option<StatsReport>>,
+    /// Round-robin lane cursor for `jpio_progress_threads > 1`: the k-th
+    /// lane-bound collective on this handle runs on lane `k % nlanes`.
+    /// MPI requires every rank to issue collectives in the same order, so
+    /// the cursors agree across ranks and matched collectives always land
+    /// on the same lane everywhere.
+    pub(crate) lane_seq: AtomicUsize,
+    /// Cross-lane storage-phase sequencer
+    /// ([`OpSequencer`](crate::io::engine::OpSequencer)): exchanges of
+    /// lane-bound collectives pipeline freely across lanes while their
+    /// storage phases run in operation issue order.
+    pub(crate) lane_order: Arc<crate::io::engine::OpSequencer>,
     pub(crate) closed: AtomicBool,
 }
 
@@ -257,6 +268,8 @@ impl<'c> File<'c> {
             plan_cache: PlanCache::new(),
             stats,
             reduced_stats: Mutex::new(None),
+            lane_seq: AtomicUsize::new(0),
+            lane_order: Arc::new(crate::io::engine::OpSequencer::new()),
             closed: AtomicBool::new(false),
         })
     }

@@ -63,13 +63,26 @@ pub mod keys {
     /// striped storage, giving each aggregator a disjoint server subset:
     /// `true` (default) | `false`. Ignored on unstriped backends.
     pub const CB_STRIPE_ALIGN: &str = "jpio_cb_stripe_align";
-    /// Per-world progress threads driving the MPI-3.1 nonblocking
-    /// collectives entirely off the caller: `1` (default; one progress
-    /// thread per rank, spawned lazily) | `0` (disable — nonblocking
-    /// collectives run their exchange on the calling thread like the
-    /// split collectives). Collective: every rank of a file must agree,
-    /// like all collective-buffering hints. Values above 1 behave as 1.
+    /// Per-world progress threads (lanes) driving the MPI-3.1
+    /// nonblocking and split collectives entirely off the caller: `1`
+    /// (default; one progress thread per rank, spawned lazily) | `0`
+    /// (disable — nonblocking collectives run their exchange on the
+    /// calling thread) | `k > 1` (k lanes per rank; successive collective
+    /// operations round-robin across lanes, each in its own disjoint tag
+    /// band, so independent operations pipeline while per-op ordering is
+    /// preserved by the engine's operation sequencer). Values above the
+    /// lane cap ([`crate::comm::progress::MAX_LANES`]) are clamped.
+    /// Collective: every rank of a file must agree, like all
+    /// collective-buffering hints — lane assignment is derived from the
+    /// collective issue order, which MPI already requires to match.
     pub const PROGRESS_THREADS: &str = "jpio_progress_threads";
+    /// All-to-all algorithm for the two-phase exchange:
+    /// `auto` (default; rank-count/message-size threshold) | `linear` |
+    /// `pairwise` | `bruck`. See
+    /// [`crate::comm::AlltoallAlgorithm`] for the selection table.
+    /// Collective: every rank must agree (the algorithms are matched
+    /// schedules). Malformed values behave as `auto`.
+    pub const ALLTOALL_ALGORITHM: &str = "jpio_alltoall_algorithm";
     /// Staging-buffer (round) size in bytes for the aggregator
     /// double-buffer pipeline — the unit at which exchange decode of one
     /// round overlaps storage I/O of the previous round in the two-phase

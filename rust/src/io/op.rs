@@ -49,7 +49,7 @@ use crate::io::collective::{self, CbParams, WriteIoWork};
 use crate::io::engine::{self, Request};
 use crate::io::errors::{err_arg, err_io, err_request, err_unsupported_op, Result};
 use crate::io::file::{amode, File, SplitPending};
-use crate::io::hints::keys;
+use crate::io::hints::{keys, Info};
 use crate::io::plan::IoPlan;
 use crate::io::schedule::IoScheduler;
 use crate::io::stats::{FileStats, Phase};
@@ -686,6 +686,21 @@ impl File<'_> {
     /// an [`AccessOp`] and lands here. Split `*_end` ops ignore `buf`
     /// (the data was bound at BEGIN; pass an empty slice).
     pub fn submit_write(&self, op: &AccessOp, buf: &(impl IoBuf + ?Sized)) -> Result<Submission> {
+        self.submit_write_with(op, buf, None)
+    }
+
+    /// [`File::submit_write`] with a per-operation hint overlay: the
+    /// overlay's keys shadow the handle's Info for this one submission
+    /// (intended for A/B-ing `jpio_alltoall_algorithm` and
+    /// `jpio_staging_buffer_size` without reopening the file; any
+    /// collective-buffering hint works). Like the hints they override,
+    /// overlays on collective cells must match across ranks.
+    pub fn submit_write_with(
+        &self,
+        op: &AccessOp,
+        buf: &(impl IoBuf + ?Sized),
+        hints: Option<&Info>,
+    ) -> Result<Submission> {
         if let Synchronism::Split(SplitPhase::End) = op.synchronism {
             // END binds no buffer or offset, but still runs the
             // validation prologue: illegal End cells are MPI_ERR_ARG
@@ -725,7 +740,7 @@ impl File<'_> {
                 Ok(Submission::Begun)
             }
             (Coordination::Collective, Synchronism::Blocking) => {
-                let cb = self.cb_params();
+                let cb = self.cb_params_with(hints);
                 let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
                 IoScheduler::write_phase(&ctx, work)?;
                 self.comm.barrier();
@@ -733,7 +748,7 @@ impl File<'_> {
                 Ok(Submission::Done(Status::of_bytes(bytes)))
             }
             (Coordination::Collective, Synchronism::Nonblocking) => {
-                let cb = self.cb_params();
+                let cb = self.cb_params_with(hints);
                 if !cb.enabled || self.comm.size() == 1 {
                     // No aggregation: the whole operation runs on the
                     // engine, like an independent nonblocking write.
@@ -747,8 +762,11 @@ impl File<'_> {
                     // Truly asynchronous: exchange *and* I/O phases run
                     // on the rank's progress thread; this call returns
                     // after registering the op, before any byte moves.
+                    // The ticket keeps storage phases in issue order
+                    // across lanes while exchanges pipeline freely.
                     let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
                     let payload = payload.into_owned();
+                    let mut ticket = self.lane_order.issue();
                     let (req, tx) = Request::pending();
                     let req = req.instrument(&self.stats);
                     let q0 = self.stats.start();
@@ -760,23 +778,61 @@ impl File<'_> {
                         let res =
                             collective::exchange_write(comm.as_ref(), &ctx, &cb, &plan, &payload)
                                 .and_then(|(work, bytes)| {
+                                    ticket.wait_turn();
                                     IoScheduler::write_phase(&ctx, work)?;
                                     Ok(Status::of_bytes(bytes))
                                 });
+                        drop(ticket); // release the turn before completion
                         let _ = tx.send((res, ()));
                     });
                     return Ok(Submission::Queued(req));
                 }
                 // No progress lane (sub-communicator, disabled by hint):
                 // exchange phase on the caller, I/O phase overlaps on
-                // the engine — the split collectives' contract.
+                // the engine — the split collectives' lane-less contract.
                 let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
                 Ok(Submission::Queued(
                     IoScheduler::write_phase_async(ctx, work, bytes).instrument(&self.stats),
                 ))
             }
             (Coordination::Collective, Synchronism::Split(SplitPhase::Begin)) => {
-                let cb = self.cb_params();
+                let cb = self.cb_params_with(hints);
+                if cb.enabled && self.comm.size() > 1 {
+                    if let Some(ProgressLane { engine, comm }) = self.progress_lane() {
+                        // BEGIN is truly immediate: both two-phase halves
+                        // run on the progress lane, like the MPI-3.1
+                        // nonblocking collectives; END waits for the
+                        // stashed request and adds the collective
+                        // completion barrier.
+                        let plan = self.plan_for(&ctx, Direction::Write, off, payload.len())?;
+                        let payload = payload.into_owned();
+                        let mut ticket = self.lane_order.issue();
+                        let (req, tx) = Request::pending();
+                        let req = req.instrument(&self.stats);
+                        let q0 = self.stats.start();
+                        engine.submit(move || {
+                            ctx.stats.record(Phase::Queue, q0);
+                            let res = collective::exchange_write(
+                                comm.as_ref(),
+                                &ctx,
+                                &cb,
+                                &plan,
+                                &payload,
+                            )
+                            .and_then(|(work, bytes)| {
+                                ticket.wait_turn();
+                                IoScheduler::write_phase(&ctx, work)?;
+                                Ok(Status::of_bytes(bytes))
+                            });
+                            drop(ticket);
+                            let _ = tx.send((res, ()));
+                        });
+                        self.stash(SplitPending::Write { kind: op.end_kind(), req });
+                        return Ok(Submission::Begun);
+                    }
+                }
+                // Lane-less fallback: exchange on the caller, I/O phase
+                // overlaps on the engine (§7.2.9.1 double buffering).
                 let (work, bytes) = self.exchange_write(&ctx, &cb, off, &payload)?;
                 let req =
                     IoScheduler::write_phase_async(ctx, work, bytes).instrument(&self.stats);
@@ -813,6 +869,17 @@ impl File<'_> {
         op: &AccessOp,
         buf: &mut (impl IoBufMut + ?Sized),
     ) -> Result<Status> {
+        self.submit_read_with(op, buf, None)
+    }
+
+    /// [`File::submit_read`] with a per-operation hint overlay — see
+    /// [`File::submit_write_with`].
+    pub fn submit_read_with(
+        &self,
+        op: &AccessOp,
+        buf: &mut (impl IoBufMut + ?Sized),
+        hints: Option<&Info>,
+    ) -> Result<Status> {
         match op.synchronism {
             Synchronism::Split(SplitPhase::End) => {
                 self.prologue(op)?;
@@ -829,7 +896,7 @@ impl File<'_> {
         let payload_len = op.payload_len();
         if let Synchronism::Split(SplitPhase::Begin) = op.synchronism {
             let (off, _) = self.resolve_offset(op, &ctx.view)?;
-            self.begin_read(op, ctx, off, payload_len)?;
+            self.begin_read(op, ctx, off, payload_len, hints)?;
             return Ok(Status::of_bytes(0));
         }
         // Blocking. Memory-side arguments are pre-checked for
@@ -845,7 +912,7 @@ impl File<'_> {
         }
         let (off, advance) = self.resolve_offset(op, &ctx.view)?;
         let got = if op.coordination == Coordination::Collective {
-            let cb = self.cb_params();
+            let cb = self.cb_params_with(hints);
             let mut payload = vec![0u8; payload_len];
             let got = self.collective_read(&ctx, &cb, off, &mut payload)?;
             unpack_payload(buf, op.buf_offset, op.count, &op.datatype, &payload, got)?;
@@ -878,6 +945,21 @@ impl File<'_> {
         T: Send + 'static,
         [T]: IoBufMut,
     {
+        self.submit_read_owned_with(op, buf, None)
+    }
+
+    /// [`File::submit_read_owned`] with a per-operation hint overlay —
+    /// see [`File::submit_write_with`].
+    pub fn submit_read_owned_with<T>(
+        &self,
+        op: &AccessOp,
+        buf: Vec<T>,
+        hints: Option<&Info>,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
         if !matches!(op.synchronism, Synchronism::Nonblocking) {
             return Err(err_arg("submit_read_owned handles only nonblocking reads"));
         }
@@ -886,21 +968,27 @@ impl File<'_> {
         let payload_len = op.payload_len();
         let (buf_offset, count, dt) = (op.buf_offset, op.count, op.datatype.clone());
         if op.coordination == Coordination::Collective {
-            let cb = self.cb_params();
+            let cb = self.cb_params_with(hints);
             if cb.enabled && self.comm.size() > 1 {
                 let (off, _) = self.resolve_offset(op, &ctx.view)?;
                 if let Some(ProgressLane { engine, comm }) = self.progress_lane() {
                     // Truly asynchronous read: request exchange,
                     // aggregation, reply exchange, and the scatter into
                     // `buf` all run on the rank's progress thread; this
-                    // call returns before any byte moves.
+                    // call returns before any byte moves. The ticket
+                    // holds the whole read behind earlier operations'
+                    // storage phases (a read's request exchange, storage
+                    // and reply exchange interleave inside
+                    // `collective_read`, so the gate sits in front).
                     let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+                    let mut ticket = self.lane_order.issue();
                     let (req, tx) = Request::pending();
                     let req = req.instrument(&self.stats);
                     let q0 = self.stats.start();
                     engine.submit(move || {
                         // Queue latency: submit → job start on the lane.
                         ctx.stats.record(Phase::Queue, q0);
+                        ticket.wait_turn();
                         let mut buf = buf;
                         let mut payload = vec![0u8; payload_len];
                         let res = collective::collective_read(
@@ -958,19 +1046,50 @@ impl File<'_> {
         .instrument(&self.stats))
     }
 
-    /// Start a split read: collective reads finish their aggregation here
-    /// (the reply exchange needs the communicator) and stash a ready
-    /// payload; ordered reads overlap on the engine.
+    /// Start a split read. Collective reads route through the progress
+    /// lane when the transport has one — BEGIN returns before any byte
+    /// moves, and the whole two-phase read (request exchange,
+    /// aggregation, reply exchange) runs on the lane; END binds the
+    /// buffer and unpacks. Without a lane the aggregation completes here
+    /// (the reply exchange needs a communicator endpoint) and a ready
+    /// payload is stashed. Ordered reads overlap on the engine.
     fn begin_read(
         &self,
         op: &AccessOp,
         ctx: TransferCtx,
         off: Offset,
         payload_len: usize,
+        hints: Option<&Info>,
     ) -> Result<()> {
         let req = match op.coordination {
             Coordination::Collective => {
-                let cb = self.cb_params();
+                let cb = self.cb_params_with(hints);
+                if cb.enabled && self.comm.size() > 1 {
+                    if let Some(ProgressLane { engine, comm }) = self.progress_lane() {
+                        let plan = self.plan_for(&ctx, Direction::Read, off, payload_len)?;
+                        let mut ticket = self.lane_order.issue();
+                        let (req, tx) = Request::pending();
+                        let req = req.instrument(&self.stats);
+                        let q0 = self.stats.start();
+                        engine.submit(move || {
+                            ctx.stats.record(Phase::Queue, q0);
+                            ticket.wait_turn();
+                            let mut payload = vec![0u8; payload_len];
+                            let res = collective::collective_read(
+                                comm.as_ref(),
+                                &ctx,
+                                &cb,
+                                &plan,
+                                &mut payload,
+                            )
+                            .map(Status::of_bytes);
+                            drop(ticket);
+                            let _ = tx.send((res, payload));
+                        });
+                        self.stash(SplitPending::Read { kind: op.end_kind(), req });
+                        return Ok(());
+                    }
+                }
                 let mut payload = vec![0u8; payload_len];
                 let got = self.collective_read(&ctx, &cb, off, &mut payload)?;
                 Request::ready(Status::of_bytes(got), payload)
@@ -1010,18 +1129,47 @@ impl File<'_> {
     // communicator and plan cache for the on-caller paths)
     // ------------------------------------------------------------------
 
-    /// The communicator's progress lane, unless the collective
-    /// `jpio_progress_threads` hint disables it or the engine is
-    /// unusable (a forked child that inherited the world — a
+    /// The progress lane for the *next* lane-bound collective, unless
+    /// the collective `jpio_progress_threads` hint disables it or the
+    /// engine is unusable (a forked child that inherited the world — a
     /// whole-world condition, so every rank answers alike and the
     /// fallback stays collectively consistent).
+    ///
+    /// With `jpio_progress_threads = k > 1` (clamped to
+    /// [`MAX_LANES`](crate::comm::progress::MAX_LANES)) the handle
+    /// round-robins lane-bound collectives across `k` lanes. The cursor
+    /// follows the collective issue order, which MPI already requires to
+    /// be identical on every rank, so matched collectives always share a
+    /// lane; exchanges then pipeline across lanes while the
+    /// [`OpSequencer`](engine::OpSequencer) keeps storage phases in
+    /// issue order.
     pub(crate) fn progress_lane(&self) -> Option<ProgressLane> {
-        let disabled =
-            self.info.lock().unwrap().get_usize(keys::PROGRESS_THREADS) == Some(0);
-        if disabled {
+        let nlanes = self
+            .info
+            .lock()
+            .unwrap()
+            .get_usize(keys::PROGRESS_THREADS)
+            .unwrap_or(1)
+            .min(crate::comm::progress::MAX_LANES);
+        if nlanes == 0 {
             return None;
         }
-        let lane = self.comm.progress_lane()?;
+        let lane = if nlanes == 1 {
+            0
+        } else {
+            self.lane_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % nlanes
+        };
+        self.progress_lane_for(lane)
+    }
+
+    /// A specific progress lane, bypassing the round-robin cursor (the
+    /// stats queries go through lane 0 so they never perturb the
+    /// assignment the data path depends on).
+    pub(crate) fn progress_lane_for(&self, lane: usize) -> Option<ProgressLane> {
+        if self.info.lock().unwrap().get_usize(keys::PROGRESS_THREADS) == Some(0) {
+            return None;
+        }
+        let lane = self.comm.progress_lane_at(lane)?;
         if !lane.engine.usable() {
             return None;
         }

@@ -46,7 +46,7 @@ use crate::io::engine::{self, Request};
 use crate::io::errors::Result;
 use crate::io::op::{Direction, TransferCtx};
 use crate::io::plan::IoPlan;
-use crate::io::stats::{Phase, PlanCacheStats};
+use crate::io::stats::{Counter, Phase, PlanCacheStats};
 use crate::io::view::FileView;
 use crate::strategy::{AccessStrategy, ViewBufStrategy};
 
@@ -266,6 +266,27 @@ impl IoScheduler {
         let cb_buffer = work.cb_buffer;
         let strat = ViewBufStrategy::with_stage(cb_buffer);
         let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
+        // Zero-copy fast path: backends that execute whole plans
+        // themselves (the striped per-server fan-out) take the exchange
+        // pieces in place — no payload-sized staging copy, no rounds.
+        // Overlapping pieces stay on the staged path below, whose
+        // ordered single writer carries the rank-order overwrite
+        // semantics.
+        let overlaps = pieces.windows(2).any(|w| w[0].0 + w[0].1 as u64 > w[1].0);
+        if !overlaps && ctx.storage.prefers_plan_execution() {
+            let refs: Vec<(u64, &[u8])> = pieces
+                .iter()
+                .map(|&(off, len, m, pos)| (off, &work.inbound[m][pos..pos + len]))
+                .collect();
+            ctx.storage.write_pieces(&refs)?;
+            return Ok(());
+        }
+        // Every staged byte below is one copy out of the raw exchange
+        // messages — the quantity the zero-copy path eliminates.
+        ctx.stats.add(
+            Counter::StagingCopyBytes,
+            pieces.iter().map(|&(_, len, ..)| len as u64).sum(),
+        );
         // Count rounds from the headers alone. The common case — a
         // contiguous collective whose pieces coalesce into one round —
         // stages and writes inline: there is nothing to pipeline, so it
@@ -644,6 +665,50 @@ mod tests {
         c.storage.read_at(0, &mut back).unwrap();
         assert_eq!(back, [9u8; 8]);
         LocalBackend::instant().delete(&path).unwrap();
+    }
+
+    #[test]
+    fn write_phase_zero_copy_on_plan_backends() {
+        use crate::io::collective::encode_write_msg;
+        use crate::storage::striped::StripedBackend;
+        let b = StripedBackend::local(4, 8);
+        let path = format!("/tmp/jpio-sched-zc-{}", std::process::id());
+        let c = TransferCtx {
+            storage: b.open(&path, OpenOptions::rw_create()).unwrap(),
+            strategy: Arc::from(strategy::by_name("view_buffer").unwrap()),
+            view: Arc::new(FileView::default()),
+            atomic: false,
+            stats: crate::io::stats::FileStats::disabled(),
+        };
+        // Disjoint pieces spanning stripe boundaries, from two ranks:
+        // the plan-execution backend must take them in place.
+        let p0: Vec<u8> = (1..=20u8).collect();
+        let m0 = encode_write_msg(&[(0, 12, 0), (30, 8, 12)], &p0);
+        let m1 = encode_write_msg(&[(12, 10, 0)], &[0xABu8; 10]);
+        let work = WriteIoWork { inbound: vec![m0, m1], cb_buffer: 4096 };
+        IoScheduler::write_phase(&c, work).unwrap();
+        assert_eq!(
+            c.stats.value(Counter::StagingCopyBytes),
+            0,
+            "zero-copy dispatch must not stage any payload bytes"
+        );
+        let mut back = vec![0u8; 38];
+        assert_eq!(c.storage.read_at(0, &mut back).unwrap(), 38);
+        assert_eq!(&back[..12], &p0[..12]);
+        assert_eq!(&back[12..22], &[0xABu8; 10]);
+        assert!(back[22..30].iter().all(|&v| v == 0), "gap must stay zeros");
+        assert_eq!(&back[30..38], &p0[12..20]);
+        // Overlapping pieces fall back to the staged single writer
+        // (rank-order overwrite) and count every copied byte.
+        let m0 = encode_write_msg(&[(0, 8, 0)], &[7u8; 8]);
+        let m1 = encode_write_msg(&[(0, 8, 0)], &[9u8; 8]);
+        let work = WriteIoWork { inbound: vec![m0, m1], cb_buffer: 4096 };
+        IoScheduler::write_phase(&c, work).unwrap();
+        assert_eq!(c.stats.value(Counter::StagingCopyBytes), 16);
+        let mut over = [0u8; 8];
+        c.storage.read_at(0, &mut over).unwrap();
+        assert_eq!(over, [9u8; 8]);
+        b.delete(&path).unwrap();
     }
 
     #[test]

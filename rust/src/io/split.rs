@@ -7,18 +7,21 @@
 //! not be touched in between (expressed in Rust by binding the read
 //! buffer only at `END`, like the nonblocking ops' ownership transfer).
 //!
-//! For writes, the communication (exchange) phase runs in `BEGIN` and the
-//! storage phase lands on the request engine — so computation between
-//! `BEGIN` and `END` genuinely overlaps the file I/O, which is the whole
-//! point of the double-buffering pattern in §7.2.9.1. Reads complete
-//! their aggregation in `BEGIN` (the reply exchange needs a communicator
-//! endpoint, and the split collectives keep theirs on the calling
-//! thread) and hand the payload to `END`. The MPI-3.1 nonblocking
-//! collectives ([`File::iwrite_all`]/[`File::iread_all`]) return a
-//! [`crate::io::engine::Request`] in place of the `END` call and go
-//! further: on worlds with a progress lane
-//! ([`crate::comm::progress`]), *both* phases — the reply exchange
-//! included — leave the caller entirely.
+//! On worlds with a progress lane ([`crate::comm::progress`]), `BEGIN`
+//! only registers the operation: *both* phases — the exchange and the
+//! storage I/O, reply exchange included for reads — run on the rank's
+//! progress thread, so all the computation between `BEGIN` and `END`
+//! overlaps the whole collective. Without a lane
+//! (`jpio_progress_threads = 0`, or endpoints that cannot host one) the
+//! write exchange runs in `BEGIN` and the storage phase lands on the
+//! request engine — the double-buffering pattern of §7.2.9.1 — while
+//! reads complete their aggregation in `BEGIN` (the reply exchange
+//! needs a communicator endpoint, and the lane-less split collectives
+//! keep theirs on the calling thread) and hand the payload to `END`.
+//! The MPI-3.1 nonblocking collectives
+//! ([`File::iwrite_all`]/[`File::iread_all`]) return a
+//! [`crate::io::engine::Request`] in place of the `END` call under the
+//! same lane contract.
 //!
 //! Every routine here is a thin wrapper naming its matrix cell; `BEGIN`
 //! reads and `END` writes carry no buffer, so they pass an empty slice

@@ -91,12 +91,15 @@ pub(crate) enum Counter {
     DatarepConvertedOps,
     /// Degraded-mode advisories drained through `File::take_advisories`.
     DegradedAdvisories,
+    /// Payload bytes the collective write phase copied through staging
+    /// buffers (0 when the zero-copy piece dispatch served the op).
+    StagingCopyBytes,
 }
 
 impl Counter {
     /// Every counter, in wire order (the close-time reduction serializes
     /// values in this order, so it must be identical on all ranks).
-    pub(crate) const ALL: [Counter; 18] = [
+    pub(crate) const ALL: [Counter; 19] = [
         Counter::ReadOps,
         Counter::WriteOps,
         Counter::IndependentOps,
@@ -115,6 +118,7 @@ impl Counter {
         Counter::BytesMoved,
         Counter::DatarepConvertedOps,
         Counter::DegradedAdvisories,
+        Counter::StagingCopyBytes,
     ];
 
     /// The report/trace name of the counter.
@@ -138,6 +142,7 @@ impl Counter {
             Counter::BytesMoved => "bytes_moved",
             Counter::DatarepConvertedOps => "datarep_converted_ops",
             Counter::DegradedAdvisories => "degraded_advisories",
+            Counter::StagingCopyBytes => "staging_copy_bytes",
         }
     }
 }
@@ -717,7 +722,7 @@ impl File<'_> {
     /// zeros when the transport has no lane or the
     /// `jpio_progress_threads` hint disables it.
     pub fn progress_stats(&self) -> ProgressStats {
-        self.progress_lane().map(|l| l.engine.stats()).unwrap_or_default()
+        self.progress_lane_for(0).map(|l| l.engine.stats()).unwrap_or_default()
     }
 }
 

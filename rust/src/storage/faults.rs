@@ -218,6 +218,13 @@ impl StorageFile for FaultFile {
         self.inner.write_plan(runs, buf)
     }
 
+    fn write_pieces(&self, pieces: &[(u64, &[u8])]) -> Result<usize> {
+        // Same fault class as the plan write it replaces on the
+        // zero-copy collective path.
+        self.plan.check(FaultOp::WritePlan)?;
+        self.inner.write_pieces(pieces)
+    }
+
     fn prefers_plan_execution(&self) -> bool {
         // Forwarded so a fault wrapper around the striped backend still
         // exercises the whole-plan dispatch it is meant to test.

@@ -119,6 +119,27 @@ pub trait StorageFile: Send + Sync {
         self.write_runs(runs, buf)
     }
 
+    /// Scatter `(file_offset, bytes)` pieces — sorted by offset and
+    /// non-overlapping — in one call. This is the zero-copy I/O phase
+    /// of a collective write: the aggregator hands over its inbound
+    /// exchange payloads while they still sit in the receive buffers,
+    /// instead of staging them through a payload-sized copy first. The
+    /// default gathers the pieces into one packed buffer and delegates
+    /// to [`StorageFile::write_plan`]; backends that execute whole
+    /// plans themselves (striped) override it to split each piece
+    /// straight into per-server transfers with no intermediate
+    /// gather. Returns the total bytes written.
+    fn write_pieces(&self, pieces: &[(u64, &[u8])]) -> Result<usize> {
+        let total: usize = pieces.iter().map(|(_, b)| b.len()).sum();
+        let mut runs = Vec::with_capacity(pieces.len());
+        let mut buf = Vec::with_capacity(total);
+        for &(off, bytes) in pieces {
+            runs.push((off, bytes.len()));
+            buf.extend_from_slice(bytes);
+        }
+        self.write_plan(&runs, &buf)
+    }
+
     /// True when this backend executes whole vectored plans itself (the
     /// striped backend's concurrent per-server dispatch) and the
     /// scheduler should hand it complete multi-run plans rather than

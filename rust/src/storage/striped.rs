@@ -363,15 +363,59 @@ fn scatter(segs: &[Segment], tmp: &[u8], buf: &mut [u8]) {
     }
 }
 
-/// Pack the caller-buffer bytes of `segs` back-to-back — the inverse of
-/// [`scatter`], shared by every write dispatch path.
-fn gather(segs: &[Segment], buf: &[u8]) -> Vec<u8> {
+/// Pack the caller bytes of `segs` back-to-back — the inverse of
+/// [`scatter`], shared by every write dispatch path. The per-server
+/// packed transfer is built straight off the [`Payload`] view, so the
+/// zero-copy collective path never materializes the logical buffer.
+fn gather(segs: &[Segment], pay: &Payload<'_>) -> Vec<u8> {
     let total: usize = segs.iter().map(|s| s.len).sum();
     let mut payload = Vec::with_capacity(total);
     for seg in segs {
-        payload.extend_from_slice(&buf[seg.buf_pos..seg.buf_pos + seg.len]);
+        payload.extend_from_slice(pay.slice(seg.buf_pos, seg.len));
     }
     payload
+}
+
+/// The caller bytes behind a set of segments: either one packed buffer
+/// (`Segment::buf_pos` indexes it directly) or the collective layer's
+/// exchange pieces viewed as a virtual concatenation (`buf_pos` indexes
+/// the concatenation; bytes are served from each piece in place — the
+/// zero-copy collective-write path). Every segment is split from a
+/// single run/piece, so any `(buf_pos, len)` range lies inside exactly
+/// one piece and is served as a borrowed slice, never a copy.
+enum Payload<'a> {
+    Flat(&'a [u8]),
+    Pieces {
+        pieces: &'a [(u64, &'a [u8])],
+        /// `starts[i]` = virtual position of `pieces[i]`'s first byte.
+        starts: Vec<usize>,
+    },
+}
+
+impl<'a> Payload<'a> {
+    fn pieces(pieces: &'a [(u64, &'a [u8])]) -> Payload<'a> {
+        let mut starts = Vec::with_capacity(pieces.len());
+        let mut pos = 0usize;
+        for &(_, bytes) in pieces {
+            starts.push(pos);
+            pos += bytes.len();
+        }
+        Payload::Pieces { pieces, starts }
+    }
+
+    /// The payload bytes at virtual range `[pos, pos + len)`.
+    fn slice(&self, pos: usize, len: usize) -> &[u8] {
+        match self {
+            Payload::Flat(buf) => &buf[pos..pos + len],
+            Payload::Pieces { pieces, starts } => {
+                // Last piece starting at or before `pos` — empty pieces
+                // share a start with their successor and own no range.
+                let i = starts.partition_point(|&s| s <= pos) - 1;
+                let within = pos - starts[i];
+                &pieces[i].1[within..within + len]
+            }
+        }
+    }
 }
 
 /// Child physically holding replica copy `copy` (1-based) of `server`'s
@@ -727,17 +771,23 @@ impl StripedInner {
     /// `tolerates()` distinct children degrade (advisory) instead of
     /// failing the operation.
     fn write_segments(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
+        self.write_segments_payload(segs, &Payload::Flat(buf))
+    }
+
+    /// [`StripedInner::write_segments`] over a [`Payload`] view — the
+    /// shared dispatch of the packed-buffer and zero-copy piece paths.
+    fn write_segments_payload(&self, segs: &[Segment], pay: &Payload<'_>) -> Result<()> {
         if segs.is_empty() {
             return Ok(());
         }
         match self.map.redundancy {
-            Redundancy::None => self.write_segments_plain(segs, buf),
-            Redundancy::Replica(k) => self.write_segments_replica(segs, buf, k),
-            Redundancy::Parity => self.write_segments_parity(segs, buf),
+            Redundancy::None => self.write_segments_plain(segs, pay),
+            Redundancy::Replica(k) => self.write_segments_replica(segs, pay, k),
+            Redundancy::Parity => self.write_segments_parity(segs, pay),
         }
     }
 
-    fn write_segments_plain(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
+    fn write_segments_plain(&self, segs: &[Segment], pay: &Payload<'_>) -> Result<()> {
         let per = self.group(segs);
         let mut jobs = Vec::new();
         for (server, segs) in per.into_iter().enumerate() {
@@ -746,7 +796,7 @@ impl StripedInner {
             }
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
-            let payload = gather(&segs, buf);
+            let payload = gather(&segs, pay);
             self.note_fanout(payload.len() as u64);
             jobs.push(move || -> Result<usize> { child.write_runs(&runs, &payload) });
         }
@@ -756,7 +806,7 @@ impl StripedInner {
         Ok(())
     }
 
-    fn write_segments_replica(&self, segs: &[Segment], buf: &[u8], k: usize) -> Result<()> {
+    fn write_segments_replica(&self, segs: &[Segment], pay: &Payload<'_>, k: usize) -> Result<()> {
         let factor = self.factor();
         let per = self.group(segs);
         let mut jobs: Vec<IoJob<usize>> = Vec::new();
@@ -769,7 +819,7 @@ impl StripedInner {
             // All k copies read the same packed bytes — share them
             // instead of materializing the payload once per copy.
             let runs = Arc::new(runs);
-            let payload = Arc::new(gather(&segs, buf));
+            let payload = Arc::new(gather(&segs, pay));
             self.note_fanout(k as u64 * payload.len() as u64);
             for c in 0..k {
                 let handle = if c == 0 {
@@ -824,7 +874,7 @@ impl StripedInner {
     /// row's parity slot, then dispatch the seg-exact data writes and
     /// the full-unit parity writes concurrently. The whole cycle holds
     /// the stripe-consistency lock; see the module docs.
-    fn write_segments_parity(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
+    fn write_segments_parity(&self, segs: &[Segment], pay: &Payload<'_>) -> Result<()> {
         let unit = self.unit() as usize;
         let factor = self.factor();
         let _guard = self.lock_parity()?;
@@ -905,13 +955,15 @@ impl StripedInner {
             }
         }
 
-        // 3. Overlay the new payload into the data slots.
+        // 3. Overlay the new payload into the data slots — served
+        //    straight off the payload view (exchange pieces stay in
+        //    their receive buffers on the zero-copy path).
         for seg in segs {
             let r = self.map.layout.row_of_child_off(seg.child_off);
             let idx = rows.binary_search(&r).expect("affected row present");
             let within = (seg.child_off % unit as u64) as usize;
             slots[seg.server][idx * unit + within..idx * unit + within + seg.len]
-                .copy_from_slice(&buf[seg.buf_pos..seg.buf_pos + seg.len]);
+                .copy_from_slice(pay.slice(seg.buf_pos, seg.len));
         }
 
         // 4. Recompute each affected row's parity slot (XOR of its
@@ -947,7 +999,7 @@ impl StripedInner {
             }
             let child = self.children[server].clone();
             let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
-            let payload = gather(&segs, buf);
+            let payload = gather(&segs, pay);
             self.note_fanout(payload.len() as u64);
             jobs.push(Box::new(move || child.write_runs(&runs, &payload)));
             holders.push(server);
@@ -1107,6 +1159,29 @@ impl StorageFile for StripedFile {
             }
         }
         self.inner.write_segments(&segs, buf)?;
+        if end > 0 {
+            self.inner.publish_extend(end)?;
+        }
+        Ok(pos)
+    }
+
+    fn write_pieces(&self, pieces: &[(u64, &[u8])]) -> Result<usize> {
+        // The zero-copy collective path: split each exchange piece at
+        // stripe boundaries against its *virtual* position in the
+        // concatenation, then dispatch per-server transfers straight
+        // off the pieces — the payload is never packed into one
+        // logical buffer first.
+        let mut segs = Vec::new();
+        let mut pos = 0usize;
+        let mut end = 0u64;
+        for &(off, bytes) in pieces {
+            self.inner.map.split_run(off, bytes.len(), pos, &mut segs);
+            pos += bytes.len();
+            if !bytes.is_empty() {
+                end = end.max(off + bytes.len() as u64);
+            }
+        }
+        self.inner.write_segments_payload(&segs, &Payload::pieces(pieces))?;
         if end > 0 {
             self.inner.publish_extend(end)?;
         }
@@ -1398,6 +1473,52 @@ mod tests {
         assert_eq!(f.read_runs(&runs, &mut back).unwrap(), 59);
         assert_eq!(back, data);
         b.delete(&path).unwrap();
+    }
+
+    #[test]
+    fn write_pieces_roundtrip_across_redundancy_modes() {
+        for (mode, name) in [
+            (Redundancy::None, "wp-none"),
+            (Redundancy::Replica(2), "wp-replica"),
+            (Redundancy::Parity, "wp-parity"),
+        ] {
+            let b = StripedBackend::local_redundant(4, 8, mode);
+            let path = tmp(name);
+            let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+            // Disjoint pieces spanning stripe boundaries, with a gap
+            // and an empty piece (shares its virtual start with the
+            // successor) — the zero-copy collective dispatch shape.
+            let a: Vec<u8> = (1..=20u8).collect();
+            let c: Vec<u8> = (100..130u8).collect();
+            let empty: [u8; 0] = [];
+            let pieces: [(u64, &[u8]); 3] = [(3, &a[..]), (23, &empty[..]), (40, &c[..])];
+            assert_eq!(f.write_pieces(&pieces).unwrap(), 50);
+            assert_eq!(f.size().unwrap(), 70);
+            // A second, partial overlay exercises the parity RMW path.
+            let over = [0xEEu8; 7];
+            assert_eq!(f.write_pieces(&[(5, &over[..])]).unwrap(), 7);
+            let mut back = vec![0u8; 70];
+            assert_eq!(f.read_at(0, &mut back).unwrap(), 70);
+            assert!(back[..3].iter().all(|&v| v == 0));
+            assert_eq!(&back[3..5], &a[..2]);
+            assert_eq!(&back[5..12], &over[..]);
+            assert_eq!(&back[12..23], &a[9..]);
+            assert!(back[23..40].iter().all(|&v| v == 0), "gap must read as zeros");
+            assert_eq!(&back[40..70], &c[..]);
+            drop(f);
+            if mode == Redundancy::Parity {
+                // Physical invariant: every row slot still XORs to zero.
+                let objs: Vec<Vec<u8>> = (0..4)
+                    .map(|s| std::fs::read(StripedBackend::object_path(&path, s, 4)).unwrap())
+                    .collect();
+                let max_len = objs.iter().map(|o| o.len()).max().unwrap();
+                for i in 0..max_len {
+                    let x = objs.iter().fold(0u8, |a, o| a ^ o.get(i).copied().unwrap_or(0));
+                    assert_eq!(x, 0, "row-slot XOR broken at object byte {i} ({name})");
+                }
+            }
+            b.delete(&path).unwrap();
+        }
     }
 
     #[test]

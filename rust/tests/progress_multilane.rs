@@ -1,0 +1,181 @@
+//! Multi-lane progress (`jpio_progress_threads > 1`): independent
+//! nonblocking collectives pipeline across per-world progress lanes,
+//! while the per-file op sequencer keeps their *storage phases* in issue
+//! order — the MPI ordering contract for overlapping collectives. Plus
+//! the zero-copy regression guard: collective writes on plan-executing
+//! backends (striped) must stage zero payload bytes, observable through
+//! the `staging_copy_bytes` counter.
+
+use std::sync::Arc;
+
+use jpio::comm::{process, threads, Comm, Datatype, ReduceOp};
+use jpio::io::hints::keys;
+use jpio::io::{amode, File, Info};
+use jpio::storage::striped::StripedBackend;
+use jpio::storage::Backend;
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-multilane-{}-{name}", std::process::id())
+}
+
+fn two_lanes() -> Info {
+    Info::from([(keys::PROGRESS_THREADS, "2")])
+}
+
+#[test]
+fn two_lanes_pipeline_disjoint_collectives_across_processes() {
+    // Forked ranks: two independent nonblocking collective writes in
+    // flight at once (one per lane), then two reads — everything must
+    // land, across real address spaces.
+    let path = tmp("procs");
+    process::run_local(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, two_lanes()).unwrap();
+        let r = c.rank();
+        let a = vec![(1 + r) as u8; 256];
+        let b = vec![(11 + r) as u8; 256];
+        let w1 = f.iwrite_at_all((r * 256) as i64, a.as_slice(), 0, 256, &Datatype::BYTE)
+            .unwrap();
+        let w2 = f
+            .iwrite_at_all((512 + r * 256) as i64, b.as_slice(), 0, 256, &Datatype::BYTE)
+            .unwrap();
+        let (st1, ()) = w1.wait().unwrap();
+        let (st2, ()) = w2.wait().unwrap();
+        assert_eq!((st1.bytes, st2.bytes), (256, 256));
+        c.barrier();
+        let r1 = f.iread_at_all(0, vec![0u8; 512], 0, 512, &Datatype::BYTE).unwrap();
+        let r2 = f.iread_at_all(512, vec![0u8; 512], 0, 512, &Datatype::BYTE).unwrap();
+        let (_, lo) = r1.wait().unwrap();
+        let (_, hi) = r2.wait().unwrap();
+        assert!(lo[..256].iter().all(|&v| v == 1));
+        assert!(lo[256..].iter().all(|&v| v == 2));
+        assert!(hi[..256].iter().all(|&v| v == 11));
+        assert!(hi[256..].iter().all(|&v| v == 12));
+        f.close().unwrap();
+    });
+    File::delete(&path, &Info::null()).unwrap();
+}
+
+#[test]
+fn overlapping_collectives_complete_in_issue_order_on_two_lanes() {
+    // Two nonblocking collective writes to the SAME region, issued
+    // back-to-back: with two lanes their exchanges pipeline, but the op
+    // sequencer must serialize the storage phases in issue order — the
+    // second write's bytes win, every iteration.
+    let path = tmp("order");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, two_lanes()).unwrap();
+        let r = c.rank();
+        for k in 0..8u64 {
+            let base = (k * 1024) as i64;
+            let first = vec![0x11u8; 256];
+            let second = vec![0x22u8; 256];
+            let w1 = f
+                .iwrite_at_all(base + (r * 256) as i64, first.as_slice(), 0, 256, &Datatype::BYTE)
+                .unwrap();
+            let w2 = f
+                .iwrite_at_all(base + (r * 256) as i64, second.as_slice(), 0, 256, &Datatype::BYTE)
+                .unwrap();
+            // Wait in reverse order: completion order must not matter,
+            // only issue order.
+            let (st2, ()) = w2.wait().unwrap();
+            let (st1, ()) = w1.wait().unwrap();
+            assert_eq!((st1.bytes, st2.bytes), (256, 256));
+            c.barrier();
+            let rd = f.iread_at_all(base, vec![0u8; 1024], 0, 1024, &Datatype::BYTE).unwrap();
+            let (_, back) = rd.wait().unwrap();
+            assert!(
+                back.iter().all(|&v| v == 0x22),
+                "iteration {k}: an earlier collective overwrote a later one"
+            );
+            c.barrier();
+        }
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn read_after_write_sees_the_write_across_lanes() {
+    // A nonblocking collective read issued right behind a nonblocking
+    // collective write of the same region: the read lands on the other
+    // lane, and the sequencer must hold its whole collective behind the
+    // write's storage phase.
+    let path = tmp("raw");
+    threads::run(4, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, two_lanes()).unwrap();
+        let r = c.rank();
+        let mine: Vec<u8> = (0..128).map(|i| (r * 128 + i) as u8).collect();
+        let w = f.iwrite_at_all((r * 128) as i64, mine.as_slice(), 0, 128, &Datatype::BYTE)
+            .unwrap();
+        let rd = f.iread_at_all(0, vec![0u8; 512], 0, 512, &Datatype::BYTE).unwrap();
+        let (_, ()) = w.wait().unwrap();
+        let (st, all) = rd.wait().unwrap();
+        assert_eq!(st.bytes, 512);
+        assert_eq!(all, (0..=255u8).chain(0..=255u8).collect::<Vec<_>>());
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+#[test]
+fn collective_writes_on_striped_storage_stage_zero_bytes() {
+    // The zero-copy regression guard. On a plan-executing backend the
+    // aggregator hands exchange pieces straight to the per-server
+    // dispatch: no rank may count a single staged payload byte. On a
+    // single-device backend the staged path remains, and the world-wide
+    // staging traffic equals the payload — never more.
+    let striped_path = tmp("zc-striped");
+    let backend: Arc<dyn Backend> = Arc::new(StripedBackend::local(4, 64));
+    threads::run(4, |c| {
+        let f = File::open_with_backend(
+            c,
+            &striped_path,
+            amode::RDWR | amode::CREATE,
+            Info::null(),
+            backend.clone(),
+        )
+        .unwrap();
+        let r = c.rank();
+        let mine = vec![(1 + r) as u8; 512];
+        f.write_at_all((r * 512) as i64, mine.as_slice(), 0, 512, &Datatype::BYTE).unwrap();
+        let req = f
+            .iwrite_at_all((2048 + r * 512) as i64, mine.as_slice(), 0, 512, &Datatype::BYTE)
+            .unwrap();
+        req.wait().unwrap();
+        c.barrier();
+        let staged = f.stats().counter("staging_copy_bytes").sum;
+        assert_eq!(staged, 0, "rank {r} staged {staged} bytes on the zero-copy path");
+        let mut back = vec![0u8; 4096];
+        f.read_at_all(0, back.as_mut_slice(), 0, 4096, &Datatype::BYTE).unwrap();
+        for rr in 0..4usize {
+            assert!(back[rr * 512..(rr + 1) * 512].iter().all(|&v| v == (1 + rr) as u8));
+            assert!(back[2048 + rr * 512..2048 + (rr + 1) * 512]
+                .iter()
+                .all(|&v| v == (1 + rr) as u8));
+        }
+        f.close().unwrap();
+    });
+    let _ = backend.delete(&striped_path);
+
+    let local_path = tmp("zc-local");
+    threads::run(4, |c| {
+        let f = File::open(c, &local_path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let r = c.rank();
+        let mine = vec![(1 + r) as u8; 512];
+        f.write_at_all((r * 512) as i64, mine.as_slice(), 0, 512, &Datatype::BYTE).unwrap();
+        c.barrier();
+        let staged = c.allreduce_i64(
+            ReduceOp::Sum,
+            f.stats().counter("staging_copy_bytes").sum as i64,
+        );
+        assert_eq!(
+            staged, 2048,
+            "staged path must copy each payload byte exactly once world-wide"
+        );
+        f.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&local_path);
+    let _ = std::fs::remove_file(format!("{local_path}.jpio-sfp"));
+}
