@@ -35,6 +35,12 @@
 //!    alongside; plus the zero-copy collective-write guard — the
 //!    `staging_copy_bytes` counter must be 0 on plan-executing (striped)
 //!    backends and exactly the payload on the staged fallback.
+//! 11. **page cache + write-behind** — 4 KiB strided writes through the
+//!    `jpio_cache` write-behind layer vs one bulk write vs the same
+//!    small writes uncached, on the modelled NFS backend where every
+//!    small write pays an RPC; asserts write-behind reaches ≥ 50% of
+//!    bulk bandwidth, and that `jpio_cache = disable` leaves the file
+//!    byte-identical with every cache counter at zero.
 //!
 //! `JPIO_SMOKE=1` runs everything at 1/16 size with one repetition — the
 //! CI gate that keeps this file compiled and executed on every PR.
@@ -823,6 +829,128 @@ fn scaleout_exchange_and_zero_copy() {
     cleanup_striped(&spath, 4);
 }
 
+fn strided_write_behind() {
+    println!("\n--- ablation 11: page cache write-behind for small strided writes ---");
+    // Part A — bandwidth. On the Barq NFS model every write RPC pays
+    // latency, so 4 KiB pieces written straight through lose badly;
+    // absorbed by the page cache they coalesce into stripe-aligned
+    // flushes at sync and approach the one-bulk-write ceiling.
+    let region = common::sz(4 << 20);
+    let piece = 4 << 10;
+    let npieces = region / piece;
+    let cached_info = || {
+        Info::from([
+            ("jpio_cache", "enable"),
+            ("jpio_cache_size", "16777216"), // whole region resident
+        ])
+    };
+    // Two interleaved passes (even pieces, then odd): the write order a
+    // simple cursor never sees, which the dirty-page coalescer still
+    // flushes as one run.
+    let strided = |path: &str, info: Info| {
+        threads::run(1, |c| {
+            let backend: std::sync::Arc<dyn jpio::storage::Backend> =
+                std::sync::Arc::new(jpio::storage::nfs::NfsBackend::barq());
+            let f =
+                File::open_with_backend(c, path, amode::RDWR | amode::CREATE, info.clone(), backend)
+                    .unwrap();
+            for pass in 0..2usize {
+                for p in (pass..npieces).step_by(2) {
+                    let buf = vec![p as u8; piece];
+                    f.write_at((p * piece) as i64, buf.as_slice(), 0, piece, &Datatype::BYTE)
+                        .unwrap();
+                }
+            }
+            f.sync().unwrap();
+            f.close().unwrap();
+        });
+    };
+    let path = format!("/tmp/jpio-abl11-{}.dat", std::process::id());
+    let bulk = bench("bulk one write  ", 1, common::reps(), region, || {
+        threads::run(1, |c| {
+            let backend: std::sync::Arc<dyn jpio::storage::Backend> =
+                std::sync::Arc::new(jpio::storage::nfs::NfsBackend::barq());
+            let f = File::open_with_backend(
+                c,
+                &path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                backend,
+            )
+            .unwrap();
+            let buf = vec![0u8; region];
+            f.write_at(0, buf.as_slice(), 0, region, &Datatype::BYTE).unwrap();
+            f.sync().unwrap();
+            f.close().unwrap();
+        });
+    });
+    let behind = bench("4K + write-behind", 1, common::reps(), region, || {
+        strided(&path, cached_info());
+    });
+    let through = bench("4K uncached     ", 1, common::reps(), region, || {
+        strided(&path, Info::null());
+    });
+    println!("  bulk one write    {:10.1} MB/s", bulk.mbs());
+    println!("  4K + write-behind {:10.1} MB/s", behind.mbs());
+    println!("  4K uncached       {:10.1} MB/s", through.mbs());
+    println!(
+        "  write-behind recovers {:.0}% of bulk ({:.1}x over uncached small writes)",
+        100.0 * behind.mbs() / bulk.mbs(),
+        behind.mbs() / through.mbs()
+    );
+    assert!(
+        behind.mbs() >= 0.5 * bulk.mbs(),
+        "write-behind small writes fell under 50% of bulk bandwidth"
+    );
+    common::cleanup(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
+
+    // Part B — equivalence guard on the instant local backend: the same
+    // strided workload with the cache on and off must leave
+    // byte-identical files, the cache-off run counting nothing and the
+    // cache-on run visibly flushing through the write-behind path.
+    let equiv = |path: &str, info: Info| -> (Vec<u8>, u64, u64) {
+        let counters = threads::run(1, |c| {
+            let f = File::open(c, path, amode::RDWR | amode::CREATE, info.clone()).unwrap();
+            for pass in 0..2usize {
+                for p in (pass..npieces).step_by(2) {
+                    let buf = vec![(p * 7) as u8; piece];
+                    f.write_at((p * piece) as i64, buf.as_slice(), 0, piece, &Datatype::BYTE)
+                        .unwrap();
+                }
+            }
+            f.sync().unwrap();
+            let report = f.stats();
+            let touched = ["cache_hit_bytes", "cache_miss_bytes", "rmw_cycles"]
+                .iter()
+                .map(|k| report.counter(k).sum)
+                .sum::<u64>()
+                + report.counter("write_behind_flush_bytes").sum;
+            let flushed = report.counter("write_behind_flush_bytes").sum;
+            f.close().unwrap();
+            (touched, flushed)
+        });
+        let (touched, flushed) = counters[0];
+        (std::fs::read(path).unwrap(), touched, flushed)
+    };
+    let pon = format!("/tmp/jpio-abl11-on-{}.dat", std::process::id());
+    let poff = format!("/tmp/jpio-abl11-off-{}.dat", std::process::id());
+    let (bytes_on, _, flushed_on) = equiv(&pon, cached_info());
+    let (bytes_off, touched_off, _) = equiv(&poff, Info::null());
+    assert_eq!(bytes_on, bytes_off, "jpio_cache=enable changed the bytes on disk");
+    assert_eq!(touched_off, 0, "jpio_cache=disable must leave every cache counter at zero");
+    assert!(flushed_on > 0, "cache-on run never flushed through write-behind");
+    println!(
+        "  equivalence: {} B byte-identical cache on/off; cache-off counters all zero, \
+         cache-on flushed {flushed_on} B",
+        bytes_on.len()
+    );
+    common::cleanup(&pon);
+    common::cleanup(&poff);
+    let _ = std::fs::remove_file(format!("{pon}.jpio-cache-lease"));
+    let _ = std::fs::remove_file(format!("{poff}.jpio-cache-lease"));
+}
+
 fn main() {
     println!("jpio ablation suite");
     per_item_vs_bulk();
@@ -837,6 +965,7 @@ fn main() {
     plan_pipeline_parity();
     stats_instrumentation();
     scaleout_exchange_and_zero_copy();
+    strided_write_behind();
     pjrt_pack_vs_rust();
     let _ = FigureReport::new("ablations", "case"); // keep the type exercised
     println!("\nablations done");

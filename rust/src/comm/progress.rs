@@ -193,6 +193,46 @@ impl ProgressEngine {
         sent
     }
 
+    /// Enqueue a job, or run it inline on the calling thread when the
+    /// worker does not exist in this process (a forked child) — for
+    /// work that must happen somewhere, like page-cache write-behind
+    /// flushes. Returns `true` when the job was backgrounded.
+    pub fn submit_or_run(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        if !self.usable() {
+            job();
+            return false;
+        }
+        // The worker owns the receiver for as long as the engine (and
+        // its sender) lives, so this send cannot fail here; run inline
+        // on the impossible path anyway rather than dropping the job.
+        match self.tx.lock().unwrap().send(Box::new(job)) {
+            Ok(()) => {
+                self.queued.fetch_add(1, Ordering::Release);
+                true
+            }
+            Err(mpsc::SendError(job)) => {
+                job();
+                false
+            }
+        }
+    }
+
+    /// Drain the lane: block until every job submitted before this call
+    /// has finished (FIFO worker, so a marker job completing means all
+    /// predecessors completed). No-op in a process without the worker.
+    pub fn quiesce(&self) {
+        if !self.usable() {
+            return;
+        }
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let sent = self.submit(move || {
+            let _ = done_tx.send(());
+        });
+        if sent {
+            let _ = done_rx.recv();
+        }
+    }
+
     /// Job counters — `queued > completed` means work is in flight on
     /// the progress thread.
     pub fn stats(&self) -> crate::io::stats::ProgressStats {

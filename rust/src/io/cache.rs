@@ -1,0 +1,763 @@
+//! Coherent client-side page cache with write-behind.
+//!
+//! ViPIOS puts a data-administration layer between clients and disks;
+//! jpio's analogue is a per-`File` [`PageCache`] the scheduler consults
+//! before touching [`StorageFile`]. Its reason to exist is the
+//! "millions of tiny requests" workload: Thakur's noncontiguous-access
+//! lesson is that small strided requests only approach bandwidth when
+//! coalesced into large aligned transfers, so cached writes accumulate
+//! in dirty pages (**write-behind**) and flush as stripe-aligned
+//! coalesced runs — pages are sized to the backend's
+//! [`preferred_flush_alignment`](StorageFile::preferred_flush_alignment)
+//! (one data row on striped storage), so a full-page flush never pays a
+//! parity read-modify-write.
+//!
+//! The cache is off by default (`jpio_cache = enable` turns it on); with
+//! it off every access path is byte-identical to the uncached library.
+//! When on:
+//!
+//! * **Reads** are served from resident pages (`cache_hit_bytes`); a
+//!   miss fetches the whole page — the plan-level read-modify-write
+//!   pre-read — plus `jpio_prefetch` pages ahead (`cache_miss_bytes`).
+//!   Pre-reads go through the same `Arc<dyn StorageFile>` as every
+//!   other access, so `JPIO_ERR_DEGRADED` advisories queue on the
+//!   backend and drain through `File::take_advisories` untouched.
+//! * **Writes** copy into pages and mark byte-exact dirty extents.
+//!   Past the high-water mark (half the `jpio_cache_size` budget) a
+//!   background flush drains on the cache's progress lane; with
+//!   `jpio_write_behind = disable` every write flushes before
+//!   returning (write-through).
+//! * **Flushes** coalesce dirty extents: a fetched (or multi-extent,
+//!   RMW-fetched) page contributes one covering run, adjacent runs
+//!   across pages merge, and multi-run flushes dispatch as one
+//!   [`write_plan`](StorageFile::write_plan) so the striped fan-out
+//!   sees the large transfer (`write_behind_flush_bytes`, `rmw_cycles`).
+//!
+//! **Coherence points** (MPI §7.2.6.1: a process sees another process's
+//! writes after writer-sync → barrier → reader-sync): `sync`, `close`,
+//! size changes, collective two-phase execution, and enabling atomic
+//! mode all flush — and, where another agent may have written,
+//! invalidate. Cross-process coherence rides a
+//! `<path>.jpio-cache-lease` sidecar (the shared-pointer sidecar
+//! machinery): a sync that flushed data bumps the lease generation, and
+//! a sync that observes a foreign generation drops every resident page.
+//! Atomic-mode operations bypass the cache entirely — they serialize
+//! under the whole-file lock, which resident pages cannot see.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::comm::progress::ProgressEngine;
+use crate::io::errors::{IoError, Result};
+use crate::io::hints::{keys, Info};
+use crate::io::plan::IoPlan;
+use crate::io::stats::{Counter, FileStats};
+use crate::storage::StorageFile;
+
+/// Default page-cache byte budget (`jpio_cache_size`): 8 MiB.
+const DEFAULT_BUDGET: usize = 8 << 20;
+
+/// Fallback page size when the backend states no flush-alignment
+/// preference (single-device backends): 64 KiB.
+const DEFAULT_PAGE: u64 = 64 << 10;
+
+/// One cached page: the buffer, whether its clean bytes were fetched
+/// from storage, and the byte-exact dirty extents awaiting flush.
+struct Page {
+    buf: Vec<u8>,
+    /// Whole-page contents loaded from storage (clean bytes are real
+    /// file bytes; past-EOF bytes are zeros from the short read).
+    fetched: bool,
+    /// Sorted, merged dirty `[start, end)` extents within the page.
+    dirty: Vec<(usize, usize)>,
+    /// LRU stamp (monotonic access clock).
+    stamp: u64,
+}
+
+impl Page {
+    fn new(page_size: usize) -> Page {
+        Page { buf: vec![0u8; page_size], fetched: false, dirty: Vec::new(), stamp: 0 }
+    }
+
+    /// Mark `[s, e)` dirty; returns the newly-dirtied byte count.
+    fn mark_dirty(&mut self, s: usize, e: usize) -> usize {
+        let before: usize = self.dirty.iter().map(|&(a, b)| b - a).sum();
+        self.dirty.push((s, e));
+        self.dirty.sort_unstable();
+        let mut merged: Vec<(usize, usize)> = Vec::with_capacity(self.dirty.len());
+        for &(a, b) in &self.dirty {
+            if let Some(last) = merged.last_mut() {
+                if a <= last.1 {
+                    last.1 = last.1.max(b);
+                    continue;
+                }
+            }
+            merged.push((a, b));
+        }
+        self.dirty = merged;
+        let after: usize = self.dirty.iter().map(|&(a, b)| b - a).sum();
+        after - before
+    }
+
+    /// Whether `[s, e)` is fully resident (fetched, or covered by one
+    /// dirty extent — extents are merged, so a cover is a single one).
+    fn covers(&self, s: usize, e: usize) -> bool {
+        self.fetched || self.dirty.iter().any(|&(a, b)| a <= s && e <= b)
+    }
+
+    fn dirty_bytes(&self) -> usize {
+        self.dirty.iter().map(|&(a, b)| b - a).sum()
+    }
+}
+
+/// The page table and everything that must stay consistent with it.
+struct CacheState {
+    /// Pages keyed by page index (`file_off / page_size`).
+    pages: BTreeMap<u64, Page>,
+    /// Total dirty bytes across all pages (high-water trigger).
+    dirty_bytes: u64,
+    /// The file size this cache believes in: storage EOF as last
+    /// observed, advanced by cached writes — the short-read boundary
+    /// for cached reads.
+    logical_size: u64,
+    /// Monotonic LRU clock.
+    clock: u64,
+    /// Last lease generation this handle observed (see
+    /// [`PageCache::sync_point`]).
+    lease_seen: u64,
+    /// A direct write may have moved the storage EOF behind the cache's
+    /// back (atomic-mode and aggregator writes, size changes): the next
+    /// access re-observes `logical_size` from storage.
+    size_stale: bool,
+}
+
+/// A per-`File` page cache with write-behind; see the module docs. One
+/// lives on the handle when `jpio_cache = enable`; a clone of its `Arc`
+/// travels in every [`TransferCtx`](crate::io::op::TransferCtx).
+pub(crate) struct PageCache {
+    storage: Arc<dyn StorageFile>,
+    stats: Arc<FileStats>,
+    page_size: u64,
+    /// Page-count budget (`jpio_cache_size` rounded up to pages).
+    max_pages: usize,
+    /// Dirty-byte level that queues a background flush.
+    high_water: u64,
+    /// Pages to fetch ahead of a read miss (`jpio_prefetch`).
+    prefetch: usize,
+    /// `false` = write-through (`jpio_write_behind = disable`).
+    write_behind: bool,
+    rank: usize,
+    /// Cross-process coherence sidecar (`<path>.jpio-cache-lease`).
+    lease_path: String,
+    state: Mutex<CacheState>,
+    /// Serializes flushes: dirty extents are snapshotted and marked
+    /// clean under `state`, but the storage write runs outside it, so
+    /// overlapping flushes must not reorder.
+    flush_gate: Mutex<()>,
+    /// A background flush is queued but has not started.
+    flush_queued: AtomicBool,
+    /// A background flush failed; surfaced at the next write or sync
+    /// (write-behind semantics — like the OS page cache's deferred EIO).
+    flush_err: Mutex<Option<IoError>>,
+    /// Lazily-spawned flush lane (`jpio-cache-flush-<rank>`); respawned
+    /// after a fork, where the inherited worker thread does not exist.
+    lane: Mutex<Option<Arc<ProgressEngine>>>,
+}
+
+fn read_lease(path: &str) -> u64 {
+    std::fs::read(path)
+        .ok()
+        .and_then(|b| b.get(..8).map(|b| u64::from_le_bytes(b.try_into().unwrap())))
+        .unwrap_or(0)
+}
+
+impl PageCache {
+    /// Build the handle's cache from the open-time hints; `None` unless
+    /// `jpio_cache = enable` (the default-off path stays byte-identical
+    /// to the uncached library).
+    pub(crate) fn from_info(
+        info: &Info,
+        path: &str,
+        storage: Arc<dyn StorageFile>,
+        stats: Arc<FileStats>,
+        rank: usize,
+    ) -> Option<Arc<PageCache>> {
+        if !info.get_flag(keys::CACHE).unwrap_or(false) {
+            return None;
+        }
+        let page_size =
+            storage.preferred_flush_alignment().unwrap_or(DEFAULT_PAGE).clamp(512, 8 << 20);
+        let budget = info.get_usize(keys::CACHE_SIZE).unwrap_or(DEFAULT_BUDGET) as u64;
+        let max_pages = budget.div_ceil(page_size).max(2) as usize;
+        let lease_path = format!("{path}.jpio-cache-lease");
+        let logical_size = storage.size().unwrap_or(0);
+        let lease_seen = read_lease(&lease_path);
+        Some(Arc::new(PageCache {
+            storage,
+            stats,
+            page_size,
+            max_pages,
+            high_water: (max_pages as u64 * page_size) / 2,
+            prefetch: info.get_usize(keys::PREFETCH).unwrap_or(0),
+            write_behind: info.get_flag(keys::WRITE_BEHIND).unwrap_or(true),
+            rank,
+            lease_path,
+            state: Mutex::new(CacheState {
+                pages: BTreeMap::new(),
+                dirty_bytes: 0,
+                logical_size,
+                clock: 0,
+                lease_seen,
+                size_stale: false,
+            }),
+            flush_gate: Mutex::new(()),
+            flush_queued: AtomicBool::new(false),
+            flush_err: Mutex::new(None),
+            lane: Mutex::new(None),
+        }))
+    }
+
+    // ------------------------------------------------------------------
+    // The access path (independent reads and writes)
+    // ------------------------------------------------------------------
+
+    /// Serve a compiled read plan from the cache, fetching missing
+    /// pages. Returns bytes read, short at the cached EOF with the same
+    /// stop-at-first-short-run semantics as
+    /// [`read_plan`](StorageFile::read_plan).
+    pub(crate) fn read_plan(&self, plan: &IoPlan, payload: &mut [u8]) -> Result<usize> {
+        let mut st = self.state.lock().unwrap();
+        self.refresh_size(&mut st);
+        let mut got = 0usize;
+        for (off, len, pos) in plan.segments() {
+            let avail = (st.logical_size.saturating_sub(off) as usize).min(len);
+            if avail > 0 {
+                self.copy_out(&mut st, off, &mut payload[pos..pos + avail])?;
+                got += avail;
+            }
+            if avail < len {
+                break;
+            }
+        }
+        drop(st);
+        self.enforce_budget()?;
+        Ok(got)
+    }
+
+    /// Absorb a compiled write plan into dirty pages (write-behind).
+    /// Flushes inline in write-through mode; queues a background flush
+    /// on the cache's progress lane past the high-water mark. A stored
+    /// background-flush error surfaces here before any new data is
+    /// absorbed.
+    pub(crate) fn write_plan(
+        this: &Arc<PageCache>,
+        plan: &IoPlan,
+        payload: &[u8],
+    ) -> Result<usize> {
+        if let Some(e) = this.flush_err.lock().unwrap().take() {
+            return Err(e);
+        }
+        {
+            let mut st = this.state.lock().unwrap();
+            this.refresh_size(&mut st);
+            for (off, len, pos) in plan.segments() {
+                this.copy_in(&mut st, off, &payload[pos..pos + len]);
+            }
+        }
+        if this.write_behind {
+            Self::maybe_background_flush(this);
+        } else {
+            this.flush()?;
+        }
+        this.enforce_budget()?;
+        Ok(plan.bytes)
+    }
+
+    /// Copy `[off, off + out.len())` out of the cache, fetching (and
+    /// prefetching) pages on miss.
+    fn copy_out(&self, st: &mut CacheState, off: u64, out: &mut [u8]) -> Result<()> {
+        let ps = self.page_size;
+        let end = off + out.len() as u64;
+        let mut cur = off;
+        while cur < end {
+            let idx = cur / ps;
+            let in_page = (cur - idx * ps) as usize;
+            let n = (((idx + 1) * ps).min(end) - cur) as usize;
+            let resident =
+                st.pages.get(&idx).map(|p| p.covers(in_page, in_page + n)).unwrap_or(false);
+            if resident {
+                self.stats.add(Counter::CacheHitBytes, n as u64);
+            } else {
+                self.stats.add(Counter::CacheMissBytes, n as u64);
+                self.fetch(st, idx)?;
+                // Hint-driven read-ahead: the next `prefetch` pages
+                // inside the cached EOF become hits for sequential
+                // re-reads.
+                for k in 1..=self.prefetch as u64 {
+                    let ahead = idx + k;
+                    if ahead * ps >= st.logical_size {
+                        break;
+                    }
+                    if !st.pages.get(&ahead).map(|p| p.fetched).unwrap_or(false) {
+                        self.fetch(st, ahead)?;
+                    }
+                }
+            }
+            st.clock += 1;
+            let clock = st.clock;
+            let page = st.pages.get_mut(&idx).expect("page resident after fetch");
+            page.stamp = clock;
+            let s = (cur - off) as usize;
+            out[s..s + n].copy_from_slice(&page.buf[in_page..in_page + n]);
+            cur += n as u64;
+        }
+        Ok(())
+    }
+
+    /// Copy `data` into the pages covering `[off, off + data.len())`,
+    /// marking dirty extents (write-allocate, no pre-read: the flush
+    /// path fetches only when gap-filling actually needs file bytes).
+    fn copy_in(&self, st: &mut CacheState, off: u64, data: &[u8]) {
+        let ps = self.page_size;
+        let end = off + data.len() as u64;
+        let mut cur = off;
+        while cur < end {
+            let idx = cur / ps;
+            let in_page = (cur - idx * ps) as usize;
+            let n = (((idx + 1) * ps).min(end) - cur) as usize;
+            st.clock += 1;
+            let clock = st.clock;
+            let page = st.pages.entry(idx).or_insert_with(|| Page::new(ps as usize));
+            page.stamp = clock;
+            let s = (cur - off) as usize;
+            page.buf[in_page..in_page + n].copy_from_slice(&data[s..s + n]);
+            st.dirty_bytes += page.mark_dirty(in_page, in_page + n) as u64;
+            cur += n as u64;
+        }
+        st.logical_size = st.logical_size.max(end);
+    }
+
+    /// Re-observe the storage EOF when a direct write may have moved it
+    /// behind the cache's back (see [`PageCache::flush_and_invalidate`]).
+    fn refresh_size(&self, st: &mut CacheState) {
+        if st.size_stale {
+            st.logical_size = self.storage.size().unwrap_or(st.logical_size);
+            st.size_stale = false;
+        }
+    }
+
+    /// Fetch page `idx` from storage — the plan-level read-modify-write
+    /// pre-read. Dirty bytes are preserved; only clean bytes take the
+    /// storage contents. The pre-read runs on the same storage handle as
+    /// every other access, so degraded-mode advisories queue on the
+    /// backend for `File::take_advisories` — nothing here drains or
+    /// converts them.
+    fn fetch(&self, st: &mut CacheState, idx: u64) -> Result<()> {
+        let ps = self.page_size as usize;
+        let page = st.pages.entry(idx).or_insert_with(|| Page::new(ps));
+        if page.fetched {
+            return Ok(());
+        }
+        if !page.dirty.is_empty() {
+            self.stats.add(Counter::RmwCycles, 1);
+        }
+        let mut from_store = vec![0u8; ps];
+        // Short at EOF only; the tail stays zeros, like a file hole.
+        self.storage.read_at(idx * self.page_size, &mut from_store)?;
+        let mut at = 0usize;
+        for &(s, e) in &page.dirty {
+            page.buf[at..s].copy_from_slice(&from_store[at..s]);
+            at = e;
+        }
+        page.buf[at..].copy_from_slice(&from_store[at..]);
+        page.fetched = true;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Flushing
+    // ------------------------------------------------------------------
+
+    /// Flush every dirty extent to storage as coalesced runs; returns
+    /// the bytes written. Extents are snapshotted and marked clean under
+    /// the page-table lock, then written outside it (concurrent writes
+    /// re-dirty their pages and flush next time); `flush_gate`
+    /// serializes overlapping flushes so writes never reorder. On a
+    /// failed flush the snapshotted bytes are lost and the error is the
+    /// caller's (or, from the background lane, stored for the next
+    /// write/sync) — deferred-error write-behind semantics.
+    pub(crate) fn flush(&self) -> Result<usize> {
+        let _gate = self.flush_gate.lock().unwrap();
+        let (runs, payload) = {
+            let mut st = self.state.lock().unwrap();
+            let st = &mut *st;
+            let mut runs: Vec<(u64, usize)> = Vec::new();
+            let mut payload: Vec<u8> = Vec::new();
+            let dirty_pages: Vec<u64> = st
+                .pages
+                .iter()
+                .filter(|(_, p)| !p.dirty.is_empty())
+                .map(|(&i, _)| i)
+                .collect();
+            for idx in dirty_pages {
+                // Gap-filling RMW: a multi-extent page flushes as one
+                // covering run, which needs real file bytes between the
+                // extents. If the pre-read fails (a truly dead region),
+                // degrade to extent-only writes rather than losing the
+                // dirty data or inventing gap bytes.
+                let needs_fill = {
+                    let p = &st.pages[&idx];
+                    p.dirty.len() > 1 && !p.fetched
+                };
+                let whole = !needs_fill || self.fetch(st, idx).is_ok();
+                let base = idx * self.page_size;
+                let page = st.pages.get_mut(&idx).expect("dirty page resident");
+                let spans: Vec<(usize, usize)> = if whole && page.fetched {
+                    vec![(page.dirty[0].0, page.dirty[page.dirty.len() - 1].1)]
+                } else {
+                    page.dirty.clone()
+                };
+                for (s, e) in spans {
+                    let abs = base + s as u64;
+                    if let Some(last) = runs.last_mut() {
+                        if last.0 + last.1 as u64 == abs {
+                            last.1 += e - s;
+                            payload.extend_from_slice(&page.buf[s..e]);
+                            continue;
+                        }
+                    }
+                    runs.push((abs, e - s));
+                    payload.extend_from_slice(&page.buf[s..e]);
+                }
+                st.dirty_bytes -= page.dirty_bytes() as u64;
+                page.dirty.clear();
+            }
+            (runs, payload)
+        };
+        if runs.is_empty() {
+            return Ok(0);
+        }
+        if runs.len() > 1 {
+            self.storage.write_plan(&runs, &payload)?;
+        } else {
+            self.storage.write_at(runs[0].0, &payload)?;
+        }
+        self.stats.add(Counter::WriteBehindFlushBytes, payload.len() as u64);
+        Ok(payload.len())
+    }
+
+    /// Queue a flush on the cache's progress lane once the dirty level
+    /// crosses the high-water mark (at most one queued at a time). In a
+    /// forked child without a usable lane the flush runs inline.
+    fn maybe_background_flush(this: &Arc<PageCache>) {
+        if this.state.lock().unwrap().dirty_bytes < this.high_water {
+            return;
+        }
+        if this.flush_queued.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let me = this.clone();
+        this.lane().submit_or_run(move || {
+            me.flush_queued.store(false, Ordering::SeqCst);
+            if let Err(e) = me.flush() {
+                *me.flush_err.lock().unwrap() = Some(e);
+            }
+        });
+    }
+
+    /// The flush lane, spawned on first use (and respawned after a fork
+    /// made the inherited worker unusable).
+    fn lane(&self) -> Arc<ProgressEngine> {
+        let mut lane = self.lane.lock().unwrap();
+        match lane.as_ref() {
+            Some(engine) if engine.usable() => engine.clone(),
+            _ => {
+                let engine =
+                    Arc::new(ProgressEngine::spawn(format!("jpio-cache-flush-{}", self.rank)));
+                *lane = Some(engine.clone());
+                engine
+            }
+        }
+    }
+
+    /// Wait out any in-flight background flush.
+    fn quiesce(&self) {
+        let lane = self.lane.lock().unwrap().clone();
+        if let Some(engine) = lane {
+            engine.quiesce();
+        }
+    }
+
+    /// Evict least-recently-used clean pages down to the budget,
+    /// flushing first when only dirty pages remain.
+    fn enforce_budget(&self) -> Result<()> {
+        if self.evict_clean() {
+            return Ok(());
+        }
+        self.flush()?;
+        self.evict_clean();
+        Ok(())
+    }
+
+    /// Evict clean LRU pages; `true` when the budget holds afterwards.
+    fn evict_clean(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.pages.len() > self.max_pages {
+            let victim = st
+                .pages
+                .iter()
+                .filter(|(_, p)| p.dirty.is_empty())
+                .min_by_key(|(_, p)| p.stamp)
+                .map(|(&i, _)| i);
+            match victim {
+                Some(i) => {
+                    st.pages.remove(&i);
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // Coherence points
+    // ------------------------------------------------------------------
+
+    /// Flush and drop every resident page, and mark the cached EOF
+    /// stale — the next access re-observes it from storage, *after* the
+    /// operation this call fences has moved it. The coherence point for
+    /// paths that hand the file to agents the cache cannot see:
+    /// collective two-phase execution, atomic-mode operations, and size
+    /// changes.
+    pub(crate) fn flush_and_invalidate(&self) -> Result<()> {
+        self.flush()?;
+        let mut st = self.state.lock().unwrap();
+        st.pages.clear();
+        st.dirty_bytes = 0;
+        st.size_stale = true;
+        Ok(())
+    }
+
+    /// The `sync`/`close` coherence point: drain the flush lane, flush,
+    /// surface any stored background-flush error, and run the lease
+    /// protocol — a sync that published data bumps the
+    /// `<path>.jpio-cache-lease` generation; a sync that observes a
+    /// generation another handle bumped invalidates every resident page
+    /// (MPI §7.2.6.1 writer-sync / reader-sync visibility).
+    pub(crate) fn sync_point(&self) -> Result<()> {
+        self.quiesce();
+        if let Some(e) = self.flush_err.lock().unwrap().take() {
+            return Err(e);
+        }
+        let flushed = self.flush()?;
+        let mut st = self.state.lock().unwrap();
+        if flushed > 0 {
+            let gen = read_lease(&self.lease_path).wrapping_add(1);
+            std::fs::write(&self.lease_path, gen.to_le_bytes())
+                .map_err(|e| IoError::from_os(e, "cache lease write"))?;
+            st.lease_seen = gen;
+        }
+        let gen = read_lease(&self.lease_path);
+        if gen != st.lease_seen {
+            st.pages.clear();
+            st.dirty_bytes = 0;
+            st.logical_size = self.storage.size().unwrap_or(st.logical_size);
+            st.size_stale = false;
+            st.lease_seen = gen;
+        }
+        Ok(())
+    }
+
+    /// The cached EOF (storage size advanced by unflushed writes).
+    pub(crate) fn logical_size(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        self.refresh_size(&mut st);
+        st.logical_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::local::LocalBackend;
+    use crate::storage::Backend;
+
+    fn cache_at(path: &str, extra: &[(&str, &str)]) -> (Arc<PageCache>, Arc<dyn StorageFile>) {
+        let mut info = Info::from([(keys::CACHE, "enable")]);
+        for &(k, v) in extra {
+            info.set(k, v);
+        }
+        let storage = LocalBackend::instant().open(path, crate::storage::OpenOptions::rw_create())
+            .unwrap();
+        let cache = PageCache::from_info(
+            &info,
+            path,
+            storage.clone(),
+            crate::io::stats::FileStats::disabled(),
+            0,
+        )
+        .unwrap();
+        (cache, storage)
+    }
+
+    fn cleanup(path: &str) {
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
+    }
+
+    #[test]
+    fn disabled_hint_builds_no_cache() {
+        let path = format!("/tmp/jpio-cache-off-{}", std::process::id());
+        let storage =
+            LocalBackend::instant().open(&path, crate::storage::OpenOptions::rw_create()).unwrap();
+        assert!(PageCache::from_info(
+            &Info::null(),
+            &path,
+            storage.clone(),
+            crate::io::stats::FileStats::disabled(),
+            0
+        )
+        .is_none());
+        assert!(PageCache::from_info(
+            &Info::from([(keys::CACHE, "disable")]),
+            &path,
+            storage,
+            crate::io::stats::FileStats::disabled(),
+            0
+        )
+        .is_none());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn write_behind_coalesces_strided_extents_into_one_run() {
+        let path = format!("/tmp/jpio-cache-coalesce-{}", std::process::id());
+        let (cache, storage) = cache_at(&path, &[]);
+        // 16 strided 64-byte writes inside one page: nothing on storage
+        // until the flush, which lands them (plus the fetched gap bytes)
+        // as one covering run.
+        storage.write_at(0, &[0xEEu8; 2048]).unwrap();
+        cache.flush_and_invalidate().unwrap();
+        for i in 0..16u64 {
+            let plan = IoPlan::from_runs(vec![(i * 128, 64)], false);
+            PageCache::write_plan(&cache, &plan, &[i as u8; 64]).unwrap();
+        }
+        assert_eq!(cache.state.lock().unwrap().dirty_bytes, 16 * 64);
+        let flushed = cache.flush().unwrap();
+        // One covering span [0, 15*128+64): dirty bytes plus RMW-fetched
+        // gap bytes written back unchanged.
+        assert_eq!(flushed, 15 * 128 + 64);
+        let mut back = vec![0u8; 2048];
+        storage.read_at(0, &mut back).unwrap();
+        for i in 0..16usize {
+            assert_eq!(&back[i * 128..i * 128 + 64], &[i as u8; 64]);
+            if i < 15 {
+                assert_eq!(&back[i * 128 + 64..(i + 1) * 128], &[0xEEu8; 64], "gap bytes");
+            }
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn read_hits_after_miss_and_respects_eof() {
+        let path = format!("/tmp/jpio-cache-read-{}", std::process::id());
+        let (cache, storage) = cache_at(&path, &[]);
+        let data: Vec<u8> = (0..200u8).collect();
+        storage.write_at(0, &data).unwrap();
+        cache.flush_and_invalidate().unwrap(); // observe the new EOF
+        let stats = cache.stats.clone();
+        let plan = IoPlan::from_runs(vec![(10, 50)], false);
+        let mut buf = vec![0u8; 50];
+        assert_eq!(cache.read_plan(&plan, &mut buf).unwrap(), 50);
+        assert_eq!(buf, data[10..60]);
+        let miss0 = stats.value(Counter::CacheMissBytes);
+        assert!(miss0 >= 50, "first read must miss");
+        assert_eq!(cache.read_plan(&plan, &mut buf).unwrap(), 50);
+        assert_eq!(stats.value(Counter::CacheMissBytes), miss0, "repeat read must not miss");
+        assert_eq!(stats.value(Counter::CacheHitBytes), 50);
+        // Reads past EOF are short, stopping at the first short run.
+        let plan = IoPlan::from_runs(vec![(150, 50), (300, 10)], false);
+        let mut buf = vec![0u8; 60];
+        assert_eq!(cache.read_plan(&plan, &mut buf).unwrap(), 50);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn cached_writes_are_read_back_before_any_flush() {
+        let path = format!("/tmp/jpio-cache-rwb-{}", std::process::id());
+        let (cache, storage) = cache_at(&path, &[]);
+        let plan = IoPlan::from_runs(vec![(100, 8), (300, 8)], false);
+        let payload: Vec<u8> = (0..16).collect();
+        PageCache::write_plan(&cache, &plan, &payload).unwrap();
+        assert_eq!(storage.size().unwrap(), 0, "write-behind: storage untouched");
+        assert_eq!(cache.logical_size(), 308);
+        let mut back = vec![0u8; 16];
+        assert_eq!(cache.read_plan(&plan, &mut back).unwrap(), 16);
+        assert_eq!(back, payload);
+        cache.sync_point().unwrap();
+        assert_eq!(storage.size().unwrap(), 308);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn budget_evicts_clean_pages_and_flushes_dirty_ones() {
+        let path = format!("/tmp/jpio-cache-budget-{}", std::process::id());
+        // Budget of exactly 2 pages (the floor) at the 64 KiB default.
+        let (cache, storage) = cache_at(&path, &[(keys::CACHE_SIZE, "1")]);
+        assert_eq!(cache.max_pages, 2);
+        let ps = cache.page_size;
+        for i in 0..6u64 {
+            let plan = IoPlan::from_runs(vec![(i * ps, 16)], false);
+            PageCache::write_plan(&cache, &plan, &[i as u8; 16]).unwrap();
+        }
+        assert!(cache.state.lock().unwrap().pages.len() <= 2, "budget must hold");
+        // Every evicted page was flushed first: the data survives.
+        cache.sync_point().unwrap();
+        let mut back = vec![0u8; 16];
+        for i in 0..6u64 {
+            storage.read_at(i * ps, &mut back).unwrap();
+            assert_eq!(back, [i as u8; 16], "page {i} lost by eviction");
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn lease_sync_invalidates_the_other_handles_pages() {
+        let path = format!("/tmp/jpio-cache-lease-{}", std::process::id());
+        let (writer, storage) = cache_at(&path, &[]);
+        let (reader, _) = cache_at(&path, &[]);
+        storage.write_at(0, &[1u8; 64]).unwrap();
+        writer.flush_and_invalidate().unwrap();
+        reader.flush_and_invalidate().unwrap();
+        // Reader caches the old bytes.
+        let plan = IoPlan::from_runs(vec![(0, 64)], false);
+        let mut buf = vec![0u8; 64];
+        reader.read_plan(&plan, &mut buf).unwrap();
+        assert_eq!(buf, [1u8; 64]);
+        // Writer overwrites through its cache and syncs (bumps lease).
+        PageCache::write_plan(&writer, &plan, &[2u8; 64]).unwrap();
+        writer.sync_point().unwrap();
+        // Without a sync the reader still serves its resident page…
+        reader.read_plan(&plan, &mut buf).unwrap();
+        assert_eq!(buf, [1u8; 64]);
+        // …and its own sync observes the bumped lease and refetches.
+        reader.sync_point().unwrap();
+        reader.read_plan(&plan, &mut buf).unwrap();
+        assert_eq!(buf, [2u8; 64]);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn write_through_hint_flushes_every_write() {
+        let path = format!("/tmp/jpio-cache-wt-{}", std::process::id());
+        let (cache, storage) = cache_at(&path, &[(keys::WRITE_BEHIND, "disable")]);
+        let plan = IoPlan::from_runs(vec![(0, 32)], false);
+        PageCache::write_plan(&cache, &plan, &[7u8; 32]).unwrap();
+        let mut back = vec![0u8; 32];
+        assert_eq!(storage.read_at(0, &mut back).unwrap(), 32, "write-through must land");
+        assert_eq!(back, [7u8; 32]);
+        assert_eq!(cache.state.lock().unwrap().dirty_bytes, 0);
+        cleanup(&path);
+    }
+}

@@ -97,6 +97,10 @@ pub struct File<'c> {
     /// ([`crate::io::stats`]); counters always on, timers/tracing gated
     /// on the `jpio_stats` hint.
     pub(crate) stats: Arc<FileStats>,
+    /// Client-side page cache ([`crate::io::cache`]), built when
+    /// `jpio_cache = enable`; `None` keeps the access path byte-identical
+    /// to the uncached library.
+    pub(crate) cache: Option<Arc<crate::io::cache::PageCache>>,
     /// The collectively reduced stats report, filled at close when
     /// `jpio_stats` is set; [`File::stats`] serves it afterwards.
     pub(crate) reduced_stats: Mutex<Option<StatsReport>>,
@@ -252,6 +256,13 @@ impl<'c> File<'c> {
         let indiv_init =
             if mode & amode::APPEND != 0 { storage.size().unwrap_or(0) as i64 } else { 0 };
         let stats = FileStats::from_info(&info, comm.rank());
+        let cache = crate::io::cache::PageCache::from_info(
+            &info,
+            filename,
+            storage.clone(),
+            stats.clone(),
+            comm.rank(),
+        );
         Ok(File {
             comm,
             storage,
@@ -267,6 +278,7 @@ impl<'c> File<'c> {
             split: Mutex::new(None),
             plan_cache: PlanCache::new(),
             stats,
+            cache,
             reduced_stats: Mutex::new(None),
             lane_seq: AtomicUsize::new(0),
             lane_order: Arc::new(crate::io::engine::OpSequencer::new()),
@@ -291,6 +303,12 @@ impl<'c> File<'c> {
                 }
             }
         }
+        // Close is a coherence point (§7.2.6.1): drain the write-behind
+        // lane and publish every dirty page — before the stats reduction
+        // so the flush counters land in the reduced report.
+        if let Some(cache) = &self.cache {
+            cache.sync_point()?;
+        }
         // Darshan-style shared-file record: reduce the per-rank stats
         // collectively while the handle is still open. `jpio_stats` is a
         // collective hint, so every rank reaches this allgather alike.
@@ -302,6 +320,7 @@ impl<'c> File<'c> {
         if self.amode & amode::DELETE_ON_CLOSE != 0 && self.comm.rank() == 0 {
             self.backend.delete(&self.path)?;
             let _ = std::fs::remove_file(&self.sfp_path);
+            let _ = std::fs::remove_file(format!("{}.jpio-cache-lease", self.path));
         }
         self.comm.barrier();
         Ok(())
@@ -312,6 +331,7 @@ impl<'c> File<'c> {
         let backend = backend_from_info(info)?;
         backend.delete(filename)?;
         let _ = std::fs::remove_file(format!("{filename}.jpio-sfp"));
+        let _ = std::fs::remove_file(format!("{filename}.jpio-cache-lease"));
         Ok(())
     }
 
@@ -321,6 +341,11 @@ impl<'c> File<'c> {
         self.check_writable()?;
         if size < 0 {
             return Err(err_arg(format!("setSize: negative size {size}")));
+        }
+        // Size changes are a coherence point: resident pages past the
+        // new EOF (and the cached logical size) would go stale.
+        if let Some(cache) = &self.cache {
+            cache.flush_and_invalidate()?;
         }
         if self.comm.rank() == 0 {
             self.storage.set_size(size as u64)?;
@@ -336,6 +361,9 @@ impl<'c> File<'c> {
         if size < 0 {
             return Err(err_arg(format!("preallocate: negative size {size}")));
         }
+        if let Some(cache) = &self.cache {
+            cache.flush_and_invalidate()?;
+        }
         if self.comm.rank() == 0 {
             self.storage.preallocate(size as u64)?;
         }
@@ -343,9 +371,14 @@ impl<'c> File<'c> {
         Ok(())
     }
 
-    /// Current file size in bytes (`MPI_FILE_GET_SIZE`).
+    /// Current file size in bytes (`MPI_FILE_GET_SIZE`). With the page
+    /// cache enabled this is the cached logical size — the storage EOF
+    /// advanced by this handle's unflushed write-behind data.
     pub fn get_size(&self) -> Result<Offset> {
         self.check_open()?;
+        if let Some(cache) = &self.cache {
+            return Ok(cache.logical_size() as Offset);
+        }
         Ok(self.storage.size()? as Offset)
     }
 
@@ -425,6 +458,14 @@ impl<'c> File<'c> {
         if all.iter().any(|v| v[0] != flag as u8) {
             return Err(err_not_same("setAtomicity: flag differs across ranks"));
         }
+        // Entering atomic mode is a coherence point: atomic operations
+        // serialize under the whole-file lock, and data resident in this
+        // handle's pages would hide behind it.
+        if flag {
+            if let Some(cache) = &self.cache {
+                cache.flush_and_invalidate()?;
+            }
+        }
         self.atomic.store(flag, Ordering::SeqCst);
         Ok(())
     }
@@ -435,9 +476,17 @@ impl<'c> File<'c> {
     }
 
     /// Flush this process's writes to storage and make other processes'
-    /// synced updates visible (`MPI_FILE_SYNC`, collective).
+    /// synced updates visible (`MPI_FILE_SYNC`, collective). With the
+    /// page cache enabled this is *the* coherence point: dirty pages
+    /// flush, the write-behind lane drains, and the
+    /// `<path>.jpio-cache-lease` protocol makes a writer's sync
+    /// invalidate a reader's resident pages at the reader's own sync
+    /// (the MPI writer-sync / barrier / reader-sync pattern).
     pub fn sync(&self) -> Result<()> {
         self.check_open()?;
+        if let Some(cache) = &self.cache {
+            cache.sync_point()?;
+        }
         self.storage.sync()
     }
 
@@ -525,6 +574,13 @@ impl Drop for File<'_> {
             match p {
                 SplitPending::Read { req, .. } => drop(req.wait()),
                 SplitPending::Write { req, .. } => drop(req.wait()),
+            }
+        }
+        // Best-effort write-behind drain: data in dirty pages must not
+        // die with the handle. Errors have nowhere to go from drop.
+        if !self.closed.load(Ordering::SeqCst) {
+            if let Some(cache) = &self.cache {
+                let _ = cache.sync_point();
             }
         }
     }

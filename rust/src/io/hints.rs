@@ -102,6 +102,31 @@ pub mod keys {
     /// path disables tracing rather than failing the open (MPI hint
     /// semantics).
     pub const STATS_TRACE: &str = "jpio_stats_trace";
+    /// Client-side page cache with write-behind
+    /// ([`crate::io::cache`]): `disable` (default; every access goes
+    /// straight to storage, byte-identical to the uncached path) |
+    /// `enable`. Independent data access is absorbed by per-File pages;
+    /// `sync`, `close`, size changes, collective phases, and enabling
+    /// atomic mode are the coherence points that flush and invalidate.
+    /// Cross-process coherence rides a `<path>.jpio-cache-lease`
+    /// sidecar (the shared-pointer sidecar machinery): `sync` bumps the
+    /// lease generation and readers invalidate on change.
+    pub const CACHE: &str = "jpio_cache";
+    /// Page-cache byte budget per File (requires `jpio_cache = enable`);
+    /// default 8 MiB. Rounded up to one page; when the budget fills,
+    /// dirty pages flush and clean pages evict, least recently used
+    /// first.
+    pub const CACHE_SIZE: &str = "jpio_cache_size";
+    /// Pages to read ahead past a cache miss: `0` (default) | `k`.
+    /// Sequential re-reads within the prefetched window become hits.
+    /// Requires `jpio_cache = enable`.
+    pub const PREFETCH: &str = "jpio_prefetch";
+    /// Write-behind for the page cache: `enable` (default; small writes
+    /// accumulate in dirty pages and coalesce into stripe-aligned
+    /// flushes, drained on the progress lane past the high-water mark) |
+    /// `disable` (every cached write flushes before returning —
+    /// write-through). Requires `jpio_cache = enable`.
+    pub const WRITE_BEHIND: &str = "jpio_write_behind";
 }
 
 impl Info {

@@ -18,6 +18,7 @@
 //! | §7.2.7/8 error handling & classes | [`errors`] |
 //! | Info hints | [`hints`] |
 //! | unified access-plan compiler | [`plan`] |
+//! | client-side page cache + write-behind | [`cache`] |
 //! | plan execution (sync / engine / two-phase) + plan cache | [`schedule`] |
 //! | nonblocking request engine | [`engine`] |
 //! | Darshan-style instrumentation (counters, phase timers, traces) | [`stats`] |
@@ -38,6 +39,7 @@
 //! [`op::access_cells`] so it cannot drift from the implementation).
 
 pub mod access;
+pub mod cache;
 pub mod collective;
 pub mod datarep;
 pub mod engine;

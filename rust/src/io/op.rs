@@ -45,6 +45,7 @@ use std::sync::Arc;
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::progress::ProgressLane;
 use crate::comm::Status;
+use crate::io::cache::PageCache;
 use crate::io::collective::{self, CbParams, WriteIoWork};
 use crate::io::engine::{self, Request};
 use crate::io::errors::{err_arg, err_io, err_request, err_unsupported_op, Result};
@@ -454,6 +455,11 @@ pub(crate) struct TransferCtx {
     /// the scheduler, phase drivers, and progress-lane jobs record into
     /// it without borrowing the `File`.
     pub stats: Arc<FileStats>,
+    /// The handle's page cache (`jpio_cache = enable`), `None` on the
+    /// default uncached path. The scheduler routes independent
+    /// non-atomic plans through it and flushes it at the two-phase and
+    /// atomic coherence points.
+    pub cache: Option<Arc<PageCache>>,
 }
 
 /// Validate the memory-side arguments of `(buf, buf_offset, count,
@@ -559,6 +565,7 @@ impl File<'_> {
             view: self.view_snapshot(),
             atomic: self.get_atomicity(),
             stats: self.stats.clone(),
+            cache: self.cache.clone(),
         }
     }
 
@@ -598,6 +605,14 @@ impl File<'_> {
             ));
         }
         let ctx = self.transfer_ctx();
+        // Coherence point: collective (and ordered) execution hands the
+        // transfer to aggregators and peer ranks the cache cannot see,
+        // so resident pages must flush and drop before the exchange.
+        if !matches!(op.coordination, Coordination::Independent) {
+            if let Some(cache) = &ctx.cache {
+                cache.flush_and_invalidate()?;
+            }
+        }
         self.stats.record(Phase::Validate, t0);
         Ok(ctx)
     }

@@ -114,6 +114,12 @@ impl IoPlan {
         self.runs.is_empty()
     }
 
+    /// Iterate the plan's segments as `(file_off, len, payload_pos)` —
+    /// the runs zipped with their payload positions, in file order.
+    pub fn segments(&self) -> impl Iterator<Item = (u64, usize, usize)> + '_ {
+        self.runs.iter().zip(&self.positions).map(|(&(off, len), &pos)| (off, len, pos))
+    }
+
     /// The file byte range `[min, max)` the plan touches, `None` when
     /// empty. Runs are sorted, so this is first-start .. last-end.
     pub fn bounds(&self) -> Option<(u64, u64)> {

@@ -41,6 +41,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::comm::Status;
+use crate::io::cache::PageCache;
 use crate::io::collective::{decode_runs, WriteIoWork};
 use crate::io::engine::{self, Request};
 use crate::io::errors::Result;
@@ -171,6 +172,17 @@ impl IoScheduler {
     /// Timed as the `storage` phase.
     pub(crate) fn write(ctx: &TransferCtx, plan: &IoPlan, payload: &[u8]) -> Result<Status> {
         let t0 = ctx.stats.start();
+        if let Some(cache) = &ctx.cache {
+            if plan.atomic {
+                // Atomic-mode coherence point: serialize under the
+                // whole-file lock below, which resident pages can't see.
+                cache.flush_and_invalidate()?;
+            } else {
+                let n = PageCache::write_plan(cache, plan, payload)?;
+                ctx.stats.record(Phase::Storage, t0);
+                return Ok(Status::of_bytes(n));
+            }
+        }
         let _guard = if plan.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
         let n = if ctx.storage.prefers_plan_execution() && plan.runs.len() > 1 {
             ctx.storage.write_plan(&plan.runs, payload)?
@@ -185,6 +197,18 @@ impl IoScheduler {
     /// (short at EOF) after datarep decode. Timed as the `storage` phase.
     pub(crate) fn read(ctx: &TransferCtx, plan: &IoPlan, payload: &mut [u8]) -> Result<usize> {
         let t0 = ctx.stats.start();
+        if let Some(cache) = &ctx.cache {
+            if plan.atomic {
+                cache.flush_and_invalidate()?;
+            } else {
+                let got = cache.read_plan(plan, payload)?;
+                if plan.needs_convert() {
+                    plan.datarep.decode(&mut payload[..got], &plan.decode_elems(got));
+                }
+                ctx.stats.record(Phase::Storage, t0);
+                return Ok(got);
+            }
+        }
         let got = {
             let _guard = if plan.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
             if ctx.storage.prefers_plan_execution() && plan.runs.len() > 1 {
@@ -262,6 +286,12 @@ impl IoScheduler {
         pieces.sort_by_key(|&(off, ..)| off);
         if pieces.is_empty() {
             return Ok(());
+        }
+        // Two-phase coherence point: the aggregator writes bytes other
+        // ranks own, so this rank's resident pages go stale here — and
+        // its own dirty pages must land first to keep write order.
+        if let Some(cache) = &ctx.cache {
+            cache.flush_and_invalidate()?;
         }
         let cb_buffer = work.cb_buffer;
         let strat = ViewBufStrategy::with_stage(cb_buffer);
@@ -414,6 +444,12 @@ impl IoScheduler {
         if runs.is_empty() {
             return Ok(0);
         }
+        // Two-phase coherence point: the aggregator reads bytes for
+        // other ranks, so this rank's dirty pages must be visible on
+        // storage before the pre-read.
+        if let Some(cache) = &ctx.cache {
+            cache.flush_and_invalidate()?;
+        }
         let _guard = if ctx.atomic { Some(ctx.storage.lock_exclusive()?) } else { None };
         if ctx.storage.prefers_plan_execution() && runs.len() > 1 {
             let got = ctx.storage.read_plan(runs, buf)?;
@@ -492,6 +528,7 @@ mod tests {
             view: Arc::new(FileView::default()),
             atomic: false,
             stats: crate::io::stats::FileStats::disabled(),
+            cache: None,
         }
     }
 
@@ -611,6 +648,7 @@ mod tests {
             view: Arc::new(FileView::default()),
             atomic: false,
             stats: crate::io::stats::FileStats::disabled(),
+            cache: None,
         };
         let plan = IoPlan::from_runs(vec![(3, 20), (40, 9), (70, 12)], false);
         let payload: Vec<u8> = (0..41u8).collect();
@@ -679,6 +717,7 @@ mod tests {
             view: Arc::new(FileView::default()),
             atomic: false,
             stats: crate::io::stats::FileStats::disabled(),
+            cache: None,
         };
         // Disjoint pieces spanning stripe boundaries, from two ranks:
         // the plan-execution backend must take them in place.

@@ -94,12 +94,22 @@ pub(crate) enum Counter {
     /// Payload bytes the collective write phase copied through staging
     /// buffers (0 when the zero-copy piece dispatch served the op).
     StagingCopyBytes,
+    /// Bytes served from resident page-cache data (no storage access).
+    CacheHitBytes,
+    /// Bytes whose pages had to be fetched from storage on access.
+    CacheMissBytes,
+    /// Dirty bytes the write-behind cache flushed to storage.
+    WriteBehindFlushBytes,
+    /// Read-modify-write cycles: page pre-reads forced by partial dirty
+    /// data (cache) — folded with the parity small-write RMWs in the
+    /// striped backend's own counter.
+    RmwCycles,
 }
 
 impl Counter {
     /// Every counter, in wire order (the close-time reduction serializes
     /// values in this order, so it must be identical on all ranks).
-    pub(crate) const ALL: [Counter; 19] = [
+    pub(crate) const ALL: [Counter; 23] = [
         Counter::ReadOps,
         Counter::WriteOps,
         Counter::IndependentOps,
@@ -119,6 +129,10 @@ impl Counter {
         Counter::DatarepConvertedOps,
         Counter::DegradedAdvisories,
         Counter::StagingCopyBytes,
+        Counter::CacheHitBytes,
+        Counter::CacheMissBytes,
+        Counter::WriteBehindFlushBytes,
+        Counter::RmwCycles,
     ];
 
     /// The report/trace name of the counter.
@@ -143,6 +157,10 @@ impl Counter {
             Counter::DatarepConvertedOps => "datarep_converted_ops",
             Counter::DegradedAdvisories => "degraded_advisories",
             Counter::StagingCopyBytes => "staging_copy_bytes",
+            Counter::CacheHitBytes => "cache_hit_bytes",
+            Counter::CacheMissBytes => "cache_miss_bytes",
+            Counter::WriteBehindFlushBytes => "write_behind_flush_bytes",
+            Counter::RmwCycles => "rmw_cycles",
         }
     }
 }

@@ -195,7 +195,7 @@ fn stats(args: &Args) {
         let path = path.clone();
         let trace = trace.clone();
         move |c: &dyn Comm| {
-            let mut info = Info::from([("jpio_stats", "true")]);
+            let mut info = Info::from([("jpio_stats", "true"), ("jpio_cache", "enable")]);
             if let Some(t) = &trace {
                 info.set("jpio_stats_trace", t.as_str());
             }
@@ -204,8 +204,27 @@ fn stats(args: &Args) {
             let r = c.rank();
             let k = 1024usize;
             let mine: Vec<i32> = (0..k).map(|i| (r * k + i) as i32).collect();
-            // Independent explicit-offset write of this rank's block.
+            // Independent explicit-offset write of this rank's block,
+            // published by the sync so the strided re-writes below start
+            // from a clean cache.
             f.write_at((r * k) as i64, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            f.sync().unwrap();
+            // Small strided re-writes through the page cache: absorbed
+            // by dirty pages (write-behind), coalesced at the sync
+            // below into one covering run whose gap-filling pre-read is
+            // the read-modify-write cycle — the cache_*_bytes /
+            // write_behind_flush_bytes / rmw_cycles rows of the report.
+            for i in (0..k).step_by(64) {
+                f.write_at(
+                    (r * k + i) as i64,
+                    &mine.as_slice()[i..i + 16],
+                    0,
+                    16,
+                    &Datatype::INT,
+                )
+                .unwrap();
+            }
+            f.sync().unwrap();
             c.barrier();
             // Collective read of the whole file (two-phase exchange).
             let n = k * c.size();
@@ -231,6 +250,7 @@ fn stats(args: &Args) {
     }
     let _ = std::fs::remove_file(&path);
     let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
     if let Some(t) = &trace {
         println!("trace: one JSONL file per rank at {t}.<rank>");
     }

@@ -268,6 +268,10 @@ impl StorageFile for FaultFile {
         self.inner.stripe_map()
     }
 
+    fn preferred_flush_alignment(&self) -> Option<u64> {
+        self.inner.preferred_flush_alignment()
+    }
+
     fn take_advisories(&self) -> Vec<IoError> {
         self.inner.take_advisories()
     }

@@ -194,6 +194,16 @@ pub trait StorageFile: Send + Sync {
             .map(|layout| layout::StripeMap { layout, redundancy: layout::Redundancy::None })
     }
 
+    /// Preferred alignment (bytes) for large coalesced writes, queried
+    /// by the client-side page cache ([`crate::io::cache`]) to size its
+    /// pages: a flush that covers whole aligned extents lands as full
+    /// stripe rows and never pays a parity read-modify-write. Defaults
+    /// to one data row on striped storage and `None` (no preference)
+    /// on single-device backends.
+    fn preferred_flush_alignment(&self) -> Option<u64> {
+        self.stripe_map().map(|m| m.data_width())
+    }
+
     /// Drain pending advisory errors: conditions where an operation
     /// *succeeded* but the file is running degraded — today the striped
     /// backend's replica/parity reconstruction around a failed server

@@ -1,0 +1,255 @@
+//! Page-cache coherence: the `jpio_cache` write-behind layer must honour
+//! the MPI consistency contract (§7.2.6.1 writer-sync → barrier →
+//! reader-sync), keep atomic mode strictly serialized, stay
+//! byte-identical to the uncached path, and preserve degraded-mode
+//! advisories raised by its read-modify-write pre-reads — across forked
+//! processes, not just threads.
+
+use std::sync::Arc;
+
+use jpio::comm::{process, threads, Comm, Datatype};
+use jpio::io::{amode, ErrorClass, File, Info};
+use jpio::storage::faults::{FaultBackend, FaultPlan};
+use jpio::storage::layout::Redundancy;
+use jpio::storage::local::LocalBackend;
+use jpio::storage::striped::StripedBackend;
+use jpio::storage::Backend;
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-cachetest-{}-{name}", std::process::id())
+}
+
+fn cache_info() -> Info {
+    Info::from([("jpio_cache", "enable")])
+}
+
+fn cleanup(path: &str) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
+}
+
+/// Writer-sync → barrier → reader-sync across forked processes: the
+/// reader's sync must observe the writer's lease bump, invalidate its
+/// resident pages, and see the write-behind data.
+#[test]
+fn sync_makes_cached_writes_visible_across_processes() {
+    let path = tmp("sync");
+    process::run_local(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, cache_info()).unwrap();
+        let n = 4096usize;
+        if c.rank() == 0 {
+            // Small strided writes absorbed by the cache, published at
+            // sync as coalesced flushes.
+            for off in (0..n).step_by(64) {
+                let piece: Vec<u8> = (off..off + 16).map(|v| v as u8).collect();
+                f.write_at(off as i64, piece.as_slice(), 0, 16, &Datatype::BYTE).unwrap();
+            }
+            f.sync().unwrap();
+        } else {
+            // Prime the reader's cache with the pre-write state so the
+            // later read cannot pass by accident of an empty cache.
+            let mut probe = vec![0u8; 16];
+            let _ = f.read_at(0, probe.as_mut_slice(), 0, 16, &Datatype::BYTE).unwrap();
+        }
+        c.barrier();
+        if c.rank() == 1 {
+            f.sync().unwrap();
+            for off in (0..n).step_by(64) {
+                let mut back = vec![0u8; 16];
+                assert_eq!(
+                    f.read_at(off as i64, back.as_mut_slice(), 0, 16, &Datatype::BYTE)
+                        .unwrap()
+                        .bytes,
+                    16
+                );
+                let want: Vec<u8> = (off..off + 16).map(|v| v as u8).collect();
+                assert_eq!(back, want, "stale read at {off} after writer-sync/reader-sync");
+            }
+        }
+        c.barrier();
+        f.close().unwrap();
+    });
+    cleanup(&path);
+}
+
+/// Close is a coherence point: a second handle opened after the first
+/// closed must see every write-behind byte.
+#[test]
+fn close_publishes_write_behind_data_to_a_later_handle() {
+    let path = tmp("close");
+    threads::run(1, |c| {
+        let writer = File::open(c, &path, amode::RDWR | amode::CREATE, cache_info()).unwrap();
+        let data: Vec<u8> = (0..200u8).collect();
+        writer.write_at(40, data.as_slice(), 0, 200, &Datatype::BYTE).unwrap();
+        // Nothing forced the flush yet; close must.
+        writer.close().unwrap();
+        let reader = File::open(c, &path, amode::RDONLY, cache_info()).unwrap();
+        assert_eq!(reader.get_size().unwrap(), 240);
+        let mut back = vec![0u8; 200];
+        assert_eq!(
+            reader.read_at(40, back.as_mut_slice(), 0, 200, &Datatype::BYTE).unwrap().bytes,
+            200
+        );
+        assert_eq!(back, data);
+        reader.close().unwrap();
+    });
+    cleanup(&path);
+}
+
+/// Two live handles on one path in one process: the writer's sync and
+/// the reader's sync bracket visibility through the lease sidecar.
+#[test]
+fn writer_then_reader_handles_on_one_path() {
+    let path = tmp("two-handles");
+    threads::run(1, |c| {
+        let writer = File::open(c, &path, amode::RDWR | amode::CREATE, cache_info()).unwrap();
+        let reader = File::open(c, &path, amode::RDWR | amode::CREATE, cache_info()).unwrap();
+        writer.write_at(0, [1u8; 64].as_slice(), 0, 64, &Datatype::BYTE).unwrap();
+        writer.sync().unwrap();
+        reader.sync().unwrap();
+        let mut back = vec![0u8; 64];
+        reader.read_at(0, back.as_mut_slice(), 0, 64, &Datatype::BYTE).unwrap();
+        assert_eq!(back, [1u8; 64], "first generation not visible");
+        // Overwrite through the writer's cache; the reader still holds
+        // generation-1 pages until its own sync.
+        writer.write_at(0, [2u8; 64].as_slice(), 0, 64, &Datatype::BYTE).unwrap();
+        writer.sync().unwrap();
+        reader.sync().unwrap();
+        reader.read_at(0, back.as_mut_slice(), 0, 64, &Datatype::BYTE).unwrap();
+        assert_eq!(back, [2u8; 64], "reader-sync must invalidate resident pages");
+        writer.close().unwrap();
+        reader.close().unwrap();
+    });
+    cleanup(&path);
+}
+
+/// Atomic mode with the cache enabled: operations serialize under the
+/// whole-file lock and bypass resident pages entirely, so a write is
+/// visible to the other process immediately — no sync required.
+#[test]
+fn atomic_mode_is_coherent_without_sync_across_processes() {
+    let path = tmp("atomic");
+    process::run_local(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, cache_info()).unwrap();
+        f.set_atomicity(true).unwrap();
+        assert!(f.get_atomicity());
+        if c.rank() == 0 {
+            f.write_at(0, [9u8; 128].as_slice(), 0, 128, &Datatype::BYTE).unwrap();
+        }
+        c.barrier();
+        if c.rank() == 1 {
+            let mut back = vec![0u8; 128];
+            assert_eq!(
+                f.read_at(0, back.as_mut_slice(), 0, 128, &Datatype::BYTE).unwrap().bytes,
+                128
+            );
+            assert_eq!(back, [9u8; 128], "atomic write invisible to peer");
+        }
+        c.barrier();
+        f.close().unwrap();
+    });
+    cleanup(&path);
+}
+
+/// The same strided workload with the cache on and off must produce
+/// byte-identical files, and the cache-off run must count nothing.
+#[test]
+fn cache_off_path_is_byte_identical_with_zero_counters() {
+    let on = tmp("bytes-on");
+    let off = tmp("bytes-off");
+    threads::run(1, |c| {
+        for (path, info) in [(&on, cache_info()), (&off, Info::null())] {
+            let f = File::open(c, path, amode::RDWR | amode::CREATE, info.clone()).unwrap();
+            for i in 0..64usize {
+                let piece = [i as u8; 24];
+                f.write_at((i * 48) as i64, piece.as_slice(), 0, 24, &Datatype::BYTE).unwrap();
+            }
+            // Read-modify-write traffic: overwrite the middle of the
+            // strided region, then read a span back through the handle.
+            f.write_at(500, [0xABu8; 100].as_slice(), 0, 100, &Datatype::BYTE).unwrap();
+            let mut span = vec![0u8; 300];
+            f.read_at(400, span.as_mut_slice(), 0, 300, &Datatype::BYTE).unwrap();
+            let report = f.stats();
+            let cached: u64 = ["cache_hit_bytes", "cache_miss_bytes", "write_behind_flush_bytes"]
+                .iter()
+                .map(|k| report.counter(k).sum)
+                .sum();
+            if info.get("jpio_cache").is_some() {
+                assert!(cached > 0, "cache-on run must count cache traffic");
+            } else {
+                assert_eq!(cached, 0, "cache-off run must not touch the cache");
+            }
+            f.close().unwrap();
+        }
+    });
+    let a = std::fs::read(&on).unwrap();
+    let b = std::fs::read(&off).unwrap();
+    assert_eq!(a, b, "jpio_cache=enable changed the bytes on disk");
+    cleanup(&on);
+    cleanup(&off);
+}
+
+/// The cache's read-modify-write pre-read runs on the shared storage
+/// handle, so a degraded (parity-reconstructed) pre-read must leave its
+/// `JPIO_ERR_DEGRADED` advisories drainable through `take_advisories` —
+/// the flush must not eat them.
+#[test]
+fn rmw_pre_read_preserves_degraded_advisories() {
+    let plan_faults = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..4)
+        .map(|i| {
+            if i == 2 {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan_faults.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let backend: Arc<dyn Backend> =
+        Arc::new(StripedBackend::with_redundancy(children, 8, Redundancy::Parity).unwrap());
+    let path = tmp("degraded");
+    threads::run(1, |c| {
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            cache_info(),
+            backend.clone(),
+        )
+        .unwrap();
+        // Healthy baseline on storage.
+        let base: Vec<u8> = (0..96u8).collect();
+        f.write_at(0, base.as_slice(), 0, 96, &Datatype::BYTE).unwrap();
+        f.sync().unwrap();
+        assert!(f.take_advisories().is_empty(), "healthy write must not degrade");
+        // Kill a stripe server, then dirty two disjoint extents of one
+        // page: the flush coalesces them into a covering run, whose
+        // gap-filling pre-read reconstructs around the dead server.
+        plan_faults.inject_kill(ErrorClass::Io);
+        f.write_at(3, [0x11u8; 20].as_slice(), 0, 20, &Datatype::BYTE).unwrap();
+        f.write_at(70, [0x22u8; 12].as_slice(), 0, 12, &Datatype::BYTE).unwrap();
+        f.sync().unwrap();
+        let advisories = f.take_advisories();
+        assert!(!advisories.is_empty(), "degraded RMW pre-read must be advised");
+        assert!(advisories.iter().all(|a| a.class == ErrorClass::Degraded));
+        // The merged bytes are correct despite the reconstruction.
+        let mut back = vec![0u8; 96];
+        assert_eq!(
+            f.read_at(0, back.as_mut_slice(), 0, 96, &Datatype::BYTE).unwrap().bytes,
+            96
+        );
+        let mut want = base.clone();
+        want[3..23].copy_from_slice(&[0x11u8; 20]);
+        want[70..82].copy_from_slice(&[0x22u8; 12]);
+        assert_eq!(back, want);
+        // The RMW cycle was counted.
+        assert!(f.stats().counter("rmw_cycles").sum >= 1, "rmw_cycles not counted");
+        f.close().unwrap();
+    });
+    for s in 0..4 {
+        let _ = std::fs::remove_file(StripedBackend::object_path(&path, s, 4));
+    }
+    cleanup(&path);
+}
