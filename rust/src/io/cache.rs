@@ -32,6 +32,10 @@
 //!   across pages merge, and multi-run flushes dispatch as one
 //!   [`write_plan`](StorageFile::write_plan) so the striped fan-out
 //!   sees the large transfer (`write_behind_flush_bytes`, `rmw_cycles`).
+//!   While the storage write is in flight its pages stay pinned: they
+//!   cannot be evicted, and a fetch of one waits for the write to land
+//!   — the flushed bytes exist only in the page buffer until then, so
+//!   evicting or re-fetching would resurrect pre-flush storage bytes.
 //!
 //! **Coherence points** (MPI §7.2.6.1: a process sees another process's
 //! writes after writer-sync → barrier → reader-sync): `sync`, `close`,
@@ -39,14 +43,21 @@
 //! mode all flush — and, where another agent may have written,
 //! invalidate. Cross-process coherence rides a
 //! `<path>.jpio-cache-lease` sidecar (the shared-pointer sidecar
-//! machinery): a sync that flushed data bumps the lease generation, and
-//! a sync that observes a foreign generation drops every resident page.
+//! machinery): a sync that flushed data bumps the lease generation —
+//! an atomic read-modify-write under the sidecar's `flock` — and a
+//! sync that observes a foreign generation drops every resident page.
+//! The foreign check always runs against the generation observed
+//! *before* this handle's own bump, so a handle that both writes and
+//! reads (two ranks exchanging regions) never masks another writer's
+//! publication with its own.
 //! Atomic-mode operations bypass the cache entirely — they serialize
 //! under the whole-file lock, which resident pages cannot see.
 
 use std::collections::BTreeMap;
+use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::comm::progress::ProgressEngine;
 use crate::io::errors::{IoError, Result};
@@ -73,11 +84,23 @@ struct Page {
     dirty: Vec<(usize, usize)>,
     /// LRU stamp (monotonic access clock).
     stamp: u64,
+    /// Snapshotted into an in-flight flush whose storage write has not
+    /// landed yet. The snapshotted bytes live only in `buf` (the dirty
+    /// extents were cleared when the snapshot was taken), so the page
+    /// must not be evicted and a fetch must not merge storage contents
+    /// over it until the write completes.
+    flushing: bool,
 }
 
 impl Page {
     fn new(page_size: usize) -> Page {
-        Page { buf: vec![0u8; page_size], fetched: false, dirty: Vec::new(), stamp: 0 }
+        Page {
+            buf: vec![0u8; page_size],
+            fetched: false,
+            dirty: Vec::new(),
+            stamp: 0,
+            flushing: false,
+        }
     }
 
     /// Mark `[s, e)` dirty; returns the newly-dirtied byte count.
@@ -123,6 +146,10 @@ struct CacheState {
     logical_size: u64,
     /// Monotonic LRU clock.
     clock: u64,
+    /// Bumped when a flush's storage write completes. A fetch that read
+    /// storage outside the lock re-reads when the epoch moved under it:
+    /// the bytes it holds may predate the flush that just landed.
+    flush_epoch: u64,
     /// Last lease generation this handle observed (see
     /// [`PageCache::sync_point`]).
     lease_seen: u64,
@@ -151,6 +178,9 @@ pub(crate) struct PageCache {
     /// Cross-process coherence sidecar (`<path>.jpio-cache-lease`).
     lease_path: String,
     state: Mutex<CacheState>,
+    /// Signalled (with `state`) when an in-flight flush lands and
+    /// unpins its pages; fetches of pinned pages wait here.
+    flush_done: Condvar,
     /// Serializes flushes: dirty extents are snapshotted and marked
     /// clean under `state`, but the storage write runs outside it, so
     /// overlapping flushes must not reorder.
@@ -208,9 +238,11 @@ impl PageCache {
                 dirty_bytes: 0,
                 logical_size,
                 clock: 0,
+                flush_epoch: 0,
                 lease_seen,
                 size_stale: false,
             }),
+            flush_done: Condvar::new(),
             flush_gate: Mutex::new(()),
             flush_queued: AtomicBool::new(false),
             flush_err: Mutex::new(None),
@@ -227,20 +259,22 @@ impl PageCache {
     /// stop-at-first-short-run semantics as
     /// [`read_plan`](StorageFile::read_plan).
     pub(crate) fn read_plan(&self, plan: &IoPlan, payload: &mut [u8]) -> Result<usize> {
-        let mut st = self.state.lock().unwrap();
-        self.refresh_size(&mut st);
+        let logical_size = {
+            let mut st = self.state.lock().unwrap();
+            self.refresh_size(&mut st);
+            st.logical_size
+        };
         let mut got = 0usize;
         for (off, len, pos) in plan.segments() {
-            let avail = (st.logical_size.saturating_sub(off) as usize).min(len);
+            let avail = (logical_size.saturating_sub(off) as usize).min(len);
             if avail > 0 {
-                self.copy_out(&mut st, off, &mut payload[pos..pos + avail])?;
+                self.copy_out(off, &mut payload[pos..pos + avail])?;
                 got += avail;
             }
             if avail < len {
                 break;
             }
         }
-        drop(st);
         self.enforce_budget()?;
         Ok(got)
     }
@@ -275,8 +309,11 @@ impl PageCache {
     }
 
     /// Copy `[off, off + out.len())` out of the cache, fetching (and
-    /// prefetching) pages on miss.
-    fn copy_out(&self, st: &mut CacheState, off: u64, out: &mut [u8]) -> Result<()> {
+    /// prefetching) pages on miss. The page table is locked per page,
+    /// never across a storage round-trip — one page miss must not
+    /// block hits on other pages; a page evicted between the fetch and
+    /// the copy is simply fetched again.
+    fn copy_out(&self, off: u64, out: &mut [u8]) -> Result<()> {
         let ps = self.page_size;
         let end = off + out.len() as u64;
         let mut cur = off;
@@ -284,33 +321,59 @@ impl PageCache {
             let idx = cur / ps;
             let in_page = (cur - idx * ps) as usize;
             let n = (((idx + 1) * ps).min(end) - cur) as usize;
-            let resident =
-                st.pages.get(&idx).map(|p| p.covers(in_page, in_page + n)).unwrap_or(false);
-            if resident {
-                self.stats.add(Counter::CacheHitBytes, n as u64);
-            } else {
-                self.stats.add(Counter::CacheMissBytes, n as u64);
-                self.fetch(st, idx)?;
-                // Hint-driven read-ahead: the next `prefetch` pages
-                // inside the cached EOF become hits for sequential
-                // re-reads.
-                for k in 1..=self.prefetch as u64 {
-                    let ahead = idx + k;
-                    if ahead * ps >= st.logical_size {
+            let mut counted = false;
+            loop {
+                {
+                    let mut st = self.state.lock().unwrap();
+                    let resident = st
+                        .pages
+                        .get(&idx)
+                        .map(|p| p.covers(in_page, in_page + n))
+                        .unwrap_or(false);
+                    if resident {
+                        if !counted {
+                            self.stats.add(Counter::CacheHitBytes, n as u64);
+                        }
+                        st.clock += 1;
+                        let clock = st.clock;
+                        let page = st.pages.get_mut(&idx).expect("resident page");
+                        page.stamp = clock;
+                        let s = (cur - off) as usize;
+                        out[s..s + n].copy_from_slice(&page.buf[in_page..in_page + n]);
                         break;
                     }
-                    if !st.pages.get(&ahead).map(|p| p.fetched).unwrap_or(false) {
-                        self.fetch(st, ahead)?;
-                    }
                 }
+                if !counted {
+                    self.stats.add(Counter::CacheMissBytes, n as u64);
+                    counted = true;
+                }
+                self.fetch(idx)?;
+                self.prefetch_after(idx)?;
             }
-            st.clock += 1;
-            let clock = st.clock;
-            let page = st.pages.get_mut(&idx).expect("page resident after fetch");
-            page.stamp = clock;
-            let s = (cur - off) as usize;
-            out[s..s + n].copy_from_slice(&page.buf[in_page..in_page + n]);
             cur += n as u64;
+        }
+        Ok(())
+    }
+
+    /// Hint-driven read-ahead after a miss on page `idx`: the next
+    /// `jpio_prefetch` pages inside the cached EOF become hits for
+    /// sequential re-reads.
+    fn prefetch_after(&self, idx: u64) -> Result<()> {
+        for k in 1..=self.prefetch as u64 {
+            let ahead = idx + k;
+            let (past_eof, resident) = {
+                let st = self.state.lock().unwrap();
+                (
+                    ahead * self.page_size >= st.logical_size,
+                    st.pages.get(&ahead).map(|p| p.fetched).unwrap_or(false),
+                )
+            };
+            if past_eof {
+                break;
+            }
+            if !resident {
+                self.fetch(ahead)?;
+            }
         }
         Ok(())
     }
@@ -349,30 +412,54 @@ impl PageCache {
 
     /// Fetch page `idx` from storage — the plan-level read-modify-write
     /// pre-read. Dirty bytes are preserved; only clean bytes take the
-    /// storage contents. The pre-read runs on the same storage handle as
-    /// every other access, so degraded-mode advisories queue on the
-    /// backend for `File::take_advisories` — nothing here drains or
-    /// converts them.
-    fn fetch(&self, st: &mut CacheState, idx: u64) -> Result<()> {
+    /// storage contents. The storage round-trip runs *outside* the
+    /// state lock, so a miss never blocks hits on other pages; the
+    /// merge re-locks and re-reads if a flush landed in between
+    /// (`flush_epoch`), and waits out a flush that holds the page
+    /// pinned — in both cases the bytes read may predate the flush, and
+    /// merging them would resurrect pre-flush storage contents over the
+    /// only copy of the flushed data. The pre-read runs on the same
+    /// storage handle as every other access, so degraded-mode
+    /// advisories queue on the backend for `File::take_advisories` —
+    /// nothing here drains or converts them.
+    fn fetch(&self, idx: u64) -> Result<()> {
         let ps = self.page_size as usize;
-        let page = st.pages.entry(idx).or_insert_with(|| Page::new(ps));
-        if page.fetched {
+        loop {
+            let epoch = {
+                let mut st = self.state.lock().unwrap();
+                while st.pages.get(&idx).map(|p| p.flushing).unwrap_or(false) {
+                    st = self.flush_done.wait(st).unwrap();
+                }
+                if st.pages.get(&idx).map(|p| p.fetched).unwrap_or(false) {
+                    return Ok(());
+                }
+                st.flush_epoch
+            };
+            let mut from_store = vec![0u8; ps];
+            // Short at EOF only; the tail stays zeros, like a file hole.
+            self.storage.read_at(idx * self.page_size, &mut from_store)?;
+            let mut st = self.state.lock().unwrap();
+            if st.flush_epoch != epoch
+                || st.pages.get(&idx).map(|p| p.flushing).unwrap_or(false)
+            {
+                continue;
+            }
+            let page = st.pages.entry(idx).or_insert_with(|| Page::new(ps));
+            if page.fetched {
+                return Ok(());
+            }
+            if !page.dirty.is_empty() {
+                self.stats.add(Counter::RmwCycles, 1);
+            }
+            let mut at = 0usize;
+            for &(s, e) in &page.dirty {
+                page.buf[at..s].copy_from_slice(&from_store[at..s]);
+                at = e;
+            }
+            page.buf[at..].copy_from_slice(&from_store[at..]);
+            page.fetched = true;
             return Ok(());
         }
-        if !page.dirty.is_empty() {
-            self.stats.add(Counter::RmwCycles, 1);
-        }
-        let mut from_store = vec![0u8; ps];
-        // Short at EOF only; the tail stays zeros, like a file hole.
-        self.storage.read_at(idx * self.page_size, &mut from_store)?;
-        let mut at = 0usize;
-        for &(s, e) in &page.dirty {
-            page.buf[at..s].copy_from_slice(&from_store[at..s]);
-            at = e;
-        }
-        page.buf[at..].copy_from_slice(&from_store[at..]);
-        page.fetched = true;
-        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -389,11 +476,28 @@ impl PageCache {
     /// write/sync) — deferred-error write-behind semantics.
     pub(crate) fn flush(&self) -> Result<usize> {
         let _gate = self.flush_gate.lock().unwrap();
-        let (runs, payload) = {
+        // Gap-filling RMW, outside the state lock: a multi-extent
+        // unfetched page flushes as one covering run, which needs real
+        // file bytes between the extents. If the pre-read fails (a
+        // truly dead region), degrade to extent-only writes rather than
+        // losing the dirty data or inventing gap bytes.
+        let need_fill: Vec<u64> = {
+            let st = self.state.lock().unwrap();
+            st.pages
+                .iter()
+                .filter(|(_, p)| p.dirty.len() > 1 && !p.fetched)
+                .map(|(&i, _)| i)
+                .collect()
+        };
+        for idx in need_fill {
+            let _ = self.fetch(idx);
+        }
+        let (runs, payload, pinned) = {
             let mut st = self.state.lock().unwrap();
             let st = &mut *st;
             let mut runs: Vec<(u64, usize)> = Vec::new();
             let mut payload: Vec<u8> = Vec::new();
+            let mut pinned: Vec<u64> = Vec::new();
             let dirty_pages: Vec<u64> = st
                 .pages
                 .iter()
@@ -401,19 +505,9 @@ impl PageCache {
                 .map(|(&i, _)| i)
                 .collect();
             for idx in dirty_pages {
-                // Gap-filling RMW: a multi-extent page flushes as one
-                // covering run, which needs real file bytes between the
-                // extents. If the pre-read fails (a truly dead region),
-                // degrade to extent-only writes rather than losing the
-                // dirty data or inventing gap bytes.
-                let needs_fill = {
-                    let p = &st.pages[&idx];
-                    p.dirty.len() > 1 && !p.fetched
-                };
-                let whole = !needs_fill || self.fetch(st, idx).is_ok();
                 let base = idx * self.page_size;
                 let page = st.pages.get_mut(&idx).expect("dirty page resident");
-                let spans: Vec<(usize, usize)> = if whole && page.fetched {
+                let spans: Vec<(usize, usize)> = if page.fetched {
                     vec![(page.dirty[0].0, page.dirty[page.dirty.len() - 1].1)]
                 } else {
                     page.dirty.clone()
@@ -432,17 +526,39 @@ impl PageCache {
                 }
                 st.dirty_bytes -= page.dirty_bytes() as u64;
                 page.dirty.clear();
+                // The snapshot lives only in `payload` and `page.buf`
+                // now: pin the page until the storage write lands, or
+                // budget eviction plus a re-fetch would cache pre-flush
+                // storage bytes — a read-your-own-writes violation.
+                page.flushing = true;
+                pinned.push(idx);
             }
-            (runs, payload)
+            (runs, payload, pinned)
         };
         if runs.is_empty() {
             return Ok(0);
         }
-        if runs.len() > 1 {
-            self.storage.write_plan(&runs, &payload)?;
+        let wrote = if runs.len() > 1 {
+            self.storage.write_plan(&runs, &payload).map(|_| ())
         } else {
-            self.storage.write_at(runs[0].0, &payload)?;
+            self.storage.write_at(runs[0].0, &payload).map(|_| ())
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            // Unpin even on failure — the snapshot is lost either way
+            // (deferred-error write-behind semantics), and a page
+            // pinned forever would wedge eviction. The epoch bump makes
+            // any fetch that overlapped the write re-read storage: its
+            // buffered bytes may predate what this flush landed.
+            for idx in &pinned {
+                if let Some(page) = st.pages.get_mut(idx) {
+                    page.flushing = false;
+                }
+            }
+            st.flush_epoch += 1;
+            self.flush_done.notify_all();
         }
+        wrote?;
         self.stats.add(Counter::WriteBehindFlushBytes, payload.len() as u64);
         Ok(payload.len())
     }
@@ -501,13 +617,16 @@ impl PageCache {
     }
 
     /// Evict clean LRU pages; `true` when the budget holds afterwards.
+    /// Pages pinned by an in-flight flush are not candidates: they are
+    /// clean only because their dirty extents were snapshotted, and the
+    /// snapshot has not reached storage yet.
     fn evict_clean(&self) -> bool {
         let mut st = self.state.lock().unwrap();
         while st.pages.len() > self.max_pages {
             let victim = st
                 .pages
                 .iter()
-                .filter(|(_, p)| p.dirty.is_empty())
+                .filter(|(_, p)| p.dirty.is_empty() && !p.flushing)
                 .min_by_key(|(_, p)| p.stamp)
                 .map(|(&i, _)| i);
             match victim {
@@ -539,32 +658,82 @@ impl PageCache {
         Ok(())
     }
 
+    /// Run `f` with the lease sidecar open and exclusively flocked —
+    /// the same cross-process serialization idiom as the striped
+    /// metadata sidecar.
+    fn with_locked_lease<T>(&self, f: impl FnOnce(&std::fs::File) -> Result<T>) -> Result<T> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&self.lease_path)
+            .map_err(|e| IoError::from_os(e, "cache lease"))?;
+        let fd = file.as_raw_fd();
+        if unsafe { libc::flock(fd, libc::LOCK_EX) } != 0 {
+            return Err(IoError::from_os(std::io::Error::last_os_error(), "flock cache lease"));
+        }
+        let out = f(&file);
+        unsafe { libc::flock(fd, libc::LOCK_UN) };
+        out
+    }
+
+    /// Bump the lease generation: an atomic read-modify-write under the
+    /// sidecar's flock (concurrent publishers each land their own bump
+    /// — no lost update), written in place through the locked fd (no
+    /// truncate window for an unlocked [`read_lease`] to observe as
+    /// generation 0). Returns the published generation plus whether the
+    /// locked read saw a generation beyond `observed` — another handle
+    /// published between the caller's unlocked observation and this
+    /// bump, which the caller must treat as foreign.
+    fn bump_lease(&self, observed: u64) -> Result<(u64, bool)> {
+        self.with_locked_lease(|file| {
+            let mut buf = [0u8; 8];
+            let cur = match file.read_exact_at(&mut buf, 0) {
+                Ok(()) => u64::from_le_bytes(buf),
+                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => 0,
+                Err(e) => return Err(IoError::from_os(e, "cache lease read")),
+            };
+            let next = cur.wrapping_add(1);
+            file.write_all_at(&next.to_le_bytes(), 0)
+                .map_err(|e| IoError::from_os(e, "cache lease write"))?;
+            Ok((next, cur != observed))
+        })
+    }
+
     /// The `sync`/`close` coherence point: drain the flush lane, flush,
     /// surface any stored background-flush error, and run the lease
     /// protocol — a sync that published data bumps the
-    /// `<path>.jpio-cache-lease` generation; a sync that observes a
-    /// generation another handle bumped invalidates every resident page
-    /// (MPI §7.2.6.1 writer-sync / reader-sync visibility).
+    /// `<path>.jpio-cache-lease` generation under its flock; a sync
+    /// that observes a generation another handle bumped invalidates
+    /// every resident page (MPI §7.2.6.1 writer-sync / reader-sync
+    /// visibility). The foreign check runs against the generation read
+    /// *before* this handle's own bump — and re-checked inside the
+    /// bump's critical section — so a handle that both writes and reads
+    /// (two ranks exchanging regions: each writes, syncs, barriers,
+    /// syncs, reads the other's region) still drops its stale pages at
+    /// the same sync that publishes its own writes.
     pub(crate) fn sync_point(&self) -> Result<()> {
         self.quiesce();
         if let Some(e) = self.flush_err.lock().unwrap().take() {
             return Err(e);
         }
+        let observed = read_lease(&self.lease_path);
         let flushed = self.flush()?;
+        let published = if flushed > 0 { Some(self.bump_lease(observed)?) } else { None };
         let mut st = self.state.lock().unwrap();
-        if flushed > 0 {
-            let gen = read_lease(&self.lease_path).wrapping_add(1);
-            std::fs::write(&self.lease_path, gen.to_le_bytes())
-                .map_err(|e| IoError::from_os(e, "cache lease write"))?;
-            st.lease_seen = gen;
-        }
-        let gen = read_lease(&self.lease_path);
-        if gen != st.lease_seen {
+        let mut foreign = observed != st.lease_seen;
+        st.lease_seen = match published {
+            Some((gen, raced)) => {
+                foreign |= raced;
+                gen
+            }
+            None => observed,
+        };
+        if foreign {
             st.pages.clear();
             st.dirty_bytes = 0;
             st.logical_size = self.storage.size().unwrap_or(st.logical_size);
             st.size_stale = false;
-            st.lease_seen = gen;
         }
         Ok(())
     }
@@ -745,6 +914,171 @@ mod tests {
         reader.sync_point().unwrap();
         reader.read_plan(&plan, &mut buf).unwrap();
         assert_eq!(buf, [2u8; 64]);
+        cleanup(&path);
+    }
+
+    /// Storage double whose writes announce themselves and then block
+    /// on a test-held mutex — a deterministic "flush in flight" window.
+    struct BlockingWrites {
+        inner: Arc<dyn StorageFile>,
+        entered: Mutex<std::sync::mpsc::Sender<()>>,
+        release: Arc<Mutex<()>>,
+    }
+
+    impl StorageFile for BlockingWrites {
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+            self.inner.read_at(offset, buf)
+        }
+        fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
+            let _ = self.entered.lock().unwrap().send(());
+            let _hold = self.release.lock().unwrap();
+            self.inner.write_at(offset, buf)
+        }
+        fn size(&self) -> Result<u64> {
+            self.inner.size()
+        }
+        fn set_size(&self, size: u64) -> Result<()> {
+            self.inner.set_size(size)
+        }
+        fn preallocate(&self, size: u64) -> Result<()> {
+            self.inner.preallocate(size)
+        }
+        fn sync(&self) -> Result<()> {
+            self.inner.sync()
+        }
+        fn map(
+            &self,
+            offset: u64,
+            len: usize,
+            writable: bool,
+        ) -> Result<Box<dyn crate::storage::MappedRegion>> {
+            self.inner.map(offset, len, writable)
+        }
+        fn lock_exclusive(&self) -> Result<crate::storage::FileLockGuard> {
+            self.inner.lock_exclusive()
+        }
+        fn backend_name(&self) -> &'static str {
+            "blocking-test"
+        }
+    }
+
+    #[test]
+    fn in_flight_flush_pins_pages_against_eviction_and_stale_refetch() {
+        let path = format!("/tmp/jpio-cache-pin-{}", std::process::id());
+        let inner = LocalBackend::instant()
+            .open(&path, crate::storage::OpenOptions::rw_create())
+            .unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let release = Arc::new(Mutex::new(()));
+        let storage: Arc<dyn StorageFile> =
+            Arc::new(BlockingWrites { inner, entered: Mutex::new(tx), release: release.clone() });
+        let info = Info::from([(keys::CACHE, "enable"), (keys::CACHE_SIZE, "1")]);
+        let cache = PageCache::from_info(
+            &info,
+            &path,
+            storage,
+            crate::io::stats::FileStats::disabled(),
+            0,
+        )
+        .unwrap();
+        let plan = IoPlan::from_runs(vec![(0, 64)], false);
+        PageCache::write_plan(&cache, &plan, &[9u8; 64]).unwrap();
+        // Hold the flush's storage write in flight.
+        let held = release.lock().unwrap();
+        let flusher = {
+            let c = cache.clone();
+            std::thread::spawn(move || c.flush().unwrap())
+        };
+        rx.recv().unwrap();
+        {
+            let mut st = cache.state.lock().unwrap();
+            let page = &st.pages[&0];
+            assert!(page.flushing && page.dirty.is_empty(), "snapshotted, write in flight");
+            // Budget pressure during the write window (max_pages == 2):
+            // the steady state for the write-behind workload.
+            for i in 1..=4u64 {
+                st.pages.entry(i).or_insert_with(|| Page::new(cache.page_size as usize));
+            }
+        }
+        assert!(cache.evict_clean(), "budget must be enforceable around the pin");
+        assert!(
+            cache.state.lock().unwrap().pages.contains_key(&0),
+            "page with an in-flight flush must not be evicted"
+        );
+        // A read of the snapshotted (now clean) extent must wait for the
+        // write to land, not merge pre-flush storage bytes over it.
+        let reader = {
+            let c = cache.clone();
+            std::thread::spawn(move || {
+                let plan = IoPlan::from_runs(vec![(0, 64)], false);
+                let mut buf = vec![0u8; 64];
+                assert_eq!(c.read_plan(&plan, &mut buf).unwrap(), 64);
+                buf
+            })
+        };
+        drop(held);
+        assert_eq!(flusher.join().unwrap(), 64);
+        assert_eq!(reader.join().unwrap(), [9u8; 64], "read-your-own-writes across a flush");
+        assert!(!cache.state.lock().unwrap().pages[&0].flushing, "unpinned after landing");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn exchange_writers_invalidate_despite_their_own_bump() {
+        let path = format!("/tmp/jpio-cache-exchange-{}", std::process::id());
+        let (a, storage) = cache_at(&path, &[]);
+        let (b, _) = cache_at(&path, &[]);
+        storage.write_at(0, &[0xAAu8; 128]).unwrap();
+        a.flush_and_invalidate().unwrap();
+        b.flush_and_invalidate().unwrap();
+        let r0 = IoPlan::from_runs(vec![(0, 64)], false);
+        let r1 = IoPlan::from_runs(vec![(64, 64)], false);
+        let mut buf = vec![0u8; 64];
+        // Both handles cache both regions.
+        for handle in [&a, &b] {
+            handle.read_plan(&r0, &mut buf).unwrap();
+            handle.read_plan(&r1, &mut buf).unwrap();
+        }
+        // The §7.2.6.1 exchange: A writes region 0, B writes region 1,
+        // each syncs (writer-sync), each syncs again after the
+        // "barrier" (reader-sync), then reads the region the other
+        // wrote. Each handle's first sync both flushes and observes —
+        // publishing must not absorb the foreign generation it read.
+        PageCache::write_plan(&a, &r0, &[0x0Au8; 64]).unwrap();
+        PageCache::write_plan(&b, &r1, &[0x0Bu8; 64]).unwrap();
+        a.sync_point().unwrap();
+        b.sync_point().unwrap();
+        a.sync_point().unwrap();
+        b.sync_point().unwrap();
+        a.read_plan(&r1, &mut buf).unwrap();
+        assert_eq!(buf, [0x0Bu8; 64], "A must see B's region after sync/barrier/sync");
+        b.read_plan(&r0, &mut buf).unwrap();
+        assert_eq!(buf, [0x0Au8; 64], "B must see A's region after sync/barrier/sync");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn concurrent_lease_bumps_never_lose_updates() {
+        let path = format!("/tmp/jpio-cache-lease-rmw-{}", std::process::id());
+        let threads: Vec<_> = (0..2u64)
+            .map(|h| {
+                let (cache, _) = cache_at(&path, &[]);
+                std::thread::spawn(move || {
+                    for i in 0..8u64 {
+                        let off = (h * 8 + i) * 64;
+                        let plan = IoPlan::from_runs(vec![(off, 64)], false);
+                        PageCache::write_plan(&cache, &plan, &[h as u8; 64]).unwrap();
+                        cache.sync_point().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // 16 publishing syncs → exactly 16 bumps: the flocked RMW loses
+        // none to a concurrent read-then-write of the sidecar.
+        assert_eq!(read_lease(&format!("{path}.jpio-cache-lease")), 16);
         cleanup(&path);
     }
 
