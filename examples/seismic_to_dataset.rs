@@ -1,0 +1,130 @@
+//! Legacy-file conversion: a raw striped seismic trace file becomes a
+//! self-describing dataset container (the Parallel netCDF direction) —
+//! named dimensions, a record variable over the unlimited trace axis,
+//! provenance attributes, and the portable big-endian `external32`
+//! on-disk representation. The payload is checksum-verified across the
+//! conversion: same values in, same values out, now with metadata.
+//!
+//! Three collective phases over 4 ranks:
+//!
+//! 1. **acquire** — write the legacy artifact: a flat binary file of
+//!    gain-corrected traces, collective `write_at_all` per rank block.
+//! 2. **convert** — define the container (`trace` unlimited × `sample`),
+//!    then each round every rank appends one whole trace record with
+//!    [`Dataset::append_records`].
+//! 3. **verify** — reopen the container read-only, read every record
+//!    back, compare against the legacy bytes and the value checksum.
+//!
+//! Run: `cargo run --release --example seismic_to_dataset`
+
+use jpio::comm::datatype::Datatype;
+use jpio::comm::{threads, Comm};
+use jpio::dataset::header::UNLIMITED;
+use jpio::dataset::Dataset;
+use jpio::io::{amode, File, Info};
+
+const TRACE_SAMPLES: usize = 512;
+const N_TRACES: usize = 64;
+const RANKS: usize = 4;
+
+/// One gain-corrected trace, as the acquisition system wrote it.
+fn make_trace(id: usize) -> Vec<i32> {
+    (0..TRACE_SAMPLES).map(|i| (((id * 7 + i) % 100) as i32 - 50) * 3).collect()
+}
+
+/// Order-independent value checksum (FNV-1a over the sample stream).
+fn checksum(values: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in values {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn main() {
+    let raw_path = format!("/tmp/jpio-seis2ds-{}.traces", std::process::id());
+    let ds_path = format!("/tmp/jpio-seis2ds-{}.jpds", std::process::id());
+
+    {
+        let raw_path = &raw_path;
+        let ds_path = &ds_path;
+        threads::run(RANKS, move |c| {
+            let r = c.rank();
+            let per_rank = N_TRACES / RANKS;
+
+            // ---- 1. acquire: the legacy flat trace file -----------------
+            let f = File::open(c, raw_path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let mut block = Vec::with_capacity(per_rank * TRACE_SAMPLES);
+            for t in 0..per_rank {
+                block.extend(make_trace(r * per_rank + t));
+            }
+            let off = (r * per_rank * TRACE_SAMPLES * 4) as i64;
+            f.write_at_all(off, block.as_slice(), 0, block.len(), &Datatype::INT).unwrap();
+            f.close().unwrap();
+
+            // ---- 2. convert: raw blocks → self-describing records -------
+            let legacy = File::open(c, raw_path, amode::RDONLY, Info::null()).unwrap();
+            let out = File::open(c, ds_path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let ds = Dataset::create(out).unwrap();
+            let trace = ds.def_dim("trace", UNLIMITED).unwrap();
+            let sample = ds.def_dim("sample", TRACE_SAMPLES as u64).unwrap();
+            let v = ds.def_var("samples", &Datatype::INT, "external32", &[trace, sample]).unwrap();
+            ds.put_att("source", raw_path.as_bytes()).unwrap();
+            ds.put_att("title", b"seismic trace archive").unwrap();
+            ds.put_var_att(v, "gain", b"x3").unwrap();
+            ds.enddef().unwrap();
+            // Each append round moves one whole trace per rank: rank r
+            // carries legacy trace `round * RANKS + r` into the record
+            // of the same index.
+            for round in 0..N_TRACES / RANKS {
+                let id = round * RANKS + r;
+                let mut buf = vec![0i32; TRACE_SAMPLES];
+                let at = (id * TRACE_SAMPLES * 4) as i64;
+                legacy.read_at(at, buf.as_mut_slice(), 0, TRACE_SAMPLES, &Datatype::INT).unwrap();
+                ds.append_records(v, buf.as_slice()).unwrap();
+            }
+            assert_eq!(ds.num_records(), N_TRACES as u64);
+            let pc = ds.file().plan_cache_stats();
+            ds.close().unwrap();
+            legacy.close().unwrap();
+            if r == 0 {
+                println!("convert: {N_TRACES} traces appended (plan cache {pc:?})");
+            }
+
+            // ---- 3. verify: records match the legacy values -------------
+            let f = File::open(c, ds_path, amode::RDONLY, Info::null()).unwrap();
+            let ds = Dataset::open(f).unwrap();
+            assert_eq!(ds.num_records(), N_TRACES as u64);
+            assert_eq!(ds.get_att("title").unwrap(), b"seismic trace archive");
+            let v = ds.find_var("samples").unwrap();
+            assert_eq!(ds.var_shape(v).unwrap(), vec![N_TRACES as u64, TRACE_SAMPLES as u64]);
+            let mut all = vec![0i32; N_TRACES * TRACE_SAMPLES];
+            ds.get_vara(v, &[0, 0], &[N_TRACES, TRACE_SAMPLES], all.as_mut_slice()).unwrap();
+            let mut want = Vec::with_capacity(N_TRACES * TRACE_SAMPLES);
+            for id in 0..N_TRACES {
+                want.extend(make_trace(id));
+            }
+            assert_eq!(all, want, "rank {r}: converted values drifted");
+            assert_eq!(checksum(&all), checksum(&want));
+            ds.close().unwrap();
+            if r == 0 {
+                println!("verify: checksum {:#018x} matches on every rank", checksum(&want));
+            }
+        });
+    }
+
+    // The container holds the same values in a different on-disk shape:
+    // same checksum, different (big-endian, self-describing) bytes.
+    let raw = std::fs::read(&raw_path).unwrap();
+    let container = std::fs::read(&ds_path).unwrap();
+    assert!(container.len() > raw.len(), "container must carry header metadata");
+    for p in [&raw_path, &ds_path] {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(format!("{p}.jpio-sfp"));
+        let _ = std::fs::remove_file(format!("{p}.jpio-cache-lease"));
+    }
+    println!("seismic_to_dataset OK");
+}

@@ -41,6 +41,12 @@
 //!    small write pays an RPC; asserts write-behind reaches ≥ 50% of
 //!    bulk bandwidth, and that `jpio_cache = disable` leaves the file
 //!    byte-identical with every cache counter at zero.
+//! 12. **dataset layer vs hand-rolled views** — the structured dataset
+//!    subarray sweep (`put_vara` over a 2×2 block decomposition) vs the
+//!    same access hand-rolled with `darray_block` views and
+//!    `write_at_all`; asserts dataset bandwidth within 1.5× of raw
+//!    views and that repeated same-shape `put_vara` climbs the
+//!    PlanCache hit counter (the cached per-shape view keys the plan).
 //!
 //! `JPIO_SMOKE=1` runs everything at 1/16 size with one repetition — the
 //! CI gate that keeps this file compiled and executed on every PR.
@@ -951,6 +957,105 @@ fn strided_write_behind() {
     let _ = std::fs::remove_file(format!("{poff}.jpio-cache-lease"));
 }
 
+fn dataset_vs_raw_views() {
+    println!("\n--- ablation 12: dataset layer vs hand-rolled subarray views (NFS) ---");
+    use jpio::comm::datatype::ArrayOrder;
+    use jpio::dataset::Dataset;
+    let ranks = 4;
+    let n = if common::smoke() { 128usize } else { 512 }; // grid edge, ints
+    let total = n * n * 4;
+    let k = n * n / ranks;
+    let raw_path = format!("/tmp/jpio-abl12-raw-{}.dat", std::process::id());
+    let ds_path = format!("/tmp/jpio-abl12-ds-{}.jpds", std::process::id());
+    let nfs = || -> std::sync::Arc<dyn jpio::storage::Backend> {
+        std::sync::Arc::new(jpio::storage::nfs::NfsBackend::barq())
+    };
+    // Hand-rolled baseline: darray_block view + collective write.
+    let raw = bench("raw views", 1, common::reps(), total, || {
+        threads::run(ranks, |c| {
+            let f = File::open_with_backend(
+                c,
+                &raw_path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                nfs(),
+            )
+            .unwrap();
+            let r = c.rank();
+            let ft = Datatype::darray_block(&[n, n], &[2, 2], r, ArrayOrder::C, &Datatype::INT)
+                .unwrap();
+            f.set_view(0, &Datatype::INT, &ft, "native", &Info::null()).unwrap();
+            let mine = vec![r as i32; k];
+            f.write_at_all(0, mine.as_slice(), 0, k, &Datatype::INT).unwrap();
+            f.close().unwrap();
+        });
+    });
+    println!("  raw views   {:10.1} MB/s", raw.mbs());
+    // Dataset layer: same decomposition through define mode + put_vara
+    // (including the header round per repetition).
+    let ds = bench("dataset", 1, common::reps(), total, || {
+        threads::run(ranks, |c| {
+            let f = File::open_with_backend(
+                c,
+                &ds_path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                nfs(),
+            )
+            .unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", n as u64).unwrap();
+            let y = ds.def_dim("y", n as u64).unwrap();
+            let v = ds.def_var("v", &Datatype::INT, "native", &[x, y]).unwrap();
+            ds.enddef().unwrap();
+            let r = c.rank();
+            let (starts, subs) = Datatype::block_decompose(&[n, n], &[2, 2], r).unwrap();
+            let mine = vec![r as i32; k];
+            ds.put_vara(v, &starts, &subs, mine.as_slice()).unwrap();
+            ds.close().unwrap();
+        });
+    });
+    println!("  dataset     {:10.1} MB/s ({:.2}x raw)", ds.mbs(), raw.mbs() / ds.mbs());
+    assert!(
+        ds.mbs() >= raw.mbs() / 1.5,
+        "dataset bandwidth {:.1} MB/s fell below 1/1.5 of raw views {:.1} MB/s",
+        ds.mbs(),
+        raw.mbs()
+    );
+    // Repeated same-shape put_vara must climb the plan cache: the
+    // dataset hands the scheduler the same Arc'd view every time.
+    let pc_path = format!("/tmp/jpio-abl12-pc-{}.jpds", std::process::id());
+    let curves = {
+        let pc_path = &pc_path;
+        threads::run(ranks, move |c| {
+            let f = File::open(c, pc_path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", n as u64).unwrap();
+            let y = ds.def_dim("y", n as u64).unwrap();
+            let v = ds.def_var("v", &Datatype::INT, "native", &[x, y]).unwrap();
+            ds.enddef().unwrap();
+            let (starts, subs) = Datatype::block_decompose(&[n, n], &[2, 2], c.rank()).unwrap();
+            let mine = vec![c.rank() as i32; k];
+            let mut hits = Vec::new();
+            for _ in 0..4 {
+                ds.put_vara(v, &starts, &subs, mine.as_slice()).unwrap();
+                hits.push(ds.file().plan_cache_stats().hits);
+            }
+            ds.close().unwrap();
+            hits
+        })
+    };
+    let summed: Vec<u64> = (0..4).map(|i| curves.iter().map(|h| h[i]).sum()).collect();
+    assert!(
+        summed.windows(2).all(|w| w[1] > w[0]),
+        "repeated same-shape put_vara must climb plan-cache hits: {summed:?}"
+    );
+    println!("  plan-cache hits across 4 repeated put_vara rounds: {summed:?}");
+    common::cleanup(&raw_path);
+    common::cleanup(&ds_path);
+    common::cleanup(&pc_path);
+}
+
 fn main() {
     println!("jpio ablation suite");
     per_item_vs_bulk();
@@ -966,6 +1071,7 @@ fn main() {
     stats_instrumentation();
     scaleout_exchange_and_zero_copy();
     strided_write_behind();
+    dataset_vs_raw_views();
     pjrt_pack_vs_rust();
     let _ = FigureReport::new("ablations", "case"); // keep the type exercised
     println!("\nablations done");

@@ -551,6 +551,23 @@ impl Datatype {
         order: ArrayOrder,
         base: &Datatype,
     ) -> Result<Datatype, TypeError> {
+        let (starts, subsizes) = Self::block_decompose(size_global, psizes, rank)?;
+        Self::subarray(size_global, &subsizes, &starts, order, base)
+    }
+
+    /// The `(starts, subsizes)` of `rank`'s block of an n-D array
+    /// distributed over a process grid `psizes` — the decomposition
+    /// arithmetic behind [`Datatype::darray_block`], exposed for callers
+    /// (the dataset layer's `put_vara`/`get_vara`, the examples) that
+    /// need the raw `start`/`count` pair instead of a compiled filetype.
+    /// Block distribution: ceil division, trailing processes may get
+    /// less; a process whose block is empty is an error, as in
+    /// `MPI_Type_create_darray`.
+    pub fn block_decompose(
+        size_global: &[usize],
+        psizes: &[usize],
+        rank: usize,
+    ) -> Result<(Vec<usize>, Vec<usize>), TypeError> {
         let ndims = size_global.len();
         if psizes.len() != ndims {
             return Err(TypeError::ArgMismatch(format!(
@@ -574,7 +591,6 @@ impl Datatype {
         let mut subsizes = vec![0usize; ndims];
         let mut starts = vec![0usize; ndims];
         for d in 0..ndims {
-            // Block distribution: ceil division, last procs may get less.
             let blk = size_global[d].div_ceil(psizes[d]);
             let s = (coords[d] * blk).min(size_global[d]);
             let e = ((coords[d] + 1) * blk).min(size_global[d]);
@@ -586,7 +602,7 @@ impl Datatype {
             starts[d] = s;
             subsizes[d] = e - s;
         }
-        Self::subarray(size_global, &subsizes, &starts, order, base)
+        Ok((starts, subsizes))
     }
 
     /// Change lb/extent — `MPI_Type_create_resized`.
@@ -946,6 +962,27 @@ mod tests {
             })
             .collect();
         assert_eq!(sizes, vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn block_decompose_matches_darray_and_tiles() {
+        // The raw (starts, counts) pairs must tile the array exactly —
+        // they are the decomposition darray_block compiles.
+        let mut covered = vec![false; 6 * 10];
+        for rank in 0..4 {
+            let (starts, counts) = Datatype::block_decompose(&[6, 10], &[2, 2], rank).unwrap();
+            for i in 0..counts[0] {
+                for j in 0..counts[1] {
+                    let e = (starts[0] + i) * 10 + starts[1] + j;
+                    assert!(!covered[e], "element {e} covered twice");
+                    covered[e] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        // Errors: rank off the grid, empty trailing block.
+        assert!(Datatype::block_decompose(&[6, 10], &[2, 2], 4).is_err());
+        assert!(Datatype::block_decompose(&[2], &[4], 3).is_err());
     }
 
     #[test]

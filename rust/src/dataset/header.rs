@@ -1,0 +1,406 @@
+//! On-disk container header codec for the dataset layer.
+//!
+//! The header is a single little-endian record at byte 0 of the file,
+//! ahead of the page-aligned data section. Layout (version 1):
+//!
+//! ```text
+//! offset  field
+//! 0       magic "JPDS"
+//! 4       version          u32  (= 1)
+//! 8       header_bytes     u64  total serialized header length
+//! 16      num_recs         u64  record count (rewritten in place at sync)
+//! 24      data_start       u64  fixed-variable data section offset
+//! 32      rec_start        u64  record section offset
+//! 40      rec_size         u64  bytes per whole record row
+//! 48      ndims / nattrs / nvars   u32 × 3
+//! 60      dims   [name, len u64]            (len 0 = unlimited)
+//!         attrs  [name, value bytes]         (global attributes)
+//!         vars   [name, prim u8, external32 u8, ndims u32, dim ids u32×n,
+//!                 nattrs u32, attrs, data_offset u64]
+//! ```
+//!
+//! Strings and byte values are length-prefixed with a `u32`. A fixed
+//! variable's `data_offset` is absolute; a record variable's is its
+//! offset *within a record row* (its record `r` element lives at
+//! `rec_start + r * rec_size + data_offset`). `num_recs` sits at a fixed
+//! offset ([`NUM_RECS_OFFSET`]) so [`sync`](super::Dataset::sync) can
+//! persist it with one 8-byte in-place write instead of rewriting the
+//! whole header. The format is frozen per version: the committed golden
+//! fixture in `rust/tests/fixtures/` must keep decoding — and
+//! re-encoding byte-identically — forever.
+
+use crate::comm::datatype::Prim;
+use crate::io::errors::{err_arg, err_io, Result};
+
+/// File magic: the first four bytes of every dataset container.
+pub const MAGIC: [u8; 4] = *b"JPDS";
+
+/// Current container format version.
+pub const VERSION: u32 = 1;
+
+/// Byte offset of the `num_recs` field (rewritten in place at sync).
+pub const NUM_RECS_OFFSET: u64 = 16;
+
+/// Bytes of header needed to learn the full header length (through the
+/// `header_bytes` field).
+pub const PREAMBLE_BYTES: usize = 16;
+
+/// Dimension length marking the (single) unlimited record dimension.
+pub const UNLIMITED: u64 = 0;
+
+/// A named dimension: fixed length, or [`UNLIMITED`] for the record
+/// dimension.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dim {
+    /// Dimension name, unique within the dataset.
+    pub name: String,
+    /// Length in elements; [`UNLIMITED`] (0) for the record dimension.
+    pub len: u64,
+}
+
+/// A named attribute: uninterpreted bytes attached to the dataset or to
+/// one variable (applications conventionally store UTF-8 text or
+/// little-endian scalars).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Attr {
+    /// Attribute name, unique within its scope.
+    pub name: String,
+    /// Attribute payload.
+    pub value: Vec<u8>,
+}
+
+/// Metadata of one N-dimensional variable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Var {
+    /// Variable name, unique within the dataset.
+    pub name: String,
+    /// Element primitive type.
+    pub prim: Prim,
+    /// Whether elements are stored in the canonical big-endian
+    /// `external32` representation on disk.
+    pub external32: bool,
+    /// Dimension ids, outermost first; `dims[0]` may be the record
+    /// dimension.
+    pub dimids: Vec<u32>,
+    /// Per-variable attributes.
+    pub attrs: Vec<Attr>,
+    /// Fixed variables: absolute data offset. Record variables: offset
+    /// within a record row.
+    pub data_offset: u64,
+}
+
+/// The decoded container header.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Header {
+    /// Records written along the unlimited dimension.
+    pub num_recs: u64,
+    /// Fixed-variable data section offset (page aligned past the header).
+    pub data_start: u64,
+    /// Record section offset (past the fixed variables).
+    pub rec_start: u64,
+    /// Bytes per whole record row (sum over record variables).
+    pub rec_size: u64,
+    /// Named dimensions.
+    pub dims: Vec<Dim>,
+    /// Global attributes.
+    pub attrs: Vec<Attr>,
+    /// Variables.
+    pub vars: Vec<Var>,
+}
+
+fn prim_code(p: Prim) -> u8 {
+    match p {
+        Prim::Byte => 0,
+        Prim::Short => 1,
+        Prim::Int => 2,
+        Prim::Long => 3,
+        Prim::Float => 4,
+        Prim::Double => 5,
+        Prim::Char => 6,
+        Prim::Boolean => 7,
+    }
+}
+
+fn prim_from_code(c: u8) -> Result<Prim> {
+    Ok(match c {
+        0 => Prim::Byte,
+        1 => Prim::Short,
+        2 => Prim::Int,
+        3 => Prim::Long,
+        4 => Prim::Float,
+        5 => Prim::Double,
+        6 => Prim::Char,
+        7 => Prim::Boolean,
+        _ => return Err(err_io(format!("dataset header: unknown element-type code {c}"))),
+    })
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn put_attrs(out: &mut Vec<u8>, attrs: &[Attr]) {
+    for a in attrs {
+        put_bytes(out, a.name.as_bytes());
+        put_bytes(out, &a.value);
+    }
+}
+
+/// Little-endian cursor over a serialized header.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(err_io(format!(
+                "dataset header: truncated at byte {} (need {n} more of {})",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|_| err_io("dataset header: name is not UTF-8"))
+    }
+
+    fn attrs(&mut self, n: usize) -> Result<Vec<Attr>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(Attr { name: self.string()?, value: self.bytes()? });
+        }
+        Ok(out)
+    }
+}
+
+impl Header {
+    /// Serialize the header. Deterministic: the same header always
+    /// produces the same bytes (the golden-fixture drift test depends on
+    /// this).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(256);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u64.to_le_bytes()); // header_bytes, patched below
+        out.extend_from_slice(&self.num_recs.to_le_bytes());
+        out.extend_from_slice(&self.data_start.to_le_bytes());
+        out.extend_from_slice(&self.rec_start.to_le_bytes());
+        out.extend_from_slice(&self.rec_size.to_le_bytes());
+        out.extend_from_slice(&(self.dims.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.attrs.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.vars.len() as u32).to_le_bytes());
+        for d in &self.dims {
+            put_bytes(&mut out, d.name.as_bytes());
+            out.extend_from_slice(&d.len.to_le_bytes());
+        }
+        put_attrs(&mut out, &self.attrs);
+        for v in &self.vars {
+            put_bytes(&mut out, v.name.as_bytes());
+            out.push(prim_code(v.prim));
+            out.push(v.external32 as u8);
+            out.extend_from_slice(&(v.dimids.len() as u32).to_le_bytes());
+            for &id in &v.dimids {
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            out.extend_from_slice(&(v.attrs.len() as u32).to_le_bytes());
+            put_attrs(&mut out, &v.attrs);
+            out.extend_from_slice(&v.data_offset.to_le_bytes());
+        }
+        let total = out.len() as u64;
+        out[8..16].copy_from_slice(&total.to_le_bytes());
+        out
+    }
+
+    /// Parse the `header_bytes` field out of the first
+    /// [`PREAMBLE_BYTES`] of the file, validating magic and version.
+    pub fn total_bytes(preamble: &[u8]) -> Result<usize> {
+        if preamble.len() < PREAMBLE_BYTES {
+            return Err(err_io("dataset header: file shorter than the preamble"));
+        }
+        if preamble[..4] != MAGIC {
+            return Err(err_io("dataset header: bad magic (not a jpio dataset)"));
+        }
+        let version = u32::from_le_bytes(preamble[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(err_io(format!(
+                "dataset header: unsupported container version {version} (expected {VERSION})"
+            )));
+        }
+        let total = u64::from_le_bytes(preamble[8..16].try_into().unwrap());
+        if (total as usize) < PREAMBLE_BYTES {
+            return Err(err_io(format!("dataset header: implausible header length {total}")));
+        }
+        Ok(total as usize)
+    }
+
+    /// Decode a complete serialized header.
+    pub fn decode(raw: &[u8]) -> Result<Header> {
+        let total = Self::total_bytes(raw)?;
+        if raw.len() < total {
+            return Err(err_io(format!(
+                "dataset header: {} bytes supplied, header declares {total}",
+                raw.len()
+            )));
+        }
+        let mut c = Cursor { buf: &raw[..total], pos: PREAMBLE_BYTES };
+        let num_recs = c.u64()?;
+        let data_start = c.u64()?;
+        let rec_start = c.u64()?;
+        let rec_size = c.u64()?;
+        let ndims = c.u32()? as usize;
+        let nattrs = c.u32()? as usize;
+        let nvars = c.u32()? as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(Dim { name: c.string()?, len: c.u64()? });
+        }
+        let attrs = c.attrs(nattrs)?;
+        let mut vars = Vec::with_capacity(nvars);
+        for _ in 0..nvars {
+            let name = c.string()?;
+            let prim = prim_from_code(c.u8()?)?;
+            let external32 = c.u8()? != 0;
+            let nvdims = c.u32()? as usize;
+            let mut dimids = Vec::with_capacity(nvdims);
+            for _ in 0..nvdims {
+                let id = c.u32()?;
+                if id as usize >= ndims {
+                    return Err(err_io(format!(
+                        "dataset header: variable {name:?} names dimension {id} of {ndims}"
+                    )));
+                }
+                dimids.push(id);
+            }
+            let nvattrs = c.u32()? as usize;
+            let vattrs = c.attrs(nvattrs)?;
+            let data_offset = c.u64()?;
+            vars.push(Var { name, prim, external32, dimids, attrs: vattrs, data_offset });
+        }
+        if c.pos != total {
+            return Err(err_io(format!(
+                "dataset header: {} trailing bytes after the last variable",
+                total - c.pos
+            )));
+        }
+        Ok(Header { num_recs, data_start, rec_start, rec_size, dims, attrs, vars })
+    }
+
+    /// The declared length of a dimension, by id.
+    pub fn dim_len(&self, id: u32) -> Result<u64> {
+        self.dims
+            .get(id as usize)
+            .map(|d| d.len)
+            .ok_or_else(|| err_arg(format!("dataset: no dimension with id {id}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Header {
+        Header {
+            num_recs: 3,
+            data_start: 4096,
+            rec_start: 4096 + 96,
+            rec_size: 24,
+            dims: vec![
+                Dim { name: "time".into(), len: UNLIMITED },
+                Dim { name: "x".into(), len: 4 },
+                Dim { name: "y".into(), len: 6 },
+            ],
+            attrs: vec![Attr { name: "title".into(), value: b"demo".to_vec() }],
+            vars: vec![
+                Var {
+                    name: "grid".into(),
+                    prim: Prim::Int,
+                    external32: true,
+                    dimids: vec![1, 2],
+                    attrs: vec![Attr { name: "units".into(), value: b"K".to_vec() }],
+                    data_offset: 4096,
+                },
+                Var {
+                    name: "series".into(),
+                    prim: Prim::Double,
+                    external32: false,
+                    dimids: vec![0, 2],
+                    attrs: vec![],
+                    data_offset: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let h = sample();
+        let raw = h.encode();
+        assert_eq!(Header::total_bytes(&raw).unwrap(), raw.len());
+        let back = Header::decode(&raw).unwrap();
+        assert_eq!(back, h);
+        // Deterministic re-encode: the drift-check invariant.
+        assert_eq!(back.encode(), raw);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let raw = sample().encode();
+        let mut bad = raw.clone();
+        bad[0] = b'X';
+        assert!(Header::total_bytes(&bad).is_err());
+        let mut bad = raw.clone();
+        bad[4] = 99;
+        assert!(Header::total_bytes(&bad).is_err());
+        assert!(Header::decode(&raw[..raw.len() - 1]).is_err());
+        assert!(Header::total_bytes(&raw[..8]).is_err());
+    }
+
+    #[test]
+    fn rejects_dangling_dimension_ids() {
+        let mut h = sample();
+        h.vars[0].dimids = vec![7];
+        assert!(Header::decode(&h.encode()).is_err());
+    }
+
+    #[test]
+    fn prim_codes_round_trip() {
+        for p in [
+            Prim::Byte,
+            Prim::Short,
+            Prim::Int,
+            Prim::Long,
+            Prim::Float,
+            Prim::Double,
+            Prim::Char,
+            Prim::Boolean,
+        ] {
+            assert_eq!(prim_from_code(prim_code(p)).unwrap(), p);
+        }
+        assert!(prim_from_code(42).is_err());
+    }
+}

@@ -1,0 +1,896 @@
+//! Self-describing structured datasets over a [`File`] — named N-D
+//! variables compiled onto file views (the Parallel netCDF direction).
+//!
+//! Scientific applications speak in named N-dimensional variables, not
+//! byte offsets. This layer stores a versioned, self-describing header
+//! (dimensions, variables, attributes — see [`header`]) at the front of
+//! an ordinary `jpio` file and compiles every subarray request
+//! (`put_vara`/`get_vara`) into a scoped
+//! [`Datatype::subarray`] file view submitted through the one
+//! [`AccessOp`] core. There is **no new I/O path**: two-phase collective
+//! buffering, the multi-lane progress engine, striping/redundancy and
+//! the page cache all apply to dataset access unchanged, and repeated
+//! same-shape accesses hit the
+//! [`PlanCache`](crate::io::schedule::PlanCache) because the per-shape
+//! view is cached and reused by pointer identity.
+//!
+//! ## Life cycle
+//!
+//! ```text
+//!  Dataset::create(file)        Dataset::open(file)
+//!        │ define mode                │
+//!  def_dim / def_var / put_att       │
+//!        │                           │
+//!     enddef ──────────────► data mode ◄───── header read + bcast
+//!        (layout + header            │
+//!         write by rank 0,     put_vara / get_vara / iput / iget /
+//!         digest-checked)      append_records / sync
+//!                                    │
+//!                                 close
+//! ```
+//!
+//! Every `Dataset` method is **collective** over the file's
+//! communicator: all ranks call it with matching define-mode arguments
+//! (checked with a header digest at [`Dataset::enddef`]) and per-rank
+//! `start`/`count` subarrays in data mode. Header coherence follows the
+//! MPI sync rules: the header is written by rank 0 and re-read on
+//! [`Dataset::sync`], so a reader dataset observes a writer's records
+//! after the usual writer-sync / barrier / reader-sync pattern.
+//!
+//! Bulk variable payloads deliberately bypass the page cache (a per-op
+//! `jpio_cache = disable` hint overlay) so scientific sweeps do not
+//! evict the small hot header pages; the cache still serves header
+//! traffic.
+
+pub mod header;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::comm::datatype::{ArrayOrder, Datatype, IoBuf, IoBufMut};
+use crate::comm::Status;
+use crate::io::datarep::DataRep;
+use crate::io::engine::Request;
+use crate::io::errors::{
+    err_arg, err_file, err_not_same, err_unsupported_datarep, err_unsupported_op, Result,
+};
+use crate::io::file::{amode, File};
+use crate::io::hints::{keys, Info};
+use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism};
+use crate::io::stats::Counter;
+use crate::io::view::FileView;
+use header::{Attr, Dim, Header, Var, UNLIMITED};
+
+/// Alignment of each variable's data region (and of record-row slots).
+const VAR_ALIGN: u64 = 8;
+/// Alignment of the data section past the header (leaves the header
+/// room to breathe on its own pages).
+const DATA_ALIGN: u64 = 4096;
+/// Per-dataset cap on cached subarray views (one per distinct
+/// `(var, start, count)` shape; the same shape re-requested returns the
+/// same `Arc`, which is what keys the scheduler's plan cache).
+const VIEW_CACHE_CAP: usize = 16;
+
+/// Cache key of a compiled subarray view: `(varid, start, count)`.
+type ViewKey = (usize, Vec<usize>, Vec<usize>);
+
+/// A structured dataset bound to an open [`File`]. See the
+/// [module docs](self) for the life cycle.
+pub struct Dataset<'c> {
+    file: File<'c>,
+    hdr: Mutex<Header>,
+    defining: AtomicBool,
+    /// This rank's record-count watermark; collectively agreed on every
+    /// record-variable put and persisted into the header at `sync`.
+    num_recs: AtomicU64,
+    views: Mutex<Vec<(ViewKey, Arc<FileView>)>>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+fn align_up(v: u64, a: u64) -> u64 {
+    v.div_ceil(a) * a
+}
+
+/// Fill in the data-section layout: fixed variables packed (8-aligned)
+/// after the page-aligned header, record variables packed into a record
+/// row laid out after the fixed section. Offsets are fixed-width in the
+/// serialized header, so sizing the header before and after assigning
+/// them yields the same length.
+fn layout(hdr: &mut Header) -> Result<()> {
+    let lens: Vec<u64> = hdr.dims.iter().map(|d| d.len).collect();
+    hdr.data_start = align_up(hdr.encode().len() as u64, DATA_ALIGN);
+    let mut off = hdr.data_start;
+    let mut rec_off = 0u64;
+    let overflow = || err_arg("dataset: variable size overflows the container layout");
+    for v in &mut hdr.vars {
+        let record = v.dimids.first().is_some_and(|&d| lens[d as usize] == UNLIMITED);
+        let mut bytes = v.prim.size() as u64;
+        for (i, &d) in v.dimids.iter().enumerate() {
+            if i == 0 && record {
+                continue;
+            }
+            bytes = bytes.checked_mul(lens[d as usize]).ok_or_else(overflow)?;
+        }
+        let slot = align_up(bytes, VAR_ALIGN);
+        if record {
+            v.data_offset = rec_off;
+            rec_off = rec_off.checked_add(slot).ok_or_else(overflow)?;
+        } else {
+            v.data_offset = off;
+            off = off.checked_add(slot).ok_or_else(overflow)?;
+        }
+    }
+    hdr.rec_start = off;
+    hdr.rec_size = rec_off;
+    Ok(())
+}
+
+impl<'c> Dataset<'c> {
+    // ------------------------------------------------------------------
+    // Define mode
+    // ------------------------------------------------------------------
+
+    /// Start a new dataset on `file` in define mode (collective). The
+    /// handle's view is reset to the default byte view — the dataset
+    /// owns the file's addressing from here on.
+    pub fn create(file: File<'c>) -> Result<Dataset<'c>> {
+        file.set_view(0, &Datatype::BYTE, &Datatype::BYTE, "native", &Info::null())?;
+        Ok(Dataset {
+            file,
+            hdr: Mutex::new(Header::default()),
+            defining: AtomicBool::new(true),
+            num_recs: AtomicU64::new(0),
+            views: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Open an existing dataset on `file` in data mode (collective):
+    /// rank 0 reads and validates the header, every rank adopts the
+    /// broadcast copy.
+    pub fn open(file: File<'c>) -> Result<Dataset<'c>> {
+        file.set_view(0, &Datatype::BYTE, &Datatype::BYTE, "native", &Info::null())?;
+        let hdr = Self::read_header(&file)?;
+        let num_recs = hdr.num_recs;
+        Ok(Dataset {
+            file,
+            hdr: Mutex::new(hdr),
+            defining: AtomicBool::new(false),
+            num_recs: AtomicU64::new(num_recs),
+            views: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn check_define(&self, what: &str) -> Result<()> {
+        if !self.defining.load(Ordering::SeqCst) {
+            return Err(err_unsupported_op(format!("{what}: dataset is not in define mode")));
+        }
+        Ok(())
+    }
+
+    fn check_data(&self, what: &str) -> Result<()> {
+        if self.defining.load(Ordering::SeqCst) {
+            return Err(err_unsupported_op(format!(
+                "{what}: dataset is in define mode (call enddef first)"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Define a named dimension of `len` elements; pass
+    /// [`UNLIMITED`](header::UNLIMITED) (0) for the single growable
+    /// record dimension. Returns the dimension id.
+    pub fn def_dim(&self, name: &str, len: u64) -> Result<usize> {
+        self.check_define("def_dim")?;
+        if name.is_empty() {
+            return Err(err_arg("def_dim: empty dimension name"));
+        }
+        let mut hdr = self.hdr.lock().unwrap();
+        if hdr.dims.iter().any(|d| d.name == name) {
+            return Err(err_arg(format!("def_dim: dimension {name:?} already defined")));
+        }
+        if len == UNLIMITED && hdr.dims.iter().any(|d| d.len == UNLIMITED) {
+            return Err(err_arg("def_dim: only one unlimited (record) dimension is allowed"));
+        }
+        hdr.dims.push(Dim { name: name.to_string(), len });
+        Ok(hdr.dims.len() - 1)
+    }
+
+    /// Define a variable of primitive element type `elem` over `dims`
+    /// (outermost first), stored in the `datarep` on-disk representation
+    /// (`"native"` or the canonical big-endian `"external32"`). The
+    /// unlimited dimension, if used, must be the outermost. Returns the
+    /// variable id.
+    pub fn def_var(
+        &self,
+        name: &str,
+        elem: &Datatype,
+        datarep: &str,
+        dims: &[usize],
+    ) -> Result<usize> {
+        self.check_define("def_var")?;
+        if name.is_empty() {
+            return Err(err_arg("def_var: empty variable name"));
+        }
+        let prim = match elem {
+            Datatype::Prim(p) => *p,
+            Datatype::Derived(_) => {
+                return Err(err_arg("def_var: variables take primitive element types"))
+            }
+        };
+        let external32 = match DataRep::resolve(datarep)? {
+            DataRep::Native => false,
+            DataRep::External32 => true,
+            DataRep::User { .. } => {
+                return Err(err_unsupported_datarep(
+                    "def_var: datasets store native or external32 representations",
+                ))
+            }
+        };
+        let mut hdr = self.hdr.lock().unwrap();
+        if hdr.vars.iter().any(|v| v.name == name) {
+            return Err(err_arg(format!("def_var: variable {name:?} already defined")));
+        }
+        let mut dimids = Vec::with_capacity(dims.len());
+        for (i, &d) in dims.iter().enumerate() {
+            let len = match hdr.dims.get(d) {
+                Some(dim) => dim.len,
+                None => return Err(err_arg(format!("def_var: no dimension with id {d}"))),
+            };
+            if len == UNLIMITED && i != 0 {
+                return Err(err_arg(
+                    "def_var: the unlimited dimension must be the outermost",
+                ));
+            }
+            dimids.push(d as u32);
+        }
+        hdr.vars.push(Var {
+            name: name.to_string(),
+            prim,
+            external32,
+            dimids,
+            attrs: Vec::new(),
+            data_offset: 0,
+        });
+        Ok(hdr.vars.len() - 1)
+    }
+
+    /// Set (or replace) a global attribute. Define mode only.
+    pub fn put_att(&self, name: &str, value: &[u8]) -> Result<()> {
+        self.check_define("put_att")?;
+        let mut hdr = self.hdr.lock().unwrap();
+        upsert_attr(&mut hdr.attrs, name, value);
+        Ok(())
+    }
+
+    /// Set (or replace) an attribute of variable `var`. Define mode only.
+    pub fn put_var_att(&self, var: usize, name: &str, value: &[u8]) -> Result<()> {
+        self.check_define("put_var_att")?;
+        let mut hdr = self.hdr.lock().unwrap();
+        let v = hdr
+            .vars
+            .get_mut(var)
+            .ok_or_else(|| err_arg(format!("put_var_att: no variable with id {var}")))?;
+        upsert_attr(&mut v.attrs, name, value);
+        Ok(())
+    }
+
+    /// Leave define mode (collective): compute the data-section layout,
+    /// verify all ranks defined the same schema (header digest
+    /// allgather), then rank 0 writes the header and every rank enters
+    /// data mode.
+    pub fn enddef(&self) -> Result<()> {
+        self.check_define("enddef")?;
+        let raw = {
+            let mut hdr = self.hdr.lock().unwrap();
+            layout(&mut hdr)?;
+            hdr.encode()
+        };
+        let comm = self.file.comm;
+        let digest = fnv1a(&raw).to_le_bytes();
+        let all = comm.allgather(&digest);
+        if all.iter().any(|d| d[..] != digest[..]) {
+            return Err(err_not_same("enddef: define-mode calls differ across ranks"));
+        }
+        // Rank 0 persists the header; the outcome travels in a *named*
+        // flag buffer on both sides (see File::open for the why).
+        if comm.rank() == 0 {
+            let res = self.write_header(&raw);
+            let mut flag = (res.is_ok() as i64).to_le_bytes().to_vec();
+            comm.bcast(0, &mut flag);
+            comm.barrier();
+            res?;
+        } else {
+            let mut flag = vec![0u8; 8];
+            comm.bcast(0, &mut flag);
+            let ok = i64::from_le_bytes(flag[..8].try_into().unwrap()) == 1;
+            comm.barrier();
+            if !ok {
+                return Err(err_file("enddef: header write failed at rank 0"));
+            }
+        }
+        self.defining.store(false, Ordering::SeqCst);
+        Ok(())
+    }
+
+    fn write_header(&self, raw: &[u8]) -> Result<()> {
+        self.file.write_at(0, raw, 0, raw.len(), &Datatype::BYTE)?;
+        self.file.stats.add(Counter::DatasetHeaderBytes, raw.len() as u64);
+        Ok(())
+    }
+
+    /// Rank 0 reads + validates the header; every rank adopts the
+    /// broadcast copy (the open/sync coherence path).
+    fn read_header(file: &File<'_>) -> Result<Header> {
+        let comm = file.comm;
+        if comm.rank() == 0 {
+            let res = Self::read_header_local(file);
+            let mut flag = (res.is_ok() as i64).to_le_bytes().to_vec();
+            comm.bcast(0, &mut flag);
+            match res {
+                Ok((hdr, raw)) => {
+                    let mut payload = raw;
+                    comm.bcast(0, &mut payload);
+                    Ok(hdr)
+                }
+                Err(e) => Err(e),
+            }
+        } else {
+            let mut flag = vec![0u8; 8];
+            comm.bcast(0, &mut flag);
+            if i64::from_le_bytes(flag[..8].try_into().unwrap()) != 1 {
+                return Err(err_file("dataset: header read failed at rank 0"));
+            }
+            let mut payload = Vec::new();
+            comm.bcast(0, &mut payload);
+            Header::decode(&payload)
+        }
+    }
+
+    fn read_header_local(file: &File<'_>) -> Result<(Header, Vec<u8>)> {
+        let mut pre = vec![0u8; header::PREAMBLE_BYTES];
+        file.read_at(0, pre.as_mut_slice(), 0, pre.len(), &Datatype::BYTE)?;
+        let total = Header::total_bytes(&pre)?;
+        let mut raw = vec![0u8; total];
+        file.read_at(0, raw.as_mut_slice(), 0, total, &Datatype::BYTE)?;
+        let hdr = Header::decode(&raw)?;
+        file.stats.add(Counter::DatasetHeaderBytes, (pre.len() + total) as u64);
+        Ok((hdr, raw))
+    }
+
+    // ------------------------------------------------------------------
+    // Data mode
+    // ------------------------------------------------------------------
+
+    /// Collective blocking write of the subarray `start`/`count` (element
+    /// coordinates, outermost dimension first) of variable `var`. Each
+    /// rank passes its own subarray — e.g. its block of a 2-D
+    /// decomposition — and the request rides the two-phase collective
+    /// write path under a scoped subarray file view.
+    pub fn put_vara(
+        &self,
+        var: usize,
+        start: &[usize],
+        count: &[usize],
+        buf: &(impl IoBuf + ?Sized),
+    ) -> Result<Status> {
+        self.check_data("put_vara")?;
+        let (view, elem, nelems, record) = self.var_view(var, start, count, false)?;
+        if record {
+            self.agree_recs((start[0] + count[0]) as u64);
+        }
+        let op = AccessOp::write(
+            Positioning::Explicit(0),
+            Coordination::Collective,
+            Synchronism::Blocking,
+            0,
+            nelems,
+            &elem,
+        );
+        let st = self.file.submit_write_overlay(&op, buf, Some(view), Some(&bypass()))?.status()?;
+        self.file.stats.add(Counter::VarPutOps, 1);
+        Ok(st)
+    }
+
+    /// Collective blocking read of the subarray `start`/`count` of
+    /// variable `var` into `buf` — the read twin of
+    /// [`Dataset::put_vara`].
+    pub fn get_vara(
+        &self,
+        var: usize,
+        start: &[usize],
+        count: &[usize],
+        buf: &mut (impl IoBufMut + ?Sized),
+    ) -> Result<Status> {
+        self.check_data("get_vara")?;
+        let (view, elem, nelems, _) = self.var_view(var, start, count, true)?;
+        let op = AccessOp::read(
+            Positioning::Explicit(0),
+            Coordination::Collective,
+            Synchronism::Blocking,
+            0,
+            nelems,
+            &elem,
+        );
+        let st = self.file.submit_read_overlay(&op, buf, Some(view), Some(&bypass()))?;
+        self.file.stats.add(Counter::VarGetOps, 1);
+        Ok(st)
+    }
+
+    /// Nonblocking collective variant of [`Dataset::put_vara`]: returns
+    /// immediately with a [`Request`]; on a progress-lane transport both
+    /// two-phase halves run off the calling thread.
+    pub fn iput_vara(
+        &self,
+        var: usize,
+        start: &[usize],
+        count: &[usize],
+        buf: &(impl IoBuf + ?Sized),
+    ) -> Result<Request<()>> {
+        self.check_data("iput_vara")?;
+        let (view, elem, nelems, record) = self.var_view(var, start, count, false)?;
+        if record {
+            self.agree_recs((start[0] + count[0]) as u64);
+        }
+        let op = AccessOp::write(
+            Positioning::Explicit(0),
+            Coordination::Collective,
+            Synchronism::Nonblocking,
+            0,
+            nelems,
+            &elem,
+        );
+        let req = self.file.submit_write_overlay(&op, buf, Some(view), Some(&bypass()))?.request()?;
+        self.file.stats.add(Counter::VarPutOps, 1);
+        Ok(req)
+    }
+
+    /// Nonblocking collective variant of [`Dataset::get_vara`]: takes
+    /// the buffer by value, returns it filled through the [`Request`].
+    pub fn iget_vara<T>(
+        &self,
+        var: usize,
+        start: &[usize],
+        count: &[usize],
+        buf: Vec<T>,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
+        self.check_data("iget_vara")?;
+        let (view, elem, nelems, _) = self.var_view(var, start, count, true)?;
+        let op = AccessOp::read(
+            Positioning::Explicit(0),
+            Coordination::Collective,
+            Synchronism::Nonblocking,
+            0,
+            nelems,
+            &elem,
+        );
+        let req = self.file.submit_read_owned_overlay(&op, buf, Some(view), Some(&bypass()))?;
+        self.file.stats.add(Counter::VarGetOps, 1);
+        Ok(req)
+    }
+
+    /// Collective record append on record variable `var`: rank `r`
+    /// writes whole record `num_records() + r` from `buf` (one record's
+    /// worth of elements), and the record counter advances by the
+    /// communicator size on every rank.
+    pub fn append_records(&self, var: usize, buf: &(impl IoBuf + ?Sized)) -> Result<Status> {
+        self.check_data("append_records")?;
+        let (shape, record) = {
+            let hdr = self.hdr.lock().unwrap();
+            let v = hdr
+                .vars
+                .get(var)
+                .ok_or_else(|| err_arg(format!("append_records: no variable with id {var}")))?;
+            let shape: Vec<u64> = v.dimids.iter().map(|&d| hdr.dims[d as usize].len).collect();
+            (shape, v.dimids.first().is_some_and(|&d| hdr.dims[d as usize].len == UNLIMITED))
+        };
+        if !record {
+            return Err(err_arg("append_records: variable has no record dimension"));
+        }
+        let base = self.num_recs.load(Ordering::SeqCst) as usize;
+        let mut start = vec![0usize; shape.len()];
+        start[0] = base + self.file.comm.rank();
+        let mut count: Vec<usize> = shape.iter().map(|&l| l as usize).collect();
+        count[0] = 1;
+        self.put_vara(var, &start, &count, buf)
+    }
+
+    /// Collective coherence point: agree on the record count, persist it
+    /// (rank 0, writable handles), flush through [`File::sync`], and
+    /// re-read the header so reader datasets observe a writer's updates
+    /// (writer-sync / barrier / reader-sync, as for plain files).
+    pub fn sync(&self) -> Result<()> {
+        self.check_data("sync")?;
+        let max = self.agree_recs(self.num_recs.load(Ordering::SeqCst));
+        let writable = self.file.amode & (amode::WRONLY | amode::RDWR) != 0;
+        let readable = self.file.amode & (amode::RDONLY | amode::RDWR) != 0;
+        let comm = self.file.comm;
+        if writable && comm.rank() == 0 {
+            let bytes = max.to_le_bytes();
+            self.file.write_at(
+                header::NUM_RECS_OFFSET as i64,
+                bytes.as_slice(),
+                0,
+                bytes.len(),
+                &Datatype::BYTE,
+            )?;
+            self.file.stats.add(Counter::DatasetHeaderBytes, bytes.len() as u64);
+        }
+        comm.barrier();
+        self.file.sync()?;
+        if readable {
+            let hdr = Self::read_header(&self.file)?;
+            self.num_recs.fetch_max(hdr.num_recs, Ordering::SeqCst);
+            *self.hdr.lock().unwrap() = hdr;
+        }
+        Ok(())
+    }
+
+    /// Collective close: leaves define mode if still in it, runs a final
+    /// [`Dataset::sync`], and closes the underlying file.
+    pub fn close(self) -> Result<()> {
+        if self.defining.load(Ordering::SeqCst) {
+            self.enddef()?;
+        }
+        self.sync()?;
+        self.file.close()
+    }
+
+    // ------------------------------------------------------------------
+    // Inquiry
+    // ------------------------------------------------------------------
+
+    /// The underlying file handle (stats, plan-cache counters, degraded
+    /// advisories).
+    pub fn file(&self) -> &File<'c> {
+        &self.file
+    }
+
+    /// Records written along the unlimited dimension, as agreed at the
+    /// last collective point (put/sync/open).
+    pub fn num_records(&self) -> u64 {
+        self.num_recs.load(Ordering::SeqCst)
+    }
+
+    /// A snapshot of the container header.
+    pub fn header(&self) -> Header {
+        self.hdr.lock().unwrap().clone()
+    }
+
+    /// Look up a dimension id by name.
+    pub fn find_dim(&self, name: &str) -> Option<usize> {
+        self.hdr.lock().unwrap().dims.iter().position(|d| d.name == name)
+    }
+
+    /// Look up a variable id by name.
+    pub fn find_var(&self, name: &str) -> Option<usize> {
+        self.hdr.lock().unwrap().vars.iter().position(|v| v.name == name)
+    }
+
+    /// A global attribute's value.
+    pub fn get_att(&self, name: &str) -> Option<Vec<u8>> {
+        let hdr = self.hdr.lock().unwrap();
+        hdr.attrs.iter().find(|a| a.name == name).map(|a| a.value.clone())
+    }
+
+    /// A variable attribute's value.
+    pub fn get_var_att(&self, var: usize, name: &str) -> Option<Vec<u8>> {
+        let hdr = self.hdr.lock().unwrap();
+        let v = hdr.vars.get(var)?;
+        v.attrs.iter().find(|a| a.name == name).map(|a| a.value.clone())
+    }
+
+    /// The shape of variable `var` (outermost first); the record
+    /// dimension reports the current record count.
+    pub fn var_shape(&self, var: usize) -> Result<Vec<u64>> {
+        let hdr = self.hdr.lock().unwrap();
+        let v = hdr
+            .vars
+            .get(var)
+            .ok_or_else(|| err_arg(format!("var_shape: no variable with id {var}")))?;
+        Ok(v.dimids
+            .iter()
+            .map(|&d| {
+                let len = hdr.dims[d as usize].len;
+                if len == UNLIMITED {
+                    self.num_recs.load(Ordering::SeqCst)
+                } else {
+                    len
+                }
+            })
+            .collect())
+    }
+
+    // ------------------------------------------------------------------
+    // Subarray → file-view compilation
+    // ------------------------------------------------------------------
+
+    /// Collectively agree the record watermark at `candidate` records
+    /// (max across ranks), returning the agreed value.
+    fn agree_recs(&self, candidate: u64) -> u64 {
+        let all = self.file.comm.allgather(&candidate.to_le_bytes());
+        let max = all
+            .iter()
+            .filter(|b| b.len() >= 8)
+            .map(|b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .max()
+            .unwrap_or(candidate);
+        self.num_recs.fetch_max(max, Ordering::SeqCst);
+        max
+    }
+
+    /// Validate a subarray request and compile (or reuse) its scoped
+    /// file view. Returns `(view, element type, element count, is
+    /// record variable)`. The per-shape `Arc<FileView>` is cached so a
+    /// repeated same-shape access hands the scheduler the *same* view
+    /// by pointer identity — the plan-cache key.
+    fn var_view(
+        &self,
+        var: usize,
+        start: &[usize],
+        count: &[usize],
+        bound_records: bool,
+    ) -> Result<(Arc<FileView>, Datatype, usize, bool)> {
+        let hdr = self.hdr.lock().unwrap();
+        let v = hdr
+            .vars
+            .get(var)
+            .ok_or_else(|| err_arg(format!("dataset: no variable with id {var}")))?;
+        let shape: Vec<u64> = v.dimids.iter().map(|&d| hdr.dims[d as usize].len).collect();
+        let ndims = shape.len();
+        if start.len() != ndims || count.len() != ndims {
+            return Err(err_arg(format!(
+                "dataset: variable {:?} has {ndims} dimensions; got start[{}], count[{}]",
+                v.name,
+                start.len(),
+                count.len()
+            )));
+        }
+        let record = ndims > 0 && shape[0] == UNLIMITED;
+        for d in 0..ndims {
+            if count[d] == 0 {
+                return Err(err_arg(format!("dataset: zero count in dimension {d}")));
+            }
+            let limit = if d == 0 && record {
+                if bound_records {
+                    self.num_recs.load(Ordering::SeqCst)
+                } else {
+                    u64::MAX
+                }
+            } else {
+                shape[d]
+            };
+            if (start[d] as u64).saturating_add(count[d] as u64) > limit {
+                return Err(err_arg(format!(
+                    "dataset: start {} + count {} exceeds dimension {d} bound {limit}",
+                    start[d], count[d]
+                )));
+            }
+        }
+        let elem = Datatype::Prim(v.prim);
+        let nelems: usize = count.iter().product();
+        let key = (var, start.to_vec(), count.to_vec());
+        {
+            let views = self.views.lock().unwrap();
+            if let Some((_, view)) = views.iter().find(|(k, _)| *k == key) {
+                return Ok((view.clone(), elem, nelems, record));
+            }
+        }
+        let type_err = |e| err_arg(format!("dataset: subarray view: {e}"));
+        let rep = if v.external32 { DataRep::External32 } else { DataRep::Native };
+        let (disp, filetype) = if record {
+            let rec_size = hdr.rec_size;
+            let inner = if ndims == 1 {
+                elem.clone()
+            } else {
+                let sizes: Vec<usize> = shape[1..].iter().map(|&l| l as usize).collect();
+                Datatype::subarray(&sizes, &count[1..], &start[1..], ArrayOrder::C, &elem)
+                    .map_err(type_err)?
+            };
+            let ft = Datatype::hvector(count[0], 1, rec_size as i64, &inner).map_err(type_err)?;
+            let disp = hdr.rec_start + v.data_offset + start[0] as u64 * rec_size;
+            (disp as i64, ft)
+        } else if ndims == 0 {
+            (v.data_offset as i64, elem.clone())
+        } else {
+            let sizes: Vec<usize> = shape.iter().map(|&l| l as usize).collect();
+            let ft = Datatype::subarray(&sizes, count, start, ArrayOrder::C, &elem)
+                .map_err(type_err)?;
+            (v.data_offset as i64, ft)
+        };
+        let view = Arc::new(FileView::new(disp, elem.clone(), filetype, rep)?);
+        let mut cache = self.views.lock().unwrap();
+        if cache.len() >= VIEW_CACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push((key, view.clone()));
+        Ok((view, elem, nelems, record))
+    }
+}
+
+fn upsert_attr(attrs: &mut Vec<Attr>, name: &str, value: &[u8]) {
+    if let Some(a) = attrs.iter_mut().find(|a| a.name == name) {
+        a.value = value.to_vec();
+    } else {
+        attrs.push(Attr { name: name.to_string(), value: value.to_vec() });
+    }
+}
+
+/// The per-op hint overlay that keeps bulk variable payloads out of the
+/// page cache (satellite of the LRU budget: sweeps must not evict the
+/// hot header pages).
+fn bypass() -> Info {
+    Info::from([(keys::CACHE, "disable")])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{threads, Comm};
+    use crate::io::errors::ErrorClass;
+
+    fn tmp(name: &str) -> String {
+        format!("/tmp/jpio-dataset-{}-{name}.jpds", std::process::id())
+    }
+
+    fn cleanup(path: &str) {
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+        let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
+    }
+
+    #[test]
+    fn define_then_roundtrip_fixed_var() {
+        let path = tmp("fixed");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", 4).unwrap();
+            let y = ds.def_dim("y", 6).unwrap();
+            let grid = ds.def_var("grid", &Datatype::INT, "native", &[x, y]).unwrap();
+            ds.put_att("title", b"unit test").unwrap();
+            ds.put_var_att(grid, "units", b"K").unwrap();
+            ds.enddef().unwrap();
+            // Each rank owns two rows of the 4×6 grid.
+            let r = c.rank();
+            let mine: Vec<i32> = (0..12).map(|i| (r * 100 + i) as i32).collect();
+            ds.put_vara(grid, &[r * 2, 0], &[2, 6], mine.as_slice()).unwrap();
+            let mut back = vec![0i32; 12];
+            ds.get_vara(grid, &[r * 2, 0], &[2, 6], back.as_mut_slice()).unwrap();
+            assert_eq!(back, mine);
+            assert_eq!(ds.get_att("title").unwrap(), b"unit test");
+            assert_eq!(ds.get_var_att(grid, "units").unwrap(), b"K");
+            ds.close().unwrap();
+            // Reopen and cross-read the other rank's rows.
+            let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+            let ds = Dataset::open(f).unwrap();
+            let grid = ds.find_var("grid").unwrap();
+            assert_eq!(ds.var_shape(grid).unwrap(), vec![4, 6]);
+            let other = 1 - r;
+            let mut theirs = vec![0i32; 12];
+            ds.get_vara(grid, &[other * 2, 0], &[2, 6], theirs.as_mut_slice()).unwrap();
+            let expect: Vec<i32> = (0..12).map(|i| (other * 100 + i) as i32).collect();
+            assert_eq!(theirs, expect);
+            ds.close().unwrap();
+        });
+        cleanup(&path);
+    }
+
+    #[test]
+    fn record_append_and_nonblocking_cells() {
+        let path = tmp("records");
+        threads::run(2, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let t = ds.def_dim("time", UNLIMITED).unwrap();
+            let s = ds.def_dim("sample", 8).unwrap();
+            let series = ds.def_var("series", &Datatype::DOUBLE, "native", &[t, s]).unwrap();
+            ds.enddef().unwrap();
+            let r = c.rank();
+            // Two collective appends: records 0..2, then 2..4.
+            for round in 0..2usize {
+                let rec: Vec<f64> = (0..8).map(|i| (round * 100 + r * 10 + i) as f64).collect();
+                ds.append_records(series, rec.as_slice()).unwrap();
+            }
+            assert_eq!(ds.num_records(), 4);
+            // Nonblocking read-back of this rank's two records.
+            for round in 0..2usize {
+                let rec = round * 2 + r;
+                let req = ds.iget_vara(series, &[rec, 0], &[1, 8], vec![0f64; 8]).unwrap();
+                let (st, got) = req.wait().unwrap();
+                assert_eq!(st.bytes, 64);
+                let expect: Vec<f64> = (0..8).map(|i| (round * 100 + r * 10 + i) as f64).collect();
+                assert_eq!(got, expect);
+            }
+            // Nonblocking overwrite of record `r`, then blocking verify.
+            let new: Vec<f64> = (0..8).map(|i| (900 + i) as f64).collect();
+            ds.iput_vara(series, &[r, 0], &[1, 8], new.as_slice()).unwrap().wait().unwrap();
+            let mut back = vec![0f64; 8];
+            ds.get_vara(series, &[r, 0], &[1, 8], back.as_mut_slice()).unwrap();
+            assert_eq!(back, new);
+            ds.close().unwrap();
+            // Reopen: the record count survived in the header.
+            let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+            let ds = Dataset::open(f).unwrap();
+            assert_eq!(ds.num_records(), 4);
+            ds.close().unwrap();
+        });
+        cleanup(&path);
+    }
+
+    #[test]
+    fn mode_state_machine_is_enforced() {
+        let path = tmp("modes");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", 4).unwrap();
+            let v = ds.def_var("v", &Datatype::INT, "native", &[x]).unwrap();
+            // Data-mode calls are rejected in define mode.
+            let e = ds.put_vara(v, &[0], &[4], [0i32; 4].as_slice()).unwrap_err();
+            assert_eq!(e.class, ErrorClass::UnsupportedOperation);
+            // Schema errors.
+            assert_eq!(ds.def_dim("x", 9).unwrap_err().class, ErrorClass::Arg);
+            let dup = ds.def_var("v", &Datatype::INT, "native", &[x]).unwrap_err();
+            assert_eq!(dup.class, ErrorClass::Arg);
+            let bad = ds.def_var("w", &Datatype::INT, "native", &[7]).unwrap_err();
+            assert_eq!(bad.class, ErrorClass::Arg);
+            let t = ds.def_dim("t", UNLIMITED).unwrap();
+            assert_eq!(ds.def_dim("t2", UNLIMITED).unwrap_err().class, ErrorClass::Arg);
+            assert_eq!(
+                ds.def_var("w", &Datatype::INT, "native", &[x, t]).unwrap_err().class,
+                ErrorClass::Arg
+            );
+            ds.enddef().unwrap();
+            // Define-mode calls are rejected in data mode.
+            assert_eq!(ds.def_dim("y", 3).unwrap_err().class, ErrorClass::UnsupportedOperation);
+            assert_eq!(ds.enddef().unwrap_err().class, ErrorClass::UnsupportedOperation);
+            // Out-of-bounds subarrays.
+            assert_eq!(
+                ds.put_vara(v, &[2], &[4], [0i32; 4].as_slice()).unwrap_err().class,
+                ErrorClass::Arg
+            );
+            let mut b = [0i32; 4];
+            let zero = ds.get_vara(v, &[0], &[0], b.as_mut_slice()).unwrap_err();
+            assert_eq!(zero.class, ErrorClass::Arg);
+            ds.close().unwrap();
+        });
+        cleanup(&path);
+    }
+
+    #[test]
+    fn same_shape_access_reuses_the_cached_view_and_plan() {
+        let path = tmp("plancache");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", 16).unwrap();
+            let y = ds.def_dim("y", 16).unwrap();
+            let v = ds.def_var("v", &Datatype::INT, "native", &[x, y]).unwrap();
+            ds.enddef().unwrap();
+            let block: Vec<i32> = (0..64).collect();
+            let mut hits = Vec::new();
+            for _ in 0..4 {
+                ds.put_vara(v, &[4, 4], &[8, 8], block.as_slice()).unwrap();
+                hits.push(ds.file().plan_cache_stats().hits);
+            }
+            assert!(
+                hits.windows(2).all(|w| w[1] > w[0]),
+                "same-shape put_vara must hit the plan cache on every repeat: {hits:?}"
+            );
+            ds.close().unwrap();
+        });
+        cleanup(&path);
+    }
+}

@@ -617,6 +617,38 @@ impl File<'_> {
         Ok(ctx)
     }
 
+    /// Apply the per-submission overlays to a fresh [`TransferCtx`]:
+    ///
+    /// * a scoped **view** replacing the installed one (dataset subarray
+    ///   access) — rejected off `Positioning::Explicit`, whose offsets
+    ///   alone are insensitive to the installed view's etype scaling;
+    /// * a `jpio_cache = disable` **hint** dropping the page cache from
+    ///   this submission's path. The cache first flushes and invalidates
+    ///   so a bypassed read still observes write-behind data and a
+    ///   bypassed write cannot be shadowed by stale resident pages.
+    fn apply_overlay(
+        &self,
+        ctx: &mut TransferCtx,
+        op: &AccessOp,
+        overlay: Option<Arc<FileView>>,
+        hints: Option<&Info>,
+    ) -> Result<()> {
+        if let Some(view) = overlay {
+            if !matches!(op.positioning, Positioning::Explicit(_)) {
+                return Err(err_arg(
+                    "per-op view overlays require explicit-offset positioning",
+                ));
+            }
+            ctx.view = view;
+        }
+        if hints.and_then(|h| h.get_flag(keys::CACHE)) == Some(false) {
+            if let Some(cache) = ctx.cache.take() {
+                cache.flush_and_invalidate()?;
+            }
+        }
+        Ok(())
+    }
+
     /// Resolve the op's starting etype offset and update the pointer it
     /// names. Returns `(offset, advance_by_actual)`: blocking
     /// individual-pointer ops advance by the *actual* transfer size after
@@ -708,12 +740,32 @@ impl File<'_> {
     /// overlay's keys shadow the handle's Info for this one submission
     /// (intended for A/B-ing `jpio_alltoall_algorithm` and
     /// `jpio_staging_buffer_size` without reopening the file; any
-    /// collective-buffering hint works). Like the hints they override,
-    /// overlays on collective cells must match across ranks.
+    /// collective-buffering hint works, and `jpio_cache = disable`
+    /// bypasses the page cache for this one submission — see
+    /// [`keys::CACHE`]). Like the hints they override, overlays on
+    /// collective cells must match across ranks.
     pub fn submit_write_with(
         &self,
         op: &AccessOp,
         buf: &(impl IoBuf + ?Sized),
+        hints: Option<&Info>,
+    ) -> Result<Submission> {
+        self.submit_write_overlay(op, buf, None, hints)
+    }
+
+    /// [`File::submit_write_with`] plus a per-op *view* overlay: `overlay`
+    /// replaces the handle's installed file view for this one submission
+    /// only, without the collective `set_view` (pointer reset, sfp
+    /// rewrite) or its cross-handle visibility. The dataset layer compiles
+    /// every subarray request into such a scoped view; only
+    /// `Positioning::Explicit` ops may carry one (the file pointers are
+    /// etype-indexed against the *installed* view, so a scoped view would
+    /// silently rescale them).
+    pub(crate) fn submit_write_overlay(
+        &self,
+        op: &AccessOp,
+        buf: &(impl IoBuf + ?Sized),
+        overlay: Option<Arc<FileView>>,
         hints: Option<&Info>,
     ) -> Result<Submission> {
         if let Synchronism::Split(SplitPhase::End) = op.synchronism {
@@ -723,7 +775,8 @@ impl File<'_> {
             self.prologue(op)?;
             return self.end_write(op).map(Submission::Done);
         }
-        let ctx = self.prologue(op)?;
+        let mut ctx = self.prologue(op)?;
+        self.apply_overlay(&mut ctx, op, overlay, hints)?;
         let payload = pack_payload(buf, op.buf_offset, op.count, &op.datatype, &ctx.view)?;
         let (off, advance) = self.resolve_offset(op, &ctx.view)?;
         match (op.coordination, op.synchronism) {
@@ -895,6 +948,18 @@ impl File<'_> {
         buf: &mut (impl IoBufMut + ?Sized),
         hints: Option<&Info>,
     ) -> Result<Status> {
+        self.submit_read_overlay(op, buf, None, hints)
+    }
+
+    /// [`File::submit_read_with`] plus a per-op view overlay — see
+    /// [`File::submit_write_overlay`].
+    pub(crate) fn submit_read_overlay(
+        &self,
+        op: &AccessOp,
+        buf: &mut (impl IoBufMut + ?Sized),
+        overlay: Option<Arc<FileView>>,
+        hints: Option<&Info>,
+    ) -> Result<Status> {
         match op.synchronism {
             Synchronism::Split(SplitPhase::End) => {
                 self.prologue(op)?;
@@ -907,7 +972,8 @@ impl File<'_> {
             }
             _ => {}
         }
-        let ctx = self.prologue(op)?;
+        let mut ctx = self.prologue(op)?;
+        self.apply_overlay(&mut ctx, op, overlay, hints)?;
         let payload_len = op.payload_len();
         if let Synchronism::Split(SplitPhase::Begin) = op.synchronism {
             let (off, _) = self.resolve_offset(op, &ctx.view)?;
@@ -975,10 +1041,27 @@ impl File<'_> {
         T: Send + 'static,
         [T]: IoBufMut,
     {
+        self.submit_read_owned_overlay(op, buf, None, hints)
+    }
+
+    /// [`File::submit_read_owned_with`] plus a per-op view overlay — see
+    /// [`File::submit_write_overlay`].
+    pub(crate) fn submit_read_owned_overlay<T>(
+        &self,
+        op: &AccessOp,
+        buf: Vec<T>,
+        overlay: Option<Arc<FileView>>,
+        hints: Option<&Info>,
+    ) -> Result<Request<Vec<T>>>
+    where
+        T: Send + 'static,
+        [T]: IoBufMut,
+    {
         if !matches!(op.synchronism, Synchronism::Nonblocking) {
             return Err(err_arg("submit_read_owned handles only nonblocking reads"));
         }
-        let ctx = self.prologue(op)?;
+        let mut ctx = self.prologue(op)?;
+        self.apply_overlay(&mut ctx, op, overlay, hints)?;
         check_mem_args(buf.as_slice(), op.buf_offset, op.count, &op.datatype)?;
         let payload_len = op.payload_len();
         let (buf_offset, count, dt) = (op.buf_offset, op.count, op.datatype.clone());
@@ -1391,6 +1474,79 @@ mod tests {
             let st = f.read_shared(b.as_mut_slice(), 0, 8, &Datatype::BYTE).unwrap();
             assert_eq!(st.bytes, 8);
             assert!(b.iter().all(|&v| v == 9));
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+    }
+
+    #[test]
+    fn per_op_cache_bypass_leaves_counters_untouched() {
+        let path = tmp("cache-bypass");
+        threads::run(1, |c| {
+            let info = Info::from([("jpio_cache", "enable")]);
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, info).unwrap();
+            let cache_traffic = |f: &File| {
+                let report = f.stats();
+                ["cache_hit_bytes", "cache_miss_bytes", "write_behind_flush_bytes", "rmw_cycles"]
+                    .iter()
+                    .map(|k| report.counter(k).sum)
+                    .sum::<u64>()
+            };
+            let bypass = Info::from([("jpio_cache", "disable")]);
+            let data: Vec<u8> = (0..128u32).map(|v| v as u8).collect();
+            let wop = AccessOp::write(
+                Positioning::Explicit(0),
+                Coordination::Independent,
+                Synchronism::Blocking,
+                0,
+                data.len(),
+                &Datatype::BYTE,
+            );
+            f.submit_write_with(&wop, data.as_slice(), Some(&bypass)).unwrap();
+            let mut back = vec![0u8; data.len()];
+            let rop = AccessOp::read(
+                Positioning::Explicit(0),
+                Coordination::Independent,
+                Synchronism::Blocking,
+                0,
+                data.len(),
+                &Datatype::BYTE,
+            );
+            f.submit_read_with(&rop, back.as_mut_slice(), Some(&bypass)).unwrap();
+            assert_eq!(back, data);
+            assert_eq!(
+                cache_traffic(&f),
+                0,
+                "jpio_cache=disable overlay must keep the submission off the page cache"
+            );
+            // Control: the same read without the overlay runs through the
+            // cache, so the bypass above was a choice, not a dead cache.
+            f.submit_read(&rop, back.as_mut_slice()).unwrap();
+            assert!(cache_traffic(&f) > 0, "handle cache never engaged; bypass test is vacuous");
+            f.close().unwrap();
+        });
+        File::delete(&path, &Info::null()).unwrap();
+        let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
+    }
+
+    #[test]
+    fn view_overlay_requires_explicit_positioning() {
+        let path = tmp("overlay-pos");
+        threads::run(1, |c| {
+            let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+            let overlay = Arc::new(FileView::default());
+            let op = AccessOp::write(
+                Positioning::Individual,
+                Coordination::Independent,
+                Synchronism::Blocking,
+                0,
+                4,
+                &Datatype::BYTE,
+            );
+            let e = f
+                .submit_write_overlay(&op, [0u8; 4].as_slice(), Some(overlay), None)
+                .unwrap_err();
+            assert_eq!(e.class, ErrorClass::Arg);
             f.close().unwrap();
         });
         File::delete(&path, &Info::null()).unwrap();

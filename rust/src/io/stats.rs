@@ -104,12 +104,19 @@ pub(crate) enum Counter {
     /// data (cache) — folded with the parity small-write RMWs in the
     /// striped backend's own counter.
     RmwCycles,
+    /// Dataset container header bytes written (enddef/sync persists) and
+    /// re-read (open/sync coherence refreshes).
+    DatasetHeaderBytes,
+    /// Dataset `put_vara`/`iput_vara`/`append_records` variable writes.
+    VarPutOps,
+    /// Dataset `get_vara`/`iget_vara` variable reads.
+    VarGetOps,
 }
 
 impl Counter {
     /// Every counter, in wire order (the close-time reduction serializes
     /// values in this order, so it must be identical on all ranks).
-    pub(crate) const ALL: [Counter; 23] = [
+    pub(crate) const ALL: [Counter; 26] = [
         Counter::ReadOps,
         Counter::WriteOps,
         Counter::IndependentOps,
@@ -133,6 +140,9 @@ impl Counter {
         Counter::CacheMissBytes,
         Counter::WriteBehindFlushBytes,
         Counter::RmwCycles,
+        Counter::DatasetHeaderBytes,
+        Counter::VarPutOps,
+        Counter::VarGetOps,
     ];
 
     /// The report/trace name of the counter.
@@ -161,6 +171,9 @@ impl Counter {
             Counter::CacheMissBytes => "cache_miss_bytes",
             Counter::WriteBehindFlushBytes => "write_behind_flush_bytes",
             Counter::RmwCycles => "rmw_cycles",
+            Counter::DatasetHeaderBytes => "dataset_header_bytes",
+            Counter::VarPutOps => "var_put_ops",
+            Counter::VarGetOps => "var_get_ops",
         }
     }
 }

@@ -19,6 +19,11 @@
 //!   submit path compiles each access into an [`io::IoPlan`] and
 //!   executes it on the `io::schedule::IoScheduler` (with plan caching
 //!   for repeated same-shape accesses).
+//! * [`dataset`] — a structured dataset layer over [`io::File`]
+//!   (Parallel netCDF direction): self-describing containers of named
+//!   N-D variables whose collective `put_vara`/`get_vara` subarray
+//!   accesses compile onto `Datatype::subarray` file views and ride the
+//!   unchanged `AccessOp` core.
 //! * [`strategy`] — the four file-access strategies the paper evaluates
 //!   (per-item, bulk, view-buffer, memory-mapped).
 //! * [`storage`] — storage substrates: local disk, a simulated NFS
@@ -63,6 +68,7 @@ pub mod bench;
 pub mod cli;
 pub mod comm;
 pub mod coordinator;
+pub mod dataset;
 pub mod io;
 pub mod runtime;
 pub mod storage;

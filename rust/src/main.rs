@@ -14,6 +14,10 @@
 //! jpio stats [--ranks 4] [--procs] [--trace /tmp/trace.jsonl]
 //!                                   # run an instrumented workload and render
 //!                                   # the Darshan-style reduced stats report
+//! jpio dataset <path>               # print a dataset container summary
+//! jpio dataset --check              # structured-dataset self-test (define →
+//!                                   # collective put/get → record append →
+//!                                   # reopen; exits nonzero on failure)
 //! jpio version
 //! ```
 
@@ -21,6 +25,7 @@ use jpio::bench::Testbed;
 use jpio::cli::Args;
 use jpio::comm::datatype::Datatype;
 use jpio::comm::{process, threads, Comm};
+use jpio::dataset::{header, Dataset};
 use jpio::io::{amode, File, Info};
 
 fn main() {
@@ -31,13 +36,14 @@ fn main() {
         Some("artifacts") => artifacts(&args),
         Some("demo") => demo(&args),
         Some("stats") => stats(&args),
+        Some("dataset") => dataset(&args),
         Some("version") => println!("jpio {}", env!("CARGO_PKG_VERSION")),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command {cmd:?}\n");
             }
             eprintln!(
-                "usage: jpio <routines|testbed|artifacts|demo|stats|version> [--flags]\n\
+                "usage: jpio <routines|testbed|artifacts|demo|stats|dataset|version> [--flags]\n\
                  see `cargo doc` and README.md for the library API"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -254,6 +260,113 @@ fn stats(args: &Args) {
     if let Some(t) = &trace {
         println!("trace: one JSONL file per rank at {t}.<rank>");
     }
+}
+
+/// `jpio dataset <path>`: print the container summary of a structured
+/// dataset (dimensions, attributes, variables). `jpio dataset --check`
+/// runs the layer's end-to-end self-test instead.
+fn dataset(args: &Args) {
+    if args.has("check") {
+        dataset_check();
+        return;
+    }
+    let Some(path) = args.positional.first().cloned() else {
+        eprintln!("usage: jpio dataset --check | jpio dataset <path>");
+        std::process::exit(2);
+    };
+    threads::run(1, |c| {
+        let f = match File::open(c, &path, amode::RDONLY, Info::null()) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("dataset: cannot open {path}: {e}");
+                std::process::exit(1);
+            }
+        };
+        let ds = match Dataset::open(f) {
+            Ok(ds) => ds,
+            Err(e) => {
+                eprintln!("dataset: {path} is not a jpio dataset: {e}");
+                std::process::exit(1);
+            }
+        };
+        let hdr = ds.header();
+        println!(
+            "dataset {path}: container v{}, {} record(s)",
+            header::VERSION,
+            ds.num_records()
+        );
+        for d in &hdr.dims {
+            if d.len == header::UNLIMITED {
+                println!("  dim {} = unlimited", d.name);
+            } else {
+                println!("  dim {} = {}", d.name, d.len);
+            }
+        }
+        for a in &hdr.attrs {
+            println!("  att {} = {:?}", a.name, String::from_utf8_lossy(&a.value));
+        }
+        for v in &hdr.vars {
+            let dims: Vec<&str> =
+                v.dimids.iter().map(|&d| hdr.dims[d as usize].name.as_str()).collect();
+            let rep = if v.external32 { ", external32" } else { "" };
+            println!("  var {}({}) : {}{rep}", v.name, dims.join(", "), v.prim.name());
+            for a in &v.attrs {
+                println!("    att {} = {:?}", a.name, String::from_utf8_lossy(&a.value));
+            }
+        }
+        ds.close().unwrap();
+    });
+}
+
+/// `jpio dataset --check`: fail (exit nonzero) unless the structured
+/// dataset layer can define a container, write a block-decomposed
+/// `external32` variable collectively, append records on the unlimited
+/// dimension, and re-open + verify the bytes — the CI smoke test of the
+/// dataset subsystem. Assertion failures fail the rank thread, which
+/// propagates out of `threads::run` and exits nonzero.
+fn dataset_check() {
+    let path = format!("/tmp/jpio-dataset-check-{}.jpds", std::process::id());
+    threads::run(2, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let ds = Dataset::create(f).unwrap();
+        let t = ds.def_dim("time", header::UNLIMITED).unwrap();
+        let x = ds.def_dim("x", 8).unwrap();
+        let y = ds.def_dim("y", 6).unwrap();
+        let grid = ds.def_var("grid", &Datatype::INT, "external32", &[x, y]).unwrap();
+        let series = ds.def_var("series", &Datatype::DOUBLE, "native", &[t, y]).unwrap();
+        ds.put_att("title", b"jpio dataset self-test").unwrap();
+        ds.enddef().unwrap();
+        // Each rank owns a row-block of the 8x6 grid.
+        let (starts, counts) = Datatype::block_decompose(&[8, 6], &[2, 1], c.rank()).unwrap();
+        let n = counts[0] * counts[1];
+        let mine: Vec<i32> = (0..n).map(|i| (c.rank() * 1000 + i) as i32).collect();
+        ds.put_vara(grid, &starts, &counts, mine.as_slice()).unwrap();
+        let rec: Vec<f64> = (0..6).map(|i| (c.rank() * 10 + i) as f64).collect();
+        ds.append_records(series, rec.as_slice()).unwrap();
+        let mut back = vec![0i32; n];
+        ds.get_vara(grid, &starts, &counts, back.as_mut_slice()).unwrap();
+        assert_eq!(back, mine);
+        ds.close().unwrap();
+        // Re-open read-only and verify the whole variable collectively.
+        let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+        let ds = Dataset::open(f).unwrap();
+        assert_eq!(ds.num_records(), 2);
+        let grid = ds.find_var("grid").unwrap();
+        let mut all = vec![0i32; 48];
+        ds.get_vara(grid, &[0, 0], &[8, 6], all.as_mut_slice()).unwrap();
+        for r in 0..2usize {
+            for i in 0..24usize {
+                assert_eq!(all[r * 24 + i], (r * 1000 + i) as i32);
+            }
+        }
+        ds.close().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    println!(
+        "dataset check: OK (define -> enddef -> collective put/get -> record append -> \
+         reopen, external32 on disk)"
+    );
 }
 
 fn testbed(args: &Args) {

@@ -1,0 +1,318 @@
+//! The structured dataset layer end to end: collective
+//! `put_vara`/`get_vara` across forked processes on striped storage,
+//! the `external32` on-disk encoding, cache-on/cache-off byte equality,
+//! degraded reads with a killed parity server, writer→reader header
+//! coherence through `sync`, and the golden-fixture container-format
+//! drift check.
+
+use std::sync::Arc;
+
+use jpio::comm::{process, threads, Comm, Datatype};
+use jpio::dataset::header::{Header, UNLIMITED};
+use jpio::dataset::Dataset;
+use jpio::io::{amode, ErrorClass, File, Info};
+use jpio::storage::faults::{FaultBackend, FaultPlan};
+use jpio::storage::layout::Redundancy;
+use jpio::storage::local::LocalBackend;
+use jpio::storage::striped::StripedBackend;
+use jpio::storage::Backend;
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-dsround-{}-{name}.jpds", std::process::id())
+}
+
+fn cleanup(path: &str) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+    let _ = std::fs::remove_file(format!("{path}.jpio-cache-lease"));
+}
+
+// ----------------------------------------------------------------------
+// Acceptance: 4 forked ranks, striped storage, 2-D block decomposition
+// ----------------------------------------------------------------------
+
+/// The PR's acceptance scenario: four *processes* (the distributed-memory
+/// configuration) collectively write a 16×16 variable block-decomposed
+/// 2×2, and every rank reads the whole variable back byte-identically —
+/// over striped storage resolved from the ROMIO striping hints.
+#[test]
+fn four_process_block_decomposed_roundtrip_on_striped_storage() {
+    let path = tmp("procs");
+    let info = Info::from([
+        ("jpio_backend", "striped"),
+        ("striping_factor", "4"),
+        ("striping_unit", "4096"),
+    ]);
+    {
+        let path = &path;
+        let info = &info;
+        process::run_local(4, move |c| {
+            let f = File::open(c, path, amode::RDWR | amode::CREATE, info.clone()).unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", 16).unwrap();
+            let y = ds.def_dim("y", 16).unwrap();
+            let grid = ds.def_var("grid", &Datatype::INT, "native", &[x, y]).unwrap();
+            ds.enddef().unwrap();
+            let r = c.rank();
+            let (starts, subs) = Datatype::block_decompose(&[16, 16], &[2, 2], r).unwrap();
+            let n = subs[0] * subs[1];
+            let mine: Vec<i32> = (0..n).map(|i| (r * 1000 + i) as i32).collect();
+            ds.put_vara(grid, &starts, &subs, mine.as_slice()).unwrap();
+            // Own block back first…
+            let mut back = vec![0i32; n];
+            ds.get_vara(grid, &starts, &subs, back.as_mut_slice()).unwrap();
+            assert_eq!(back, mine, "rank {r}: own block");
+            // …then the whole variable, against every rank's block.
+            let mut all = vec![0i32; 256];
+            ds.get_vara(grid, &[0, 0], &[16, 16], all.as_mut_slice()).unwrap();
+            let mut expect = vec![0i32; 256];
+            for o in 0..4usize {
+                let (s, sub) = Datatype::block_decompose(&[16, 16], &[2, 2], o).unwrap();
+                for li in 0..sub[0] {
+                    for lj in 0..sub[1] {
+                        expect[(s[0] + li) * 16 + s[1] + lj] = (o * 1000 + li * sub[1] + lj) as i32;
+                    }
+                }
+            }
+            assert_eq!(all, expect, "rank {r}: full variable");
+            ds.close().unwrap();
+        });
+    }
+    File::delete(&path, &info).unwrap();
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+// ----------------------------------------------------------------------
+// external32: canonical big-endian bytes on disk
+// ----------------------------------------------------------------------
+
+#[test]
+fn external32_variables_are_big_endian_on_disk() {
+    let path = tmp("ext32");
+    threads::run(1, |c| {
+        let f = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let ds = Dataset::create(f).unwrap();
+        let x = ds.def_dim("x", 5).unwrap();
+        let vi = ds.def_var("vi", &Datatype::INT, "external32", &[x]).unwrap();
+        let vd = ds.def_var("vd", &Datatype::DOUBLE, "external32", &[x]).unwrap();
+        ds.enddef().unwrap();
+        let ints: Vec<i32> = (0..5).map(|i| i * 3 - 7).collect();
+        let dbls: Vec<f64> = (0..5).map(|i| i as f64 * 1.5 - 2.25).collect();
+        ds.put_vara(vi, &[0], &[5], ints.as_slice()).unwrap();
+        ds.put_vara(vd, &[0], &[5], dbls.as_slice()).unwrap();
+        // Decode-on-read returns the native values…
+        let mut bi = vec![0i32; 5];
+        ds.get_vara(vi, &[0], &[5], bi.as_mut_slice()).unwrap();
+        assert_eq!(bi, ints);
+        let mut bd = vec![0f64; 5];
+        ds.get_vara(vd, &[0], &[5], bd.as_mut_slice()).unwrap();
+        assert_eq!(bd, dbls);
+        ds.close().unwrap();
+    });
+    // …while the raw file bytes are canonical big-endian at each
+    // variable's header-declared offset.
+    let raw = std::fs::read(&path).unwrap();
+    let hdr = Header::decode(&raw).unwrap();
+    let vi = hdr.vars.iter().find(|v| v.name == "vi").unwrap();
+    let vd = hdr.vars.iter().find(|v| v.name == "vd").unwrap();
+    assert!(vi.external32 && vd.external32);
+    let want_i: Vec<u8> = (0..5i32).flat_map(|i| (i * 3 - 7).to_be_bytes()).collect();
+    let at = vi.data_offset as usize;
+    assert_eq!(&raw[at..at + 20], &want_i[..], "INT external32 bytes");
+    let want_d: Vec<u8> =
+        (0..5).flat_map(|i| (i as f64 * 1.5 - 2.25).to_be_bytes()).collect();
+    let at = vd.data_offset as usize;
+    assert_eq!(&raw[at..at + 40], &want_d[..], "DOUBLE external32 bytes");
+    cleanup(&path);
+}
+
+// ----------------------------------------------------------------------
+// Page cache on/off: identical bytes either way
+// ----------------------------------------------------------------------
+
+#[test]
+fn cached_and_uncached_handles_produce_identical_files() {
+    let cached = tmp("cache-on");
+    let uncached = tmp("cache-off");
+    {
+        let cached = &cached;
+        let uncached = &uncached;
+        threads::run(2, move |c| {
+            let infos = [Info::from([("jpio_cache", "enable")]), Info::null()];
+            for (path, info) in [cached, uncached].into_iter().zip(infos) {
+                let f = File::open(c, path, amode::RDWR | amode::CREATE, info).unwrap();
+                let ds = Dataset::create(f).unwrap();
+                let x = ds.def_dim("x", 8).unwrap();
+                let y = ds.def_dim("y", 4).unwrap();
+                let v = ds.def_var("v", &Datatype::LONG, "native", &[x, y]).unwrap();
+                ds.put_att("title", b"cache parity").unwrap();
+                ds.enddef().unwrap();
+                let r = c.rank();
+                let mine: Vec<i64> = (0..16).map(|i| (r * 1000 + i) as i64).collect();
+                ds.put_vara(v, &[r * 4, 0], &[4, 4], mine.as_slice()).unwrap();
+                ds.close().unwrap();
+            }
+        });
+    }
+    let a = std::fs::read(&cached).unwrap();
+    let b = std::fs::read(&uncached).unwrap();
+    assert_eq!(a, b, "cache write-behind must not change the bytes on disk");
+    cleanup(&cached);
+    cleanup(&uncached);
+}
+
+// ----------------------------------------------------------------------
+// Degraded reads: dataset access over parity stripes with a dead server
+// ----------------------------------------------------------------------
+
+#[test]
+fn degraded_parity_read_surfaces_advisories_through_dataset() {
+    let plan = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..4)
+        .map(|i| {
+            if i == 1 {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let striped = StripedBackend::with_redundancy(children, 8, Redundancy::Parity).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(striped);
+    let path = tmp("degraded");
+    let advisory_counts = {
+        let path = &path;
+        let backend = &backend;
+        let plan = &plan;
+        threads::run(4, move |c| {
+            let f = File::open_with_backend(
+                c,
+                path,
+                amode::RDWR | amode::CREATE,
+                Info::null(),
+                backend.clone(),
+            )
+            .unwrap();
+            let ds = Dataset::create(f).unwrap();
+            let x = ds.def_dim("x", 8).unwrap();
+            let y = ds.def_dim("y", 8).unwrap();
+            let v = ds.def_var("v", &Datatype::INT, "native", &[x, y]).unwrap();
+            ds.enddef().unwrap();
+            let r = c.rank();
+            let mine: Vec<i32> = (0..16).map(|i| (r * 100 + i) as i32).collect();
+            ds.put_vara(v, &[r * 2, 0], &[2, 8], mine.as_slice()).unwrap();
+            // Kill one stripe server once everything is on disk.
+            c.barrier();
+            if r == 0 {
+                plan.inject_kill(ErrorClass::Io);
+            }
+            c.barrier();
+            let _ = ds.file().take_advisories();
+            let mut all = vec![0i32; 64];
+            ds.get_vara(v, &[0, 0], &[8, 8], all.as_mut_slice()).unwrap();
+            for o in 0..4usize {
+                let row = &all[o * 16..(o + 1) * 16];
+                let expect: Vec<i32> = (0..16).map(|i| (o * 100 + i) as i32).collect();
+                assert_eq!(row, &expect[..], "rank {r}: rows of rank {o} after server death");
+            }
+            let advisories = ds.file().take_advisories();
+            for a in &advisories {
+                assert_eq!(a.class, ErrorClass::Degraded, "rank {r}: {a}");
+                assert!(a.to_string().contains("JPIO_ERR_DEGRADED"), "rank {r}: {a}");
+            }
+            ds.close().unwrap();
+            advisories.len()
+        })
+    };
+    assert!(
+        advisory_counts.iter().sum::<usize>() > 0,
+        "some aggregator must report the degraded parity read"
+    );
+    let _ = backend.delete(&path);
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+// ----------------------------------------------------------------------
+// Writer → reader header coherence through sync
+// ----------------------------------------------------------------------
+
+#[test]
+fn reader_dataset_observes_appended_records_after_sync() {
+    let path = tmp("coherence");
+    threads::run(2, |c| {
+        let fw = File::open(c, &path, amode::RDWR | amode::CREATE, Info::null()).unwrap();
+        let ds_w = Dataset::create(fw).unwrap();
+        let t = ds_w.def_dim("time", UNLIMITED).unwrap();
+        let v = ds_w.def_var("v", &Datatype::DOUBLE, "native", &[t]).unwrap();
+        ds_w.enddef().unwrap();
+        // A second, read-only dataset handle on the same container.
+        let fr = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+        let ds_r = Dataset::open(fr).unwrap();
+        assert_eq!(ds_r.num_records(), 0);
+        let r = c.rank();
+        for round in 0..2usize {
+            let rec = [(round * 10 + r) as f64];
+            ds_w.append_records(v, rec.as_slice()).unwrap();
+        }
+        assert_eq!(ds_w.num_records(), 4);
+        // Writer-sync … reader-sync: the MPI coherence recipe, at the
+        // dataset level. The reader then sees all four records.
+        ds_w.sync().unwrap();
+        ds_r.sync().unwrap();
+        assert_eq!(ds_r.num_records(), 4);
+        let vr = ds_r.find_var("v").unwrap();
+        let mut got = vec![0f64; 4];
+        ds_r.get_vara(vr, &[0], &[4], got.as_mut_slice()).unwrap();
+        assert_eq!(got, vec![0.0, 1.0, 10.0, 11.0]);
+        ds_r.close().unwrap();
+        ds_w.close().unwrap();
+    });
+    cleanup(&path);
+}
+
+// ----------------------------------------------------------------------
+// Golden fixture: the v1 container format must never drift
+// ----------------------------------------------------------------------
+
+/// Committed by the PR that introduced the format (see
+/// `tests/fixtures/gen_dataset_v1.py`): a complete v1 container with a
+/// record variable, an `external32` fixed variable and attributes.
+static FIXTURE: &[u8] = include_bytes!("fixtures/dataset_v1.jpds");
+
+#[test]
+fn golden_fixture_header_decodes_and_reencodes_byte_identically() {
+    let total = Header::total_bytes(&FIXTURE[..16]).unwrap();
+    let hdr = Header::decode(&FIXTURE[..total]).unwrap();
+    // Byte-identical re-encode: any codec change that breaks this is a
+    // format break and needs a version bump, not a fixture update.
+    assert_eq!(hdr.encode(), &FIXTURE[..total], "v1 header format drifted");
+    assert_eq!(hdr.num_recs, 2);
+    assert_eq!(hdr.dims.len(), 3);
+    assert_eq!(hdr.dims[0].len, UNLIMITED);
+    let grid = hdr.vars.iter().find(|v| v.name == "grid").unwrap();
+    assert!(grid.external32);
+}
+
+#[test]
+fn golden_fixture_opens_and_reads_known_values() {
+    let path = tmp("golden");
+    std::fs::write(&path, FIXTURE).unwrap();
+    threads::run(1, |c| {
+        let f = File::open(c, &path, amode::RDONLY, Info::null()).unwrap();
+        let ds = Dataset::open(f).unwrap();
+        assert_eq!(ds.num_records(), 2);
+        assert_eq!(ds.get_att("title").unwrap(), b"golden fixture");
+        let grid = ds.find_var("grid").unwrap();
+        assert_eq!(ds.get_var_att(grid, "units").unwrap(), b"K");
+        let mut g = vec![0i32; 6];
+        ds.get_vara(grid, &[0, 0], &[2, 3], g.as_mut_slice()).unwrap();
+        assert_eq!(g, vec![1, 2, 3, 4, 5, 6]);
+        let t = ds.find_var("t").unwrap();
+        let mut series = vec![0f64; 2];
+        ds.get_vara(t, &[0], &[2], series.as_mut_slice()).unwrap();
+        assert_eq!(series, vec![10.5, 11.5]);
+        ds.close().unwrap();
+    });
+    cleanup(&path);
+}

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Generate the frozen v1 dataset-container golden fixture.
+
+Mirrors ``Header::encode`` (rust/src/dataset/header.rs) and the
+``layout`` rules of rust/src/dataset/mod.rs byte for byte:
+
+* dims   time=UNLIMITED, x=2, y=3
+* attrs  title = "golden fixture"
+* vars   grid  INT    external32  [x, y]  units="K"   (fixed)
+         t     DOUBLE native      [time]              (record)
+* data   grid = 1..6 big-endian at data_start (4096)
+         t    = 10.5, 11.5 little-endian records at rec_start (4120)
+* num_recs = 2
+
+The committed ``dataset_v1.jpds`` must keep decoding — and re-encoding
+byte-identically — under every future revision of the codec; a change
+that breaks the drift test in tests/dataset_roundtrip.rs is a format
+break and needs a version bump, not a fixture refresh.
+"""
+
+import struct
+from pathlib import Path
+
+DATA_START = 4096  # align_up(header_len, 4096)
+REC_START = 4120  # DATA_START + align_up(2*3*4, 8)
+REC_SIZE = 8  # one f64 per record row
+
+
+def put_bytes(out: bytearray, b: bytes) -> None:
+    out += struct.pack("<I", len(b)) + b
+
+
+def header() -> bytearray:
+    out = bytearray()
+    out += b"JPDS"
+    out += struct.pack("<I", 1)  # version
+    out += struct.pack("<Q", 0)  # header_bytes, patched below
+    out += struct.pack("<Q", 2)  # num_recs
+    out += struct.pack("<Q", DATA_START)
+    out += struct.pack("<Q", REC_START)
+    out += struct.pack("<Q", REC_SIZE)
+    out += struct.pack("<III", 3, 1, 2)  # ndims, nattrs, nvars
+    for name, length in [(b"time", 0), (b"x", 2), (b"y", 3)]:
+        put_bytes(out, name)
+        out += struct.pack("<Q", length)
+    put_bytes(out, b"title")
+    put_bytes(out, b"golden fixture")
+    # grid: prim Int (2), external32, dims [x, y], units="K", fixed.
+    put_bytes(out, b"grid")
+    out += bytes([2, 1])
+    out += struct.pack("<I", 2) + struct.pack("<II", 1, 2)
+    out += struct.pack("<I", 1)
+    put_bytes(out, b"units")
+    put_bytes(out, b"K")
+    out += struct.pack("<Q", DATA_START)
+    # t: prim Double (5), native, dims [time], record (row offset 0).
+    put_bytes(out, b"t")
+    out += bytes([5, 0])
+    out += struct.pack("<I", 1) + struct.pack("<I", 0)
+    out += struct.pack("<I", 0)
+    out += struct.pack("<Q", 0)
+    struct.pack_into("<Q", out, 8, len(out))
+    return out
+
+
+def main() -> None:
+    hdr = header()
+    assert len(hdr) <= DATA_START, len(hdr)
+    blob = bytearray(REC_START + 2 * REC_SIZE)
+    blob[: len(hdr)] = hdr
+    for i, v in enumerate([1, 2, 3, 4, 5, 6]):
+        struct.pack_into(">i", blob, DATA_START + 4 * i, v)
+    struct.pack_into("<d", blob, REC_START, 10.5)
+    struct.pack_into("<d", blob, REC_START + REC_SIZE, 11.5)
+    out = Path(__file__).with_name("dataset_v1.jpds")
+    out.write_bytes(blob)
+    print(f"wrote {out} ({len(blob)} bytes, header {len(hdr)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
