@@ -47,6 +47,12 @@
 //!    `write_at_all`; asserts dataset bandwidth within 1.5× of raw
 //!    views and that repeated same-shape `put_vara` climbs the
 //!    PlanCache hit counter (the cached per-shape view keys the plan).
+//! 13. **elastic rebuild** — kill → blank-replace → rebuild →
+//!    bandwidth-restored curve on striped parity: read bandwidth before
+//!    the kill, degraded (XOR-reconstructing) under it, and after the
+//!    background-rebuild engine re-materializes the replacement server;
+//!    asserts post-rebuild read bandwidth ≥ 90% of pre-kill and *zero*
+//!    degraded-read reconstructions after the rebuild (BackendCounters).
 //!
 //! `JPIO_SMOKE=1` runs everything at 1/16 size with one repetition — the
 //! CI gate that keeps this file compiled and executed on every PR.
@@ -1056,6 +1062,113 @@ fn dataset_vs_raw_views() {
     common::cleanup(&pc_path);
 }
 
+fn elastic_rebuild_restore() {
+    println!("\n--- ablation 13: kill → rebuild → bandwidth restored (striped parity) ---");
+    use jpio::io::ErrorClass;
+    use jpio::storage::faults::{FaultBackend, FaultPlan};
+    use jpio::storage::layout::Redundancy;
+    use jpio::storage::local::LocalBackend;
+    use jpio::storage::striped::StripedBackend;
+    use jpio::storage::{Backend, OpenOptions, StorageFile};
+    use std::sync::Arc;
+
+    let factor = 4usize;
+    let victim = 1usize;
+    let unit = 64u64 << 10;
+    let total = common::sz(32 << 20);
+    let path = format!("/tmp/jpio-abl13-{}.dat", std::process::id());
+    let plan = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..factor)
+        .map(|i| {
+            if i == victim {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let b = StripedBackend::with_redundancy(children, unit, Redundancy::Parity).unwrap();
+    let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    let chunk = vec![0xC7u8; (8 << 20).min(total)];
+    let mut done = 0usize;
+    while done < total {
+        let n = chunk.len().min(total - done);
+        f.write_at(done as u64, &chunk[..n]).unwrap();
+        done += n;
+    }
+
+    let reps = common::reps().max(3); // the 90% gate below wants a stable median
+    let read_pass = |label: &str| {
+        bench(label, 1, reps, total, || {
+            let mut buf = vec![0u8; (8 << 20).min(total)];
+            let mut done = 0usize;
+            while done < total {
+                let n = buf.len().min(total - done);
+                f.read_at(done as u64, &mut buf[..n]).unwrap();
+                done += n;
+            }
+        })
+    };
+
+    let pre = read_pass("pre-kill");
+    println!("  pre-kill read       {:10.1} MB/s", pre.mbs());
+
+    // Failed-stop: every read of the victim's slots XOR-reconstructs.
+    plan.inject_kill(ErrorClass::Io);
+    let degraded = read_pass("degraded");
+    let _ = f.take_advisories();
+    assert!(
+        f.backend_counters().degraded_reads > 0,
+        "the degraded phase must actually reconstruct"
+    );
+    println!(
+        "  degraded read       {:10.1} MB/s ({:.2}x pre-kill)",
+        degraded.mbs(),
+        degraded.mbs() / pre.mbs()
+    );
+
+    // Blank replacement behind the same slot, then rebuild.
+    plan.revive();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(StripedBackend::object_path(&path, victim, factor))
+        .unwrap()
+        .set_len(0)
+        .unwrap();
+    let t0 = std::time::Instant::now();
+    let rebuilt = f.rebuild_now().unwrap();
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    assert!(rebuilt > 0, "the blanked server must be detected and rebuilt");
+    println!(
+        "  rebuild             {:10.1} MB/s ({} B re-materialized)",
+        rebuilt as f64 / 1e6 / dt,
+        rebuilt
+    );
+
+    // The curve must come back: full bandwidth, zero reconstructions.
+    let degraded_before = f.backend_counters().degraded_reads;
+    let post = read_pass("post-rebuild");
+    assert_eq!(
+        f.backend_counters().degraded_reads,
+        degraded_before,
+        "post-rebuild reads must not reconstruct"
+    );
+    println!(
+        "  post-rebuild read   {:10.1} MB/s ({:.2}x pre-kill)",
+        post.mbs(),
+        post.mbs() / pre.mbs()
+    );
+    assert!(
+        post.mbs() >= 0.9 * pre.mbs(),
+        "post-rebuild bandwidth {:.1} MB/s fell below 90% of pre-kill {:.1} MB/s",
+        post.mbs(),
+        pre.mbs()
+    );
+    drop(f);
+    b.delete(&path).unwrap();
+}
+
 fn main() {
     println!("jpio ablation suite");
     per_item_vs_bulk();
@@ -1072,6 +1185,7 @@ fn main() {
     scaleout_exchange_and_zero_copy();
     strided_write_behind();
     dataset_vs_raw_views();
+    elastic_rebuild_restore();
     pjrt_pack_vs_rust();
     let _ = FigureReport::new("ablations", "case"); // keep the type exercised
     println!("\nablations done");

@@ -243,6 +243,28 @@ impl ProgressEngine {
     }
 }
 
+/// The process-wide background *maintenance* lane: a single shared
+/// [`ProgressEngine`] for storage housekeeping that belongs to no
+/// particular communicator world — redundancy rebuilds and restriping
+/// migrations submitted by the striped backend. Spawned on first use
+/// (thread `jpio-maintenance`) and respawned transparently after a
+/// `fork` (the child inherits the struct but not the thread, exactly
+/// like the page cache's flush lane).
+pub fn maintenance_engine() -> Arc<ProgressEngine> {
+    static LANE: std::sync::OnceLock<Mutex<Option<Arc<ProgressEngine>>>> =
+        std::sync::OnceLock::new();
+    let cell = LANE.get_or_init(|| Mutex::new(None));
+    let mut slot = cell.lock().unwrap();
+    if let Some(e) = slot.as_ref() {
+        if e.usable() {
+            return e.clone();
+        }
+    }
+    let e = Arc::new(ProgressEngine::spawn("jpio-maintenance".into()));
+    *slot = Some(e.clone());
+    e
+}
+
 /// One rank's progress lane: the FIFO background executor plus the
 /// `'static` banded endpoint its jobs exchange messages through.
 ///

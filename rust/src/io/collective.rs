@@ -75,6 +75,20 @@
 //! ([`parse_cb_config_list`]) additionally pins *which rank* serves each
 //! stripe server's domain; absent the hint, domain `i` falls back to the
 //! stripe-cyclic default of rank `i`.
+//!
+//! **Degraded-aware placement** (elastic membership, DESIGN.md §1c):
+//! when the striped backend reports dead servers
+//! ([`StorageFile::server_health`](crate::storage::StorageFile)), units
+//! whose home server is dead are remapped to the next healthy server's
+//! aggregator domain. A dead server's units can only be served by
+//! reconstruction from the survivors, so pinning their traffic to the
+//! dead server's dedicated aggregator (or `cb_config_list` slot) would
+//! concentrate the reconstruction fan-in on one rank while its "own"
+//! server contributes nothing; shifting those units onto the healthy
+//! cycle spreads the reconstruction-heavy rows across ranks that are
+//! already talking to the surviving servers. Every remapped piece counts
+//! one `degraded_domain_avoidances`. Any remapping keeps correctness:
+//! domains partition the byte range whichever aggregator serves them.
 
 use crate::comm::datatype::{Datatype, IoBuf, IoBufMut, Offset};
 use crate::comm::{AlltoallAlgorithm, Comm, ReduceOp, Status};
@@ -85,7 +99,7 @@ use crate::io::hints::keys;
 use crate::io::op::{AccessOp, Coordination, Positioning, Synchronism, TransferCtx};
 use crate::io::plan::IoPlan;
 use crate::io::schedule::IoScheduler;
-use crate::io::stats::Phase;
+use crate::io::stats::{Counter, FileStats, Phase};
 use crate::storage::layout::{Redundancy, StripeMap};
 
 /// Serialize pieces + payload bytes into one exchange message.
@@ -125,21 +139,46 @@ pub(crate) enum FileDomains {
     /// [`cyclic_aggregator`] of `i` (the plain `i % naggr` cycle, or the
     /// unit's data server modulo `naggr` under parity redundancy — see
     /// the module docs). Domains are unions of stripe units, so the
-    /// global byte range needs no explicit bounds here.
-    StripeCyclic { map: StripeMap, naggr: usize },
+    /// global byte range needs no explicit bounds here. `dead[s]` marks
+    /// stripe server `s` as known-dead (from the backend's health
+    /// vector); units homed there are remapped to the next healthy
+    /// server's aggregator. Empty = all healthy.
+    StripeCyclic { map: StripeMap, naggr: usize, dead: Vec<bool> },
 }
 
-/// Aggregator owning the stripe unit at logical offset `off`. Plain and
+/// Aggregator owning the stripe unit at logical offset `off`, plus
+/// whether the assignment was steered away from a dead server. Plain and
 /// replica layouts use the documented unit cycle (`unit i → aggregator
 /// i % naggr`, which with `naggr == factor` is exactly the unit's
 /// server). Parity rotation permutes the unit→server mapping, so there
 /// the unit's *data server* modulo `naggr` keeps each aggregator's
 /// domain on a disjoint server subset — the whole point of alignment.
-fn cyclic_aggregator(map: &StripeMap, naggr: usize, off: u64) -> usize {
-    match map.redundancy {
-        Redundancy::Parity => map.locate(off).0 % naggr,
-        _ => (map.layout.stripe_of(off) % naggr as u64) as usize,
+/// When the unit's home server is marked dead the cycle index advances
+/// to the next healthy server (degraded-aware placement, module docs);
+/// with every server dead the plain cycle stands.
+fn cyclic_aggregator(map: &StripeMap, naggr: usize, dead: &[bool], off: u64) -> (usize, bool) {
+    let factor = map.layout.factor;
+    // `cycle` drives the aggregator assignment; `server` is where the
+    // unit's data physically lives (they coincide under parity).
+    let (cycle, server) = match map.redundancy {
+        Redundancy::Parity => {
+            let s = map.locate(off).0;
+            (s as u64, s)
+        }
+        _ => {
+            let u = map.layout.stripe_of(off);
+            (u, (u % factor as u64) as usize)
+        }
+    };
+    let is_dead = |s: usize| dead.get(s).copied().unwrap_or(false);
+    if is_dead(server) {
+        for step in 1..factor as u64 {
+            if !is_dead(((server as u64 + step) % factor as u64) as usize) {
+                return (((cycle + step) % naggr as u64) as usize, true);
+            }
+        }
     }
+    ((cycle % naggr as u64) as usize, false)
 }
 
 impl FileDomains {
@@ -148,27 +187,50 @@ impl FileDomains {
     fn choose(ctx: &TransferCtx, lo: u64, hi: u64, naggr: usize, stripe_align: bool) -> FileDomains {
         if stripe_align {
             if let Some(map) = ctx.storage.stripe_map() {
-                return FileDomains::StripeCyclic { map, naggr };
+                // Known-dead servers (elastic membership) bias the
+                // assignment; a backend without health tracking — or a
+                // fully healthy one — yields the empty dead set.
+                let dead: Vec<bool> = ctx
+                    .storage
+                    .server_health()
+                    .map(|h| h.iter().map(|&ok| !ok).collect())
+                    .unwrap_or_default();
+                return FileDomains::StripeCyclic { map, naggr, dead };
             }
         }
         FileDomains::Contiguous(split_domains(lo, hi, naggr))
     }
 
     /// This rank's plan pieces destined for file domain `a`:
-    /// `(file_off, len, payload_pos)` clipped to the domain.
-    fn pieces_for(&self, plan: &IoPlan, a: usize) -> Vec<(u64, usize, usize)> {
+    /// `(file_off, len, payload_pos)` clipped to the domain. Pieces whose
+    /// home server is dead count one `degraded_domain_avoidances` each
+    /// into `stats` as they are steered to a healthy domain.
+    fn pieces_for(
+        &self,
+        plan: &IoPlan,
+        a: usize,
+        stats: Option<&FileStats>,
+    ) -> Vec<(u64, usize, usize)> {
         match self {
             FileDomains::Contiguous(domains) => plan.clip(domains[a]),
-            FileDomains::StripeCyclic { map, naggr } => {
+            FileDomains::StripeCyclic { map, naggr, dead } => {
                 let mut out = Vec::new();
+                let mut avoided = 0u64;
                 for (i, &(off, len)) in plan.runs.iter().enumerate() {
                     // The walk splits at unit boundaries; the assignment
                     // comes from the redundancy-aware mapping.
                     map.layout.for_each_piece(off, len, |_, cur, piece_len| {
-                        if cyclic_aggregator(map, *naggr, cur) == a {
+                        let (agg, remapped) = cyclic_aggregator(map, *naggr, dead, cur);
+                        if agg == a {
                             out.push((cur, piece_len, plan.positions[i] + (cur - off) as usize));
+                            avoided += remapped as u64;
                         }
                     });
+                }
+                if avoided > 0 {
+                    if let Some(stats) = stats {
+                        stats.add(Counter::DegradedDomainAvoidances, avoided);
+                    }
                 }
                 out
             }
@@ -304,7 +366,7 @@ pub(crate) fn route_to_aggregators(
     let domains = FileDomains::choose(ctx, gmin as u64, gmax as u64, owners.len(), cb.stripe_align);
     let mut per_rank: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n];
     for (j, &rank) in owners.iter().enumerate() {
-        per_rank[rank].extend(domains.pieces_for(plan, j));
+        per_rank[rank].extend(domains.pieces_for(plan, j, Some(&*ctx.stats)));
     }
     for pieces in &mut per_rank {
         pieces.sort_unstable_by_key(|&(off, _, _)| off);
@@ -765,13 +827,13 @@ mod tests {
     fn stripe_cyclic_domains_partition_at_unit_boundaries() {
         use crate::storage::layout::StripeLayout;
         let map = StripeMap::new(StripeLayout::new(10, 2).unwrap(), Redundancy::None).unwrap();
-        let d = FileDomains::StripeCyclic { map, naggr: 2 };
+        let d = FileDomains::StripeCyclic { map, naggr: 2, dead: Vec::new() };
         // One run [5, 45): stripes 0..4 → aggregator 0 gets stripes 0 and
         // 2, aggregator 1 gets stripes 1 and 3.
         let mut plan = IoPlan::from_runs(vec![(5u64, 40usize)], false);
         plan.positions = vec![100]; // pretend the payload starts at 100
-        let a0 = d.pieces_for(&plan, 0);
-        let a1 = d.pieces_for(&plan, 1);
+        let a0 = d.pieces_for(&plan, 0, None);
+        let a1 = d.pieces_for(&plan, 1, None);
         assert_eq!(a0, vec![(5, 5, 100), (20, 10, 115), (40, 5, 135)]);
         assert_eq!(a1, vec![(10, 10, 105), (30, 10, 125)]);
         // Together the pieces cover the run exactly.
@@ -789,17 +851,58 @@ mod tests {
         // with naggr == factor each aggregator's pieces must still land
         // on exactly one server — its own.
         let map = StripeMap::new(StripeLayout::new(10, 4).unwrap(), Redundancy::Parity).unwrap();
-        let d = FileDomains::StripeCyclic { map, naggr: 4 };
+        let d = FileDomains::StripeCyclic { map, naggr: 4, dead: Vec::new() };
         let plan = IoPlan::from_runs(vec![(5u64, 110usize)], false);
         let mut total = 0usize;
         for a in 0..4 {
-            for &(off, len, _) in &d.pieces_for(&plan, a) {
+            for &(off, len, _) in &d.pieces_for(&plan, a, None) {
                 assert_eq!(map.locate(off).0, a, "piece at {off} not on aggregator {a}'s server");
                 total += len;
             }
         }
         // Together the pieces cover the run exactly once.
         assert_eq!(total, 110);
+    }
+
+    #[test]
+    fn dead_server_units_steer_to_next_healthy_domain() {
+        use crate::io::stats::FileStats;
+        use crate::storage::layout::StripeLayout;
+        // Parity, factor 4, naggr == factor, server 1 dead: every unit
+        // homed on server 1 must leave domain 1 for domain 2 (the next
+        // healthy server's aggregator), the partition must stay exact,
+        // and each steered piece must count one avoidance.
+        let map = StripeMap::new(StripeLayout::new(10, 4).unwrap(), Redundancy::Parity).unwrap();
+        let dead = vec![false, true, false, false];
+        let d = FileDomains::StripeCyclic { map, naggr: 4, dead };
+        let plan = IoPlan::from_runs(vec![(0u64, 120usize)], false);
+        let stats = FileStats::disabled();
+        let mut total = 0usize;
+        let mut displaced = 0u64;
+        for a in 0..4 {
+            for &(off, len, _) in &d.pieces_for(&plan, a, Some(&stats)) {
+                let server = map.locate(off).0;
+                assert_ne!(a, 1, "dead server 1's domain must receive nothing");
+                if server == 1 {
+                    assert_eq!(a, 2, "server 1's units must land on server 2's domain");
+                    displaced += 1;
+                }
+                total += len;
+            }
+        }
+        assert_eq!(total, 120, "steering must not change the partition's coverage");
+        assert!(displaced > 0, "the 120-byte run must include server-1 units");
+        assert_eq!(
+            stats.value(Counter::DegradedDomainAvoidances),
+            displaced,
+            "one avoidance per steered piece"
+        );
+        // All-dead degenerates to the plain cycle (nothing to steer to).
+        let all_dead = FileDomains::StripeCyclic { map, naggr: 4, dead: vec![true; 4] };
+        let healthy = FileDomains::StripeCyclic { map, naggr: 4, dead: Vec::new() };
+        for a in 0..4 {
+            assert_eq!(all_dead.pieces_for(&plan, a, None), healthy.pieces_for(&plan, a, None));
+        }
     }
 
     #[test]

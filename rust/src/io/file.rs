@@ -255,6 +255,17 @@ impl<'c> File<'c> {
         // `AccessOp::validate`).
         let indiv_init =
             if mode & amode::APPEND != 0 { storage.size().unwrap_or(0) as i64 } else { 0 };
+        // Elastic membership (DESIGN.md §1c): `jpio_rebuild = start`
+        // kicks off a background rebuild of a replaced/blank stripe
+        // server on the maintenance lane. One driver suffices — the
+        // rebuild cursor lives in shared on-disk state — so only rank 0
+        // triggers. Backends without membership tracking ignore the
+        // hint, and per MPI hint semantics a failed kick-off does not
+        // fail the open (the driver reports stalls as advisories).
+        if comm.rank() == 0 && info.get(keys::REBUILD) == Some("start") {
+            let throttle = info.get_usize(keys::REBUILD_THROTTLE).map(|v| v as u64);
+            let _ = storage.start_rebuild(throttle);
+        }
         let stats = FileStats::from_info(&info, comm.rank());
         let cache = crate::io::cache::PageCache::from_info(
             &info,

@@ -121,6 +121,20 @@ pub mod keys {
     /// Sequential re-reads within the prefetched window become hits.
     /// Requires `jpio_cache = enable`.
     pub const PREFETCH: &str = "jpio_prefetch";
+    /// Elastic-membership rebuild for the `striped` backend: `start`
+    /// (detect a blank/replaced stripe server at open and re-materialize
+    /// its objects from the surviving redundancy in the background, on
+    /// the process-wide maintenance lane). The rebuild persists a
+    /// `<name>.jpio-rebuild` cursor sidecar and resumes across opens;
+    /// any other value is ignored (MPI hint semantics). See DESIGN.md
+    /// §1c.
+    pub const REBUILD: &str = "jpio_rebuild";
+    /// Rebuild/restripe throttle for the `striped` backend: bytes
+    /// re-materialized or migrated per locked batch (default 64 stripe
+    /// units). Smaller batches yield the stripe-consistency lock to
+    /// foreground writes more often; larger batches finish maintenance
+    /// sooner.
+    pub const REBUILD_THROTTLE: &str = "jpio_rebuild_throttle";
     /// Write-behind for the page cache: `enable` (default; small writes
     /// accumulate in dirty pages and coalesce into stripe-aligned
     /// flushes, drained on the progress lane past the high-water mark) |

@@ -111,12 +111,17 @@ pub(crate) enum Counter {
     VarPutOps,
     /// Dataset `get_vara`/`iget_vara` variable reads.
     VarGetOps,
+    /// Collective file-domain assignments steered away from a known-dead
+    /// stripe server (elastic membership, DESIGN.md §1c): one count per
+    /// plan piece whose home server was dead and whose aggregator was
+    /// remapped to the next healthy server's domain.
+    DegradedDomainAvoidances,
 }
 
 impl Counter {
     /// Every counter, in wire order (the close-time reduction serializes
     /// values in this order, so it must be identical on all ranks).
-    pub(crate) const ALL: [Counter; 26] = [
+    pub(crate) const ALL: [Counter; 27] = [
         Counter::ReadOps,
         Counter::WriteOps,
         Counter::IndependentOps,
@@ -143,6 +148,7 @@ impl Counter {
         Counter::DatasetHeaderBytes,
         Counter::VarPutOps,
         Counter::VarGetOps,
+        Counter::DegradedDomainAvoidances,
     ];
 
     /// The report/trace name of the counter.
@@ -174,6 +180,7 @@ impl Counter {
             Counter::DatasetHeaderBytes => "dataset_header_bytes",
             Counter::VarPutOps => "var_put_ops",
             Counter::VarGetOps => "var_get_ops",
+            Counter::DegradedDomainAvoidances => "degraded_domain_avoidances",
         }
     }
 }
@@ -565,8 +572,9 @@ impl StatsReport {
     /// A counter by report name (zero if never recorded). Besides the
     /// per-op counters this includes `plan_cache_hits`/`_misses`,
     /// `progress_jobs_queued`/`_completed`, and the striped backend's
-    /// `degraded_reconstructed_reads`, `parity_rmw_cycles`, and
-    /// `fanout_bytes`.
+    /// `degraded_reconstructed_reads`, `parity_rmw_cycles`,
+    /// `fanout_bytes`, `rebuild_bytes_reconstructed`, and
+    /// `restripe_rows_migrated`.
     pub fn counter(&self, name: &str) -> Reduced {
         self.counters.get(name).copied().unwrap_or_default()
     }
@@ -672,7 +680,7 @@ fn format_nanos(n: u64) -> String {
 /// Non-op counters appended to the wire record after [`Counter::ALL`],
 /// sourced from the plan cache, the progress lane, and the storage
 /// backend at snapshot time. Order is part of the wire format.
-const EXTRA_COUNTERS: [&str; 7] = [
+const EXTRA_COUNTERS: [&str; 9] = [
     "plan_cache_hits",
     "plan_cache_misses",
     "progress_jobs_queued",
@@ -680,6 +688,8 @@ const EXTRA_COUNTERS: [&str; 7] = [
     "degraded_reconstructed_reads",
     "parity_rmw_cycles",
     "fanout_bytes",
+    "rebuild_bytes_reconstructed",
+    "restripe_rows_migrated",
 ];
 
 // ----------------------------------------------------------------------
@@ -705,6 +715,8 @@ impl File<'_> {
             bc.degraded_reads,
             bc.parity_rmw_cycles,
             bc.fanout_bytes,
+            bc.rebuild_bytes_reconstructed,
+            bc.restripe_rows_migrated,
         ]);
         for p in Phase::ALL {
             out.push(self.stats.phase_nanos[p as usize].load(Ordering::Relaxed));

@@ -132,6 +132,16 @@ impl FaultPlan {
         self.inject(ALL_OPS.iter().map(|&op| FaultRule::always(op, class)));
     }
 
+    /// Clear every armed rule: the failed server has been *replaced* by
+    /// a healthy (blank) one. Invocation counters keep counting — the
+    /// replacement is a new data service behind the same slot, not a
+    /// rollback of history. Pair with truncating/removing the dead
+    /// server's stripe objects to model a blank disk, then run a
+    /// rebuild to re-materialize them.
+    pub fn revive(&self) {
+        self.rules.lock().unwrap().clear();
+    }
+
     fn check(&self, op: FaultOp) -> Result<()> {
         let n = self.counters[op.index()].fetch_add(1, Ordering::SeqCst);
         for r in self.rules.lock().unwrap().iter() {
@@ -274,6 +284,20 @@ impl StorageFile for FaultFile {
 
     fn take_advisories(&self) -> Vec<IoError> {
         self.inner.take_advisories()
+    }
+
+    fn backend_counters(&self) -> super::BackendCounters {
+        // Forwarded so fault-injection tests can assert on the striped
+        // backend's degraded/rebuild counters through the wrapper.
+        self.inner.backend_counters()
+    }
+
+    fn server_health(&self) -> Option<Vec<bool>> {
+        self.inner.server_health()
+    }
+
+    fn start_rebuild(&self, throttle: Option<u64>) -> Result<bool> {
+        self.inner.start_rebuild(throttle)
     }
 }
 

@@ -75,6 +75,29 @@ impl Redundancy {
         }
     }
 
+    /// Wire encoding for the `.jpio-layout` sidecar: `(tag, k)` where
+    /// the tag is 0 = none, 1 = replica, 2 = parity and `k` is the
+    /// replica count (0 otherwise). Stable across builds — part of the
+    /// on-disk sidecar format.
+    pub fn tag(&self) -> (u64, u64) {
+        match *self {
+            Redundancy::None => (0, 0),
+            Redundancy::Replica(k) => (1, k as u64),
+            Redundancy::Parity => (2, 0),
+        }
+    }
+
+    /// Inverse of [`Redundancy::tag`]; `None` on an unknown tag or a
+    /// nonsensical replica count.
+    pub fn from_tag(tag: u64, k: u64) -> Option<Redundancy> {
+        match tag {
+            0 => Some(Redundancy::None),
+            1 if k >= 2 => Some(Redundancy::Replica(k as usize)),
+            2 => Some(Redundancy::Parity),
+            _ => None,
+        }
+    }
+
     /// Reject configurations the layout cannot host: `replica:<k>`
     /// needs `2 ≤ k ≤ factor` distinct servers per unit, parity needs
     /// at least two servers.
@@ -382,6 +405,56 @@ impl StripeMap {
             _ => self.layout.logical_end(server, child_len),
         }
     }
+    /// Physical slot rows materialized for a hole-free logical file of
+    /// `logical_size` bytes: the max over servers of their object
+    /// length in whole-or-partial units. This is the row count the
+    /// rebuild engine must re-materialize for a blank server.
+    pub fn rows_for_size(&self, logical_size: u64) -> u64 {
+        (0..self.layout.factor)
+            .map(|s| self.child_len(s, logical_size).div_ceil(self.layout.unit))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Byte-cursor router between two layout generations while a live
+/// restriping migration is in flight. The migration rewrites logical
+/// bytes in ascending order behind a high-water `cursor` persisted in
+/// the `.jpio-layout` sidecar: bytes below the cursor have already
+/// been rewritten into the *new* map's objects, bytes at or above it
+/// still live in the *old* map's objects, so every data path splits
+/// its range at the cursor and routes each part to the matching
+/// generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayoutRouter {
+    /// The generation being migrated away from (owns `[cursor, ∞)`).
+    pub old: StripeMap,
+    /// The generation being migrated into (owns `[0, cursor)`).
+    pub new: StripeMap,
+}
+
+impl LayoutRouter {
+    /// Split the logical range `[off, off+len)` at the migration
+    /// cursor: returns `(new_part, old_part)` as `(off, len)` pairs,
+    /// either of which may be `None` when the range sits entirely on
+    /// one side.
+    pub fn split_at(
+        cursor: u64,
+        off: u64,
+        len: usize,
+    ) -> (Option<(u64, usize)>, Option<(u64, usize)>) {
+        if len == 0 {
+            return (None, None);
+        }
+        let end = off + len as u64;
+        if end <= cursor {
+            (Some((off, len)), None)
+        } else if off >= cursor {
+            (None, Some((off, len)))
+        } else {
+            (Some((off, (cursor - off) as usize)), Some((cursor, (end - cursor) as usize)))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -553,6 +626,42 @@ mod tests {
                 assert_eq!(sum, logical + rows * unit, "unit={unit} factor={factor} L={logical}");
             }
         }
+    }
+
+    #[test]
+    fn redundancy_tag_round_trips() {
+        for r in [Redundancy::None, Redundancy::Replica(2), Redundancy::Replica(5), Redundancy::Parity] {
+            let (tag, k) = r.tag();
+            assert_eq!(Redundancy::from_tag(tag, k), Some(r));
+        }
+        assert_eq!(Redundancy::from_tag(9, 0), None);
+        assert_eq!(Redundancy::from_tag(1, 1), None, "replica:1 is not a valid mode");
+    }
+
+    #[test]
+    fn rows_for_size_counts_materialized_slots() {
+        let plain = StripeMap::new(StripeLayout::new(10, 4).unwrap(), Redundancy::None).unwrap();
+        assert_eq!(plain.rows_for_size(0), 0);
+        assert_eq!(plain.rows_for_size(1), 1);
+        assert_eq!(plain.rows_for_size(40), 1);
+        assert_eq!(plain.rows_for_size(41), 2);
+        // Parity: 3 data units per row of width 30; any spanned row
+        // materializes its parity slot too.
+        let par = StripeMap::new(StripeLayout::new(10, 4).unwrap(), Redundancy::Parity).unwrap();
+        assert_eq!(par.rows_for_size(0), 0);
+        assert_eq!(par.rows_for_size(1), 1);
+        assert_eq!(par.rows_for_size(30), 1);
+        assert_eq!(par.rows_for_size(31), 2);
+    }
+
+    #[test]
+    fn router_splits_at_cursor() {
+        assert_eq!(LayoutRouter::split_at(50, 10, 20), (Some((10, 20)), None));
+        assert_eq!(LayoutRouter::split_at(50, 50, 20), (None, Some((50, 20))));
+        assert_eq!(LayoutRouter::split_at(50, 60, 20), (None, Some((60, 20))));
+        assert_eq!(LayoutRouter::split_at(50, 40, 20), (Some((40, 10)), Some((50, 10))));
+        assert_eq!(LayoutRouter::split_at(50, 40, 0), (None, None));
+        assert_eq!(LayoutRouter::split_at(0, 0, 5), (None, Some((0, 5))));
     }
 
     #[test]

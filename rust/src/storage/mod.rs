@@ -223,6 +223,25 @@ pub trait StorageFile: Send + Sync {
     fn backend_counters(&self) -> BackendCounters {
         BackendCounters::default()
     }
+
+    /// Per-server health as observed by this handle: `health[s]` is
+    /// `false` once server `s` has failed an I/O (degraded read
+    /// fallover, settled write failure). The collective layer samples
+    /// this to bias stripe-cyclic file domains away from dead servers;
+    /// `None` on single-device backends.
+    fn server_health(&self) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Kick off a background redundancy rebuild of any blank/replaced
+    /// stripe server (the `jpio_rebuild = start` hint path). `throttle`
+    /// is the per-lock-batch byte budget from `jpio_rebuild_throttle`.
+    /// Returns `true` when a rebuild task was started or resumed;
+    /// single-device backends have nothing to rebuild.
+    fn start_rebuild(&self, throttle: Option<u64>) -> Result<bool> {
+        let _ = throttle;
+        Ok(false)
+    }
 }
 
 /// Snapshot of per-file backend event counters, sampled by the stats
@@ -241,6 +260,12 @@ pub struct BackendCounters {
     /// redundancy traffic — the per-server fan-out amplification of
     /// the bytes the caller asked to move.
     pub fanout_bytes: u64,
+    /// Bytes re-materialized onto a replaced/blank server by the
+    /// background rebuild engine (replica copy or parity XOR).
+    pub rebuild_bytes_reconstructed: u64,
+    /// Stripe rows rewritten into a new layout generation by the live
+    /// restriping migration.
+    pub restripe_rows_migrated: u64,
 }
 
 /// A mapped view of a file region. The local implementation is a real

@@ -60,16 +60,48 @@
 //! The collective layer reads [`StorageFile::stripe_layout`] off these
 //! files to align two-phase file domains to stripe boundaries — see
 //! `io::collective`.
+//!
+//! ## Elastic membership (DESIGN.md §1c)
+//!
+//! Server membership is no longer frozen at first open:
+//!
+//! * **Background rebuild** — a replaced/blank server (its objects
+//!   shorter than the layout prescribes) is re-materialized from the
+//!   survivors: replica rows are copied from a surviving copy, parity
+//!   rows are the XOR of the surviving slots. The rebuild runs in
+//!   row batches under the stripe-consistency lock (writes interleave
+//!   between batches), persists its position in a `<name>.jpio-rebuild`
+//!   cursor sidecar so it resumes across opens, and runs on the shared
+//!   maintenance lane ([`crate::comm::progress::maintenance_engine`])
+//!   when started via the `jpio_rebuild = start` hint.
+//! * **Live restriping** — opening a file whose recorded layout
+//!   (`<name>.jpio-layout` sidecar) differs from the requested
+//!   `striping_factor`/`jpio_stripe_redundancy` starts a background
+//!   migration into a new layout *generation* (objects
+//!   `<name>.jpio-g<g>-s<i>of<f>`; generation 0 keeps the legacy
+//!   names). A high-water byte cursor in the layout sidecar routes
+//!   every read/write: bytes below the cursor live in the new
+//!   generation, bytes at or above it in the old
+//!   ([`LayoutRouter`]); each migration step copies the next chunk
+//!   under the stripe-consistency lock and advances the cursor.
+//!   Metadata ops (`set_size`/`preallocate`/`map`/`lock_exclusive`)
+//!   complete the migration synchronously first.
+//! * **Health tracking** — a server that failed an operation is marked
+//!   dead in this handle's health vector
+//!   ([`StorageFile::server_health`]); the collective layer biases
+//!   stripe-cyclic file domains away from dead servers, and a
+//!   completed rebuild marks its target healthy again.
 
 use std::os::unix::fs::FileExt;
 use std::os::unix::io::AsRawFd;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::comm::progress;
 use crate::io::engine;
 use crate::io::errors::{err_arg, err_io, ErrorClass, IoError, Result};
 
-use super::layout::{Redundancy, Segment, StripeLayout, StripeMap};
+use super::layout::{LayoutRouter, Redundancy, Segment, StripeLayout, StripeMap};
 use super::local::{check_bounds, lock_cell_for, LocalBackend};
 use super::nfs::{NfsBackend, NfsConfig};
 use super::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
@@ -143,6 +175,47 @@ impl StripedBackend {
     /// factor`.
     pub fn replica_object_path(path: &str, server: usize, factor: usize, copy: usize) -> String {
         format!("{path}.jpio-s{server}of{factor}.r{copy}")
+    }
+
+    /// [`StripedBackend::object_path`] for layout generation `gen`:
+    /// restriping rewrites the file into a fresh object namespace per
+    /// generation; generation 0 keeps the legacy names.
+    pub fn object_path_gen(path: &str, server: usize, factor: usize, gen: u64) -> String {
+        if gen == 0 {
+            Self::object_path(path, server, factor)
+        } else {
+            format!("{path}.jpio-g{gen}-s{server}of{factor}")
+        }
+    }
+
+    /// [`StripedBackend::replica_object_path`] for layout generation
+    /// `gen`.
+    pub fn replica_object_path_gen(
+        path: &str,
+        server: usize,
+        factor: usize,
+        copy: usize,
+        gen: u64,
+    ) -> String {
+        if gen == 0 {
+            Self::replica_object_path(path, server, factor, copy)
+        } else {
+            format!("{path}.jpio-g{gen}-s{server}of{factor}.r{copy}")
+        }
+    }
+
+    /// Path of the layout sidecar recording the file's current layout
+    /// generation and, during a live restriping, the old generation
+    /// plus the migration's high-water byte cursor.
+    pub fn layout_meta_path(path: &str) -> String {
+        format!("{path}.jpio-layout")
+    }
+
+    /// Path of the rebuild cursor sidecar: while a redundancy rebuild
+    /// is in flight it records the target server and the next stripe
+    /// row to re-materialize, so the rebuild resumes across opens.
+    pub fn rebuild_cursor_path(path: &str) -> String {
+        format!("{path}.jpio-rebuild")
     }
 
     /// Path of the logical-size metadata sidecar for logical file `path`
@@ -263,76 +336,420 @@ impl SizeMeta {
     }
 }
 
-impl Backend for StripedBackend {
-    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
-        if path.is_empty() {
-            return Err(crate::io::errors::err_bad_file("empty file name"));
+/// Magic tag of the layout sidecar ("JPIOLYT1").
+const LAYOUT_MAGIC: u64 = 0x4A50_494F_4C59_5431;
+/// Magic tag of the rebuild cursor sidecar ("JPIORBLD").
+const REBUILD_MAGIC: u64 = 0x4A50_494F_5242_4C44;
+
+/// The layout sidecar record: the file's current layout generation and,
+/// while a restriping migration is in flight, the generation being
+/// migrated away from plus the high-water byte cursor — logical bytes
+/// below the cursor live in the new generation, bytes at or above it in
+/// the old one (see [`LayoutRouter`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct LayoutRecord {
+    gen: u64,
+    map: StripeMap,
+    /// `(old_gen, old_map, cursor)` while a migration is in flight.
+    old: Option<(u64, StripeMap, u64)>,
+}
+
+/// The layout sidecar (`<name>.jpio-layout`): fourteen LE `u64` fields
+/// updated under an OS file lock, shared across handles and processes.
+/// It makes the striping parameters a property of the *file* rather
+/// than of whichever backend happens to open it, which is what lets an
+/// open with different `striping_factor`/redundancy hints start a
+/// migration instead of silently reading garbage.
+struct LayoutMeta {
+    path: String,
+}
+
+impl LayoutMeta {
+    fn new(path: &str) -> LayoutMeta {
+        LayoutMeta { path: StripedBackend::layout_meta_path(path) }
+    }
+
+    fn with_locked_file<T>(&self, f: impl FnOnce(&std::fs::File) -> Result<T>) -> Result<T> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&self.path)
+            .map_err(|e| IoError::from_os(e, "striped layout sidecar"))?;
+        let fd = file.as_raw_fd();
+        if unsafe { libc::flock(fd, libc::LOCK_EX) } != 0 {
+            return Err(err_io("flock striped layout sidecar"));
         }
-        let factor = self.map.layout.factor;
+        let out = f(&file);
+        unsafe { libc::flock(fd, libc::LOCK_UN) };
+        out
+    }
+
+    fn encode(rec: &LayoutRecord) -> [u8; 112] {
+        let (rtag, rk) = rec.map.redundancy.tag();
+        let (state, old_gen, old_factor, old_unit, old_rtag, old_rk, cursor) = match rec.old {
+            None => (0, 0, 0, 0, 0, 0, 0),
+            Some((og, om, cur)) => {
+                let (ot, ok_) = om.redundancy.tag();
+                (1, og, om.layout.factor as u64, om.layout.unit, ot, ok_, cur)
+            }
+        };
+        let fields: [u64; 14] = [
+            LAYOUT_MAGIC,
+            1, // version
+            state,
+            rec.gen,
+            rec.map.layout.factor as u64,
+            rec.map.layout.unit,
+            rtag,
+            rk,
+            old_gen,
+            old_factor,
+            old_unit,
+            old_rtag,
+            old_rk,
+            cursor,
+        ];
+        let mut buf = [0u8; 112];
+        for (i, v) in fields.iter().enumerate() {
+            buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    fn decode_map(factor: u64, unit: u64, rtag: u64, rk: u64) -> Result<StripeMap> {
+        let layout = StripeLayout::new(unit, factor as usize)?;
+        let red = Redundancy::from_tag(rtag, rk)
+            .ok_or_else(|| err_io("striped layout sidecar: unknown redundancy tag"))?;
+        StripeMap::new(layout, red)
+    }
+
+    fn read_value(file: &std::fs::File) -> Result<Option<LayoutRecord>> {
+        let mut buf = [0u8; 112];
+        match file.read_exact_at(&mut buf, 0) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(IoError::from_os(e, "striped layout sidecar read")),
+        }
+        let f = |i: usize| u64::from_le_bytes(buf[i * 8..(i + 1) * 8].try_into().unwrap());
+        if f(0) != LAYOUT_MAGIC || f(1) != 1 {
+            return Err(err_io("striped layout sidecar corrupt"));
+        }
+        let map = Self::decode_map(f(4), f(5), f(6), f(7))?;
+        let old = match f(2) {
+            0 => None,
+            _ => Some((f(8), Self::decode_map(f(9), f(10), f(11), f(12))?, f(13))),
+        };
+        Ok(Some(LayoutRecord { gen: f(3), map, old }))
+    }
+
+    /// The current record, or `None` when the sidecar does not exist or
+    /// is empty (a legacy pre-sidecar file). Lock-free: writers only
+    /// mutate it under the stripe-consistency lock or at open (under
+    /// the sidecar flock), and 112-byte records are rewritten in place.
+    fn read_fast(&self) -> Result<Option<LayoutRecord>> {
+        let file = match std::fs::File::open(&self.path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(IoError::from_os(e, "striped layout sidecar")),
+        };
+        Self::read_value(&file)
+    }
+
+    /// Read-decide-write under the sidecar flock — the open-time layout
+    /// negotiation, serialized against concurrent openers.
+    fn update<T>(
+        &self,
+        f: impl FnOnce(Option<LayoutRecord>) -> Result<(Option<LayoutRecord>, T)>,
+    ) -> Result<T> {
+        self.with_locked_file(|file| {
+            let (write_back, out) = f(Self::read_value(file)?)?;
+            if let Some(rec) = write_back {
+                file.write_all_at(&Self::encode(&rec), 0)
+                    .map_err(|e| IoError::from_os(e, "striped layout sidecar write"))?;
+            }
+            Ok(out)
+        })
+    }
+
+    /// Advance the migration cursor. Caller holds the stripe
+    /// consistency lock; the sidecar flock still guards against
+    /// open-time negotiation racing the in-place rewrite.
+    fn set_cursor(&self, cursor: u64) -> Result<()> {
+        self.update(|rec| match rec {
+            Some(mut r) => {
+                if let Some((_, _, c)) = r.old.as_mut() {
+                    *c = cursor;
+                }
+                Ok((Some(r), ()))
+            }
+            None => Err(err_io("striped layout sidecar vanished mid-migration")),
+        })
+    }
+
+    /// Record migration completion: a stable layout at `gen`.
+    fn write_stable(&self, gen: u64, map: StripeMap) -> Result<()> {
+        self.update(|_| Ok((Some(LayoutRecord { gen, map, old: None }), ())))
+    }
+}
+
+/// The rebuild cursor sidecar (`<name>.jpio-rebuild`): three LE `u64`
+/// fields (magic, target server, next stripe row). Present exactly
+/// while a rebuild is pending — its existence is what tells replica
+/// writers to serialize against the rebuild copy loop, and its removal
+/// is the filesystem-visible completion signal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct RebuildCursor {
+    target: u64,
+    next_row: u64,
+}
+
+fn read_rebuild_cursor(path: &str) -> Result<Option<RebuildCursor>> {
+    let buf = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(IoError::from_os(e, "striped rebuild cursor")),
+    };
+    if buf.len() < 24 {
+        return Ok(None);
+    }
+    let f = |i: usize| u64::from_le_bytes(buf[i * 8..(i + 1) * 8].try_into().unwrap());
+    if f(0) != REBUILD_MAGIC {
+        return Err(err_io("striped rebuild cursor corrupt"));
+    }
+    Ok(Some(RebuildCursor { target: f(1), next_row: f(2) }))
+}
+
+fn write_rebuild_cursor(path: &str, c: &RebuildCursor) -> Result<()> {
+    let mut buf = [0u8; 24];
+    for (i, v) in [REBUILD_MAGIC, c.target, c.next_row].iter().enumerate() {
+        buf[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, buf).map_err(|e| IoError::from_os(e, "striped rebuild cursor write"))
+}
+
+impl StripedBackend {
+    /// Open `path` as a concretely-typed striped file. Pending
+    /// maintenance — a persisted rebuild cursor, an in-flight restriping
+    /// migration, or a migration this open's changed parameters start —
+    /// continues in the background on the process-wide maintenance lane.
+    /// [`Backend::open`] routes here.
+    pub fn open_striped(&self, path: &str, opts: OpenOptions) -> Result<Arc<StripedFile>> {
+        self.open_impl(path, opts, true)
+    }
+
+    /// [`StripedBackend::open_striped`] without spawning background
+    /// maintenance: tests and tools that want deterministic stepping
+    /// drive the work explicitly via [`StripedFile::migrate_step`] /
+    /// [`StripedFile::rebuild_now`].
+    pub fn open_striped_manual(&self, path: &str, opts: OpenOptions) -> Result<Arc<StripedFile>> {
+        self.open_impl(path, opts, false)
+    }
+
+    /// The open-time layout negotiation: reconcile this backend's
+    /// constructed parameters with the file's recorded layout. Returns
+    /// the record to run under and whether it must be persisted.
+    fn decide_layout(
+        &self,
+        rec: Option<LayoutRecord>,
+        writable: bool,
+    ) -> Result<(LayoutRecord, bool)> {
+        let want = self.map;
+        match rec {
+            // Legacy / fresh file: generation 0 under this backend's
+            // parameters (the pre-sidecar naming scheme).
+            None => Ok((LayoutRecord { gen: 0, map: want, old: None }, writable)),
+            // An in-flight migration is honored regardless of this
+            // opener's parameters — generations never chain; the next
+            // parameter change waits until the current one completes.
+            Some(r) if r.old.is_some() => Ok((r, false)),
+            Some(r) if r.map == want => Ok((r, false)),
+            // Recorded layout differs: a read-only open honors the disk
+            // layout; a writable open starts a migration into the next
+            // generation behind a zero cursor.
+            Some(r) if !writable => Ok((r, false)),
+            Some(r) => Ok((
+                LayoutRecord { gen: r.gen + 1, map: want, old: Some((r.gen, r.map, 0)) },
+                true,
+            )),
+        }
+    }
+
+    /// Open the per-server objects of one layout generation.
+    fn build_inner(
+        &self,
+        path: &str,
+        map: StripeMap,
+        gen: u64,
+        opts: OpenOptions,
+    ) -> Result<StripedInner> {
+        let factor = map.layout.factor;
+        if factor > self.children.len() {
+            return Err(err_arg(format!(
+                "recorded striping factor {factor} exceeds the {} configured servers",
+                self.children.len()
+            )));
+        }
         let mut files = Vec::with_capacity(factor);
-        for (i, child) in self.children.iter().enumerate() {
-            files.push(child.open(&Self::object_path(path, i, factor), opts)?);
+        for (i, child) in self.children.iter().take(factor).enumerate() {
+            files.push(child.open(&Self::object_path_gen(path, i, factor, gen), opts)?);
         }
         // Replica objects: copy c of server s's object lives on child
         // (s + c) % factor.
         let mut replicas = Vec::new();
-        if let Redundancy::Replica(k) = self.map.redundancy {
+        if let Redundancy::Replica(k) = map.redundancy {
             for c in 1..k {
                 let mut copies = Vec::with_capacity(factor);
                 for s in 0..factor {
                     let holder = &self.children[replica_holder(s, c, factor)];
-                    copies.push(holder.open(&Self::replica_object_path(path, s, factor, c), opts)?);
+                    copies
+                        .push(holder.open(&Self::replica_object_path_gen(path, s, factor, c, gen), opts)?);
                 }
                 replicas.push(copies);
             }
         }
-        let inner = StripedInner {
+        Ok(StripedInner {
             children: files,
             replicas,
-            map: self.map,
+            map,
+            gen,
             meta: SizeMeta::new(path),
             plock_path: StripedBackend::parity_lock_path(path),
+            rebuild_path: StripedBackend::rebuild_cursor_path(path),
             advisories: Mutex::new(Vec::new()),
+            health: (0..factor).map(|_| AtomicBool::new(true)).collect(),
             degraded_reads: AtomicU64::new(0),
             parity_rmw_cycles: AtomicU64::new(0),
             fanout_bytes: AtomicU64::new(0),
+            rebuild_bytes: AtomicU64::new(0),
+            restripe_rows: AtomicU64::new(0),
+        })
+    }
+
+    fn open_impl(&self, path: &str, opts: OpenOptions, auto: bool) -> Result<Arc<StripedFile>> {
+        if path.is_empty() {
+            return Err(crate::io::errors::err_bad_file("empty file name"));
+        }
+        let layout_meta = LayoutMeta::new(path);
+        let writable = opts.write || opts.create || opts.truncate;
+        let rec = if writable {
+            layout_meta.update(|rec| {
+                let (r, persist) = self.decide_layout(rec, true)?;
+                Ok((persist.then_some(r), r))
+            })?
+        } else {
+            self.decide_layout(layout_meta.read_fast()?, false)?.0
+        };
+        let cur = Arc::new(self.build_inner(path, rec.map, rec.gen, opts)?);
+        let mig = match rec.old {
+            Some((old_gen, old_map, _)) => {
+                // The old generation's objects hold live data: never
+                // truncate them at open, and tolerate sparse rows whose
+                // objects were never materialized.
+                let oopts = OpenOptions {
+                    read: true,
+                    write: writable,
+                    create: writable,
+                    excl: false,
+                    truncate: false,
+                };
+                Some(MigState {
+                    old: Arc::new(self.build_inner(path, old_map, old_gen, oopts)?),
+                    done: AtomicBool::new(false),
+                })
+            }
+            None => None,
         };
         if opts.truncate {
             // Children were truncated at open; the sidecar must follow.
-            inner.meta.publish_exact(0)?;
+            cur.meta.publish_exact(0)?;
         }
         // Ensure the size sidecar exists (rebuilding from a one-time
         // child poll for pre-existing objects) so the data path never
-        // GETATTRs every server again.
-        inner.logical_size()?;
-        Ok(Arc::new(StripedFile { inner: Arc::new(inner) }))
+        // GETATTRs every server again. During a migration the old
+        // generation holds the data, so the poll goes there.
+        match &mig {
+            Some(m) => {
+                m.old.logical_size()?;
+            }
+            None => {
+                cur.logical_size()?;
+            }
+        }
+        let shared = Arc::new(StripedShared {
+            cur,
+            mig,
+            layout_meta,
+            throttle: AtomicU64::new(0),
+        });
+        if auto && writable {
+            if shared.mig.is_some() {
+                shared.spawn_migration_driver();
+            }
+            if shared.cur.rebuild_active() {
+                shared.spawn_rebuild_driver();
+            }
+        }
+        Ok(Arc::new(StripedFile { shared }))
+    }
+}
+
+impl Backend for StripedBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> Result<Arc<dyn StorageFile>> {
+        let f = self.open_striped(path, opts)?;
+        Ok(f)
     }
 
     fn delete(&self, path: &str) -> Result<()> {
+        let rec = LayoutMeta::new(path).read_fast().ok().flatten();
         let _ = std::fs::remove_file(Self::size_meta_path(path));
         let _ = std::fs::remove_file(Self::parity_lock_path(path));
-        let factor = self.map.layout.factor;
-        let mut first_err = None;
-        for (i, child) in self.children.iter().enumerate() {
-            match child.delete(&Self::object_path(path, i, factor)) {
-                Ok(()) => {}
-                // A logical file whose later stripes were never touched
-                // has no objects there; only stripe 0 decides existence.
-                Err(e) if i > 0 && e.class == ErrorClass::NoSuchFile => {}
-                Err(e) => {
-                    first_err.get_or_insert(e);
+        let _ = std::fs::remove_file(Self::layout_meta_path(path));
+        let _ = std::fs::remove_file(Self::rebuild_cursor_path(path));
+        // Generations to sweep: the recorded current one first (its
+        // stripe-0 object decides existence), then the migration
+        // source and the legacy generation-0 namespace.
+        let mut gens: Vec<(u64, StripeMap)> = Vec::new();
+        match rec {
+            Some(r) => {
+                gens.push((r.gen, r.map));
+                if let Some((og, om, _)) = r.old {
+                    gens.push((og, om));
+                }
+                if !gens.iter().any(|&(g, _)| g == 0) {
+                    gens.push((0, self.map));
                 }
             }
+            None => gens.push((0, self.map)),
         }
-        if let Redundancy::Replica(k) = self.map.redundancy {
-            for c in 1..k {
-                for s in 0..factor {
-                    let holder = &self.children[replica_holder(s, c, factor)];
-                    match holder.delete(&Self::replica_object_path(path, s, factor, c)) {
-                        Ok(()) => {}
-                        Err(e) if e.class == ErrorClass::NoSuchFile => {}
-                        Err(e) => {
-                            first_err.get_or_insert(e);
+        let mut first_err = None;
+        for (which, (gen, map)) in gens.into_iter().enumerate() {
+            let factor = map.layout.factor;
+            for i in 0..factor {
+                let child = self.children.get(i).unwrap_or(&self.children[0]);
+                match child.delete(&Self::object_path_gen(path, i, factor, gen)) {
+                    Ok(()) => {}
+                    // A logical file whose later stripes were never
+                    // touched has no objects there; only the current
+                    // generation's stripe 0 decides existence.
+                    Err(e) if (which > 0 || i > 0) && e.class == ErrorClass::NoSuchFile => {}
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+            if let Redundancy::Replica(k) = map.redundancy {
+                for c in 1..k {
+                    for s in 0..factor {
+                        let h = replica_holder(s, c, factor);
+                        let holder = self.children.get(h).unwrap_or(&self.children[0]);
+                        match holder.delete(&Self::replica_object_path_gen(path, s, factor, c, gen))
+                        {
+                            Ok(()) => {}
+                            Err(e) if e.class == ErrorClass::NoSuchFile => {}
+                            Err(e) => {
+                                first_err.get_or_insert(e);
+                            }
                         }
                     }
                 }
@@ -452,7 +869,7 @@ fn record_failure(failed: &mut Vec<(usize, IoError)>, child: usize, err: IoError
     }
 }
 
-/// Shared state of an open striped file.
+/// Shared state of one layout generation of an open striped file.
 struct StripedInner {
     children: Vec<Arc<dyn StorageFile>>,
     /// `replicas[c-1][s]` = copy `c` of server `s`'s stripe object,
@@ -460,11 +877,19 @@ struct StripedInner {
     /// `Redundancy::Replica`.
     replicas: Vec<Vec<Arc<dyn StorageFile>>>,
     map: StripeMap,
+    /// Layout generation these objects belong to (0 = legacy names).
+    gen: u64,
     meta: SizeMeta,
     /// Stripe-consistency lock file path (parity read-modify-write).
     plock_path: String,
+    /// Rebuild cursor sidecar path (`<name>.jpio-rebuild`).
+    rebuild_path: String,
     /// Pending degraded-mode advisories, drained by `take_advisories`.
     advisories: Mutex<Vec<IoError>>,
+    /// `health[s]` is cleared once server `s` fails an operation on
+    /// this handle; a completed rebuild restores it. Sampled by the
+    /// collective layer for degraded-aware domain placement.
+    health: Vec<AtomicBool>,
     /// Reads served by replica fall-over or parity XOR reconstruction.
     degraded_reads: AtomicU64,
     /// Parity read-modify-write cycles (partial-stripe writes that had
@@ -473,6 +898,11 @@ struct StripedInner {
     /// Bytes dispatched to individual servers, redundancy traffic
     /// included — the fan-out amplification of the caller's bytes.
     fanout_bytes: AtomicU64,
+    /// Bytes re-materialized onto a replaced server by the rebuild
+    /// engine.
+    rebuild_bytes: AtomicU64,
+    /// Stripe rows this handle migrated into a new layout generation.
+    restripe_rows: AtomicU64,
 }
 
 impl StripedInner {
@@ -490,22 +920,36 @@ impl StripedInner {
         self.fanout_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
-    /// Push a degraded-mode advisory for a survived failure on `child`.
+    /// Push a degraded-mode advisory for a survived failure on `child`,
+    /// and mark the child dead for degraded-aware collective placement.
     /// The buffer is bounded: an application that never drains it (the
     /// plain MPI surface has no advisory call) must not leak one
     /// formatted advisory per operation while running degraded — past
     /// the cap the freshest advisory replaces the last slot.
     fn advise_degraded(&self, op: &str, child: usize, err: &IoError) {
-        const ADVISORY_CAP: usize = 128;
-        let advisory = IoError::new(
+        self.note_dead(child);
+        self.push_advisory(IoError::new(
             ErrorClass::Degraded,
             format!("{op}: stripe server {child} failed ({err}); served degraded"),
-        );
+        ));
+    }
+
+    /// Append an advisory (background maintenance failures included),
+    /// bounded by the same cap as `advise_degraded`.
+    fn push_advisory(&self, advisory: IoError) {
+        const ADVISORY_CAP: usize = 128;
         let mut pending = self.advisories.lock().unwrap();
         if pending.len() < ADVISORY_CAP {
             pending.push(advisory);
         } else {
             *pending.last_mut().expect("cap > 0") = advisory;
+        }
+    }
+
+    /// Record a failed child for [`StorageFile::server_health`].
+    fn note_dead(&self, child: usize) {
+        if let Some(h) = self.health.get(child) {
+            h.store(false, Ordering::Relaxed);
         }
     }
 
@@ -668,6 +1112,13 @@ impl StripedInner {
     /// A failed server within the redundancy tolerance is reconstructed
     /// from replicas or parity and reported as a `Degraded` advisory.
     fn read_segments(&self, segs: &[Segment], buf: &mut [u8]) -> Result<()> {
+        self.read_segments_ext(segs, buf, false)
+    }
+
+    /// [`StripedInner::read_segments`] with lock ownership: `locked`
+    /// callers (migration routing) already hold the stripe-consistency
+    /// lock, so the parity reconstruction path must not re-acquire it.
+    fn read_segments_ext(&self, segs: &[Segment], buf: &mut [u8], locked: bool) -> Result<()> {
         let per = self.group(segs);
         let mut jobs = Vec::new();
         let mut dests: Vec<(usize, Vec<Segment>)> = Vec::new();
@@ -702,7 +1153,7 @@ impl StripedInner {
             return Err(failed.swap_remove(0).2);
         }
         for (server, segs, err) in failed {
-            let tmp = self.reconstruct_segments(server, &segs)?;
+            let tmp = self.reconstruct_segments(server, &segs, locked)?;
             scatter(&segs, &tmp, buf);
             self.degraded_reads.fetch_add(1, Ordering::Relaxed);
             self.advise_degraded("read", server, &err);
@@ -712,7 +1163,12 @@ impl StripedInner {
 
     /// Rebuild the packed bytes of `segs` (all on failed server
     /// `server`, sorted by child offset) from the surviving redundancy.
-    fn reconstruct_segments(&self, server: usize, segs: &[Segment]) -> Result<Vec<u8>> {
+    fn reconstruct_segments(
+        &self,
+        server: usize,
+        segs: &[Segment],
+        locked: bool,
+    ) -> Result<Vec<u8>> {
         let total: usize = segs.iter().map(|s| s.len).sum();
         match self.map.redundancy {
             Redundancy::None => Err(err_io(format!(
@@ -742,7 +1198,7 @@ impl StripedInner {
                 // fan-out like the healthy path. Serialize against
                 // parity read-modify-write cycles so a half-updated row
                 // is never used for reconstruction.
-                let _guard = self.lock_parity()?;
+                let _guard = if locked { None } else { Some(self.lock_parity()?) };
                 let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
                 self.note_fanout((self.factor() as u64 - 1) * total as u64);
                 let jobs: Vec<_> = (0..self.factor())
@@ -771,19 +1227,26 @@ impl StripedInner {
     /// `tolerates()` distinct children degrade (advisory) instead of
     /// failing the operation.
     fn write_segments(&self, segs: &[Segment], buf: &[u8]) -> Result<()> {
-        self.write_segments_payload(segs, &Payload::Flat(buf))
+        self.write_segments_payload(segs, &Payload::Flat(buf), false)
     }
 
     /// [`StripedInner::write_segments`] over a [`Payload`] view — the
     /// shared dispatch of the packed-buffer and zero-copy piece paths.
-    fn write_segments_payload(&self, segs: &[Segment], pay: &Payload<'_>) -> Result<()> {
+    /// `locked` callers (migration routing) already hold the stripe
+    /// consistency lock.
+    fn write_segments_payload(
+        &self,
+        segs: &[Segment],
+        pay: &Payload<'_>,
+        locked: bool,
+    ) -> Result<()> {
         if segs.is_empty() {
             return Ok(());
         }
         match self.map.redundancy {
             Redundancy::None => self.write_segments_plain(segs, pay),
-            Redundancy::Replica(k) => self.write_segments_replica(segs, pay, k),
-            Redundancy::Parity => self.write_segments_parity(segs, pay),
+            Redundancy::Replica(k) => self.write_segments_replica(segs, pay, k, locked),
+            Redundancy::Parity => self.write_segments_parity(segs, pay, locked),
         }
     }
 
@@ -806,7 +1269,24 @@ impl StripedInner {
         Ok(())
     }
 
-    fn write_segments_replica(&self, segs: &[Segment], pay: &Payload<'_>, k: usize) -> Result<()> {
+    fn write_segments_replica(
+        &self,
+        segs: &[Segment],
+        pay: &Payload<'_>,
+        k: usize,
+        locked: bool,
+    ) -> Result<()> {
+        // While a rebuild cursor is persisted, replica writes serialize
+        // against the rebuild copy loop on the stripe-consistency lock:
+        // otherwise the rebuild could read a source copy, lose the race
+        // to a concurrent write, and clobber the fresh row on the
+        // target with stale bytes. Healthy operation (no cursor on
+        // disk) stays lock-free — the check is one stat.
+        let _guard = if !locked && self.rebuild_active() {
+            Some(self.lock_parity()?)
+        } else {
+            None
+        };
         let factor = self.factor();
         let per = self.group(segs);
         let mut jobs: Vec<IoJob<usize>> = Vec::new();
@@ -874,10 +1354,10 @@ impl StripedInner {
     /// row's parity slot, then dispatch the seg-exact data writes and
     /// the full-unit parity writes concurrently. The whole cycle holds
     /// the stripe-consistency lock; see the module docs.
-    fn write_segments_parity(&self, segs: &[Segment], pay: &Payload<'_>) -> Result<()> {
+    fn write_segments_parity(&self, segs: &[Segment], pay: &Payload<'_>, locked: bool) -> Result<()> {
         let unit = self.unit() as usize;
         let factor = self.factor();
-        let _guard = self.lock_parity()?;
+        let _guard = if locked { None } else { Some(self.lock_parity()?) };
 
         // Affected rows, ascending.
         let mut rows: Vec<u64> =
@@ -893,6 +1373,18 @@ impl StripedInner {
         // read-modify-write cost.
         let full = self.fully_covered_rows(segs, &rows);
         let read_idx: Vec<usize> = (0..nrows).filter(|&i| !full[i]).collect();
+
+        // RAID-5 parity-delta small write: a partial write confined to
+        // one row and one data server needs only that slot and the
+        // parity slot — new_parity = old_parity ^ old_data ^ new_data —
+        // two unit reads instead of the factor-wide pre-read below. A
+        // failed probe read falls through to the general path, which
+        // knows how to degrade.
+        if nrows == 1 && !full[0] && segs.iter().all(|s| s.server == segs[0].server) {
+            if let Some(out) = self.try_parity_delta(segs, pay, rows[0]) {
+                return out;
+            }
+        }
 
         let mut failed: Vec<(usize, IoError)> = Vec::new();
 
@@ -1023,6 +1515,281 @@ impl StripedInner {
         self.settle_write_failures("write", failed)
     }
 
+    /// The parity-delta small-write body: `segs` all live in `row` on
+    /// one data server and partially cover it. Returns `None` to fall
+    /// back to the general read-modify-write path (a probe read failed
+    /// — a dead server needs the reconstructing path); the caller
+    /// already holds the stripe-consistency lock.
+    fn try_parity_delta(
+        &self,
+        segs: &[Segment],
+        pay: &Payload<'_>,
+        row: u64,
+    ) -> Option<Result<()>> {
+        let unit = self.unit() as usize;
+        let server = segs[0].server;
+        let p = self.map.parity_server(row);
+        let row_off = row * unit as u64;
+        let mut old_data = vec![0u8; unit];
+        let mut old_parity = vec![0u8; unit];
+        // Zero-filled probes: short reads past an object's EOF are holes.
+        self.note_fanout(2 * unit as u64);
+        if self.children[server].read_at(row_off, &mut old_data).is_err() {
+            return None;
+        }
+        if self.children[p].read_at(row_off, &mut old_parity).is_err() {
+            return None;
+        }
+        // Committed: this is a genuine read-modify-write cycle.
+        self.parity_rmw_cycles.fetch_add(1, Ordering::Relaxed);
+        let mut new_data = old_data.clone();
+        for seg in segs {
+            let within = (seg.child_off % unit as u64) as usize;
+            new_data[within..within + seg.len].copy_from_slice(pay.slice(seg.buf_pos, seg.len));
+        }
+        let mut new_parity = old_parity;
+        xor_into(&mut new_parity, &old_data);
+        xor_into(&mut new_parity, &new_data);
+        // Seg-exact data write plus full-unit parity write, concurrent.
+        let runs: Vec<(u64, usize)> = segs.iter().map(|s| (s.child_off, s.len)).collect();
+        let payload = gather(segs, pay);
+        self.note_fanout(payload.len() as u64 + unit as u64);
+        let dchild = self.children[server].clone();
+        let pchild = self.children[p].clone();
+        let jobs: Vec<IoJob<usize>> = vec![
+            Box::new(move || dchild.write_runs(&runs, &payload)),
+            Box::new(move || pchild.write_at(row_off, &new_parity)),
+        ];
+        let mut failed = Vec::new();
+        for (holder, result) in [server, p].into_iter().zip(engine::fanout(jobs)) {
+            if let Err(e) = result {
+                record_failure(&mut failed, holder, e);
+            }
+        }
+        Some(self.settle_write_failures("write", failed))
+    }
+
+    /// Whether a rebuild cursor sidecar is on disk — one stat, checked
+    /// by replica writes to serialize against the rebuild copy loop.
+    fn rebuild_active(&self) -> bool {
+        std::path::Path::new(&self.rebuild_path).exists()
+    }
+
+    /// Every object physically hosted on child `target`, as `(source
+    /// server, copy)` pairs — the primary object plus every replica
+    /// copy placed there by the rotation rule.
+    fn hosted_objects(&self, target: usize) -> Vec<(usize, usize)> {
+        let factor = self.factor();
+        let mut hosted = vec![(target, 0)];
+        if let Redundancy::Replica(k) = self.map.redundancy {
+            for c in 1..k {
+                for src in 0..factor {
+                    if replica_holder(src, c, factor) == target {
+                        hosted.push((src, c));
+                    }
+                }
+            }
+        }
+        hosted
+    }
+
+    /// Detect a blank/replaced server: one whose objects are shorter
+    /// than the layout prescribes for the current logical size. Runs
+    /// only when a rebuild is requested (`jpio_rebuild = start` or the
+    /// explicit APIs) — a sparse file that legitimately never
+    /// materialized its tail can false-positive here, in which case
+    /// the rebuild re-writes the reconstructed bytes (identical
+    /// contents, densified objects). A server whose size probe itself
+    /// fails is skipped: nothing can be rebuilt onto a dead server.
+    fn detect_blank_server(&self) -> Result<Option<usize>> {
+        if self.map.redundancy == Redundancy::None {
+            return Ok(None);
+        }
+        let size = self.logical_size()?;
+        if size == 0 {
+            return Ok(None);
+        }
+        for target in 0..self.factor() {
+            for (src, copy) in self.hosted_objects(target) {
+                let expected = self.map.child_len(src, size);
+                let handle = if copy == 0 {
+                    &self.children[target]
+                } else {
+                    &self.replicas[copy - 1][src]
+                };
+                match handle.size() {
+                    Ok(actual) if actual < expected => return Ok(Some(target)),
+                    _ => {}
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Synchronous rebuild prelude: under the stripe-consistency lock,
+    /// resume a persisted cursor or detect a blank server and persist a
+    /// fresh one. Returns whether a rebuild is pending. Persisting
+    /// *before* any batch runs is what lets every replica write issued
+    /// after this point observe `rebuild_active()`.
+    fn rebuild_prepare(&self) -> Result<bool> {
+        let _guard = self.lock_parity()?;
+        if read_rebuild_cursor(&self.rebuild_path)?.is_some() {
+            return Ok(true);
+        }
+        match self.detect_blank_server()? {
+            Some(target) => {
+                write_rebuild_cursor(
+                    &self.rebuild_path,
+                    &RebuildCursor { target: target as u64, next_row: 0 },
+                )?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// One locked rebuild batch of up to `max_rows` stripe rows.
+    /// Returns `(bytes written, finished)`; the lock is released
+    /// between batches so foreground writes interleave. On completion
+    /// the cursor sidecar is removed and the target marked healthy.
+    fn rebuild_batch(&self, max_rows: u64) -> Result<(u64, bool)> {
+        let _guard = self.lock_parity()?;
+        let cursor = match read_rebuild_cursor(&self.rebuild_path)? {
+            Some(c) => c,
+            None => return Ok((0, true)),
+        };
+        let target = cursor.target as usize;
+        if target >= self.factor() {
+            // Corrupt or foreign cursor (e.g. left over from a
+            // different layout generation): drop it.
+            let _ = std::fs::remove_file(&self.rebuild_path);
+            return Ok((0, true));
+        }
+        let size = self.logical_size()?;
+        let total_rows = self.map.rows_for_size(size);
+        let end_row = total_rows.min(cursor.next_row + max_rows.max(1));
+        let mut bytes = 0u64;
+        for row in cursor.next_row..end_row {
+            bytes += self.rebuild_row(target, row, size)?;
+        }
+        self.rebuild_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if end_row >= total_rows {
+            let _ = std::fs::remove_file(&self.rebuild_path);
+            if let Some(h) = self.health.get(target) {
+                h.store(true, Ordering::Relaxed);
+            }
+            Ok((bytes, true))
+        } else {
+            write_rebuild_cursor(
+                &self.rebuild_path,
+                &RebuildCursor { target: cursor.target, next_row: end_row },
+            )?;
+            Ok((bytes, false))
+        }
+    }
+
+    /// Re-materialize stripe row `row` of every object hosted on the
+    /// replaced child `target` from the survivors: parity rows are the
+    /// XOR of the surviving slots, replica rows are copied from any
+    /// surviving copy (falling over copy by copy — a second failure
+    /// within `replica:<k>`'s tolerance continues from the remaining
+    /// survivors). A loss beyond the tolerance surfaces as a
+    /// `Degraded`-class error. Caller holds the stripe-consistency
+    /// lock.
+    fn rebuild_row(&self, target: usize, row: u64, size: u64) -> Result<u64> {
+        let unit = self.unit() as usize;
+        let row_off = row * unit as u64;
+        let mut written = 0u64;
+        match self.map.redundancy {
+            Redundancy::None => {
+                return Err(IoError::new(
+                    ErrorClass::Degraded,
+                    "rebuild: file has no redundancy to rebuild from",
+                ))
+            }
+            Redundancy::Parity => {
+                let expected = self.map.child_len(target, size);
+                if row_off >= expected {
+                    return Ok(0);
+                }
+                let want = unit.min((expected - row_off) as usize);
+                let mut acc = vec![0u8; unit];
+                let mut piece = vec![0u8; unit];
+                self.note_fanout((self.factor() as u64 - 1) * unit as u64);
+                for (s, child) in self.children.iter().enumerate() {
+                    if s == target {
+                        continue;
+                    }
+                    piece.fill(0);
+                    if let Err(e) = child.read_at(row_off, &mut piece) {
+                        self.note_dead(s);
+                        return Err(IoError::new(
+                            ErrorClass::Degraded,
+                            format!(
+                                "rebuild: survivor {s} failed ({e}); \
+                                 loss exceeds the parity tolerance"
+                            ),
+                        ));
+                    }
+                    xor_into(&mut acc, &piece);
+                }
+                self.children[target].write_at(row_off, &acc[..want])?;
+                self.note_fanout(want as u64);
+                written += want as u64;
+            }
+            Redundancy::Replica(k) => {
+                for (src, copy) in self.hosted_objects(target) {
+                    let expected = self.map.child_len(src, size);
+                    if row_off >= expected {
+                        continue;
+                    }
+                    let want = unit.min((expected - row_off) as usize);
+                    let mut data = vec![0u8; want];
+                    let mut recovered = false;
+                    let mut last: Option<IoError> = None;
+                    for c2 in (0..k).filter(|&c2| c2 != copy) {
+                        let source = if c2 == 0 {
+                            &self.children[src]
+                        } else {
+                            &self.replicas[c2 - 1][src]
+                        };
+                        data.fill(0);
+                        self.note_fanout(want as u64);
+                        match source.read_at(row_off, &mut data) {
+                            Ok(_) => {
+                                recovered = true;
+                                break;
+                            }
+                            Err(e) => {
+                                self.note_dead(replica_holder(src, c2, self.factor()));
+                                last = Some(e);
+                            }
+                        }
+                    }
+                    if !recovered {
+                        let e = last.expect("replica:<k> has k >= 2 copies");
+                        return Err(IoError::new(
+                            ErrorClass::Degraded,
+                            format!(
+                                "rebuild: every surviving copy of server {src} failed ({e}); \
+                                 loss exceeds the replica tolerance"
+                            ),
+                        ));
+                    }
+                    let dest = if copy == 0 {
+                        &self.children[target]
+                    } else {
+                        &self.replicas[copy - 1][src]
+                    };
+                    dest.write_at(row_off, &data)?;
+                    self.note_fanout(want as u64);
+                    written += want as u64;
+                }
+            }
+        }
+        Ok(written)
+    }
+
     /// Degrade or fail a write based on how many distinct children
     /// failed versus the redundancy tolerance.
     fn settle_write_failures(&self, op: &str, mut failed: Vec<(usize, IoError)>) -> Result<()> {
@@ -1091,47 +1858,95 @@ impl StripedInner {
     }
 }
 
-/// An open file declustered over the child backends.
-pub struct StripedFile {
-    inner: Arc<StripedInner>,
+/// A live restriping migration: the generation being drained plus the
+/// completion flag that retires per-operation routing once the cursor
+/// reaches EOF.
+struct MigState {
+    old: Arc<StripedInner>,
+    done: AtomicBool,
 }
 
-impl StorageFile for StripedFile {
-    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
-        if buf.is_empty() {
-            return Ok(0);
+/// How one data operation routes during (or after) a migration.
+enum Route {
+    /// No active migration: every byte lives in the current generation.
+    Current,
+    /// Live restriping: bytes below `cursor` are in the current
+    /// generation, bytes at or above it in the old one. The guard
+    /// holds the stripe-consistency lock for the whole operation, so
+    /// the cursor cannot advance underneath it.
+    Split {
+        cursor: u64,
+        #[allow(dead_code)]
+        guard: FileLockGuard,
+    },
+}
+
+/// State behind an open striped file handle: the current generation,
+/// the optional in-flight restriping, and the maintenance knobs shared
+/// by the rebuild and migration drivers.
+struct StripedShared {
+    cur: Arc<StripedInner>,
+    mig: Option<MigState>,
+    layout_meta: LayoutMeta,
+    /// Maintenance batch size in bytes (`jpio_rebuild_throttle`); 0
+    /// means the default of 64 stripe units per locked batch.
+    throttle: AtomicU64,
+}
+
+impl StripedShared {
+    /// Bytes moved per locked maintenance batch.
+    fn batch_bytes(&self) -> u64 {
+        match self.throttle.load(Ordering::Relaxed) {
+            0 => 64 * self.cur.unit(),
+            t => t,
         }
-        let size = self.inner.logical_size()?;
-        if offset >= size {
-            return Ok(0);
-        }
-        let want = buf.len().min((size - offset) as usize);
-        let mut segs = Vec::new();
-        self.inner.map.split_run(offset, want, 0, &mut segs);
-        self.inner.read_segments(&segs, buf)?;
-        Ok(want)
     }
 
-    fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
-        if buf.is_empty() {
-            return Ok(0);
-        }
-        let mut segs = Vec::new();
-        self.inner.map.split_run(offset, buf.len(), 0, &mut segs);
-        self.inner.write_segments(&segs, buf)?;
-        self.inner.publish_extend(offset + buf.len() as u64)?;
-        Ok(buf.len())
+    /// Stripe rows per locked rebuild batch, derived from the byte
+    /// throttle.
+    fn rebuild_batch_rows(&self) -> u64 {
+        (self.batch_bytes() / self.cur.unit()).max(1)
     }
 
-    fn read_runs(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
-        let size = self.inner.logical_size()?;
-        let mut segs = Vec::new();
+    /// Route one data operation. The common no-migration case is a
+    /// branch on an atomic; during a live migration the operation takes
+    /// the stripe-consistency lock and re-reads the cursor under it.
+    fn route(&self) -> Result<Route> {
+        let Some(m) = &self.mig else { return Ok(Route::Current) };
+        if m.done.load(Ordering::Acquire) {
+            return Ok(Route::Current);
+        }
+        let guard = self.cur.lock_parity()?;
+        match self.layout_meta.read_fast()? {
+            Some(rec) => match rec.old {
+                Some((_, _, cursor)) => Ok(Route::Split { cursor, guard }),
+                None => {
+                    // Another handle finished the migration.
+                    m.done.store(true, Ordering::Release);
+                    Ok(Route::Current)
+                }
+            },
+            None => {
+                m.done.store(true, Ordering::Release);
+                Ok(Route::Current)
+            }
+        }
+    }
+
+    /// Vectored, EOF-clamped read routed per byte range. Implements the
+    /// `read_runs` contract (stop at the first short run); `read_at` is
+    /// the single-run case.
+    fn read_runs_routed(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        let route = self.route()?;
+        let size = self.cur.logical_size()?;
+        let mut cur_segs = Vec::new();
+        let mut old_segs = Vec::new();
         let mut pos = 0usize;
         let mut total = 0usize;
         for &(off, len) in runs {
             let avail = (size.saturating_sub(off) as usize).min(len);
             if avail > 0 {
-                self.inner.map.split_run(off, avail, pos, &mut segs);
+                self.split_routed(&route, off, avail, pos, &mut cur_segs, &mut old_segs);
             }
             total += avail;
             if avail < len {
@@ -1141,28 +1956,292 @@ impl StorageFile for StripedFile {
             }
             pos += len;
         }
-        self.inner.read_segments(&segs, buf)?;
+        match &route {
+            Route::Current => self.cur.read_segments_ext(&cur_segs, buf, false)?,
+            Route::Split { .. } => {
+                let old = &self.mig.as_ref().expect("split route implies migration").old;
+                self.cur.read_segments_ext(&cur_segs, buf, true)?;
+                old.read_segments_ext(&old_segs, buf, true)?;
+            }
+        }
         Ok(total)
     }
 
-    fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
-        let mut segs = Vec::new();
+    /// Vectored write routed per byte range; publishes the extended
+    /// EOF. Zero-length runs move no bytes and (POSIX zero-length write
+    /// semantics) must not extend the file.
+    fn write_payload_routed(&self, runs: &[(u64, usize)], pay: &Payload<'_>) -> Result<usize> {
+        let route = self.route()?;
+        let mut cur_segs = Vec::new();
+        let mut old_segs = Vec::new();
         let mut pos = 0usize;
         let mut end = 0u64;
         for &(off, len) in runs {
-            self.inner.map.split_run(off, len, pos, &mut segs);
+            self.split_routed(&route, off, len, pos, &mut cur_segs, &mut old_segs);
             pos += len;
-            // A zero-length run moves no bytes and (POSIX zero-length
-            // write semantics) must not extend the file.
             if len > 0 {
                 end = end.max(off + len as u64);
             }
         }
-        self.inner.write_segments(&segs, buf)?;
+        match &route {
+            Route::Current => self.cur.write_segments_payload(&cur_segs, pay, false)?,
+            Route::Split { .. } => {
+                let old = &self.mig.as_ref().expect("split route implies migration").old;
+                self.cur.write_segments_payload(&cur_segs, pay, true)?;
+                old.write_segments_payload(&old_segs, pay, true)?;
+            }
+        }
         if end > 0 {
-            self.inner.publish_extend(end)?;
+            self.cur.publish_extend(end)?;
         }
         Ok(pos)
+    }
+
+    /// Split one logical run at the migration cursor into per-server
+    /// segments of the matching generation. Payload positions stay
+    /// relative to the run's own position (`pos`), so each segment
+    /// still indexes the original payload view.
+    fn split_routed(
+        &self,
+        route: &Route,
+        off: u64,
+        len: usize,
+        pos: usize,
+        cur_segs: &mut Vec<Segment>,
+        old_segs: &mut Vec<Segment>,
+    ) {
+        match route {
+            Route::Current => self.cur.map.split_run(off, len, pos, cur_segs),
+            Route::Split { cursor, .. } => {
+                let old = &self.mig.as_ref().expect("split route implies migration").old;
+                let (new_part, old_part) = LayoutRouter::split_at(*cursor, off, len);
+                if let Some((o, l)) = new_part {
+                    self.cur.map.split_run(o, l, pos + (o - off) as usize, cur_segs);
+                }
+                if let Some((o, l)) = old_part {
+                    old.map.split_run(o, l, pos + (o - off) as usize, old_segs);
+                }
+            }
+        }
+    }
+
+    /// Copy the next row-aligned chunk (at most ~`max_bytes`) from the
+    /// old generation into the current one and advance the persisted
+    /// cursor — one locked migration step. Returns the bytes moved; 0
+    /// means no migration is pending. Steps are cooperative across
+    /// handles and processes: the cursor is re-read under the lock, so
+    /// two drivers interleave instead of double-copying.
+    fn migrate_step(&self, max_bytes: u64) -> Result<u64> {
+        let Some(m) = &self.mig else { return Ok(0) };
+        if m.done.load(Ordering::Acquire) {
+            return Ok(0);
+        }
+        let _guard = self.cur.lock_parity()?;
+        let cursor = match self.layout_meta.read_fast()? {
+            Some(LayoutRecord { old: Some((_, _, c)), .. }) => c,
+            _ => {
+                m.done.store(true, Ordering::Release);
+                return Ok(0);
+            }
+        };
+        let size = self.cur.logical_size()?;
+        if cursor >= size {
+            self.finalize_migration(m)?;
+            return Ok(0);
+        }
+        // Row-align the step end in the new layout (exact
+        // `restripe_rows_migrated` accounting); the final step runs to
+        // EOF.
+        let dw = self.cur.map.data_width();
+        let mut end = cursor + max_bytes.max(dw);
+        end -= end % dw;
+        if end <= cursor {
+            end = cursor + dw;
+        }
+        let end = end.min(size);
+        let len = (end - cursor) as usize;
+        let mut buf = vec![0u8; len];
+        let mut rsegs = Vec::new();
+        m.old.map.split_run(cursor, len, 0, &mut rsegs);
+        m.old.read_segments_ext(&rsegs, &mut buf, true)?;
+        let mut wsegs = Vec::new();
+        self.cur.map.split_run(cursor, len, 0, &mut wsegs);
+        self.cur.write_segments_payload(&wsegs, &Payload::Flat(&buf), true)?;
+        self.cur.restripe_rows.fetch_add((end - cursor).div_ceil(dw), Ordering::Relaxed);
+        self.layout_meta.set_cursor(end)?;
+        if end >= size {
+            self.finalize_migration(m)?;
+        }
+        Ok(len as u64)
+    }
+
+    /// Retire the old generation: truncate its objects (delete removes
+    /// them physically) and record the stable layout at the current
+    /// generation. Caller holds the stripe-consistency lock.
+    fn finalize_migration(&self, m: &MigState) -> Result<()> {
+        for child in &m.old.children {
+            let _ = child.set_size(0);
+        }
+        for copies in &m.old.replicas {
+            for replica in copies {
+                let _ = replica.set_size(0);
+            }
+        }
+        self.layout_meta.write_stable(self.cur.gen, self.cur.map)?;
+        m.done.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Drive a pending migration to completion synchronously — the
+    /// metadata ops (`set_size`/`preallocate`/`map`/`lock_exclusive`)
+    /// need a single-generation view and are rare enough that finishing
+    /// the copy beats routing them.
+    fn ensure_migrated(&self) -> Result<()> {
+        while let Some(m) = &self.mig {
+            if m.done.load(Ordering::Acquire) {
+                break;
+            }
+            if self.migrate_step(self.batch_bytes())? == 0 {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the migration on the process-wide maintenance lane. The
+    /// driver holds only a weak reference: dropping every file handle
+    /// stops it at the next batch boundary (the persisted cursor
+    /// resumes it on the next open).
+    fn spawn_migration_driver(self: &Arc<Self>) {
+        let weak = Arc::downgrade(self);
+        progress::maintenance_engine().submit(move || loop {
+            let Some(s) = weak.upgrade() else { return };
+            match s.migrate_step(s.batch_bytes()) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(e) => {
+                    s.cur.push_advisory(IoError::new(
+                        ErrorClass::Degraded,
+                        format!("restripe migration stalled: {e}"),
+                    ));
+                    return;
+                }
+            }
+            drop(s);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+    }
+
+    /// Run a prepared rebuild on the process-wide maintenance lane,
+    /// one throttled batch at a time (same weak-reference lifetime as
+    /// the migration driver).
+    fn spawn_rebuild_driver(self: &Arc<Self>) {
+        let weak = Arc::downgrade(self);
+        progress::maintenance_engine().submit(move || loop {
+            let Some(s) = weak.upgrade() else { return };
+            match s.cur.rebuild_batch(s.rebuild_batch_rows()) {
+                Ok((_, true)) => return,
+                Ok(_) => {}
+                Err(e) => {
+                    s.cur.push_advisory(IoError::new(
+                        ErrorClass::Degraded,
+                        format!("background rebuild stalled: {e}"),
+                    ));
+                    return;
+                }
+            }
+            drop(s);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+    }
+}
+
+/// An open file declustered over the child backends.
+pub struct StripedFile {
+    shared: Arc<StripedShared>,
+}
+
+impl StripedFile {
+    /// Whether a restriping migration is still routing operations
+    /// between two layout generations.
+    pub fn migration_active(&self) -> bool {
+        match &self.shared.mig {
+            Some(m) => !m.done.load(Ordering::Acquire),
+            None => false,
+        }
+    }
+
+    /// Copy the next ~`max_bytes` chunk of a pending restriping
+    /// migration (row-aligned in the new layout). Returns the bytes
+    /// moved; 0 means nothing is pending. The deterministic-stepping
+    /// companion of the background driver.
+    pub fn migrate_step(&self, max_bytes: u64) -> Result<u64> {
+        self.shared.migrate_step(max_bytes)
+    }
+
+    /// Drive a pending restriping migration to completion
+    /// synchronously; returns the total bytes moved.
+    pub fn drive_migration(&self) -> Result<u64> {
+        let mut total = 0u64;
+        loop {
+            match self.shared.migrate_step(self.shared.batch_bytes())? {
+                0 => return Ok(total),
+                n => total += n,
+            }
+        }
+    }
+
+    /// Detect (or resume) a redundancy rebuild and run it to
+    /// completion synchronously; returns the bytes re-materialized
+    /// onto the replaced server (0 when nothing needed rebuilding).
+    pub fn rebuild_now(&self) -> Result<u64> {
+        self.shared.ensure_migrated()?;
+        if !self.shared.cur.rebuild_prepare()? {
+            return Ok(0);
+        }
+        let mut total = 0u64;
+        loop {
+            let (bytes, done) = self.shared.cur.rebuild_batch(self.shared.rebuild_batch_rows())?;
+            total += bytes;
+            if done {
+                return Ok(total);
+            }
+        }
+    }
+
+    /// Detect (or resume) a rebuild and run at most `max_rows` stripe
+    /// rows of it — the deterministic-stepping companion of the
+    /// background driver. Returns `(bytes written, finished)`.
+    pub fn rebuild_rows(&self, max_rows: u64) -> Result<(u64, bool)> {
+        self.shared.ensure_migrated()?;
+        if !self.shared.cur.rebuild_prepare()? {
+            return Ok((0, true));
+        }
+        self.shared.cur.rebuild_batch(max_rows)
+    }
+}
+
+impl StorageFile for StripedFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        self.shared.read_runs_routed(&[(offset, buf.len())], buf)
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        self.shared.write_payload_routed(&[(offset, buf.len())], &Payload::Flat(buf))
+    }
+
+    fn read_runs(&self, runs: &[(u64, usize)], buf: &mut [u8]) -> Result<usize> {
+        self.shared.read_runs_routed(runs, buf)
+    }
+
+    fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> Result<usize> {
+        self.shared.write_payload_routed(runs, &Payload::Flat(buf))
     }
 
     fn write_pieces(&self, pieces: &[(u64, &[u8])]) -> Result<usize> {
@@ -1171,41 +2250,31 @@ impl StorageFile for StripedFile {
         // concatenation, then dispatch per-server transfers straight
         // off the pieces — the payload is never packed into one
         // logical buffer first.
-        let mut segs = Vec::new();
-        let mut pos = 0usize;
-        let mut end = 0u64;
-        for &(off, bytes) in pieces {
-            self.inner.map.split_run(off, bytes.len(), pos, &mut segs);
-            pos += bytes.len();
-            if !bytes.is_empty() {
-                end = end.max(off + bytes.len() as u64);
-            }
-        }
-        self.inner.write_segments_payload(&segs, &Payload::pieces(pieces))?;
-        if end > 0 {
-            self.inner.publish_extend(end)?;
-        }
-        Ok(pos)
+        let runs: Vec<(u64, usize)> = pieces.iter().map(|&(off, b)| (off, b.len())).collect();
+        self.shared.write_payload_routed(&runs, &Payload::pieces(pieces))
     }
 
     fn size(&self) -> Result<u64> {
-        self.inner.logical_size()
+        self.shared.cur.logical_size()
     }
 
     fn set_size(&self, size: u64) -> Result<()> {
-        self.inner.set_size(size)
+        self.shared.ensure_migrated()?;
+        self.shared.cur.set_size(size)
     }
 
     fn preallocate(&self, size: u64) -> Result<()> {
-        for (s, child) in self.inner.children.iter().enumerate() {
-            let len = self.inner.map.child_len(s, size);
+        self.shared.ensure_migrated()?;
+        let inner = &self.shared.cur;
+        for (s, child) in inner.children.iter().enumerate() {
+            let len = inner.map.child_len(s, size);
             if len > 0 {
                 child.preallocate(len)?;
             }
         }
-        for copies in &self.inner.replicas {
+        for copies in &inner.replicas {
             for (s, replica) in copies.iter().enumerate() {
-                let len = self.inner.map.child_len(s, size);
+                let len = inner.map.child_len(s, size);
                 if len > 0 {
                     replica.preallocate(len)?;
                 }
@@ -1213,53 +2282,65 @@ impl StorageFile for StripedFile {
         }
         // Preallocation makes the file at least `size` bytes. (The
         // zero extension never changes a parity XOR, so no repair.)
-        self.inner.publish_extend(size)
+        inner.publish_extend(size)
     }
 
     fn sync(&self) -> Result<()> {
-        let factor = self.inner.factor();
-        let mut jobs: Vec<IoJob<()>> = Vec::new();
-        let mut holders = Vec::new();
-        for (s, c) in self.inner.children.iter().enumerate() {
-            let c = c.clone();
-            jobs.push(Box::new(move || c.sync()));
-            holders.push(s);
-        }
-        for (c, copies) in self.inner.replicas.iter().enumerate() {
-            for (s, replica) in copies.iter().enumerate() {
-                let replica = replica.clone();
-                jobs.push(Box::new(move || replica.sync()));
-                holders.push(replica_holder(s, c + 1, factor));
+        let mut inners = vec![&self.shared.cur];
+        if let Some(m) = &self.shared.mig {
+            if !m.done.load(Ordering::Acquire) {
+                // The old generation still holds live data.
+                inners.push(&m.old);
             }
         }
-        let mut failed: Vec<(usize, IoError)> = Vec::new();
-        for (holder, result) in holders.into_iter().zip(engine::fanout(jobs)) {
-            if let Err(e) = result {
-                record_failure(&mut failed, holder, e);
+        for inner in inners {
+            let factor = inner.factor();
+            let mut jobs: Vec<IoJob<()>> = Vec::new();
+            let mut holders = Vec::new();
+            for (s, c) in inner.children.iter().enumerate() {
+                let c = c.clone();
+                jobs.push(Box::new(move || c.sync()));
+                holders.push(s);
             }
+            for (c, copies) in inner.replicas.iter().enumerate() {
+                for (s, replica) in copies.iter().enumerate() {
+                    let replica = replica.clone();
+                    jobs.push(Box::new(move || replica.sync()));
+                    holders.push(replica_holder(s, c + 1, factor));
+                }
+            }
+            let mut failed: Vec<(usize, IoError)> = Vec::new();
+            for (holder, result) in holders.into_iter().zip(engine::fanout(jobs)) {
+                if let Err(e) = result {
+                    record_failure(&mut failed, holder, e);
+                }
+            }
+            inner.settle_write_failures("sync", failed)?;
         }
-        self.inner.settle_write_failures("sync", failed)
+        Ok(())
     }
 
     fn map(&self, offset: u64, len: usize, writable: bool) -> Result<Box<dyn MappedRegion>> {
         if len == 0 {
             return Err(err_arg("map: zero-length region"));
         }
+        self.shared.ensure_migrated()?;
+        let inner = &self.shared.cur;
         // One metadata fan-out serves both the grow check and the prefill
         // clamp; any grown region is zeros, which the buffer already is.
-        let old_size = self.inner.logical_size()?;
+        let old_size = inner.logical_size()?;
         if writable && old_size < offset + len as u64 {
-            self.inner.set_size(offset + len as u64)?;
+            inner.set_size(offset + len as u64)?;
         }
         let mut buf = vec![0u8; len];
         if offset < old_size {
             let want = len.min((old_size - offset) as usize);
             let mut segs = Vec::new();
-            self.inner.map.split_run(offset, want, 0, &mut segs);
-            self.inner.read_segments(&segs, &mut buf)?;
+            inner.map.split_run(offset, want, 0, &mut segs);
+            inner.read_segments(&segs, &mut buf)?;
         }
         Ok(Box::new(StripedMap {
-            inner: self.inner.clone(),
+            inner: inner.clone(),
             base: offset,
             buf,
             dirty: Vec::new(),
@@ -1268,10 +2349,11 @@ impl StorageFile for StripedFile {
     }
 
     fn lock_exclusive(&self) -> Result<FileLockGuard> {
+        self.shared.ensure_migrated()?;
         // Acquire the child locks in server order — every holder uses the
         // same total order, so distributed acquisition cannot deadlock.
-        let mut guards = Vec::with_capacity(self.inner.children.len());
-        for child in &self.inner.children {
+        let mut guards = Vec::with_capacity(self.shared.cur.children.len());
+        for child in &self.shared.cur.children {
             guards.push(child.lock_exclusive()?);
         }
         Ok(FileLockGuard {
@@ -1284,11 +2366,11 @@ impl StorageFile for StripedFile {
     }
 
     fn stripe_layout(&self) -> Option<StripeLayout> {
-        Some(self.inner.map.layout)
+        Some(self.shared.cur.map.layout)
     }
 
     fn stripe_map(&self) -> Option<StripeMap> {
-        Some(self.inner.map)
+        Some(self.shared.cur.map)
     }
 
     fn prefers_plan_execution(&self) -> bool {
@@ -1298,15 +2380,53 @@ impl StorageFile for StripedFile {
     }
 
     fn take_advisories(&self) -> Vec<IoError> {
-        self.inner.take_advisories()
+        let mut out = self.shared.cur.take_advisories();
+        if let Some(m) = &self.shared.mig {
+            out.extend(m.old.take_advisories());
+        }
+        out
+    }
+
+    fn server_health(&self) -> Option<Vec<bool>> {
+        Some(
+            self.shared
+                .cur
+                .health
+                .iter()
+                .map(|h| h.load(Ordering::Relaxed))
+                .collect(),
+        )
+    }
+
+    fn start_rebuild(&self, throttle: Option<u64>) -> Result<bool> {
+        if let Some(t) = throttle {
+            self.shared.throttle.store(t, Ordering::Relaxed);
+        }
+        // A rebuild re-materializes current-generation objects; a
+        // half-migrated file first finishes moving into them.
+        self.shared.ensure_migrated()?;
+        if !self.shared.cur.rebuild_prepare()? {
+            return Ok(false);
+        }
+        self.shared.spawn_rebuild_driver();
+        Ok(true)
     }
 
     fn backend_counters(&self) -> super::BackendCounters {
-        super::BackendCounters {
-            degraded_reads: self.inner.degraded_reads.load(Ordering::Relaxed),
-            parity_rmw_cycles: self.inner.parity_rmw_cycles.load(Ordering::Relaxed),
-            fanout_bytes: self.inner.fanout_bytes.load(Ordering::Relaxed),
+        let cur = &self.shared.cur;
+        let mut c = super::BackendCounters {
+            degraded_reads: cur.degraded_reads.load(Ordering::Relaxed),
+            parity_rmw_cycles: cur.parity_rmw_cycles.load(Ordering::Relaxed),
+            fanout_bytes: cur.fanout_bytes.load(Ordering::Relaxed),
+            rebuild_bytes_reconstructed: cur.rebuild_bytes.load(Ordering::Relaxed),
+            restripe_rows_migrated: cur.restripe_rows.load(Ordering::Relaxed),
+        };
+        if let Some(m) = &self.shared.mig {
+            c.degraded_reads += m.old.degraded_reads.load(Ordering::Relaxed);
+            c.parity_rmw_cycles += m.old.parity_rmw_cycles.load(Ordering::Relaxed);
+            c.fanout_bytes += m.old.fanout_bytes.load(Ordering::Relaxed);
         }
+        c
     }
 }
 

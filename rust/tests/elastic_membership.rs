@@ -1,0 +1,827 @@
+//! Elastic storage membership (DESIGN.md §1c) under fault injection:
+//! kill a stripe server, replace it with a blank one, and the rebuild
+//! engine must re-materialize its objects from the surviving redundancy
+//! — resumable across opens via the `<name>.jpio-rebuild` cursor
+//! sidecar, throttled on the maintenance lane, and leaving *zero*
+//! degraded-read reconstructions once complete. Live restriping must
+//! keep contents byte-identical before/during/after the migration while
+//! foreground writes land concurrently, and a randomized schedule of
+//! writes/reads/kills/rebuilds must always match a shadow in-memory
+//! model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jpio::comm::{threads, Datatype};
+use jpio::io::errors::Result as IoResult;
+use jpio::io::{
+    amode, AccessOp, Coordination, ErrorClass, File, Info, Positioning, Synchronism,
+};
+use jpio::storage::faults::{FaultBackend, FaultPlan};
+use jpio::storage::layout::{Redundancy, StripeLayout, StripeMap};
+use jpio::storage::local::LocalBackend;
+use jpio::storage::striped::StripedBackend;
+use jpio::storage::{Backend, FileLockGuard, MappedRegion, OpenOptions, StorageFile};
+
+fn tmp(name: &str) -> String {
+    format!("/tmp/jpio-elastic-{}-{name}", std::process::id())
+}
+
+/// A striped backend over `factor` local children where `victim` is
+/// wrapped with an (initially empty) fault plan — kill it later with
+/// `plan.inject_kill(..)`, replace it with `plan.revive()` plus
+/// [`blank_server`].
+fn backend_with_victim(
+    factor: usize,
+    unit: u64,
+    redundancy: Redundancy,
+    victim: usize,
+) -> (StripedBackend, Arc<FaultPlan>) {
+    let plan = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..factor)
+        .map(|i| {
+            if i == victim {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let b = StripedBackend::with_redundancy(children, unit, redundancy).unwrap();
+    (b, plan)
+}
+
+fn map_of(unit: u64, factor: usize, redundancy: Redundancy) -> StripeMap {
+    StripeMap::new(StripeLayout::new(unit, factor).unwrap(), redundancy).unwrap()
+}
+
+/// Truncate every stripe object physically hosted on child `victim` —
+/// the failed server has been swapped for a healthy *blank* disk. The
+/// rotation rule places copy `c` of server `(victim - c) mod factor`
+/// on `victim`, so those replica objects blank along with the primary.
+fn blank_server(path: &str, victim: usize, factor: usize, redundancy: Redundancy, gen: u64) {
+    let mut objects = vec![StripedBackend::object_path_gen(path, victim, factor, gen)];
+    if let Redundancy::Replica(k) = redundancy {
+        for c in 1..k {
+            let src = (victim + factor - (c % factor)) % factor;
+            objects.push(StripedBackend::replica_object_path_gen(path, src, factor, c, gen));
+        }
+    }
+    for o in objects {
+        std::fs::OpenOptions::new()
+            .write(true)
+            .create(true)
+            .open(&o)
+            .unwrap()
+            .set_len(0)
+            .unwrap();
+    }
+}
+
+/// Bytes the rebuild engine must re-materialize onto `victim`: its
+/// primary object plus every replica copy the rotation hosts there.
+fn expected_rebuild_bytes(map: &StripeMap, victim: usize, size: u64) -> u64 {
+    let factor = map.layout.factor;
+    let mut total = map.child_len(victim, size);
+    if let Redundancy::Replica(k) = map.redundancy {
+        for c in 1..k {
+            let src = (victim + factor - (c % factor)) % factor;
+            total += map.child_len(src, size);
+        }
+    }
+    total
+}
+
+fn cursor_exists(path: &str) -> bool {
+    std::path::Path::new(&StripedBackend::rebuild_cursor_path(path)).exists()
+}
+
+// ----------------------------------------------------------------------
+// Kill → blank-replace → rebuild → full-redundancy round trip
+// ----------------------------------------------------------------------
+
+/// The acceptance scenario: degraded service while the server is dead,
+/// then a blank replacement plus `rebuild_now` restores full redundancy
+/// — the re-read reconstructs *nothing* (exact `degraded_reads` count)
+/// and the rebuilt byte count matches the layout's prescription exactly.
+fn kill_blank_rebuild_roundtrip(factor: usize, unit: u64, redundancy: Redundancy, victim: usize) {
+    let (b, plan) = backend_with_victim(factor, unit, redundancy, victim);
+    let path = tmp(&format!("roundtrip-{}-{victim}", b.name()));
+    let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    let data: Vec<u8> = (1..=251u8).cycle().take(777).collect();
+    f.write_at(0, &data).unwrap();
+    assert!(f.take_advisories().is_empty(), "healthy write must not degrade");
+
+    // Failed-stop: reads still round-trip, via reconstruction.
+    plan.inject_kill(ErrorClass::Io);
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), data.len());
+    assert_eq!(back, data, "degraded read must reconstruct victim {victim}");
+    let advisories = f.take_advisories();
+    assert!(!advisories.is_empty());
+    assert!(advisories.iter().all(|a| a.class == ErrorClass::Degraded));
+    assert!(f.backend_counters().degraded_reads > 0);
+    let health = f.server_health().unwrap();
+    assert!(!health[victim], "failed I/O must mark the server dead");
+
+    // Blank replacement: the fault rules clear (new healthy disk behind
+    // the same slot) and the victim's objects truncate to nothing.
+    plan.revive();
+    blank_server(&path, victim, factor, redundancy, 0);
+
+    let rebuilt = f.rebuild_now().unwrap();
+    let map = map_of(unit, factor, redundancy);
+    assert_eq!(
+        rebuilt,
+        expected_rebuild_bytes(&map, victim, data.len() as u64),
+        "rebuild must re-materialize exactly the victim's hosted bytes"
+    );
+    assert_eq!(f.backend_counters().rebuild_bytes_reconstructed, rebuilt);
+    assert!(!cursor_exists(&path), "completion must remove the cursor sidecar");
+    assert_eq!(
+        f.server_health().unwrap(),
+        vec![true; factor],
+        "rebuild completion must restore the target's health"
+    );
+
+    // Full-redundancy round trip: zero reconstructions, zero advisories.
+    let degraded_before = f.backend_counters().degraded_reads;
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), data.len());
+    assert_eq!(back, data);
+    assert_eq!(
+        f.backend_counters().degraded_reads,
+        degraded_before,
+        "post-rebuild reads must hit the rebuilt object, not reconstruct"
+    );
+    assert!(f.take_advisories().is_empty());
+    drop(f);
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn replica2_kill_blank_rebuild_roundtrip() {
+    kill_blank_rebuild_roundtrip(4, 8, Redundancy::Replica(2), 1);
+}
+
+#[test]
+fn replica3_kill_blank_rebuild_roundtrip() {
+    kill_blank_rebuild_roundtrip(4, 8, Redundancy::Replica(3), 2);
+}
+
+#[test]
+fn parity_kill_blank_rebuild_roundtrip() {
+    kill_blank_rebuild_roundtrip(4, 8, Redundancy::Parity, 0);
+}
+
+// ----------------------------------------------------------------------
+// Second failure mid-rebuild
+// ----------------------------------------------------------------------
+
+#[test]
+fn second_kill_beyond_parity_tolerance_is_degraded_error() {
+    // Parity tolerates one lost server. Blank server 0, rebuild a few
+    // rows, then kill survivor 2: the rebuild must stop with a clean
+    // Degraded-class error (not corrupt state), keep its cursor for a
+    // later resume, and complete once the survivor comes back.
+    let plan = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..4)
+        .map(|i| {
+            if i == 2 {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let b = StripedBackend::with_redundancy(children, 8, Redundancy::Parity).unwrap();
+    let path = tmp("second-kill-parity");
+    let data: Vec<u8> = (0..=239u8).cycle().take(1500).collect();
+    {
+        let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &data).unwrap();
+    }
+    blank_server(&path, 0, 4, Redundancy::Parity, 0);
+
+    let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    let (bytes, done) = f.rebuild_rows(4).unwrap();
+    assert!(bytes > 0 && !done, "1500 bytes span more than 4 stripe rows");
+    plan.inject_kill(ErrorClass::Io);
+    let err = loop {
+        match f.rebuild_rows(4) {
+            Err(e) => break e,
+            Ok((_, true)) => panic!("rebuild must not complete with a dead survivor"),
+            Ok(_) => {}
+        }
+    };
+    assert_eq!(err.class, ErrorClass::Degraded);
+    assert!(
+        err.to_string().contains("loss exceeds the parity tolerance"),
+        "unexpected error text: {err}"
+    );
+    assert!(cursor_exists(&path), "a stalled rebuild must keep its cursor for resume");
+
+    // Survivor replaced/recovered (its data was never lost): the rebuild
+    // restarts from the persisted cursor and finishes.
+    plan.revive();
+    assert!(f.rebuild_now().unwrap() > 0);
+    assert!(!cursor_exists(&path));
+    let degraded_before = f.backend_counters().degraded_reads;
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), data.len());
+    assert_eq!(back, data);
+    assert_eq!(f.backend_counters().degraded_reads, degraded_before);
+    drop(f);
+    b.delete(&path).unwrap();
+}
+
+#[test]
+fn second_kill_within_replica3_tolerance_rebuild_completes() {
+    // replica:3 tolerates two losses. Blank server 0, kill server 1
+    // (which hosts copy 1 of server 0): the rebuild must fall over to
+    // copy 2 and still finish everything hosted on the blank server.
+    let plan = FaultPlan::new(vec![]);
+    let children: Vec<Arc<dyn Backend>> = (0..4)
+        .map(|i| {
+            if i == 1 {
+                Arc::new(FaultBackend::new(LocalBackend::instant(), plan.clone()))
+                    as Arc<dyn Backend>
+            } else {
+                Arc::new(LocalBackend::instant()) as Arc<dyn Backend>
+            }
+        })
+        .collect();
+    let b = StripedBackend::with_redundancy(children, 8, Redundancy::Replica(3)).unwrap();
+    let path = tmp("second-kill-replica3");
+    let data: Vec<u8> = (3..=250u8).cycle().take(900).collect();
+    {
+        let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &data).unwrap();
+    }
+    blank_server(&path, 0, 4, Redundancy::Replica(3), 0);
+    plan.inject_kill(ErrorClass::Io);
+
+    let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    let rebuilt = f.rebuild_now().unwrap();
+    let map = map_of(8, 4, Redundancy::Replica(3));
+    assert_eq!(
+        rebuilt,
+        expected_rebuild_bytes(&map, 0, data.len() as u64),
+        "a second failure within tolerance must not shrink the rebuild"
+    );
+    assert!(!cursor_exists(&path));
+
+    plan.revive();
+    let degraded_before = f.backend_counters().degraded_reads;
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), data.len());
+    assert_eq!(back, data);
+    assert_eq!(f.backend_counters().degraded_reads, degraded_before);
+    drop(f);
+    b.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Resumable cursor sidecar
+// ----------------------------------------------------------------------
+
+#[test]
+fn rebuild_cursor_resumes_across_opens() {
+    let children: Vec<Arc<dyn Backend>> =
+        (0..4).map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>).collect();
+    let b = StripedBackend::with_redundancy(children, 8, Redundancy::Parity).unwrap();
+    let path = tmp("resume");
+    let data: Vec<u8> = (0..=199u8).cycle().take(2000).collect();
+    {
+        let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &data).unwrap();
+    }
+    blank_server(&path, 3, 4, Redundancy::Parity, 0);
+
+    // First session: a few rows, then the handle drops mid-rebuild.
+    let bytes_first = {
+        let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+        let (bytes, done) = f.rebuild_rows(3).unwrap();
+        assert!(!done, "2000 bytes span more than 3 stripe rows");
+        bytes
+    };
+    assert!(cursor_exists(&path), "the cursor sidecar must survive the dropped handle");
+
+    // Second session: the rebuild resumes from the persisted cursor and
+    // the two sessions together cover exactly the victim's object.
+    let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    let bytes_second = f.rebuild_now().unwrap();
+    let map = map_of(8, 4, Redundancy::Parity);
+    assert_eq!(
+        bytes_first + bytes_second,
+        map.child_len(3, data.len() as u64),
+        "resume must continue, not restart: no row rebuilt twice"
+    );
+    assert_eq!(f.backend_counters().rebuild_bytes_reconstructed, bytes_second);
+    assert!(!cursor_exists(&path));
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), data.len());
+    assert_eq!(back, data);
+    drop(f);
+    b.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// The `jpio_rebuild = start` hint: background driver on the maintenance
+// lane, surfaced through the File layer and the stats wire record
+// ----------------------------------------------------------------------
+
+#[test]
+fn rebuild_hint_drives_background_rebuild() {
+    let children: Vec<Arc<dyn Backend>> =
+        (0..4).map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>).collect();
+    let backend: Arc<dyn Backend> =
+        Arc::new(StripedBackend::with_redundancy(children, 8, Redundancy::Replica(2)).unwrap());
+    let path = tmp("hint-rebuild");
+    let data: Vec<u8> = (0..=250u8).cycle().take(1200).collect();
+    {
+        let f = backend.open(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &data).unwrap();
+    }
+    blank_server(&path, 1, 4, Redundancy::Replica(2), 0);
+
+    threads::run(1, |c| {
+        let info = Info::from([("jpio_rebuild", "start"), ("jpio_rebuild_throttle", "64")]);
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            info,
+            backend.clone(),
+        )
+        .unwrap();
+        // The hint persisted a cursor at open and handed the batches to
+        // the maintenance lane; wait for the completion signal (cursor
+        // removal), then verify full redundancy.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while cursor_exists(&path) {
+            assert!(Instant::now() < deadline, "background rebuild never completed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut back = vec![0u8; data.len()];
+        f.read_at(0, back.as_mut_slice(), 0, data.len(), &Datatype::BYTE).unwrap();
+        assert_eq!(back, data);
+        assert!(f.take_advisories().is_empty(), "healthy post-rebuild reads must not advise");
+        // The always-on counters ride the per-file stats record.
+        let report = f.stats();
+        assert!(report.counter("rebuild_bytes_reconstructed").sum > 0);
+        assert_eq!(report.counter("degraded_reconstructed_reads").sum, 0);
+        f.close().unwrap();
+    });
+    backend.delete(&path).unwrap();
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
+
+// ----------------------------------------------------------------------
+// Live restriping
+// ----------------------------------------------------------------------
+
+#[test]
+fn restripe_2_to_4_preserves_contents_under_writes() {
+    let path = tmp("restripe-2to4");
+    let len = 1000usize;
+    let mut want: Vec<u8> = (0..=249u8).cycle().take(len).collect();
+    let two: Vec<Arc<dyn Backend>> =
+        (0..2).map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>).collect();
+    let b2 = StripedBackend::with_redundancy(two, 8, Redundancy::None).unwrap();
+    {
+        let f = b2.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &want).unwrap();
+    }
+
+    // Reopening with a different striping factor starts a migration.
+    let four: Vec<Arc<dyn Backend>> =
+        (0..4).map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>).collect();
+    let b4 = StripedBackend::with_redundancy(four, 8, Redundancy::None).unwrap();
+    let f = b4.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    assert!(f.migration_active(), "a changed striping factor must start a migration");
+
+    // Before any step: the router serves everything from the old layout.
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want, "pre-step contents must be byte-identical");
+
+    // One bounded step; the cursor is row-aligned in the new layout.
+    let moved = f.migrate_step(64).unwrap();
+    assert_eq!(moved, 64, "64 is two new-layout rows, so the step is exact");
+    assert!(f.migration_active());
+
+    // A write straddling the cursor routes per byte range: below to the
+    // new generation, at-or-above to the old one.
+    f.write_at(44, &[0x5Au8; 40]).unwrap();
+    want[44..84].fill(0x5A);
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want, "mid-migration contents must be byte-identical");
+
+    f.drive_migration().unwrap();
+    assert!(!f.migration_active());
+    let dw = 8 * 4;
+    assert_eq!(
+        f.backend_counters().restripe_rows_migrated,
+        (len as u64).div_ceil(dw),
+        "every new-layout row must be counted exactly once"
+    );
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want, "post-migration contents must be byte-identical");
+
+    // The old generation's objects are retired at finalize.
+    for s in 0..2 {
+        let object = StripedBackend::object_path(&path, s, 2);
+        let remaining = std::fs::metadata(&object).map(|m| m.len()).unwrap_or(0);
+        assert_eq!(remaining, 0, "old-generation object {s} must be truncated");
+    }
+
+    // A reopen sees the stable new layout — nothing left to migrate.
+    drop(f);
+    let f = b4.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    assert!(!f.migration_active());
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want);
+    drop(f);
+    b4.delete(&path).unwrap();
+}
+
+#[test]
+fn restripe_none_to_parity_enables_reconstruction() {
+    let path = tmp("restripe-parity");
+    let len = 900usize;
+    let mut want: Vec<u8> = (7..=230u8).cycle().take(len).collect();
+    let plain_children: Vec<Arc<dyn Backend>> =
+        (0..4).map(|_| Arc::new(LocalBackend::instant()) as Arc<dyn Backend>).collect();
+    let plain = StripedBackend::with_redundancy(plain_children, 8, Redundancy::None).unwrap();
+    {
+        let f = plain.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+        f.write_at(0, &want).unwrap();
+    }
+
+    // Reopen with `jpio_stripe_redundancy = parity` semantics: same
+    // factor, new redundancy — a migration into a parity generation.
+    let (bp, plan) = backend_with_victim(4, 8, Redundancy::Parity, 1);
+    let f = bp.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+    assert!(f.migration_active(), "a changed redundancy mode must start a migration");
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want);
+
+    let moved = f.migrate_step(48).unwrap();
+    assert_eq!(moved, 48, "48 is two parity data rows, so the step is exact");
+    // Straddle the cursor with a foreground write.
+    f.write_at(43, &[0xC3u8; 10]).unwrap();
+    want[43..53].fill(0xC3);
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want, "mid-migration contents must be byte-identical");
+
+    f.drive_migration().unwrap();
+    assert!(!f.migration_active());
+    assert_eq!(f.backend_counters().restripe_rows_migrated, (len as u64).div_ceil(24));
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want);
+
+    // The migrated file carries real parity now: kill a server and the
+    // contents reconstruct instead of erroring.
+    let degraded_before = f.backend_counters().degraded_reads;
+    plan.inject_kill(ErrorClass::Io);
+    let mut back = vec![0u8; len];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), len);
+    assert_eq!(back, want, "the new parity generation must reconstruct the dead server");
+    assert!(f.backend_counters().degraded_reads > degraded_before);
+    let advisories = f.take_advisories();
+    assert!(!advisories.is_empty());
+    assert!(advisories.iter().all(|a| a.class == ErrorClass::Degraded));
+    plan.revive();
+    drop(f);
+    bp.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Randomized schedule vs a shadow in-memory model
+// ----------------------------------------------------------------------
+
+/// SplitMix64 — deterministic, dependency-free, seed-printable.
+struct Rng(u64);
+
+impl Rng {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+#[test]
+fn randomized_schedule_matches_shadow_model() {
+    // Reproduce a failure with JPIO_ELASTIC_SEED=<printed seed>.
+    let seed = std::env::var("JPIO_ELASTIC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x6A70_696F_2D65_6C61);
+    println!("elastic membership property schedule: JPIO_ELASTIC_SEED={seed}");
+    run_schedule(seed);
+    run_schedule(seed ^ 0x5DEE_CE66);
+}
+
+fn run_schedule(seed: u64) {
+    let mut rng = Rng(seed);
+    let factor = 4usize;
+    let unit = 8u64;
+    let redundancy = Redundancy::Replica(2);
+    let victim = rng.below(factor as u64) as usize;
+    let (b, plan) = backend_with_victim(factor, unit, redundancy, victim);
+    let path = tmp(&format!("prop-{seed:016x}"));
+    let f = b.open_striped_manual(&path, OpenOptions::rw_create()).unwrap();
+
+    const SPAN: u64 = 2048;
+    let mut shadow: Vec<u8> = Vec::new();
+    let mut killed = false;
+    let mut fill = 1u8;
+    let mut advisories = 0u64;
+
+    for step in 0..240 {
+        match rng.below(100) {
+            0..=44 => {
+                let off = rng.below(SPAN);
+                let len = 1 + rng.below(96) as usize;
+                let mut data = vec![0u8; len];
+                for byte in &mut data {
+                    *byte = fill;
+                    fill = fill.wrapping_add(1).max(1);
+                }
+                f.write_at(off, &data)
+                    .unwrap_or_else(|e| panic!("seed {seed:#x} step {step}: write failed: {e}"));
+                let end = off as usize + len;
+                if shadow.len() < end {
+                    shadow.resize(end, 0);
+                }
+                shadow[off as usize..end].copy_from_slice(&data);
+            }
+            45..=79 => {
+                let off = rng.below(SPAN + 64);
+                let len = 1 + rng.below(160) as usize;
+                let mut back = vec![0xEEu8; len];
+                let got = f
+                    .read_at(off, &mut back)
+                    .unwrap_or_else(|e| panic!("seed {seed:#x} step {step}: read failed: {e}"));
+                let want = shadow.len().saturating_sub(off as usize).min(len);
+                assert_eq!(got, want, "seed {seed:#x} step {step}: EOF clamp at offset {off}");
+                if got > 0 {
+                    assert_eq!(
+                        &back[..got],
+                        &shadow[off as usize..off as usize + got],
+                        "seed {seed:#x} step {step}: contents diverge at offset {off}"
+                    );
+                }
+            }
+            80..=89 if !killed => {
+                plan.inject_kill(ErrorClass::Io);
+                killed = true;
+            }
+            90..=99 if killed => {
+                // Blank replacement + rebuild restores full redundancy.
+                plan.revive();
+                blank_server(&path, victim, factor, redundancy, 0);
+                let rebuilt = f.rebuild_now().unwrap_or_else(|e| {
+                    panic!("seed {seed:#x} step {step}: rebuild failed: {e}")
+                });
+                let map = map_of(unit, factor, redundancy);
+                assert_eq!(
+                    rebuilt,
+                    expected_rebuild_bytes(&map, victim, shadow.len() as u64),
+                    "seed {seed:#x} step {step}: rebuild must cover exactly the hosted bytes"
+                );
+                assert_eq!(f.server_health().unwrap(), vec![true; factor]);
+                killed = false;
+            }
+            _ => {}
+        }
+        // Drain advisories every step: none may be lost or misclassified.
+        for a in f.take_advisories() {
+            assert_eq!(a.class, ErrorClass::Degraded, "seed {seed:#x} step {step}: {a}");
+            advisories += 1;
+        }
+    }
+
+    if killed {
+        plan.revive();
+        blank_server(&path, victim, factor, redundancy, 0);
+        f.rebuild_now().unwrap();
+        for a in f.take_advisories() {
+            assert_eq!(a.class, ErrorClass::Degraded);
+            advisories += 1;
+        }
+    }
+    let mut back = vec![0u8; shadow.len()];
+    if !shadow.is_empty() {
+        assert_eq!(f.read_at(0, &mut back).unwrap(), shadow.len());
+    }
+    assert_eq!(back, shadow, "seed {seed:#x}: final contents diverge from the shadow model");
+    let counters = f.backend_counters();
+    assert!(
+        advisories >= counters.degraded_reads,
+        "seed {seed:#x}: {} degraded reads but only {advisories} advisories drained",
+        counters.degraded_reads
+    );
+    drop(f);
+    b.delete(&path).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Carry-over regressions
+// ----------------------------------------------------------------------
+
+#[test]
+fn mapped_region_buffered_emulation_survives_dead_server() {
+    // The striped MappedRegion is a buffered emulation: prefill on
+    // creation, dirty-range write-back on flush. Both halves must run
+    // degraded (reconstruct / tolerated write failure) under a killed
+    // server instead of erroring or corrupting the gap bytes.
+    let (b, plan) = backend_with_victim(4, 8, Redundancy::Parity, 2);
+    let path = tmp("map-degraded");
+    let f = b.open(&path, OpenOptions::rw_create()).unwrap();
+    let data: Vec<u8> = (0..=255u8).cycle().take(256).collect();
+    f.write_at(0, &data).unwrap();
+    plan.inject_kill(ErrorClass::Io);
+
+    let mut region = f.map(16, 64, true).unwrap();
+    let mut got = vec![0u8; 64];
+    region.read(0, &mut got).unwrap();
+    assert_eq!(got, &data[16..80], "map prefill must reconstruct the dead server's units");
+    region.write(8, &[0xABu8; 16]).unwrap();
+    region.flush().unwrap();
+    drop(region);
+
+    let mut want = data.clone();
+    want[24..40].fill(0xAB);
+    let mut back = vec![0u8; data.len()];
+    assert_eq!(f.read_at(0, &mut back).unwrap(), data.len());
+    assert_eq!(back, want, "mapped write-back must preserve gap bytes while degraded");
+    let advisories = f.take_advisories();
+    assert!(!advisories.is_empty());
+    assert!(advisories.iter().all(|a| a.class == ErrorClass::Degraded));
+    b.delete(&path).unwrap();
+}
+
+/// A child backend that counts the bytes of every write dispatched to
+/// it — proof that an operation reached the striped per-server fan-out.
+struct CountingBackend {
+    inner: LocalBackend,
+    write_bytes: Arc<AtomicU64>,
+}
+
+struct CountingFile {
+    inner: Arc<dyn StorageFile>,
+    write_bytes: Arc<AtomicU64>,
+}
+
+impl Backend for CountingBackend {
+    fn open(&self, path: &str, opts: OpenOptions) -> IoResult<Arc<dyn StorageFile>> {
+        Ok(Arc::new(CountingFile {
+            inner: self.inner.open(path, opts)?,
+            write_bytes: self.write_bytes.clone(),
+        }))
+    }
+
+    fn delete(&self, path: &str) -> IoResult<()> {
+        self.inner.delete(path)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+impl StorageFile for CountingFile {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> IoResult<usize> {
+        self.inner.read_at(offset, buf)
+    }
+
+    fn write_at(&self, offset: u64, buf: &[u8]) -> IoResult<usize> {
+        self.write_bytes.fetch_add(buf.len() as u64, Ordering::SeqCst);
+        self.inner.write_at(offset, buf)
+    }
+
+    fn write_runs(&self, runs: &[(u64, usize)], buf: &[u8]) -> IoResult<usize> {
+        self.write_bytes.fetch_add(buf.len() as u64, Ordering::SeqCst);
+        self.inner.write_runs(runs, buf)
+    }
+
+    fn size(&self) -> IoResult<u64> {
+        self.inner.size()
+    }
+
+    fn set_size(&self, size: u64) -> IoResult<()> {
+        self.inner.set_size(size)
+    }
+
+    fn preallocate(&self, size: u64) -> IoResult<()> {
+        self.inner.preallocate(size)
+    }
+
+    fn sync(&self) -> IoResult<()> {
+        self.inner.sync()
+    }
+
+    fn map(
+        &self,
+        offset: u64,
+        len: usize,
+        writable: bool,
+    ) -> IoResult<Box<dyn MappedRegion>> {
+        self.inner.map(offset, len, writable)
+    }
+
+    fn lock_exclusive(&self) -> IoResult<FileLockGuard> {
+        self.inner.lock_exclusive()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+#[test]
+fn per_op_hint_overlay_reaches_striped_fanout() {
+    // Regression: a per-op `jpio_cache = disable` overlay must carry the
+    // submission past the page cache and synchronously onto the striped
+    // backend's per-server fan-out — the counting children see the bytes
+    // before the submission returns.
+    let write_bytes = Arc::new(AtomicU64::new(0));
+    let children: Vec<Arc<dyn Backend>> = (0..4)
+        .map(|_| {
+            Arc::new(CountingBackend {
+                inner: LocalBackend::instant(),
+                write_bytes: write_bytes.clone(),
+            }) as Arc<dyn Backend>
+        })
+        .collect();
+    let backend: Arc<dyn Backend> =
+        Arc::new(StripedBackend::with_redundancy(children, 8, Redundancy::None).unwrap());
+    let path = tmp("overlay-fanout");
+    threads::run(1, |c| {
+        let info = Info::from([("jpio_cache", "enable")]);
+        let f = File::open_with_backend(
+            c,
+            &path,
+            amode::RDWR | amode::CREATE,
+            info,
+            backend.clone(),
+        )
+        .unwrap();
+        let data: Vec<u8> = (0..96u8).collect();
+        let bypass = Info::from([("jpio_cache", "disable")]);
+        let before = write_bytes.load(Ordering::SeqCst);
+        let wop = AccessOp::write(
+            Positioning::Explicit(0),
+            Coordination::Independent,
+            Synchronism::Blocking,
+            0,
+            data.len(),
+            &Datatype::BYTE,
+        );
+        f.submit_write_with(&wop, data.as_slice(), Some(&bypass)).unwrap();
+        let after = write_bytes.load(Ordering::SeqCst);
+        assert!(
+            after >= before + data.len() as u64,
+            "overlay write must land synchronously on the fan-out ({before} -> {after})"
+        );
+        let report = f.stats();
+        let cached = ["cache_hit_bytes", "cache_miss_bytes", "write_behind_flush_bytes"]
+            .iter()
+            .map(|&k| report.counter(k).sum)
+            .sum::<u64>();
+        assert_eq!(cached, 0, "the bypassed submission must never enter the page cache");
+        // The bytes are already on the stripes: a bypass read returns them.
+        let mut back = vec![0u8; data.len()];
+        let rop = AccessOp::read(
+            Positioning::Explicit(0),
+            Coordination::Independent,
+            Synchronism::Blocking,
+            0,
+            data.len(),
+            &Datatype::BYTE,
+        );
+        f.submit_read_with(&rop, back.as_mut_slice(), Some(&bypass)).unwrap();
+        assert_eq!(back, data);
+        f.close().unwrap();
+    });
+    backend.delete(&path).unwrap();
+    let _ = std::fs::remove_file(format!("{path}.jpio-sfp"));
+}
